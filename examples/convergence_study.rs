@@ -1,0 +1,58 @@
+//! Convergence study: AMTL and SMTL against the centralized FISTA optimum.
+//!
+//! Validates the paper's Theorem 1 empirically: the asynchronous iterates
+//! converge to the same optimal objective value `F*` that a centralized
+//! solver reaches, despite inconsistent reads and delayed updates.
+//!
+//! ```text
+//! cargo run --release --example convergence_study
+//! ```
+
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::optim::fista::{fista, TaskData};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(21);
+    let ds = synthetic::lowrank_regression(&[100; 6], 30, 3, 0.3, &mut rng);
+    let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+    let (engine, pool) = auto_engine(1);
+    println!("dataset: {}", problem.dataset.describe());
+    println!("engine: {engine:?}\n");
+
+    // Centralized reference optimum (data-centralized FISTA — the thing the
+    // paper's distributed setting cannot afford to do with real hospitals).
+    let masks: Vec<Vec<f64>> = problem.dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
+    let tasks: Vec<TaskData> = problem
+        .dataset
+        .tasks
+        .iter()
+        .zip(&masks)
+        .map(|(t, m)| TaskData { x: &t.x, y: &t.y, mask: m, loss: t.loss })
+        .collect();
+    let mut reg = problem.regularizer();
+    let reference = fista(&tasks, &mut reg, problem.l_max, 3000, 1e-12);
+    let f_star = *reference.history.last().unwrap();
+    println!("centralized FISTA: F* = {f_star:.6} ({} iterations)", reference.iterations);
+
+    // Distributed runs at increasing budgets.
+    let mut table = Table::new(&["iters/node", "AMTL F-F*", "SMTL F-F*", "AMTL s", "SMTL s"]);
+    for iters in [10usize, 40, 160, 640] {
+        let cfg = ExpConfig { iters, offset_units: 0.2, eta_k: 0.9, ..Default::default() };
+        let a = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+        let s = run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+        table.row(vec![
+            iters.to_string(),
+            format!("{:.4}", problem.objective(&a.w_final) - f_star),
+            format!("{:.4}", problem.objective(&s.w_final) - f_star),
+            format!("{:.2}", a.wall_time.as_secs_f64()),
+            format!("{:.2}", s.wall_time.as_secs_f64()),
+        ]);
+    }
+    table.print();
+    println!("\nboth gaps shrink toward 0: the asynchronous iterates reach the centralized optimum");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Dynamic step size (§III.D) demo: under heavy, heterogeneous delays the
+//! Eq. III.6 multiplier `c_{t,k} = log(max(nu_bar, 10))` lets slow nodes take
+//! larger steps and reach a lower objective within the same iteration
+//! budget.
+//!
+//! ```text
+//! cargo run --release --example dynamic_step_size
+//! ```
+
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, run_amtl_once, ExpConfig, Table};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let (engine, pool) = auto_engine(1);
+    println!("engine: {engine:?}");
+    println!("10 AMTL iterations per node, 10-task synthetic, d=50, nuclear norm\n");
+
+    let mut table = Table::new(&["offset (paper s)", "fixed-step F", "dynamic-step F", "gain"]);
+    for offset in [5.0, 10.0, 15.0, 20.0] {
+        let mut objs = [0.0f64; 2];
+        for (i, dynamic) in [false, true].into_iter().enumerate() {
+            let mut rng = Rng::new(99);
+            let ds = synthetic::lowrank_regression(&[100; 10], 50, 3, 0.5, &mut rng);
+            let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+            let cfg = ExpConfig {
+                iters: 10,
+                offset_units: offset,
+                eta_k: 0.3,
+                dynamic_step: dynamic,
+                ..Default::default()
+            };
+            let r = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+            objs[i] = problem.objective(&r.w_final);
+        }
+        table.row(vec![
+            format!("{offset:.0}"),
+            format!("{:.2}", objs[0]),
+            format!("{:.2}", objs[1]),
+            format!("{:+.1}%", 100.0 * (objs[1] - objs[0]) / objs[0]),
+        ]);
+    }
+    table.print();
+    println!("\nnegative gain = dynamic step reached a lower objective (paper Tables IV-VI)");
+    Ok(())
+}

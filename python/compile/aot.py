@@ -1,0 +1,160 @@
+"""AOT compile path: lower every (op, shape-bucket) pair to HLO *text* and
+write ``artifacts/manifest.json`` for the rust runtime.
+
+HLO text — not a serialized ``HloModuleProto`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape buckets: XLA programs are shape-static, so each per-task op is lowered
+once per ``(n, d)`` bucket with ``n`` a multiple of TILE_N=128; the rust
+runtime zero-pads each task's data up to the nearest bucket and passes a row
+mask (padding is exact — DESIGN.md §Shape-buckets).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import TILE_N, TILE_D
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Bucket tables. One entry per artifact; every bench/example shape in
+# DESIGN.md's experiment index maps into one of these buckets.
+# ---------------------------------------------------------------------------
+
+def shape_table(quick: bool):
+    """Returns {op: [(n, d) or (d, t)]} for the full or quick artifact set."""
+    if quick:
+        return {
+            "lsq_step": [(128, 50), (256, 28)],
+            "lsq_grad": [(128, 50)],
+            "logistic_step": [(128, 50)],
+            "logistic_grad": [(128, 50)],
+            "prox_l21": [(128, 8)],
+        }
+    lsq_step = []
+    # Fig 3a/3b, Table I, Fig 4, Tables IV–VI: d=50, n swept / bucketed.
+    for n in (128, 256, 512, 1024, 2048, 4096, 8192, 16384):
+        lsq_step.append((n, 50))
+    # Fig 3c: d swept at n=100→128. d=128 additionally matches the
+    # prox_l21 artifact tile (full-PJRT ℓ2,1 path).
+    for d in (10, 25, 100, 128, 200, 400):
+        lsq_step.append((128, d))
+    # School (Table III): d=28, n ∈ 22–251 → buckets 128, 256.
+    lsq_step += [(128, 28), (256, 28)]
+    logistic_step = [
+        (16384, 100),  # MNIST-sim: 5 binary tasks, n ≤ 14702, d=100
+        (4096, 10),    # MTFL-sim: 4 binary tasks, n ∈ 2224–10000, d=10
+        (8192, 10),
+        (16384, 10),
+        (128, 50),     # tests / small demos
+    ]
+    return {
+        "lsq_step": lsq_step,
+        "lsq_grad": [(128, 50), (128, 28), (256, 28), (256, 50)],
+        "logistic_step": logistic_step,
+        "logistic_grad": [(128, 50)],
+        "prox_l21": [(128, 8), (128, 16), (128, 32)],
+    }
+
+
+STEP_SIG = {
+    "inputs": ["x[n,d]", "y[n]", "w[d]", "mask[n]", "eta[1]"],
+    "outputs": ["u[d]", "obj[1]"],
+}
+GRAD_SIG = {
+    "inputs": ["x[n,d]", "y[n]", "w[d]", "mask[n]"],
+    "outputs": ["g[d]", "obj[1]"],
+}
+PROX_SIG = {"inputs": ["w[d,t]", "thresh[1]"], "outputs": ["w[d,t]"]}
+
+
+def lower_one(op: str, dims):
+    if op in model.STEP_OPS:
+        n, d = dims
+        fn = model.STEP_OPS[op]
+        args = (*model.data_specs(n, d), model.scalar_spec())
+        sig = STEP_SIG
+    elif op in model.GRAD_OPS:
+        n, d = dims
+        fn = model.GRAD_OPS[op]
+        args = model.data_specs(n, d)
+        sig = GRAD_SIG
+    elif op == "prox_l21":
+        d, t = dims
+        fn = model.prox_l21
+        args = (
+            jax.ShapeDtypeStruct((d, t), "float32"),
+            model.scalar_spec(),
+        )
+        sig = PROX_SIG
+    else:
+        raise ValueError(f"unknown op {op}")
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), sig
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="small artifact set for CI")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    table = shape_table(args.quick)
+    entries = []
+    for op, shapes in table.items():
+        for dims in shapes:
+            text, sig = lower_one(op, dims)
+            if op == "prox_l21":
+                d, t = dims
+                name = f"{op}_d{d}_t{t}.hlo.txt"
+                meta = {"op": op, "n": 0, "d": d, "t": t}
+            else:
+                n, d = dims
+                name = f"{op}_n{n}_d{d}.hlo.txt"
+                meta = {"op": op, "n": n, "d": d, "t": 0}
+            path = os.path.join(args.out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    **meta,
+                    "file": name,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                    **sig,
+                }
+            )
+            print(f"  wrote {name}  ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "tile_n": TILE_N,
+        "tile_d": TILE_D,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for AMTL.
+
+The compute hot spot of every AMTL iteration is the per-task forward step:
+a masked gradient of the task loss over the task's local data ``(x_t, y_t)``.
+Each kernel streams ``(TILE_N, d)`` slabs of ``X`` through VMEM with a
+``d``-sized accumulator, which is the TPU-idiomatic shape for an
+``X^T(residual)`` contraction (see DESIGN.md §Hardware-adaptation).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+rust runtime's CPU client runs directly.
+"""
+
+from .lsq import lsq_grad_obj
+from .logistic import logistic_grad_obj
+from .prox import prox_l21
+from .common import TILE_N, TILE_D
+
+__all__ = ["lsq_grad_obj", "logistic_grad_obj", "prox_l21", "TILE_N", "TILE_D"]

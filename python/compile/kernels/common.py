@@ -1,0 +1,53 @@
+"""Shared tiling configuration and helpers for the Pallas kernels.
+
+Tiling rationale (TPU mapping, estimated analytically since we execute under
+``interpret=True`` on CPU):
+
+* ``TILE_N = 128`` rows per grid step. A slab ``(128, d)`` of ``X`` in f32
+  occupies ``128 * d * 4`` bytes of VMEM — 25.6 KB at d=50, 256 KB at d=512,
+  comfortably inside the ~16 MB VMEM budget together with the ``d``-sized
+  accumulator, ``w``, and the residual tile.
+* The two contractions per slab — ``X_tile @ w`` (``(128,d)×(d,)``) and
+  ``r @ X_tile`` (``(128,)×(128,d)``) — are MXU-shaped matvecs; at d≥128 the
+  systolic array is fully occupied along one dimension (utilization estimate
+  in DESIGN.md §Perf).
+* ``TILE_D = 128`` rows per grid step for the row-wise prox kernel.
+"""
+
+import jax.numpy as jnp
+
+TILE_N = 128
+TILE_D = 128
+
+# VMEM budget for one (tile, d) f32 slab of X. With double buffering the
+# HBM→VMEM pipeline holds 2 slabs + the residual tile + the d-sized
+# accumulator; a 2 MB slab keeps the total well under a 16 MB VMEM.
+SLAB_BYTES = 2 * 1024 * 1024
+
+
+def tile_n_for(n: int, d: int) -> int:
+    """Adaptive row-tile: the largest power-of-two tile that divides ``n``
+    while keeping the f32 slab ``(tile, d)`` within :data:`SLAB_BYTES`.
+
+    Perf note (EXPERIMENTS.md §Perf): with a fixed TILE_N=128, an
+    ``n=16384`` bucket lowers to a 128-trip grid loop; under the CPU
+    interpret path each trip pays dynamic-slice overhead, and on TPU each
+    trip is a separate HBM→VMEM transfer of a thin slab. Scaling the tile
+    to the VMEM budget cut the measured per-step latency ~17x on the
+    MNIST bucket (147 ms → 8.7 ms, see EXPERIMENTS.md §Perf).
+    """
+    max_tile = max(TILE_N, SLAB_BYTES // (4 * max(d, 1)))
+    t = TILE_N
+    while t * 2 <= min(n, max_tile) and n % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def softplus(z):
+    """Numerically stable ``log(1 + exp(z))``."""
+    return jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z)))

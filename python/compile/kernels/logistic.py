@@ -1,0 +1,66 @@
+"""Masked logistic-regression gradient + objective as a Pallas kernel.
+
+Labels are ``y ∈ {0,1}``. For ``z = X w``:
+
+    g   = Xᵀ (m ∘ (σ(z) − y))
+    obj = Σ_i m_i (softplus(z_i) − y_i z_i)
+
+Same streaming structure as :mod:`lsq` — one pass over ``(TILE_N, d)`` slabs,
+``d``-sized accumulator pinned in the output ref. ``softplus`` is the stable
+form ``max(z,0) + log1p(exp(−|z|))`` so padded rows (z=0) stay finite, and
+the row mask zeroes their contribution exactly.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE_N, softplus, tile_n_for
+
+
+def _logistic_kernel(x_ref, y_ref, w_ref, m_ref, g_ref, obj_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        obj_ref[...] = jnp.zeros_like(obj_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    m = m_ref[...]
+    z = x @ w_ref[...]
+    r = (jax.nn.sigmoid(z) - y) * m
+    g_ref[...] += r @ x
+    obj_ref[...] += jnp.sum(m * (softplus(z) - y * z))[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def logistic_grad_obj(x, y, w, mask, interpret=True):
+    """Returns ``(g, obj)`` for the masked logistic loss."""
+    n, d = x.shape
+    assert n % TILE_N == 0, f"n={n} must be a multiple of TILE_N={TILE_N}"
+    tile = tile_n_for(n, d)
+    grid = (n // tile,)
+    g, obj = pl.pallas_call(
+        _logistic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, y, w, mask)
+    return g, obj[0]

@@ -1,0 +1,52 @@
+"""Row-wise ℓ2,1 proximal operator (group soft-threshold) as a Pallas kernel.
+
+For the joint-feature-learning regularizer ``g(W) = ||W||_{2,1}`` the
+backward step is separable over rows of ``W ∈ R^{d×T}``:
+
+    prox(w_i) = w_i · max(0, 1 − t / ||w_i||₂)
+
+This is the one MTL prox that *is* block-separable, so it can run as an L1
+kernel on the server path (the nuclear-norm SVT is not — it runs natively in
+rust, see DESIGN.md). The grid walks ``d / TILE_D`` row slabs; ``T`` is
+carried whole in the minor dimension. Zero-padded columns (bucketed T) do not
+perturb row norms and map to zero outputs — padding is exact.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE_D
+
+
+def _l21_kernel(w_ref, t_ref, o_ref):
+    w = w_ref[...]  # (TILE_D, T)
+    nrm = jnp.sqrt(jnp.sum(w * w, axis=1, keepdims=True))
+    # max(0, 1 - t/||w||) with a guarded divide; rows with ||w|| <= t → 0.
+    scale = jnp.maximum(nrm - t_ref[0], 0.0) / jnp.maximum(nrm, 1e-30)
+    o_ref[...] = w * scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def prox_l21(w, thresh, interpret=True):
+    """Row-wise group soft-threshold of ``w`` (shape ``(d, T)``) at ``thresh``.
+
+    ``thresh`` is a shape-``(1,)`` array so it stays a runtime input in the
+    AOT artifact (the rust side passes ``η·λ`` per call).
+    """
+    d, t = w.shape
+    assert d % TILE_D == 0, f"d={d} must be a multiple of TILE_D={TILE_D}"
+    grid = (d // TILE_D,)
+    return pl.pallas_call(
+        _l21_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_D, t), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_D, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, t), w.dtype),
+        interpret=interpret,
+    )(w, thresh)

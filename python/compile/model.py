@@ -1,0 +1,79 @@
+"""Layer-2 JAX model: the per-task AMTL computations, composed from the
+Layer-1 Pallas kernels.
+
+Entry points (each is AOT-lowered per shape bucket by :mod:`aot`):
+
+``lsq_step(x, y, w, mask, eta)  -> (u, obj)``
+    The fused forward step of Algorithm 1 for a least-squares task:
+    ``u = w − η ∇ℓ(w)`` with ``∇ℓ(w) = 2 Xᵀ(m ∘ (Xw − y))``, plus the loss
+    value at ``w`` (free — the residual is already in VMEM).
+
+``logistic_step(x, y, w, mask, eta) -> (u, obj)``
+    Same for a logistic task.
+
+``lsq_grad / logistic_grad (x, y, w, mask) -> (g, obj)``
+    Raw gradient + objective, used by the centralized FISTA baseline and by
+    integration tests.
+
+``prox_l21(w, thresh) -> w'``
+    Server-side backward step for the ℓ2,1 regularizer (the nuclear-norm SVT
+    runs natively in rust — its SVD does not lower to executable HLO on the
+    CPU plugin, see DESIGN.md).
+
+``eta`` and ``thresh`` are runtime scalars (shape-``(1,)`` inputs) so one
+artifact per data shape serves every step-size/regularization setting.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lsq_grad_obj, logistic_grad_obj, prox_l21 as _prox_l21
+
+
+def lsq_step(x, y, w, mask, eta):
+    g, obj = lsq_grad_obj(x, y, w, mask)
+    return w - eta[0] * g, jnp.reshape(obj, (1,))
+
+
+def logistic_step(x, y, w, mask, eta):
+    g, obj = logistic_grad_obj(x, y, w, mask)
+    return w - eta[0] * g, jnp.reshape(obj, (1,))
+
+
+def lsq_grad(x, y, w, mask):
+    g, obj = lsq_grad_obj(x, y, w, mask)
+    return g, jnp.reshape(obj, (1,))
+
+
+def logistic_grad(x, y, w, mask):
+    g, obj = logistic_grad_obj(x, y, w, mask)
+    return g, jnp.reshape(obj, (1,))
+
+
+def prox_l21(w, thresh):
+    return (_prox_l21(w, thresh),)
+
+
+def data_specs(n: int, d: int, dtype=jnp.float32):
+    """Example-arg specs for the per-task entry points at bucket ``(n, d)``."""
+    return (
+        jax.ShapeDtypeStruct((n, d), dtype),  # x
+        jax.ShapeDtypeStruct((n,), dtype),  # y
+        jax.ShapeDtypeStruct((d,), dtype),  # w
+        jax.ShapeDtypeStruct((n,), dtype),  # mask
+    )
+
+
+def scalar_spec(dtype=jnp.float32):
+    return jax.ShapeDtypeStruct((1,), dtype)
+
+
+# op name -> (callable, spec builder). Spec builders take the bucket dims.
+STEP_OPS = {
+    "lsq_step": lsq_step,
+    "logistic_step": logistic_step,
+}
+GRAD_OPS = {
+    "lsq_grad": lsq_grad,
+    "logistic_grad": logistic_grad,
+}

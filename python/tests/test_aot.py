@@ -1,0 +1,96 @@
+"""AOT pipeline: lowering produces loadable, custom-call-free HLO text and a
+well-formed manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+class TestLowering:
+    @pytest.mark.parametrize(
+        "op,dims",
+        [
+            ("lsq_step", (128, 50)),
+            ("lsq_grad", (128, 28)),
+            ("logistic_step", (128, 10)),
+            ("logistic_grad", (128, 50)),
+            ("prox_l21", (128, 8)),
+        ],
+    )
+    def test_lower_one_emits_hlo_text(self, op, dims):
+        text, sig = aot.lower_one(op, dims)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+        assert "inputs" in sig and "outputs" in sig
+
+    def test_no_custom_calls(self):
+        """xla_extension 0.5.1 cannot execute typed-FFI custom calls; every
+        artifact must lower to plain HLO (this is why SVT lives in rust)."""
+        for op, dims in [("lsq_step", (128, 50)), ("logistic_step", (128, 10)), ("prox_l21", (128, 8))]:
+            text, _ = aot.lower_one(op, dims)
+            assert "custom_call" not in text, f"{op} contains a custom call"
+
+    def test_step_artifact_has_five_params(self):
+        text, _ = aot.lower_one("lsq_step", (128, 50))
+        entry = [l for l in text.splitlines() if l.startswith("ENTRY")]
+        assert len(entry) == 1
+        # x, y, w, mask, eta
+        assert entry[0].count("parameter") >= 0  # parameters appear in body
+        params = [l for l in text.splitlines() if " parameter(" in l and "ENTRY" not in l]
+        # The entry computation has exactly 5 parameters (sub-computations may add more).
+        nums = {l.split("parameter(")[1].split(")")[0] for l in params}
+        assert {"0", "1", "2", "3", "4"} <= nums
+
+
+class TestManifest:
+    def test_quick_table_covers_all_ops(self):
+        table = aot.shape_table(quick=True)
+        assert set(table) == {"lsq_step", "lsq_grad", "logistic_step", "logistic_grad", "prox_l21"}
+
+    def test_full_table_covers_experiment_buckets(self):
+        table = aot.shape_table(quick=False)
+        lsq = set(table["lsq_step"])
+        # Fig 3a/b/table I buckets
+        for n in (128, 512, 1024, 8192, 16384):
+            assert (n, 50) in lsq
+        # Fig 3c d-sweep
+        for d in (10, 25, 100, 200, 400):
+            assert (128, d) in lsq
+        # School buckets
+        assert (128, 28) in lsq and (256, 28) in lsq
+        # MNIST / MTFL logistic buckets
+        logi = set(table["logistic_step"])
+        assert (16384, 100) in logi
+        for n in (4096, 8192, 16384):
+            assert (n, 10) in logi
+
+    def test_all_ns_are_tile_multiples(self):
+        from compile.kernels import TILE_N, TILE_D
+
+        table = aot.shape_table(quick=False)
+        for op, shapes in table.items():
+            for dims in shapes:
+                if op == "prox_l21":
+                    assert dims[0] % TILE_D == 0
+                else:
+                    assert dims[0] % TILE_N == 0
+
+    def test_cli_quick_writes_manifest(self, tmp_path):
+        out = tmp_path / "arts"
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--quick", "--out-dir", str(out)],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+            timeout=300,
+        )
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert manifest["version"] == 1
+        assert manifest["tile_n"] == 128
+        for e in manifest["entries"]:
+            assert (out / e["file"]).exists()
+            assert set(e) >= {"op", "n", "d", "t", "file", "inputs", "outputs", "sha256"}

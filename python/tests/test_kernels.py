@@ -1,0 +1,234 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Fixed-shape smoke tests plus hypothesis sweeps over shapes, masks and value
+scales. The hypothesis sweeps are the CORE correctness signal for the
+kernels: every (n, d) with n a TILE_N multiple must agree with the literal
+math in ref.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lsq_grad_obj, logistic_grad_obj, prox_l21, TILE_N, TILE_D
+from compile.kernels.ref import (
+    lsq_grad_obj_ref,
+    logistic_grad_obj_ref,
+    prox_l21_ref,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def make_task(n, d, scale=1.0, mask_frac=1.0, binary=False, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    x = jnp.array(rng.normal(scale=scale, size=(n, d)), jnp.float32)
+    if binary:
+        y = jnp.array((rng.random(n) > 0.5).astype(np.float32))
+    else:
+        y = jnp.array(rng.normal(scale=scale, size=(n,)), jnp.float32)
+    w = jnp.array(rng.normal(size=(d,)), jnp.float32)
+    m = jnp.array((rng.random(n) < mask_frac).astype(np.float32))
+    return x, y, w, m
+
+
+def assert_close(a, b, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- lsq kernel
+
+class TestLsqKernel:
+    @pytest.mark.parametrize("n,d", [(128, 1), (128, 7), (128, 50), (256, 28), (384, 13), (512, 64)])
+    def test_matches_ref(self, n, d):
+        x, y, w, m = make_task(n, d)
+        g, o = lsq_grad_obj(x, y, w, m)
+        gr, orr = lsq_grad_obj_ref(x, y, w, m)
+        assert_close(g, gr, rtol=1e-3, atol=1e-3)
+        assert_close(o, orr, rtol=1e-4)
+
+    def test_full_mask_equals_unmasked_math(self):
+        x, y, w, _ = make_task(128, 10)
+        m = jnp.ones(128, jnp.float32)
+        g, o = lsq_grad_obj(x, y, w, m)
+        r = np.asarray(x) @ np.asarray(w) - np.asarray(y)
+        assert_close(g, 2 * np.asarray(x).T @ r, rtol=1e-3, atol=1e-3)
+        assert_close(o, np.sum(r * r), rtol=1e-4)
+
+    def test_zero_mask_gives_zero(self):
+        x, y, w, _ = make_task(256, 20)
+        m = jnp.zeros(256, jnp.float32)
+        g, o = lsq_grad_obj(x, y, w, m)
+        assert float(jnp.abs(g).max()) == 0.0
+        assert float(o) == 0.0
+
+    def test_padding_rows_are_exact(self):
+        """Zero rows + zero mask ≡ the unpadded problem (bucket correctness)."""
+        n, d, n_pad = 100, 12, 128
+        x, y, w, _ = make_task(n, d)
+        xp = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(x)
+        yp = jnp.zeros((n_pad,), jnp.float32).at[:n].set(y)
+        mp = jnp.zeros((n_pad,), jnp.float32).at[:n].set(1.0)
+        g, o = lsq_grad_obj(xp, yp, w, mp)
+        gr, orr = lsq_grad_obj_ref(x, y, w, jnp.ones(n, jnp.float32))
+        assert_close(g, gr, rtol=1e-3, atol=1e-3)
+        assert_close(o, orr, rtol=1e-4)
+
+    def test_padding_cols_are_exact(self):
+        """Zero feature cols + zero w entries produce exactly zero grad there."""
+        n, d, d_pad = 128, 10, 16
+        x, y, w, m = make_task(n, d)
+        xp = jnp.zeros((n, d_pad), jnp.float32).at[:, :d].set(x)
+        wp = jnp.zeros((d_pad,), jnp.float32).at[:d].set(w)
+        g, o = lsq_grad_obj(xp, y, wp, m)
+        gr, orr = lsq_grad_obj_ref(x, y, w, m)
+        assert_close(g[:d], gr, rtol=1e-3, atol=1e-3)
+        assert float(jnp.abs(g[d:]).max()) == 0.0
+        assert_close(o, orr, rtol=1e-4)
+
+    def test_gradient_at_optimum_is_zero(self):
+        """For consistent y = Xw*, gradient at w* vanishes."""
+        n, d = 128, 5
+        x, _, w, _ = make_task(n, d)
+        y = x @ w
+        m = jnp.ones(n, jnp.float32)
+        g, o = lsq_grad_obj(x, y, w, m)
+        assert float(jnp.abs(g).max()) < 1e-3
+        assert float(o) < 1e-6
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 3),
+        d=st.integers(1, 64),
+        scale=st.sampled_from([0.01, 1.0, 10.0]),
+        mask_frac=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, tiles, d, scale, mask_frac, seed):
+        n = tiles * TILE_N
+        x, y, w, m = make_task(n, d, scale=scale, mask_frac=mask_frac, seed=seed)
+        g, o = lsq_grad_obj(x, y, w, m)
+        gr, orr = lsq_grad_obj_ref(x, y, w, m)
+        tol = 2e-3 * max(1.0, scale * scale)
+        assert_close(g, gr, rtol=tol, atol=tol * 10)
+        assert_close(o, orr, rtol=1e-3, atol=1e-3)
+
+
+# ----------------------------------------------------------- logistic kernel
+
+class TestLogisticKernel:
+    @pytest.mark.parametrize("n,d", [(128, 1), (128, 50), (256, 28), (512, 10)])
+    def test_matches_ref(self, n, d):
+        x, y, w, m = make_task(n, d, binary=True)
+        g, o = logistic_grad_obj(x, y, w, m)
+        gr, orr = logistic_grad_obj_ref(x, y, w, m)
+        assert_close(g, gr, rtol=1e-3, atol=1e-3)
+        assert_close(o, orr, rtol=1e-4, atol=1e-4)
+
+    def test_objective_nonnegative(self):
+        x, y, w, m = make_task(256, 30, binary=True)
+        _, o = logistic_grad_obj(x, y, w, m)
+        assert float(o) >= 0.0
+
+    def test_extreme_logits_stay_finite(self):
+        """softplus must not overflow for |z| ~ 1e3."""
+        x, y, w, m = make_task(128, 4, scale=30.0, binary=True)
+        g, o = logistic_grad_obj(x, y, w, m)
+        assert np.isfinite(np.asarray(g)).all()
+        assert np.isfinite(float(o))
+        gr, orr = logistic_grad_obj_ref(x, y, w, m)
+        assert_close(g, gr, rtol=1e-3, atol=1e-3)
+        assert_close(o, orr, rtol=1e-4, atol=1e-3)
+
+    def test_padding_rows_are_exact(self):
+        """σ(0) − 0 = 0.5 ≠ 0, so the mask is load-bearing for logistic."""
+        n, d, n_pad = 77, 8, 128
+        x, y, w, _ = make_task(n, d, binary=True)
+        xp = jnp.zeros((n_pad, d), jnp.float32).at[:n].set(x)
+        yp = jnp.zeros((n_pad,), jnp.float32).at[:n].set(y)
+        mp = jnp.zeros((n_pad,), jnp.float32).at[:n].set(1.0)
+        g, o = logistic_grad_obj(xp, yp, w, mp)
+        gr, orr = logistic_grad_obj_ref(x, y, w, jnp.ones(n, jnp.float32))
+        assert_close(g, gr, rtol=1e-3, atol=1e-3)
+        assert_close(o, orr, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        tiles=st.integers(1, 3),
+        d=st.integers(1, 64),
+        mask_frac=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, tiles, d, mask_frac, seed):
+        n = tiles * TILE_N
+        x, y, w, m = make_task(n, d, mask_frac=mask_frac, binary=True, seed=seed)
+        g, o = logistic_grad_obj(x, y, w, m)
+        gr, orr = logistic_grad_obj_ref(x, y, w, m)
+        assert_close(g, gr, rtol=2e-3, atol=2e-3)
+        assert_close(o, orr, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ prox_l21 kernel
+
+class TestProxL21:
+    @pytest.mark.parametrize("d,t", [(128, 1), (128, 8), (256, 16), (384, 5)])
+    def test_matches_ref(self, d, t):
+        w = jnp.array(RNG.normal(size=(d, t)), jnp.float32)
+        th = jnp.array([1.5], jnp.float32)
+        assert_close(prox_l21(w, th), prox_l21_ref(w, 1.5), rtol=1e-5, atol=1e-6)
+
+    def test_zero_threshold_is_identity(self):
+        w = jnp.array(RNG.normal(size=(128, 4)), jnp.float32)
+        out = prox_l21(w, jnp.array([0.0], jnp.float32))
+        assert_close(out, w, rtol=1e-6, atol=1e-7)
+
+    def test_large_threshold_kills_all_rows(self):
+        w = jnp.array(RNG.normal(size=(128, 4)), jnp.float32)
+        out = prox_l21(w, jnp.array([1e6], jnp.float32))
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_zero_rows_stay_zero(self):
+        w = jnp.zeros((128, 4), jnp.float32)
+        out = prox_l21(w, jnp.array([0.5], jnp.float32))
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_shrinks_row_norms_exactly(self):
+        w = jnp.array(RNG.normal(size=(128, 6)), jnp.float32)
+        th = 0.7
+        out = np.asarray(prox_l21(w, jnp.array([th], jnp.float32)))
+        before = np.linalg.norm(np.asarray(w), axis=1)
+        after = np.linalg.norm(out, axis=1)
+        expect = np.maximum(before - th, 0.0)
+        np.testing.assert_allclose(after, expect, rtol=1e-4, atol=1e-5)
+
+    def test_padded_cols_are_exact(self):
+        """Zero columns (bucketed T) neither perturb row norms nor outputs."""
+        w = jnp.array(RNG.normal(size=(128, 5)), jnp.float32)
+        wp = jnp.zeros((128, 8), jnp.float32).at[:, :5].set(w)
+        out_p = prox_l21(wp, jnp.array([0.9], jnp.float32))
+        out = prox_l21_ref(w, 0.9)
+        assert_close(out_p[:, :5], out, rtol=1e-5, atol=1e-6)
+        assert float(jnp.abs(out_p[:, 5:]).max()) == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tiles=st.integers(1, 3),
+        t=st.integers(1, 24),
+        th=st.floats(0.0, 5.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, tiles, t, th, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.array(rng.normal(size=(tiles * TILE_D, t)), jnp.float32)
+        out = prox_l21(w, jnp.array([th], jnp.float32))
+        assert_close(out, prox_l21_ref(w, th), rtol=1e-4, atol=1e-5)
+
+    def test_nonexpansive(self):
+        """prox of a convex function is non-expansive (a KM-iteration
+        prerequisite the AMTL convergence proof leans on)."""
+        a = jnp.array(RNG.normal(size=(128, 6)), jnp.float32)
+        b = jnp.array(RNG.normal(size=(128, 6)), jnp.float32)
+        th = jnp.array([1.1], jnp.float32)
+        pa, pb = prox_l21(a, th), prox_l21(b, th)
+        assert float(jnp.linalg.norm(pa - pb)) <= float(jnp.linalg.norm(a - b)) + 1e-5

@@ -1,0 +1,78 @@
+"""L2 correctness: the fused step ops implement Algorithm 1's forward step."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels.ref import lsq_grad_obj_ref, logistic_grad_obj_ref
+
+RNG = np.random.default_rng(11)
+
+
+def make(n, d, binary=False):
+    x = jnp.array(RNG.normal(size=(n, d)), jnp.float32)
+    y = (
+        jnp.array((RNG.random(n) > 0.5).astype(np.float32))
+        if binary
+        else jnp.array(RNG.normal(size=(n,)), jnp.float32)
+    )
+    w = jnp.array(RNG.normal(size=(d,)), jnp.float32)
+    m = jnp.ones(n, jnp.float32)
+    return x, y, w, m
+
+
+class TestStepOps:
+    @pytest.mark.parametrize("eta", [0.0, 1e-4, 0.01])
+    def test_lsq_step_is_w_minus_eta_grad(self, eta):
+        x, y, w, m = make(128, 20)
+        u, obj = model.lsq_step(x, y, w, m, jnp.array([eta], jnp.float32))
+        g, o_ref = lsq_grad_obj_ref(x, y, w, m)
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w - eta * g), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(float(obj[0]), float(o_ref), rtol=1e-4)
+
+    @pytest.mark.parametrize("eta", [0.0, 0.05])
+    def test_logistic_step_is_w_minus_eta_grad(self, eta):
+        x, y, w, m = make(128, 20, binary=True)
+        u, obj = model.logistic_step(x, y, w, m, jnp.array([eta], jnp.float32))
+        g, o_ref = logistic_grad_obj_ref(x, y, w, m)
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w - eta * g), rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(float(obj[0]), float(o_ref), rtol=1e-4, atol=1e-4)
+
+    def test_zero_eta_returns_w(self):
+        x, y, w, m = make(128, 10)
+        u, _ = model.lsq_step(x, y, w, m, jnp.array([0.0], jnp.float32))
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(w))
+
+    def test_step_decreases_lsq_objective(self):
+        """One gradient step with a safe η must not increase the loss."""
+        x, y, w, m = make(256, 15)
+        lip = 2.0 * float(jnp.linalg.norm(x, 2)) ** 2
+        eta = jnp.array([1.0 / lip], jnp.float32)
+        u, obj0 = model.lsq_step(x, y, w, m, eta)
+        _, obj1 = model.lsq_step(x, y, u, m, eta)
+        assert float(obj1[0]) <= float(obj0[0]) + 1e-5
+
+    def test_grad_ops_match_step_ops(self):
+        x, y, w, m = make(128, 12)
+        g, o1 = model.lsq_grad(x, y, w, m)
+        eta = 0.01
+        u, o2 = model.lsq_step(x, y, w, m, jnp.array([eta], jnp.float32))
+        np.testing.assert_allclose(np.asarray(u), np.asarray(w - eta * g), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(o1[0]), float(o2[0]), rtol=1e-6)
+
+
+class TestGradientDescentConvergence:
+    def test_gd_with_step_op_converges_on_consistent_system(self):
+        """Repeatedly applying lsq_step drives w to the planted solution."""
+        n, d = 256, 8
+        x = jnp.array(RNG.normal(size=(n, d)), jnp.float32)
+        w_star = jnp.array(RNG.normal(size=(d,)), jnp.float32)
+        y = x @ w_star
+        m = jnp.ones(n, jnp.float32)
+        lip = 2.0 * float(jnp.linalg.norm(x, 2)) ** 2
+        eta = jnp.array([1.0 / lip], jnp.float32)
+        w = jnp.zeros(d, jnp.float32)
+        for _ in range(300):
+            w, _ = model.lsq_step(x, y, w, m, eta)
+        assert float(jnp.linalg.norm(w - w_star)) < 1e-2

@@ -1,0 +1,112 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **prox stride** (`prox_every`): how often the server recomputes the
+//!    backward step. The paper (§III.C) notes the prox "can be applied
+//!    after several gradient updates"; this quantifies the staleness ↔
+//!    server-throughput trade-off.
+//! 2. **online SVD vs full Jacobi** for the nuclear prox (§IV.A).
+//! 3. **delay distribution** sensitivity: the ×100 time-compression claim
+//!    (DESIGN.md) — the AMTL/SMTL wall-clock ratio is stable across time
+//!    scales.
+//!
+//! Run: `cargo bench --bench ablation [-- --quick]`
+
+use amtl::config::Opts;
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let (engine, pool) = auto_engine(1);
+    println!("engine: {engine:?}");
+
+    // ---- 1. prox stride -------------------------------------------------
+    banner(
+        "Ablation — server prox stride (T=20, offset 2)",
+        "staleness barely hurts the objective; large strides cut server SVD work",
+    );
+    let strides: &[u64] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16] };
+    let mut table = Table::new(&["prox_every", "objective", "prox count", "wall (s)"]);
+    for &pe in strides {
+        let mut rng = Rng::new(11);
+        let ds = synthetic::lowrank_regression(&[100; 20], 50, 3, 0.5, &mut rng);
+        let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+        amtl::experiments::warm(&p, engine, pool.as_ref())?;
+        let cfg = ExpConfig {
+            iters: if quick { 4 } else { 15 },
+            offset_units: 2.0,
+            prox_every: pe,
+            ..Default::default()
+        };
+        let r = run_amtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        table.row(vec![
+            pe.to_string(),
+            format!("{:.2}", p.objective(&r.w_final)),
+            r.prox_count.to_string(),
+            format!("{:.2}", r.wall_time.as_secs_f64()),
+        ]);
+    }
+    table.print();
+
+    // ---- 2. online SVD --------------------------------------------------
+    banner(
+        "Ablation — nuclear prox backend (T=40, d=50)",
+        "online SVD trades exactness for per-update cost at high T (§IV.A)",
+    );
+    let mut table = Table::new(&["backend", "objective", "wall (s)"]);
+    for online in [false, true] {
+        let mut rng = Rng::new(12);
+        let t = if quick { 10 } else { 40 };
+        let ds = synthetic::lowrank_regression(&vec![100; t], 50, 3, 0.5, &mut rng);
+        let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+        amtl::experiments::warm(&p, engine, pool.as_ref())?;
+        let cfg = ExpConfig {
+            iters: if quick { 4 } else { 10 },
+            offset_units: 1.0,
+            online_svd: online,
+            ..Default::default()
+        };
+        let r = run_amtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        table.row(vec![
+            if online { "online (Brand)" } else { "full Jacobi" }.into(),
+            format!("{:.2}", p.objective(&r.w_final)),
+            format!("{:.2}", r.wall_time.as_secs_f64()),
+        ]);
+    }
+    table.print();
+
+    // ---- 3. time-scale sensitivity --------------------------------------
+    banner(
+        "Ablation — delay time-scale sensitivity (T=8, offset 5)",
+        "the AMTL/SMTL ratio is stable under the x100 compression (DESIGN.md)",
+    );
+    let scales: &[u64] = if quick { &[5, 20] } else { &[2, 5, 10, 20, 50] };
+    let mut table = Table::new(&["ms per paper-s", "AMTL (s)", "SMTL (s)", "ratio"]);
+    for &ms in scales {
+        let mut rng = Rng::new(13);
+        let ds = synthetic::lowrank_regression(&[100; 8], 50, 3, 0.5, &mut rng);
+        let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+        amtl::experiments::warm(&p, engine, pool.as_ref())?;
+        let cfg = ExpConfig {
+            iters: if quick { 3 } else { 8 },
+            offset_units: 5.0,
+            time_scale: Duration::from_millis(ms),
+            ..Default::default()
+        };
+        let a = run_amtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        let s = run_smtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        table.row(vec![
+            ms.to_string(),
+            format!("{:.2}", a.wall_time.as_secs_f64()),
+            format!("{:.2}", s.wall_time.as_secs_f64()),
+            format!("{:.2}x", s.wall_time.as_secs_f64() / a.wall_time.as_secs_f64().max(1e-12)),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

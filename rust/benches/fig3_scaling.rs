@@ -1,0 +1,112 @@
+//! Fig. 3 — computation time of AMTL vs SMTL for (a) varying number of
+//! tasks, (b) varying sample sizes, (c) varying dimensionality.
+//!
+//! Paper setup (§IV.B.1): synthetic regression, nuclear-norm regularizer,
+//! fixed number of iterations; (a) d=50, n=100; (b) T=5, d=50; (c) T=5,
+//! n=100. Expected shape: SMTL needs more time than AMTL everywhere; the
+//! gap grows with T (3a) and with d (3c); both are mostly flat in n until
+//! the gradient cost bites (3b).
+//!
+//! Delay scaling: one paper-second = 10 ms here (DESIGN.md §Substitutions);
+//! the injected offset is 2 paper-units per activation — the distributed
+//! setting always has communication delay, and it is what the barrier
+//! amplifies.
+//!
+//! Run: `cargo bench --bench fig3_scaling [-- --quick] [-- fig3a|fig3b|fig3c]`
+
+use amtl::config::Opts;
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let which: Vec<&str> = opts
+        .positional
+        .iter()
+        .map(|s| s.as_str())
+        .filter(|s| s.starts_with("fig"))
+        .collect();
+    let all = which.is_empty();
+    let (engine, pool) = auto_engine(1);
+    println!("engine: {engine:?}  (1 paper-second = 10 ms)");
+
+    let run = |t: usize, n: usize, d: usize, prox_every: u64| -> anyhow::Result<(f64, f64)> {
+        let mut rng = Rng::new(42);
+        let ds = synthetic::random_regression(t, n, d, &mut rng);
+        let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+        let cfg = ExpConfig {
+            iters: if quick { 3 } else { 10 },
+            offset_units: 2.0,
+            prox_every,
+            ..Default::default()
+        };
+        amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+        let a = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+        let s = run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+        Ok((a.wall_time.as_secs_f64(), s.wall_time.as_secs_f64()))
+    };
+
+    if all || which.contains(&"fig3a") {
+        banner(
+            "Fig 3a — time vs number of tasks (d=50, n=100)",
+            "SMTL grows much faster with T than AMTL (barrier waits for all tasks)",
+        );
+        let ts: &[usize] = if quick { &[5, 10] } else { &[5, 10, 25, 50, 100] };
+        let mut table = Table::new(&["T", "AMTL (s)", "SMTL (s)", "SMTL/AMTL"]);
+        for &t in ts {
+            // Paper's own mitigation for the backward-step pile-up at high
+            // T: prox after several updates (§III.C); stride T/4.
+            let (a, s) = run(t, 100, 50, (t as u64 / 4).max(1))?;
+            table.row(vec![
+                t.to_string(),
+                format!("{a:.3}"),
+                format!("{s:.3}"),
+                format!("{:.2}x", s / a.max(1e-12)),
+            ]);
+        }
+        table.print();
+    }
+
+    if all || which.contains(&"fig3b") {
+        banner(
+            "Fig 3b — time vs samples per task (T=5, d=50)",
+            "no abrupt change with n; AMTL < SMTL throughout",
+        );
+        let ns: &[usize] = if quick { &[100, 1000] } else { &[100, 500, 1000, 5000, 10000] };
+        let mut table = Table::new(&["n", "AMTL (s)", "SMTL (s)", "SMTL/AMTL"]);
+        for &n in ns {
+            let (a, s) = run(5, n, 50, 1)?;
+            table.row(vec![
+                n.to_string(),
+                format!("{a:.3}"),
+                format!("{s:.3}"),
+                format!("{:.2}x", s / a.max(1e-12)),
+            ]);
+        }
+        table.print();
+    }
+
+    if all || which.contains(&"fig3c") {
+        banner(
+            "Fig 3c — time vs dimensionality (T=5, n=100)",
+            "time grows with d for both; the AMTL-SMTL gap widens",
+        );
+        let ds: &[usize] = if quick { &[10, 100] } else { &[10, 25, 50, 100, 200, 400] };
+        let mut table = Table::new(&["d", "AMTL (s)", "SMTL (s)", "SMTL/AMTL"]);
+        for &d in ds {
+            let (a, s) = run(5, 100, d, 1)?;
+            table.row(vec![
+                d.to_string(),
+                format!("{a:.3}"),
+                format!("{s:.3}"),
+                format!("{:.2}x", s / a.max(1e-12)),
+            ]);
+        }
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! §Perf harness — per-step latency of the PJRT forward-step artifacts
+//! across shape buckets, plus the server-side backward-step (prox) cost
+//! for full Jacobi SVD vs Brand online SVD.
+//!
+//! This is the measurement tool of the performance pass (EXPERIMENTS.md
+//! §Perf). Point `AMTL_ARTIFACTS` at an alternative artifact directory to
+//! A/B kernel variants (e.g. fixed- vs adaptive-tile lowering).
+//!
+//! Run: `cargo bench --bench perf_step`
+
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, Table};
+use amtl::linalg::Mat;
+use amtl::optim::prox::RegularizerKind;
+use amtl::optim::svd::{OnlineSvd, Svd};
+use amtl::util::stats::bench_secs;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let (engine, pool) = auto_engine(1);
+    println!("engine: {engine:?} (artifacts: {:?})", amtl::runtime::manifest::default_dir());
+
+    // ---- L2/L1: forward-step latency per bucket -------------------------
+    println!("\n=== forward-step latency (PJRT artifact, per call) ===");
+    let shapes: &[(&str, usize, usize)] = if quick {
+        &[("lsq", 100, 50)]
+    } else {
+        &[
+            ("lsq", 100, 50),
+            ("lsq", 1000, 50),
+            ("lsq", 10000, 50),
+            ("lsq", 100, 400),
+            ("logistic", 14000, 100),
+            ("logistic", 10000, 10),
+        ]
+    };
+    let mut table = Table::new(&["loss", "n", "d", "bucket", "mean ms", "min ms"]);
+    for &(loss, n, d) in shapes {
+        let mut rng = Rng::new(1);
+        let ds = if loss == "lsq" {
+            synthetic::lowrank_regression(&[n], d, 2.min(d), 0.1, &mut rng)
+        } else {
+            synthetic::lowrank_classification(&[n], d, 2.min(d), &mut rng)
+        };
+        let problem = MtlProblem::new(ds, RegularizerKind::None, 0.0, 0.5, &mut rng);
+        let mut computes = problem.build_computes(engine, pool.as_ref())?;
+        let w = rng.normal_vec(d);
+        let bucket = format!("n{}", problem.dataset.tasks[0].n().next_power_of_two().max(128));
+        let reps = if quick { 3 } else { 10 };
+        let s = bench_secs(2, reps, || {
+            let _ = computes[0].step(&w, 1e-4).unwrap();
+        });
+        table.row(vec![
+            loss.into(),
+            n.to_string(),
+            d.to_string(),
+            bucket,
+            format!("{:.2}", s.mean * 1e3),
+            format!("{:.2}", s.min * 1e3),
+        ]);
+    }
+    table.print();
+
+    // ---- L3: backward-step (nuclear prox) cost --------------------------
+    println!("\n=== backward-step cost: full Jacobi SVT vs online SVD (per prox) ===");
+    let mut table = Table::new(&["d", "T", "full SVT ms", "online update+SVT ms"]);
+    let dims: &[(usize, usize)] = if quick { &[(50, 10)] } else { &[(28, 139), (50, 15), (50, 100), (400, 5)] };
+    for &(d, t) in dims {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(d, t, &mut rng);
+        let reps = if quick { 3 } else { 10 };
+        let full = bench_secs(1, reps, || {
+            let _ = Svd::jacobi(&m).shrink_reconstruct(0.1);
+        });
+        let mut osvd = OnlineSvd::init(&m);
+        let mut col_rng = Rng::new(3);
+        let online = bench_secs(1, reps, || {
+            let col = col_rng.normal_vec(d);
+            osvd.replace_column(0, &col);
+            let _ = osvd.shrink_reconstruct(0.1);
+        });
+        table.row(vec![
+            d.to_string(),
+            t.to_string(),
+            format!("{:.3}", full.mean * 1e3),
+            format!("{:.3}", online.mean * 1e3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Table I — computation times of AMTL and SMTL under different network
+//! characteristics (delay offsets 5/10/30 paper-seconds) for T ∈ {5,10,15}.
+//!
+//! Paper numbers (seconds; 100 samples/task, d=50, nuclear norm):
+//!
+//! | Network  | 5 Tasks | 10 Tasks | 15 Tasks |
+//! | AMTL-5   |  156.21 |   172.59 |   173.38 |
+//! | AMTL-10  |  297.34 |   308.55 |   313.54 |
+//! | AMTL-30  |  902.22 |   910.39 |   880.63 |
+//! | SMTL-5   |  239.34 |   248.23 |   256.94 |
+//! | SMTL-10  |  452.84 |   470.79 |   494.13 |
+//! | SMTL-30  | 1238.16 |  1367.38 |  1454.57 |
+//!
+//! Expected shape: AMTL beats SMTL at every offset/T; AMTL is ~flat in T
+//! while SMTL grows with T; both scale ~linearly with the offset. We scale
+//! one paper-second to 10 ms (×100 compression), so e.g. AMTL-5 ≈ 1.5 s
+//! here ↔ 156 s in the paper.
+//!
+//! Run: `cargo bench --bench table1_network [-- --quick]`
+
+use amtl::config::Opts;
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let (engine, pool) = auto_engine(1);
+    banner(
+        "Table I — AMTL vs SMTL under different network delays",
+        "AMTL wins everywhere; SMTL degrades as T grows (barrier on stragglers)",
+    );
+    println!("engine: {engine:?}; 1 paper-second = 10 ms (divide paper numbers by 100)");
+
+    let offsets: &[f64] = if quick { &[5.0] } else { &[5.0, 10.0, 30.0] };
+    let tasks: &[usize] = if quick { &[5] } else { &[5, 10, 15] };
+    let iters = if quick { 3 } else { 10 };
+
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for method in ["AMTL", "SMTL"] {
+        for &off in offsets {
+            let mut cells = Vec::new();
+            for &t in tasks {
+                let mut rng = Rng::new(42);
+                let ds = synthetic::random_regression(t, 100, 50, &mut rng);
+                let problem =
+                    MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+                let cfg = ExpConfig { iters, offset_units: off, ..Default::default() };
+                amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+                let wall = if method == "AMTL" {
+                    run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                        .wall_time
+                        .as_secs_f64()
+                } else {
+                    run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                        .wall_time
+                        .as_secs_f64()
+                };
+                cells.push(wall);
+            }
+            rows.push((format!("{method}-{off:.0}"), cells));
+        }
+    }
+
+    let headers: Vec<String> = std::iter::once("Network".to_string())
+        .chain(tasks.iter().map(|t| format!("{t} Tasks (s)")))
+        .collect();
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for (name, cells) in &rows {
+        table.row(
+            std::iter::once(name.clone())
+                .chain(cells.iter().map(|c| format!("{c:.2}")))
+                .collect(),
+        );
+    }
+    table.print();
+
+    // Shape check (who wins), printed for EXPERIMENTS.md.
+    let n_off = offsets.len();
+    let mut holds = true;
+    for i in 0..n_off {
+        let (amtl, smtl) = (&rows[i].1, &rows[i + n_off].1);
+        for (a, s) in amtl.iter().zip(smtl) {
+            if a >= s {
+                holds = false;
+            }
+        }
+    }
+    println!("shape check — AMTL faster than SMTL in every cell: {holds}");
+    Ok(())
+}

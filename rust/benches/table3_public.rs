@@ -1,0 +1,88 @@
+//! Tables II & III — training time of AMTL vs SMTL on the (simulated)
+//! public datasets under delay offsets 1/2/3 paper-seconds.
+//!
+//! Paper numbers (seconds):
+//!
+//! | Network | School | MNIST  | MTFL   |
+//! | AMTL-1  | 194.22 |  54.96 |  50.40 |
+//! | AMTL-2  | 231.58 |  83.17 |  77.44 |
+//! | AMTL-3  | 460.15 | 115.46 | 103.45 |
+//! | SMTL-1  | 299.79 |  57.94 |  50.59 |
+//! | SMTL-2  | 298.42 | 114.85 |  92.84 |
+//! | SMTL-3  | 593.36 | 161.67 | 146.87 |
+//!
+//! Expected shape: AMTL ≤ SMTL everywhere; the gap is widest for School
+//! (139 tasks — the barrier pays the slowest of 139 draws) and narrow for
+//! MTFL (4 tasks). The datasets are simulated equivalents matching Table II
+//! exactly in (T, n-range, d, loss) — see `data::public` and DESIGN.md.
+//!
+//! Run: `cargo bench --bench table3_public [-- --quick]`
+
+use amtl::config::Opts;
+use amtl::coordinator::MtlProblem;
+use amtl::data::public;
+use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let (engine, pool) = auto_engine(1);
+
+    banner("Table II — dataset descriptions", "matched to the paper's Table II");
+    let mut rng = Rng::new(42);
+    let names: &[&str] = if quick { &["mtfl"] } else { &["school", "mnist", "mtfl"] };
+    for name in names {
+        let ds = public::by_name(name, &mut rng).unwrap();
+        println!("  {}", ds.describe());
+    }
+
+    banner(
+        "Table III — training time on public datasets",
+        "AMTL ≤ SMTL for every dataset and offset; gap widest for School (T=139)",
+    );
+    println!("engine: {engine:?}; 1 paper-second = 10 ms (divide paper numbers by 100)");
+
+    let offsets: &[f64] = if quick { &[1.0] } else { &[1.0, 2.0, 3.0] };
+    let iters = if quick { 2 } else { 10 };
+
+    let mut table = Table::new(
+        &std::iter::once("Network")
+            .chain(names.iter().copied())
+            .collect::<Vec<_>>(),
+    );
+    for method in ["AMTL", "SMTL"] {
+        for &off in offsets {
+            let mut cells = vec![format!("{method}-{off:.0}")];
+            for name in names {
+                let mut rng = Rng::new(42);
+                let ds = public::by_name(name, &mut rng).unwrap();
+                let t_count = ds.t();
+                let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+                let cfg = ExpConfig {
+                    iters,
+                    offset_units: off,
+                    // Keep the backward step off the critical path for the
+                    // 139-task School run (§III.C allows batched proxes).
+                    prox_every: (t_count as u64 / 4).max(1),
+                    ..Default::default()
+                };
+                amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+                let wall = if method == "AMTL" {
+                    run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                        .wall_time
+                        .as_secs_f64()
+                } else {
+                    run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                        .wall_time
+                        .as_secs_f64()
+                };
+                cells.push(format!("{wall:.2}"));
+            }
+            table.row(cells);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Tables IV, V, VI — the dynamic step size (§III.D): final objective after
+//! a fixed 10 iterations, with vs without the Eq. III.6 multiplier, for
+//! T ∈ {5, 10, 15} and delay offsets {5, 10, 15, 20}.
+//!
+//! Paper shape (synthetic, 100 samples/task, d=50): the dynamic step size
+//! always reaches a *lower* objective within the iteration budget, and its
+//! advantage grows with the delay. E.g. Table IV (5 tasks):
+//!
+//! | Network  | fixed step | dynamic step |
+//! | AMTL-5   |     163.62 |       144.83 |
+//! | AMTL-20  |     168.63 |       143.50 |
+//!
+//! The paper averages the last 5 delays (ν̄) per node; so do we. Delays are
+//! recorded in paper units, so the multiplier log(max(ν̄, 10)) sees the
+//! same numbers as the paper despite wall-clock scaling.
+//!
+//! Run: `cargo bench --bench table456_dynstep [-- 5|10|15] [-- --quick]`
+
+use amtl::config::Opts;
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::experiments::{auto_engine, banner, run_amtl_once, ExpConfig, Table};
+use amtl::optim::prox::RegularizerKind;
+use amtl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let (engine, pool) = auto_engine(1);
+    println!("engine: {engine:?}");
+
+    let selected: Vec<usize> = opts
+        .positional
+        .iter()
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let tasks: Vec<usize> = if !selected.is_empty() {
+        selected
+    } else if quick {
+        vec![5]
+    } else {
+        vec![5, 10, 15]
+    };
+    let offsets: &[f64] = if quick { &[5.0, 20.0] } else { &[5.0, 10.0, 15.0, 20.0] };
+
+    for (ti, t) in tasks.iter().enumerate() {
+        let roman = ["IV", "V", "VI"].get(ti).copied().unwrap_or("–");
+        banner(
+            &format!("Table {roman} — dynamic step size, {t} tasks (final objective @ 10 iters)"),
+            "dynamic step reaches a lower objective; the gap grows with the delay",
+        );
+        let mut table = Table::new(&["Network", "fixed step", "dynamic step", "improvement"]);
+        for &off in offsets {
+            let mut objs = [0.0f64; 2];
+            for (i, dynamic) in [false, true].into_iter().enumerate() {
+                let mut rng = Rng::new(42);
+                let ds = synthetic::lowrank_regression(&vec![100; *t], 50, 3, 0.5, &mut rng);
+                let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+                let cfg = ExpConfig {
+                    iters: 10, // the paper's fixed budget
+                    offset_units: off,
+                    eta_k: 0.3, // dynamic multiplier stays in the stable range
+                    dynamic_step: dynamic,
+                    ..Default::default()
+                };
+                amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+                let r = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+                objs[i] = problem.objective(&r.w_final);
+            }
+            table.row(vec![
+                format!("AMTL-{off:.0}"),
+                format!("{:.2}", objs[0]),
+                format!("{:.2}", objs[1]),
+                format!("{:+.1}%", 100.0 * (objs[1] - objs[0]) / objs[0]),
+            ]);
+        }
+        table.print();
+    }
+    Ok(())
+}

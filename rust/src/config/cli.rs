@@ -1,0 +1,181 @@
+//! Minimal GNU-style CLI parser: `--key value`, `--key=value`, `--flag`,
+//! and positional arguments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command-line options.
+#[derive(Debug, Clone, Default)]
+pub struct Opts {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Option keys that were actually consumed by the program (for
+    /// unknown-option detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Opts {
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Opts, CliError> {
+        let mut opts = Opts::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest is positional.
+                    opts.positional.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    opts.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    opts.options.insert(body.to_string(), v);
+                } else {
+                    opts.flags.push(body.to_string());
+                }
+            } else {
+                opts.positional.push(arg);
+            }
+        }
+        Ok(opts)
+    }
+
+    pub fn from_env() -> Result<Opts, CliError> {
+        Opts::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects a number, got '{v}'"))),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error if any supplied `--option` was never queried.
+    pub fn reject_unknown(&self) -> Result<(), CliError> {
+        let known = self.known.borrow();
+        for k in self.options.keys() {
+            if !known.iter().any(|x| x == k) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        for f in &self.flags {
+            if !known.iter().any(|x| x == f) {
+                return Err(CliError(format!("unknown flag --{f}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Opts {
+        Opts::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let o = parse(&["--tasks", "5", "--lambda=0.3"]);
+        assert_eq!(o.get("tasks"), Some("5"));
+        assert_eq!(o.get("lambda"), Some("0.3"));
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let o = parse(&["train", "--dynamic-step", "--tasks", "3", "extra"]);
+        assert_eq!(o.positional, vec!["train", "extra"]);
+        assert!(o.flag("dynamic-step"));
+        assert!(!o.flag("online-svd"));
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let o = parse(&["--n", "100", "--eta", "0.25"]);
+        assert_eq!(o.get_usize("n", 5).unwrap(), 100);
+        assert_eq!(o.get_usize("m", 7).unwrap(), 7);
+        assert_eq!(o.get_f64("eta", 0.0).unwrap(), 0.25);
+        assert!(o.get_usize("eta", 1).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_option_parsing() {
+        let o = parse(&["--a", "1", "--", "--not-an-option"]);
+        assert_eq!(o.get("a"), Some("1"));
+        assert_eq!(o.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let o = parse(&["--taskz", "5"]);
+        let _ = o.get("tasks");
+        assert!(o.reject_unknown().is_err());
+        let o2 = parse(&["--tasks", "5"]);
+        let _ = o2.get("tasks");
+        assert!(o2.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        // "--offset -3" : -3 doesn't start with --, so it's the value.
+        let o = parse(&["--offset", "-3"]);
+        assert_eq!(o.get_f64("offset", 0.0).unwrap(), -3.0);
+    }
+}

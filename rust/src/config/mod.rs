@@ -1,0 +1,6 @@
+//! Configuration: CLI parsing (no `clap` in the offline vendored set) and
+//! experiment config assembly.
+
+pub mod cli;
+
+pub use cli::{CliError, Opts};

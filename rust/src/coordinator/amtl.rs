@@ -1,0 +1,278 @@
+//! The asynchronous AMTL driver — Algorithm 1 of the paper.
+//!
+//! Spawns one worker thread per task node; every node runs its activations
+//! independently (no barrier anywhere). The central server's backward step
+//! is the only shared computation, and it never blocks a node that is
+//! sleeping on its network delay.
+
+use super::metrics::{Recorder, RunResult};
+use super::problem::MtlProblem;
+use super::server::CentralServer;
+use super::state::SharedState;
+use super::step_size::{KmSchedule, StepController};
+use super::worker::{run_worker, WorkerCtx};
+use crate::net::{DelayModel, FaultModel};
+use crate::runtime::TaskCompute;
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Configuration of one AMTL run.
+#[derive(Clone, Debug)]
+pub struct AmtlConfig {
+    /// Activations per task node ("iterations" in the paper's tables).
+    pub iters_per_node: usize,
+    /// Injected network-delay model.
+    pub delay: DelayModel,
+    /// Injected fault model (robustness experiments).
+    pub faults: FaultModel,
+    /// Minibatch fraction for stochastic forward steps (None = full batch).
+    pub sgd_fraction: Option<f64>,
+    /// Wall-clock duration of one paper delay-unit (DESIGN.md: 100 ms
+    /// represents one paper "second").
+    pub time_scale: Duration,
+    /// KM relaxation step η_k.
+    pub km: KmSchedule,
+    /// Enable the §III.D dynamic step size.
+    pub dynamic_step: bool,
+    /// Delay-history window for Eq. III.6 (the paper uses 5).
+    pub dyn_window: usize,
+    /// Server re-prox stride (1 = after every update, the paper default).
+    pub prox_every: u64,
+    /// Trajectory sampling stride in updates.
+    pub record_every: u64,
+    /// Use the Brand online-SVD incremental prox (nuclear norm only).
+    pub online_svd: bool,
+    pub seed: u64,
+}
+
+impl Default for AmtlConfig {
+    fn default() -> Self {
+        AmtlConfig {
+            iters_per_node: 10,
+            delay: DelayModel::None,
+            faults: FaultModel::None,
+            sgd_fraction: None,
+            time_scale: Duration::from_millis(100),
+            km: KmSchedule::fixed(0.5),
+            dynamic_step: false,
+            dyn_window: 5,
+            prox_every: 1,
+            record_every: 1,
+            online_svd: false,
+            seed: 7,
+        }
+    }
+}
+
+impl AmtlConfig {
+    /// The paper's AMTL-k network setting: delay offset of `k` paper-units.
+    pub fn with_paper_offset(mut self, offset_units: f64) -> AmtlConfig {
+        self.delay = DelayModel::paper_offset(self.time_scale.mul_f64(offset_units));
+        self
+    }
+}
+
+/// Run asynchronous MTL. `computes` must have one entry per task (built by
+/// [`MtlProblem::build_computes`]).
+pub fn run_amtl(
+    problem: &MtlProblem,
+    mut computes: Vec<Box<dyn TaskCompute>>,
+    cfg: &AmtlConfig,
+) -> Result<RunResult> {
+    let t_count = problem.t();
+    anyhow::ensure!(
+        computes.len() == t_count,
+        "need one compute per task ({} != {t_count})",
+        computes.len()
+    );
+
+    let state = Arc::new(SharedState::zeros(problem.d(), t_count));
+    let mut reg = problem.regularizer();
+    if cfg.online_svd {
+        reg = reg.with_online_svd(&state.snapshot());
+    }
+    let server = Arc::new(
+        CentralServer::new(Arc::clone(&state), reg, problem.eta).with_prox_every(cfg.prox_every),
+    );
+    let controller = Arc::new(StepController::new(
+        cfg.km,
+        cfg.dynamic_step,
+        t_count,
+        cfg.dyn_window,
+    ));
+    let recorder = Arc::new(Recorder::new(cfg.record_every));
+    recorder.record_now(0, state.snapshot());
+
+    let mut root_rng = Rng::new(cfg.seed);
+    let start = Instant::now();
+    let mut stats = Vec::new();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (t, compute) in computes.iter_mut().enumerate() {
+            let ctx = WorkerCtx {
+                t,
+                iters: cfg.iters_per_node,
+                server: Arc::clone(&server),
+                controller: Arc::clone(&controller),
+                delay: cfg.delay.clone(),
+                faults: cfg.faults.clone(),
+                sgd_fraction: cfg.sgd_fraction,
+                time_scale: cfg.time_scale,
+                recorder: Arc::clone(&recorder),
+                rng: root_rng.fork(t as u64),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("amtl-worker-{t}"))
+                .spawn_scoped(s, move || run_worker(ctx, compute.as_mut()))?;
+            handles.push(handle);
+        }
+        for h in handles {
+            stats.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        }
+        Ok(())
+    })?;
+    let wall_time = start.elapsed();
+
+    let v_final = state.snapshot();
+    recorder.record_now(state.version(), v_final.clone());
+    let w_final = server.final_w();
+    let updates_per_node: Vec<u64> = stats.iter().map(|s| s.updates).collect();
+    let total_updates: u64 = updates_per_node.iter().sum();
+    let mean_delay_secs = if total_updates > 0 {
+        stats.iter().map(|s| s.total_delay_secs).sum::<f64>() / total_updates as f64
+    } else {
+        0.0
+    };
+
+    let recorder = Arc::try_unwrap(recorder)
+        .map_err(|_| anyhow::anyhow!("recorder still referenced"))?;
+    Ok(RunResult {
+        method: "amtl".into(),
+        wall_time,
+        v_final,
+        w_final,
+        updates: total_updates,
+        updates_per_node,
+        prox_count: server.prox_count(),
+        trajectory: recorder.into_points(),
+        mean_delay_secs,
+        dropped_updates: stats.iter().map(|s| s.dropped).sum(),
+        crashed_nodes: stats
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.crashed)
+            .map(|(i, _)| i)
+            .collect(),
+        compute_secs: stats.iter().map(|s| s.compute_secs).sum(),
+        backward_wait_secs: stats.iter().map(|s| s.backward_wait_secs).sum(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
+    use crate::runtime::Engine;
+
+    fn problem(seed: u64, t: usize, n: usize, d: usize) -> MtlProblem {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.05, &mut rng);
+        MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn amtl_runs_and_counts_updates() {
+        let p = problem(130, 4, 30, 6);
+        let computes = p.build_computes(Engine::Native, None).unwrap();
+        let cfg = AmtlConfig { iters_per_node: 5, ..Default::default() };
+        let r = run_amtl(&p, computes, &cfg).unwrap();
+        assert_eq!(r.updates, 20);
+        assert_eq!(r.updates_per_node, vec![5; 4]);
+        assert!(r.prox_count >= 1);
+        assert_eq!(r.w_final.rows(), 6);
+        assert_eq!(r.w_final.cols(), 4);
+    }
+
+    #[test]
+    fn amtl_decreases_objective() {
+        let p = problem(131, 5, 40, 8);
+        let computes = p.build_computes(Engine::Native, None).unwrap();
+        let cfg = AmtlConfig { iters_per_node: 60, km: KmSchedule::fixed(0.9), ..Default::default() };
+        let obj0 = p.objective(&p.prox_map(&crate::linalg::Mat::zeros(8, 5)));
+        let r = run_amtl(&p, computes, &cfg).unwrap();
+        let obj1 = p.objective(&r.w_final);
+        assert!(obj1 < 0.2 * obj0, "objective {obj0} -> {obj1}");
+    }
+
+    #[test]
+    fn amtl_converges_to_fista_optimum() {
+        let p = problem(132, 4, 50, 6);
+        // FISTA reference optimum.
+        let masks: Vec<Vec<f64>> = p.dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
+        let tasks: Vec<crate::optim::fista::TaskData> = p
+            .dataset
+            .tasks
+            .iter()
+            .zip(&masks)
+            .map(|(t, m)| crate::optim::fista::TaskData { x: &t.x, y: &t.y, mask: m, loss: t.loss })
+            .collect();
+        let mut reg = p.regularizer();
+        let fista = crate::optim::fista::fista(&tasks, &mut reg, p.l_max, 2000, 1e-12);
+        let f_star = *fista.history.last().unwrap();
+
+        let computes = p.build_computes(Engine::Native, None).unwrap();
+        let cfg = AmtlConfig {
+            iters_per_node: 400,
+            km: KmSchedule::fixed(0.9),
+            record_every: 1_000_000,
+            ..Default::default()
+        };
+        let r = run_amtl(&p, computes, &cfg).unwrap();
+        let f_amtl = p.objective(&r.w_final);
+        assert!(
+            f_amtl <= f_star * 1.05 + 1e-6,
+            "AMTL {f_amtl} vs FISTA {f_star}"
+        );
+    }
+
+    #[test]
+    fn amtl_is_deterministic_without_concurrency_effects() {
+        // With a single task there is no interleaving: two runs must agree.
+        let p = problem(133, 1, 30, 5);
+        let cfg = AmtlConfig { iters_per_node: 20, ..Default::default() };
+        let r1 = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+        let r2 = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+        assert!(r1.v_final.max_abs_diff(&r2.v_final) < 1e-15);
+    }
+
+    #[test]
+    fn trajectory_is_recorded() {
+        let p = problem(134, 3, 20, 4);
+        let cfg = AmtlConfig { iters_per_node: 10, record_every: 5, ..Default::default() };
+        let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+        // 30 updates / stride 5 = ~6 samples + initial + final.
+        assert!(r.trajectory.len() >= 4, "only {} points", r.trajectory.len());
+        let objs = r.compute_objectives(|w| p.objective(w), |v| p.prox_map(v));
+        // Objectives broadly decreasing: last < first.
+        assert!(objs.last().unwrap().2 < objs[0].2);
+    }
+
+    #[test]
+    fn online_svd_run_matches_exact_run_approximately() {
+        let p = problem(135, 3, 30, 6);
+        let cfg = AmtlConfig { iters_per_node: 30, ..Default::default() };
+        let r_exact = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+        let cfg_online = AmtlConfig { online_svd: true, ..cfg };
+        let r_online =
+            run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg_online).unwrap();
+        let f_exact = p.objective(&r_exact.w_final);
+        let f_online = p.objective(&r_online.w_final);
+        assert!(
+            (f_exact - f_online).abs() / f_exact.max(1e-9) < 0.2,
+            "exact {f_exact} vs online {f_online}"
+        );
+    }
+}

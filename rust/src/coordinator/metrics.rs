@@ -1,0 +1,224 @@
+//! Run metrics: objective trajectories, update accounting, timing.
+//!
+//! Objective evaluation requires a full data pass, so it is **never** done
+//! on the update path: the trajectory recorder stores (time, iteration,
+//! V-snapshot) triples during the run, and objectives are computed
+//! afterwards by [`RunResult::compute_objectives`].
+
+use crate::linalg::Mat;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A recorded point on the optimization trajectory.
+#[derive(Clone, Debug)]
+pub struct TrajectoryPoint {
+    /// Wall-clock since run start.
+    pub elapsed: Duration,
+    /// Global update count when the snapshot was taken.
+    pub version: u64,
+    /// Snapshot of the auxiliary variable `V` (prox not yet applied).
+    pub v: Mat,
+}
+
+/// Thread-safe trajectory recorder sampled every `every` updates.
+pub struct Recorder {
+    start: Instant,
+    every: u64,
+    points: Mutex<Vec<TrajectoryPoint>>,
+    last_version: Mutex<u64>,
+}
+
+impl Recorder {
+    pub fn new(every: u64) -> Recorder {
+        Recorder {
+            start: Instant::now(),
+            every: every.max(1),
+            points: Mutex::new(Vec::new()),
+            last_version: Mutex::new(0),
+        }
+    }
+
+    /// Record if `version` crossed the sampling stride since the last
+    /// recorded point. `snapshot` is only invoked when recording happens.
+    pub fn maybe_record(&self, version: u64, snapshot: impl FnOnce() -> Mat) {
+        let mut last = self.last_version.lock().unwrap();
+        if version < *last + self.every {
+            return;
+        }
+        *last = version;
+        drop(last);
+        let p = TrajectoryPoint {
+            elapsed: self.start.elapsed(),
+            version,
+            v: snapshot(),
+        };
+        self.points.lock().unwrap().push(p);
+    }
+
+    /// Unconditionally record (used at run start/end).
+    pub fn record_now(&self, version: u64, v: Mat) {
+        self.points.lock().unwrap().push(TrajectoryPoint {
+            elapsed: self.start.elapsed(),
+            version,
+            v,
+        });
+    }
+
+    pub fn into_points(self) -> Vec<TrajectoryPoint> {
+        self.points.into_inner().unwrap()
+    }
+
+    pub fn start_instant(&self) -> Instant {
+        self.start
+    }
+}
+
+/// Outcome of one AMTL/SMTL run.
+#[derive(Debug)]
+pub struct RunResult {
+    /// "amtl" or "smtl".
+    pub method: String,
+    /// Total wall-clock of the optimization loop.
+    pub wall_time: Duration,
+    /// Final auxiliary variable `V`.
+    pub v_final: Mat,
+    /// Final primal iterate `W = Prox(V)`.
+    pub w_final: Mat,
+    /// Total KM updates applied.
+    pub updates: u64,
+    /// Per-node update counts.
+    pub updates_per_node: Vec<u64>,
+    /// Number of proximal mappings actually computed by the server.
+    pub prox_count: u64,
+    /// Recorded trajectory (V snapshots).
+    pub trajectory: Vec<TrajectoryPoint>,
+    /// Mean observed per-activation injected delay, in seconds.
+    pub mean_delay_secs: f64,
+    /// Updates lost to injected faults.
+    pub dropped_updates: u64,
+    /// Nodes that crashed before finishing their budget.
+    pub crashed_nodes: Vec<usize>,
+    /// Total wall-clock spent in forward (gradient) compute across nodes.
+    pub compute_secs: f64,
+    /// Total wall-clock nodes spent waiting on the server's backward step.
+    pub backward_wait_secs: f64,
+}
+
+impl RunResult {
+    /// Evaluate the MTL objective `F(W) = Σ ℓ_t(w_t) + λg(W)` along the
+    /// trajectory, applying the backward map `W = Prox(V)` to each snapshot
+    /// first (objectives are reported at the primal iterate, like the
+    /// paper's Fig. 4 / Tables IV–VI).
+    pub fn compute_objectives(
+        &self,
+        objective: impl Fn(&Mat) -> f64,
+        prox: impl Fn(&Mat) -> Mat,
+    ) -> Vec<(f64, u64, f64)> {
+        self.trajectory
+            .iter()
+            .map(|p| {
+                let w = prox(&p.v);
+                (p.elapsed.as_secs_f64(), p.version, objective(&w))
+            })
+            .collect()
+    }
+
+    /// Paper-style one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: wall={:.2}s updates={} prox={} mean_delay={:.3}s",
+            self.method,
+            self.wall_time.as_secs_f64(),
+            self.updates,
+            self.prox_count,
+            self.mean_delay_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_samples_at_stride() {
+        let r = Recorder::new(10);
+        let mut snaps = 0;
+        for v in 1..=100u64 {
+            r.maybe_record(v, || {
+                snaps += 1;
+                Mat::zeros(1, 1)
+            });
+        }
+        assert_eq!(snaps, 10, "one snapshot per 10 versions");
+        let pts = r.into_points();
+        assert_eq!(pts.len(), 10);
+        assert!(pts.windows(2).all(|w| w[0].version < w[1].version));
+    }
+
+    #[test]
+    fn recorder_every_one_records_all() {
+        let r = Recorder::new(1);
+        for v in 1..=5u64 {
+            r.maybe_record(v, || Mat::zeros(1, 1));
+        }
+        assert_eq!(r.into_points().len(), 5);
+    }
+
+    #[test]
+    fn compute_objectives_applies_prox_first() {
+        let mut v = Mat::zeros(1, 1);
+        v.set(0, 0, 3.0);
+        let result = RunResult {
+            method: "amtl".into(),
+            wall_time: Duration::from_secs(1),
+            v_final: v.clone(),
+            w_final: v.clone(),
+            updates: 1,
+            updates_per_node: vec![1],
+            prox_count: 1,
+            trajectory: vec![TrajectoryPoint {
+                elapsed: Duration::from_millis(500),
+                version: 1,
+                v,
+            }],
+            mean_delay_secs: 0.0,
+            dropped_updates: 0,
+            crashed_nodes: vec![],
+            compute_secs: 0.0,
+            backward_wait_secs: 0.0,
+        };
+        let objs = result.compute_objectives(
+            |w| w.get(0, 0),           // objective = the entry itself
+            |v| {
+                let mut w = v.clone(); // prox = halve it
+                w.set(0, 0, v.get(0, 0) / 2.0);
+                w
+            },
+        );
+        assert_eq!(objs.len(), 1);
+        assert_eq!(objs[0].2, 1.5);
+        assert_eq!(objs[0].1, 1);
+    }
+
+    #[test]
+    fn summary_contains_method_and_counts() {
+        let result = RunResult {
+            method: "smtl".into(),
+            wall_time: Duration::from_secs(2),
+            v_final: Mat::zeros(1, 1),
+            w_final: Mat::zeros(1, 1),
+            updates: 42,
+            updates_per_node: vec![21, 21],
+            prox_count: 7,
+            trajectory: vec![],
+            mean_delay_secs: 0.1,
+            dropped_updates: 0,
+            crashed_nodes: vec![],
+            compute_secs: 0.0,
+            backward_wait_secs: 0.0,
+        };
+        let s = result.summary();
+        assert!(s.contains("smtl") && s.contains("42") && s.contains("7"));
+    }
+}

@@ -1,0 +1,33 @@
+//! Layer-3 coordinator: the paper's contribution.
+//!
+//! * [`state`] — the central server's shared model matrix `V ∈ R^{d×T}`
+//!   with per-task-block locking and *inconsistent* full-matrix snapshots
+//!   (the lock-free-read semantics of §III.C / Fig. 2, which the ARock
+//!   convergence analysis explicitly tolerates).
+//! * [`server`] — the backward step: proximal mapping of the coupling
+//!   regularizer over a snapshot of `V`, with a version-keyed cache
+//!   (the paper notes the prox "can be applied after several gradient
+//!   updates"; the cache collapses redundant proxes of an unchanged `V`).
+//! * [`worker`] — a task node: simulated network delay → fetch its prox
+//!   block → forward (gradient) step through [`crate::runtime::TaskCompute`]
+//!   → KM relaxation update of its own block (Eq. III.4 / III.5).
+//! * [`amtl`] — the asynchronous driver (Algorithm 1): workers never wait
+//!   for each other.
+//! * [`smtl`] — the synchronized baseline (§III.B): barrier per iteration.
+//! * [`step_size`] — Theorem 1 step bound and the dynamic multiplier
+//!   `c_{t,k} = log(max(ν̄_{t,k}, 10))` of Eq. III.6.
+//! * [`metrics`] — objective trajectories, update counts, timing.
+
+pub mod amtl;
+pub mod metrics;
+pub mod problem;
+pub mod server;
+pub mod smtl;
+pub mod state;
+pub mod step_size;
+pub mod worker;
+
+pub use amtl::{run_amtl, AmtlConfig};
+pub use metrics::RunResult;
+pub use problem::MtlProblem;
+pub use smtl::{run_smtl, SmtlConfig};

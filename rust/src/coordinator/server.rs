@@ -1,0 +1,241 @@
+//! The central server: owns the regularizer and performs the backward
+//! (proximal) step over snapshots of the shared state.
+//!
+//! Per Algorithm 1, an activated task node "requests the server for the
+//! forward step computation `Prox_{ηλg}(v̂)` and retrieves
+//! `(Prox_{ηλg}(v̂))_t`". The server therefore:
+//!
+//! 1. takes an (inconsistent) snapshot of `V`,
+//! 2. applies `Prox_{ηλg}` — SVT via the native Jacobi SVD for the nuclear
+//!    norm, row shrinkage for ℓ2,1, … (see [`crate::optim::prox`]),
+//! 3. hands the requesting node its column.
+//!
+//! A version-keyed cache collapses repeated proxes of an unchanged `V`
+//! (the paper: "the proximal mapping can be also applied after several
+//! gradient updates depending on the speed of gradient update"). The
+//! `prox_every` knob generalizes this: with `prox_every = k`, a cached
+//! prox is reused until `k` new block updates have landed.
+
+use super::state::SharedState;
+use crate::linalg::Mat;
+use crate::optim::prox::Regularizer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub struct CentralServer {
+    state: Arc<SharedState>,
+    reg: Mutex<Regularizer>,
+    /// Prox step size `η` (the same η as the forward step, Eq. III.4).
+    eta: f64,
+    /// Reuse the cached prox until this many new updates have landed.
+    prox_every: u64,
+    cache: Mutex<Option<(u64, Arc<Mat>)>>,
+    prox_count: AtomicU64,
+    /// When set (ℓ2,1 only), the backward step runs through the
+    /// `prox_l21` Pallas artifact instead of the native mirror — the whole
+    /// data path is then AOT-compiled kernels (see `runtime::prox_compute`).
+    pjrt_prox: Option<crate::runtime::PjrtL21Prox>,
+}
+
+impl CentralServer {
+    pub fn new(state: Arc<SharedState>, reg: Regularizer, eta: f64) -> CentralServer {
+        CentralServer {
+            state,
+            reg: Mutex::new(reg),
+            eta,
+            prox_every: 1,
+            cache: Mutex::new(None),
+            prox_count: AtomicU64::new(0),
+            pjrt_prox: None,
+        }
+    }
+
+    /// Set the prox reuse window (default 1 = re-prox after every update).
+    pub fn with_prox_every(mut self, k: u64) -> CentralServer {
+        self.prox_every = k.max(1);
+        self
+    }
+
+    /// Route the ℓ2,1 backward step through the `prox_l21` PJRT artifact.
+    /// Errors if the regularizer is not ℓ2,1 or no bucket covers `(d, T)`.
+    pub fn with_pjrt_l21_prox(
+        mut self,
+        pool: &crate::runtime::ComputePool,
+    ) -> anyhow::Result<CentralServer> {
+        anyhow::ensure!(
+            self.reg.lock().unwrap().kind == crate::optim::prox::RegularizerKind::L21,
+            "PJRT prox is only available for the l21 regularizer"
+        );
+        let prox = crate::runtime::PjrtL21Prox::new(pool, self.state.d(), self.state.t())?;
+        self.pjrt_prox = Some(prox);
+        Ok(self)
+    }
+
+    pub fn state(&self) -> &Arc<SharedState> {
+        &self.state
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    /// Number of proximal mappings actually computed (not cache hits).
+    pub fn prox_count(&self) -> u64 {
+        self.prox_count.load(Ordering::Relaxed)
+    }
+
+    /// The full backward step `Prox_{ηλg}(V̂)` over a fresh-enough snapshot.
+    pub fn prox_matrix(&self) -> Arc<Mat> {
+        let version = self.state.version();
+        let mut cache = self.cache.lock().unwrap();
+        if let Some((v, m)) = cache.as_ref() {
+            if version < v + self.prox_every {
+                return Arc::clone(m);
+            }
+        }
+        // Compute a fresh prox. The cache lock is held during the prox:
+        // the central node applies proximal mappings one at a time (as in
+        // the paper — there is one server).
+        let mut snap = self.state.snapshot();
+        if let Some(pjrt) = &self.pjrt_prox {
+            let tau = self.eta * self.reg.lock().unwrap().lambda;
+            // Artifact failures fall back to the native mirror (identical
+            // math) rather than poisoning the run.
+            if pjrt.apply(&mut snap, tau).is_err() {
+                self.reg.lock().unwrap().prox(&mut snap, self.eta);
+            }
+        } else {
+            self.reg.lock().unwrap().prox(&mut snap, self.eta);
+        }
+        self.prox_count.fetch_add(1, Ordering::Relaxed);
+        let m = Arc::new(snap);
+        *cache = Some((version, Arc::clone(&m)));
+        m
+    }
+
+    /// `(Prox_{ηλg}(V̂))_t` — what an activated task node retrieves.
+    pub fn prox_col(&self, t: usize) -> Vec<f64> {
+        self.prox_matrix().col(t).to_vec()
+    }
+
+    /// Tell the regularizer a column changed (drives the online-SVD path).
+    pub fn notify_column_update(&self, t: usize, col: &[f64]) {
+        let mut reg = self.reg.lock().unwrap();
+        if reg.uses_online_svd() {
+            reg.notify_column_update(t, col);
+        }
+    }
+
+    /// `λ·g(W)` for objective reporting.
+    pub fn reg_value(&self, w: &Mat) -> f64 {
+        self.reg.lock().unwrap().value(w)
+    }
+
+    /// The final primal iterate `W* = Prox_{ηλg}(V*)` (one extra backward
+    /// step maps the auxiliary variable back — §III.C).
+    pub fn final_w(&self) -> Mat {
+        let mut snap = self.state.snapshot();
+        self.reg.lock().unwrap().prox(&mut snap, self.eta);
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::prox::RegularizerKind;
+    use crate::util::Rng;
+
+    fn server_with(kind: RegularizerKind, lambda: f64, eta: f64, d: usize, t: usize) -> CentralServer {
+        let state = Arc::new(SharedState::zeros(d, t));
+        CentralServer::new(state, Regularizer::new(kind, lambda), eta)
+    }
+
+    #[test]
+    fn prox_col_matches_manual_prox() {
+        let mut rng = Rng::new(100);
+        let m = Mat::randn(6, 3, &mut rng);
+        let state = Arc::new(SharedState::new(&m));
+        let srv = CentralServer::new(state, Regularizer::new(RegularizerKind::L21, 0.5), 0.2);
+        let mut want = m.clone();
+        Regularizer::new(RegularizerKind::L21, 0.5).prox(&mut want, 0.2);
+        for t in 0..3 {
+            assert_eq!(srv.prox_col(t), want.col(t));
+        }
+    }
+
+    #[test]
+    fn cache_hits_until_update() {
+        let srv = server_with(RegularizerKind::L21, 0.1, 0.1, 4, 2);
+        let _ = srv.prox_matrix();
+        let _ = srv.prox_matrix();
+        let _ = srv.prox_col(0);
+        assert_eq!(srv.prox_count(), 1, "unchanged V must not re-prox");
+        srv.state().km_update(0, &[1.0, 0.0, 0.0, 0.0], 1.0);
+        let _ = srv.prox_matrix();
+        assert_eq!(srv.prox_count(), 2);
+    }
+
+    #[test]
+    fn prox_every_widens_reuse() {
+        let srv = server_with(RegularizerKind::L21, 0.1, 0.1, 2, 2).with_prox_every(3);
+        let _ = srv.prox_matrix();
+        srv.state().km_update(0, &[1.0, 0.0], 1.0);
+        srv.state().km_update(1, &[1.0, 0.0], 1.0);
+        let _ = srv.prox_matrix(); // only 2 updates landed: cache hit
+        assert_eq!(srv.prox_count(), 1);
+        srv.state().km_update(0, &[2.0, 0.0], 1.0);
+        let _ = srv.prox_matrix(); // 3 updates: recompute
+        assert_eq!(srv.prox_count(), 2);
+    }
+
+    #[test]
+    fn nuclear_server_thresholds_spectrum() {
+        let mut rng = Rng::new(101);
+        let m = Mat::randn(8, 4, &mut rng);
+        let state = Arc::new(SharedState::new(&m));
+        let lambda = 0.7;
+        let eta = 0.3;
+        let srv = CentralServer::new(state, Regularizer::new(RegularizerKind::Nuclear, lambda), eta);
+        let got = srv.prox_matrix();
+        let before = crate::optim::svd::Svd::jacobi(&m);
+        let after = crate::optim::svd::Svd::jacobi(&got);
+        for (a, b) in after.sigma.iter().zip(&before.sigma) {
+            assert!((a - (b - eta * lambda).max(0.0)).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn final_w_is_prox_of_current_v() {
+        let mut rng = Rng::new(102);
+        let m = Mat::randn(5, 3, &mut rng);
+        let state = Arc::new(SharedState::new(&m));
+        let srv = CentralServer::new(state, Regularizer::new(RegularizerKind::L1, 0.4), 0.5);
+        let mut want = m.clone();
+        Regularizer::new(RegularizerKind::L1, 0.4).prox(&mut want, 0.5);
+        assert!(srv.final_w().max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_prox_requests_are_safe() {
+        let srv = Arc::new(server_with(RegularizerKind::Nuclear, 0.2, 0.1, 10, 6));
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let srv = Arc::clone(&srv);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(200 + t as u64);
+                for _ in 0..50 {
+                    let col = srv.prox_col(t);
+                    assert_eq!(col.len(), 10);
+                    let u = rng.normal_vec(10);
+                    srv.state().km_update(t, &u, 0.5);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.state().version(), 300);
+        assert!(srv.prox_count() <= 301, "prox per update at most");
+    }
+}

@@ -1,0 +1,133 @@
+//! Step-size schedules for the KM relaxation (η_k) and the dynamic
+//! delay-compensating multiplier of §III.D.
+
+use crate::net::NodeDelays;
+use std::sync::Mutex;
+
+/// The η_k schedule of Theorem 1: a constant inside
+/// `[η_min, c/(2τ/√T + 1)]`, where `τ` is the (expected) maximum delay in
+/// update counts and `T` the number of tasks.
+#[derive(Clone, Copy, Debug)]
+pub struct KmSchedule {
+    pub eta_k: f64,
+}
+
+impl KmSchedule {
+    /// Pick η_k at the Theorem-1 upper bound with safety factor `c`.
+    pub fn from_bound(c: f64, tau_updates: f64, t: usize, eta_min: f64) -> KmSchedule {
+        let hi = crate::optim::lipschitz::km_step_bound(c, tau_updates, t);
+        KmSchedule { eta_k: hi.max(eta_min) }
+    }
+
+    pub fn fixed(eta_k: f64) -> KmSchedule {
+        KmSchedule { eta_k }
+    }
+}
+
+/// Dynamic step-size controller (Eq. III.5/III.6):
+/// `c_{t,k} = log(max(ν̄_{t,k}, 10))` where `ν̄_{t,k}` is the mean of the
+/// last `window` delays of task node `t` (the paper uses the last 5),
+/// measured in the paper's delay unit.
+///
+/// With no dynamic scaling the multiplier is 1.
+pub struct StepController {
+    schedule: KmSchedule,
+    dynamic: bool,
+    window: usize,
+    delays: Mutex<NodeDelays>,
+}
+
+impl StepController {
+    pub fn new(schedule: KmSchedule, dynamic: bool, t_count: usize, window: usize) -> StepController {
+        StepController {
+            schedule,
+            dynamic,
+            window,
+            delays: Mutex::new(NodeDelays::new(t_count, window)),
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        self.dynamic
+    }
+
+    /// Record an observed communication delay for node `t` (paper units).
+    pub fn record_delay(&self, t: usize, delay_units: f64) {
+        self.delays.lock().unwrap().record(t, delay_units);
+    }
+
+    /// The Eq. III.6 multiplier for node `t` (1.0 when dynamic is off).
+    pub fn multiplier(&self, t: usize) -> f64 {
+        if !self.dynamic {
+            return 1.0;
+        }
+        let nu_bar = self.delays.lock().unwrap().recent_mean(t);
+        nu_bar.max(10.0).ln()
+    }
+
+    /// The effective step `c_{t,k} · η_k` used in the KM update.
+    pub fn step(&self, t: usize) -> f64 {
+        self.multiplier(t) * self.schedule.eta_k
+    }
+
+    pub fn eta_k(&self) -> f64 {
+        self.schedule.eta_k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_controller_multiplier_is_one() {
+        let c = StepController::new(KmSchedule::fixed(0.5), false, 3, 5);
+        c.record_delay(0, 100.0);
+        assert_eq!(c.multiplier(0), 1.0);
+        assert_eq!(c.step(0), 0.5);
+    }
+
+    #[test]
+    fn dynamic_multiplier_is_log_of_clamped_mean() {
+        let c = StepController::new(KmSchedule::fixed(0.1), true, 2, 5);
+        // No history → mean 0 → max(0,10)=10 → ln(10).
+        assert!((c.multiplier(0) - 10f64.ln()).abs() < 1e-12);
+        // Mean 20 → ln 20.
+        for _ in 0..5 {
+            c.record_delay(0, 20.0);
+        }
+        assert!((c.multiplier(0) - 20f64.ln()).abs() < 1e-12);
+        // Node 1 unaffected.
+        assert!((c.multiplier(1) - 10f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_window_uses_recent_only() {
+        let c = StepController::new(KmSchedule::fixed(1.0), true, 1, 2);
+        c.record_delay(0, 1000.0);
+        c.record_delay(0, 30.0);
+        c.record_delay(0, 30.0); // window 2 → mean 30
+        assert!((c.multiplier(0) - 30f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn longer_delays_give_larger_steps() {
+        // The paper's motivation: nodes that waited longer take bigger steps.
+        let c = StepController::new(KmSchedule::fixed(0.2), true, 2, 5);
+        c.record_delay(0, 5.0); // clamps to 10
+        c.record_delay(1, 30.0);
+        assert!(c.step(1) > c.step(0));
+    }
+
+    #[test]
+    fn from_bound_respects_eta_min() {
+        let s = KmSchedule::from_bound(0.9, 1e9, 4, 1e-3);
+        assert!((s.eta_k - 1e-3).abs() < 1e-15, "floor at eta_min");
+        let s2 = KmSchedule::from_bound(0.9, 0.0, 4, 1e-3);
+        assert!((s2.eta_k - 0.9).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,221 @@
+//! A task node: the worker side of Algorithm 1.
+//!
+//! Each worker owns one task's [`TaskCompute`] (its private data never
+//! leaves the node — only model vectors cross the channel, matching the
+//! paper's privacy argument) and repeatedly:
+//!
+//! 1. waits out its simulated network delay,
+//! 2. retrieves its block of the server's backward step `(Prox(V̂))_t`,
+//! 3. computes the forward step `u = ŵ − η ∇ℓ_t(ŵ)` (PJRT artifact or
+//!    native mirror),
+//! 4. applies the KM relaxation `v_t ← v_t + c_{t,k} η_k (u − v_t)`.
+
+use super::server::CentralServer;
+use super::step_size::StepController;
+use crate::coordinator::metrics::Recorder;
+use crate::net::{DelayModel, FaultModel, FaultOutcome};
+use crate::runtime::TaskCompute;
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Everything one AMTL worker thread needs.
+pub struct WorkerCtx {
+    pub t: usize,
+    pub iters: usize,
+    pub server: Arc<CentralServer>,
+    pub controller: Arc<StepController>,
+    pub delay: DelayModel,
+    /// Fault injection (robustness experiments; default none).
+    pub faults: FaultModel,
+    /// When set, forward steps use importance-corrected Bernoulli
+    /// minibatches of this fraction (the paper's future-work SGD variant).
+    pub sgd_fraction: Option<f64>,
+    /// Wall-clock duration of one paper delay-unit (see DESIGN.md
+    /// §Substitutions: the paper's "seconds" are scaled).
+    pub time_scale: Duration,
+    pub recorder: Arc<Recorder>,
+    pub rng: Rng,
+}
+
+/// Per-worker outcome.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub updates: u64,
+    /// Activations whose update was lost in transit (fault injection).
+    pub dropped: u64,
+    /// True if this node crashed before exhausting its budget.
+    pub crashed: bool,
+    /// Sum of injected delays (wall-clock seconds).
+    pub total_delay_secs: f64,
+    /// Wall-clock spent in the forward step (gradient compute).
+    pub compute_secs: f64,
+    /// Wall-clock spent waiting on the server's backward step.
+    pub backward_wait_secs: f64,
+    /// Objective values of `ℓ_t` observed at each forward step (free —
+    /// the fused kernels return them).
+    pub last_task_loss: f64,
+}
+
+/// The asynchronous worker loop. Runs `iters` activations, never waiting
+/// for any other node.
+pub fn run_worker(mut ctx: WorkerCtx, compute: &mut dyn TaskCompute) -> Result<WorkerStats> {
+    let mut stats = WorkerStats::default();
+    for k in 0..ctx.iters {
+        // 0. Fault check for this activation.
+        let outcome = ctx.faults.outcome(ctx.t, k as u64, &mut ctx.rng);
+        if outcome == FaultOutcome::Crashed {
+            stats.crashed = true;
+            break;
+        }
+
+        // 1. Simulated network delay for this activation.
+        let sample = ctx.delay.sample(ctx.t, &mut ctx.rng);
+        if sample.duration > Duration::ZERO {
+            std::thread::sleep(sample.duration);
+        }
+        stats.total_delay_secs += sample.duration.as_secs_f64();
+        // Record in paper units for the dynamic step controller (Eq. III.6).
+        let units = sample.duration.as_secs_f64() / ctx.time_scale.as_secs_f64().max(1e-12);
+        ctx.controller.record_delay(ctx.t, units);
+
+        // 2. Backward step block (inconsistent read of V is inside).
+        let t0 = Instant::now();
+        let w_hat = ctx.server.prox_col(ctx.t);
+        stats.backward_wait_secs += t0.elapsed().as_secs_f64();
+
+        // 3. Forward step on the task's private data.
+        let t1 = Instant::now();
+        let (u, task_loss) = match ctx.sgd_fraction {
+            Some(frac) => {
+                compute.step_minibatch(&w_hat, ctx.server.eta(), frac, &mut ctx.rng)?
+            }
+            None => compute.step(&w_hat, ctx.server.eta())?,
+        };
+        stats.compute_secs += t1.elapsed().as_secs_f64();
+        stats.last_task_loss = task_loss;
+
+        // 3b. Lost in transit? The compute happened but the server never
+        // sees it (the paper's failure mode; the next activation retries).
+        if outcome == FaultOutcome::Dropped {
+            stats.dropped += 1;
+            continue;
+        }
+
+        // 4. KM relaxation on this task block.
+        let step = ctx.controller.step(ctx.t);
+        let version = ctx.server.state().km_update(ctx.t, &u, step);
+        // Keep the (optional) online-SVD factorization in sync.
+        let new_col = ctx.server.state().read_col(ctx.t);
+        ctx.server.notify_column_update(ctx.t, &new_col);
+
+        stats.updates += 1;
+        ctx.recorder
+            .maybe_record(version, || ctx.server.state().snapshot());
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::SharedState;
+    use crate::coordinator::step_size::KmSchedule;
+    use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
+    use crate::runtime::NativeTaskCompute;
+
+    fn setup(seed: u64) -> (Arc<CentralServer>, NativeTaskCompute, crate::coordinator::problem::MtlProblem) {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic::lowrank_regression(&[30; 3], 6, 2, 0.05, &mut rng);
+        let problem = crate::coordinator::problem::MtlProblem::new(
+            ds,
+            RegularizerKind::Nuclear,
+            0.1,
+            0.5,
+            &mut rng,
+        );
+        let state = Arc::new(SharedState::zeros(problem.d(), problem.t()));
+        let server = Arc::new(CentralServer::new(
+            state,
+            problem.regularizer(),
+            problem.eta,
+        ));
+        let compute = NativeTaskCompute::new(&problem.dataset.tasks[0]);
+        (server, compute, problem)
+    }
+
+    #[test]
+    fn worker_applies_expected_update_count() {
+        let (server, mut compute, _p) = setup(120);
+        let ctx = WorkerCtx {
+            t: 0,
+            iters: 7,
+            server: Arc::clone(&server),
+            controller: Arc::new(StepController::new(KmSchedule::fixed(0.5), false, 3, 5)),
+            delay: DelayModel::None,
+            faults: FaultModel::None,
+            sgd_fraction: None,
+            time_scale: Duration::from_millis(100),
+            recorder: Arc::new(Recorder::new(1)),
+            rng: Rng::new(121),
+        };
+        let stats = run_worker(ctx, &mut compute).unwrap();
+        assert_eq!(stats.updates, 7);
+        assert_eq!(server.state().col_version(0), 7);
+        assert_eq!(server.state().col_version(1), 0, "other blocks untouched");
+    }
+
+    #[test]
+    fn worker_progress_decreases_task_loss() {
+        let (server, mut compute, _p) = setup(122);
+        let w0 = server.prox_col(0);
+        let loss_before = compute.obj(&w0).unwrap();
+        let ctx = WorkerCtx {
+            t: 0,
+            iters: 100,
+            server: Arc::clone(&server),
+            controller: Arc::new(StepController::new(KmSchedule::fixed(0.9), false, 3, 5)),
+            delay: DelayModel::None,
+            faults: FaultModel::None,
+            sgd_fraction: None,
+            time_scale: Duration::from_millis(100),
+            recorder: Arc::new(Recorder::new(1000)),
+            rng: Rng::new(123),
+        };
+        run_worker(ctx, &mut compute).unwrap();
+        let w1 = server.prox_col(0);
+        let loss_after = compute.obj(&w1).unwrap();
+        assert!(
+            loss_after < loss_before * 0.5,
+            "loss {loss_before} -> {loss_after}"
+        );
+    }
+
+    #[test]
+    fn worker_records_delays_in_paper_units() {
+        let (server, mut compute, _p) = setup(124);
+        let controller = Arc::new(StepController::new(KmSchedule::fixed(0.5), true, 3, 5));
+        let ctx = WorkerCtx {
+            t: 0,
+            iters: 3,
+            server,
+            controller: Arc::clone(&controller),
+            // 20 ms delay at a 10 ms time-scale = 2.0 paper units (< 10 → clamped).
+            delay: DelayModel::OffsetJitter {
+                offset: Duration::from_millis(20),
+                jitter: Duration::ZERO,
+            },
+            faults: FaultModel::None,
+            sgd_fraction: None,
+            time_scale: Duration::from_millis(10),
+            recorder: Arc::new(Recorder::new(1000)),
+            rng: Rng::new(125),
+        };
+        let stats = run_worker(ctx, &mut compute).unwrap();
+        assert!((stats.total_delay_secs - 0.06).abs() < 0.02);
+        // ν̄ = 2.0 → multiplier ln(max(2,10)) = ln 10.
+        assert!((controller.multiplier(0) - 10f64.ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,74 @@
+//! Dataset substrate.
+//!
+//! * [`synthetic`] — the paper's randomly-generated regression datasets
+//!   (§IV.B.1) plus planted shared-low-rank families for convergence and
+//!   effectiveness studies.
+//! * [`public`] — *simulated equivalents* of the three public datasets in
+//!   Table II (School, MNIST-binary-pairs, MTFL). The real files are not
+//!   downloadable in this offline environment; the simulators match the
+//!   task counts, per-task sample-size ranges, dimensionalities and loss
+//!   types exactly, and plant a shared low-rank structure so the MTL
+//!   coupling is exercised — see DESIGN.md §Substitutions.
+
+pub mod public;
+pub mod synthetic;
+
+use crate::optim::losses::{Loss, RowMat};
+
+/// One task's dataset: features, labels, and loss type.
+#[derive(Clone, Debug)]
+pub struct TaskDataset {
+    pub name: String,
+    pub x: RowMat,
+    pub y: Vec<f64>,
+    pub loss: Loss,
+}
+
+impl TaskDataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+}
+
+/// A multi-task problem: T tasks over a common feature dimension.
+#[derive(Clone, Debug)]
+pub struct MultiTaskDataset {
+    pub name: String,
+    pub tasks: Vec<TaskDataset>,
+    /// Planted model matrix, when the generator knows it (synthetic data).
+    pub w_true: Option<crate::linalg::Mat>,
+}
+
+impl MultiTaskDataset {
+    pub fn t(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.tasks.first().map(|t| t.d()).unwrap_or(0)
+    }
+
+    /// Total number of samples across tasks.
+    pub fn total_samples(&self) -> usize {
+        self.tasks.iter().map(|t| t.n()).sum()
+    }
+
+    /// Table II-style description line.
+    pub fn describe(&self) -> String {
+        let ns: Vec<usize> = self.tasks.iter().map(|t| t.n()).collect();
+        let lo = ns.iter().min().copied().unwrap_or(0);
+        let hi = ns.iter().max().copied().unwrap_or(0);
+        format!(
+            "{}: {} tasks, sample sizes {}-{}, dimensionality {}",
+            self.name,
+            self.t(),
+            lo,
+            hi,
+            self.d()
+        )
+    }
+}

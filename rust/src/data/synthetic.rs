@@ -1,0 +1,196 @@
+//! Synthetic multi-task data generators.
+//!
+//! §IV.B.1 of the paper uses "randomly generated synthetic datasets" with a
+//! given number of tasks, per-task sample size, and dimensionality. Two
+//! generators are provided:
+//!
+//! * [`random_regression`] — i.i.d. Gaussian features and labels, exactly
+//!   the paper's timing workload (the objective content is irrelevant for
+//!   wall-clock comparisons of AMTL vs SMTL).
+//! * [`lowrank_regression`] — task models drawn from a planted shared
+//!   `rank`-dimensional subspace plus noise, `y = X w_t + ε`. This family
+//!   exercises the knowledge-transfer claim: the nuclear-norm coupling must
+//!   recover the subspace and beat single-task learning.
+
+use super::{MultiTaskDataset, TaskDataset};
+use crate::linalg::Mat;
+use crate::optim::losses::{Loss, RowMat};
+use crate::util::Rng;
+
+/// i.i.d. Gaussian features/labels, `t_count` regression tasks with `n`
+/// samples each, dimension `d` (the paper's timing workload).
+pub fn random_regression(t_count: usize, n: usize, d: usize, rng: &mut Rng) -> MultiTaskDataset {
+    let tasks = (0..t_count)
+        .map(|t| {
+            let mut x = RowMat::zeros(n, d);
+            for v in x.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let y = rng.normal_vec(n);
+            TaskDataset { name: format!("synthetic-{t}"), x, y, loss: Loss::Squared }
+        })
+        .collect();
+    MultiTaskDataset { name: format!("synthetic(T={t_count},n={n},d={d})"), tasks, w_true: None }
+}
+
+/// Planted shared-subspace regression.
+///
+/// `W* = B C` with `B ∈ R^{d×rank}` (shared basis) and per-task coefficients
+/// `C ∈ R^{rank×T}`; labels `y_t = X_t w*_t + noise·ε`. Per-task sample
+/// counts may vary (pass `ns` of length `t_count`).
+pub fn lowrank_regression(
+    ns: &[usize],
+    d: usize,
+    rank: usize,
+    noise: f64,
+    rng: &mut Rng,
+) -> MultiTaskDataset {
+    let t_count = ns.len();
+    let basis = Mat::randn(d, rank, rng);
+    let coef = Mat::randn(rank, t_count, rng);
+    let w_true = basis.matmul(&coef);
+    let tasks = ns
+        .iter()
+        .enumerate()
+        .map(|(t, &n)| {
+            let mut x = RowMat::zeros(n, d);
+            for v in x.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let wt = w_true.col(t);
+            let y: Vec<f64> = (0..n)
+                .map(|i| {
+                    let z: f64 = x.row(i).iter().zip(wt).map(|(a, b)| a * b).sum();
+                    z + noise * rng.normal()
+                })
+                .collect();
+            TaskDataset { name: format!("lowrank-{t}"), x, y, loss: Loss::Squared }
+        })
+        .collect();
+    MultiTaskDataset {
+        name: format!("lowrank(T={t_count},d={d},rank={rank})"),
+        tasks,
+        w_true: Some(w_true),
+    }
+}
+
+/// Planted shared-subspace binary classification (logistic tasks):
+/// `P(y=1|x) = σ(x·w*_t)`.
+pub fn lowrank_classification(
+    ns: &[usize],
+    d: usize,
+    rank: usize,
+    rng: &mut Rng,
+) -> MultiTaskDataset {
+    let t_count = ns.len();
+    let basis = Mat::randn(d, rank, rng);
+    let coef = Mat::randn(rank, t_count, rng);
+    let w_true = basis.matmul(&coef);
+    let tasks = ns
+        .iter()
+        .enumerate()
+        .map(|(t, &n)| {
+            let mut x = RowMat::zeros(n, d);
+            for v in x.data.iter_mut() {
+                *v = rng.normal();
+            }
+            let wt = w_true.col(t);
+            let y: Vec<f64> = (0..n)
+                .map(|i| {
+                    let z: f64 = x.row(i).iter().zip(wt).map(|(a, b)| a * b).sum();
+                    let p = crate::optim::losses::sigmoid(z);
+                    if rng.bool(p) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            TaskDataset { name: format!("lowrank-cls-{t}"), x, y, loss: Loss::Logistic }
+        })
+        .collect();
+    MultiTaskDataset {
+        name: format!("lowrank-cls(T={t_count},d={d},rank={rank})"),
+        tasks,
+        w_true: Some(w_true),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_regression_shapes() {
+        let mut rng = Rng::new(60);
+        let ds = random_regression(5, 100, 50, &mut rng);
+        assert_eq!(ds.t(), 5);
+        assert_eq!(ds.d(), 50);
+        assert_eq!(ds.total_samples(), 500);
+        for t in &ds.tasks {
+            assert_eq!(t.n(), 100);
+            assert_eq!(t.loss, Loss::Squared);
+        }
+    }
+
+    #[test]
+    fn lowrank_w_true_has_planted_rank() {
+        let mut rng = Rng::new(61);
+        let ds = lowrank_regression(&[50; 6], 20, 3, 0.0, &mut rng);
+        let w = ds.w_true.as_ref().unwrap();
+        let svd = crate::optim::svd::Svd::jacobi(w);
+        assert!(svd.sigma[2] > 1e-6);
+        assert!(svd.sigma[3] < 1e-10 * svd.sigma[0]);
+    }
+
+    #[test]
+    fn noiseless_lowrank_labels_are_consistent() {
+        let mut rng = Rng::new(62);
+        let ds = lowrank_regression(&[30, 40], 10, 2, 0.0, &mut rng);
+        let w = ds.w_true.as_ref().unwrap();
+        for (t, task) in ds.tasks.iter().enumerate() {
+            let obj = Loss::Squared.obj(&task.x, &task.y, w.col(t), &vec![1.0; task.n()]);
+            assert!(obj < 1e-18, "task {t} residual {obj}");
+        }
+    }
+
+    #[test]
+    fn variable_sample_sizes_respected() {
+        let mut rng = Rng::new(63);
+        let ns = [22, 251, 100];
+        let ds = lowrank_regression(&ns, 28, 4, 0.1, &mut rng);
+        for (task, &n) in ds.tasks.iter().zip(&ns) {
+            assert_eq!(task.n(), n);
+        }
+    }
+
+    #[test]
+    fn classification_labels_are_binary_and_correlated() {
+        let mut rng = Rng::new(64);
+        let ds = lowrank_classification(&[2000], 8, 2, &mut rng);
+        let task = &ds.tasks[0];
+        assert!(task.y.iter().all(|&v| v == 0.0 || v == 1.0));
+        // The planted (Bayes-optimal) model must beat chance clearly. The
+        // expected accuracy is E[σ(|z|)] which depends on ‖w*‖; a weak draw
+        // can push it toward ~0.6, so the bar is "clearly above chance".
+        let w = ds.w_true.as_ref().unwrap().col(0);
+        let correct = (0..task.n())
+            .filter(|&i| {
+                let z: f64 = task.x.row(i).iter().zip(w).map(|(a, b)| a * b).sum();
+                (z > 0.0) == (task.y[i] > 0.5)
+            })
+            .count();
+        let acc = correct as f64 / task.n() as f64;
+        assert!(acc > 0.6, "planted-model accuracy {acc}");
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_seed() {
+        let mut a = Rng::new(65);
+        let mut b = Rng::new(65);
+        let da = random_regression(2, 10, 4, &mut a);
+        let db = random_regression(2, 10, 4, &mut b);
+        assert_eq!(da.tasks[1].y, db.tasks[1].y);
+        assert_eq!(da.tasks[0].x.data, db.tasks[0].x.data);
+    }
+}

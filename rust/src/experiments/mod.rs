@@ -1,0 +1,231 @@
+//! Shared experiment harness used by the bench binaries (`rust/benches/`)
+//! and the examples: engine selection, paired AMTL/SMTL runs under one
+//! network setting, and paper-style table formatting.
+//!
+//! Delay units: the paper injects delays measured in seconds (offsets
+//! 5/10/30 s). Experiments here scale one "paper second" to
+//! [`ExpConfig::time_scale`] of wall-clock (default 10 ms in benches) so
+//! the full suite runs in minutes; ratios are preserved (DESIGN.md
+//! §Substitutions, sensitivity check in EXPERIMENTS.md).
+
+use crate::coordinator::step_size::KmSchedule;
+use crate::coordinator::{run_amtl, run_smtl, AmtlConfig, MtlProblem, RunResult, SmtlConfig};
+use crate::net::DelayModel;
+use crate::runtime::{ComputePool, Engine, PoolConfig};
+use anyhow::Result;
+use std::time::Duration;
+
+/// Experiment-wide knobs shared by AMTL and SMTL runs.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub iters: usize,
+    /// Delay offset in paper units (the `k` of AMTL-k / SMTL-k).
+    pub offset_units: f64,
+    /// Wall-clock per paper unit.
+    pub time_scale: Duration,
+    pub eta_k: f64,
+    pub dynamic_step: bool,
+    /// Server re-prox stride (see `CentralServer::with_prox_every`).
+    pub prox_every: u64,
+    pub record_every: u64,
+    pub online_svd: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            iters: 10,
+            offset_units: 0.0,
+            time_scale: Duration::from_millis(10),
+            eta_k: 0.5,
+            dynamic_step: false,
+            prox_every: 1,
+            record_every: u64::MAX / 2,
+            online_svd: false,
+            seed: 7,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// The paper's delay model: `offset + Exp(offset/2)` per activation.
+    pub fn delay_model(&self) -> DelayModel {
+        if self.offset_units <= 0.0 {
+            return DelayModel::None;
+        }
+        DelayModel::paper_offset(self.time_scale.mul_f64(self.offset_units))
+    }
+
+    pub fn amtl(&self) -> AmtlConfig {
+        AmtlConfig {
+            iters_per_node: self.iters,
+            delay: self.delay_model(),
+            faults: crate::net::FaultModel::None,
+            sgd_fraction: None,
+            time_scale: self.time_scale,
+            km: KmSchedule::fixed(self.eta_k),
+            dynamic_step: self.dynamic_step,
+            dyn_window: 5,
+            prox_every: self.prox_every,
+            record_every: self.record_every,
+            online_svd: self.online_svd,
+            seed: self.seed,
+        }
+    }
+
+    pub fn smtl(&self) -> SmtlConfig {
+        SmtlConfig {
+            iters: self.iters,
+            delay: self.delay_model(),
+            time_scale: self.time_scale,
+            km: KmSchedule::fixed(self.eta_k),
+            record_every: self.record_every,
+            seed: self.seed,
+        }
+    }
+}
+
+/// Pick the PJRT engine when artifacts are available, else fall back to the
+/// native mirror (printing which one was used).
+pub fn auto_engine(executors: usize) -> (Engine, Option<ComputePool>) {
+    // Silence the TfrtCpuClient created/destroyed info logs.
+    if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+        std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+    }
+    let dir = crate::runtime::manifest::default_dir();
+    match ComputePool::new(PoolConfig { executors, artifacts_dir: dir.clone() }) {
+        Ok(pool) => (Engine::Pjrt, Some(pool)),
+        Err(e) => {
+            eprintln!(
+                "note: PJRT artifacts unavailable ({e}); using native engine \
+                 (run `make artifacts` for the full three-layer path)"
+            );
+            (Engine::Native, None)
+        }
+    }
+}
+
+/// Warm the executable + upload caches for every task of `problem`:
+/// executes one zero-step per task so that timed runs never pay XLA
+/// compilation. No-op for the native engine.
+pub fn warm(problem: &MtlProblem, engine: Engine, pool: Option<&ComputePool>) -> Result<()> {
+    if engine != Engine::Pjrt {
+        return Ok(());
+    }
+    let mut computes = problem.build_computes(engine, pool)?;
+    let w = vec![0.0; problem.d()];
+    for c in computes.iter_mut() {
+        let _ = c.step(&w, 0.0)?;
+    }
+    Ok(())
+}
+
+/// Run AMTL under `cfg`, returning the result.
+pub fn run_amtl_once(
+    problem: &MtlProblem,
+    engine: Engine,
+    pool: Option<&ComputePool>,
+    cfg: &ExpConfig,
+) -> Result<RunResult> {
+    let computes = problem.build_computes(engine, pool)?;
+    run_amtl(problem, computes, &cfg.amtl())
+}
+
+/// Run SMTL under `cfg`, returning the result.
+pub fn run_smtl_once(
+    problem: &MtlProblem,
+    engine: Engine,
+    pool: Option<&ComputePool>,
+    cfg: &ExpConfig,
+) -> Result<RunResult> {
+    let computes = problem.build_computes(engine, pool)?;
+    run_smtl(problem, computes, &cfg.smtl())
+}
+
+/// Markdown-ish table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Paper-vs-measured banner for bench outputs.
+pub fn banner(title: &str, paper_note: &str) {
+    println!("\n=== {title} ===");
+    println!("paper: {paper_note}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
+    use crate::util::Rng;
+
+    #[test]
+    fn delay_model_none_at_zero_offset() {
+        let cfg = ExpConfig::default();
+        assert!(matches!(cfg.delay_model(), DelayModel::None));
+        let cfg2 = ExpConfig { offset_units: 5.0, ..ExpConfig::default() };
+        assert!(matches!(cfg2.delay_model(), DelayModel::OffsetExp { .. }));
+    }
+
+    #[test]
+    fn paired_runs_share_the_network_setting() {
+        let mut rng = Rng::new(150);
+        let ds = synthetic::lowrank_regression(&[20; 3], 5, 2, 0.1, &mut rng);
+        let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng);
+        let cfg = ExpConfig {
+            iters: 3,
+            offset_units: 1.0,
+            time_scale: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let a = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+        let s = run_smtl_once(&p, Engine::Native, None, &cfg).unwrap();
+        assert_eq!(a.updates, 9);
+        assert_eq!(s.updates, 9);
+        assert!(a.mean_delay_secs > 0.0 && s.mean_delay_secs > 0.0);
+    }
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["Network", "5 Tasks"]);
+        t.row(vec!["AMTL-5".into(), "156.21".into()]);
+        t.print(); // smoke: no panic
+    }
+}

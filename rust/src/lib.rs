@@ -1,0 +1,25 @@
+//! # AMTL — Asynchronous Multi-Task Learning
+//!
+//! Reproduction of *"Asynchronous Multi-Task Learning"* (Baytas, Yan, Jain,
+//! Zhou, 2016) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the asynchronous coordinator: central server
+//!   applying the proximal (backward) step, task-node workers applying
+//!   forward (gradient) steps with no barrier, per Algorithm 1 / ARock.
+//! * **Layer 2/1 (python, build-time only)** — the per-task compute as JAX
+//!   functions over Pallas kernels, AOT-lowered to HLO text artifacts that
+//!   the [`runtime`] module loads and executes via PJRT. Python is never on
+//!   the update path.
+//!
+//! Entry points: [`coordinator::amtl::run_amtl`], [`coordinator::smtl::run_smtl`],
+//! the `amtl` CLI (`rust/src/main.rs`), and the runnable `examples/`.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod data;
+pub mod linalg;
+pub mod net;
+pub mod optim;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,268 @@
+//! Column-major dense matrix.
+
+use crate::util::Rng;
+
+/// Dense `rows × cols` matrix, column-major (`data[c * rows + r]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_cols(rows: usize, cols: Vec<Vec<f64>>) -> Mat {
+        let c = cols.len();
+        let mut data = Vec::with_capacity(rows * c);
+        for col in &cols {
+            assert_eq!(col.len(), rows, "column length mismatch");
+            data.extend_from_slice(col);
+        }
+        Mat { rows, cols: c, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for c in 0..cols {
+            for r in 0..rows {
+                m.set(r, c, f(r, c));
+            }
+        }
+        m
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Mat { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[c * self.rows + r]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[c * self.rows + r] = v;
+    }
+
+    /// Contiguous view of column `c` — the per-task model `w_t`.
+    #[inline]
+    pub fn col(&self, c: usize) -> &[f64] {
+        &self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, c: usize) -> &mut [f64] {
+        &mut self.data[c * self.rows..(c + 1) * self.rows]
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f64]) {
+        self.col_mut(c).copy_from_slice(v);
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// `self * other` (naive triple loop, column-major friendly order).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for j in 0..other.cols {
+            let out_col = &mut out.data[j * self.rows..(j + 1) * self.rows];
+            for k in 0..self.cols {
+                let a_col = &self.data[k * self.rows..(k + 1) * self.rows];
+                let b = other.get(k, j);
+                if b != 0.0 {
+                    for (o, a) in out_col.iter_mut().zip(a_col) {
+                        *o += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self · v` (matrix–vector).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0.0; self.rows];
+        for (k, &vk) in v.iter().enumerate() {
+            if vk != 0.0 {
+                let col = self.col(k);
+                for (o, a) in out.iter_mut().zip(col) {
+                    *o += a * vk;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ · v`.
+    pub fn tmatvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len());
+        (0..self.cols).map(|c| crate::linalg::dot(self.col(c), v)).collect()
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Largest singular value via power iteration on `AᵀA`.
+    pub fn spectral_norm(&self, iters: usize, rng: &mut Rng) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        let mut v = rng.normal_vec(self.cols);
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let atav = self.tmatvec(&av);
+            let nrm = crate::linalg::nrm2(&atav);
+            if nrm == 0.0 {
+                return 0.0;
+            }
+            for (vi, ai) in v.iter_mut().zip(&atav) {
+                *vi = ai / nrm;
+            }
+            sigma = nrm.sqrt();
+        }
+        sigma
+    }
+
+    /// Elementwise `self + a * other` into a new matrix.
+    pub fn add_scaled(&self, a: f64, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(x, y)| x + a * y)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn col_major_layout() {
+        let m = Mat::from_fn(2, 3, |r, c| (10 * r + c) as f64);
+        assert_eq!(m.col(0), &[0.0, 10.0]);
+        assert_eq!(m.col(2), &[2.0, 12.0]);
+        assert_eq!(m.get(1, 2), 12.0);
+    }
+
+    #[test]
+    fn matmul_against_hand_computed() {
+        let a = Mat::from_cols(2, vec![vec![1.0, 3.0], vec![2.0, 4.0]]); // [[1,2],[3,4]]
+        let b = Mat::from_cols(2, vec![vec![5.0, 7.0], vec![6.0, 8.0]]); // [[5,6],[7,8]]
+        let c = a.matmul(&b);
+        assert_eq!(c.get(0, 0), 19.0);
+        assert_eq!(c.get(0, 1), 22.0);
+        assert_eq!(c.get(1, 0), 43.0);
+        assert_eq!(c.get(1, 1), 50.0);
+    }
+
+    #[test]
+    fn matvec_and_tmatvec_agree_with_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(4, 3, &mut rng);
+        let v = rng.normal_vec(3);
+        let got = a.matvec(&v);
+        let vm = Mat::from_cols(3, vec![v.clone()]);
+        let want = a.matmul(&vm);
+        for r in 0..4 {
+            assert!((got[r] - want.get(r, 0)).abs() < 1e-12);
+        }
+        let u = rng.normal_vec(4);
+        let got_t = a.tmatvec(&u);
+        let want_t = a.transpose().matvec(&u);
+        for c in 0..3 {
+            assert!((got_t[c] - want_t[c]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(5, 3, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn identity_is_matmul_neutral() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(4, 4, &mut rng);
+        let i = Mat::identity(4);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-15);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut m = Mat::zeros(3, 3);
+        m.set(0, 0, 1.0);
+        m.set(1, 1, -7.0);
+        m.set(2, 2, 3.0);
+        let mut rng = Rng::new(4);
+        let s = m.spectral_norm(200, &mut rng);
+        assert!((s - 7.0).abs() < 1e-6, "sigma={s}");
+    }
+
+    #[test]
+    fn frobenius_norm() {
+        let m = Mat::from_cols(2, vec![vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn add_scaled_matches_definition() {
+        let a = Mat::from_cols(2, vec![vec![1.0, 2.0]]);
+        let b = Mat::from_cols(2, vec![vec![10.0, 20.0]]);
+        let c = a.add_scaled(0.5, &b);
+        assert_eq!(c.col(0), &[6.0, 12.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear-algebra substrate.
+//!
+//! The model matrix `W ∈ R^{d×T}` is stored **column-major**: one contiguous
+//! column per task, because task nodes read/write exactly their own column
+//! (`w_t`) on every update, and the server's proximal step consumes whole
+//! columns. `f64` is used for all server-side math (prox / SVD); the PJRT
+//! boundary converts to `f32` (the artifact dtype).
+
+mod mat;
+mod ops;
+
+pub use mat::Mat;
+pub use ops::{axpy, dot, nrm2, scal};

@@ -1,0 +1,314 @@
+//! `amtl` — the launcher CLI.
+//!
+//! Subcommands:
+//!
+//! * `train`     — run AMTL (or SMTL with `--method smtl`) on a dataset.
+//! * `compare`   — AMTL vs SMTL side by side under one network setting.
+//! * `datasets`  — print the Table-II style description of the built-in
+//!                 dataset simulators.
+//! * `artifacts` — verify the AOT artifact manifest loads and list buckets.
+//!
+//! Examples:
+//!
+//! ```text
+//! amtl train --dataset school-small --reg nuclear --lambda 0.5 --iters 20
+//! amtl train --tasks 10 --n 100 --dim 50 --offset 5 --engine pjrt
+//! amtl compare --tasks 5 --offset 5 --iters 10
+//! ```
+
+use amtl::config::Opts;
+use amtl::coordinator::step_size::KmSchedule;
+use amtl::coordinator::{run_amtl, run_smtl, AmtlConfig, MtlProblem, SmtlConfig};
+use amtl::data::{public, synthetic, MultiTaskDataset};
+use amtl::optim::prox::RegularizerKind;
+use amtl::runtime::{ComputePool, Engine, PoolConfig};
+use amtl::util::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::time::Duration;
+
+fn main() {
+    let opts = match Opts::from_env() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&opts) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(opts: &Opts) -> Result<()> {
+    let cmd = opts.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(opts),
+        "compare" => cmd_compare(opts),
+        "datasets" => cmd_datasets(opts),
+        "artifacts" => cmd_artifacts(opts),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (see `amtl help`)"),
+    }
+}
+
+const HELP: &str = "\
+amtl — Asynchronous Multi-Task Learning (Baytas et al., 2016)
+
+USAGE: amtl <command> [options]
+
+COMMANDS:
+  train       run one optimization (default method: amtl)
+  compare     run AMTL and SMTL under identical network settings
+  datasets    describe the built-in dataset simulators
+  artifacts   validate the AOT artifact manifest
+  help        this text
+
+DATA OPTIONS (synthetic unless --dataset is given):
+  --dataset <school|mnist|mtfl|school-small>   simulated public dataset
+  --tasks N      number of synthetic tasks          [5]
+  --n N          samples per synthetic task         [100]
+  --dim D        feature dimension                  [50]
+  --rank R       planted shared-subspace rank       [3]
+  --noise S      label noise sigma                  [0.1]
+
+PROBLEM OPTIONS:
+  --reg <nuclear|l21|l1|elasticnet|none>           [nuclear]
+  --lambda L     regularization strength            [0.5]
+  --eta-scale S  eta = S * 2/L_max, S in (0,1)      [0.5]
+
+RUN OPTIONS:
+  --method <amtl|smtl>                             [amtl]
+  --iters K      activations per task node          [10]
+  --offset U     delay offset in paper units        [0]
+  --time-scale MS  wall-clock ms per paper unit     [100]
+  --eta-k V      KM relaxation step                 [0.5]
+  --dynamic-step enable Eq. III.6 dynamic step
+  --online-svd   incremental nuclear prox (ablation)
+  --sgd FRAC     stochastic forward steps with this minibatch fraction
+  --prox-every K server re-prox stride              [1]
+  --engine <pjrt|native>                           [native]
+  --executors N  PJRT executor threads              [2]
+  --artifacts-dir PATH                             [artifacts]
+  --record-every K  trajectory sampling stride      [max(1, T*iters/50)]
+  --seed S                                         [7]
+";
+
+/// Assemble the dataset from CLI options.
+fn build_dataset(opts: &Opts, rng: &mut Rng) -> Result<MultiTaskDataset> {
+    if let Some(name) = opts.get("dataset") {
+        return public::by_name(name, rng)
+            .ok_or_else(|| anyhow!("unknown dataset '{name}' (school|mnist|mtfl|school-small)"));
+    }
+    let t = opts.get_usize("tasks", 5)?;
+    let n = opts.get_usize("n", 100)?;
+    let d = opts.get_usize("dim", 50)?;
+    let rank = opts.get_usize("rank", 3)?;
+    let noise = opts.get_f64("noise", 0.1)?;
+    Ok(synthetic::lowrank_regression(&vec![n; t], d, rank.min(d), noise, rng))
+}
+
+fn build_problem(opts: &Opts, rng: &mut Rng) -> Result<MtlProblem> {
+    let ds = build_dataset(opts, rng)?;
+    let reg = RegularizerKind::parse(&opts.get_or("reg", "nuclear"))
+        .ok_or_else(|| anyhow!("bad --reg"))?;
+    let lambda = opts.get_f64("lambda", 0.5)?;
+    let eta_scale = opts.get_f64("eta-scale", 0.5)?;
+    Ok(MtlProblem::new(ds, reg, lambda, eta_scale, rng))
+}
+
+struct RunOpts {
+    iters: usize,
+    sgd_fraction: Option<f64>,
+    offset: f64,
+    time_scale: Duration,
+    eta_k: f64,
+    dynamic: bool,
+    online_svd: bool,
+    prox_every: u64,
+    engine: Engine,
+    executors: usize,
+    artifacts_dir: String,
+    record_every: u64,
+    seed: u64,
+}
+
+fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
+    let iters = opts.get_usize("iters", 10)?;
+    let default_record = ((t * iters) as u64 / 50).max(1);
+    let sgd = opts.get_f64("sgd", 0.0)?;
+    Ok(RunOpts {
+        iters,
+        sgd_fraction: if sgd > 0.0 { Some(sgd) } else { None },
+        offset: opts.get_f64("offset", 0.0)?,
+        time_scale: Duration::from_millis(opts.get_u64("time-scale", 100)?),
+        eta_k: opts.get_f64("eta-k", 0.5)?,
+        dynamic: opts.flag("dynamic-step"),
+        online_svd: opts.flag("online-svd"),
+        prox_every: opts.get_u64("prox-every", 1)?,
+        engine: Engine::parse(&opts.get_or("engine", "native"))
+            .ok_or_else(|| anyhow!("bad --engine"))?,
+        executors: opts.get_usize("executors", 2)?,
+        artifacts_dir: opts.get_or("artifacts-dir", "artifacts"),
+        record_every: opts.get_u64("record-every", default_record)?,
+        seed: opts.get_u64("seed", 7)?,
+    })
+}
+
+fn make_pool(ro: &RunOpts) -> Result<Option<ComputePool>> {
+    if ro.engine == Engine::Pjrt {
+        Ok(Some(ComputePool::new(PoolConfig {
+            executors: ro.executors,
+            artifacts_dir: ro.artifacts_dir.clone().into(),
+        })?))
+    } else {
+        Ok(None)
+    }
+}
+
+fn cmd_train(opts: &Opts) -> Result<()> {
+    let mut rng = Rng::new(opts.get_u64("seed", 7)?);
+    let problem = build_problem(opts, &mut rng)?;
+    let method = opts.get_or("method", "amtl");
+    let ro = run_opts(opts, problem.t())?;
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    println!("dataset: {}", problem.dataset.describe());
+    println!(
+        "problem: reg={} lambda={} eta={:.3e} L={:.3e}",
+        problem.reg_kind.name(),
+        problem.lambda,
+        problem.eta,
+        problem.l_max
+    );
+    let pool = make_pool(&ro)?;
+    let computes = problem.build_computes(ro.engine, pool.as_ref())?;
+
+    let result = match method.as_str() {
+        "amtl" => run_amtl(
+            &problem,
+            computes,
+            &AmtlConfig {
+                iters_per_node: ro.iters,
+                time_scale: ro.time_scale,
+                km: KmSchedule::fixed(ro.eta_k),
+                dynamic_step: ro.dynamic,
+                dyn_window: 5,
+                prox_every: ro.prox_every,
+                record_every: ro.record_every,
+                online_svd: ro.online_svd,
+                seed: ro.seed,
+                delay: amtl::net::DelayModel::None,
+                faults: amtl::net::FaultModel::None,
+                sgd_fraction: ro.sgd_fraction,
+            }
+            .with_paper_offset(ro.offset),
+        )?,
+        "smtl" => run_smtl(
+            &problem,
+            computes,
+            &SmtlConfig {
+                iters: ro.iters,
+                time_scale: ro.time_scale,
+                km: KmSchedule::fixed(ro.eta_k),
+                record_every: ro.record_every,
+                seed: ro.seed,
+                delay: amtl::net::DelayModel::None,
+            }
+            .with_paper_offset(ro.offset),
+        )?,
+        other => bail!("unknown --method '{other}'"),
+    };
+
+    println!("{}", result.summary());
+    let objs = result.compute_objectives(|w| problem.objective(w), |v| problem.prox_map(v));
+    for (secs, ver, obj) in &objs {
+        println!("  t={secs:8.3}s  k={ver:6}  F={obj:.6}");
+    }
+    println!(
+        "final objective: {:.6}  (train RMSE {:.4})",
+        problem.objective(&result.w_final),
+        problem.train_rmse(&result.w_final)
+    );
+    Ok(())
+}
+
+fn cmd_compare(opts: &Opts) -> Result<()> {
+    let mut rng = Rng::new(opts.get_u64("seed", 7)?);
+    let problem = build_problem(opts, &mut rng)?;
+    let ro = run_opts(opts, problem.t())?;
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    println!("dataset: {}", problem.dataset.describe());
+    let pool = make_pool(&ro)?;
+
+    let amtl_res = run_amtl(
+        &problem,
+        problem.build_computes(ro.engine, pool.as_ref())?,
+        &AmtlConfig {
+            iters_per_node: ro.iters,
+            time_scale: ro.time_scale,
+            km: KmSchedule::fixed(ro.eta_k),
+            dynamic_step: ro.dynamic,
+            dyn_window: 5,
+            prox_every: ro.prox_every,
+            record_every: ro.record_every,
+            online_svd: ro.online_svd,
+            seed: ro.seed,
+            delay: amtl::net::DelayModel::None,
+            faults: amtl::net::FaultModel::None,
+            sgd_fraction: ro.sgd_fraction,
+        }
+        .with_paper_offset(ro.offset),
+    )?;
+    let smtl_res = run_smtl(
+        &problem,
+        problem.build_computes(ro.engine, pool.as_ref())?,
+        &SmtlConfig {
+            iters: ro.iters,
+            time_scale: ro.time_scale,
+            km: KmSchedule::fixed(ro.eta_k),
+            record_every: ro.record_every,
+            seed: ro.seed,
+            delay: amtl::net::DelayModel::None,
+        }
+        .with_paper_offset(ro.offset),
+    )?;
+
+    println!("{}", amtl_res.summary());
+    println!("{}", smtl_res.summary());
+    println!(
+        "AMTL objective {:.6} | SMTL objective {:.6} | speedup {:.2}x",
+        problem.objective(&amtl_res.w_final),
+        problem.objective(&smtl_res.w_final),
+        smtl_res.wall_time.as_secs_f64() / amtl_res.wall_time.as_secs_f64().max(1e-9),
+    );
+    Ok(())
+}
+
+fn cmd_datasets(opts: &Opts) -> Result<()> {
+    let mut rng = Rng::new(opts.get_u64("seed", 7)?);
+    println!("Table II — simulated public datasets:");
+    for name in ["school", "mnist", "mtfl"] {
+        let ds = public::by_name(name, &mut rng).unwrap();
+        println!("  {}", ds.describe());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(opts: &Opts) -> Result<()> {
+    let dir = opts.get_or("artifacts-dir", "artifacts");
+    let m = amtl::runtime::Manifest::load(std::path::Path::new(&dir))?;
+    println!(
+        "manifest OK: {} artifacts in {dir} (tile_n={})",
+        m.len(),
+        m.tile_n
+    );
+    for key in m.keys() {
+        println!("  {key}");
+    }
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! Per-task-node communication-delay models.
+
+use crate::util::Rng;
+use std::time::Duration;
+
+/// How long a task node's round trip (receive model → send update) is
+/// delayed by the simulated network, per activation.
+#[derive(Clone, Debug)]
+pub enum DelayModel {
+    /// No injected delay (pure compute timing).
+    None,
+    /// `offset + U(0, jitter)` per activation (bounded jitter).
+    OffsetJitter { offset: Duration, jitter: Duration },
+    /// The paper's model: "the sum of the offset and a random value" —
+    /// offset plus an exponential random component with the given mean.
+    /// AMTL-k in the tables uses `offset = k` (paper: seconds; here scaled,
+    /// see DESIGN.md §Substitutions). The heavy-ish tail is what makes the
+    /// synchronous barrier's `E[max over T nodes]` grow with T.
+    OffsetExp { offset: Duration, mean: Duration },
+    /// Exponential inter-activation gaps — task nodes as independent
+    /// Poisson processes with a given rate (Assumption 1).
+    Poisson { mean: Duration },
+    /// Heterogeneous: node `i` uses `per_node[i % len]` — models a network
+    /// where some hospitals sit behind slow links (used by the straggler
+    /// ablation and the dynamic-step-size experiments).
+    PerNode { per_node: Vec<Box<DelayModel>> },
+}
+
+/// A sampled delay plus the bookkeeping the dynamic-step-size controller
+/// needs (Eq. III.6 averages the recent delays per node).
+#[derive(Clone, Copy, Debug)]
+pub struct DelaySample {
+    pub duration: Duration,
+}
+
+impl DelayModel {
+    /// The paper's AMTL-k / SMTL-k network setting: offset `k` (in the
+    /// scaled time unit) plus an exponential random component with mean
+    /// `k/2`.
+    pub fn paper_offset(offset: Duration) -> DelayModel {
+        DelayModel::OffsetExp { offset, mean: offset.mul_f64(0.5) }
+    }
+
+    /// Sample the delay for task node `node` at activation `k`.
+    pub fn sample(&self, node: usize, rng: &mut Rng) -> DelaySample {
+        let duration = match self {
+            DelayModel::None => Duration::ZERO,
+            DelayModel::OffsetJitter { offset, jitter } => {
+                *offset + jitter.mul_f64(rng.f64())
+            }
+            DelayModel::OffsetExp { offset, mean } => {
+                let extra = if mean.is_zero() {
+                    Duration::ZERO
+                } else {
+                    Duration::from_secs_f64(rng.exponential(1.0 / mean.as_secs_f64()))
+                };
+                *offset + extra
+            }
+            DelayModel::Poisson { mean } => {
+                // Exponential with mean `mean`.
+                Duration::from_secs_f64(rng.exponential(1.0 / mean.as_secs_f64().max(1e-12)))
+            }
+            DelayModel::PerNode { per_node } => {
+                return per_node[node % per_node.len()].sample(node, rng)
+            }
+        };
+        DelaySample { duration }
+    }
+
+    /// Expected delay (for reporting/sanity checks).
+    pub fn mean(&self, node: usize) -> Duration {
+        match self {
+            DelayModel::None => Duration::ZERO,
+            DelayModel::OffsetJitter { offset, jitter } => *offset + jitter.mul_f64(0.5),
+            DelayModel::OffsetExp { offset, mean } => *offset + *mean,
+            DelayModel::Poisson { mean } => *mean,
+            DelayModel::PerNode { per_node } => per_node[node % per_node.len()].mean(node),
+        }
+    }
+}
+
+/// Rolling per-node delay history — feeds the dynamic step size
+/// (Eq. III.6: mean of the last `window` delays).
+#[derive(Clone, Debug)]
+pub struct NodeDelays {
+    window: usize,
+    /// Ring buffer of the most recent delays, per node, in the *time unit*
+    /// of the experiment (the paper uses seconds).
+    recent: Vec<Vec<f64>>,
+}
+
+impl NodeDelays {
+    pub fn new(nodes: usize, window: usize) -> NodeDelays {
+        NodeDelays { window, recent: vec![Vec::new(); nodes] }
+    }
+
+    pub fn record(&mut self, node: usize, delay_units: f64) {
+        let buf = &mut self.recent[node];
+        buf.push(delay_units);
+        if buf.len() > self.window {
+            let excess = buf.len() - self.window;
+            buf.drain(..excess);
+        }
+    }
+
+    /// Mean of the last `window` delays for `node` (ν̄ in Eq. III.6);
+    /// zero if nothing recorded yet.
+    pub fn recent_mean(&self, node: usize) -> f64 {
+        let buf = &self.recent[node];
+        if buf.is_empty() {
+            0.0
+        } else {
+            buf.iter().sum::<f64>() / buf.len() as f64
+        }
+    }
+
+    pub fn count(&self, node: usize) -> usize {
+        self.recent[node].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_zero() {
+        let mut rng = Rng::new(80);
+        let d = DelayModel::None.sample(0, &mut rng);
+        assert_eq!(d.duration, Duration::ZERO);
+    }
+
+    #[test]
+    fn offset_jitter_within_bounds() {
+        let mut rng = Rng::new(81);
+        let m = DelayModel::OffsetJitter {
+            offset: Duration::from_millis(50),
+            jitter: Duration::from_millis(25),
+        };
+        for _ in 0..1000 {
+            let d = m.sample(0, &mut rng).duration;
+            assert!(d >= Duration::from_millis(50));
+            assert!(d <= Duration::from_millis(75));
+        }
+    }
+
+    #[test]
+    fn paper_offset_mean_is_offset_plus_half() {
+        let m = DelayModel::paper_offset(Duration::from_millis(100));
+        // offset + E[Exp(offset/2)] = 100 + 50 ms
+        assert_eq!(m.mean(0), Duration::from_millis(150));
+    }
+
+    #[test]
+    fn offset_exp_samples_at_least_offset_with_matching_mean() {
+        let mut rng = Rng::new(85);
+        let m = DelayModel::paper_offset(Duration::from_millis(40));
+        let n = 20_000;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let d = m.sample(0, &mut rng).duration;
+            assert!(d >= Duration::from_millis(40));
+            total += d.as_secs_f64();
+        }
+        let mean = total / n as f64;
+        assert!((mean - 0.060).abs() < 0.002, "mean {mean}");
+    }
+
+    #[test]
+    fn poisson_sample_mean_converges() {
+        let mut rng = Rng::new(82);
+        let m = DelayModel::Poisson { mean: Duration::from_millis(20) };
+        let n = 20_000;
+        let total: f64 = (0..n)
+            .map(|_| m.sample(0, &mut rng).duration.as_secs_f64())
+            .sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.020).abs() < 0.001, "mean {mean}");
+    }
+
+    #[test]
+    fn per_node_routes_by_index() {
+        let m = DelayModel::PerNode {
+            per_node: vec![
+                Box::new(DelayModel::None),
+                Box::new(DelayModel::OffsetJitter {
+                    offset: Duration::from_millis(10),
+                    jitter: Duration::ZERO,
+                }),
+            ],
+        };
+        let mut rng = Rng::new(83);
+        assert_eq!(m.sample(0, &mut rng).duration, Duration::ZERO);
+        assert_eq!(m.sample(1, &mut rng).duration, Duration::from_millis(10));
+        assert_eq!(m.sample(2, &mut rng).duration, Duration::ZERO); // wraps
+        assert_eq!(m.mean(1), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn node_delays_window_and_mean() {
+        let mut nd = NodeDelays::new(2, 3);
+        assert_eq!(nd.recent_mean(0), 0.0);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            nd.record(0, v);
+        }
+        // Window of 3 keeps [2,3,4].
+        assert_eq!(nd.count(0), 3);
+        assert!((nd.recent_mean(0) - 3.0).abs() < 1e-12);
+        // Node 1 untouched.
+        assert_eq!(nd.count(1), 0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Fault injection for robustness experiments.
+//!
+//! The paper motivates AMTL with "high network delay **or even failure**"
+//! (§III.B): when one task node fails, every other node in SMTL stalls at
+//! the barrier, while AMTL keeps making progress on the remaining blocks.
+//! [`FaultModel`] injects per-activation faults so that behaviour is
+//! testable:
+//!
+//! * `DropActivation` — the node's message is lost; the activation performs
+//!   no update (retry next activation).
+//! * `CrashAfter` — the node dies permanently after a given number of
+//!   activations (its block freezes; others continue).
+
+use crate::util::Rng;
+
+/// What happens to a given activation of a given node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOutcome {
+    Ok,
+    /// The update is lost in transit: skip the update, count a retry.
+    Dropped,
+    /// The node is dead: stop its loop.
+    Crashed,
+}
+
+/// Per-node fault model.
+#[derive(Clone, Debug, Default)]
+pub enum FaultModel {
+    #[default]
+    None,
+    /// Each activation's update is lost with probability `p`.
+    DropActivation { p: f64 },
+    /// Node `node` crashes permanently after `after` activations.
+    CrashAfter { node: usize, after: u64 },
+    /// Compose: first matching non-Ok outcome wins.
+    Both { drop_p: f64, crash_node: usize, crash_after: u64 },
+}
+
+impl FaultModel {
+    /// Outcome for activation number `k` (0-based) of `node`.
+    pub fn outcome(&self, node: usize, k: u64, rng: &mut Rng) -> FaultOutcome {
+        match self {
+            FaultModel::None => FaultOutcome::Ok,
+            FaultModel::DropActivation { p } => {
+                if rng.bool(*p) {
+                    FaultOutcome::Dropped
+                } else {
+                    FaultOutcome::Ok
+                }
+            }
+            FaultModel::CrashAfter { node: n, after } => {
+                if node == *n && k >= *after {
+                    FaultOutcome::Crashed
+                } else {
+                    FaultOutcome::Ok
+                }
+            }
+            FaultModel::Both { drop_p, crash_node, crash_after } => {
+                if node == *crash_node && k >= *crash_after {
+                    FaultOutcome::Crashed
+                } else if rng.bool(*drop_p) {
+                    FaultOutcome::Dropped
+                } else {
+                    FaultOutcome::Ok
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_always_ok() {
+        let mut rng = Rng::new(300);
+        for k in 0..100 {
+            assert_eq!(FaultModel::None.outcome(0, k, &mut rng), FaultOutcome::Ok);
+        }
+    }
+
+    #[test]
+    fn drop_rate_matches_p() {
+        let mut rng = Rng::new(301);
+        let m = FaultModel::DropActivation { p: 0.25 };
+        let drops = (0..40_000)
+            .filter(|&k| m.outcome(0, k, &mut rng) == FaultOutcome::Dropped)
+            .count();
+        let rate = drops as f64 / 40_000.0;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate}");
+    }
+
+    #[test]
+    fn crash_is_permanent_and_node_specific() {
+        let mut rng = Rng::new(302);
+        let m = FaultModel::CrashAfter { node: 1, after: 3 };
+        assert_eq!(m.outcome(1, 2, &mut rng), FaultOutcome::Ok);
+        assert_eq!(m.outcome(1, 3, &mut rng), FaultOutcome::Crashed);
+        assert_eq!(m.outcome(1, 10, &mut rng), FaultOutcome::Crashed);
+        assert_eq!(m.outcome(0, 10, &mut rng), FaultOutcome::Ok);
+    }
+
+    #[test]
+    fn both_composes() {
+        let mut rng = Rng::new(303);
+        let m = FaultModel::Both { drop_p: 1.0, crash_node: 2, crash_after: 0 };
+        assert_eq!(m.outcome(2, 0, &mut rng), FaultOutcome::Crashed);
+        assert_eq!(m.outcome(1, 0, &mut rng), FaultOutcome::Dropped);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated star-network substrate.
+//!
+//! The paper simulates the distributed environment on shared memory and
+//! injects communication delays at the task nodes (§IV.A): "the amount of
+//! delay was computed as the sum of the offset and a random value", where
+//! the offset models the network infrastructure (AMTL-5/-10/-30 = 5/10/30 s
+//! offsets). [`DelayModel`] reproduces exactly that, plus a Poisson
+//! activation model matching Assumption 1, and heterogeneous/straggler
+//! profiles for the robustness experiments.
+
+mod delay;
+mod faults;
+
+pub use delay::{DelayModel, DelaySample, NodeDelays};
+pub use faults::{FaultModel, FaultOutcome};

@@ -1,0 +1,104 @@
+//! Lipschitz-constant estimation and step-size selection.
+//!
+//! Theorem 1 requires `η ∈ (0, 2/L)` for the forward operator to be
+//! non-expansive, and the KM relaxation `η_k ∈ [η_min, c/(2τ/√T + 1)]`.
+//! `L` for the joint smooth loss `f(W) = Σ_t ℓ_t(w_t)` is the max of the
+//! per-task constants (block-separable f ⇒ block-diagonal Hessian).
+
+use crate::optim::losses::{Loss, RowMat};
+use crate::util::Rng;
+
+/// Per-task Lipschitz constant of `∇ℓ_t`.
+///
+/// * squared loss `Σ(x·w−y)²`: `L_t = 2‖X‖₂²`
+/// * logistic loss: `L_t = ‖X‖₂²/4` (σ′ ≤ 1/4)
+pub fn task_lipschitz(loss: Loss, x: &RowMat, rng: &mut Rng) -> f64 {
+    let s = x.spectral_norm(100, rng);
+    match loss {
+        Loss::Squared => 2.0 * s * s,
+        Loss::Logistic => 0.25 * s * s,
+    }
+}
+
+/// Forward step size `η = scale · 2/L` with `scale ∈ (0,1)` for safety.
+pub fn forward_step_size(l_max: f64, scale: f64) -> f64 {
+    assert!(l_max > 0.0, "Lipschitz constant must be positive");
+    assert!((0.0..1.0).contains(&scale));
+    scale * 2.0 / l_max
+}
+
+/// The KM relaxation upper bound of Theorem 1: `c / (2τ/√T + 1)`.
+///
+/// `tau` is the maximum delay measured in *update counts*, `t` the number of
+/// tasks, and `c ∈ (0,1)`.
+pub fn km_step_bound(c: f64, tau: f64, t: usize) -> f64 {
+    assert!((0.0..1.0).contains(&c) && c > 0.0);
+    c / (2.0 * tau / (t as f64).sqrt() + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_x(n: usize, d: usize, seed: u64) -> RowMat {
+        let mut rng = Rng::new(seed);
+        let mut x = RowMat::zeros(n, d);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        x
+    }
+
+    #[test]
+    fn squared_descent_lemma_holds_at_estimated_l() {
+        // ℓ(u) ≤ ℓ(w) + ∇ℓ(w)·(u−w) + L/2 ‖u−w‖² for random pairs.
+        let x = random_x(30, 6, 40);
+        let mut rng = Rng::new(41);
+        let y = rng.normal_vec(30);
+        let mask = vec![1.0; 30];
+        let l = task_lipschitz(Loss::Squared, &x, &mut rng) * 1.001;
+        for _ in 0..20 {
+            let w = rng.normal_vec(6);
+            let u = rng.normal_vec(6);
+            let (g, fw) = Loss::Squared.grad_obj(&x, &y, &w, &mask);
+            let fu = Loss::Squared.obj(&x, &y, &u, &mask);
+            let lin: f64 = g.iter().zip(u.iter().zip(&w)).map(|(gi, (ui, wi))| gi * (ui - wi)).sum();
+            let quad: f64 = u.iter().zip(&w).map(|(ui, wi)| (ui - wi) * (ui - wi)).sum();
+            assert!(fu <= fw + lin + 0.5 * l * quad + 1e-8);
+        }
+    }
+
+    #[test]
+    fn logistic_descent_lemma_holds() {
+        let x = random_x(25, 4, 42);
+        let mut rng = Rng::new(43);
+        let y: Vec<f64> = (0..25).map(|i| (i % 2) as f64).collect();
+        let mask = vec![1.0; 25];
+        let l = task_lipschitz(Loss::Logistic, &x, &mut rng) * 1.001;
+        for _ in 0..20 {
+            let w = rng.normal_vec(4);
+            let u = rng.normal_vec(4);
+            let (g, fw) = Loss::Logistic.grad_obj(&x, &y, &w, &mask);
+            let fu = Loss::Logistic.obj(&x, &y, &u, &mask);
+            let lin: f64 = g.iter().zip(u.iter().zip(&w)).map(|(gi, (ui, wi))| gi * (ui - wi)).sum();
+            let quad: f64 = u.iter().zip(&w).map(|(ui, wi)| (ui - wi) * (ui - wi)).sum();
+            assert!(fu <= fw + lin + 0.5 * l * quad + 1e-8);
+        }
+    }
+
+    #[test]
+    fn km_bound_decreases_with_delay_increases_with_tasks() {
+        let b0 = km_step_bound(0.9, 0.0, 10);
+        let b1 = km_step_bound(0.9, 5.0, 10);
+        let b2 = km_step_bound(0.9, 5.0, 100);
+        assert!(b0 > b1, "delay should shrink the bound");
+        assert!(b2 > b1, "more tasks should relax the bound");
+        assert!((b0 - 0.9).abs() < 1e-12, "zero delay bound is c");
+    }
+
+    #[test]
+    #[should_panic]
+    fn forward_step_rejects_zero_l() {
+        forward_step_size(0.0, 0.5);
+    }
+}

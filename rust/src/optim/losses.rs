@@ -1,0 +1,305 @@
+//! Task losses in rust: the **native compute engine** (used when artifacts
+//! are absent, and as a cross-check oracle against the PJRT path) mirrors
+//! the L1 Pallas kernels exactly — masked least-squares and logistic
+//! gradient + objective in one pass.
+//!
+//! The paper's loss for task t is `ℓ_t(w) = Σ_i (x_i·w − y_i)²` (squared
+//! loss, Eq. IV.1 — note: *not* halved) or the logistic loss
+//! `Σ_i log(1+exp(x_i·w)) − y_i (x_i·w)` with labels in {0,1}.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// `Σ (x·w − y)²`, gradient `2 Xᵀ(Xw − y)`.
+    Squared,
+    /// `Σ softplus(x·w) − y(x·w)`, gradient `Xᵀ(σ(Xw) − y)`.
+    Logistic,
+}
+
+impl Loss {
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "squared" | "lsq" | "l2" => Some(Loss::Squared),
+            "logistic" | "logreg" => Some(Loss::Logistic),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::Squared => "squared",
+            Loss::Logistic => "logistic",
+        }
+    }
+
+    /// The AOT artifact op implementing this loss's fused forward step.
+    pub fn step_op(&self) -> &'static str {
+        match self {
+            Loss::Squared => "lsq_step",
+            Loss::Logistic => "logistic_step",
+        }
+    }
+
+    /// Gradient and objective at `w` over row-major `x` (`n × d`), labels
+    /// `y`, with a row `mask` (1 = real row, 0 = padding).
+    pub fn grad_obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> (Vec<f64>, f64) {
+        let n = x.rows;
+        let d = x.cols;
+        debug_assert_eq!(y.len(), n);
+        debug_assert_eq!(mask.len(), n);
+        debug_assert_eq!(w.len(), d);
+        let mut g = vec![0.0; d];
+        let mut obj = 0.0;
+        for i in 0..n {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let xi = x.row(i);
+            let z: f64 = xi.iter().zip(w).map(|(a, b)| a * b).sum();
+            let (coef, contrib) = match self {
+                Loss::Squared => {
+                    let r = z - y[i];
+                    (2.0 * r, r * r)
+                }
+                Loss::Logistic => {
+                    let p = sigmoid(z);
+                    (p - y[i], softplus(z) - y[i] * z)
+                }
+            };
+            let coef = coef * mask[i];
+            for (gk, xk) in g.iter_mut().zip(xi) {
+                *gk += coef * xk;
+            }
+            obj += mask[i] * contrib;
+        }
+        (g, obj)
+    }
+
+    /// Objective only.
+    pub fn obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> f64 {
+        self.grad_obj(x, y, w, mask).1
+    }
+
+    /// Fused forward step `u = w − η ∇ℓ(w)`, returning `(u, ℓ(w))` — the
+    /// native mirror of the `*_step` artifacts.
+    pub fn step(
+        &self,
+        x: &RowMat,
+        y: &[f64],
+        w: &[f64],
+        mask: &[f64],
+        eta: f64,
+    ) -> (Vec<f64>, f64) {
+        let (g, obj) = self.grad_obj(x, y, w, mask);
+        let u = w.iter().zip(&g).map(|(wi, gi)| wi - eta * gi).collect();
+        (u, obj)
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+pub fn softplus(z: f64) -> f64 {
+    z.max(0.0) + (-z.abs()).exp().ln_1p()
+}
+
+/// Row-major matrix for per-task data (`x_t`): rows are samples, which is
+/// the natural iteration order for gradient accumulation and matches the
+/// PJRT artifact input layout (row-major f32).
+#[derive(Clone, Debug)]
+pub struct RowMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl RowMat {
+    pub fn zeros(rows: usize, cols: usize) -> RowMat {
+        RowMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Spectral norm of `X` via power iteration (for Lipschitz constants).
+    pub fn spectral_norm(&self, iters: usize, rng: &mut crate::util::Rng) -> f64 {
+        let mut v = rng.normal_vec(self.cols);
+        let mut sigma = 0.0;
+        for _ in 0..iters {
+            // u = X v
+            let mut u = vec![0.0; self.rows];
+            for i in 0..self.rows {
+                u[i] = self.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            // v = Xᵀ u
+            let mut xtv = vec![0.0; self.cols];
+            for i in 0..self.rows {
+                let ui = u[i];
+                if ui != 0.0 {
+                    for (k, a) in self.row(i).iter().enumerate() {
+                        xtv[k] += a * ui;
+                    }
+                }
+            }
+            let nrm = crate::linalg::nrm2(&xtv);
+            if nrm == 0.0 {
+                return 0.0;
+            }
+            for (vi, xi) in v.iter_mut().zip(&xtv) {
+                *vi = xi / nrm;
+            }
+            sigma = nrm.sqrt();
+        }
+        sigma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn make(n: usize, d: usize, seed: u64) -> (RowMat, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = RowMat::zeros(n, d);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let y = rng.normal_vec(n);
+        let w = rng.normal_vec(d);
+        let mask = vec![1.0; n];
+        (x, y, w, mask)
+    }
+
+    #[test]
+    fn squared_grad_matches_finite_differences() {
+        let (x, y, w, mask) = make(20, 5, 30);
+        let loss = Loss::Squared;
+        let (g, _) = loss.grad_obj(&x, &y, &w, &mask);
+        let h = 1e-6;
+        for k in 0..5 {
+            let mut wp = w.clone();
+            wp[k] += h;
+            let mut wm = w.clone();
+            wm[k] -= h;
+            let fd = (loss.obj(&x, &y, &wp, &mask) - loss.obj(&x, &y, &wm, &mask)) / (2.0 * h);
+            assert!((g[k] - fd).abs() < 1e-4, "k={k}: {} vs {}", g[k], fd);
+        }
+    }
+
+    #[test]
+    fn logistic_grad_matches_finite_differences() {
+        let (x, _, w, mask) = make(20, 5, 31);
+        let mut rng = Rng::new(99);
+        let y: Vec<f64> = (0..20).map(|_| if rng.bool(0.5) { 1.0 } else { 0.0 }).collect();
+        let loss = Loss::Logistic;
+        let (g, _) = loss.grad_obj(&x, &y, &w, &mask);
+        let h = 1e-6;
+        for k in 0..5 {
+            let mut wp = w.clone();
+            wp[k] += h;
+            let mut wm = w.clone();
+            wm[k] -= h;
+            let fd = (loss.obj(&x, &y, &wp, &mask) - loss.obj(&x, &y, &wm, &mask)) / (2.0 * h);
+            assert!((g[k] - fd).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mask_zero_rows_do_not_contribute() {
+        let (x, y, w, _) = make(10, 3, 32);
+        let mut mask = vec![1.0; 10];
+        mask[3] = 0.0;
+        mask[7] = 0.0;
+        let (g_masked, o_masked) = Loss::Squared.grad_obj(&x, &y, &w, &mask);
+        // Build the reduced problem without rows 3 and 7.
+        let keep: Vec<usize> = (0..10).filter(|i| !matches!(i, 3 | 7)).collect();
+        let mut xr = RowMat::zeros(8, 3);
+        let mut yr = vec![0.0; 8];
+        for (new_i, &old_i) in keep.iter().enumerate() {
+            xr.row_mut(new_i).copy_from_slice(x.row(old_i));
+            yr[new_i] = y[old_i];
+        }
+        let (g_red, o_red) = Loss::Squared.grad_obj(&xr, &yr, &w, &vec![1.0; 8]);
+        for k in 0..3 {
+            assert!((g_masked[k] - g_red[k]).abs() < 1e-12);
+        }
+        assert!((o_masked - o_red).abs() < 1e-12);
+    }
+
+    #[test]
+    fn squared_obj_zero_at_consistent_solution() {
+        let mut rng = Rng::new(33);
+        let mut x = RowMat::zeros(15, 4);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let w = rng.normal_vec(4);
+        let y: Vec<f64> = (0..15)
+            .map(|i| x.row(i).iter().zip(&w).map(|(a, b)| a * b).sum())
+            .collect();
+        let mask = vec![1.0; 15];
+        assert!(Loss::Squared.obj(&x, &y, &w, &mask) < 1e-20);
+        let (g, _) = Loss::Squared.grad_obj(&x, &y, &w, &mask);
+        assert!(g.iter().all(|v| v.abs() < 1e-10));
+    }
+
+    #[test]
+    fn sigmoid_softplus_stable_at_extremes() {
+        assert!((sigmoid(1000.0) - 1.0).abs() < 1e-12);
+        assert!(sigmoid(-1000.0).abs() < 1e-12);
+        assert!(softplus(1000.0).is_finite());
+        assert!((softplus(1000.0) - 1000.0).abs() < 1e-9);
+        assert!(softplus(-1000.0).abs() < 1e-12);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn step_reduces_objective_with_safe_eta() {
+        let (x, y, w, mask) = make(50, 8, 34);
+        let mut rng = Rng::new(35);
+        let lip = 2.0 * x.spectral_norm(100, &mut rng).powi(2);
+        let eta = 1.0 / lip;
+        let (u, o0) = Loss::Squared.step(&x, &y, &w, &mask, eta);
+        let o1 = Loss::Squared.obj(&x, &y, &u, &mask);
+        assert!(o1 <= o0 + 1e-12, "{o1} > {o0}");
+    }
+
+    #[test]
+    fn logistic_obj_nonnegative() {
+        let (x, _, w, mask) = make(30, 6, 36);
+        let y: Vec<f64> = (0..30).map(|i| (i % 2) as f64).collect();
+        assert!(Loss::Logistic.obj(&x, &y, &w, &mask) >= 0.0);
+    }
+
+    #[test]
+    fn rowmat_spectral_norm_matches_mat() {
+        let mut rng = Rng::new(37);
+        let mut x = RowMat::zeros(12, 5);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let m = crate::linalg::Mat::from_fn(12, 5, |r, c| x.row(r)[c]);
+        let a = x.spectral_norm(200, &mut rng);
+        let b = m.spectral_norm(200, &mut rng);
+        assert!((a - b).abs() / a < 1e-4);
+    }
+}

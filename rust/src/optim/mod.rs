@@ -1,0 +1,17 @@
+//! Optimization substrate: SVD, proximal operators, losses, Lipschitz
+//! estimation, and the centralized FISTA baseline.
+//!
+//! The nuclear-norm backward step (singular-value thresholding, Eq. IV.2 of
+//! the paper) runs natively here: `jnp.linalg.svd` lowers to a typed-FFI
+//! LAPACK custom-call that the CPU PJRT plugin of xla_extension 0.5.1
+//! cannot execute (verified — see EXPERIMENTS.md), and architecturally the
+//! prox is the *central server's* job, which is rust.
+
+pub mod fista;
+pub mod lipschitz;
+pub mod losses;
+pub mod prox;
+pub mod svd;
+
+pub use prox::{Regularizer, RegularizerKind};
+pub use svd::{OnlineSvd, Svd};

@@ -1,0 +1,427 @@
+//! Singular value decomposition, from scratch.
+//!
+//! Two implementations, mirroring §IV.A of the paper:
+//!
+//! * [`Svd::jacobi`] — one-sided Jacobi: numerically robust, exact to
+//!   machine precision, O(sweeps · m · n²). The model matrix is `d × T`
+//!   with `T ≤ ~139`, so this is cheap and is the default backward step.
+//! * [`OnlineSvd`] — Brand-style rank-1 column update ("online SVD" in the
+//!   paper): after a task node replaces one column of `W`, the factorization
+//!   is updated in O((d + T) k + k³) instead of recomputed, where `k` is the
+//!   retained rank. Exposed as an ablation (`--online-svd`) and benchmarked
+//!   in the perf pass.
+
+use crate::linalg::{dot, nrm2, Mat};
+
+/// Thin SVD `A = U Σ Vᵀ` with `U: m×k`, `Σ: k`, `V: n×k`, `k = min(m,n)`.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub sigma: Vec<f64>,
+    pub v: Mat,
+}
+
+impl Svd {
+    /// One-sided Jacobi SVD.
+    ///
+    /// Orthogonalizes pairs of columns of a working copy of `A` with Givens
+    /// rotations, accumulating them into `V`; on convergence the column
+    /// norms are the singular values and the normalized columns are `U`.
+    /// For `m < n` the transpose is factored and the roles of `U`/`V` swap.
+    pub fn jacobi(a: &Mat) -> Svd {
+        if a.rows() < a.cols() {
+            let t = Self::jacobi(&a.transpose());
+            return Svd { u: t.v, sigma: t.sigma, v: t.u };
+        }
+        let m = a.rows();
+        let n = a.cols();
+        let mut w = a.clone(); // working copy; columns get orthogonalized
+        let mut v = Mat::identity(n);
+
+        // Convergence: all |aᵢ·aⱼ| below eps * ‖aᵢ‖‖aⱼ‖.
+        let eps = 1e-14;
+        let max_sweeps = 60;
+        for _ in 0..max_sweeps {
+            let mut off = 0.0f64;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    // 2x2 Gram block of columns i, j.
+                    let (ci, cj) = (w.col(i), w.col(j));
+                    let alpha = dot(ci, ci);
+                    let beta = dot(cj, cj);
+                    let gamma = dot(ci, cj);
+                    if alpha == 0.0 || beta == 0.0 {
+                        continue;
+                    }
+                    let denom = (alpha * beta).sqrt();
+                    off = off.max((gamma / denom).abs());
+                    if gamma.abs() <= eps * denom {
+                        continue;
+                    }
+                    // Jacobi rotation that annihilates the off-diagonal.
+                    let zeta = (beta - alpha) / (2.0 * gamma);
+                    let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = c * t;
+                    rotate_cols(&mut w, i, j, c, s);
+                    rotate_cols(&mut v, i, j, c, s);
+                }
+            }
+            if off <= eps {
+                break;
+            }
+        }
+
+        // Extract Σ and U; sort descending.
+        let mut order: Vec<usize> = (0..n).collect();
+        let norms: Vec<f64> = (0..n).map(|c| nrm2(w.col(c))).collect();
+        order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+        let mut u = Mat::zeros(m, n);
+        let mut sigma = vec![0.0; n];
+        let mut vs = Mat::zeros(n, n);
+        for (k, &c) in order.iter().enumerate() {
+            sigma[k] = norms[c];
+            if norms[c] > 0.0 {
+                let src = w.col(c).to_vec();
+                for (r, x) in src.iter().enumerate() {
+                    u.set(r, k, x / norms[c]);
+                }
+            }
+            vs.set_col(k, v.col(c));
+        }
+        Svd { u, sigma, v: vs }
+    }
+
+    /// Reconstruct `U Σ Vᵀ`.
+    pub fn reconstruct(&self) -> Mat {
+        let k = self.sigma.len();
+        let mut us = self.u.clone();
+        for i in 0..k {
+            for r in 0..us.rows() {
+                us.set(r, i, us.get(r, i) * self.sigma[i]);
+            }
+        }
+        us.matmul(&self.v.transpose())
+    }
+
+    /// Apply soft-thresholding to the spectrum and reconstruct:
+    /// `U (Σ − τ)₊ Vᵀ` — the SVT backward step of Eq. IV.2.
+    pub fn shrink_reconstruct(&self, tau: f64) -> Mat {
+        let k = self.sigma.len();
+        let mut us = self.u.clone();
+        for i in 0..k {
+            let s = (self.sigma[i] - tau).max(0.0);
+            for r in 0..us.rows() {
+                us.set(r, i, us.get(r, i) * s);
+            }
+        }
+        us.matmul(&self.v.transpose())
+    }
+
+    pub fn nuclear_norm(&self) -> f64 {
+        self.sigma.iter().sum()
+    }
+}
+
+fn rotate_cols(m: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
+    let rows = m.rows();
+    for r in 0..rows {
+        let a = m.get(r, i);
+        let b = m.get(r, j);
+        m.set(r, i, c * a - s * b);
+        m.set(r, j, s * a + c * b);
+    }
+}
+
+/// Incremental thin SVD with rank-1 **column replacement** updates
+/// (M. Brand, "Fast online SVD revisions", SDM 2003), as discussed for the
+/// high-`T` regime in §IV.A of the paper.
+///
+/// Maintains `A ≈ U diag(σ) Vᵀ`. Replacing column `j` with `a'` is the
+/// rank-1 update `A + (a' − a_j) e_jᵀ`, which reduces to re-diagonalizing a
+/// `(k+1) × (k+1)` core matrix — done here with the Jacobi SVD above.
+#[derive(Clone, Debug)]
+pub struct OnlineSvd {
+    pub u: Mat,          // m × k
+    pub sigma: Vec<f64>, // k
+    pub v: Mat,          // n × k
+}
+
+impl OnlineSvd {
+    /// Initialize from a full Jacobi factorization.
+    pub fn init(a: &Mat) -> OnlineSvd {
+        let s = Svd::jacobi(a);
+        OnlineSvd { u: s.u, sigma: s.sigma, v: s.v }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Replace column `j` of the implicitly-represented matrix with `new_col`.
+    pub fn replace_column(&mut self, j: usize, new_col: &[f64]) {
+        let m = self.u.rows();
+        let n = self.v.rows();
+        let k = self.sigma.len();
+        assert_eq!(new_col.len(), m);
+        assert!(j < n);
+
+        // Current column j: a_j = U diag(σ) (Vᵀ e_j).
+        let vrow: Vec<f64> = (0..k).map(|i| self.v.get(j, i)).collect();
+        let mut a_j = vec![0.0; m];
+        for i in 0..k {
+            let s = self.sigma[i] * vrow[i];
+            if s != 0.0 {
+                crate::linalg::axpy(s, self.u.col(i), &mut a_j);
+            }
+        }
+        // Rank-1 update vectors: A' = A + c e_jᵀ with c = new_col − a_j.
+        let c: Vec<f64> = new_col.iter().zip(&a_j).map(|(x, y)| x - y).collect();
+
+        // Project c on span(U): c = U p + r, r ⟂ U.
+        let p: Vec<f64> = (0..k).map(|i| dot(self.u.col(i), &c)).collect();
+        let mut r = c.clone();
+        for i in 0..k {
+            crate::linalg::axpy(-p[i], self.u.col(i), &mut r);
+        }
+        let r_norm = nrm2(&r);
+
+        // e_j is trivially in span basis extension for V: e_j = V q + s h,
+        // with q = Vᵀ e_j (= vrow), h unit ⟂ V.
+        let q = vrow.clone();
+        let mut h = vec![0.0; n];
+        h[j] = 1.0;
+        for i in 0..k {
+            crate::linalg::axpy(-q[i], self.v.col(i), &mut h);
+        }
+        let h_norm = nrm2(&h);
+
+        // Core matrix K = [diag(σ) 0; 0 0] + [p; r_norm] [q; h_norm]ᵀ of
+        // size (k+1)², then its small SVD.
+        let kk = k + 1;
+        let mut core = Mat::zeros(kk, kk);
+        for i in 0..k {
+            core.set(i, i, self.sigma[i]);
+        }
+        let pe: Vec<f64> = p.iter().copied().chain([r_norm]).collect();
+        let qe: Vec<f64> = q.iter().copied().chain([h_norm]).collect();
+        for a in 0..kk {
+            for b in 0..kk {
+                core.set(a, b, core.get(a, b) + pe[a] * qe[b]);
+            }
+        }
+        let cs = Svd::jacobi(&core);
+
+        // Extended bases.
+        let r_unit: Vec<f64> = if r_norm > 1e-300 {
+            r.iter().map(|x| x / r_norm).collect()
+        } else {
+            vec![0.0; m]
+        };
+        let h_unit: Vec<f64> = if h_norm > 1e-300 {
+            h.iter().map(|x| x / h_norm).collect()
+        } else {
+            vec![0.0; n]
+        };
+
+        // U' = [U r̂] · Uc,  V' = [V ĥ] · Vc; keep the top-k' = min(m, n, kk)
+        // columns (drop the trailing one if it carries ~zero energy).
+        let keep = kk.min(m).min(n);
+        let mut new_u = Mat::zeros(m, keep);
+        let mut new_v = Mat::zeros(n, keep);
+        let mut new_sigma = vec![0.0; keep];
+        for col in 0..keep {
+            new_sigma[col] = cs.sigma[col];
+            for r_i in 0..m {
+                let mut acc = r_unit[r_i] * cs.u.get(k, col);
+                for i in 0..k {
+                    acc += self.u.get(r_i, i) * cs.u.get(i, col);
+                }
+                new_u.set(r_i, col, acc);
+            }
+            for r_i in 0..n {
+                let mut acc = h_unit[r_i] * cs.v.get(k, col);
+                for i in 0..k {
+                    acc += self.v.get(r_i, i) * cs.v.get(i, col);
+                }
+                new_v.set(r_i, col, acc);
+            }
+        }
+        // Truncate numerically-dead trailing rank to keep k bounded by n.
+        let tol = new_sigma.first().copied().unwrap_or(0.0) * 1e-13;
+        let mut kept = new_sigma.iter().take_while(|s| **s > tol).count().max(1);
+        kept = kept.min(keep);
+        if kept < keep {
+            let mut tu = Mat::zeros(m, kept);
+            let mut tv = Mat::zeros(n, kept);
+            for c2 in 0..kept {
+                tu.set_col(c2, new_u.col(c2));
+                tv.set_col(c2, new_v.col(c2));
+            }
+            new_u = tu;
+            new_v = tv;
+            new_sigma.truncate(kept);
+        }
+        self.u = new_u;
+        self.v = new_v;
+        self.sigma = new_sigma;
+    }
+
+    pub fn reconstruct(&self) -> Mat {
+        Svd { u: self.u.clone(), sigma: self.sigma.clone(), v: self.v.clone() }.reconstruct()
+    }
+
+    pub fn shrink_reconstruct(&self, tau: f64) -> Mat {
+        Svd { u: self.u.clone(), sigma: self.sigma.clone(), v: self.v.clone() }
+            .shrink_reconstruct(tau)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn assert_mat_close(a: &Mat, b: &Mat, tol: f64) {
+        let d = a.max_abs_diff(b);
+        assert!(d < tol, "max diff {d} > {tol}");
+    }
+
+    fn check_orthonormal_cols(m: &Mat, tol: f64) {
+        for i in 0..m.cols() {
+            for j in i..m.cols() {
+                let d = dot(m.col(i), m.col(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < tol, "col {i}·{j} = {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_random_tall() {
+        let mut rng = Rng::new(10);
+        let a = Mat::randn(20, 6, &mut rng);
+        let s = Svd::jacobi(&a);
+        assert_mat_close(&s.reconstruct(), &a, 1e-10);
+        check_orthonormal_cols(&s.u, 1e-10);
+        check_orthonormal_cols(&s.v, 1e-10);
+    }
+
+    #[test]
+    fn svd_reconstructs_random_wide() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(5, 17, &mut rng);
+        let s = Svd::jacobi(&a);
+        assert_eq!(s.sigma.len(), 5);
+        assert_mat_close(&s.reconstruct(), &a, 1e-10);
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(12, 8, &mut rng);
+        let s = Svd::jacobi(&a);
+        for w in s.sigma.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(s.sigma.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn svd_of_diagonal_is_exact() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, &v) in [4.0, 1.0, 3.0, 2.0].iter().enumerate() {
+            a.set(i, i, v);
+        }
+        let s = Svd::jacobi(&a);
+        let want = [4.0, 3.0, 2.0, 1.0];
+        for (got, want) in s.sigma.iter().zip(want) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn svd_of_rank_deficient() {
+        let mut rng = Rng::new(13);
+        let b = Mat::randn(10, 2, &mut rng);
+        let c = Mat::randn(2, 7, &mut rng);
+        let a = b.matmul(&c); // rank 2
+        let s = Svd::jacobi(&a);
+        assert!(s.sigma[2] < 1e-10 * s.sigma[0]);
+        assert_mat_close(&s.reconstruct(), &a, 1e-9);
+    }
+
+    #[test]
+    fn svd_of_zero_matrix() {
+        let a = Mat::zeros(5, 3);
+        let s = Svd::jacobi(&a);
+        assert!(s.sigma.iter().all(|&x| x == 0.0));
+        assert_mat_close(&s.reconstruct(), &a, 1e-15);
+    }
+
+    #[test]
+    fn spectral_norm_matches_svd() {
+        let mut rng = Rng::new(14);
+        let a = Mat::randn(30, 9, &mut rng);
+        let s = Svd::jacobi(&a);
+        let p = a.spectral_norm(300, &mut rng);
+        assert!((s.sigma[0] - p).abs() / s.sigma[0] < 1e-4);
+    }
+
+    #[test]
+    fn shrink_reconstruct_thresholds_spectrum() {
+        let mut rng = Rng::new(15);
+        let a = Mat::randn(10, 5, &mut rng);
+        let s = Svd::jacobi(&a);
+        let tau = s.sigma[2]; // kill the bottom three
+        let out = s.shrink_reconstruct(tau);
+        let s2 = Svd::jacobi(&out);
+        for (i, sig) in s2.sigma.iter().enumerate() {
+            let want = (s.sigma[i] - tau).max(0.0);
+            assert!((sig - want).abs() < 1e-9, "σ{i}: {sig} vs {want}");
+        }
+    }
+
+    #[test]
+    fn online_svd_matches_full_after_column_replacement() {
+        let mut rng = Rng::new(16);
+        let mut a = Mat::randn(15, 6, &mut rng);
+        let mut osvd = OnlineSvd::init(&a);
+        for step in 0..10 {
+            let j = step % 6;
+            let col = rng.normal_vec(15);
+            a.set_col(j, &col);
+            osvd.replace_column(j, &col);
+            assert_mat_close(&osvd.reconstruct(), &a, 1e-8);
+        }
+    }
+
+    #[test]
+    fn online_svd_singular_values_track_full() {
+        let mut rng = Rng::new(17);
+        let mut a = Mat::randn(12, 4, &mut rng);
+        let mut osvd = OnlineSvd::init(&a);
+        for j in 0..4 {
+            let col = rng.normal_vec(12);
+            a.set_col(j, &col);
+            osvd.replace_column(j, &col);
+        }
+        let full = Svd::jacobi(&a);
+        for (i, (o, f)) in osvd.sigma.iter().zip(&full.sigma).enumerate() {
+            assert!((o - f).abs() < 1e-8, "σ{i}: {o} vs {f}");
+        }
+    }
+
+    #[test]
+    fn online_svd_rank_stays_bounded() {
+        let mut rng = Rng::new(18);
+        let a = Mat::randn(10, 3, &mut rng);
+        let mut osvd = OnlineSvd::init(&a);
+        for step in 0..30 {
+            let col = rng.normal_vec(10);
+            osvd.replace_column(step % 3, &col);
+        }
+        assert!(osvd.rank() <= 3, "rank grew to {}", osvd.rank());
+    }
+}

@@ -1,0 +1,228 @@
+//! `artifacts/manifest.json` parsing and shape-bucket resolution.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Identity of one compiled artifact: op name + static shape.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpKey {
+    pub op: String,
+    pub n: usize,
+    pub d: usize,
+    pub t: usize,
+}
+
+impl std::fmt::Display for OpKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}(n={},d={},t={})", self.op, self.n, self.d, self.t)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub key: OpKey,
+    pub file: PathBuf,
+}
+
+/// Parsed artifact manifest with bucket lookup.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tile_n: usize,
+    pub tile_d: usize,
+    entries: BTreeMap<OpKey, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let tile_n = v
+            .get("tile_n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing tile_n"))?;
+        let tile_d = v.get("tile_d").and_then(Json::as_usize).unwrap_or(tile_n);
+        let mut entries = BTreeMap::new();
+        for e in v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let get_usize = |k: &str| {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("entry missing {k}"))
+            };
+            let key = OpKey {
+                op: e
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing op"))?
+                    .to_string(),
+                n: get_usize("n")?,
+                d: get_usize("d")?,
+                t: get_usize("t")?,
+            };
+            let file = dir.join(
+                e.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?,
+            );
+            if !file.exists() {
+                bail!("artifact {} listed in manifest but missing", file.display());
+            }
+            entries.insert(key.clone(), ManifestEntry { key, file });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), tile_n, tile_d, entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &OpKey) -> Option<&ManifestEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &OpKey> {
+        self.entries.keys()
+    }
+
+    /// Resolve the smallest compiled bucket for `op` with exact `d` and
+    /// `bucket_n >= n`. Returns the key the caller should pad to.
+    pub fn bucket_for(&self, op: &str, n: usize, d: usize) -> Result<OpKey> {
+        let mut best: Option<&OpKey> = None;
+        for key in self.entries.keys() {
+            if key.op == op && key.d == d && key.n >= n {
+                if best.map(|b| key.n < b.n).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+        }
+        best.cloned().ok_or_else(|| {
+            anyhow!(
+                "no artifact bucket for op={op} n>={n} d={d}; available: {:?}",
+                self.entries
+                    .keys()
+                    .filter(|k| k.op == op)
+                    .map(|k| (k.n, k.d))
+                    .collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Resolve a prox artifact for exact `d` and `bucket_t >= t`.
+    pub fn prox_bucket_for(&self, op: &str, d: usize, t: usize) -> Result<OpKey> {
+        let mut best: Option<&OpKey> = None;
+        for key in self.entries.keys() {
+            if key.op == op && key.d == d && key.t >= t {
+                if best.map(|b| key.t < b.t).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+        }
+        best.cloned()
+            .ok_or_else(|| anyhow!("no prox artifact for op={op} d={d} t>={t}"))
+    }
+}
+
+/// The default artifacts directory: `$AMTL_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("AMTL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, entries: &[(&str, usize, usize, usize)]) {
+        let mut items = Vec::new();
+        for (op, n, d, t) in entries {
+            let file = format!("{op}_n{n}_d{d}_t{t}.hlo.txt");
+            std::fs::File::create(dir.join(&file))
+                .unwrap()
+                .write_all(b"HloModule fake")
+                .unwrap();
+            items.push(format!(
+                r#"{{"op":"{op}","n":{n},"d":{d},"t":{t},"file":"{file}"}}"#
+            ));
+        }
+        let json = format!(
+            r#"{{"version":1,"tile_n":128,"tile_d":128,"entries":[{}]}}"#,
+            items.join(",")
+        );
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("amtl_manifest_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = tmpdir("load");
+        write_manifest(&dir, &[("lsq_step", 128, 50, 0), ("lsq_step", 256, 50, 0)]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.tile_n, 128);
+        let key = OpKey { op: "lsq_step".into(), n: 128, d: 50, t: 0 };
+        assert!(m.get(&key).is_some());
+    }
+
+    #[test]
+    fn bucket_picks_smallest_sufficient() {
+        let dir = tmpdir("bucket");
+        write_manifest(
+            &dir,
+            &[("lsq_step", 128, 50, 0), ("lsq_step", 256, 50, 0), ("lsq_step", 1024, 50, 0)],
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for("lsq_step", 100, 50).unwrap().n, 128);
+        assert_eq!(m.bucket_for("lsq_step", 128, 50).unwrap().n, 128);
+        assert_eq!(m.bucket_for("lsq_step", 129, 50).unwrap().n, 256);
+        assert_eq!(m.bucket_for("lsq_step", 300, 50).unwrap().n, 1024);
+        assert!(m.bucket_for("lsq_step", 2000, 50).is_err());
+        assert!(m.bucket_for("lsq_step", 100, 51).is_err());
+        assert!(m.bucket_for("nope", 100, 50).is_err());
+    }
+
+    #[test]
+    fn prox_bucket_by_t() {
+        let dir = tmpdir("prox");
+        write_manifest(&dir, &[("prox_l21", 0, 128, 8), ("prox_l21", 0, 128, 32)]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.prox_bucket_for("prox_l21", 128, 5).unwrap().t, 8);
+        assert_eq!(m.prox_bucket_for("prox_l21", 128, 9).unwrap().t, 32);
+        assert!(m.prox_bucket_for("prox_l21", 128, 33).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_file_is_an_error() {
+        let dir = tmpdir("missing");
+        write_manifest(&dir, &[("lsq_step", 128, 50, 0)]);
+        std::fs::remove_file(dir.join("lsq_step_n128_d50_t0.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = tmpdir("nomanifest");
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

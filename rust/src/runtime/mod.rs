@@ -1,0 +1,32 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them from the coordinator's hot path. Python is never
+//! involved at runtime — the HLO text is compiled by the in-process XLA CPU
+//! client (`xla` crate / xla_extension PJRT).
+//!
+//! Architecture:
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json`, resolves shape
+//!   buckets (`n` rounded up to a compiled bucket for the task's `d`).
+//! * [`pool`] — a pool of **executor threads**, each owning its own
+//!   `PjRtClient` and executable cache (the `xla` crate's client is
+//!   `Rc`-based and not `Send`; per-thread clients give real parallelism
+//!   with zero unsafe). Static per-task inputs (X, y, mask) are uploaded
+//!   once per executor and cached **device-resident**; only `w` and `η`
+//!   cross the host boundary per step — exactly the paper's communication
+//!   pattern (models move, data does not).
+//! * [`task_compute`] — the [`TaskCompute`] abstraction the coordinator
+//!   calls: a PJRT-backed implementation (pads task data to the bucket) and
+//!   a pure-rust native implementation (oracle / fallback when artifacts
+//!   are absent), cross-checked in tests.
+
+pub mod manifest;
+pub mod pool;
+pub mod prox_compute;
+pub mod task_compute;
+pub mod tensor;
+
+pub use manifest::{Manifest, OpKey};
+pub use pool::{ComputePool, PoolConfig};
+pub use prox_compute::PjrtL21Prox;
+pub use task_compute::{make_task_computes, Engine, NativeTaskCompute, TaskCompute};
+pub use tensor::HostTensor;

@@ -1,0 +1,254 @@
+//! Executor pool: the compute plane of the runtime.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so executables
+//! cannot be shared across threads. Instead, the pool spawns `executors`
+//! threads, each of which creates **its own** PJRT CPU client and lazily
+//! compiles artifacts on first use (cached per `OpKey`). Coordinator threads
+//! submit [`Request`]s over a channel and block on a rendezvous reply.
+//!
+//! Static per-task inputs (the task's `X`, `y`, `mask`) are identified by a
+//! `static_id` and uploaded to device memory **once per executor**, then
+//! referenced by `execute_b` on every subsequent call — only the model
+//! vector `w` and scalar `η` move per step, mirroring the paper's
+//! "models move, data stays" communication pattern.
+
+use super::manifest::{Manifest, OpKey};
+use super::tensor::HostTensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// How each entry-parameter of the artifact is supplied.
+#[derive(Clone, Debug)]
+pub enum InputArg {
+    /// Index into the request's static input set (device-cached).
+    Static(usize),
+    /// Uploaded fresh on every call (e.g. `w`, `η`).
+    Dyn(HostTensor),
+}
+
+struct Request {
+    key: OpKey,
+    /// Unique id of the static input set (device-buffer cache key).
+    static_id: u64,
+    static_inputs: Arc<Vec<HostTensor>>,
+    args: Vec<InputArg>,
+    resp: mpsc::SyncSender<Result<Vec<HostTensor>>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Number of executor threads (PJRT clients).
+    pub executors: usize,
+    /// Directory containing `manifest.json` + HLO artifacts.
+    pub artifacts_dir: std::path::PathBuf,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        let executors = std::thread::available_parallelism()
+            .map(|p| p.get().clamp(1, 4))
+            .unwrap_or(2);
+        PoolConfig { executors, artifacts_dir: super::manifest::default_dir() }
+    }
+}
+
+/// Handle to the executor pool. Cloneable; dropping the last handle shuts
+/// the executors down.
+#[derive(Clone)]
+pub struct ComputePool {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<Manifest>,
+    inner: Arc<PoolInner>,
+}
+
+struct PoolInner {
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+static NEXT_STATIC_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate a fresh id for a static input set.
+pub fn new_static_id() -> u64 {
+    NEXT_STATIC_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+impl ComputePool {
+    pub fn new(config: PoolConfig) -> Result<ComputePool> {
+        let manifest = Arc::new(Manifest::load(&config.artifacts_dir)?);
+        Self::with_manifest(config, manifest)
+    }
+
+    pub fn with_manifest(config: PoolConfig, manifest: Arc<Manifest>) -> Result<ComputePool> {
+        assert!(config.executors >= 1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for i in 0..config.executors {
+            let rx = Arc::clone(&rx);
+            let manifest = Arc::clone(&manifest);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pjrt-exec-{i}"))
+                    .spawn(move || executor_loop(rx, manifest))
+                    .context("spawning executor")?,
+            );
+        }
+        Ok(ComputePool {
+            tx,
+            manifest,
+            inner: Arc::new(PoolInner { handles: Mutex::new(handles) }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `key`. `args` lists every entry parameter in order;
+    /// `Static(i)` entries resolve into `static_inputs[i]` (device-cached
+    /// under `static_id`). Blocks until the result is ready.
+    pub fn execute(
+        &self,
+        key: &OpKey,
+        static_id: u64,
+        static_inputs: Arc<Vec<HostTensor>>,
+        args: Vec<InputArg>,
+    ) -> Result<Vec<HostTensor>> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request {
+                key: key.clone(),
+                static_id,
+                static_inputs,
+                args,
+                resp: resp_tx,
+            })
+            .map_err(|_| anyhow!("compute pool is shut down"))?;
+        resp_rx
+            .recv()
+            .map_err(|_| anyhow!("executor dropped the request (thread died?)"))?
+    }
+
+    /// Wait for all executor threads to exit (after the last sender drops).
+    pub fn join(&self) {
+        let mut handles = self.inner.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One executor: owns a PJRT client, an executable cache and a device-
+/// resident static-input cache. Exits when the request channel closes.
+fn executor_loop(rx: Arc<Mutex<mpsc::Receiver<Request>>>, manifest: Arc<Manifest>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("executor: failed to create PJRT client: {e}");
+            return;
+        }
+    };
+    let mut executables: HashMap<OpKey, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut static_buffers: HashMap<u64, Vec<xla::PjRtBuffer>> = HashMap::new();
+
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all senders dropped: shut down
+            }
+        };
+        let result = serve(&client, &manifest, &mut executables, &mut static_buffers, &req);
+        let _ = req.resp.send(result);
+    }
+}
+
+fn serve(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    executables: &mut HashMap<OpKey, xla::PjRtLoadedExecutable>,
+    static_buffers: &mut HashMap<u64, Vec<xla::PjRtBuffer>>,
+    req: &Request,
+) -> Result<Vec<HostTensor>> {
+    // 1. Executable (compile HLO text on first use).
+    if !executables.contains_key(&req.key) {
+        let entry = manifest
+            .get(&req.key)
+            .ok_or_else(|| anyhow!("no artifact for {}", req.key))?;
+        let path = entry
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", req.key))?;
+        executables.insert(req.key.clone(), exe);
+    }
+    let exe = &executables[&req.key];
+
+    // 2. Static inputs: upload once, reuse device buffers.
+    if !static_buffers.contains_key(&req.static_id) {
+        let bufs = req
+            .static_inputs
+            .iter()
+            .map(|t| upload(client, t))
+            .collect::<Result<Vec<_>>>()?;
+        static_buffers.insert(req.static_id, bufs);
+    }
+
+    // 3. Assemble the argument list in entry-parameter order.
+    let statics = &static_buffers[&req.static_id];
+    let mut dyn_bufs: Vec<xla::PjRtBuffer> = Vec::new();
+    // Two passes: upload dynamics first (borrow rules), then build refs.
+    for arg in &req.args {
+        if let InputArg::Dyn(t) = arg {
+            dyn_bufs.push(upload(client, t)?);
+        }
+    }
+    let mut dyn_iter = dyn_bufs.iter();
+    let mut ordered: Vec<&xla::PjRtBuffer> = Vec::with_capacity(req.args.len());
+    for arg in &req.args {
+        match arg {
+            InputArg::Static(i) => ordered.push(
+                statics
+                    .get(*i)
+                    .ok_or_else(|| anyhow!("static index {i} out of range"))?,
+            ),
+            InputArg::Dyn(_) => ordered.push(dyn_iter.next().unwrap()),
+        }
+    }
+
+    // 4. Run. Artifacts are lowered with return_tuple=True: one tuple output.
+    let outputs = exe
+        .execute_b(&ordered)
+        .map_err(|e| anyhow!("executing {}: {e}", req.key))?;
+    let lit = outputs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result of {}: {e}", req.key))?;
+    let parts = lit.to_tuple().map_err(|e| anyhow!("untupling: {e}"))?;
+    parts
+        .into_iter()
+        .map(|p| {
+            let shape = p
+                .array_shape()
+                .map_err(|e| anyhow!("output shape: {e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&x| x as usize).collect();
+            let data = p.to_vec::<f32>().map_err(|e| anyhow!("output data: {e}"))?;
+            Ok(HostTensor::new(dims, data))
+        })
+        .collect()
+}
+
+fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+        .map_err(|e| anyhow!("uploading tensor {:?}: {e}", t.shape))
+}

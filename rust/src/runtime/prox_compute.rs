@@ -1,0 +1,104 @@
+//! Server-side PJRT prox: runs the `prox_l21` Pallas artifact for the
+//! ℓ2,1 backward step.
+//!
+//! The ℓ2,1 prox is the one MTL backward step that *is* expressible as an
+//! L1 kernel (row-separable — unlike the nuclear-norm SVT, whose SVD can't
+//! lower to executable HLO here, see DESIGN.md). With this enabled the
+//! **entire** AMTL data path — forward steps at the task nodes *and* the
+//! backward step at the central server — executes through AOT-compiled
+//! Pallas kernels.
+//!
+//! Shape contract: artifacts exist per `(d, t_bucket)`; `W` is padded with
+//! zero columns up to the bucket (padding is exact for row norms: see the
+//! kernel's docstring and `test_padded_cols_are_exact` in pytest).
+
+use super::manifest::OpKey;
+use super::pool::{new_static_id, ComputePool, InputArg};
+use super::tensor::HostTensor;
+use crate::linalg::Mat;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct PjrtL21Prox {
+    pool: ComputePool,
+    key: OpKey,
+    d: usize,
+    t: usize,
+    static_id: u64,
+}
+
+impl PjrtL21Prox {
+    /// Resolve the `(d, t)` bucket; errors if no artifact covers it.
+    pub fn new(pool: &ComputePool, d: usize, t: usize) -> Result<PjrtL21Prox> {
+        let key = pool.manifest().prox_bucket_for("prox_l21", d, t)?;
+        Ok(PjrtL21Prox {
+            pool: pool.clone(),
+            key,
+            d,
+            t,
+            static_id: new_static_id(),
+        })
+    }
+
+    pub fn bucket(&self) -> &OpKey {
+        &self.key
+    }
+
+    /// `W ← prox_{τ‖·‖2,1}(W)` via the artifact.
+    pub fn apply(&self, w: &mut Mat, tau: f64) -> Result<()> {
+        debug_assert_eq!(w.rows(), self.d);
+        debug_assert_eq!(w.cols(), self.t);
+        let bt = self.key.t;
+        // Artifact layout is row-major (d, bucket_t); Mat is column-major.
+        let mut data = vec![0.0f32; self.d * bt];
+        for c in 0..self.t {
+            let col = w.col(c);
+            for r in 0..self.d {
+                data[r * bt + c] = col[r] as f32;
+            }
+        }
+        let args = vec![
+            InputArg::Dyn(HostTensor::new(vec![self.d, bt], data)),
+            InputArg::Dyn(HostTensor::scalar1(tau as f32)),
+        ];
+        let out = self
+            .pool
+            .execute(&self.key, self.static_id, Arc::new(vec![]), args)?;
+        anyhow::ensure!(out.len() == 1, "prox_l21 returns one tensor");
+        let res = &out[0];
+        for c in 0..self.t {
+            let col = w.col_mut(c);
+            for r in 0..self.d {
+                col[r] = res.data[r * bt + c] as f64;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs (they
+    // need built artifacts); here we only check the padding layout logic
+    // indirectly through the column-major/row-major round trip contract.
+    use crate::linalg::Mat;
+
+    #[test]
+    fn row_major_round_trip_layout() {
+        let d = 3;
+        let t = 2;
+        let bt = 4;
+        let m = Mat::from_fn(d, t, |r, c| (10 * r + c) as f64);
+        let mut data = vec![0.0f32; d * bt];
+        for c in 0..t {
+            for r in 0..d {
+                data[r * bt + c] = m.get(r, c) as f32;
+            }
+        }
+        // Padded columns stay zero; real entries land at [r*bt + c].
+        assert_eq!(data[0 * bt + 0], 0.0);
+        assert_eq!(data[1 * bt + 1], 11.0);
+        assert_eq!(data[2 * bt + 1], 21.0);
+        assert_eq!(data[0 * bt + 2], 0.0); // padding
+    }
+}

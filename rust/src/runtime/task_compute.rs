@@ -1,0 +1,295 @@
+//! [`TaskCompute`]: the per-task forward-step abstraction the coordinator
+//! calls. Two engines:
+//!
+//! * [`Engine::Pjrt`] — executes the AOT artifacts (`lsq_step` /
+//!   `logistic_step`) through the [`ComputePool`]; the task's data is padded
+//!   to the manifest's shape bucket once at construction and cached
+//!   device-resident by the executors.
+//! * [`Engine::Native`] — the pure-rust mirror in [`crate::optim::losses`];
+//!   used when artifacts are absent, for fast unit tests, and as a
+//!   cross-check oracle (integration tests assert PJRT ≡ native).
+
+use super::manifest::OpKey;
+use super::pool::{new_static_id, ComputePool, InputArg};
+use super::tensor::HostTensor;
+use crate::data::TaskDataset;
+use crate::optim::losses::{Loss, RowMat};
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Which compute engine backs the task nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Pjrt,
+    Native,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "pjrt" | "xla" => Some(Engine::Pjrt),
+            "native" | "rust" => Some(Engine::Native),
+            _ => None,
+        }
+    }
+}
+
+/// The forward step of Algorithm 1 for one task, plus objective evaluation.
+pub trait TaskCompute: Send {
+    /// `u = w − η ∇ℓ_t(w)`, returning `(u, ℓ_t(w))`.
+    fn step(&mut self, w: &[f64], eta: f64) -> Result<(Vec<f64>, f64)>;
+
+    /// Stochastic forward step (the paper's stated future work): the same
+    /// fused op evaluated over a random minibatch. The kernels' row-mask
+    /// input doubles as the batch selector — `mask[i] ∈ {0, 1/frac}` keeps
+    /// the gradient estimator unbiased with no new artifacts.
+    fn step_minibatch(&mut self, w: &[f64], eta: f64, frac: f64, rng: &mut Rng)
+        -> Result<(Vec<f64>, f64)>;
+
+    /// `ℓ_t(w)` only.
+    fn obj(&mut self, w: &[f64]) -> Result<f64> {
+        Ok(self.step(w, 0.0)?.1)
+    }
+
+    /// Feature dimension.
+    fn dim(&self) -> usize;
+}
+
+/// Sample an SGD mask over `n` real rows: each selected row carries weight
+/// `1/frac` (importance-corrected Bernoulli subsampling).
+fn sgd_mask(n: usize, frac: f64, rng: &mut Rng) -> Vec<f64> {
+    let frac = frac.clamp(1e-6, 1.0);
+    let w = 1.0 / frac;
+    (0..n).map(|_| if rng.bool(frac) { w } else { 0.0 }).collect()
+}
+
+// ---------------------------------------------------------------- native
+
+/// Pure-rust engine: mirrors the Pallas kernels exactly.
+pub struct NativeTaskCompute {
+    x: RowMat,
+    y: Vec<f64>,
+    mask: Vec<f64>,
+    loss: Loss,
+}
+
+impl NativeTaskCompute {
+    pub fn new(task: &TaskDataset) -> NativeTaskCompute {
+        NativeTaskCompute {
+            x: task.x.clone(),
+            y: task.y.clone(),
+            mask: vec![1.0; task.n()],
+            loss: task.loss,
+        }
+    }
+}
+
+impl TaskCompute for NativeTaskCompute {
+    fn step(&mut self, w: &[f64], eta: f64) -> Result<(Vec<f64>, f64)> {
+        Ok(self.loss.step(&self.x, &self.y, w, &self.mask, eta))
+    }
+
+    fn step_minibatch(
+        &mut self,
+        w: &[f64],
+        eta: f64,
+        frac: f64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f64>, f64)> {
+        let mask = sgd_mask(self.x.rows, frac, rng);
+        Ok(self.loss.step(&self.x, &self.y, w, &mask, eta))
+    }
+
+    fn dim(&self) -> usize {
+        self.x.cols
+    }
+}
+
+// ---------------------------------------------------------------- pjrt
+
+/// PJRT engine: one instance per task node, holding the padded static
+/// inputs and the resolved shape bucket.
+pub struct PjrtTaskCompute {
+    pool: ComputePool,
+    key: OpKey,
+    static_id: u64,
+    static_inputs: Arc<Vec<HostTensor>>,
+    d: usize,
+    /// Number of real (unpadded) rows — the SGD mask only samples these.
+    real_n: usize,
+}
+
+impl PjrtTaskCompute {
+    /// Pad `task`'s data to the smallest compiled bucket and register it as
+    /// a static input set (uploaded device-side once per executor).
+    pub fn new(pool: &ComputePool, task: &TaskDataset) -> Result<PjrtTaskCompute> {
+        let (n, d) = (task.n(), task.d());
+        let key = pool.manifest().bucket_for(task.loss.step_op(), n, d)?;
+        let bn = key.n;
+
+        // Zero-pad X row-wise; mask marks the real rows.
+        let mut x = vec![0.0f32; bn * d];
+        for i in 0..n {
+            for (j, &v) in task.x.row(i).iter().enumerate() {
+                x[i * d + j] = v as f32;
+            }
+        }
+        let mut y = vec![0.0f32; bn];
+        for (yi, &v) in y.iter_mut().zip(&task.y) {
+            *yi = v as f32;
+        }
+        let mut mask = vec![0.0f32; bn];
+        for m in mask.iter_mut().take(n) {
+            *m = 1.0;
+        }
+
+        let static_inputs = Arc::new(vec![
+            HostTensor::new(vec![bn, d], x),
+            HostTensor::new(vec![bn], y),
+            HostTensor::new(vec![bn], mask),
+        ]);
+        Ok(PjrtTaskCompute {
+            pool: pool.clone(),
+            key,
+            static_id: new_static_id(),
+            static_inputs,
+            d,
+            real_n: n,
+        })
+    }
+
+    pub fn bucket(&self) -> &OpKey {
+        &self.key
+    }
+}
+
+impl PjrtTaskCompute {
+    fn run(&mut self, args: Vec<InputArg>) -> Result<(Vec<f64>, f64)> {
+        let out = self.pool.execute(
+            &self.key,
+            self.static_id,
+            Arc::clone(&self.static_inputs),
+            args,
+        )?;
+        anyhow::ensure!(out.len() == 2, "expected (u, obj), got {} outputs", out.len());
+        let u = out[0].to_f64();
+        let obj = out[1].data[0] as f64;
+        Ok((u, obj))
+    }
+}
+
+impl TaskCompute for PjrtTaskCompute {
+    fn step(&mut self, w: &[f64], eta: f64) -> Result<(Vec<f64>, f64)> {
+        debug_assert_eq!(w.len(), self.d);
+        // Entry-parameter order of the *_step artifacts: x, y, w, mask, eta.
+        let args = vec![
+            InputArg::Static(0),
+            InputArg::Static(1),
+            InputArg::Dyn(HostTensor::from_f64(vec![self.d], w)),
+            InputArg::Static(2),
+            InputArg::Dyn(HostTensor::scalar1(eta as f32)),
+        ];
+        self.run(args)
+    }
+
+    fn step_minibatch(
+        &mut self,
+        w: &[f64],
+        eta: f64,
+        frac: f64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f64>, f64)> {
+        // The bucket's full mask is static input 2; here the mask becomes a
+        // dynamic input: 0 on padded rows, {0, 1/frac} on real rows.
+        let bn = self.key.n;
+        let mut mask = vec![0.0f64; bn];
+        let weighted = sgd_mask(self.real_n, frac, rng);
+        mask[..self.real_n].copy_from_slice(&weighted);
+        let args = vec![
+            InputArg::Static(0),
+            InputArg::Static(1),
+            InputArg::Dyn(HostTensor::from_f64(vec![self.d], w)),
+            InputArg::Dyn(HostTensor::from_f64(vec![bn], &mask)),
+            InputArg::Dyn(HostTensor::scalar1(eta as f32)),
+        ];
+        self.run(args)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
+/// Build one [`TaskCompute`] per task with the selected engine.
+pub fn make_task_computes(
+    engine: Engine,
+    pool: Option<&ComputePool>,
+    tasks: &[TaskDataset],
+) -> Result<Vec<Box<dyn TaskCompute>>> {
+    tasks
+        .iter()
+        .map(|t| -> Result<Box<dyn TaskCompute>> {
+            match engine {
+                Engine::Native => Ok(Box::new(NativeTaskCompute::new(t))),
+                Engine::Pjrt => {
+                    let pool =
+                        pool.ok_or_else(|| anyhow::anyhow!("pjrt engine requires a pool"))?;
+                    Ok(Box::new(PjrtTaskCompute::new(pool, t)?))
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::Rng;
+
+    #[test]
+    fn native_step_matches_losses_module() {
+        let mut rng = Rng::new(90);
+        let ds = synthetic::random_regression(1, 30, 7, &mut rng);
+        let mut tc = NativeTaskCompute::new(&ds.tasks[0]);
+        let w = rng.normal_vec(7);
+        let (u, obj) = tc.step(&w, 0.01).unwrap();
+        let (want_u, want_obj) =
+            Loss::Squared.step(&ds.tasks[0].x, &ds.tasks[0].y, &w, &vec![1.0; 30], 0.01);
+        assert_eq!(u, want_u);
+        assert_eq!(obj, want_obj);
+        assert_eq!(tc.dim(), 7);
+    }
+
+    #[test]
+    fn native_obj_is_step_at_zero_eta() {
+        let mut rng = Rng::new(91);
+        let ds = synthetic::random_regression(1, 20, 5, &mut rng);
+        let mut tc = NativeTaskCompute::new(&ds.tasks[0]);
+        let w = rng.normal_vec(5);
+        assert_eq!(tc.obj(&w).unwrap(), tc.step(&w, 0.0).unwrap().1);
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(Engine::parse("pjrt"), Some(Engine::Pjrt));
+        assert_eq!(Engine::parse("native"), Some(Engine::Native));
+        assert_eq!(Engine::parse("tpu"), None);
+    }
+
+    #[test]
+    fn make_native_computes_for_all_tasks() {
+        let mut rng = Rng::new(92);
+        let ds = synthetic::random_regression(4, 10, 3, &mut rng);
+        let tcs = make_task_computes(Engine::Native, None, &ds.tasks).unwrap();
+        assert_eq!(tcs.len(), 4);
+    }
+
+    #[test]
+    fn pjrt_engine_without_pool_errors() {
+        let mut rng = Rng::new(93);
+        let ds = synthetic::random_regression(1, 10, 3, &mut rng);
+        assert!(make_task_computes(Engine::Pjrt, None, &ds.tasks).is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! Host-side tensor: the hand-off format between coordinator threads and
+//! PJRT executor threads (f32, the artifact dtype).
+
+/// A dense row-major f32 tensor with explicit shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn scalar1(v: f32) -> HostTensor {
+        HostTensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> HostTensor {
+        HostTensor { shape: vec![data.len()], data }
+    }
+
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> HostTensor {
+        HostTensor::new(shape, data.iter().map(|&x| x as f32).collect())
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn new_rejects_mismatch() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn f64_roundtrip() {
+        let t = HostTensor::from_f64(vec![3], &[1.5, -2.0, 0.25]);
+        assert_eq!(t.to_f64(), vec![1.5, -2.0, 0.25]);
+    }
+
+    #[test]
+    fn constructors() {
+        assert_eq!(HostTensor::scalar1(2.0).shape, vec![1]);
+        assert_eq!(HostTensor::vec1(vec![1.0, 2.0]).shape, vec![2]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained substrates: PRNG, JSON, property testing, timing.
+//!
+//! The build is fully offline against a minimal vendored crate set (no
+//! `rand`, `serde_json`, `proptest` or `criterion`), so these are
+//! implemented from scratch — see DESIGN.md §Substitutions.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,244 @@
+//! A miniature property-based testing framework (no `proptest` is vendored
+//! in the offline crate set).
+//!
+//! Provides seeded case generation with failure reporting and greedy
+//! shrinking. Used throughout the test suite for coordinator invariants
+//! (routing, batching, state convergence) and numerical operators.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the xla rpath link flags)
+//! use amtl::util::proptest::forall;
+//! forall(
+//!     "sum is commutative",
+//!     100,
+//!     |g| {
+//!         let a = g.f64_in(-1e3, 1e3);
+//!         let b = g.f64_in(-1e3, 1e3);
+//!         (a, b)
+//!     },
+//!     |(a, b)| a + b == b + a,
+//! );
+//! ```
+
+use super::rng::Rng;
+
+/// Generation context handed to the case generator.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]: early cases are "small", later cases larger —
+    /// mirrors proptest's sizing so edge-ish cases come first.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        let span = (hi_incl - lo) as f64 * self.size;
+        lo + self.rng.below(span as u64 + 1) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn normal_vec(&mut self, len: usize) -> Vec<f64> {
+        self.rng.normal_vec(len)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// A value that knows how to propose smaller versions of itself.
+pub trait Shrink: Sized {
+    /// Candidate simplifications, in decreasing order of aggressiveness.
+    fn shrink_candidates(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        if *self != 0.0 {
+            c.push(0.0);
+            c.push(self / 2.0);
+            if self.fract() != 0.0 {
+                c.push(self.trunc());
+            }
+        }
+        c
+    }
+}
+
+impl Shrink for usize {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        if *self > 0 {
+            c.push(0);
+            c.push(self / 2);
+            c.push(self - 1);
+        }
+        c
+    }
+}
+
+impl<T: Clone> Shrink for Vec<T> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut c = Vec::new();
+        let n = self.len();
+        if n > 0 {
+            c.push(self[..n / 2].to_vec());
+            c.push(self[n / 2..].to_vec());
+            c.push(self[..n - 1].to_vec());
+        }
+        c
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut c: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        c.extend(self.1.shrink_candidates().into_iter().map(|b| (self.0.clone(), b)));
+        c
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone, C: Shrink + Clone> Shrink for (A, B, C) {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut c: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        c.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        c.extend(
+            self.2
+                .shrink_candidates()
+                .into_iter()
+                .map(|x| (self.0.clone(), self.1.clone(), x)),
+        );
+        c
+    }
+}
+
+/// Run `cases` random cases of `prop` over values built by `gen`.
+/// Panics with the failing seed and (shrunk) value on the first failure.
+pub fn forall<T, G, P>(name: &str, cases: u64, mut gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone + Shrink,
+    G: FnMut(&mut Gen) -> T,
+    P: Fn(&T) -> bool,
+{
+    let base_seed = 0xA3D1_u64 ^ fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen { rng: Rng::new(seed), size: ((case + 1) as f64 / cases as f64).min(1.0) };
+        let value = gen(&mut g);
+        if !prop(&value) {
+            let shrunk = shrink_loop(value.clone(), &prop);
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x})\n  original: {value:?}\n  shrunk:   {shrunk:?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly take the first candidate that still fails.
+fn shrink_loop<T: Clone + Shrink, P: Fn(&T) -> bool>(mut value: T, prop: &P) -> T {
+    'outer: for _ in 0..200 {
+        for cand in value.shrink_candidates() {
+            if !prop(&cand) {
+                value = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    value
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("abs is nonneg", 200, |g| g.f64_in(-100.0, 100.0), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("always fails", 10, |g| g.f64_in(0.0, 1.0), |_| false);
+    }
+
+    #[test]
+    fn shrinking_reaches_small_counterexample() {
+        // x > 50 fails for large x; shrinker should descend toward ~50..0.
+        let shrunk = shrink_loop(1000.0f64, &|x: &f64| *x <= 50.0);
+        // 1000 -> 0 passes (0<=50) so first failing candidate chain: 1000->500->250->125->62.5->...
+        assert!(shrunk <= 125.0, "shrunk to {shrunk}");
+    }
+
+    #[test]
+    fn vec_shrink_produces_smaller_vecs() {
+        let v: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        for c in v.shrink_candidates() {
+            assert!(c.len() < v.len());
+        }
+    }
+
+    #[test]
+    fn sizes_grow_over_cases() {
+        let mut max_early = 0usize;
+        let mut max_late = 0usize;
+        forall(
+            "size growth probe",
+            100,
+            |g| {
+                let v = g.usize_in(0, 1000);
+                if g.size < 0.3 {
+                    max_early = max_early.max(v);
+                } else {
+                    max_late = max_late.max(v);
+                }
+                v
+            },
+            |_| true,
+        );
+        assert!(max_late >= max_early);
+    }
+}

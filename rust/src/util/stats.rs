@@ -1,0 +1,106 @@
+//! Timing + summary statistics for the bench harness (criterion is not in
+//! the vendored crate set; the bench binaries use these helpers with
+//! warmup/repeat protocols).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a sample of measurements.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+}
+
+/// Time a closure once, returning (result, elapsed).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Bench protocol: `warmup` unmeasured runs, then `reps` measured runs.
+pub fn bench_secs(warmup: usize, reps: usize, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Summary::from(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_sample() {
+        let s = Summary::from(&[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!((s.min, s.max), (2.0, 2.0));
+    }
+
+    #[test]
+    fn summary_median_odd_even() {
+        assert_eq!(Summary::from(&[3.0, 1.0, 2.0]).median, 2.0);
+        assert_eq!(Summary::from(&[4.0, 1.0, 2.0, 3.0]).median, 2.5);
+    }
+
+    #[test]
+    fn summary_empty_is_default() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn bench_runs_expected_reps() {
+        let mut count = 0;
+        let s = bench_secs(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_result() {
+        let (v, d) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,389 @@
+//! Integration tests over the coordinator: AMTL/SMTL end-to-end behaviour,
+//! straggler robustness, heterogeneous losses, failure modes, and the
+//! dynamic step size. All on the native engine (fast, deterministic) —
+//! PJRT equivalence is covered by `integration_runtime.rs`.
+
+use amtl::coordinator::step_size::KmSchedule;
+use amtl::coordinator::{run_amtl, run_smtl, AmtlConfig, MtlProblem, SmtlConfig};
+use amtl::data::{public, synthetic};
+use amtl::experiments::{run_amtl_once, run_smtl_once, ExpConfig};
+use amtl::net::DelayModel;
+use amtl::optim::prox::RegularizerKind;
+use amtl::runtime::Engine;
+use amtl::util::Rng;
+use std::time::Duration;
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+// ---------------------------------------------------------------- timing
+
+#[test]
+fn amtl_beats_smtl_under_delays() {
+    // The paper's headline claim, at miniature scale: same network, same
+    // iteration budget, AMTL finishes first.
+    let p = lowrank_problem(200, 6, 30, 8, 0.3);
+    let cfg = ExpConfig {
+        iters: 5,
+        offset_units: 2.0,
+        time_scale: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let a = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+    let s = run_smtl_once(&p, Engine::Native, None, &cfg).unwrap();
+    assert!(
+        a.wall_time < s.wall_time,
+        "AMTL {:?} should beat SMTL {:?}",
+        a.wall_time,
+        s.wall_time
+    );
+}
+
+#[test]
+fn one_straggler_does_not_stall_amtl() {
+    // One node is 30x slower than the rest; in AMTL the fast nodes finish
+    // their budget without waiting on it.
+    let p = lowrank_problem(202, 5, 20, 6, 0.3);
+    let fast = DelayModel::OffsetJitter {
+        offset: Duration::from_millis(1),
+        jitter: Duration::ZERO,
+    };
+    let slow = DelayModel::OffsetJitter {
+        offset: Duration::from_millis(30),
+        jitter: Duration::ZERO,
+    };
+    let cfg = AmtlConfig {
+        iters_per_node: 5,
+        delay: DelayModel::PerNode {
+            per_node: vec![
+                Box::new(slow),
+                Box::new(fast.clone()),
+                Box::new(fast.clone()),
+                Box::new(fast.clone()),
+                Box::new(fast),
+            ],
+        },
+        ..Default::default()
+    };
+    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    // Straggler: 5 × 30ms = 150ms; wall ≈ straggler's own budget, not T× it.
+    assert!(r.wall_time < Duration::from_millis(400), "wall {:?}", r.wall_time);
+    assert_eq!(r.updates, 25);
+}
+
+// ------------------------------------------------------------ correctness
+
+#[test]
+fn amtl_and_smtl_agree_with_centralized_fista() {
+    let p = lowrank_problem(203, 5, 60, 8, 0.5);
+    let masks: Vec<Vec<f64>> = p.dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
+    let tasks: Vec<amtl::optim::fista::TaskData> = p
+        .dataset
+        .tasks
+        .iter()
+        .zip(&masks)
+        .map(|(t, m)| amtl::optim::fista::TaskData { x: &t.x, y: &t.y, mask: m, loss: t.loss })
+        .collect();
+    let mut reg = p.regularizer();
+    let f_star = *amtl::optim::fista::fista(&tasks, &mut reg, p.l_max, 3000, 1e-12)
+        .history
+        .last()
+        .unwrap();
+
+    let cfg = ExpConfig { iters: 500, eta_k: 0.9, ..Default::default() };
+    let fa = p.objective(&run_amtl_once(&p, Engine::Native, None, &cfg).unwrap().w_final);
+    let fs = p.objective(&run_smtl_once(&p, Engine::Native, None, &cfg).unwrap().w_final);
+    assert!(fa <= f_star * 1.03 + 1e-6, "AMTL {fa} vs F* {f_star}");
+    assert!(fs <= f_star * 1.03 + 1e-6, "SMTL {fs} vs F* {f_star}");
+}
+
+#[test]
+fn nuclear_coupling_beats_single_task_learning_on_lowrank_family() {
+    // Knowledge transfer: with few samples per task and shared structure,
+    // the coupled solution recovers the planted models better than
+    // decoupled per-task fits.
+    let mut rng = Rng::new(204);
+    // 15 samples per task in d=20 — underdetermined per task.
+    let train = synthetic::lowrank_regression(&[15; 8], 20, 2, 0.2, &mut rng);
+    let w_true = train.w_true.clone().unwrap();
+
+    let mtl = MtlProblem::new(train.clone(), RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+    let mut stl = MtlProblem::new(train, RegularizerKind::None, 0.0, 0.5, &mut rng);
+    stl.eta = mtl.eta;
+
+    let cfg = ExpConfig { iters: 300, eta_k: 0.9, ..Default::default() };
+    let w_mtl = run_amtl_once(&mtl, Engine::Native, None, &cfg).unwrap().w_final;
+    let w_stl = run_amtl_once(&stl, Engine::Native, None, &cfg).unwrap().w_final;
+
+    let err = |w: &amtl::linalg::Mat| w.add_scaled(-1.0, &w_true).frobenius_norm();
+    let e_mtl = err(&w_mtl);
+    let e_stl = err(&w_stl);
+    assert!(
+        e_mtl < e_stl,
+        "MTL recovery {e_mtl} should beat STL {e_stl} in the scarce-data regime"
+    );
+}
+
+#[test]
+fn l21_l1_and_elasticnet_formulations_also_converge() {
+    // The framework covers the MALSAR-style formulations, not just nuclear.
+    for kind in [RegularizerKind::L21, RegularizerKind::ElasticNet, RegularizerKind::L1] {
+        let mut rng = Rng::new(205);
+        let ds = synthetic::lowrank_regression(&[40; 4], 10, 2, 0.1, &mut rng);
+        let p = MtlProblem::new(ds, kind, 0.3, 0.5, &mut rng);
+        let cfg = ExpConfig { iters: 200, eta_k: 0.9, ..Default::default() };
+        let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+        let f0 = p.objective(&amtl::linalg::Mat::zeros(10, 4));
+        let f1 = p.objective(&r.w_final);
+        assert!(f1 < 0.3 * f0, "{kind:?}: {f0} -> {f1}");
+    }
+}
+
+#[test]
+fn logistic_tasks_converge_too() {
+    let mut rng = Rng::new(206);
+    let ds = synthetic::lowrank_classification(&[80; 4], 10, 2, &mut rng);
+    let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.1, 0.5, &mut rng);
+    let cfg = ExpConfig { iters: 300, eta_k: 0.9, ..Default::default() };
+    let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+    let f0 = p.objective(&amtl::linalg::Mat::zeros(10, 4));
+    let f1 = p.objective(&r.w_final);
+    assert!(f1 < 0.8 * f0, "logistic: {f0} -> {f1}");
+}
+
+#[test]
+fn heterogeneous_losses_in_one_problem() {
+    // §III.A: "some tasks can be regression while the other tasks are
+    // classification."
+    let mut rng = Rng::new(207);
+    let mut ds = synthetic::lowrank_regression(&[40; 2], 8, 2, 0.1, &mut rng);
+    let cls = synthetic::lowrank_classification(&[40; 2], 8, 2, &mut rng);
+    ds.tasks.extend(cls.tasks);
+    ds.w_true = None;
+    let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng);
+    let cfg = ExpConfig { iters: 150, eta_k: 0.9, ..Default::default() };
+    let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+    let f0 = p.objective(&amtl::linalg::Mat::zeros(8, 4));
+    assert!(p.objective(&r.w_final) < f0);
+}
+
+// ------------------------------------------------------------ dynamic step
+
+#[test]
+fn dynamic_step_reaches_lower_objective_under_delay() {
+    // Tables IV–VI shape at miniature scale.
+    let run = |dynamic: bool| {
+        let p = lowrank_problem(208, 5, 50, 10, 0.5);
+        let cfg = ExpConfig {
+            iters: 10,
+            offset_units: 10.0,
+            time_scale: Duration::from_millis(2),
+            eta_k: 0.3,
+            dynamic_step: dynamic,
+            ..Default::default()
+        };
+        let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+        p.objective(&r.w_final)
+    };
+    let fixed = run(false);
+    let dynamic = run(true);
+    assert!(
+        dynamic < fixed,
+        "dynamic step {dynamic} should beat fixed {fixed} within 10 iterations"
+    );
+}
+
+// ---------------------------------------------------------- public datasets
+
+#[test]
+fn school_sim_full_run_is_stable() {
+    let mut rng = Rng::new(209);
+    let ds = public::by_name("school-small", &mut rng).unwrap();
+    let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+    let cfg = ExpConfig { iters: 20, eta_k: 0.5, ..Default::default() };
+    let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+    assert!(p.objective(&r.w_final).is_finite());
+    assert_eq!(r.updates, 20 * p.t() as u64);
+}
+
+// --------------------------------------------------------------- smtl misc
+
+#[test]
+fn smtl_trajectory_is_monotone_decreasing_for_safe_steps() {
+    let p = lowrank_problem(210, 4, 50, 8, 0.3);
+    let cfg = SmtlConfig {
+        iters: 40,
+        km: KmSchedule::fixed(0.9),
+        record_every: 4,
+        ..Default::default()
+    };
+    let r = run_smtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let objs = r.compute_objectives(|w| p.objective(w), |v| p.prox_map(v));
+    let mut violations = 0;
+    for w in objs.windows(2) {
+        if w[1].2 > w[0].2 * 1.001 {
+            violations += 1;
+        }
+    }
+    assert!(violations <= 1, "{violations} non-monotone steps");
+}
+
+#[test]
+fn zero_iteration_runs_are_clean() {
+    let p = lowrank_problem(211, 3, 10, 4, 0.1);
+    let cfg = AmtlConfig { iters_per_node: 0, ..Default::default() };
+    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    assert_eq!(r.updates, 0);
+    assert_eq!(r.v_final, amtl::linalg::Mat::zeros(4, 3));
+    let cfg = SmtlConfig { iters: 0, ..Default::default() };
+    let r = run_smtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    assert_eq!(r.updates, 0);
+}
+
+#[test]
+fn mismatched_compute_count_is_an_error() {
+    let p = lowrank_problem(212, 3, 10, 4, 0.1);
+    let mut computes = p.build_computes(Engine::Native, None).unwrap();
+    computes.pop();
+    assert!(run_amtl(&p, computes, &AmtlConfig::default()).is_err());
+}
+
+#[test]
+fn prox_every_tradeoff_preserves_convergence() {
+    // Batched backward steps (prox_every > 1) still converge to a similar
+    // objective — the knob trades staleness for server throughput (§III.C).
+    let p = lowrank_problem(213, 4, 40, 8, 0.3);
+    let f = |prox_every: u64| {
+        let cfg = ExpConfig { iters: 200, eta_k: 0.9, prox_every, ..Default::default() };
+        let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+        p.objective(&r.w_final)
+    };
+    let f1 = f(1);
+    let f4 = f(4);
+    assert!((f4 - f1).abs() / f1 < 0.05, "prox_every=4 {f4} vs =1 {f1}");
+}
+
+#[test]
+fn online_svd_ablation_converges_on_small_problem() {
+    let p = lowrank_problem(214, 3, 30, 6, 0.2);
+    let cfg = AmtlConfig {
+        iters_per_node: 100,
+        km: KmSchedule::fixed(0.9),
+        online_svd: true,
+        ..Default::default()
+    };
+    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let f0 = p.objective(&amtl::linalg::Mat::zeros(6, 3));
+    let f1 = p.objective(&r.w_final);
+    assert!(f1 < 0.2 * f0, "online-SVD run: {f0} -> {f1}");
+}
+
+// ------------------------------------------------------------ faults
+
+#[test]
+fn dropped_updates_are_counted_and_progress_continues() {
+    use amtl::net::FaultModel;
+    let p = lowrank_problem(215, 4, 40, 6, 0.3);
+    let cfg = AmtlConfig {
+        iters_per_node: 100,
+        km: KmSchedule::fixed(0.9),
+        faults: FaultModel::DropActivation { p: 0.3 },
+        ..Default::default()
+    };
+    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    assert!(r.dropped_updates > 50, "expected ~120 drops, got {}", r.dropped_updates);
+    assert_eq!(r.updates + r.dropped_updates, 400);
+    // Despite 30% loss, the run still converges substantially.
+    let f0 = p.objective(&amtl::linalg::Mat::zeros(6, 4));
+    assert!(p.objective(&r.w_final) < 0.2 * f0);
+}
+
+#[test]
+fn crashed_node_freezes_its_block_but_others_finish() {
+    use amtl::net::FaultModel;
+    let p = lowrank_problem(216, 4, 30, 6, 0.3);
+    let cfg = AmtlConfig {
+        iters_per_node: 50,
+        km: KmSchedule::fixed(0.9),
+        faults: FaultModel::CrashAfter { node: 2, after: 5 },
+        ..Default::default()
+    };
+    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    assert_eq!(r.crashed_nodes, vec![2]);
+    assert_eq!(r.updates_per_node[2], 5);
+    for t in [0usize, 1, 3] {
+        assert_eq!(r.updates_per_node[t], 50, "node {t} should finish its budget");
+    }
+    // The surviving blocks still optimize their tasks.
+    assert!(p.objective(&r.w_final).is_finite());
+}
+
+#[test]
+fn perf_counters_are_populated() {
+    let p = lowrank_problem(217, 3, 50, 8, 0.3);
+    let cfg = AmtlConfig { iters_per_node: 20, ..Default::default() };
+    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    assert!(r.compute_secs > 0.0, "forward-compute time must be measured");
+    assert!(r.backward_wait_secs > 0.0, "backward-wait time must be measured");
+    // Sanity: both are bounded by total wall × nodes.
+    let bound = r.wall_time.as_secs_f64() * 3.0;
+    assert!(r.compute_secs <= bound && r.backward_wait_secs <= bound);
+}
+
+// ------------------------------------------------------------- SGD variant
+
+#[test]
+fn sgd_forward_steps_converge() {
+    // The paper's future-work extension: stochastic forward steps. With an
+    // importance-corrected half-batch, AMTL still converges close to the
+    // full-batch objective.
+    let p = lowrank_problem(218, 4, 80, 8, 0.3);
+    let full_cfg = AmtlConfig {
+        iters_per_node: 150,
+        km: KmSchedule::fixed(0.9),
+        ..Default::default()
+    };
+    let sgd_cfg = AmtlConfig {
+        iters_per_node: 150,
+        km: KmSchedule::fixed(0.9),
+        sgd_fraction: Some(0.5),
+        ..Default::default()
+    };
+    let r_full = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &full_cfg).unwrap();
+    let r_sgd = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &sgd_cfg).unwrap();
+    let f_full = p.objective(&r_full.w_final);
+    let f_sgd = p.objective(&r_sgd.w_final);
+    let f0 = p.objective(&amtl::linalg::Mat::zeros(8, 4));
+    assert!(f_sgd < 0.1 * f0, "SGD run must still optimize: {f0} -> {f_sgd}");
+    assert!(
+        f_sgd < 3.0 * f_full.max(1e-3) + 1.0,
+        "SGD {f_sgd} should land near full-batch {f_full}"
+    );
+}
+
+#[test]
+fn sgd_minibatch_gradient_is_unbiased() {
+    // Averaging many minibatch steps approximates the full-batch step.
+    use amtl::runtime::{make_task_computes, TaskCompute};
+    let mut rng = Rng::new(219);
+    let ds = synthetic::lowrank_regression(&[200], 6, 2, 0.1, &mut rng);
+    let mut computes = make_task_computes(Engine::Native, None, &ds.tasks).unwrap();
+    let w = rng.normal_vec(6);
+    let eta = 1e-3;
+    let (u_full, _) = computes[0].step(&w, eta).unwrap();
+    let trials = 400;
+    let mut mean_u = vec![0.0; 6];
+    for _ in 0..trials {
+        let (u, _) = computes[0].step_minibatch(&w, eta, 0.25, &mut rng).unwrap();
+        for (m, ui) in mean_u.iter_mut().zip(&u) {
+            *m += ui / trials as f64;
+        }
+    }
+    for (m, f) in mean_u.iter().zip(&u_full) {
+        let scale = f.abs().max(0.1);
+        assert!((m - f).abs() / scale < 0.15, "mean {m} vs full {f}");
+    }
+}

@@ -1,0 +1,375 @@
+//! Integration tests over the PJRT runtime: artifact loading, execution,
+//! and PJRT ≡ native cross-checks.
+//!
+//! These require `artifacts/` to exist (run `make artifacts`); they are
+//! skipped gracefully otherwise so `cargo test` stays green on a fresh
+//! checkout.
+
+use amtl::data::synthetic;
+use amtl::runtime::{
+    make_task_computes, ComputePool, Engine, Manifest, PoolConfig, TaskCompute,
+};
+use amtl::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("AMTL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn pool(executors: usize) -> Option<ComputePool> {
+    let dir = artifacts_dir()?;
+    Some(ComputePool::new(PoolConfig { executors, artifacts_dir: dir }).expect("pool"))
+}
+
+#[test]
+fn manifest_loads_and_has_experiment_buckets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.len() >= 10, "expected a full artifact set, got {}", m.len());
+    assert_eq!(m.tile_n, 128);
+    // Fig 3 buckets.
+    assert!(m.bucket_for("lsq_step", 100, 50).is_ok());
+    assert!(m.bucket_for("lsq_step", 10000, 50).is_ok());
+    assert!(m.bucket_for("lsq_step", 100, 400).is_ok());
+    // Public dataset buckets.
+    assert!(m.bucket_for("lsq_step", 251, 28).is_ok());
+    assert!(m.bucket_for("logistic_step", 14702, 100).is_ok());
+    assert!(m.bucket_for("logistic_step", 10000, 10).is_ok());
+}
+
+#[test]
+fn pjrt_step_matches_native_step_lsq() {
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(500);
+    let ds = synthetic::lowrank_regression(&[100], 50, 3, 0.1, &mut rng);
+    let mut native = make_task_computes(Engine::Native, None, &ds.tasks).unwrap();
+    let mut pjrt = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+
+    for trial in 0..5 {
+        let w = rng.normal_vec(50);
+        let eta = 1e-3 * (trial as f64 + 1.0);
+        let (u_n, o_n) = native[0].step(&w, eta).unwrap();
+        let (u_p, o_p) = pjrt[0].step(&w, eta).unwrap();
+        assert_eq!(u_p.len(), 50);
+        let max_diff = u_n
+            .iter()
+            .zip(&u_p)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        // f32 artifact vs f64 native: tolerance scales with magnitudes.
+        let scale = u_n.iter().map(|x| x.abs()).fold(1.0f64, f64::max);
+        assert!(max_diff < 1e-3 * scale, "trial {trial}: diff {max_diff} scale {scale}");
+        assert!((o_n - o_p).abs() / o_n.max(1.0) < 1e-3, "obj {o_n} vs {o_p}");
+    }
+}
+
+#[test]
+fn pjrt_step_matches_native_step_logistic() {
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(501);
+    let ds = synthetic::lowrank_classification(&[100], 50, 3, &mut rng);
+    let mut native = make_task_computes(Engine::Native, None, &ds.tasks).unwrap();
+    let mut pjrt = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+
+    let w = rng.normal_vec(50);
+    let (u_n, o_n) = native[0].step(&w, 0.01).unwrap();
+    let (u_p, o_p) = pjrt[0].step(&w, 0.01).unwrap();
+    let max_diff = u_n
+        .iter()
+        .zip(&u_p)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-3, "diff {max_diff}");
+    assert!((o_n - o_p).abs() / o_n.max(1.0) < 1e-3);
+}
+
+#[test]
+fn pjrt_pads_odd_sizes_exactly() {
+    // n=77 pads to the 128 bucket; the mask must make padding invisible.
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(502);
+    let ds = synthetic::lowrank_regression(&[77], 50, 2, 0.1, &mut rng);
+    let mut native = make_task_computes(Engine::Native, None, &ds.tasks).unwrap();
+    let mut pjrt = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+    let w = rng.normal_vec(50);
+    let (u_n, o_n) = native[0].step(&w, 1e-3).unwrap();
+    let (u_p, o_p) = pjrt[0].step(&w, 1e-3).unwrap();
+    let max_diff = u_n
+        .iter()
+        .zip(&u_p)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-3, "diff {max_diff}");
+    assert!((o_n - o_p).abs() / o_n.max(1.0) < 1e-3);
+}
+
+#[test]
+fn pool_serves_concurrent_clients() {
+    let Some(pool) = pool(2) else { return };
+    let mut rng = Rng::new(503);
+    let ds = synthetic::lowrank_regression(&[100; 6], 50, 2, 0.1, &mut rng);
+    let computes = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+    let results: Vec<(Vec<f64>, f64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = computes
+            .into_iter()
+            .enumerate()
+            .map(|(t, mut c)| {
+                s.spawn(move || {
+                    let w = vec![0.1 * (t as f64 + 1.0); 50];
+                    let mut last = (vec![], 0.0);
+                    for _ in 0..10 {
+                        last = c.step(&w, 1e-3).unwrap();
+                    }
+                    last
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(results.len(), 6);
+    for (u, obj) in &results {
+        assert_eq!(u.len(), 50);
+        assert!(obj.is_finite() && *obj >= 0.0);
+    }
+}
+
+#[test]
+fn pjrt_amtl_run_matches_native_amtl_run() {
+    use amtl::coordinator::step_size::KmSchedule;
+    use amtl::coordinator::{run_amtl, AmtlConfig, MtlProblem};
+    use amtl::optim::prox::RegularizerKind;
+
+    let Some(pool) = pool(2) else { return };
+    let mut rng = Rng::new(504);
+    let ds = synthetic::lowrank_regression(&[100; 4], 50, 2, 0.1, &mut rng);
+    let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.3, 0.5, &mut rng);
+    let cfg = AmtlConfig {
+        iters_per_node: 30,
+        km: KmSchedule::fixed(0.9),
+        record_every: 1_000_000,
+        ..Default::default()
+    };
+    let r_native = run_amtl(
+        &problem,
+        problem.build_computes(Engine::Native, None).unwrap(),
+        &cfg,
+    )
+    .unwrap();
+    let r_pjrt = run_amtl(
+        &problem,
+        problem.build_computes(Engine::Pjrt, Some(&pool)).unwrap(),
+        &cfg,
+    )
+    .unwrap();
+    let f_native = problem.objective(&r_native.w_final);
+    let f_pjrt = problem.objective(&r_pjrt.w_final);
+    // Interleaving differs and PJRT is f32, but both must land at the same
+    // optimization basin.
+    assert!(
+        (f_native - f_pjrt).abs() / f_native.max(1e-9) < 0.05,
+        "native {f_native} vs pjrt {f_pjrt}"
+    );
+}
+
+#[test]
+fn static_data_uploaded_once_per_executor() {
+    // Repeated steps must not re-upload X: verify by timing asymmetry —
+    // the first call (compile + upload) is much slower than steady-state.
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(505);
+    let ds = synthetic::lowrank_regression(&[5000], 50, 2, 0.1, &mut rng);
+    let mut pjrt = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+    let w = rng.normal_vec(50);
+    let t0 = std::time::Instant::now();
+    pjrt[0].step(&w, 1e-4).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        pjrt[0].step(&w, 1e-4).unwrap();
+    }
+    let steady = t1.elapsed() / 5;
+    assert!(
+        steady < first,
+        "steady {steady:?} should beat cold {first:?} (compile+upload amortized)"
+    );
+}
+
+#[test]
+fn missing_bucket_is_a_clean_error() {
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(506);
+    // d=51 has no compiled artifact.
+    let ds = synthetic::lowrank_regression(&[100], 51, 2, 0.1, &mut rng);
+    let err = match make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks) {
+        Ok(_) => panic!("expected missing-bucket error"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no artifact bucket"), "{msg}");
+}
+
+#[test]
+fn pjrt_handles_tasks_larger_than_any_single_executor_cache_entry() {
+    // Arc-shared static inputs across two task computes with same data are
+    // still distinct static sets; both must work.
+    let Some(pool) = pool(2) else { return };
+    let mut rng = Rng::new(507);
+    let ds = synthetic::lowrank_regression(&[200, 300], 50, 2, 0.1, &mut rng);
+    let mut pjrt = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+    let w = rng.normal_vec(50);
+    for c in pjrt.iter_mut() {
+        let (u, obj) = c.step(&w, 1e-4).unwrap();
+        assert_eq!(u.len(), 50);
+        assert!(obj.is_finite());
+    }
+    drop(pjrt);
+    drop(pool);
+}
+
+#[test]
+fn pool_shutdown_is_clean() {
+    let Some(pool) = pool(2) else { return };
+    let p2 = pool.clone();
+    drop(pool);
+    // Last handle drop closes the channel; join must not hang.
+    let _ = Arc::new(());
+    drop(p2);
+}
+
+#[test]
+fn pjrt_l21_prox_matches_native() {
+    use amtl::coordinator::server::CentralServer;
+    use amtl::coordinator::state::SharedState;
+    use amtl::optim::prox::{prox_l21, Regularizer, RegularizerKind};
+
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(600);
+    // d=128 matches the prox_l21 artifact tile; T=5 pads to the t=8 bucket.
+    let m = amtl::linalg::Mat::randn(128, 5, &mut rng);
+    let state = std::sync::Arc::new(SharedState::new(&m));
+    let lambda = 0.8;
+    let eta = 0.25;
+    let server = CentralServer::new(
+        std::sync::Arc::clone(&state),
+        Regularizer::new(RegularizerKind::L21, lambda),
+        eta,
+    )
+    .with_pjrt_l21_prox(&pool)
+    .expect("l21 artifact bucket");
+    let got = server.prox_matrix();
+    let mut want = m.clone();
+    prox_l21(&mut want, eta * lambda);
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-5, "pjrt l21 prox diff {diff}");
+}
+
+#[test]
+fn pjrt_l21_prox_rejects_wrong_regularizer() {
+    use amtl::coordinator::server::CentralServer;
+    use amtl::coordinator::state::SharedState;
+    use amtl::optim::prox::{Regularizer, RegularizerKind};
+
+    let Some(pool) = pool(1) else { return };
+    let state = std::sync::Arc::new(SharedState::zeros(128, 4));
+    let server = CentralServer::new(
+        state,
+        Regularizer::new(RegularizerKind::Nuclear, 0.5),
+        0.1,
+    );
+    assert!(server.with_pjrt_l21_prox(&pool).is_err());
+}
+
+#[test]
+fn full_pjrt_l21_amtl_run() {
+    // The complete three-layer path on BOTH sides: forward steps and the
+    // server's backward step all run through Pallas artifacts.
+    use amtl::coordinator::server::CentralServer;
+    use amtl::coordinator::state::SharedState;
+    use amtl::coordinator::step_size::{KmSchedule, StepController};
+    use amtl::coordinator::worker::{run_worker, WorkerCtx};
+    use amtl::coordinator::metrics::Recorder;
+    use amtl::net::{DelayModel, FaultModel};
+    use amtl::optim::prox::{Regularizer, RegularizerKind};
+    use std::sync::Arc;
+
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(601);
+    let ds = synthetic::lowrank_regression(&[100; 4], 128, 3, 0.2, &mut rng);
+    let problem = amtl::coordinator::MtlProblem::new(
+        ds,
+        RegularizerKind::L21,
+        0.3,
+        0.5,
+        &mut rng,
+    );
+    let state = Arc::new(SharedState::zeros(128, 4));
+    let server = Arc::new(
+        CentralServer::new(
+            Arc::clone(&state),
+            Regularizer::new(RegularizerKind::L21, 0.3),
+            problem.eta,
+        )
+        .with_pjrt_l21_prox(&pool)
+        .unwrap(),
+    );
+    let controller = Arc::new(StepController::new(KmSchedule::fixed(0.9), false, 4, 5));
+    let recorder = Arc::new(Recorder::new(1_000_000));
+    let mut computes = problem.build_computes(Engine::Pjrt, Some(&pool)).unwrap();
+    std::thread::scope(|s| {
+        for (t, c) in computes.iter_mut().enumerate() {
+            let ctx = WorkerCtx {
+                t,
+                iters: 40,
+                server: Arc::clone(&server),
+                controller: Arc::clone(&controller),
+                delay: DelayModel::None,
+                faults: FaultModel::None,
+                sgd_fraction: None,
+                time_scale: std::time::Duration::from_millis(10),
+                recorder: Arc::clone(&recorder),
+                rng: Rng::new(700 + t as u64),
+            };
+            s.spawn(move || run_worker(ctx, c.as_mut()).unwrap());
+        }
+    });
+    let w = server.final_w();
+    let f0 = problem.objective(&amtl::linalg::Mat::zeros(128, 4));
+    let f1 = problem.objective(&w);
+    assert!(f1 < 0.3 * f0, "full-PJRT l21 run: {f0} -> {f1}");
+}
+
+#[test]
+fn pjrt_minibatch_step_matches_native_given_same_mask_statistics() {
+    // The PJRT dyn-mask path must produce the same estimator as native:
+    // with frac=1.0 the minibatch step IS the full step (weight 1/1).
+    let Some(pool) = pool(1) else { return };
+    let mut rng = Rng::new(602);
+    let ds = synthetic::lowrank_regression(&[100], 50, 2, 0.1, &mut rng);
+    let mut native = make_task_computes(Engine::Native, None, &ds.tasks).unwrap();
+    let mut pjrt = make_task_computes(Engine::Pjrt, Some(&pool), &ds.tasks).unwrap();
+    let w = rng.normal_vec(50);
+    let mut rng_a = Rng::new(603);
+    let mut rng_b = Rng::new(603);
+    let (u_n, o_n) = native[0].step_minibatch(&w, 1e-3, 1.0, &mut rng_a).unwrap();
+    let (u_p, o_p) = pjrt[0].step_minibatch(&w, 1e-3, 1.0, &mut rng_b).unwrap();
+    let max_diff = u_n
+        .iter()
+        .zip(&u_p)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_diff < 1e-3, "diff {max_diff}");
+    assert!((o_n - o_p).abs() / o_n.max(1.0) < 1e-3);
+    // And a genuinely stochastic PJRT step at frac=0.3 stays finite/sane.
+    let (u_s, o_s) = pjrt[0].step_minibatch(&w, 1e-3, 0.3, &mut rng_b).unwrap();
+    assert!(u_s.iter().all(|v| v.is_finite()));
+    assert!(o_s.is_finite() && o_s >= 0.0);
+}

@@ -1,0 +1,281 @@
+//! Property-based tests (via the in-tree `util::proptest` mini-framework)
+//! over the numerical operators and coordinator invariants that the AMTL
+//! convergence theory rests on.
+
+use amtl::coordinator::state::SharedState;
+use amtl::linalg::Mat;
+use amtl::optim::losses::{Loss, RowMat};
+use amtl::optim::prox::{prox_l21, Regularizer, RegularizerKind};
+use amtl::optim::svd::Svd;
+use amtl::util::proptest::forall;
+use amtl::util::Rng;
+
+fn mat_from(v: &[f64], rows: usize) -> Mat {
+    let cols = v.len() / rows;
+    Mat::from_fn(rows, cols, |r, c| v[c * rows + r])
+}
+
+// ----------------------------------------------------------------- SVD
+
+#[test]
+fn prop_svd_reconstructs() {
+    forall(
+        "jacobi svd reconstructs A",
+        40,
+        |g| {
+            let rows = g.usize_in(1, 12).max(1);
+            let cols = g.usize_in(1, 12).max(1);
+            (g.normal_vec(rows * cols), rows)
+        },
+        |(v, rows)| {
+            let a = mat_from(v, *rows);
+            let s = Svd::jacobi(&a);
+            s.reconstruct().max_abs_diff(&a) < 1e-8
+        },
+    );
+}
+
+#[test]
+fn prop_svd_nuclear_norm_bounds_frobenius() {
+    // ‖A‖_F ≤ ‖A‖_* ≤ √rank·‖A‖_F.
+    forall(
+        "nuclear vs frobenius",
+        40,
+        |g| {
+            let rows = g.usize_in(1, 10).max(1);
+            let cols = g.usize_in(1, 10).max(1);
+            (g.normal_vec(rows * cols), rows)
+        },
+        |(v, rows)| {
+            let a = mat_from(v, *rows);
+            let s = Svd::jacobi(&a);
+            let nuc = s.nuclear_norm();
+            let fro = a.frobenius_norm();
+            let k = s.sigma.len() as f64;
+            nuc >= fro - 1e-9 && nuc <= k.sqrt() * fro + 1e-9
+        },
+    );
+}
+
+#[test]
+fn prop_svt_reduces_nuclear_norm_by_at_most_k_tau() {
+    forall(
+        "svt shrinkage bound",
+        30,
+        |g| {
+            let rows = g.usize_in(2, 8).max(2);
+            (g.normal_vec(rows * 4), rows, g.f64_in(0.0, 2.0))
+        },
+        |(v, rows, tau)| {
+            let a = mat_from(v, *rows);
+            let before = Svd::jacobi(&a);
+            let after = Svd::jacobi(&before.shrink_reconstruct(*tau));
+            let want: f64 = before.sigma.iter().map(|s| (s - tau).max(0.0)).sum();
+            (after.nuclear_norm() - want).abs() < 1e-7
+        },
+    );
+}
+
+// ----------------------------------------------------------------- prox
+
+#[test]
+fn prop_prox_l21_output_rows_shrink() {
+    forall(
+        "l21 row norms shrink by exactly tau",
+        50,
+        |g| (g.normal_vec(24), g.f64_in(0.0, 3.0)),
+        |(v, tau)| {
+            let a = mat_from(v, 6);
+            let mut w = a.clone();
+            prox_l21(&mut w, *tau);
+            (0..6).all(|r| {
+                let before: f64 = (0..4).map(|c| a.get(r, c).powi(2)).sum::<f64>().sqrt();
+                let after: f64 = (0..4).map(|c| w.get(r, c).powi(2)).sum::<f64>().sqrt();
+                (after - (before - tau).max(0.0)).abs() < 1e-10
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_prox_is_idempotent_like_for_l1() {
+    // prox_τ(prox_τ(x)) shrinks again — but prox of the *same point* twice
+    // equals shrinking by 2τ for L1 (check the identity).
+    forall(
+        "double soft threshold = 2tau threshold",
+        50,
+        |g| (g.normal_vec(10), g.f64_in(0.0, 1.0)),
+        |(v, tau)| {
+            let a = mat_from(v, 5);
+            let mut twice = a.clone();
+            let mut reg = Regularizer::new(RegularizerKind::L1, 1.0);
+            reg.prox(&mut twice, *tau);
+            reg.prox(&mut twice, *tau);
+            let mut once = a.clone();
+            reg.prox(&mut once, 2.0 * tau);
+            twice.max_abs_diff(&once) < 1e-12
+        },
+    );
+}
+
+// --------------------------------------------------------------- losses
+
+#[test]
+fn prop_squared_gradient_is_linear_in_residual() {
+    // ∇ at w scaled toward the interpolator shrinks proportionally.
+    forall(
+        "grad linearity",
+        30,
+        |g| {
+            let n = g.usize_in(2, 20).max(2);
+            (g.normal_vec(n * 3), g.normal_vec(3))
+        },
+        |(xv, w_star)| {
+            let n = xv.len() / 3;
+            let mut x = RowMat::zeros(n, 3);
+            x.data.copy_from_slice(xv);
+            let y: Vec<f64> = (0..n)
+                .map(|i| x.row(i).iter().zip(w_star).map(|(a, b)| a * b).sum())
+                .collect();
+            let mask = vec![1.0; n];
+            // At w*, gradient is 0; at w*+delta, gradient = 2XᵀX·delta — so
+            // halving delta halves the gradient.
+            let delta = [0.5, -1.0, 0.25];
+            let w1: Vec<f64> = w_star.iter().zip(delta).map(|(w, d)| w + d).collect();
+            let w2: Vec<f64> = w_star.iter().zip(delta).map(|(w, d)| w + 0.5 * d).collect();
+            let (g1, _) = Loss::Squared.grad_obj(&x, &y, &w1, &mask);
+            let (g2, _) = Loss::Squared.grad_obj(&x, &y, &w2, &mask);
+            g1.iter().zip(&g2).all(|(a, b)| (a - 2.0 * b).abs() < 1e-6 * a.abs().max(1.0))
+        },
+    );
+}
+
+#[test]
+fn prop_logistic_gradient_bounded_by_data_scale() {
+    // ‖∇ℓ‖∞ ≤ Σ_i |x_ik| since |σ(z)−y| ≤ 1.
+    forall(
+        "logistic grad bound",
+        30,
+        |g| {
+            let n = g.usize_in(1, 15).max(1);
+            (g.normal_vec(n * 4), g.normal_vec(4))
+        },
+        |(xv, w)| {
+            let n = xv.len() / 4;
+            let mut x = RowMat::zeros(n, 4);
+            x.data.copy_from_slice(xv);
+            let y: Vec<f64> = (0..n).map(|i| (i % 2) as f64).collect();
+            let mask = vec![1.0; n];
+            let (g_vec, _) = Loss::Logistic.grad_obj(&x, &y, w, &mask);
+            (0..4).all(|k| {
+                let bound: f64 = (0..n).map(|i| x.row(i)[k].abs()).sum();
+                g_vec[k].abs() <= bound + 1e-9
+            })
+        },
+    );
+}
+
+// ----------------------------------------------------- coordinator state
+
+#[test]
+fn prop_km_update_contracts_toward_u() {
+    // After v += step(u−v) with step ∈ (0,1], distance to u shrinks by
+    // exactly (1−step).
+    forall(
+        "km contraction factor",
+        50,
+        |g| {
+            let v = g.normal_vec(6);
+            let u = g.normal_vec(6);
+            ((v, u), g.f64_in(0.05, 1.0))
+        },
+        |((v, u), step)| {
+            let mut m = Mat::zeros(6, 1);
+            m.col_mut(0).copy_from_slice(v);
+            let s = SharedState::new(&m);
+            let before: f64 = v.iter().zip(u).map(|(a, b)| (a - b).powi(2)).sum::<f64>().sqrt();
+            s.km_update(0, u, *step);
+            let got = s.read_col(0);
+            let after: f64 = got.iter().zip(u).map(|(a, b)| (a - b).powi(2)).sum::<f64>().sqrt();
+            (after - (1.0 - step) * before).abs() < 1e-9 * before.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_version_counter_equals_total_updates() {
+    // Routing invariant: the global version is exactly the sum of per-block
+    // updates, regardless of the interleaving pattern.
+    forall(
+        "version accounting",
+        20,
+        |g| {
+            let t = g.usize_in(1, 6).max(1);
+            let per_block: Vec<f64> = (0..t).map(|_| g.usize_in(0, 40) as f64).collect();
+            per_block
+        },
+        |per_block| {
+            let t = per_block.len();
+            let s = std::sync::Arc::new(SharedState::zeros(3, t));
+            std::thread::scope(|scope| {
+                for (b, count) in per_block.iter().enumerate() {
+                    let s = std::sync::Arc::clone(&s);
+                    let count = *count as usize;
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(b as u64);
+                        for _ in 0..count {
+                            let u = rng.normal_vec(3);
+                            s.km_update(b, &u, 0.5);
+                        }
+                    });
+                }
+            });
+            let want: u64 = per_block.iter().map(|c| *c as u64).sum();
+            s.version() == want
+                && (0..t).all(|b| s.col_version(b) == per_block[b] as u64)
+        },
+    );
+}
+
+#[test]
+fn prop_backward_forward_iteration_is_nonexpansive() {
+    // The composed map T(v) = v + η_k((I−η∇f)Prox(v) − v) on a 1-task
+    // problem is non-expansive for η ∈ (0, 2/L): distances never grow.
+    forall(
+        "backward-forward nonexpansive",
+        25,
+        |g| {
+            let n = g.usize_in(4, 20).max(4);
+            (g.normal_vec(n * 3 + n), g.normal_vec(3), g.normal_vec(3))
+        },
+        |(data, v1, v2)| {
+            let n = (data.len() - 0) / 4; // n*3 features + n labels
+            let (xv, yv) = data.split_at(n * 3);
+            let mut x = RowMat::zeros(n, 3);
+            x.data.copy_from_slice(xv);
+            let y = yv.to_vec();
+            let mask = vec![1.0; n];
+            let mut rng = Rng::new(9);
+            let l = amtl::optim::lipschitz::task_lipschitz(Loss::Squared, &x, &mut rng) * 1.001;
+            let eta = 1.0 / l;
+            let mut reg = Regularizer::new(RegularizerKind::L1, 0.3);
+            let eta_k = 0.8;
+            let apply = |v: &[f64]| -> Vec<f64> {
+                // backward
+                let mut m = Mat::zeros(3, 1);
+                m.col_mut(0).copy_from_slice(v);
+                reg.clone().prox(&mut m, eta);
+                let w_hat = m.col(0);
+                // forward
+                let (u, _) = Loss::Squared.step(&x, &y, w_hat, &mask, eta);
+                // KM
+                v.iter().zip(&u).map(|(vi, ui)| vi + eta_k * (ui - vi)).collect()
+            };
+            let t1 = apply(v1);
+            let t2 = apply(v2);
+            let d_before: f64 = v1.iter().zip(v2).map(|(a, b)| (a - b).powi(2)).sum::<f64>().sqrt();
+            let d_after: f64 = t1.iter().zip(&t2).map(|(a, b)| (a - b).powi(2)).sum::<f64>().sqrt();
+            d_after <= d_before * (1.0 + 1e-9) + 1e-12
+        },
+    );
+}
