@@ -8,10 +8,10 @@
 //! cargo run --release --example convergence_study
 //! ```
 
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, run_amtl_once, run_smtl_once, ExpConfig, Table};
-use amtl::optim::fista::{fista, TaskData};
+use amtl::experiments::{auto_engine, run_once, ExpConfig, Table};
+use amtl::optim::fista::fista;
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -25,14 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     // Centralized reference optimum (data-centralized FISTA — the thing the
     // paper's distributed setting cannot afford to do with real hospitals).
-    let masks: Vec<Vec<f64>> = problem.dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
-    let tasks: Vec<TaskData> = problem
-        .dataset
-        .tasks
-        .iter()
-        .zip(&masks)
-        .map(|(t, m)| TaskData { x: &t.x, y: &t.y, mask: m, loss: t.loss })
-        .collect();
+    let tasks = problem.fista_tasks();
     let mut reg = problem.regularizer();
     let reference = fista(&tasks, &mut reg, problem.l_max, 3000, 1e-12);
     let f_star = *reference.history.last().unwrap();
@@ -42,8 +35,8 @@ fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["iters/node", "AMTL F-F*", "SMTL F-F*", "AMTL s", "SMTL s"]);
     for iters in [10usize, 40, 160, 640] {
         let cfg = ExpConfig { iters, offset_units: 0.2, eta_k: 0.9, ..Default::default() };
-        let a = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
-        let s = run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+        let a = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
+        let s = run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?;
         table.row(vec![
             iters.to_string(),
             format!("{:.4}", problem.objective(&a.w_final) - f_star),

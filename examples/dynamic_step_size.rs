@@ -7,9 +7,9 @@
 //! cargo run --release --example dynamic_step_size
 //! ```
 
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, run_amtl_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, run_once, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
                 dynamic_step: dynamic,
                 ..Default::default()
             };
-            let r = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+            let r = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
             objs[i] = problem.objective(&r.w_final);
         }
         table.row(vec![

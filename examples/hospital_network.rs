@@ -14,9 +14,9 @@
 //! cargo run --release --example hospital_network [-- --quick]
 //! ```
 
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, Session, Synchronized};
 use amtl::data::public;
-use amtl::experiments::{auto_engine, run_amtl_once, run_smtl_once, ExpConfig};
+use amtl::experiments::{auto_engine, ExpConfig};
 use amtl::net::DelayModel;
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::json::Json;
@@ -66,10 +66,14 @@ fn main() -> anyhow::Result<()> {
     };
 
     // --- AMTL (the paper's method). -------------------------------------
-    let mut amtl_cfg = base.amtl();
-    amtl_cfg.delay = network.clone();
-    let computes = problem.build_computes(engine, pool.as_ref())?;
-    let amtl_run = amtl::coordinator::run_amtl(&problem, computes, &amtl_cfg)?;
+    let amtl_run = Session::builder(&problem)
+        .engine(engine)
+        .pool(pool.as_ref())
+        .config(base.run_config())
+        .delay(network.clone())
+        .schedule(Async)
+        .build()?
+        .run()?;
 
     println!("\nAMTL objective curve (F = sum of hospital losses + lambda*||W||_*):");
     let curve = amtl_run.compute_objectives(|w| problem.objective(w), |v| problem.prox_map(v));
@@ -78,10 +82,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- SMTL under the identical network (the straggler tax). ----------
-    let mut smtl_cfg = base.smtl();
-    smtl_cfg.delay = network;
-    let computes = problem.build_computes(engine, pool.as_ref())?;
-    let smtl_run = amtl::coordinator::run_smtl(&problem, computes, &smtl_cfg)?;
+    let smtl_run = Session::builder(&problem)
+        .engine(engine)
+        .pool(pool.as_ref())
+        .config(base.run_config())
+        .delay(network)
+        .schedule(Synchronized)
+        .build()?
+        .run()?;
 
     // --- Single-task learning baseline (no coupling => no transfer). ----
     let mut stl_problem = MtlProblem::new(
@@ -92,10 +100,14 @@ fn main() -> anyhow::Result<()> {
         &mut rng,
     );
     stl_problem.eta = problem.eta;
-    let computes = stl_problem.build_computes(engine, pool.as_ref())?;
-    let mut stl_cfg = base.amtl();
-    stl_cfg.delay = DelayModel::None;
-    let stl_run = amtl::coordinator::run_amtl(&stl_problem, computes, &stl_cfg)?;
+    let stl_run = Session::builder(&stl_problem)
+        .engine(engine)
+        .pool(pool.as_ref())
+        .config(base.run_config())
+        .delay(DelayModel::None)
+        .schedule(Async)
+        .build()?
+        .run()?;
 
     // --- Report. ---------------------------------------------------------
     let f_amtl = problem.objective(&amtl_run.w_final);

@@ -8,9 +8,9 @@
 //! Uses the PJRT engine when `artifacts/` exists (`make artifacts`),
 //! otherwise the native mirror.
 
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, SemiSync, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, run_amtl_once, run_smtl_once, ExpConfig};
+use amtl::experiments::{auto_engine, run_once, ExpConfig};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -32,17 +32,28 @@ fn main() -> anyhow::Result<()> {
     let (engine, pool) = auto_engine(1);
     println!("engine: {engine:?}");
 
-    // 4. Run AMTL and SMTL under the same simulated network (offset 5
-    //    paper-seconds, scaled 100x -> 50 ms per activation).
+    // 4. One problem, one config, three schedules under the same simulated
+    //    network (offset 5 paper-seconds, scaled 100x -> 50 ms per
+    //    activation): fully asynchronous (the paper's method), bounded
+    //    staleness, and the synchronized baseline.
     let cfg = ExpConfig { iters: 20, offset_units: 5.0, record_every: 20, ..Default::default() };
-    let amtl_run = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
-    let smtl_run = run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+    let amtl_run = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
+    let semi_run = run_once(
+        &problem,
+        engine,
+        pool.as_ref(),
+        &cfg,
+        SemiSync { staleness_bound: 4 },
+    )?;
+    let smtl_run = run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?;
 
     println!("\n{}", amtl_run.summary());
+    println!("{}", semi_run.summary());
     println!("{}", smtl_run.summary());
     println!(
-        "\nobjective: AMTL {:.4} | SMTL {:.4}",
+        "\nobjective: AMTL {:.4} | SemiSync {:.4} | SMTL {:.4}",
         problem.objective(&amtl_run.w_final),
+        problem.objective(&semi_run.w_final),
         problem.objective(&smtl_run.w_final)
     );
     println!(

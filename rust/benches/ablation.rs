@@ -8,13 +8,16 @@
 //! 3. **delay distribution** sensitivity: the ×100 time-compression claim
 //!    (DESIGN.md) — the AMTL/SMTL wall-clock ratio is stable across time
 //!    scales.
+//! 4. **update schedule**: async vs bounded-staleness vs synchronized
+//!    under one network setting — the staleness bound sweeps between the
+//!    paper's two extremes.
 //!
 //! Run: `cargo bench --bench ablation [-- --quick]`
 
 use amtl::config::Opts;
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 use std::time::Duration;
@@ -43,7 +46,7 @@ fn main() -> anyhow::Result<()> {
             prox_every: pe,
             ..Default::default()
         };
-        let r = run_amtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        let r = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
         table.row(vec![
             pe.to_string(),
             format!("{:.2}", p.objective(&r.w_final)),
@@ -71,7 +74,7 @@ fn main() -> anyhow::Result<()> {
             online_svd: online,
             ..Default::default()
         };
-        let r = run_amtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        let r = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
         table.row(vec![
             if online { "online (Brand)" } else { "full Jacobi" }.into(),
             format!("{:.2}", p.objective(&r.w_final)),
@@ -98,13 +101,50 @@ fn main() -> anyhow::Result<()> {
             time_scale: Duration::from_millis(ms),
             ..Default::default()
         };
-        let a = run_amtl_once(&p, engine, pool.as_ref(), &cfg)?;
-        let s = run_smtl_once(&p, engine, pool.as_ref(), &cfg)?;
+        let a = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
+        let s = run_once(&p, engine, pool.as_ref(), &cfg, Synchronized)?;
         table.row(vec![
             ms.to_string(),
             format!("{:.2}", a.wall_time.as_secs_f64()),
             format!("{:.2}", s.wall_time.as_secs_f64()),
             format!("{:.2}x", s.wall_time.as_secs_f64() / a.wall_time.as_secs_f64().max(1e-12)),
+        ]);
+    }
+    table.print();
+
+    // ---- 4. update schedule ---------------------------------------------
+    banner(
+        "Ablation — update schedule (T=8, offset 3)",
+        "bounded staleness interpolates between Algorithm 1 and the SMTL barrier",
+    );
+    let schedules: Vec<(String, Box<dyn Schedule>)> = vec![
+        ("async".into(), Box::new(Async)),
+        ("semisync-8".into(), Box::new(SemiSync { staleness_bound: 8 })),
+        ("semisync-2".into(), Box::new(SemiSync { staleness_bound: 2 })),
+        ("synchronized".into(), Box::new(Synchronized)),
+    ];
+    let mut table = Table::new(&["schedule", "objective", "wall (s)"]);
+    let mut rng = Rng::new(14);
+    let ds = synthetic::lowrank_regression(&[100; 8], 50, 3, 0.5, &mut rng);
+    let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 1.0, 0.5, &mut rng);
+    amtl::experiments::warm(&p, engine, pool.as_ref())?;
+    let cfg = ExpConfig {
+        iters: if quick { 3 } else { 10 },
+        offset_units: 3.0,
+        ..Default::default()
+    };
+    for (label, schedule) in schedules {
+        let r = amtl::coordinator::Session::builder(&p)
+            .engine(engine)
+            .pool(pool.as_ref())
+            .config(cfg.run_config())
+            .schedule_box(schedule)
+            .build()?
+            .run()?;
+        table.row(vec![
+            label,
+            format!("{:.2}", p.objective(&r.w_final)),
+            format!("{:.2}", r.wall_time.as_secs_f64()),
         ]);
     }
     table.print();

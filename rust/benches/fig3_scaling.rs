@@ -15,9 +15,9 @@
 //! Run: `cargo bench --bench fig3_scaling [-- --quick] [-- fig3a|fig3b|fig3c]`
 
 use amtl::config::Opts;
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -45,8 +45,8 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         amtl::experiments::warm(&problem, engine, pool.as_ref())?;
-        let a = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
-        let s = run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+        let a = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
+        let s = run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?;
         Ok((a.wall_time.as_secs_f64(), s.wall_time.as_secs_f64()))
     };
 

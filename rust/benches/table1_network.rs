@@ -19,9 +19,9 @@
 //! Run: `cargo bench --bench table1_network [-- --quick]`
 
 use amtl::config::Opts;
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -51,11 +51,11 @@ fn main() -> anyhow::Result<()> {
                 let cfg = ExpConfig { iters, offset_units: off, ..Default::default() };
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
                 let wall = if method == "AMTL" {
-                    run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                    run_once(&problem, engine, pool.as_ref(), &cfg, Async)?
                         .wall_time
                         .as_secs_f64()
                 } else {
-                    run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                    run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?
                         .wall_time
                         .as_secs_f64()
                 };

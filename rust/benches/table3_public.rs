@@ -19,9 +19,9 @@
 //! Run: `cargo bench --bench table3_public [-- --quick]`
 
 use amtl::config::Opts;
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::public;
-use amtl::experiments::{auto_engine, banner, run_amtl_once, run_smtl_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -70,11 +70,11 @@ fn main() -> anyhow::Result<()> {
                 };
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
                 let wall = if method == "AMTL" {
-                    run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                    run_once(&problem, engine, pool.as_ref(), &cfg, Async)?
                         .wall_time
                         .as_secs_f64()
                 } else {
-                    run_smtl_once(&problem, engine, pool.as_ref(), &cfg)?
+                    run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?
                         .wall_time
                         .as_secs_f64()
                 };

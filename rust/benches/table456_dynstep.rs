@@ -17,9 +17,9 @@
 //! Run: `cargo bench --bench table456_dynstep [-- 5|10|15] [-- --quick]`
 
 use amtl::config::Opts;
-use amtl::coordinator::MtlProblem;
+use amtl::coordinator::{Async, MtlProblem};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_amtl_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
                     ..Default::default()
                 };
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
-                let r = run_amtl_once(&problem, engine, pool.as_ref(), &cfg)?;
+                let r = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
                 objs[i] = problem.objective(&r.w_final);
             }
             table.row(vec![

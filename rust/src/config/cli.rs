@@ -106,6 +106,25 @@ impl Opts {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Enumerated option: the value (or `default`) must be one of
+    /// `allowed`, otherwise an error naming the alternatives.
+    pub fn get_one_of(
+        &self,
+        key: &str,
+        allowed: &[&str],
+        default: &str,
+    ) -> Result<String, CliError> {
+        let v = self.get_or(key, default);
+        if allowed.iter().any(|a| *a == v) {
+            Ok(v)
+        } else {
+            Err(CliError(format!(
+                "--{key} must be one of {}, got '{v}'",
+                allowed.join("|")
+            )))
+        }
+    }
+
     /// Error if any supplied `--option` was never queried.
     pub fn reject_unknown(&self) -> Result<(), CliError> {
         let known = self.known.borrow();
@@ -170,6 +189,20 @@ mod tests {
         let o2 = parse(&["--tasks", "5"]);
         let _ = o2.get("tasks");
         assert!(o2.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn get_one_of_validates_against_alternatives() {
+        let o = parse(&["--method", "semisync"]);
+        let m = o.get_one_of("method", &["amtl", "smtl", "semisync"], "amtl");
+        assert_eq!(m.unwrap(), "semisync");
+        let o2 = parse(&["--method", "bogus"]);
+        let err = o2
+            .get_one_of("method", &["amtl", "smtl", "semisync"], "amtl")
+            .unwrap_err();
+        assert!(err.0.contains("amtl|smtl|semisync"), "{err}");
+        let o3 = parse(&[]);
+        assert_eq!(o3.get_one_of("method", &["amtl"], "amtl").unwrap(), "amtl");
     }
 
     #[test]

@@ -1,181 +1,46 @@
-//! The asynchronous AMTL driver — Algorithm 1 of the paper.
+//! Deprecated asynchronous entry point.
 //!
-//! Spawns one worker thread per task node; every node runs its activations
-//! independently (no barrier anywhere). The central server's backward step
-//! is the only shared computation, and it never blocks a node that is
-//! sleeping on its network delay.
+//! The AMTL driver (Algorithm 1) now lives in the unified
+//! [`Session`](super::session::Session) API as the
+//! [`Async`](super::schedule::Async) schedule; this module survives as a
+//! thin compatibility shim so existing callers keep compiling.
 
-use super::metrics::{Recorder, RunResult};
+use super::metrics::RunResult;
 use super::problem::MtlProblem;
-use super::server::CentralServer;
-use super::state::SharedState;
-use super::step_size::{KmSchedule, StepController};
-use super::worker::{run_worker, WorkerCtx};
-use crate::net::{DelayModel, FaultModel};
+use super::schedule::Async;
+use super::session::{RunConfig, Session};
 use crate::runtime::TaskCompute;
-use crate::util::Rng;
 use anyhow::Result;
-use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-/// Configuration of one AMTL run.
-#[derive(Clone, Debug)]
-pub struct AmtlConfig {
-    /// Activations per task node ("iterations" in the paper's tables).
-    pub iters_per_node: usize,
-    /// Injected network-delay model.
-    pub delay: DelayModel,
-    /// Injected fault model (robustness experiments).
-    pub faults: FaultModel,
-    /// Minibatch fraction for stochastic forward steps (None = full batch).
-    pub sgd_fraction: Option<f64>,
-    /// Wall-clock duration of one paper delay-unit (DESIGN.md: 100 ms
-    /// represents one paper "second").
-    pub time_scale: Duration,
-    /// KM relaxation step η_k.
-    pub km: KmSchedule,
-    /// Enable the §III.D dynamic step size.
-    pub dynamic_step: bool,
-    /// Delay-history window for Eq. III.6 (the paper uses 5).
-    pub dyn_window: usize,
-    /// Server re-prox stride (1 = after every update, the paper default).
-    pub prox_every: u64,
-    /// Trajectory sampling stride in updates.
-    pub record_every: u64,
-    /// Use the Brand online-SVD incremental prox (nuclear norm only).
-    pub online_svd: bool,
-    pub seed: u64,
-}
-
-impl Default for AmtlConfig {
-    fn default() -> Self {
-        AmtlConfig {
-            iters_per_node: 10,
-            delay: DelayModel::None,
-            faults: FaultModel::None,
-            sgd_fraction: None,
-            time_scale: Duration::from_millis(100),
-            km: KmSchedule::fixed(0.5),
-            dynamic_step: false,
-            dyn_window: 5,
-            prox_every: 1,
-            record_every: 1,
-            online_svd: false,
-            seed: 7,
-        }
-    }
-}
-
-impl AmtlConfig {
-    /// The paper's AMTL-k network setting: delay offset of `k` paper-units.
-    pub fn with_paper_offset(mut self, offset_units: f64) -> AmtlConfig {
-        self.delay = DelayModel::paper_offset(self.time_scale.mul_f64(offset_units));
-        self
-    }
-}
+/// Old name of the unified [`RunConfig`] (the fields are identical).
+#[deprecated(note = "use coordinator::RunConfig with Session")]
+pub type AmtlConfig = RunConfig;
 
 /// Run asynchronous MTL. `computes` must have one entry per task (built by
 /// [`MtlProblem::build_computes`]).
+#[deprecated(note = "use Session::builder(problem).schedule(Async)")]
 pub fn run_amtl(
     problem: &MtlProblem,
-    mut computes: Vec<Box<dyn TaskCompute>>,
-    cfg: &AmtlConfig,
+    computes: Vec<Box<dyn TaskCompute>>,
+    cfg: &RunConfig,
 ) -> Result<RunResult> {
-    let t_count = problem.t();
-    anyhow::ensure!(
-        computes.len() == t_count,
-        "need one compute per task ({} != {t_count})",
-        computes.len()
-    );
-
-    let state = Arc::new(SharedState::zeros(problem.d(), t_count));
-    let mut reg = problem.regularizer();
-    if cfg.online_svd {
-        reg = reg.with_online_svd(&state.snapshot());
-    }
-    let server = Arc::new(
-        CentralServer::new(Arc::clone(&state), reg, problem.eta).with_prox_every(cfg.prox_every),
-    );
-    let controller = Arc::new(StepController::new(
-        cfg.km,
-        cfg.dynamic_step,
-        t_count,
-        cfg.dyn_window,
-    ));
-    let recorder = Arc::new(Recorder::new(cfg.record_every));
-    recorder.record_now(0, state.snapshot());
-
-    let mut root_rng = Rng::new(cfg.seed);
-    let start = Instant::now();
-    let mut stats = Vec::new();
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::new();
-        for (t, compute) in computes.iter_mut().enumerate() {
-            let ctx = WorkerCtx {
-                t,
-                iters: cfg.iters_per_node,
-                server: Arc::clone(&server),
-                controller: Arc::clone(&controller),
-                delay: cfg.delay.clone(),
-                faults: cfg.faults.clone(),
-                sgd_fraction: cfg.sgd_fraction,
-                time_scale: cfg.time_scale,
-                recorder: Arc::clone(&recorder),
-                rng: root_rng.fork(t as u64),
-            };
-            let handle = std::thread::Builder::new()
-                .name(format!("amtl-worker-{t}"))
-                .spawn_scoped(s, move || run_worker(ctx, compute.as_mut()))?;
-            handles.push(handle);
-        }
-        for h in handles {
-            stats.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
-        }
-        Ok(())
-    })?;
-    let wall_time = start.elapsed();
-
-    let v_final = state.snapshot();
-    recorder.record_now(state.version(), v_final.clone());
-    let w_final = server.final_w();
-    let updates_per_node: Vec<u64> = stats.iter().map(|s| s.updates).collect();
-    let total_updates: u64 = updates_per_node.iter().sum();
-    let mean_delay_secs = if total_updates > 0 {
-        stats.iter().map(|s| s.total_delay_secs).sum::<f64>() / total_updates as f64
-    } else {
-        0.0
-    };
-
-    let recorder = Arc::try_unwrap(recorder)
-        .map_err(|_| anyhow::anyhow!("recorder still referenced"))?;
-    Ok(RunResult {
-        method: "amtl".into(),
-        wall_time,
-        v_final,
-        w_final,
-        updates: total_updates,
-        updates_per_node,
-        prox_count: server.prox_count(),
-        trajectory: recorder.into_points(),
-        mean_delay_secs,
-        dropped_updates: stats.iter().map(|s| s.dropped).sum(),
-        crashed_nodes: stats
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.crashed)
-            .map(|(i, _)| i)
-            .collect(),
-        compute_secs: stats.iter().map(|s| s.compute_secs).sum(),
-        backward_wait_secs: stats.iter().map(|s| s.backward_wait_secs).sum(),
-    })
+    Session::builder(problem)
+        .config(cfg.clone())
+        .computes(computes)
+        .schedule(Async)
+        .build()?
+        .run()
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::coordinator::step_size::KmSchedule;
     use crate::data::synthetic;
     use crate::optim::prox::RegularizerKind;
     use crate::runtime::Engine;
+    use crate::util::Rng;
 
     fn problem(seed: u64, t: usize, n: usize, d: usize) -> MtlProblem {
         let mut rng = Rng::new(seed);
@@ -211,14 +76,7 @@ mod tests {
     fn amtl_converges_to_fista_optimum() {
         let p = problem(132, 4, 50, 6);
         // FISTA reference optimum.
-        let masks: Vec<Vec<f64>> = p.dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
-        let tasks: Vec<crate::optim::fista::TaskData> = p
-            .dataset
-            .tasks
-            .iter()
-            .zip(&masks)
-            .map(|(t, m)| crate::optim::fista::TaskData { x: &t.x, y: &t.y, mask: m, loss: t.loss })
-            .collect();
+        let tasks = p.fista_tasks();
         let mut reg = p.regularizer();
         let fista = crate::optim::fista::fista(&tasks, &mut reg, p.l_max, 2000, 1e-12);
         let f_star = *fista.history.last().unwrap();

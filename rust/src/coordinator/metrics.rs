@@ -73,10 +73,10 @@ impl Recorder {
     }
 }
 
-/// Outcome of one AMTL/SMTL run.
+/// Outcome of one coordinator run (any schedule).
 #[derive(Debug)]
 pub struct RunResult {
-    /// "amtl" or "smtl".
+    /// The schedule's name: "amtl", "smtl", "semisync", ...
     pub method: String,
     /// Total wall-clock of the optimization loop.
     pub wall_time: Duration,

@@ -1,33 +1,64 @@
-//! Layer-3 coordinator: the paper's contribution.
+//! Layer-3 coordinator: the paper's contribution, behind one API.
 //!
+//! The regularized MTL problem (Eq. III.1) is solved by a backward
+//! (proximal) step on the central server and forward (gradient) steps on
+//! the task nodes; *when* those steps happen is a pluggable
+//! [`Schedule`]. A [`Session`] wires one problem, one shared
+//! [`RunConfig`], and one schedule into a run:
+//!
+//! ```no_run
+//! # use amtl::coordinator::{MtlProblem, Session, SemiSync};
+//! # fn demo(problem: &MtlProblem) -> anyhow::Result<()> {
+//! let result = Session::builder(problem)
+//!     .iters_per_node(100)
+//!     .paper_offset(5.0)          // the paper's AMTL-5 network setting
+//!     .schedule(SemiSync { staleness_bound: 4 })
+//!     .build()?
+//!     .run()?;
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Modules:
+//!
+//! * [`session`] — the [`Session`] builder, the shared [`RunConfig`], and
+//!   the [`Orchestrator`](session::Orchestrator) surface schedules drive.
+//! * [`schedule`] — the [`Schedule`] trait and its implementations:
+//!   [`Async`] (Algorithm 1 / ARock, no barrier), [`Synchronized`]
+//!   (§III.B barrier rounds), [`SemiSync`] (bounded staleness).
 //! * [`state`] — the central server's shared model matrix `V ∈ R^{d×T}`
 //!   with per-task-block locking and *inconsistent* full-matrix snapshots
 //!   (the lock-free-read semantics of §III.C / Fig. 2, which the ARock
 //!   convergence analysis explicitly tolerates).
 //! * [`server`] — the backward step: proximal mapping of the coupling
-//!   regularizer over a snapshot of `V`, with a version-keyed cache
-//!   (the paper notes the prox "can be applied after several gradient
-//!   updates"; the cache collapses redundant proxes of an unchanged `V`).
+//!   regularizer over a snapshot of `V`, with a version-keyed cache.
 //! * [`worker`] — a task node: simulated network delay → fetch its prox
-//!   block → forward (gradient) step through [`crate::runtime::TaskCompute`]
-//!   → KM relaxation update of its own block (Eq. III.4 / III.5).
-//! * [`amtl`] — the asynchronous driver (Algorithm 1): workers never wait
-//!   for each other.
-//! * [`smtl`] — the synchronized baseline (§III.B): barrier per iteration.
+//!   block → forward (gradient) step through
+//!   [`crate::runtime::TaskCompute`] → KM relaxation update of its own
+//!   block (Eq. III.4 / III.5).
 //! * [`step_size`] — Theorem 1 step bound and the dynamic multiplier
 //!   `c_{t,k} = log(max(ν̄_{t,k}, 10))` of Eq. III.6.
 //! * [`metrics`] — objective trajectories, update counts, timing.
+//! * [`amtl`] / [`smtl`] — deprecated shims over the old forked entry
+//!   points (`run_amtl` / `run_smtl`).
 
 pub mod amtl;
 pub mod metrics;
 pub mod problem;
+pub mod schedule;
 pub mod server;
+pub mod session;
 pub mod smtl;
 pub mod state;
 pub mod step_size;
 pub mod worker;
 
-pub use amtl::{run_amtl, AmtlConfig};
 pub use metrics::RunResult;
 pub use problem::MtlProblem;
+pub use schedule::{Async, Schedule, SemiSync, StalenessGate, Synchronized};
+pub use session::{RunConfig, Session, SessionBuilder};
+
+#[allow(deprecated)]
+pub use amtl::{run_amtl, AmtlConfig};
+#[allow(deprecated)]
 pub use smtl::{run_smtl, SmtlConfig};

@@ -21,6 +21,10 @@ pub struct MtlProblem {
     pub eta: f64,
     /// Max per-task Lipschitz constant (the `L` of the joint loss).
     pub l_max: f64,
+    /// Cached all-ones row masks, one per task (the loss kernels take a
+    /// mask argument; reporting paths reuse these instead of allocating a
+    /// fresh `vec![1.0; n]` per objective evaluation).
+    ones_masks: Vec<Vec<f64>>,
 }
 
 impl MtlProblem {
@@ -39,7 +43,8 @@ impl MtlProblem {
             .map(|t| task_lipschitz(t.loss, &t.x, rng))
             .fold(0.0, f64::max);
         let eta = crate::optim::lipschitz::forward_step_size(l_max, eta_scale);
-        MtlProblem { dataset, reg_kind, lambda, gamma: 1.0, eta, l_max }
+        let ones_masks = dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
+        MtlProblem { dataset, reg_kind, lambda, gamma: 1.0, eta, l_max, ones_masks }
     }
 
     pub fn t(&self) -> usize {
@@ -58,32 +63,40 @@ impl MtlProblem {
         }
     }
 
-    /// Exact objective `F(W) = Σ ℓ_t(w_t) + λ g(W)` (native f64 path —
-    /// never on the update path).
-    pub fn objective(&self, w: &Mat) -> f64 {
-        let f: f64 = self
-            .dataset
+    /// The cached all-ones mask for task `t` (full-batch evaluation).
+    pub fn ones_mask(&self, t: usize) -> &[f64] {
+        &self.ones_masks[t]
+    }
+
+    /// Task views for the centralized FISTA reference solver (full-batch
+    /// masks from the ones cache).
+    pub fn fista_tasks(&self) -> Vec<crate::optim::fista::TaskData<'_>> {
+        self.dataset
             .tasks
             .iter()
             .enumerate()
-            .map(|(t, task)| {
-                task.loss
-                    .obj(&task.x, &task.y, w.col(t), &vec![1.0; task.n()])
+            .map(|(t, task)| crate::optim::fista::TaskData {
+                x: &task.x,
+                y: &task.y,
+                mask: &self.ones_masks[t],
+                loss: task.loss,
             })
-            .sum();
-        f + self.regularizer().value(w)
+            .collect()
     }
 
-    /// Smooth part only.
+    /// Exact objective `F(W) = Σ ℓ_t(w_t) + λ g(W)` (native f64 path —
+    /// never on the update path).
+    pub fn objective(&self, w: &Mat) -> f64 {
+        self.loss_value(w) + self.regularizer().value(w)
+    }
+
+    /// Smooth part only: `Σ_t ℓ_t(w_t)`.
     pub fn loss_value(&self, w: &Mat) -> f64 {
         self.dataset
             .tasks
             .iter()
             .enumerate()
-            .map(|(t, task)| {
-                task.loss
-                    .obj(&task.x, &task.y, w.col(t), &vec![1.0; task.n()])
-            })
+            .map(|(t, task)| task.loss.obj(&task.x, &task.y, w.col(t), &self.ones_masks[t]))
             .sum()
     }
 
@@ -167,6 +180,15 @@ mod tests {
         let mut want = v.clone();
         p.regularizer().prox(&mut want, p.eta);
         assert!(w.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn ones_mask_is_cached_per_task() {
+        let p = small_problem(117);
+        for t in 0..p.t() {
+            assert_eq!(p.ones_mask(t).len(), p.dataset.tasks[t].n());
+            assert!(p.ones_mask(t).iter().all(|&m| m == 1.0));
+        }
     }
 
     #[test]

@@ -1,0 +1,472 @@
+//! Update schedules: who waits for whom.
+//!
+//! The paper's solver is one backward-forward iteration; what
+//! distinguishes §III.B (synchronized) from Algorithm 1 (asynchronous) is
+//! purely the *schedule* — the orchestration of worker activations. The
+//! [`Schedule`] trait owns exactly that seam, and nothing else: shared
+//! setup, worker-context construction, RNG forking and result assembly
+//! all live in [`Session`](super::session::Session).
+//!
+//! * [`Async`] — Algorithm 1 / ARock: every node free-runs, no barrier.
+//! * [`Synchronized`] — §III.B map-reduce rounds: one prox broadcast per
+//!   round, a barrier on the slowest node (the straggler tax the paper
+//!   measures).
+//! * [`SemiSync`] — bounded staleness: nodes free-run but may be at most
+//!   `staleness_bound` activations ahead of the slowest live node. The
+//!   middle ground the forked AMTL/SMTL drivers could not express — at
+//!   large bounds it behaves like [`Async`], at bound 1 like a pipelined
+//!   barrier.
+//!
+//! A schedule only needs [`Orchestrator`]'s public surface, so downstream
+//! code can plug in its own (e.g. elastic membership, priority serving).
+
+use super::session::{Orchestrator, RunConfig};
+use super::worker::{run_activation, run_worker, Activation, WorkerStats};
+use anyhow::Result;
+use std::sync::{Barrier, Condvar, Mutex, RwLock};
+
+/// A worker orchestration policy. `orchestrate` must drive every task
+/// node to completion (or recorded crash) and return one [`WorkerStats`]
+/// per node, in node order.
+pub trait Schedule: Send + Sync {
+    /// Short method name, used as `RunResult::method` ("amtl", "smtl", ...).
+    fn name(&self) -> &'static str;
+
+    /// Validate schedule-specific parameters against the shared config.
+    fn validate(&self, cfg: &RunConfig) -> Result<()> {
+        let _ = cfg;
+        Ok(())
+    }
+
+    /// Run the worker loop(s) to completion.
+    fn orchestrate(&self, orch: &mut Orchestrator<'_>) -> Result<Vec<WorkerStats>>;
+}
+
+/// Algorithm 1: fully asynchronous — workers never wait for each other.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Async;
+
+impl Schedule for Async {
+    fn name(&self) -> &'static str {
+        "amtl"
+    }
+
+    fn orchestrate(&self, orch: &mut Orchestrator<'_>) -> Result<Vec<WorkerStats>> {
+        run_free(orch, self.name(), None)
+    }
+}
+
+/// Bounded-staleness schedule: free-running workers, but no node may start
+/// activation `k` until every live node has completed activation
+/// `k - staleness_bound`. Crashed or finished nodes stop counting, so a
+/// dead straggler cannot stall the federation.
+#[derive(Clone, Copy, Debug)]
+pub struct SemiSync {
+    /// Maximum activations any node may run ahead of the slowest live
+    /// node. Must be >= 1 (0 would be a full barrier — use
+    /// [`Synchronized`]).
+    pub staleness_bound: u64,
+}
+
+impl Schedule for SemiSync {
+    fn name(&self) -> &'static str {
+        "semisync"
+    }
+
+    fn validate(&self, _cfg: &RunConfig) -> Result<()> {
+        anyhow::ensure!(
+            self.staleness_bound >= 1,
+            "staleness_bound must be >= 1 (use Synchronized for a full barrier)"
+        );
+        Ok(())
+    }
+
+    fn orchestrate(&self, orch: &mut Orchestrator<'_>) -> Result<Vec<WorkerStats>> {
+        let gate = std::sync::Arc::new(StalenessGate::new(orch.t_count(), self.staleness_bound));
+        run_free(orch, self.name(), Some(gate))
+    }
+}
+
+/// Spawn one free-running worker thread per node (optionally behind a
+/// staleness gate) and join them in node order.
+fn run_free(
+    orch: &mut Orchestrator<'_>,
+    name: &str,
+    gate: Option<std::sync::Arc<StalenessGate>>,
+) -> Result<Vec<WorkerStats>> {
+    let mut ctxs = orch.worker_ctxs();
+    if let Some(g) = &gate {
+        for ctx in &mut ctxs {
+            ctx.gate = Some(std::sync::Arc::clone(g));
+        }
+    }
+    let computes = orch.computes();
+    let t_count = ctxs.len();
+    let mut stats = Vec::new();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for (t, (ctx, compute)) in ctxs.into_iter().zip(computes.iter_mut()).enumerate() {
+            let spawned = std::thread::Builder::new()
+                .name(format!("{name}-worker-{t}"))
+                .spawn_scoped(s, move || run_worker(ctx, compute.as_mut()));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    // Nodes t.. never run: remove them from the staleness
+                    // minimum, or the already-spawned workers would block
+                    // forever on them while the scope joins.
+                    if let Some(g) = &gate {
+                        for dead in t..t_count {
+                            g.deactivate(dead);
+                        }
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        for h in handles {
+            stats.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        }
+        Ok(())
+    })?;
+    Ok(stats)
+}
+
+/// §III.B: classic map-reduce proximal gradient. Every round the server
+/// proxes once and broadcasts `Ŵ`; all nodes compute forward steps in
+/// parallel behind their own delays; a barrier waits for the slowest; the
+/// server applies the collected updates. Round time = max over nodes of
+/// (delay + compute) — the straggler effect the paper measures.
+///
+/// Feature parity with the free-running schedules comes from the shared
+/// [`RunConfig`]: faults (a crashed node simply stops contributing —
+/// rounds proceed so the run terminates), minibatch forward steps,
+/// `prox_every` (via the server's prox cache) and the dynamic step size
+/// all behave identically.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Synchronized;
+
+impl Schedule for Synchronized {
+    fn name(&self) -> &'static str {
+        "smtl"
+    }
+
+    fn orchestrate(&self, orch: &mut Orchestrator<'_>) -> Result<Vec<WorkerStats>> {
+        let t_count = orch.t_count();
+        let iters = orch.cfg().iters_per_node;
+        let server = orch.server();
+        let controller = orch.controller();
+        let recorder = orch.recorder();
+        let ctxs = orch.worker_ctxs();
+        let computes = orch.computes();
+
+        // Broadcast slot for Ŵ and collection slots for forward results.
+        let w_hat: RwLock<std::sync::Arc<crate::linalg::Mat>> =
+            RwLock::new(server.prox_matrix());
+        let slots: Vec<Mutex<Option<Vec<f64>>>> =
+            (0..t_count).map(|_| Mutex::new(None)).collect();
+        let barrier = Barrier::new(t_count + 1);
+
+        let mut stats_out = Vec::new();
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for (ctx, compute) in ctxs.into_iter().zip(computes.iter_mut()) {
+                let barrier = &barrier;
+                let w_hat = &w_hat;
+                let slots = &slots;
+                let handle = std::thread::Builder::new()
+                    .name(format!("smtl-worker-{}", ctx.t))
+                    .spawn_scoped(s, move || -> Result<WorkerStats> {
+                        let mut ctx = ctx;
+                        let mut stats = WorkerStats::default();
+                        // A compute failure must not skip the round-end
+                        // barrier (the server and peers would deadlock):
+                        // park the error, keep pacing rounds, surface it
+                        // after the loop.
+                        let mut failure: Option<anyhow::Error> = None;
+                        for k in 0..ctx.iters {
+                            barrier.wait(); // round start: Ŵ published
+                            if stats.crashed || failure.is_some() {
+                                // Dead node: keep the barrier count, do
+                                // nothing (its block stays frozen).
+                                barrier.wait();
+                                continue;
+                            }
+                            let t = ctx.t;
+                            let fetch = || w_hat.read().unwrap().col(t).to_vec();
+                            match run_activation(&mut ctx, compute, k as u64, fetch, &mut stats)
+                            {
+                                Ok(Activation::Crashed) => stats.crashed = true,
+                                Ok(Activation::Dropped) => {}
+                                Ok(Activation::Update(u)) => {
+                                    *slots[t].lock().unwrap() = Some(u);
+                                    stats.updates += 1;
+                                }
+                                Err(e) => failure = Some(e),
+                            }
+                            barrier.wait(); // round end: all nodes done
+                        }
+                        match failure {
+                            Some(e) => Err(e),
+                            None => Ok(stats),
+                        }
+                    })?;
+                handles.push(handle);
+            }
+
+            // The server loop (this thread).
+            for iter in 0..iters {
+                barrier.wait(); // release workers into the round
+                barrier.wait(); // wait for the slowest worker
+                for t in 0..t_count {
+                    if let Some(u) = slots[t].lock().unwrap().take() {
+                        let step = controller.step(t);
+                        server.state().km_update(t, &u, step);
+                        let new_col = server.state().read_col(t);
+                        server.notify_column_update(t, &new_col);
+                    }
+                }
+                recorder.maybe_record(server.state().version(), || server.state().snapshot());
+                if iter + 1 < iters {
+                    *w_hat.write().unwrap() = server.prox_matrix();
+                }
+            }
+            for h in handles {
+                stats_out.push(
+                    h.join().map_err(|_| anyhow::anyhow!("smtl worker panicked"))??,
+                );
+            }
+            Ok(())
+        })?;
+        Ok(stats_out)
+    }
+}
+
+/// Progress tracker for [`SemiSync`]: nodes block in `wait_to_start(k)`
+/// until every *live* node has completed at least `k - bound` activations.
+/// Finished/crashed/errored nodes deactivate themselves so they stop
+/// holding the minimum back.
+pub struct StalenessGate {
+    bound: u64,
+    inner: Mutex<GateInner>,
+    cv: Condvar,
+}
+
+struct GateInner {
+    completed: Vec<u64>,
+    active: Vec<bool>,
+}
+
+impl StalenessGate {
+    pub fn new(t_count: usize, bound: u64) -> StalenessGate {
+        StalenessGate {
+            bound,
+            inner: Mutex::new(GateInner {
+                completed: vec![0; t_count],
+                active: vec![true; t_count],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn min_live_completed(inner: &GateInner) -> u64 {
+        inner
+            .completed
+            .iter()
+            .zip(&inner.active)
+            .filter(|(_, live)| **live)
+            .map(|(c, _)| *c)
+            .min()
+            .unwrap_or(u64::MAX)
+    }
+
+    /// Block until activation `k` (0-based) is within the staleness bound.
+    pub fn wait_to_start(&self, k: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        while k > Self::min_live_completed(&inner).saturating_add(self.bound) {
+            inner = self.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Record one completed activation for node `t`.
+    pub fn finish_iter(&self, t: usize) {
+        self.inner.lock().unwrap().completed[t] += 1;
+        self.cv.notify_all();
+    }
+
+    /// Remove node `t` from the staleness minimum (finished or dead).
+    pub fn deactivate(&self, t: usize) {
+        self.inner.lock().unwrap().active[t] = false;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::problem::MtlProblem;
+    use crate::coordinator::session::Session;
+    use crate::data::synthetic;
+    use crate::net::FaultModel;
+    use crate::optim::prox::RegularizerKind;
+    use crate::util::Rng;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn problem(seed: u64, t: usize, n: usize, d: usize) -> MtlProblem {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.05, &mut rng);
+        MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn gate_blocks_until_within_bound() {
+        let gate = Arc::new(StalenessGate::new(2, 1));
+        // Node 0 finished activations 0 and 1; node 1 finished nothing.
+        gate.finish_iter(0);
+        gate.finish_iter(0);
+        let (tx, rx) = mpsc::channel();
+        let g = Arc::clone(&gate);
+        std::thread::spawn(move || {
+            g.wait_to_start(2); // 2 > min(2,0)+1 → must block on node 1
+            tx.send(()).unwrap();
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "node 0 must block two ahead of node 1"
+        );
+        gate.finish_iter(1); // min rises to 1: 2 <= 1+1 → unblocks
+        rx.recv_timeout(Duration::from_secs(5)).expect("unblocked");
+    }
+
+    #[test]
+    fn gate_deactivation_unblocks_waiters() {
+        let gate = Arc::new(StalenessGate::new(2, 1));
+        gate.finish_iter(0);
+        gate.finish_iter(0);
+        let (tx, rx) = mpsc::channel();
+        let g = Arc::clone(&gate);
+        std::thread::spawn(move || {
+            g.wait_to_start(2);
+            tx.send(()).unwrap();
+        });
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+        gate.deactivate(1); // node 1 dies: it no longer gates progress
+        rx.recv_timeout(Duration::from_secs(5)).expect("unblocked");
+    }
+
+    #[test]
+    fn semisync_runs_full_budget_and_decreases_objective() {
+        let p = problem(720, 4, 40, 8);
+        let r = Session::builder(&p)
+            .iters_per_node(60)
+            .eta_k(0.9)
+            .schedule(SemiSync { staleness_bound: 2 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.updates, 240);
+        assert_eq!(r.updates_per_node, vec![60; 4]);
+        let f0 = p.objective(&p.prox_map(&crate::linalg::Mat::zeros(8, 4)));
+        let f1 = p.objective(&r.w_final);
+        assert!(f1 < 0.2 * f0, "objective {f0} -> {f1}");
+    }
+
+    #[test]
+    fn semisync_survives_a_crashed_straggler() {
+        // The crashed node deactivates itself; the others must still
+        // finish their budget instead of deadlocking at the gate.
+        let p = problem(721, 3, 20, 5);
+        let r = Session::builder(&p)
+            .iters_per_node(30)
+            .faults(FaultModel::CrashAfter { node: 1, after: 2 })
+            .schedule(SemiSync { staleness_bound: 1 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.crashed_nodes, vec![1]);
+        assert_eq!(r.updates_per_node, vec![30, 2, 30]);
+    }
+
+    #[test]
+    fn synchronized_supports_faults_via_shared_config() {
+        // Parity satellite: the old SmtlConfig had no fault model at all.
+        let p = problem(722, 4, 30, 6);
+        let r = Session::builder(&p)
+            .iters_per_node(20)
+            .faults(FaultModel::CrashAfter { node: 2, after: 3 })
+            .schedule(Synchronized)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.crashed_nodes, vec![2]);
+        assert_eq!(r.updates_per_node, vec![20, 20, 3, 20]);
+        assert_eq!(r.updates, 63);
+        assert!(p.objective(&r.w_final).is_finite());
+    }
+
+    #[test]
+    fn synchronized_supports_minibatch_forward_steps() {
+        let p = problem(723, 3, 60, 6);
+        let r = Session::builder(&p)
+            .iters_per_node(80)
+            .eta_k(0.9)
+            .sgd_fraction(Some(0.5))
+            .schedule(Synchronized)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let f0 = p.objective(&p.prox_map(&crate::linalg::Mat::zeros(6, 3)));
+        let f1 = p.objective(&r.w_final);
+        assert!(f1 < 0.3 * f0, "sgd smtl: {f0} -> {f1}");
+    }
+
+    #[test]
+    fn synchronized_honors_prox_every() {
+        let p = problem(724, 4, 20, 5);
+        let run = |stride: u64| {
+            Session::builder(&p)
+                .iters_per_node(12)
+                .prox_every(stride)
+                .schedule(Synchronized)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let dense = run(1);
+        let sparse = run(16);
+        assert!(
+            sparse.prox_count < dense.prox_count,
+            "prox_every=16 ({}) must prox less than =1 ({})",
+            sparse.prox_count,
+            dense.prox_count
+        );
+    }
+
+    #[test]
+    fn all_schedules_reach_similar_objectives() {
+        // Fig. 4 generalized: per-iteration progress is schedule-invariant.
+        let p = problem(725, 4, 40, 6);
+        let run = |schedule: Box<dyn Schedule>| {
+            Session::builder(&p)
+                .iters_per_node(120)
+                .eta_k(0.9)
+                .schedule_box(schedule)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let fa = p.objective(&run(Box::new(Async)).w_final);
+        let fs = p.objective(&run(Box::new(Synchronized)).w_final);
+        let fb = p.objective(&run(Box::new(SemiSync { staleness_bound: 3 })).w_final);
+        assert!((fa - fs).abs() / fs.max(1e-9) < 0.1, "amtl {fa} vs smtl {fs}");
+        assert!((fb - fs).abs() / fs.max(1e-9) < 0.1, "semisync {fb} vs smtl {fs}");
+    }
+}

@@ -1,0 +1,555 @@
+//! The unified coordinator entry point: one [`Session`] drives the paper's
+//! regularized MTL solve under any update [`Schedule`](super::schedule::Schedule).
+//!
+//! The paper's formulation (Eq. III.1) is schedule-agnostic: the same
+//! backward (prox) + forward (gradient) iteration runs synchronized
+//! (§III.B), asynchronous (Algorithm 1 / ARock), or anywhere in between.
+//! `Session` owns everything the schedules share — problem wiring, the
+//! shared state `V`, the central server, the step controller, RNG forking,
+//! trajectory recording, and [`RunResult`] assembly — while the schedule
+//! owns only the worker orchestration loop.
+//!
+//! ```no_run
+//! # use amtl::coordinator::{MtlProblem, Session, SemiSync};
+//! # fn demo(problem: &MtlProblem) -> anyhow::Result<()> {
+//! let result = Session::builder(problem)
+//!     .iters_per_node(50)
+//!     .paper_offset(5.0)
+//!     .eta_k(0.9)
+//!     .schedule(SemiSync { staleness_bound: 4 })
+//!     .build()?
+//!     .run()?;
+//! println!("{}", result.summary());
+//! # Ok(())
+//! # }
+//! ```
+
+use super::metrics::{Recorder, RunResult};
+use super::problem::MtlProblem;
+use super::schedule::{Async, Schedule};
+use super::server::CentralServer;
+use super::state::SharedState;
+use super::step_size::{KmSchedule, StepController};
+use super::worker::WorkerCtx;
+use crate::net::{DelayModel, FaultModel};
+use crate::runtime::{ComputePool, Engine, TaskCompute};
+use crate::util::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Configuration shared by every schedule. One activation is one forward
+/// step of one task node; `iters_per_node` is the per-node activation
+/// budget ("iterations" in the paper's tables, rounds for the
+/// synchronized schedule).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Activations per task node.
+    pub iters_per_node: usize,
+    /// Injected network-delay model.
+    pub delay: DelayModel,
+    /// Injected fault model (robustness experiments).
+    pub faults: FaultModel,
+    /// Minibatch fraction for stochastic forward steps (None = full batch).
+    pub sgd_fraction: Option<f64>,
+    /// Wall-clock duration of one paper delay-unit (DESIGN.md: 100 ms
+    /// represents one paper "second").
+    pub time_scale: Duration,
+    /// KM relaxation step η_k.
+    pub km: KmSchedule,
+    /// Enable the §III.D dynamic step size.
+    pub dynamic_step: bool,
+    /// Delay-history window for Eq. III.6 (the paper uses 5).
+    pub dyn_window: usize,
+    /// Server re-prox stride (1 = after every update, the paper default).
+    pub prox_every: u64,
+    /// Trajectory sampling stride in updates.
+    pub record_every: u64,
+    /// Use the Brand online-SVD incremental prox (nuclear norm only).
+    pub online_svd: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            iters_per_node: 10,
+            delay: DelayModel::None,
+            faults: FaultModel::None,
+            sgd_fraction: None,
+            time_scale: Duration::from_millis(100),
+            km: KmSchedule::fixed(0.5),
+            dynamic_step: false,
+            dyn_window: 5,
+            prox_every: 1,
+            record_every: 1,
+            online_svd: false,
+            seed: 7,
+        }
+    }
+}
+
+impl RunConfig {
+    /// The paper's AMTL-k / SMTL-k network setting: delay offset of
+    /// `offset_units` paper-units (plus the exponential random component),
+    /// scaled by `time_scale`. This is the one paper-offset helper — the
+    /// per-method copies it replaced are gone.
+    pub fn with_paper_offset(mut self, offset_units: f64) -> RunConfig {
+        if offset_units > 0.0 {
+            self.delay = DelayModel::paper_offset(self.time_scale.mul_f64(offset_units));
+        }
+        self
+    }
+
+    /// Validate parameter ranges (called by [`SessionBuilder::build`]).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.km.eta_k.is_finite() && self.km.eta_k > 0.0,
+            "km step eta_k must be finite and positive, got {}",
+            self.km.eta_k
+        );
+        if let Some(f) = self.sgd_fraction {
+            anyhow::ensure!(
+                f > 0.0 && f <= 1.0,
+                "sgd_fraction must be in (0, 1], got {f}"
+            );
+        }
+        anyhow::ensure!(self.dyn_window >= 1, "dyn_window must be >= 1");
+        Ok(())
+    }
+}
+
+/// Builder for a [`Session`]. Setters apply in call order; `.config(..)`
+/// replaces the whole [`RunConfig`], so call it before field setters.
+pub struct SessionBuilder<'p> {
+    problem: &'p MtlProblem,
+    cfg: RunConfig,
+    schedule: Box<dyn Schedule>,
+    computes: Option<Vec<Box<dyn TaskCompute>>>,
+    engine: Engine,
+    pool: Option<&'p ComputePool>,
+    paper_offset_units: Option<f64>,
+}
+
+impl<'p> SessionBuilder<'p> {
+    fn new(problem: &'p MtlProblem) -> SessionBuilder<'p> {
+        SessionBuilder {
+            problem,
+            cfg: RunConfig::default(),
+            schedule: Box::new(Async),
+            computes: None,
+            engine: Engine::Native,
+            pool: None,
+            paper_offset_units: None,
+        }
+    }
+
+    /// Replace the entire run configuration.
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// The update schedule (defaults to [`Async`]).
+    pub fn schedule(self, schedule: impl Schedule + 'static) -> Self {
+        self.schedule_box(Box::new(schedule))
+    }
+
+    /// Boxed form of [`SessionBuilder::schedule`] for dynamic dispatch
+    /// (e.g. a schedule chosen from CLI flags).
+    pub fn schedule_box(mut self, schedule: Box<dyn Schedule>) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Per-task compute engines, pre-built. Overrides `.engine()`/`.pool()`.
+    pub fn computes(mut self, computes: Vec<Box<dyn TaskCompute>>) -> Self {
+        self.computes = Some(computes);
+        self
+    }
+
+    /// Engine used to build the per-task computes at `build()` time
+    /// (default [`Engine::Native`]).
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Executor pool for the PJRT engine.
+    pub fn pool(mut self, pool: Option<&'p ComputePool>) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    pub fn iters_per_node(mut self, iters: usize) -> Self {
+        self.cfg.iters_per_node = iters;
+        self
+    }
+
+    pub fn delay(mut self, delay: DelayModel) -> Self {
+        self.cfg.delay = delay;
+        self
+    }
+
+    pub fn faults(mut self, faults: FaultModel) -> Self {
+        self.cfg.faults = faults;
+        self
+    }
+
+    pub fn sgd_fraction(mut self, fraction: Option<f64>) -> Self {
+        self.cfg.sgd_fraction = fraction;
+        self
+    }
+
+    pub fn time_scale(mut self, time_scale: Duration) -> Self {
+        self.cfg.time_scale = time_scale;
+        self
+    }
+
+    pub fn km(mut self, km: KmSchedule) -> Self {
+        self.cfg.km = km;
+        self
+    }
+
+    /// Shorthand for a fixed KM relaxation step.
+    pub fn eta_k(mut self, eta_k: f64) -> Self {
+        self.cfg.km = KmSchedule::fixed(eta_k);
+        self
+    }
+
+    pub fn dynamic_step(mut self, on: bool) -> Self {
+        self.cfg.dynamic_step = on;
+        self
+    }
+
+    pub fn dyn_window(mut self, window: usize) -> Self {
+        self.cfg.dyn_window = window;
+        self
+    }
+
+    pub fn prox_every(mut self, stride: u64) -> Self {
+        self.cfg.prox_every = stride;
+        self
+    }
+
+    pub fn record_every(mut self, stride: u64) -> Self {
+        self.cfg.record_every = stride;
+        self
+    }
+
+    pub fn online_svd(mut self, on: bool) -> Self {
+        self.cfg.online_svd = on;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// The paper's AMTL-k / SMTL-k delay setting, in paper units. Resolved
+    /// against `time_scale` at `build()` time, so setter order does not
+    /// matter. Non-positive offsets leave the delay model unchanged.
+    pub fn paper_offset(mut self, offset_units: f64) -> Self {
+        self.paper_offset_units = Some(offset_units);
+        self
+    }
+
+    /// Validate and assemble the [`Session`].
+    pub fn build(self) -> Result<Session<'p>> {
+        let mut cfg = self.cfg;
+        if let Some(units) = self.paper_offset_units {
+            cfg = cfg.with_paper_offset(units);
+        }
+        cfg.validate()?;
+        self.schedule.validate(&cfg)?;
+        let computes = match self.computes {
+            Some(c) => c,
+            None => self.problem.build_computes(self.engine, self.pool)?,
+        };
+        let t_count = self.problem.t();
+        anyhow::ensure!(
+            computes.len() == t_count,
+            "need one compute per task ({} != {t_count})",
+            computes.len()
+        );
+        Ok(Session {
+            problem: self.problem,
+            computes,
+            cfg,
+            schedule: self.schedule,
+        })
+    }
+}
+
+/// One configured optimization run: problem + computes + config + schedule.
+pub struct Session<'p> {
+    problem: &'p MtlProblem,
+    computes: Vec<Box<dyn TaskCompute>>,
+    cfg: RunConfig,
+    schedule: Box<dyn Schedule>,
+}
+
+impl<'p> Session<'p> {
+    pub fn builder(problem: &'p MtlProblem) -> SessionBuilder<'p> {
+        SessionBuilder::new(problem)
+    }
+
+    /// Execute the run under the configured schedule.
+    pub fn run(mut self) -> Result<RunResult> {
+        let problem = self.problem;
+        let cfg = &self.cfg;
+        let t_count = problem.t();
+
+        // Shared construction (identical for every schedule): state, server
+        // with the problem's regularizer, step controller, recorder, and
+        // the root RNG that forks one stream per task node.
+        let state = Arc::new(SharedState::zeros(problem.d(), t_count));
+        let mut reg = problem.regularizer();
+        if cfg.online_svd {
+            reg = reg.with_online_svd(&state.snapshot());
+        }
+        let server = Arc::new(
+            CentralServer::new(Arc::clone(&state), reg, problem.eta)
+                .with_prox_every(cfg.prox_every),
+        );
+        let controller = Arc::new(StepController::new(
+            cfg.km,
+            cfg.dynamic_step,
+            t_count,
+            cfg.dyn_window,
+        ));
+        let recorder = Arc::new(Recorder::new(cfg.record_every));
+        recorder.record_now(0, state.snapshot());
+
+        let start = Instant::now();
+        let mut orch = Orchestrator {
+            problem,
+            cfg,
+            computes: &mut self.computes,
+            server: Arc::clone(&server),
+            controller,
+            recorder: Arc::clone(&recorder),
+            root_rng: Rng::new(cfg.seed),
+            forked: 0,
+        };
+        let stats = self.schedule.orchestrate(&mut orch)?;
+        // Release the orchestrator's recorder clone so the trajectory can
+        // be unwrapped below.
+        drop(orch);
+        let wall_time = start.elapsed();
+        anyhow::ensure!(
+            stats.len() == t_count,
+            "schedule '{}' returned {} worker stats for {t_count} nodes",
+            self.schedule.name(),
+            stats.len()
+        );
+
+        // Shared result assembly.
+        let v_final = state.snapshot();
+        recorder.record_now(state.version(), v_final.clone());
+        let w_final = server.final_w();
+        let updates_per_node: Vec<u64> = stats.iter().map(|s| s.updates).collect();
+        let total_updates: u64 = updates_per_node.iter().sum();
+        let mean_delay_secs = if total_updates > 0 {
+            stats.iter().map(|s| s.total_delay_secs).sum::<f64>() / total_updates as f64
+        } else {
+            0.0
+        };
+        let recorder = Arc::try_unwrap(recorder)
+            .map_err(|_| anyhow::anyhow!("recorder still referenced"))?;
+        Ok(RunResult {
+            method: self.schedule.name().into(),
+            wall_time,
+            v_final,
+            w_final,
+            updates: total_updates,
+            updates_per_node,
+            prox_count: server.prox_count(),
+            trajectory: recorder.into_points(),
+            mean_delay_secs,
+            dropped_updates: stats.iter().map(|s| s.dropped).sum(),
+            crashed_nodes: stats
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.crashed)
+                .map(|(i, _)| i)
+                .collect(),
+            compute_secs: stats.iter().map(|s| s.compute_secs).sum(),
+            backward_wait_secs: stats.iter().map(|s| s.backward_wait_secs).sum(),
+        })
+    }
+}
+
+/// What a [`Schedule`] gets to orchestrate with: accessors for the shared
+/// machinery plus the one worker-context construction path (RNG forking
+/// included) used by every schedule.
+pub struct Orchestrator<'r> {
+    problem: &'r MtlProblem,
+    cfg: &'r RunConfig,
+    computes: &'r mut [Box<dyn TaskCompute>],
+    server: Arc<CentralServer>,
+    controller: Arc<StepController>,
+    recorder: Arc<Recorder>,
+    root_rng: Rng,
+    forked: usize,
+}
+
+impl<'r> Orchestrator<'r> {
+    pub fn problem(&self) -> &'r MtlProblem {
+        self.problem
+    }
+
+    pub fn cfg(&self) -> &'r RunConfig {
+        self.cfg
+    }
+
+    pub fn t_count(&self) -> usize {
+        self.computes.len()
+    }
+
+    pub fn server(&self) -> Arc<CentralServer> {
+        Arc::clone(&self.server)
+    }
+
+    pub fn controller(&self) -> Arc<StepController> {
+        Arc::clone(&self.controller)
+    }
+
+    pub fn recorder(&self) -> Arc<Recorder> {
+        Arc::clone(&self.recorder)
+    }
+
+    /// One worker context per task node, with per-node RNG streams forked
+    /// deterministically in node order from the root seed. Call once —
+    /// forking twice would hand later callers different streams.
+    pub fn worker_ctxs(&mut self) -> Vec<WorkerCtx> {
+        assert_eq!(self.forked, 0, "worker_ctxs may only be called once");
+        self.forked = 1;
+        (0..self.computes.len())
+            .map(|t| WorkerCtx {
+                t,
+                iters: self.cfg.iters_per_node,
+                server: Arc::clone(&self.server),
+                controller: Arc::clone(&self.controller),
+                delay: self.cfg.delay.clone(),
+                faults: self.cfg.faults.clone(),
+                sgd_fraction: self.cfg.sgd_fraction,
+                time_scale: self.cfg.time_scale,
+                recorder: Arc::clone(&self.recorder),
+                rng: self.root_rng.fork(t as u64),
+                gate: None,
+            })
+            .collect()
+    }
+
+    /// The per-task compute engines (index = task id).
+    pub fn computes(&mut self) -> &mut [Box<dyn TaskCompute>] {
+        self.computes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::schedule::{SemiSync, Synchronized};
+    use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
+
+    fn problem(seed: u64, t: usize, n: usize, d: usize) -> MtlProblem {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.05, &mut rng);
+        MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn builder_defaults_run_async() {
+        let p = problem(700, 3, 20, 5);
+        let r = Session::builder(&p)
+            .iters_per_node(4)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.method, "amtl");
+        assert_eq!(r.updates, 12);
+        assert_eq!(r.updates_per_node, vec![4; 3]);
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_compute_count() {
+        let p = problem(701, 3, 20, 5);
+        let mut computes = p.build_computes(Engine::Native, None).unwrap();
+        computes.pop();
+        let err = Session::builder(&p).computes(computes).build().unwrap_err();
+        assert!(format!("{err}").contains("one compute per task"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_bad_sgd_fraction() {
+        let p = problem(702, 2, 20, 4);
+        for bad in [0.0, -0.5, 1.5] {
+            let err = Session::builder(&p)
+                .sgd_fraction(Some(bad))
+                .build()
+                .unwrap_err();
+            assert!(format!("{err}").contains("sgd_fraction"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn builder_rejects_bad_eta_k() {
+        let p = problem(703, 2, 20, 4);
+        for bad in [0.0, -1.0, f64::NAN] {
+            assert!(Session::builder(&p).eta_k(bad).build().is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn builder_rejects_bad_schedule_params() {
+        let p = problem(704, 2, 20, 4);
+        let err = Session::builder(&p)
+            .schedule(SemiSync { staleness_bound: 0 })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("staleness_bound"), "{err}");
+    }
+
+    #[test]
+    fn paper_offset_resolves_at_build_time_in_either_order() {
+        // paper_offset before time_scale must still use the final scale.
+        let p = problem(705, 2, 10, 4);
+        let s = Session::builder(&p)
+            .paper_offset(2.0)
+            .time_scale(Duration::from_millis(10))
+            .build()
+            .unwrap();
+        match s.cfg.delay {
+            DelayModel::OffsetExp { offset, .. } => {
+                assert_eq!(offset, Duration::from_millis(20));
+            }
+            ref other => panic!("expected OffsetExp, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn schedules_share_one_config_and_name_their_results() {
+        let p = problem(706, 3, 25, 5);
+        let cfg = RunConfig { iters_per_node: 5, ..Default::default() };
+        for (name, run) in [
+            ("amtl", Session::builder(&p).config(cfg.clone()).schedule(Async).build()),
+            ("smtl", Session::builder(&p).config(cfg.clone()).schedule(Synchronized).build()),
+            (
+                "semisync",
+                Session::builder(&p)
+                    .config(cfg.clone())
+                    .schedule(SemiSync { staleness_bound: 2 })
+                    .build(),
+            ),
+        ] {
+            let r = run.unwrap().run().unwrap();
+            assert_eq!(r.method, name);
+            assert_eq!(r.updates, 15, "{name}");
+        }
+    }
+}

@@ -1,26 +1,26 @@
-//! Synchronized distributed MTL (SMTL) — the §III.B baseline.
+//! Deprecated synchronized entry point.
 //!
-//! Classic map-reduce proximal gradient: every iteration, the server
-//! computes `Ŵ = Prox_{ηλg}(V)` once and broadcasts; **all** T task nodes
-//! compute their forward steps in parallel (each behind its own simulated
-//! network delay); a barrier waits for the **slowest** node; then the
-//! server applies the collected updates and the next iteration begins.
-//! The straggler effect the paper measures comes entirely from that
-//! barrier: round time = max over nodes of (delay + compute).
+//! The SMTL baseline (§III.B) now lives in the unified
+//! [`Session`](super::session::Session) API as the
+//! [`Synchronized`](super::schedule::Synchronized) schedule; this module
+//! survives as a thin compatibility shim so existing callers keep
+//! compiling. Unlike the old driver, the schedule has full feature parity
+//! with the asynchronous one (faults, minibatch steps, `prox_every`,
+//! dynamic step) via the shared [`RunConfig`] — use the builder to reach
+//! those knobs.
 
-use super::metrics::{Recorder, RunResult};
+use super::metrics::RunResult;
 use super::problem::MtlProblem;
-use super::server::CentralServer;
-use super::state::SharedState;
+use super::schedule::Synchronized;
+use super::session::{RunConfig, Session};
 use super::step_size::KmSchedule;
 use crate::net::DelayModel;
 use crate::runtime::TaskCompute;
-use crate::util::Rng;
 use anyhow::Result;
-use std::sync::{Arc, Barrier, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Configuration of one SMTL run (mirrors [`super::amtl::AmtlConfig`]).
+/// Configuration of one SMTL run (the old, reduced surface).
+#[deprecated(note = "use coordinator::RunConfig with Session")]
 #[derive(Clone, Debug)]
 pub struct SmtlConfig {
     /// Synchronized iterations (each is one forward step per node).
@@ -28,13 +28,13 @@ pub struct SmtlConfig {
     pub delay: DelayModel,
     pub time_scale: Duration,
     /// KM/relaxation step applied to the collected updates (the same η_k
-    /// as AMTL so per-iteration progress is comparable — §IV.B.1 "both
-    /// have nearly identical progress per iteration").
+    /// as AMTL so per-iteration progress is comparable — §IV.B.1).
     pub km: KmSchedule,
     pub record_every: u64,
     pub seed: u64,
 }
 
+#[allow(deprecated)]
 impl Default for SmtlConfig {
     fn default() -> Self {
         SmtlConfig {
@@ -48,121 +48,45 @@ impl Default for SmtlConfig {
     }
 }
 
-impl SmtlConfig {
-    pub fn with_paper_offset(mut self, offset_units: f64) -> SmtlConfig {
-        self.delay = DelayModel::paper_offset(self.time_scale.mul_f64(offset_units));
-        self
+#[allow(deprecated)]
+impl From<&SmtlConfig> for RunConfig {
+    fn from(cfg: &SmtlConfig) -> RunConfig {
+        RunConfig {
+            iters_per_node: cfg.iters,
+            delay: cfg.delay.clone(),
+            time_scale: cfg.time_scale,
+            km: cfg.km,
+            record_every: cfg.record_every,
+            seed: cfg.seed,
+            ..RunConfig::default()
+        }
     }
 }
 
 /// Run synchronized distributed MTL.
+#[deprecated(note = "use Session::builder(problem).schedule(Synchronized)")]
+#[allow(deprecated)]
 pub fn run_smtl(
     problem: &MtlProblem,
-    mut computes: Vec<Box<dyn TaskCompute>>,
+    computes: Vec<Box<dyn TaskCompute>>,
     cfg: &SmtlConfig,
 ) -> Result<RunResult> {
-    let t_count = problem.t();
-    anyhow::ensure!(computes.len() == t_count, "one compute per task");
-
-    let state = Arc::new(SharedState::zeros(problem.d(), t_count));
-    let server = Arc::new(CentralServer::new(
-        Arc::clone(&state),
-        problem.regularizer(),
-        problem.eta,
-    ));
-    let recorder = Recorder::new(cfg.record_every);
-    recorder.record_now(0, state.snapshot());
-
-    // Broadcast slot for Ŵ and collection slots for the forward results.
-    let w_hat: RwLock<Arc<crate::linalg::Mat>> = RwLock::new(server.prox_matrix());
-    let slots: Vec<Mutex<Option<Vec<f64>>>> = (0..t_count).map(|_| Mutex::new(None)).collect();
-    let barrier = Barrier::new(t_count + 1);
-    let mut root_rng = Rng::new(cfg.seed);
-    let mut worker_rngs: Vec<Rng> = (0..t_count).map(|t| root_rng.fork(t as u64)).collect();
-
-    let start = Instant::now();
-    let total_delay = Mutex::new(0.0f64);
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::new();
-        for (t, (compute, mut rng)) in computes.iter_mut().zip(worker_rngs.drain(..)).enumerate() {
-            let barrier = &barrier;
-            let w_hat = &w_hat;
-            let slots = &slots;
-            let server = Arc::clone(&server);
-            let delay = cfg.delay.clone();
-            let total_delay = &total_delay;
-            let handle = std::thread::Builder::new()
-                .name(format!("smtl-worker-{t}"))
-                .spawn_scoped(s, move || -> Result<()> {
-                    for _ in 0..cfg.iters {
-                        barrier.wait(); // iteration start: Ŵ published
-                        let sample = delay.sample(t, &mut rng);
-                        if sample.duration > Duration::ZERO {
-                            std::thread::sleep(sample.duration);
-                        }
-                        *total_delay.lock().unwrap() += sample.duration.as_secs_f64();
-                        let wt = w_hat.read().unwrap().col(t).to_vec();
-                        let (u, _loss) = compute.step(&wt, server.eta())?;
-                        *slots[t].lock().unwrap() = Some(u);
-                        barrier.wait(); // iteration end: all nodes done
-                    }
-                    Ok(())
-                })?;
-            handles.push(handle);
-        }
-
-        // The server loop (this thread).
-        for iter in 0..cfg.iters {
-            barrier.wait(); // release workers into the round
-            barrier.wait(); // wait for the slowest worker (the straggler cost)
-            for t in 0..t_count {
-                let u = slots[t].lock().unwrap().take().expect("worker missed slot");
-                state.km_update(t, &u, cfg.km.eta_k);
-            }
-            recorder.maybe_record(state.version(), || state.snapshot());
-            if iter + 1 < cfg.iters {
-                *w_hat.write().unwrap() = server.prox_matrix();
-            }
-        }
-        for h in handles {
-            h.join().map_err(|_| anyhow::anyhow!("smtl worker panicked"))??;
-        }
-        Ok(())
-    })?;
-    let wall_time = start.elapsed();
-
-    let v_final = state.snapshot();
-    recorder.record_now(state.version(), v_final.clone());
-    let w_final = server.final_w();
-    let updates = state.version();
-    let mean_delay_secs = if updates > 0 {
-        *total_delay.lock().unwrap() / updates as f64
-    } else {
-        0.0
-    };
-    Ok(RunResult {
-        method: "smtl".into(),
-        wall_time,
-        v_final,
-        w_final,
-        updates,
-        updates_per_node: vec![cfg.iters as u64; t_count],
-        prox_count: server.prox_count(),
-        trajectory: recorder.into_points(),
-        mean_delay_secs,
-        dropped_updates: 0,
-        crashed_nodes: vec![],
-        compute_secs: 0.0,
-        backward_wait_secs: 0.0,
-    })
+    Session::builder(problem)
+        .config(RunConfig::from(cfg))
+        .computes(computes)
+        .schedule(Synchronized)
+        .build()?
+        .run()
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::data::synthetic;
     use crate::optim::prox::RegularizerKind;
     use crate::runtime::Engine;
+    use crate::util::Rng;
 
     fn problem(seed: u64, t: usize, n: usize, d: usize) -> MtlProblem {
         let mut rng = Rng::new(seed);
@@ -177,6 +101,7 @@ mod tests {
         let r = run_smtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
         assert_eq!(r.updates, 24); // T × iters
         assert_eq!(r.updates_per_node, vec![6; 4]);
+        assert_eq!(r.method, "smtl");
     }
 
     #[test]
@@ -194,19 +119,25 @@ mod tests {
         // Same per-node iteration budget; asynchrony should not change the
         // quality of the solution materially (paper Fig. 4).
         let p = problem(142, 4, 40, 6);
-        let smtl_cfg = SmtlConfig { iters: 120, km: KmSchedule::fixed(0.9), ..Default::default() };
-        let amtl_cfg = crate::coordinator::amtl::AmtlConfig {
+        let cfg = RunConfig {
             iters_per_node: 120,
             km: KmSchedule::fixed(0.9),
             ..Default::default()
         };
-        let rs = run_smtl(&p, p.build_computes(Engine::Native, None).unwrap(), &smtl_cfg).unwrap();
-        let ra = crate::coordinator::amtl::run_amtl(
-            &p,
-            p.build_computes(Engine::Native, None).unwrap(),
-            &amtl_cfg,
-        )
-        .unwrap();
+        let rs = Session::builder(&p)
+            .config(cfg.clone())
+            .schedule(Synchronized)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let ra = Session::builder(&p)
+            .config(cfg)
+            .schedule(crate::coordinator::schedule::Async)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
         let fs = p.objective(&rs.w_final);
         let fa = p.objective(&ra.w_final);
         assert!((fs - fa).abs() / fs.max(1e-9) < 0.1, "smtl {fs} vs amtl {fa}");

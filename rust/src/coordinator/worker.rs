@@ -10,6 +10,7 @@
 //!    native mirror),
 //! 4. applies the KM relaxation `v_t ← v_t + c_{t,k} η_k (u − v_t)`.
 
+use super::schedule::StalenessGate;
 use super::server::CentralServer;
 use super::step_size::StepController;
 use crate::coordinator::metrics::Recorder;
@@ -20,7 +21,7 @@ use anyhow::Result;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Everything one AMTL worker thread needs.
+/// Everything one free-running worker thread needs.
 pub struct WorkerCtx {
     pub t: usize,
     pub iters: usize,
@@ -37,6 +38,9 @@ pub struct WorkerCtx {
     pub time_scale: Duration,
     pub recorder: Arc<Recorder>,
     pub rng: Rng,
+    /// Bounded-staleness gate (the `SemiSync` schedule); `None` = fully
+    /// asynchronous.
+    pub gate: Option<Arc<StalenessGate>>,
 }
 
 /// Per-worker outcome.
@@ -58,61 +62,112 @@ pub struct WorkerStats {
     pub last_task_loss: f64,
 }
 
-/// The asynchronous worker loop. Runs `iters` activations, never waiting
-/// for any other node.
+/// The free-running worker loop. Runs `iters` activations, waiting on no
+/// other node (unless a staleness gate bounds how far ahead it may run).
 pub fn run_worker(mut ctx: WorkerCtx, compute: &mut dyn TaskCompute) -> Result<WorkerStats> {
+    let gate = ctx.gate.clone();
+    let result = worker_loop(&mut ctx, compute);
+    // Whatever the exit path (budget exhausted, crash, compute error),
+    // leave the staleness minimum so no peer blocks on a dead node.
+    if let Some(g) = &gate {
+        g.deactivate(ctx.t);
+    }
+    result
+}
+
+/// What one activation produced (the "receive → compute" phase shared by
+/// every schedule; the caller decides how to commit the update).
+pub(crate) enum Activation {
+    /// The node died on this activation (fault injection).
+    Crashed,
+    /// The compute ran but the update was lost in transit.
+    Dropped,
+    /// A forward-step update ready to commit.
+    Update(Vec<f64>),
+}
+
+/// One activation of task node `ctx.t`: fault check, simulated network
+/// delay (recorded in paper units for the dynamic step controller,
+/// Eq. III.6), backward-step fetch via `fetch_w`, and the forward step
+/// (minibatch or full batch). Shared by the free-running worker loop and
+/// the synchronized round loop so the per-activation protocol cannot
+/// drift between schedules.
+pub(crate) fn run_activation(
+    ctx: &mut WorkerCtx,
+    compute: &mut dyn TaskCompute,
+    k: u64,
+    fetch_w: impl FnOnce() -> Vec<f64>,
+    stats: &mut WorkerStats,
+) -> Result<Activation> {
+    // 0. Fault check for this activation.
+    let outcome = ctx.faults.outcome(ctx.t, k, &mut ctx.rng);
+    if outcome == FaultOutcome::Crashed {
+        return Ok(Activation::Crashed);
+    }
+
+    // 1. Simulated network delay for this activation.
+    let sample = ctx.delay.sample(ctx.t, &mut ctx.rng);
+    if sample.duration > Duration::ZERO {
+        std::thread::sleep(sample.duration);
+    }
+    stats.total_delay_secs += sample.duration.as_secs_f64();
+    let units = sample.duration.as_secs_f64() / ctx.time_scale.as_secs_f64().max(1e-12);
+    ctx.controller.record_delay(ctx.t, units);
+
+    // 2. Backward step block (server prox column or round broadcast).
+    let t0 = Instant::now();
+    let w_hat = fetch_w();
+    stats.backward_wait_secs += t0.elapsed().as_secs_f64();
+
+    // 3. Forward step on the task's private data.
+    let t1 = Instant::now();
+    let (u, task_loss) = match ctx.sgd_fraction {
+        Some(frac) => compute.step_minibatch(&w_hat, ctx.server.eta(), frac, &mut ctx.rng)?,
+        None => compute.step(&w_hat, ctx.server.eta())?,
+    };
+    stats.compute_secs += t1.elapsed().as_secs_f64();
+    stats.last_task_loss = task_loss;
+
+    // 3b. Lost in transit? The compute happened but the server never
+    // sees it (the paper's failure mode; the next activation retries).
+    if outcome == FaultOutcome::Dropped {
+        stats.dropped += 1;
+        return Ok(Activation::Dropped);
+    }
+    Ok(Activation::Update(u))
+}
+
+fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<WorkerStats> {
     let mut stats = WorkerStats::default();
     for k in 0..ctx.iters {
-        // 0. Fault check for this activation.
-        let outcome = ctx.faults.outcome(ctx.t, k as u64, &mut ctx.rng);
-        if outcome == FaultOutcome::Crashed {
-            stats.crashed = true;
-            break;
+        // Bounded staleness: wait until activation `k` is allowed.
+        if let Some(g) = &ctx.gate {
+            g.wait_to_start(k as u64);
         }
 
-        // 1. Simulated network delay for this activation.
-        let sample = ctx.delay.sample(ctx.t, &mut ctx.rng);
-        if sample.duration > Duration::ZERO {
-            std::thread::sleep(sample.duration);
-        }
-        stats.total_delay_secs += sample.duration.as_secs_f64();
-        // Record in paper units for the dynamic step controller (Eq. III.6).
-        let units = sample.duration.as_secs_f64() / ctx.time_scale.as_secs_f64().max(1e-12);
-        ctx.controller.record_delay(ctx.t, units);
-
-        // 2. Backward step block (inconsistent read of V is inside).
-        let t0 = Instant::now();
-        let w_hat = ctx.server.prox_col(ctx.t);
-        stats.backward_wait_secs += t0.elapsed().as_secs_f64();
-
-        // 3. Forward step on the task's private data.
-        let t1 = Instant::now();
-        let (u, task_loss) = match ctx.sgd_fraction {
-            Some(frac) => {
-                compute.step_minibatch(&w_hat, ctx.server.eta(), frac, &mut ctx.rng)?
+        let server = Arc::clone(&ctx.server);
+        let t = ctx.t;
+        match run_activation(ctx, compute, k as u64, move || server.prox_col(t), &mut stats)? {
+            Activation::Crashed => {
+                stats.crashed = true;
+                break;
             }
-            None => compute.step(&w_hat, ctx.server.eta())?,
-        };
-        stats.compute_secs += t1.elapsed().as_secs_f64();
-        stats.last_task_loss = task_loss;
-
-        // 3b. Lost in transit? The compute happened but the server never
-        // sees it (the paper's failure mode; the next activation retries).
-        if outcome == FaultOutcome::Dropped {
-            stats.dropped += 1;
-            continue;
+            Activation::Dropped => {}
+            Activation::Update(u) => {
+                // KM relaxation on this task block.
+                let step = ctx.controller.step(ctx.t);
+                let version = ctx.server.state().km_update(ctx.t, &u, step);
+                // Keep the (optional) online-SVD factorization in sync.
+                let new_col = ctx.server.state().read_col(ctx.t);
+                ctx.server.notify_column_update(ctx.t, &new_col);
+                stats.updates += 1;
+                ctx.recorder
+                    .maybe_record(version, || ctx.server.state().snapshot());
+            }
         }
-
-        // 4. KM relaxation on this task block.
-        let step = ctx.controller.step(ctx.t);
-        let version = ctx.server.state().km_update(ctx.t, &u, step);
-        // Keep the (optional) online-SVD factorization in sync.
-        let new_col = ctx.server.state().read_col(ctx.t);
-        ctx.server.notify_column_update(ctx.t, &new_col);
-
-        stats.updates += 1;
-        ctx.recorder
-            .maybe_record(version, || ctx.server.state().snapshot());
+        if let Some(g) = &ctx.gate {
+            g.finish_iter(ctx.t);
+        }
     }
     Ok(stats)
 }
@@ -160,6 +215,7 @@ mod tests {
             time_scale: Duration::from_millis(100),
             recorder: Arc::new(Recorder::new(1)),
             rng: Rng::new(121),
+            gate: None,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert_eq!(stats.updates, 7);
@@ -183,6 +239,7 @@ mod tests {
             time_scale: Duration::from_millis(100),
             recorder: Arc::new(Recorder::new(1000)),
             rng: Rng::new(123),
+            gate: None,
         };
         run_worker(ctx, &mut compute).unwrap();
         let w1 = server.prox_col(0);
@@ -212,6 +269,7 @@ mod tests {
             time_scale: Duration::from_millis(10),
             recorder: Arc::new(Recorder::new(1000)),
             rng: Rng::new(125),
+            gate: None,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert!((stats.total_delay_secs - 0.06).abs() < 0.02);

@@ -1,6 +1,7 @@
 //! Shared experiment harness used by the bench binaries (`rust/benches/`)
-//! and the examples: engine selection, paired AMTL/SMTL runs under one
-//! network setting, and paper-style table formatting.
+//! and the examples: engine selection, paired runs of any
+//! [`Schedule`] under one network setting, and paper-style table
+//! formatting.
 //!
 //! Delay units: the paper injects delays measured in seconds (offsets
 //! 5/10/30 s). Experiments here scale one "paper second" to
@@ -9,7 +10,9 @@
 //! §Substitutions, sensitivity check in EXPERIMENTS.md).
 
 use crate::coordinator::step_size::KmSchedule;
-use crate::coordinator::{run_amtl, run_smtl, AmtlConfig, MtlProblem, RunResult, SmtlConfig};
+use crate::coordinator::{
+    Async, MtlProblem, RunConfig, RunResult, Schedule, Session, Synchronized,
+};
 use crate::net::DelayModel;
 use crate::runtime::{ComputePool, Engine, PoolConfig};
 use anyhow::Result;
@@ -57,8 +60,9 @@ impl ExpConfig {
         DelayModel::paper_offset(self.time_scale.mul_f64(self.offset_units))
     }
 
-    pub fn amtl(&self) -> AmtlConfig {
-        AmtlConfig {
+    /// Lower into the coordinator's schedule-agnostic [`RunConfig`].
+    pub fn run_config(&self) -> RunConfig {
+        RunConfig {
             iters_per_node: self.iters,
             delay: self.delay_model(),
             faults: crate::net::FaultModel::None,
@@ -70,17 +74,6 @@ impl ExpConfig {
             prox_every: self.prox_every,
             record_every: self.record_every,
             online_svd: self.online_svd,
-            seed: self.seed,
-        }
-    }
-
-    pub fn smtl(&self) -> SmtlConfig {
-        SmtlConfig {
-            iters: self.iters,
-            delay: self.delay_model(),
-            time_scale: self.time_scale,
-            km: KmSchedule::fixed(self.eta_k),
-            record_every: self.record_every,
             seed: self.seed,
         }
     }
@@ -121,6 +114,24 @@ pub fn warm(problem: &MtlProblem, engine: Engine, pool: Option<&ComputePool>) ->
     Ok(())
 }
 
+/// Run `cfg` once under the given schedule (the one experiment driver:
+/// AMTL, SMTL, and semi-sync runs all go through here).
+pub fn run_once(
+    problem: &MtlProblem,
+    engine: Engine,
+    pool: Option<&ComputePool>,
+    cfg: &ExpConfig,
+    schedule: impl Schedule + 'static,
+) -> Result<RunResult> {
+    Session::builder(problem)
+        .engine(engine)
+        .pool(pool)
+        .config(cfg.run_config())
+        .schedule(schedule)
+        .build()?
+        .run()
+}
+
 /// Run AMTL under `cfg`, returning the result.
 pub fn run_amtl_once(
     problem: &MtlProblem,
@@ -128,8 +139,7 @@ pub fn run_amtl_once(
     pool: Option<&ComputePool>,
     cfg: &ExpConfig,
 ) -> Result<RunResult> {
-    let computes = problem.build_computes(engine, pool)?;
-    run_amtl(problem, computes, &cfg.amtl())
+    run_once(problem, engine, pool, cfg, Async)
 }
 
 /// Run SMTL under `cfg`, returning the result.
@@ -139,8 +149,7 @@ pub fn run_smtl_once(
     pool: Option<&ComputePool>,
     cfg: &ExpConfig,
 ) -> Result<RunResult> {
-    let computes = problem.build_computes(engine, pool)?;
-    run_smtl(problem, computes, &cfg.smtl())
+    run_once(problem, engine, pool, cfg, Synchronized)
 }
 
 /// Markdown-ish table printer for paper-style rows.
@@ -220,6 +229,24 @@ mod tests {
         assert_eq!(a.updates, 9);
         assert_eq!(s.updates, 9);
         assert!(a.mean_delay_secs > 0.0 && s.mean_delay_secs > 0.0);
+    }
+
+    #[test]
+    fn run_once_accepts_any_schedule() {
+        let mut rng = Rng::new(151);
+        let ds = synthetic::lowrank_regression(&[20; 3], 5, 2, 0.1, &mut rng);
+        let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng);
+        let cfg = ExpConfig { iters: 4, ..Default::default() };
+        let r = run_once(
+            &p,
+            Engine::Native,
+            None,
+            &cfg,
+            crate::coordinator::SemiSync { staleness_bound: 2 },
+        )
+        .unwrap();
+        assert_eq!(r.method, "semisync");
+        assert_eq!(r.updates, 12);
     }
 
     #[test]

@@ -11,8 +11,13 @@
 //!   the [`runtime`] module loads and executes via PJRT. Python is never on
 //!   the update path.
 //!
-//! Entry points: [`coordinator::amtl::run_amtl`], [`coordinator::smtl::run_smtl`],
-//! the `amtl` CLI (`rust/src/main.rs`), and the runnable `examples/`.
+//! The coordinator exposes one entry point: a [`coordinator::Session`]
+//! built over a shared [`coordinator::RunConfig`] and a pluggable
+//! [`coordinator::Schedule`] — [`coordinator::Async`] (Algorithm 1),
+//! [`coordinator::Synchronized`] (§III.B barrier rounds), or
+//! [`coordinator::SemiSync`] (bounded staleness). The old forked drivers
+//! survive as deprecated shims (`run_amtl` / `run_smtl`). Also see the
+//! `amtl` CLI (`rust/src/main.rs`) and the runnable `examples/`.
 
 pub mod config;
 pub mod coordinator;

@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!
-//! * `train`     — run AMTL (or SMTL with `--method smtl`) on a dataset.
+//! * `train`     — run one optimization under a chosen update schedule
+//!                 (`--method amtl|smtl|semisync`).
 //! * `compare`   — AMTL vs SMTL side by side under one network setting.
 //! * `datasets`  — print the Table-II style description of the built-in
 //!                 dataset simulators.
@@ -13,12 +14,14 @@
 //! ```text
 //! amtl train --dataset school-small --reg nuclear --lambda 0.5 --iters 20
 //! amtl train --tasks 10 --n 100 --dim 50 --offset 5 --engine pjrt
+//! amtl train --method semisync --staleness 4 --tasks 8 --offset 5
 //! amtl compare --tasks 5 --offset 5 --iters 10
 //! ```
 
 use amtl::config::Opts;
-use amtl::coordinator::step_size::KmSchedule;
-use amtl::coordinator::{run_amtl, run_smtl, AmtlConfig, MtlProblem, SmtlConfig};
+use amtl::coordinator::{
+    Async, MtlProblem, Schedule, SemiSync, Session, Synchronized,
+};
 use amtl::data::{public, synthetic, MultiTaskDataset};
 use amtl::optim::prox::RegularizerKind;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
@@ -81,7 +84,11 @@ PROBLEM OPTIONS:
   --eta-scale S  eta = S * 2/L_max, S in (0,1)      [0.5]
 
 RUN OPTIONS:
-  --method <amtl|smtl>                             [amtl]
+  --method <amtl|smtl|semisync>                    [amtl]
+                 amtl     = asynchronous (Algorithm 1, no barrier)
+                 smtl     = synchronized baseline (barrier per round)
+                 semisync = bounded staleness (see --staleness)
+  --staleness B  semisync: max activations ahead of the slowest node [4]
   --iters K      activations per task node          [10]
   --offset U     delay offset in paper units        [0]
   --time-scale MS  wall-clock ms per paper unit     [100]
@@ -158,6 +165,48 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
     })
 }
 
+/// Configure a [`Session`] builder from the parsed run options (the one
+/// wiring path every method shares).
+fn session<'p>(
+    problem: &'p MtlProblem,
+    pool: Option<&'p ComputePool>,
+    ro: &RunOpts,
+    schedule: Box<dyn Schedule>,
+) -> amtl::coordinator::SessionBuilder<'p> {
+    Session::builder(problem)
+        .engine(ro.engine)
+        .pool(pool)
+        .iters_per_node(ro.iters)
+        .sgd_fraction(ro.sgd_fraction)
+        .time_scale(ro.time_scale)
+        .eta_k(ro.eta_k)
+        .dynamic_step(ro.dynamic)
+        .prox_every(ro.prox_every)
+        .record_every(ro.record_every)
+        .online_svd(ro.online_svd)
+        .seed(ro.seed)
+        .paper_offset(ro.offset)
+        .schedule_box(schedule)
+}
+
+/// Resolve `--method` (+ `--staleness`) into a schedule.
+fn parse_schedule(opts: &Opts) -> Result<Box<dyn Schedule>> {
+    let method = opts
+        .get_one_of("method", &["amtl", "smtl", "semisync"], "amtl")
+        .map_err(|e| anyhow!("{e}"))?;
+    let staleness_given = opts.get("staleness").is_some();
+    let staleness = opts.get_u64("staleness", 4)?;
+    if staleness_given && method != "semisync" {
+        bail!("--staleness only applies to --method semisync (got --method {method})");
+    }
+    Ok(match method.as_str() {
+        "amtl" => Box::new(Async),
+        "smtl" => Box::new(Synchronized),
+        "semisync" => Box::new(SemiSync { staleness_bound: staleness }),
+        _ => unreachable!("get_one_of validated the method"),
+    })
+}
+
 fn make_pool(ro: &RunOpts) -> Result<Option<ComputePool>> {
     if ro.engine == Engine::Pjrt {
         Ok(Some(ComputePool::new(PoolConfig {
@@ -172,7 +221,7 @@ fn make_pool(ro: &RunOpts) -> Result<Option<ComputePool>> {
 fn cmd_train(opts: &Opts) -> Result<()> {
     let mut rng = Rng::new(opts.get_u64("seed", 7)?);
     let problem = build_problem(opts, &mut rng)?;
-    let method = opts.get_or("method", "amtl");
+    let schedule = parse_schedule(opts)?;
     let ro = run_opts(opts, problem.t())?;
     opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
 
@@ -185,43 +234,7 @@ fn cmd_train(opts: &Opts) -> Result<()> {
         problem.l_max
     );
     let pool = make_pool(&ro)?;
-    let computes = problem.build_computes(ro.engine, pool.as_ref())?;
-
-    let result = match method.as_str() {
-        "amtl" => run_amtl(
-            &problem,
-            computes,
-            &AmtlConfig {
-                iters_per_node: ro.iters,
-                time_scale: ro.time_scale,
-                km: KmSchedule::fixed(ro.eta_k),
-                dynamic_step: ro.dynamic,
-                dyn_window: 5,
-                prox_every: ro.prox_every,
-                record_every: ro.record_every,
-                online_svd: ro.online_svd,
-                seed: ro.seed,
-                delay: amtl::net::DelayModel::None,
-                faults: amtl::net::FaultModel::None,
-                sgd_fraction: ro.sgd_fraction,
-            }
-            .with_paper_offset(ro.offset),
-        )?,
-        "smtl" => run_smtl(
-            &problem,
-            computes,
-            &SmtlConfig {
-                iters: ro.iters,
-                time_scale: ro.time_scale,
-                km: KmSchedule::fixed(ro.eta_k),
-                record_every: ro.record_every,
-                seed: ro.seed,
-                delay: amtl::net::DelayModel::None,
-            }
-            .with_paper_offset(ro.offset),
-        )?,
-        other => bail!("unknown --method '{other}'"),
-    };
+    let result = session(&problem, pool.as_ref(), &ro, schedule).build()?.run()?;
 
     println!("{}", result.summary());
     let objs = result.compute_objectives(|w| problem.objective(w), |v| problem.prox_map(v));
@@ -245,38 +258,12 @@ fn cmd_compare(opts: &Opts) -> Result<()> {
     println!("dataset: {}", problem.dataset.describe());
     let pool = make_pool(&ro)?;
 
-    let amtl_res = run_amtl(
-        &problem,
-        problem.build_computes(ro.engine, pool.as_ref())?,
-        &AmtlConfig {
-            iters_per_node: ro.iters,
-            time_scale: ro.time_scale,
-            km: KmSchedule::fixed(ro.eta_k),
-            dynamic_step: ro.dynamic,
-            dyn_window: 5,
-            prox_every: ro.prox_every,
-            record_every: ro.record_every,
-            online_svd: ro.online_svd,
-            seed: ro.seed,
-            delay: amtl::net::DelayModel::None,
-            faults: amtl::net::FaultModel::None,
-            sgd_fraction: ro.sgd_fraction,
-        }
-        .with_paper_offset(ro.offset),
-    )?;
-    let smtl_res = run_smtl(
-        &problem,
-        problem.build_computes(ro.engine, pool.as_ref())?,
-        &SmtlConfig {
-            iters: ro.iters,
-            time_scale: ro.time_scale,
-            km: KmSchedule::fixed(ro.eta_k),
-            record_every: ro.record_every,
-            seed: ro.seed,
-            delay: amtl::net::DelayModel::None,
-        }
-        .with_paper_offset(ro.offset),
-    )?;
+    let amtl_res = session(&problem, pool.as_ref(), &ro, Box::new(Async))
+        .build()?
+        .run()?;
+    let smtl_res = session(&problem, pool.as_ref(), &ro, Box::new(Synchronized))
+        .build()?
+        .run()?;
 
     println!("{}", amtl_res.summary());
     println!("{}", smtl_res.summary());

@@ -4,7 +4,7 @@
 //! PJRT equivalence is covered by `integration_runtime.rs`.
 
 use amtl::coordinator::step_size::KmSchedule;
-use amtl::coordinator::{run_amtl, run_smtl, AmtlConfig, MtlProblem, SmtlConfig};
+use amtl::coordinator::{Async, MtlProblem, RunConfig, RunResult, Schedule, Session, Synchronized};
 use amtl::data::{public, synthetic};
 use amtl::experiments::{run_amtl_once, run_smtl_once, ExpConfig};
 use amtl::net::DelayModel;
@@ -17,6 +17,19 @@ fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlP
     let mut rng = Rng::new(seed);
     let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
     MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+fn run_schedule(
+    p: &MtlProblem,
+    cfg: &RunConfig,
+    schedule: impl Schedule + 'static,
+) -> anyhow::Result<RunResult> {
+    Session::builder(p)
+        .engine(Engine::Native)
+        .config(cfg.clone())
+        .schedule(schedule)
+        .build()?
+        .run()
 }
 
 // ---------------------------------------------------------------- timing
@@ -55,7 +68,7 @@ fn one_straggler_does_not_stall_amtl() {
         offset: Duration::from_millis(30),
         jitter: Duration::ZERO,
     };
-    let cfg = AmtlConfig {
+    let cfg = RunConfig {
         iters_per_node: 5,
         delay: DelayModel::PerNode {
             per_node: vec![
@@ -68,7 +81,7 @@ fn one_straggler_does_not_stall_amtl() {
         },
         ..Default::default()
     };
-    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let r = run_schedule(&p, &cfg, Async).unwrap();
     // Straggler: 5 × 30ms = 150ms; wall ≈ straggler's own budget, not T× it.
     assert!(r.wall_time < Duration::from_millis(400), "wall {:?}", r.wall_time);
     assert_eq!(r.updates, 25);
@@ -79,14 +92,7 @@ fn one_straggler_does_not_stall_amtl() {
 #[test]
 fn amtl_and_smtl_agree_with_centralized_fista() {
     let p = lowrank_problem(203, 5, 60, 8, 0.5);
-    let masks: Vec<Vec<f64>> = p.dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
-    let tasks: Vec<amtl::optim::fista::TaskData> = p
-        .dataset
-        .tasks
-        .iter()
-        .zip(&masks)
-        .map(|(t, m)| amtl::optim::fista::TaskData { x: &t.x, y: &t.y, mask: m, loss: t.loss })
-        .collect();
+    let tasks = p.fista_tasks();
     let mut reg = p.regularizer();
     let f_star = *amtl::optim::fista::fista(&tasks, &mut reg, p.l_max, 3000, 1e-12)
         .history
@@ -214,13 +220,13 @@ fn school_sim_full_run_is_stable() {
 #[test]
 fn smtl_trajectory_is_monotone_decreasing_for_safe_steps() {
     let p = lowrank_problem(210, 4, 50, 8, 0.3);
-    let cfg = SmtlConfig {
-        iters: 40,
+    let cfg = RunConfig {
+        iters_per_node: 40,
         km: KmSchedule::fixed(0.9),
         record_every: 4,
         ..Default::default()
     };
-    let r = run_smtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let r = run_schedule(&p, &cfg, Synchronized).unwrap();
     let objs = r.compute_objectives(|w| p.objective(w), |v| p.prox_map(v));
     let mut violations = 0;
     for w in objs.windows(2) {
@@ -234,12 +240,12 @@ fn smtl_trajectory_is_monotone_decreasing_for_safe_steps() {
 #[test]
 fn zero_iteration_runs_are_clean() {
     let p = lowrank_problem(211, 3, 10, 4, 0.1);
-    let cfg = AmtlConfig { iters_per_node: 0, ..Default::default() };
-    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let cfg = RunConfig { iters_per_node: 0, ..Default::default() };
+    let r = run_schedule(&p, &cfg, Async).unwrap();
     assert_eq!(r.updates, 0);
     assert_eq!(r.v_final, amtl::linalg::Mat::zeros(4, 3));
-    let cfg = SmtlConfig { iters: 0, ..Default::default() };
-    let r = run_smtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let cfg = RunConfig { iters_per_node: 0, ..Default::default() };
+    let r = run_schedule(&p, &cfg, Synchronized).unwrap();
     assert_eq!(r.updates, 0);
 }
 
@@ -248,7 +254,14 @@ fn mismatched_compute_count_is_an_error() {
     let p = lowrank_problem(212, 3, 10, 4, 0.1);
     let mut computes = p.build_computes(Engine::Native, None).unwrap();
     computes.pop();
-    assert!(run_amtl(&p, computes, &AmtlConfig::default()).is_err());
+    assert!(Session::builder(&p).computes(computes).build().is_err());
+    // The deprecated shim surfaces the same validation.
+    #[allow(deprecated)]
+    {
+        let mut computes = p.build_computes(Engine::Native, None).unwrap();
+        computes.pop();
+        assert!(amtl::coordinator::run_amtl(&p, computes, &RunConfig::default()).is_err());
+    }
 }
 
 #[test]
@@ -269,13 +282,13 @@ fn prox_every_tradeoff_preserves_convergence() {
 #[test]
 fn online_svd_ablation_converges_on_small_problem() {
     let p = lowrank_problem(214, 3, 30, 6, 0.2);
-    let cfg = AmtlConfig {
+    let cfg = RunConfig {
         iters_per_node: 100,
         km: KmSchedule::fixed(0.9),
         online_svd: true,
         ..Default::default()
     };
-    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let r = run_schedule(&p, &cfg, Async).unwrap();
     let f0 = p.objective(&amtl::linalg::Mat::zeros(6, 3));
     let f1 = p.objective(&r.w_final);
     assert!(f1 < 0.2 * f0, "online-SVD run: {f0} -> {f1}");
@@ -287,13 +300,13 @@ fn online_svd_ablation_converges_on_small_problem() {
 fn dropped_updates_are_counted_and_progress_continues() {
     use amtl::net::FaultModel;
     let p = lowrank_problem(215, 4, 40, 6, 0.3);
-    let cfg = AmtlConfig {
+    let cfg = RunConfig {
         iters_per_node: 100,
         km: KmSchedule::fixed(0.9),
         faults: FaultModel::DropActivation { p: 0.3 },
         ..Default::default()
     };
-    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let r = run_schedule(&p, &cfg, Async).unwrap();
     assert!(r.dropped_updates > 50, "expected ~120 drops, got {}", r.dropped_updates);
     assert_eq!(r.updates + r.dropped_updates, 400);
     // Despite 30% loss, the run still converges substantially.
@@ -305,13 +318,13 @@ fn dropped_updates_are_counted_and_progress_continues() {
 fn crashed_node_freezes_its_block_but_others_finish() {
     use amtl::net::FaultModel;
     let p = lowrank_problem(216, 4, 30, 6, 0.3);
-    let cfg = AmtlConfig {
+    let cfg = RunConfig {
         iters_per_node: 50,
         km: KmSchedule::fixed(0.9),
         faults: FaultModel::CrashAfter { node: 2, after: 5 },
         ..Default::default()
     };
-    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let r = run_schedule(&p, &cfg, Async).unwrap();
     assert_eq!(r.crashed_nodes, vec![2]);
     assert_eq!(r.updates_per_node[2], 5);
     for t in [0usize, 1, 3] {
@@ -324,8 +337,8 @@ fn crashed_node_freezes_its_block_but_others_finish() {
 #[test]
 fn perf_counters_are_populated() {
     let p = lowrank_problem(217, 3, 50, 8, 0.3);
-    let cfg = AmtlConfig { iters_per_node: 20, ..Default::default() };
-    let r = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &cfg).unwrap();
+    let cfg = RunConfig { iters_per_node: 20, ..Default::default() };
+    let r = run_schedule(&p, &cfg, Async).unwrap();
     assert!(r.compute_secs > 0.0, "forward-compute time must be measured");
     assert!(r.backward_wait_secs > 0.0, "backward-wait time must be measured");
     // Sanity: both are bounded by total wall × nodes.
@@ -341,19 +354,19 @@ fn sgd_forward_steps_converge() {
     // importance-corrected half-batch, AMTL still converges close to the
     // full-batch objective.
     let p = lowrank_problem(218, 4, 80, 8, 0.3);
-    let full_cfg = AmtlConfig {
+    let full_cfg = RunConfig {
         iters_per_node: 150,
         km: KmSchedule::fixed(0.9),
         ..Default::default()
     };
-    let sgd_cfg = AmtlConfig {
+    let sgd_cfg = RunConfig {
         iters_per_node: 150,
         km: KmSchedule::fixed(0.9),
         sgd_fraction: Some(0.5),
         ..Default::default()
     };
-    let r_full = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &full_cfg).unwrap();
-    let r_sgd = run_amtl(&p, p.build_computes(Engine::Native, None).unwrap(), &sgd_cfg).unwrap();
+    let r_full = run_schedule(&p, &full_cfg, Async).unwrap();
+    let r_sgd = run_schedule(&p, &sgd_cfg, Async).unwrap();
     let f_full = p.objective(&r_full.w_final);
     let f_sgd = p.objective(&r_sgd.w_final);
     let f0 = p.objective(&amtl::linalg::Mat::zeros(8, 4));

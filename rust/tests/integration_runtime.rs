@@ -145,31 +145,36 @@ fn pool_serves_concurrent_clients() {
 #[test]
 fn pjrt_amtl_run_matches_native_amtl_run() {
     use amtl::coordinator::step_size::KmSchedule;
-    use amtl::coordinator::{run_amtl, AmtlConfig, MtlProblem};
+    use amtl::coordinator::{Async, MtlProblem, RunConfig, Session};
     use amtl::optim::prox::RegularizerKind;
 
     let Some(pool) = pool(2) else { return };
     let mut rng = Rng::new(504);
     let ds = synthetic::lowrank_regression(&[100; 4], 50, 2, 0.1, &mut rng);
     let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.3, 0.5, &mut rng);
-    let cfg = AmtlConfig {
+    let cfg = RunConfig {
         iters_per_node: 30,
         km: KmSchedule::fixed(0.9),
         record_every: 1_000_000,
         ..Default::default()
     };
-    let r_native = run_amtl(
-        &problem,
-        problem.build_computes(Engine::Native, None).unwrap(),
-        &cfg,
-    )
-    .unwrap();
-    let r_pjrt = run_amtl(
-        &problem,
-        problem.build_computes(Engine::Pjrt, Some(&pool)).unwrap(),
-        &cfg,
-    )
-    .unwrap();
+    let r_native = Session::builder(&problem)
+        .engine(Engine::Native)
+        .config(cfg.clone())
+        .schedule(Async)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let r_pjrt = Session::builder(&problem)
+        .engine(Engine::Pjrt)
+        .pool(Some(&pool))
+        .config(cfg)
+        .schedule(Async)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     let f_native = problem.objective(&r_native.w_final);
     let f_pjrt = problem.objective(&r_pjrt.w_final);
     // Interleaving differs and PJRT is f32, but both must land at the same
@@ -337,6 +342,7 @@ fn full_pjrt_l21_amtl_run() {
                 time_scale: std::time::Duration::from_millis(10),
                 recorder: Arc::clone(&recorder),
                 rng: Rng::new(700 + t as u64),
+                gate: None,
             };
             s.spawn(move || run_worker(ctx, c.as_mut()).unwrap());
         }

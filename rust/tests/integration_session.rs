@@ -1,0 +1,215 @@
+//! Integration tests for the unified `Session` + `Schedule` API: builder
+//! validation, equivalence with the deprecated entry points, and the
+//! semi-synchronous schedule the old forked drivers could not express.
+
+use amtl::coordinator::{
+    Async, MtlProblem, RunConfig, Schedule, SemiSync, Session, Synchronized,
+};
+use amtl::data::synthetic;
+use amtl::net::{DelayModel, FaultModel};
+use amtl::optim::prox::RegularizerKind;
+use amtl::runtime::Engine;
+use amtl::util::Rng;
+use std::time::Duration;
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+// ----------------------------------------------------------- validation
+
+#[test]
+fn builder_reports_compute_count_mismatch() {
+    let p = lowrank_problem(800, 4, 10, 4, 0.1);
+    let mut computes = p.build_computes(Engine::Native, None).unwrap();
+    computes.pop();
+    let err = Session::builder(&p).computes(computes).build().unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("one compute per task"), "{msg}");
+}
+
+#[test]
+fn builder_reports_bad_schedule_params() {
+    let p = lowrank_problem(801, 2, 10, 4, 0.1);
+    let err = Session::builder(&p)
+        .schedule(SemiSync { staleness_bound: 0 })
+        .build()
+        .unwrap_err();
+    assert!(format!("{err}").contains("staleness_bound"), "{err}");
+}
+
+#[test]
+fn builder_reports_bad_run_config() {
+    let p = lowrank_problem(802, 2, 10, 4, 0.1);
+    assert!(Session::builder(&p).sgd_fraction(Some(2.0)).build().is_err());
+    assert!(Session::builder(&p).eta_k(-0.5).build().is_err());
+    assert!(Session::builder(&p).dyn_window(0).build().is_err());
+}
+
+// ------------------------------------------------- shim equivalence
+
+#[test]
+#[allow(deprecated)]
+fn session_async_is_bit_identical_to_run_amtl_on_one_task() {
+    // One task ⇒ no thread interleaving ⇒ both paths must agree exactly.
+    let p = lowrank_problem(803, 1, 40, 6, 0.2);
+    let cfg = RunConfig { iters_per_node: 30, ..Default::default() };
+    let r_new = Session::builder(&p)
+        .config(cfg.clone())
+        .schedule(Async)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let r_old = amtl::coordinator::run_amtl(
+        &p,
+        p.build_computes(Engine::Native, None).unwrap(),
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(r_new.v_final, r_old.v_final, "V bit-identical");
+    assert_eq!(r_new.w_final, r_old.w_final, "W bit-identical");
+    assert_eq!(r_new.updates, r_old.updates);
+    assert_eq!(r_new.prox_count, r_old.prox_count);
+    assert_eq!(r_new.method, r_old.method);
+}
+
+#[test]
+#[allow(deprecated)]
+fn session_synchronized_matches_run_smtl_updates_and_objective() {
+    let p = lowrank_problem(804, 4, 30, 6, 0.2);
+    let r_new = Session::builder(&p)
+        .iters_per_node(25)
+        .eta_k(0.9)
+        .schedule(Synchronized)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let old_cfg = amtl::coordinator::SmtlConfig {
+        iters: 25,
+        km: amtl::coordinator::step_size::KmSchedule::fixed(0.9),
+        ..Default::default()
+    };
+    let r_old = amtl::coordinator::run_smtl(
+        &p,
+        p.build_computes(Engine::Native, None).unwrap(),
+        &old_cfg,
+    )
+    .unwrap();
+    assert_eq!(r_new.updates, r_old.updates);
+    assert_eq!(r_new.updates_per_node, r_old.updates_per_node);
+    let f_new = p.objective(&r_new.w_final);
+    let f_old = p.objective(&r_old.w_final);
+    // Synchronized rounds are deterministic in value: exact agreement.
+    assert!(
+        (f_new - f_old).abs() < 1e-9,
+        "sync objective {f_new} vs shim {f_old}"
+    );
+}
+
+// --------------------------------------------------------- semi-sync
+
+#[test]
+fn semisync_converges_like_the_extremes() {
+    let p = lowrank_problem(805, 5, 50, 8, 0.3);
+    let run = |schedule: Box<dyn Schedule>| {
+        Session::builder(&p)
+            .iters_per_node(200)
+            .eta_k(0.9)
+            .record_every(1_000_000)
+            .schedule_box(schedule)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let f_async = p.objective(&run(Box::new(Async)).w_final);
+    let f_semi = p.objective(&run(Box::new(SemiSync { staleness_bound: 4 })).w_final);
+    let f_sync = p.objective(&run(Box::new(Synchronized)).w_final);
+    assert!(
+        (f_semi - f_sync).abs() / f_sync.max(1e-9) < 0.05,
+        "semisync {f_semi} vs sync {f_sync}"
+    );
+    assert!(
+        (f_semi - f_async).abs() / f_async.max(1e-9) < 0.05,
+        "semisync {f_semi} vs async {f_async}"
+    );
+}
+
+#[test]
+fn semisync_full_budget_under_heterogeneous_delays() {
+    // A straggler cannot be left behind by more than the bound, and every
+    // node still finishes its budget.
+    let p = lowrank_problem(806, 4, 20, 5, 0.2);
+    let fast = DelayModel::OffsetJitter {
+        offset: Duration::from_millis(1),
+        jitter: Duration::ZERO,
+    };
+    let slow = DelayModel::OffsetJitter {
+        offset: Duration::from_millis(8),
+        jitter: Duration::ZERO,
+    };
+    let r = Session::builder(&p)
+        .iters_per_node(12)
+        .delay(DelayModel::PerNode {
+            per_node: vec![
+                Box::new(slow),
+                Box::new(fast.clone()),
+                Box::new(fast.clone()),
+                Box::new(fast),
+            ],
+        })
+        .schedule(SemiSync { staleness_bound: 2 })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.updates_per_node, vec![12; 4]);
+    assert_eq!(r.method, "semisync");
+    // The bound makes fast nodes pace the straggler: total wall is at
+    // least the straggler's own serial budget.
+    assert!(r.wall_time >= Duration::from_millis(8 * 12 - 20), "wall {:?}", r.wall_time);
+}
+
+#[test]
+fn semisync_tolerates_crash_and_drop_faults() {
+    let p = lowrank_problem(807, 4, 30, 6, 0.2);
+    let r = Session::builder(&p)
+        .iters_per_node(40)
+        .faults(FaultModel::Both {
+            drop_p: 0.2,
+            crash_node: 3,
+            crash_after: 10,
+        })
+        .schedule(SemiSync { staleness_bound: 3 })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.crashed_nodes, vec![3]);
+    assert!(r.dropped_updates > 0, "expected some dropped updates");
+    assert!(r.updates + r.dropped_updates <= 160);
+    assert!(p.objective(&r.w_final).is_finite());
+}
+
+// ------------------------------------------------- builder conveniences
+
+#[test]
+fn paper_offset_injects_delays() {
+    let p = lowrank_problem(808, 3, 10, 4, 0.1);
+    let r = Session::builder(&p)
+        .iters_per_node(3)
+        .time_scale(Duration::from_millis(2))
+        .paper_offset(1.0)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        r.mean_delay_secs > 0.0,
+        "paper offset must produce nonzero delays"
+    );
+}
