@@ -17,7 +17,7 @@
 use amtl::config::Opts;
 use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 use std::time::Duration;
@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
     println!("engine: {engine:?}");
+    let mut log = BenchLog::new("ablation");
 
     // ---- 1. prox stride -------------------------------------------------
     banner(
@@ -47,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let r = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
+        log.record_run(&format!("prox_every_{pe}"), &r, p.objective(&r.w_final));
         table.row(vec![
             pe.to_string(),
             format!("{:.2}", p.objective(&r.w_final)),
@@ -75,6 +77,8 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         let r = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
+        let backend = if online { "online_svd" } else { "jacobi" };
+        log.record_run(&format!("nuclear_{backend}"), &r, p.objective(&r.w_final));
         table.row(vec![
             if online { "online (Brand)" } else { "full Jacobi" }.into(),
             format!("{:.2}", p.objective(&r.w_final)),
@@ -103,6 +107,8 @@ fn main() -> anyhow::Result<()> {
         };
         let a = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
         let s = run_once(&p, engine, pool.as_ref(), &cfg, Synchronized)?;
+        log.record_run(&format!("timescale_{ms}ms_amtl"), &a, p.objective(&a.w_final));
+        log.record_run(&format!("timescale_{ms}ms_smtl"), &s, p.objective(&s.w_final));
         table.row(vec![
             ms.to_string(),
             format!("{:.2}", a.wall_time.as_secs_f64()),
@@ -141,6 +147,7 @@ fn main() -> anyhow::Result<()> {
             .schedule_box(schedule)
             .build()?
             .run()?;
+        log.record_run(&format!("schedule_{label}"), &r, p.objective(&r.w_final));
         table.row(vec![
             label,
             format!("{:.2}", p.objective(&r.w_final)),
@@ -148,5 +155,6 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

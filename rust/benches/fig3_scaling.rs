@@ -17,7 +17,7 @@
 use amtl::config::Opts;
 use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -33,8 +33,11 @@ fn main() -> anyhow::Result<()> {
     let all = which.is_empty();
     let (engine, pool) = auto_engine(1);
     println!("engine: {engine:?}  (1 paper-second = 10 ms)");
+    let mut log = BenchLog::new("fig3_scaling");
 
-    let run = |t: usize, n: usize, d: usize, prox_every: u64| -> anyhow::Result<(f64, f64)> {
+    type RunArgs<'a> = (&'a str, usize, usize, usize, u64);
+    let run = |log: &mut BenchLog, args: RunArgs| -> anyhow::Result<(f64, f64)> {
+        let (label, t, n, d, prox_every) = args;
         let mut rng = Rng::new(42);
         let ds = synthetic::random_regression(t, n, d, &mut rng);
         let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
@@ -47,6 +50,8 @@ fn main() -> anyhow::Result<()> {
         amtl::experiments::warm(&problem, engine, pool.as_ref())?;
         let a = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
         let s = run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?;
+        log.record_run(&format!("{label}_amtl"), &a, problem.objective(&a.w_final));
+        log.record_run(&format!("{label}_smtl"), &s, problem.objective(&s.w_final));
         Ok((a.wall_time.as_secs_f64(), s.wall_time.as_secs_f64()))
     };
 
@@ -60,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         for &t in ts {
             // Paper's own mitigation for the backward-step pile-up at high
             // T: prox after several updates (§III.C); stride T/4.
-            let (a, s) = run(t, 100, 50, (t as u64 / 4).max(1))?;
+            let (a, s) = run(&mut log, (&format!("fig3a_t{t}"), t, 100, 50, (t as u64 / 4).max(1)))?;
             table.row(vec![
                 t.to_string(),
                 format!("{a:.3}"),
@@ -79,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         let ns: &[usize] = if quick { &[100, 1000] } else { &[100, 500, 1000, 5000, 10000] };
         let mut table = Table::new(&["n", "AMTL (s)", "SMTL (s)", "SMTL/AMTL"]);
         for &n in ns {
-            let (a, s) = run(5, n, 50, 1)?;
+            let (a, s) = run(&mut log, (&format!("fig3b_n{n}"), 5, n, 50, 1))?;
             table.row(vec![
                 n.to_string(),
                 format!("{a:.3}"),
@@ -98,7 +103,7 @@ fn main() -> anyhow::Result<()> {
         let ds: &[usize] = if quick { &[10, 100] } else { &[10, 25, 50, 100, 200, 400] };
         let mut table = Table::new(&["d", "AMTL (s)", "SMTL (s)", "SMTL/AMTL"]);
         for &d in ds {
-            let (a, s) = run(5, 100, d, 1)?;
+            let (a, s) = run(&mut log, (&format!("fig3c_d{d}"), 5, 100, d, 1))?;
             table.row(vec![
                 d.to_string(),
                 format!("{a:.3}"),
@@ -108,5 +113,6 @@ fn main() -> anyhow::Result<()> {
         }
         table.print();
     }
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

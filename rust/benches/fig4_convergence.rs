@@ -14,7 +14,7 @@
 use amtl::config::Opts;
 use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
     println!("engine: {engine:?}");
+    let mut log = BenchLog::new("fig4_convergence");
 
     for &t in if quick { &[5usize][..] } else { &[5usize, 10][..] } {
         banner(
@@ -60,6 +61,8 @@ fn main() -> anyhow::Result<()> {
         table.print();
         let last_a = objs_a.last().unwrap().2;
         let last_s = objs_s.last().unwrap().2;
+        log.record_run(&format!("t{t}_amtl"), &a, last_a);
+        log.record_run(&format!("t{t}_smtl"), &s, last_s);
         println!(
             "final: AMTL F={last_a:.4} in {:.2}s | SMTL F={last_s:.4} in {:.2}s | AMTL/SMTL time {:.2}x",
             a.wall_time.as_secs_f64(),
@@ -67,5 +70,6 @@ fn main() -> anyhow::Result<()> {
             a.wall_time.as_secs_f64() / s.wall_time.as_secs_f64().max(1e-12),
         );
     }
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

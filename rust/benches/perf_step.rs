@@ -10,7 +10,7 @@
 
 use amtl::coordinator::MtlProblem;
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, Table};
+use amtl::experiments::{auto_engine, BenchLog, Table};
 use amtl::linalg::Mat;
 use amtl::optim::prox::RegularizerKind;
 use amtl::optim::svd::{OnlineSvd, Svd};
@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
     println!("engine: {engine:?} (artifacts: {:?})", amtl::runtime::manifest::default_dir());
+    let mut log = BenchLog::new("perf_step");
 
     // ---- L2/L1: forward-step latency per bucket -------------------------
     println!("\n=== forward-step latency (PJRT artifact, per call) ===");
@@ -52,6 +53,10 @@ fn main() -> anyhow::Result<()> {
         let s = bench_secs(2, reps, || {
             let _ = computes[0].step(&w, 1e-4).unwrap();
         });
+        log.record_kv(
+            &format!("forward_{loss}_n{n}_d{d}"),
+            &[("mean_ms", s.mean * 1e3), ("min_ms", s.min * 1e3)],
+        );
         table.row(vec![
             loss.into(),
             n.to_string(),
@@ -81,6 +86,10 @@ fn main() -> anyhow::Result<()> {
             osvd.replace_column(0, &col);
             let _ = osvd.shrink_reconstruct(0.1);
         });
+        log.record_kv(
+            &format!("prox_d{d}_t{t}"),
+            &[("full_svt_ms", full.mean * 1e3), ("online_svt_ms", online.mean * 1e3)],
+        );
         table.row(vec![
             d.to_string(),
             t.to_string(),
@@ -89,5 +98,6 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

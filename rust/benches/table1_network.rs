@@ -21,7 +21,7 @@
 use amtl::config::Opts;
 use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
     let tasks: &[usize] = if quick { &[5] } else { &[5, 10, 15] };
     let iters = if quick { 3 } else { 10 };
 
+    let mut log = BenchLog::new("table1_network");
     let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
     for method in ["AMTL", "SMTL"] {
         for &off in offsets {
@@ -50,16 +51,17 @@ fn main() -> anyhow::Result<()> {
                     MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
                 let cfg = ExpConfig { iters, offset_units: off, ..Default::default() };
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
-                let wall = if method == "AMTL" {
+                let r = if method == "AMTL" {
                     run_once(&problem, engine, pool.as_ref(), &cfg, Async)?
-                        .wall_time
-                        .as_secs_f64()
                 } else {
                     run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?
-                        .wall_time
-                        .as_secs_f64()
                 };
-                cells.push(wall);
+                log.record_run(
+                    &format!("{method}-{off:.0}_t{t}"),
+                    &r,
+                    problem.objective(&r.w_final),
+                );
+                cells.push(r.wall_time.as_secs_f64());
             }
             rows.push((format!("{method}-{off:.0}"), cells));
         }
@@ -90,5 +92,6 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("shape check — AMTL faster than SMTL in every cell: {holds}");
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

@@ -21,7 +21,7 @@
 use amtl::config::Opts;
 use amtl::coordinator::{Async, MtlProblem, Synchronized};
 use amtl::data::public;
-use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
 
     let offsets: &[f64] = if quick { &[1.0] } else { &[1.0, 2.0, 3.0] };
     let iters = if quick { 2 } else { 10 };
+    let mut log = BenchLog::new("table3_public");
 
     let mut table = Table::new(
         &std::iter::once("Network")
@@ -69,20 +70,22 @@ fn main() -> anyhow::Result<()> {
                     ..Default::default()
                 };
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
-                let wall = if method == "AMTL" {
+                let r = if method == "AMTL" {
                     run_once(&problem, engine, pool.as_ref(), &cfg, Async)?
-                        .wall_time
-                        .as_secs_f64()
                 } else {
                     run_once(&problem, engine, pool.as_ref(), &cfg, Synchronized)?
-                        .wall_time
-                        .as_secs_f64()
                 };
-                cells.push(format!("{wall:.2}"));
+                log.record_run(
+                    &format!("{method}-{off:.0}_{name}"),
+                    &r,
+                    problem.objective(&r.w_final),
+                );
+                cells.push(format!("{:.2}", r.wall_time.as_secs_f64()));
             }
             table.row(cells);
         }
     }
     table.print();
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

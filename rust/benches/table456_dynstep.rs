@@ -19,7 +19,7 @@
 use amtl::config::Opts;
 use amtl::coordinator::{Async, MtlProblem};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, banner, run_once, ExpConfig, Table};
+use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
 use amtl::util::Rng;
 
@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         vec![5, 10, 15]
     };
     let offsets: &[f64] = if quick { &[5.0, 20.0] } else { &[5.0, 10.0, 15.0, 20.0] };
+    let mut log = BenchLog::new("table456_dynstep");
 
     for (ti, t) in tasks.iter().enumerate() {
         let roman = ["IV", "V", "VI"].get(ti).copied().unwrap_or("–");
@@ -66,6 +67,8 @@ fn main() -> anyhow::Result<()> {
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
                 let r = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
                 objs[i] = problem.objective(&r.w_final);
+                let step = if dynamic { "dynamic" } else { "fixed" };
+                log.record_run(&format!("t{t}_AMTL-{off:.0}_{step}"), &r, objs[i]);
             }
             table.row(vec![
                 format!("AMTL-{off:.0}"),
@@ -76,5 +79,6 @@ fn main() -> anyhow::Result<()> {
         }
         table.print();
     }
+    println!("bench records: {}", log.write()?.display());
     Ok(())
 }

@@ -106,6 +106,13 @@ impl Opts {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Required option: error (naming the flag) when absent.
+    pub fn require(&self, key: &str) -> Result<String, CliError> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| CliError(format!("missing required option --{key}")))
+    }
+
     /// Enumerated option: the value (or `default`) must be one of
     /// `allowed`, otherwise an error naming the alternatives.
     pub fn get_one_of(
@@ -203,6 +210,14 @@ mod tests {
         assert!(err.0.contains("amtl|smtl|semisync"), "{err}");
         let o3 = parse(&[]);
         assert_eq!(o3.get_one_of("method", &["amtl"], "amtl").unwrap(), "amtl");
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let o = parse(&["--connect", "127.0.0.1:7171"]);
+        assert_eq!(o.require("connect").unwrap(), "127.0.0.1:7171");
+        let err = o.require("node").unwrap_err();
+        assert!(err.0.contains("--node"), "{err}");
     }
 
     #[test]

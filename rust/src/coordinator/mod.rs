@@ -3,15 +3,19 @@
 //! The regularized MTL problem (Eq. III.1) is solved by a backward
 //! (proximal) step on the central server and forward (gradient) steps on
 //! the task nodes; *when* those steps happen is a pluggable
-//! [`Schedule`]. A [`Session`] wires one problem, one shared
-//! [`RunConfig`], and one schedule into a run:
+//! [`Schedule`], and *how* the two sides talk is a pluggable
+//! [`Transport`](crate::transport::Transport). A [`Session`] wires one
+//! problem, one shared [`RunConfig`], one schedule, and one transport into
+//! a run:
 //!
 //! ```no_run
 //! # use amtl::coordinator::{MtlProblem, Session, SemiSync};
+//! # use amtl::transport::TransportKind;
 //! # fn demo(problem: &MtlProblem) -> anyhow::Result<()> {
 //! let result = Session::builder(problem)
 //!     .iters_per_node(100)
 //!     .paper_offset(5.0)          // the paper's AMTL-5 network setting
+//!     .transport(TransportKind::Tcp) // real sockets, same math
 //!     .schedule(SemiSync { staleness_bound: 4 })
 //!     .build()?
 //!     .run()?;
@@ -25,30 +29,42 @@
 //!   the [`Orchestrator`](session::Orchestrator) surface schedules drive.
 //! * [`schedule`] — the [`Schedule`] trait and its implementations:
 //!   [`Async`] (Algorithm 1 / ARock, no barrier), [`Synchronized`]
-//!   (§III.B barrier rounds), [`SemiSync`] (bounded staleness).
+//!   (§III.B barrier rounds), [`SemiSync`] (bounded staleness). Every
+//!   schedule routes its backward fetches and KM commits through the
+//!   transport layer, so all three run unchanged over shared memory or
+//!   TCP.
 //! * [`state`] — the central server's shared model matrix `V ∈ R^{d×T}`
 //!   with per-task-block locking and *inconsistent* full-matrix snapshots
 //!   (the lock-free-read semantics of §III.C / Fig. 2, which the ARock
 //!   convergence analysis explicitly tolerates).
 //! * [`server`] — the backward step: proximal mapping of the coupling
-//!   regularizer over a snapshot of `V`, with a version-keyed cache.
-//! * [`worker`] — a task node: simulated network delay → fetch its prox
-//!   block → forward (gradient) step through
-//!   [`crate::runtime::TaskCompute`] → KM relaxation update of its own
-//!   block (Eq. III.4 / III.5).
+//!   regularizer over a snapshot of `V`, with a version-keyed cache, plus
+//!   [`server::CentralServer::commit_update`], the single commit path
+//!   both transports land updates through.
+//! * [`worker`] — a task node: network delay → fetch its prox block
+//!   through the transport → forward (gradient) step through
+//!   [`crate::runtime::TaskCompute`] → KM relaxation commit of its own
+//!   block (Eq. III.4 / III.5), again through the transport. A worker
+//!   never touches the server directly, which is what makes the
+//!   two-process deployment (`amtl --serve` / `amtl --node`) possible.
 //! * [`step_size`] — Theorem 1 step bound and the dynamic multiplier
 //!   `c_{t,k} = log(max(ν̄_{t,k}, 10))` of Eq. III.6.
 //! * [`metrics`] — objective trajectories, update counts, timing.
-//! * [`amtl`] / [`smtl`] — deprecated shims over the old forked entry
-//!   points (`run_amtl` / `run_smtl`).
+//!
+//! ## Data paths (what crosses the worker↔server edge)
+//!
+//! In-proc: `fetch` hands the worker a copy of the cached prox column;
+//! `push` is a direct call into the block-locked state. Over TCP the same
+//! two operations are `FetchProxCol`/`PushUpdate` frames (see
+//! [`crate::transport::wire`]): prox columns, update vectors, and scalars
+//! (η, KM step, version). Task data `(X_t, y_t)` stays on its node in
+//! both cases — the wire protocol has no frame that could carry it.
 
-pub mod amtl;
 pub mod metrics;
 pub mod problem;
 pub mod schedule;
 pub mod server;
 pub mod session;
-pub mod smtl;
 pub mod state;
 pub mod step_size;
 pub mod worker;
@@ -57,8 +73,3 @@ pub use metrics::RunResult;
 pub use problem::MtlProblem;
 pub use schedule::{Async, Schedule, SemiSync, StalenessGate, Synchronized};
 pub use session::{RunConfig, Session, SessionBuilder};
-
-#[allow(deprecated)]
-pub use amtl::{run_amtl, AmtlConfig};
-#[allow(deprecated)]
-pub use smtl::{run_smtl, SmtlConfig};

@@ -23,7 +23,7 @@
 use super::session::{Orchestrator, RunConfig};
 use super::worker::{run_activation, run_worker, Activation, WorkerStats};
 use anyhow::Result;
-use std::sync::{Barrier, Condvar, Mutex, RwLock};
+use std::sync::{Barrier, Condvar, Mutex};
 
 /// A worker orchestration policy. `orchestrate` must drive every task
 /// node to completion (or recorded crash) and return one [`WorkerStats`]
@@ -94,7 +94,7 @@ fn run_free(
     name: &str,
     gate: Option<std::sync::Arc<StalenessGate>>,
 ) -> Result<Vec<WorkerStats>> {
-    let mut ctxs = orch.worker_ctxs();
+    let mut ctxs = orch.worker_ctxs()?;
     if let Some(g) = &gate {
         for ctx in &mut ctxs {
             ctx.gate = Some(std::sync::Arc::clone(g));
@@ -133,10 +133,12 @@ fn run_free(
 }
 
 /// §III.B: classic map-reduce proximal gradient. Every round the server
-/// proxes once and broadcasts `Ŵ`; all nodes compute forward steps in
-/// parallel behind their own delays; a barrier waits for the slowest; the
-/// server applies the collected updates. Round time = max over nodes of
-/// (delay + compute) — the straggler effect the paper measures.
+/// proxes once (each node fetches its block through its transport; the
+/// version-keyed prox cache makes that one broadcast); all nodes compute
+/// forward steps in parallel behind their own delays; a barrier waits for
+/// the slowest; the round loop commits the collected updates in task
+/// order. Round time = max over nodes of (delay + compute) — the
+/// straggler effect the paper measures.
 ///
 /// Feature parity with the free-running schedules comes from the shared
 /// [`RunConfig`]: faults (a crashed node simply stops contributing —
@@ -157,12 +159,14 @@ impl Schedule for Synchronized {
         let server = orch.server();
         let controller = orch.controller();
         let recorder = orch.recorder();
-        let ctxs = orch.worker_ctxs();
+        // The round loop's own channel to the server (over TCP: its own
+        // connection) — workers only *fetch*; commits all flow through
+        // this one handle, in task order, exactly one batch per round.
+        let mut commit = orch.transport()?;
+        let ctxs = orch.worker_ctxs()?;
         let computes = orch.computes();
 
-        // Broadcast slot for Ŵ and collection slots for forward results.
-        let w_hat: RwLock<std::sync::Arc<crate::linalg::Mat>> =
-            RwLock::new(server.prox_matrix());
+        // Collection slots for the round's forward results.
         let slots: Vec<Mutex<Option<Vec<f64>>>> =
             (0..t_count).map(|_| Mutex::new(None)).collect();
         let barrier = Barrier::new(t_count + 1);
@@ -170,9 +174,14 @@ impl Schedule for Synchronized {
         let mut stats_out = Vec::new();
         std::thread::scope(|s| -> Result<()> {
             let mut handles = Vec::new();
+            // Known limitation: if spawning worker j fails after j > 0
+            // workers started, the early return leaves them parked at the
+            // round-start barrier and the scope join hangs. OS-level
+            // thread-spawn failure at T+1 threads is treated as fatal
+            // environment exhaustion; panics *inside* workers are
+            // contained below and do not have this problem.
             for (ctx, compute) in ctxs.into_iter().zip(computes.iter_mut()) {
                 let barrier = &barrier;
-                let w_hat = &w_hat;
                 let slots = &slots;
                 let handle = std::thread::Builder::new()
                     .name(format!("smtl-worker-{}", ctx.t))
@@ -185,7 +194,7 @@ impl Schedule for Synchronized {
                         // after the loop.
                         let mut failure: Option<anyhow::Error> = None;
                         for k in 0..ctx.iters {
-                            barrier.wait(); // round start: Ŵ published
+                            barrier.wait(); // round start: commits landed
                             if stats.crashed || failure.is_some() {
                                 // Dead node: keep the barrier count, do
                                 // nothing (its block stays frozen).
@@ -193,9 +202,25 @@ impl Schedule for Synchronized {
                                 continue;
                             }
                             let t = ctx.t;
-                            let fetch = || w_hat.read().unwrap().col(t).to_vec();
-                            match run_activation(&mut ctx, compute, k as u64, fetch, &mut stats)
-                            {
+                            // Every node fetches its block of the same
+                            // prox (the server's version-keyed cache
+                            // computes it once per round) — the broadcast
+                            // of §III.B, expressed through the transport.
+                            let fetch =
+                                |tr: &mut dyn crate::transport::Transport| tr.fetch_prox_col(t);
+                            // A panic in the compute must not unwind past
+                            // the barrier pacing (peers and the round loop
+                            // would deadlock waiting for this thread):
+                            // contain it and park it like any failure.
+                            let outcome = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    run_activation(&mut ctx, compute, k as u64, fetch, &mut stats)
+                                }),
+                            )
+                            .unwrap_or_else(|_| {
+                                Err(anyhow::anyhow!("worker {t} panicked mid-round"))
+                            });
+                            match outcome {
                                 Ok(Activation::Crashed) => stats.crashed = true,
                                 Ok(Activation::Dropped) => {}
                                 Ok(Activation::Update(u)) => {
@@ -214,29 +239,39 @@ impl Schedule for Synchronized {
                 handles.push(handle);
             }
 
-            // The server loop (this thread).
-            for iter in 0..iters {
+            // The round loop (this thread): commit the collected forward
+            // results through the transport, then sample the trajectory
+            // once per round. A commit failure must not abandon the
+            // barrier pacing (workers would deadlock mid-round): park it,
+            // keep the rounds turning without commits, surface it after
+            // the workers are joined.
+            let mut commit_failure: Option<anyhow::Error> = None;
+            for _ in 0..iters {
                 barrier.wait(); // release workers into the round
                 barrier.wait(); // wait for the slowest worker
+                if commit_failure.is_some() {
+                    continue;
+                }
                 for t in 0..t_count {
                     if let Some(u) = slots[t].lock().unwrap().take() {
                         let step = controller.step(t);
-                        server.state().km_update(t, &u, step);
-                        let new_col = server.state().read_col(t);
-                        server.notify_column_update(t, &new_col);
+                        if let Err(e) = commit.push_update(t, step, &u) {
+                            commit_failure = Some(e);
+                            break;
+                        }
                     }
                 }
                 recorder.maybe_record(server.state().version(), || server.state().snapshot());
-                if iter + 1 < iters {
-                    *w_hat.write().unwrap() = server.prox_matrix();
-                }
             }
             for h in handles {
                 stats_out.push(
                     h.join().map_err(|_| anyhow::anyhow!("smtl worker panicked"))??,
                 );
             }
-            Ok(())
+            match commit_failure {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
         })?;
         Ok(stats_out)
     }

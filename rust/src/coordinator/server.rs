@@ -126,6 +126,21 @@ impl CentralServer {
         }
     }
 
+    /// Commit one forward-step result: the KM relaxation
+    /// `v_t ← v_t + step·(u − v_t)` on block `t`, plus the online-SVD
+    /// bookkeeping. This is the single server-side commit path — both the
+    /// in-proc and the TCP [`Transport`](crate::transport::Transport)
+    /// implementations land updates through it, so the commit protocol
+    /// cannot drift between the two.
+    ///
+    /// Returns the new global version (total KM updates).
+    pub fn commit_update(&self, t: usize, u: &[f64], step: f64) -> u64 {
+        let version = self.state.km_update(t, u, step);
+        let new_col = self.state.read_col(t);
+        self.notify_column_update(t, &new_col);
+        version
+    }
+
     /// `λ·g(W)` for objective reporting.
     pub fn reg_value(&self, w: &Mat) -> f64 {
         self.reg.lock().unwrap().value(w)

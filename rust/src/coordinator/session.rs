@@ -30,11 +30,13 @@ use super::schedule::{Async, Schedule};
 use super::server::CentralServer;
 use super::state::SharedState;
 use super::step_size::{KmSchedule, StepController};
-use super::worker::WorkerCtx;
+use super::worker::{TrajectorySink, WorkerCtx};
 use crate::net::{DelayModel, FaultModel};
 use crate::runtime::{ComputePool, Engine, TaskCompute};
+use crate::transport::{InProc, TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use crate::util::Rng;
 use anyhow::Result;
+use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -101,6 +103,29 @@ impl RunConfig {
         self
     }
 
+    /// Assemble the server side of a run — shared state `V`, the central
+    /// server (regularizer, prox stride, optional online-SVD seeding), and
+    /// the trajectory recorder with its initial sample. This is the ONE
+    /// construction path for both [`Session::run`] and the standalone
+    /// `amtl --serve` process, so the two cannot drift apart.
+    pub fn build_server(
+        &self,
+        problem: &MtlProblem,
+    ) -> (Arc<SharedState>, Arc<CentralServer>, Arc<Recorder>) {
+        let state = Arc::new(SharedState::zeros(problem.d(), problem.t()));
+        let mut reg = problem.regularizer();
+        if self.online_svd {
+            reg = reg.with_online_svd(&state.snapshot());
+        }
+        let server = Arc::new(
+            CentralServer::new(Arc::clone(&state), reg, problem.eta)
+                .with_prox_every(self.prox_every),
+        );
+        let recorder = Arc::new(Recorder::new(self.record_every));
+        recorder.record_now(0, state.snapshot());
+        (state, server, recorder)
+    }
+
     /// Validate parameter ranges (called by [`SessionBuilder::build`]).
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
@@ -129,6 +154,7 @@ pub struct SessionBuilder<'p> {
     engine: Engine,
     pool: Option<&'p ComputePool>,
     paper_offset_units: Option<f64>,
+    transport: TransportKind,
 }
 
 impl<'p> SessionBuilder<'p> {
@@ -141,6 +167,7 @@ impl<'p> SessionBuilder<'p> {
             engine: Engine::Native,
             pool: None,
             paper_offset_units: None,
+            transport: TransportKind::InProc,
         }
     }
 
@@ -247,6 +274,16 @@ impl<'p> SessionBuilder<'p> {
         self
     }
 
+    /// How workers reach the central server (default
+    /// [`TransportKind::InProc`]). [`TransportKind::Tcp`] spawns a
+    /// loopback TCP server around the session's central server and routes
+    /// every backward fetch and KM commit through the real wire protocol
+    /// — same math, real sockets.
+    pub fn transport(mut self, kind: TransportKind) -> Self {
+        self.transport = kind;
+        self
+    }
+
     /// The paper's AMTL-k / SMTL-k delay setting, in paper units. Resolved
     /// against `time_scale` at `build()` time, so setter order does not
     /// matter. Non-positive offsets leave the delay model unchanged.
@@ -278,16 +315,19 @@ impl<'p> SessionBuilder<'p> {
             computes,
             cfg,
             schedule: self.schedule,
+            transport: self.transport,
         })
     }
 }
 
-/// One configured optimization run: problem + computes + config + schedule.
+/// One configured optimization run: problem + computes + config + schedule
+/// (+ the transport workers use to reach the server).
 pub struct Session<'p> {
     problem: &'p MtlProblem,
     computes: Vec<Box<dyn TaskCompute>>,
     cfg: RunConfig,
     schedule: Box<dyn Schedule>,
+    transport: TransportKind,
 }
 
 impl<'p> Session<'p> {
@@ -301,26 +341,28 @@ impl<'p> Session<'p> {
         let cfg = &self.cfg;
         let t_count = problem.t();
 
-        // Shared construction (identical for every schedule): state, server
-        // with the problem's regularizer, step controller, recorder, and
+        // Shared construction (identical for every schedule — and for the
+        // standalone serve process, via the same helper): state, server
+        // with the problem's regularizer, recorder, step controller, and
         // the root RNG that forks one stream per task node.
-        let state = Arc::new(SharedState::zeros(problem.d(), t_count));
-        let mut reg = problem.regularizer();
-        if cfg.online_svd {
-            reg = reg.with_online_svd(&state.snapshot());
-        }
-        let server = Arc::new(
-            CentralServer::new(Arc::clone(&state), reg, problem.eta)
-                .with_prox_every(cfg.prox_every),
-        );
+        let (state, server, recorder) = cfg.build_server(problem);
         let controller = Arc::new(StepController::new(
             cfg.km,
             cfg.dynamic_step,
             t_count,
             cfg.dyn_window,
         ));
-        let recorder = Arc::new(Recorder::new(cfg.record_every));
-        recorder.record_now(0, state.snapshot());
+
+        // The TCP transport hosts a loopback server around this session's
+        // central server; workers then reach it only through sockets. The
+        // handle joins its threads on drop (including error paths).
+        let (endpoint, mut tcp_handle) = match self.transport {
+            TransportKind::InProc => (Endpoint::InProc, None),
+            TransportKind::Tcp => {
+                let handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), None)?;
+                (Endpoint::Tcp(handle.addr()), Some(handle))
+            }
+        };
 
         let start = Instant::now();
         let mut orch = Orchestrator {
@@ -328,6 +370,8 @@ impl<'p> Session<'p> {
             cfg,
             computes: &mut self.computes,
             server: Arc::clone(&server),
+            state: Arc::clone(&state),
+            endpoint,
             controller,
             recorder: Arc::clone(&recorder),
             root_rng: Rng::new(cfg.seed),
@@ -335,8 +379,11 @@ impl<'p> Session<'p> {
         };
         let stats = self.schedule.orchestrate(&mut orch)?;
         // Release the orchestrator's recorder clone so the trajectory can
-        // be unwrapped below.
+        // be unwrapped below, and join the loopback server's threads.
         drop(orch);
+        if let Some(handle) = tcp_handle.as_mut() {
+            handle.shutdown();
+        }
         let wall_time = start.elapsed();
         anyhow::ensure!(
             stats.len() == t_count,
@@ -381,6 +428,13 @@ impl<'p> Session<'p> {
     }
 }
 
+/// Where the session's workers find the central server: in this address
+/// space, or behind a socket address.
+enum Endpoint {
+    InProc,
+    Tcp(SocketAddr),
+}
+
 /// What a [`Schedule`] gets to orchestrate with: accessors for the shared
 /// machinery plus the one worker-context construction path (RNG forking
 /// included) used by every schedule.
@@ -389,6 +443,8 @@ pub struct Orchestrator<'r> {
     cfg: &'r RunConfig,
     computes: &'r mut [Box<dyn TaskCompute>],
     server: Arc<CentralServer>,
+    state: Arc<SharedState>,
+    endpoint: Endpoint,
     controller: Arc<StepController>,
     recorder: Arc<Recorder>,
     root_rng: Rng,
@@ -420,25 +476,42 @@ impl<'r> Orchestrator<'r> {
         Arc::clone(&self.recorder)
     }
 
+    /// A fresh channel to this run's central server: direct calls for the
+    /// in-proc session, a new socket (own connection, own framing) for the
+    /// TCP session. Schedules use this for commit paths that are not tied
+    /// to one worker (e.g. the synchronized round loop).
+    pub fn transport(&self) -> Result<Box<dyn Transport>> {
+        match self.endpoint {
+            Endpoint::InProc => Ok(Box::new(InProc::new(Arc::clone(&self.server)))),
+            Endpoint::Tcp(addr) => Ok(Box::new(TcpClient::connect(addr, TcpOptions::default())?)),
+        }
+    }
+
     /// One worker context per task node, with per-node RNG streams forked
-    /// deterministically in node order from the root seed. Call once —
-    /// forking twice would hand later callers different streams.
-    pub fn worker_ctxs(&mut self) -> Vec<WorkerCtx> {
+    /// deterministically in node order from the root seed and one
+    /// transport per node. Call once — forking twice would hand later
+    /// callers different streams.
+    pub fn worker_ctxs(&mut self) -> Result<Vec<WorkerCtx>> {
         assert_eq!(self.forked, 0, "worker_ctxs may only be called once");
         self.forked = 1;
         (0..self.computes.len())
-            .map(|t| WorkerCtx {
-                t,
-                iters: self.cfg.iters_per_node,
-                server: Arc::clone(&self.server),
-                controller: Arc::clone(&self.controller),
-                delay: self.cfg.delay.clone(),
-                faults: self.cfg.faults.clone(),
-                sgd_fraction: self.cfg.sgd_fraction,
-                time_scale: self.cfg.time_scale,
-                recorder: Arc::clone(&self.recorder),
-                rng: self.root_rng.fork(t as u64),
-                gate: None,
+            .map(|t| {
+                Ok(WorkerCtx {
+                    t,
+                    iters: self.cfg.iters_per_node,
+                    transport: self.transport()?,
+                    controller: Arc::clone(&self.controller),
+                    delay: self.cfg.delay.clone(),
+                    faults: self.cfg.faults.clone(),
+                    sgd_fraction: self.cfg.sgd_fraction,
+                    time_scale: self.cfg.time_scale,
+                    sink: Some(TrajectorySink {
+                        recorder: Arc::clone(&self.recorder),
+                        state: Arc::clone(&self.state),
+                    }),
+                    rng: self.root_rng.fork(t as u64),
+                    gate: None,
+                })
             })
             .collect()
     }
@@ -531,6 +604,10 @@ mod tests {
             ref other => panic!("expected OffsetExp, got {other:?}"),
         }
     }
+
+    // (InProc-vs-Tcp session equivalence lives in
+    // rust/tests/integration_transport.rs — bitwise on one task, within
+    // tolerance under concurrency.)
 
     #[test]
     fn schedules_share_one_config_and_name_their_results() {

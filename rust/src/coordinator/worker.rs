@@ -1,31 +1,56 @@
 //! A task node: the worker side of Algorithm 1.
 //!
 //! Each worker owns one task's [`TaskCompute`] (its private data never
-//! leaves the node — only model vectors cross the channel, matching the
+//! leaves the node — only model vectors cross the transport, matching the
 //! paper's privacy argument) and repeatedly:
 //!
-//! 1. waits out its simulated network delay,
-//! 2. retrieves its block of the server's backward step `(Prox(V̂))_t`,
+//! 1. waits out its (simulated or real) network delay,
+//! 2. retrieves its block of the server's backward step `(Prox(V̂))_t`
+//!    through its [`Transport`],
 //! 3. computes the forward step `u = ŵ − η ∇ℓ_t(ŵ)` (PJRT artifact or
 //!    native mirror),
-//! 4. applies the KM relaxation `v_t ← v_t + c_{t,k} η_k (u − v_t)`.
+//! 4. commits the KM relaxation `v_t ← v_t + c_{t,k} η_k (u − v_t)`
+//!    through the same transport.
+//!
+//! The worker never touches the central server directly: whether the
+//! transport is shared memory ([`crate::transport::InProc`]) or a TCP
+//! connection to another process ([`crate::transport::TcpClient`]) is
+//! invisible here.
 
+use super::metrics::Recorder;
 use super::schedule::StalenessGate;
-use super::server::CentralServer;
+use super::state::SharedState;
 use super::step_size::StepController;
-use crate::coordinator::metrics::Recorder;
 use crate::net::{DelayModel, FaultModel, FaultOutcome};
 use crate::runtime::TaskCompute;
+use crate::transport::Transport;
 use crate::util::Rng;
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Trajectory sampling wiring: the run's recorder plus the locally-held
+/// model state it snapshots. Present when the state is co-located with the
+/// worker (in-proc and loopback-TCP sessions); `None` on a remote task
+/// node, where the serving process samples instead (see
+/// [`crate::transport::TcpServer::spawn`]).
+pub struct TrajectorySink {
+    pub recorder: Arc<Recorder>,
+    pub state: Arc<SharedState>,
+}
+
+impl TrajectorySink {
+    fn record(&self, version: u64) {
+        self.recorder.maybe_record(version, || self.state.snapshot());
+    }
+}
+
 /// Everything one free-running worker thread needs.
 pub struct WorkerCtx {
     pub t: usize,
     pub iters: usize,
-    pub server: Arc<CentralServer>,
+    /// The node's channel to the central server (fetch + commit + η).
+    pub transport: Box<dyn Transport>,
     pub controller: Arc<StepController>,
     pub delay: DelayModel,
     /// Fault injection (robustness experiments; default none).
@@ -36,7 +61,8 @@ pub struct WorkerCtx {
     /// Wall-clock duration of one paper delay-unit (see DESIGN.md
     /// §Substitutions: the paper's "seconds" are scaled).
     pub time_scale: Duration,
-    pub recorder: Arc<Recorder>,
+    /// Trajectory sampling (`None` on remote task nodes).
+    pub sink: Option<TrajectorySink>,
     pub rng: Rng,
     /// Bounded-staleness gate (the `SemiSync` schedule); `None` = fully
     /// asynchronous.
@@ -55,23 +81,39 @@ pub struct WorkerStats {
     pub total_delay_secs: f64,
     /// Wall-clock spent in the forward step (gradient compute).
     pub compute_secs: f64,
-    /// Wall-clock spent waiting on the server's backward step.
+    /// Wall-clock spent waiting on the server's backward step (over TCP
+    /// this includes the real network round-trip).
     pub backward_wait_secs: f64,
     /// Objective values of `ℓ_t` observed at each forward step (free —
     /// the fused kernels return them).
     pub last_task_loss: f64,
 }
 
+/// Deactivates a node's staleness-gate slot on drop — including a panic
+/// unwind out of the worker loop, where a skipped deactivation would hang
+/// every peer at the gate forever.
+struct GateGuard {
+    gate: Arc<StalenessGate>,
+    t: usize,
+}
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        self.gate.deactivate(self.t);
+    }
+}
+
 /// The free-running worker loop. Runs `iters` activations, waiting on no
 /// other node (unless a staleness gate bounds how far ahead it may run).
 pub fn run_worker(mut ctx: WorkerCtx, compute: &mut dyn TaskCompute) -> Result<WorkerStats> {
-    let gate = ctx.gate.clone();
+    // Whatever the exit path (budget exhausted, crash, compute error, or
+    // a panic unwinding out of the loop), leave the staleness minimum so
+    // no peer blocks on a dead node.
+    let gate_guard = ctx.gate.clone().map(|gate| GateGuard { gate, t: ctx.t });
     let result = worker_loop(&mut ctx, compute);
-    // Whatever the exit path (budget exhausted, crash, compute error),
-    // leave the staleness minimum so no peer blocks on a dead node.
-    if let Some(g) = &gate {
-        g.deactivate(ctx.t);
-    }
+    // Unblock peers first, then tear the transport down politely.
+    drop(gate_guard);
+    let _ = ctx.transport.close();
     result
 }
 
@@ -88,15 +130,15 @@ pub(crate) enum Activation {
 
 /// One activation of task node `ctx.t`: fault check, simulated network
 /// delay (recorded in paper units for the dynamic step controller,
-/// Eq. III.6), backward-step fetch via `fetch_w`, and the forward step
-/// (minibatch or full batch). Shared by the free-running worker loop and
-/// the synchronized round loop so the per-activation protocol cannot
-/// drift between schedules.
+/// Eq. III.6), backward-step fetch via `fetch_w` (handed the node's
+/// transport), and the forward step (minibatch or full batch). Shared by
+/// the free-running worker loop and the synchronized round loop so the
+/// per-activation protocol cannot drift between schedules.
 pub(crate) fn run_activation(
     ctx: &mut WorkerCtx,
     compute: &mut dyn TaskCompute,
     k: u64,
-    fetch_w: impl FnOnce() -> Vec<f64>,
+    fetch_w: impl FnOnce(&mut dyn Transport) -> Result<Vec<f64>>,
     stats: &mut WorkerStats,
 ) -> Result<Activation> {
     // 0. Fault check for this activation.
@@ -114,16 +156,17 @@ pub(crate) fn run_activation(
     let units = sample.duration.as_secs_f64() / ctx.time_scale.as_secs_f64().max(1e-12);
     ctx.controller.record_delay(ctx.t, units);
 
-    // 2. Backward step block (server prox column or round broadcast).
+    // 2. Backward step block (server prox column over the transport).
     let t0 = Instant::now();
-    let w_hat = fetch_w();
+    let w_hat = fetch_w(ctx.transport.as_mut())?;
     stats.backward_wait_secs += t0.elapsed().as_secs_f64();
 
     // 3. Forward step on the task's private data.
+    let eta = ctx.transport.eta();
     let t1 = Instant::now();
     let (u, task_loss) = match ctx.sgd_fraction {
-        Some(frac) => compute.step_minibatch(&w_hat, ctx.server.eta(), frac, &mut ctx.rng)?,
-        None => compute.step(&w_hat, ctx.server.eta())?,
+        Some(frac) => compute.step_minibatch(&w_hat, eta, frac, &mut ctx.rng)?,
+        None => compute.step(&w_hat, eta)?,
     };
     stats.compute_secs += t1.elapsed().as_secs_f64();
     stats.last_task_loss = task_loss;
@@ -145,24 +188,22 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
             g.wait_to_start(k as u64);
         }
 
-        let server = Arc::clone(&ctx.server);
         let t = ctx.t;
-        match run_activation(ctx, compute, k as u64, move || server.prox_col(t), &mut stats)? {
+        match run_activation(ctx, compute, k as u64, |tr| tr.fetch_prox_col(t), &mut stats)? {
             Activation::Crashed => {
                 stats.crashed = true;
                 break;
             }
             Activation::Dropped => {}
             Activation::Update(u) => {
-                // KM relaxation on this task block.
+                // KM relaxation on this task block, committed through the
+                // transport (shared memory or the wire).
                 let step = ctx.controller.step(ctx.t);
-                let version = ctx.server.state().km_update(ctx.t, &u, step);
-                // Keep the (optional) online-SVD factorization in sync.
-                let new_col = ctx.server.state().read_col(ctx.t);
-                ctx.server.notify_column_update(ctx.t, &new_col);
+                let version = ctx.transport.push_update(ctx.t, step, &u)?;
                 stats.updates += 1;
-                ctx.recorder
-                    .maybe_record(version, || ctx.server.state().snapshot());
+                if let Some(sink) = &ctx.sink {
+                    sink.record(version);
+                }
             }
         }
         if let Some(g) = &ctx.gate {
@@ -175,11 +216,13 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::server::CentralServer;
     use crate::coordinator::state::SharedState;
     use crate::coordinator::step_size::KmSchedule;
     use crate::data::synthetic;
     use crate::optim::prox::RegularizerKind;
     use crate::runtime::NativeTaskCompute;
+    use crate::transport::InProc;
 
     fn setup(seed: u64) -> (Arc<CentralServer>, NativeTaskCompute, crate::coordinator::problem::MtlProblem) {
         let mut rng = Rng::new(seed);
@@ -201,19 +244,26 @@ mod tests {
         (server, compute, problem)
     }
 
+    fn sink(server: &Arc<CentralServer>, every: u64) -> Option<TrajectorySink> {
+        Some(TrajectorySink {
+            recorder: Arc::new(Recorder::new(every)),
+            state: Arc::clone(server.state()),
+        })
+    }
+
     #[test]
     fn worker_applies_expected_update_count() {
         let (server, mut compute, _p) = setup(120);
         let ctx = WorkerCtx {
             t: 0,
             iters: 7,
-            server: Arc::clone(&server),
+            transport: Box::new(InProc::new(Arc::clone(&server))),
             controller: Arc::new(StepController::new(KmSchedule::fixed(0.5), false, 3, 5)),
             delay: DelayModel::None,
             faults: FaultModel::None,
             sgd_fraction: None,
             time_scale: Duration::from_millis(100),
-            recorder: Arc::new(Recorder::new(1)),
+            sink: sink(&server, 1),
             rng: Rng::new(121),
             gate: None,
         };
@@ -231,13 +281,13 @@ mod tests {
         let ctx = WorkerCtx {
             t: 0,
             iters: 100,
-            server: Arc::clone(&server),
+            transport: Box::new(InProc::new(Arc::clone(&server))),
             controller: Arc::new(StepController::new(KmSchedule::fixed(0.9), false, 3, 5)),
             delay: DelayModel::None,
             faults: FaultModel::None,
             sgd_fraction: None,
             time_scale: Duration::from_millis(100),
-            recorder: Arc::new(Recorder::new(1000)),
+            sink: sink(&server, 1000),
             rng: Rng::new(123),
             gate: None,
         };
@@ -257,7 +307,7 @@ mod tests {
         let ctx = WorkerCtx {
             t: 0,
             iters: 3,
-            server,
+            transport: Box::new(InProc::new(Arc::clone(&server))),
             controller: Arc::clone(&controller),
             // 20 ms delay at a 10 ms time-scale = 2.0 paper units (< 10 → clamped).
             delay: DelayModel::OffsetJitter {
@@ -267,7 +317,7 @@ mod tests {
             faults: FaultModel::None,
             sgd_fraction: None,
             time_scale: Duration::from_millis(10),
-            recorder: Arc::new(Recorder::new(1000)),
+            sink: sink(&server, 1000),
             rng: Rng::new(125),
             gate: None,
         };
@@ -275,5 +325,44 @@ mod tests {
         assert!((stats.total_delay_secs - 0.06).abs() < 0.02);
         // ν̄ = 2.0 → multiplier ln(max(2,10)) = ln 10.
         assert!((controller.multiplier(0) - 10f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worker_over_tcp_matches_inproc_bitwise() {
+        // Same seeds, same budget: the transport must be invisible to the
+        // math. One task ⇒ no interleaving ⇒ exact agreement.
+        let run = |tcp: bool| {
+            let (server, mut compute, _p) = setup(126);
+            let handle = if tcp {
+                Some(crate::transport::TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), None).unwrap())
+            } else {
+                None
+            };
+            let transport: Box<dyn Transport> = match &handle {
+                Some(h) => Box::new(
+                    crate::transport::TcpClient::connect(h.addr(), Default::default()).unwrap(),
+                ),
+                None => Box::new(InProc::new(Arc::clone(&server))),
+            };
+            let ctx = WorkerCtx {
+                t: 0,
+                iters: 12,
+                transport,
+                controller: Arc::new(StepController::new(KmSchedule::fixed(0.7), false, 3, 5)),
+                delay: DelayModel::None,
+                faults: FaultModel::None,
+                sgd_fraction: None,
+                time_scale: Duration::from_millis(100),
+                sink: None,
+                rng: Rng::new(127),
+                gate: None,
+            };
+            let stats = run_worker(ctx, &mut compute).unwrap();
+            assert_eq!(stats.updates, 12);
+            server.state().read_col(0)
+        };
+        let inproc = run(false);
+        let tcp = run(true);
+        assert_eq!(inproc, tcp, "TCP transport must be bit-identical");
     }
 }

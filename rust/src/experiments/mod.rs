@@ -152,6 +152,80 @@ pub fn run_smtl_once(
     run_once(problem, engine, pool, cfg, Synchronized)
 }
 
+/// Machine-readable bench output: each bench binary appends one record
+/// per measured run and writes `BENCH_<name>.json` at exit, so the perf
+/// trajectory (objective, wall-clock, updates/sec) is tracked across PRs
+/// instead of living only in stdout tables.
+pub struct BenchLog {
+    name: String,
+    records: Vec<crate::util::json::Json>,
+}
+
+impl BenchLog {
+    pub fn new(name: &str) -> BenchLog {
+        BenchLog { name: name.to_string(), records: Vec::new() }
+    }
+
+    /// Append one optimization run: the objective it reached, wall-clock,
+    /// update throughput, and the counters that explain them.
+    pub fn record_run(&mut self, label: &str, r: &RunResult, objective: f64) {
+        use crate::util::json::Json;
+        let wall = r.wall_time.as_secs_f64();
+        self.records.push(Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            ("method", Json::Str(r.method.clone())),
+            ("objective", Json::Num(objective)),
+            ("wall_secs", Json::Num(wall)),
+            ("updates", Json::Num(r.updates as f64)),
+            ("updates_per_sec", Json::Num(r.updates as f64 / wall.max(1e-12))),
+            ("prox_count", Json::Num(r.prox_count as f64)),
+            ("mean_delay_secs", Json::Num(r.mean_delay_secs)),
+        ]));
+    }
+
+    /// Append a free-form numeric record (micro-benchmarks without a
+    /// [`RunResult`], e.g. per-op latencies).
+    pub fn record_kv(&mut self, label: &str, pairs: &[(&str, f64)]) {
+        use crate::util::json::Json;
+        let mut fields = vec![("label", Json::Str(label.to_string()))];
+        for (k, v) in pairs {
+            fields.push((*k, Json::Num(*v)));
+        }
+        self.records.push(Json::obj(fields));
+    }
+
+    /// Number of records accumulated so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Write `BENCH_<name>.json` into `$AMTL_BENCH_DIR` (default: the
+    /// working directory) and return the path.
+    pub fn write(&self) -> Result<std::path::PathBuf> {
+        let dir = std::env::var_os("AMTL_BENCH_DIR")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| std::path::PathBuf::from("."));
+        self.write_to(&dir)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir` (created if absent).
+    pub fn write_to(&self, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+        use crate::util::json::Json;
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let doc = Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("records", Json::Arr(self.records.clone())),
+        ]);
+        std::fs::write(&path, doc.to_string() + "\n")?;
+        Ok(path)
+    }
+}
+
 /// Markdown-ish table printer for paper-style rows.
 pub struct Table {
     headers: Vec<String>,
@@ -247,6 +321,33 @@ mod tests {
         .unwrap();
         assert_eq!(r.method, "semisync");
         assert_eq!(r.updates, 12);
+    }
+
+    #[test]
+    fn bench_log_writes_parseable_json() {
+        let mut rng = Rng::new(152);
+        let ds = synthetic::lowrank_regression(&[15; 2], 4, 2, 0.1, &mut rng);
+        let p = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng);
+        let cfg = ExpConfig { iters: 3, ..Default::default() };
+        let r = run_amtl_once(&p, Engine::Native, None, &cfg).unwrap();
+
+        // write_to creates the directory itself; no process-global env
+        // mutation (tests run multithreaded).
+        let dir = std::env::temp_dir().join(format!("amtl_benchlog_{}", std::process::id()));
+        let mut log = BenchLog::new("selftest");
+        log.record_run("t2", &r, p.objective(&r.w_final));
+        log.record_kv("micro", &[("ns_per_op", 12.5)]);
+        assert_eq!(log.len(), 2);
+        let path = log.write_to(&dir).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.get("bench").and_then(|j| j.as_str()), Some("selftest"));
+        let records = doc.get("records").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].get("updates").and_then(|j| j.as_usize()), Some(6));
+        assert!(records[0].get("updates_per_sec").and_then(|j| j.as_f64()).unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -12,12 +12,32 @@
 //!   the update path.
 //!
 //! The coordinator exposes one entry point: a [`coordinator::Session`]
-//! built over a shared [`coordinator::RunConfig`] and a pluggable
+//! built over a shared [`coordinator::RunConfig`], a pluggable
 //! [`coordinator::Schedule`] — [`coordinator::Async`] (Algorithm 1),
 //! [`coordinator::Synchronized`] (§III.B barrier rounds), or
-//! [`coordinator::SemiSync`] (bounded staleness). The old forked drivers
-//! survive as deprecated shims (`run_amtl` / `run_smtl`). Also see the
-//! `amtl` CLI (`rust/src/main.rs`) and the runnable `examples/`.
+//! [`coordinator::SemiSync`] (bounded staleness) — and a pluggable
+//! [`transport::Transport`] connecting task nodes to the central server.
+//!
+//! ## The transport layer
+//!
+//! The paper's deployment premise is that task data is too large or too
+//! private to move; only model vectors travel. The [`transport`] module
+//! makes that edge real:
+//!
+//! * [`transport::InProc`] — shared-memory calls (the default; identical
+//!   to the pre-transport coordinator, bit for bit).
+//! * [`transport::TcpClient`] / [`transport::TcpServer`] — a versioned,
+//!   checksummed, length-prefixed binary protocol ([`transport::wire`])
+//!   over `std::net` TCP. `Session::builder(..).transport(Tcp)` runs any
+//!   schedule over loopback sockets, and the `amtl` CLI runs the two
+//!   halves as separate OS processes: `amtl --serve <addr>` hosts the
+//!   central server, `amtl --node <t> --connect <addr>` runs one task
+//!   node that owns only its task's data. Prox columns, update vectors,
+//!   and scalars cross the wire; `(X_t, y_t)` provably cannot — the
+//!   protocol has no frame type for data.
+//!
+//! Also see the `amtl` CLI (`rust/src/main.rs`) and the runnable
+//! `examples/`.
 
 pub mod config;
 pub mod coordinator;
@@ -27,4 +47,5 @@ pub mod linalg;
 pub mod net;
 pub mod optim;
 pub mod runtime;
+pub mod transport;
 pub mod util;

@@ -3,11 +3,18 @@
 //! Subcommands:
 //!
 //! * `train`     — run one optimization under a chosen update schedule
-//!                 (`--method amtl|smtl|semisync`).
+//!                 (`--method amtl|smtl|semisync`), over shared memory or
+//!                 loopback TCP (`--transport inproc|tcp`).
 //! * `compare`   — AMTL vs SMTL side by side under one network setting.
 //! * `datasets`  — print the Table-II style description of the built-in
 //!                 dataset simulators.
 //! * `artifacts` — verify the AOT artifact manifest loads and list buckets.
+//!
+//! Distributed modes (no subcommand — real multi-process deployment):
+//!
+//! * `--serve <addr>`             — host the central (prox) server.
+//! * `--node <t> --connect <addr>` — run task node `t`, which owns only
+//!   its task's data; only model vectors cross the wire.
 //!
 //! Examples:
 //!
@@ -15,18 +22,33 @@
 //! amtl train --dataset school-small --reg nuclear --lambda 0.5 --iters 20
 //! amtl train --tasks 10 --n 100 --dim 50 --offset 5 --engine pjrt
 //! amtl train --method semisync --staleness 4 --tasks 8 --offset 5
+//! amtl train --tasks 5 --transport tcp
 //! amtl compare --tasks 5 --offset 5 --iters 10
+//!
+//! # terminal 1                         # terminals 2..N+1 (one per task)
+//! amtl --serve 127.0.0.1:7171 \
+//!      --tasks 3 --iters 50            amtl --node 0 --connect 127.0.0.1:7171 \
+//!                                           --tasks 3 --iters 50
 //! ```
+//!
+//! The serve and node processes must be launched with the same data and
+//! problem options (and seed): each derives the same problem definition,
+//! and each node keeps only its own task's block. In a real deployment a
+//! node would load its local data instead — the protocol is already
+//! data-free either way.
 
 use amtl::config::Opts;
-use amtl::coordinator::{
-    Async, MtlProblem, Schedule, SemiSync, Session, Synchronized,
-};
+use amtl::coordinator::step_size::{KmSchedule, StepController};
+use amtl::coordinator::worker::{run_worker, WorkerCtx};
+use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Session, Synchronized};
 use amtl::data::{public, synthetic, MultiTaskDataset};
+use amtl::net::{DelayModel, FaultModel};
 use amtl::optim::prox::RegularizerKind;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
+use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use amtl::util::Rng;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -44,6 +66,18 @@ fn main() {
 }
 
 fn run(opts: &Opts) -> Result<()> {
+    // Distributed modes are flag-driven (no subcommand): `--serve <addr>`
+    // hosts the central node, `--node <t> --connect <addr>` runs one task
+    // node against it.
+    if opts.get("serve").is_some() {
+        return cmd_serve(opts);
+    }
+    if opts.get("node").is_some() {
+        return cmd_node(opts);
+    }
+    if opts.flag("serve") || opts.flag("node") {
+        bail!("--serve needs an address and --node a task index (see `amtl help`)");
+    }
     let cmd = opts.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(opts),
@@ -62,6 +96,8 @@ const HELP: &str = "\
 amtl — Asynchronous Multi-Task Learning (Baytas et al., 2016)
 
 USAGE: amtl <command> [options]
+       amtl --serve <addr> [options]
+       amtl --node <t> --connect <addr> [options]
 
 COMMANDS:
   train       run one optimization (default method: amtl)
@@ -69,6 +105,13 @@ COMMANDS:
   datasets    describe the built-in dataset simulators
   artifacts   validate the AOT artifact manifest
   help        this text
+
+DISTRIBUTED MODES (two-terminal walkthrough in README.md):
+  --serve ADDR   host the central (prox) server on ADDR, wait for
+                 tasks x iters updates, then report and exit
+  --node T       run task node T only (owns only task T's data)
+  --connect ADDR server address for --node
+  Launch serve and every node with the SAME data/problem options.
 
 DATA OPTIONS (synthetic unless --dataset is given):
   --dataset <school|mnist|mtfl|school-small>   simulated public dataset
@@ -89,6 +132,10 @@ RUN OPTIONS:
                  smtl     = synchronized baseline (barrier per round)
                  semisync = bounded staleness (see --staleness)
   --staleness B  semisync: max activations ahead of the slowest node [4]
+  --transport <inproc|tcp>                         [inproc]
+                 inproc = shared-memory calls (bit-identical baseline)
+                 tcp    = loopback sockets: every fetch/commit crosses
+                          the real wire protocol
   --iters K      activations per task node          [10]
   --offset U     delay offset in paper units        [0]
   --time-scale MS  wall-clock ms per paper unit     [100]
@@ -140,6 +187,7 @@ struct RunOpts {
     executors: usize,
     artifacts_dir: String,
     record_every: u64,
+    transport: TransportKind,
     seed: u64,
 }
 
@@ -147,6 +195,7 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
     let iters = opts.get_usize("iters", 10)?;
     let default_record = ((t * iters) as u64 / 50).max(1);
     let sgd = opts.get_f64("sgd", 0.0)?;
+    let transport = opts.get_one_of("transport", &["inproc", "tcp"], "inproc")?;
     Ok(RunOpts {
         iters,
         sgd_fraction: if sgd > 0.0 { Some(sgd) } else { None },
@@ -161,6 +210,7 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
         executors: opts.get_usize("executors", 2)?,
         artifacts_dir: opts.get_or("artifacts-dir", "artifacts"),
         record_every: opts.get_u64("record-every", default_record)?,
+        transport: TransportKind::parse(&transport).expect("get_one_of validated the value"),
         seed: opts.get_u64("seed", 7)?,
     })
 }
@@ -186,6 +236,7 @@ fn session<'p>(
         .online_svd(ro.online_svd)
         .seed(ro.seed)
         .paper_offset(ro.offset)
+        .transport(ro.transport)
         .schedule_box(schedule)
 }
 
@@ -227,11 +278,12 @@ fn cmd_train(opts: &Opts) -> Result<()> {
 
     println!("dataset: {}", problem.dataset.describe());
     println!(
-        "problem: reg={} lambda={} eta={:.3e} L={:.3e}",
+        "problem: reg={} lambda={} eta={:.3e} L={:.3e} transport={}",
         problem.reg_kind.name(),
         problem.lambda,
         problem.eta,
-        problem.l_max
+        problem.l_max,
+        ro.transport.name(),
     );
     let pool = make_pool(&ro)?;
     let result = session(&problem, pool.as_ref(), &ro, schedule).build()?.run()?;
@@ -272,6 +324,183 @@ fn cmd_compare(opts: &Opts) -> Result<()> {
         problem.objective(&amtl_res.w_final),
         problem.objective(&smtl_res.w_final),
         smtl_res.wall_time.as_secs_f64() / amtl_res.wall_time.as_secs_f64().max(1e-9),
+    );
+    Ok(())
+}
+
+/// `--serve <addr>`: host the central node. Accepts task-node connections,
+/// serves prox columns, commits their updates, and exits (with a final
+/// report) once `tasks x iters` updates have landed.
+fn cmd_serve(opts: &Opts) -> Result<()> {
+    let addr = opts.require("serve").map_err(|e| anyhow!("{e}"))?;
+    let mut rng = Rng::new(opts.get_u64("seed", 7)?);
+    let problem = build_problem(opts, &mut rng)?;
+    let ro = run_opts(opts, problem.t())?;
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    let t_count = problem.t();
+    // The same construction path Session::run uses — the in-proc and
+    // two-process deployments cannot drift apart.
+    let cfg = amtl::coordinator::RunConfig {
+        iters_per_node: ro.iters,
+        prox_every: ro.prox_every,
+        record_every: ro.record_every,
+        online_svd: ro.online_svd,
+        seed: ro.seed,
+        ..Default::default()
+    };
+    let (state, server, recorder) = cfg.build_server(&problem);
+    let mut handle = TcpServer::spawn(&addr, Arc::clone(&server), Some(Arc::clone(&recorder)))?;
+
+    let expected = (t_count * ro.iters) as u64;
+    println!("central node serving on {}", handle.addr());
+    println!("dataset: {}", problem.dataset.describe());
+    println!(
+        "problem: reg={} lambda={} eta={:.3e}; waiting for {t_count} nodes x {} activations = {expected} updates",
+        problem.reg_kind.name(),
+        problem.lambda,
+        problem.eta,
+        ro.iters,
+    );
+    println!(
+        "start task nodes with: amtl --node <t> --connect {} [same data/problem options]",
+        handle.addr()
+    );
+
+    let report_stride = (expected / 10).max(1);
+    let mut last_report = 0u64;
+    let mut last_progress = (0u64, std::time::Instant::now());
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        let v = state.version();
+        if v >= last_report + report_stride && v < expected {
+            println!("  {v}/{expected} updates committed");
+            last_report = v;
+        }
+        // Exit on per-node counts, not the global version: the at-least-
+        // once PushUpdate resend can double-apply on ONE node, and that
+        // must not end the run while other nodes still have budget left.
+        if (0..t_count).all(|t| state.col_version(t) >= ro.iters as u64) {
+            break;
+        }
+        // No hard timeout (node budgets are theirs to pace), but surface a
+        // stall so a dead node is diagnosable: per-node counts show which
+        // one went missing. Ctrl-C to abandon the run.
+        if v > last_progress.0 {
+            last_progress = (v, std::time::Instant::now());
+        } else if last_progress.1.elapsed() > Duration::from_secs(30) {
+            let counts: Vec<String> =
+                (0..t_count).map(|t| format!("node {t}: {}", state.col_version(t))).collect();
+            println!(
+                "  no progress for 30s at {v}/{expected} updates ({}); waiting — Ctrl-C to abort",
+                counts.join(", ")
+            );
+            last_progress = (v, std::time::Instant::now());
+        }
+    }
+    // Let trailing Pushed responses flush before tearing connections down.
+    // (Residual at-least-once caveat: a node whose own update was double-
+    // applied by a resend finishes its last logical activation during this
+    // grace window — or reports a push failure, with the run itself fine.)
+    std::thread::sleep(Duration::from_millis(500));
+    handle.shutdown();
+
+    println!("run complete: {} updates, {} proxes", state.version(), server.prox_count());
+    for t in 0..t_count {
+        println!("  node {t}: {} updates", state.col_version(t));
+    }
+    let w = server.final_w();
+    if let Ok(recorder) = Arc::try_unwrap(recorder) {
+        for p in recorder.into_points() {
+            println!(
+                "  t={:8.3}s  k={:6}  F={:.6}",
+                p.elapsed.as_secs_f64(),
+                p.version,
+                problem.objective(&problem.prox_map(&p.v))
+            );
+        }
+    }
+    println!(
+        "final objective: {:.6}  (train RMSE {:.4})",
+        problem.objective(&w),
+        problem.train_rmse(&w)
+    );
+    Ok(())
+}
+
+/// `--node <t> --connect <addr>`: run one task node. The process derives
+/// the shared problem definition, keeps only task `t`'s data, and speaks
+/// the wire protocol to the serving process — the privacy boundary of the
+/// paper, as an actual process boundary.
+fn cmd_node(opts: &Opts) -> Result<()> {
+    let t = opts.get_usize("node", 0)?;
+    let addr = opts.require("connect").map_err(|e| anyhow!("{e}"))?;
+    let mut rng = Rng::new(opts.get_u64("seed", 7)?);
+    let problem = build_problem(opts, &mut rng)?;
+    let ro = run_opts(opts, problem.t())?;
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    ensure!(
+        t < problem.t(),
+        "--node {t} out of range: the problem has {} tasks",
+        problem.t()
+    );
+
+    let task = &problem.dataset.tasks[t];
+    println!(
+        "task node {t}: owns '{}' ({} samples x {} features); only model vectors cross the wire",
+        task.name,
+        task.n(),
+        task.d()
+    );
+    let pool = make_pool(&ro)?;
+    let mut computes =
+        amtl::runtime::make_task_computes(ro.engine, pool.as_ref(), std::slice::from_ref(task))?;
+    let mut compute = computes.pop().expect("one compute for one task");
+
+    let client = TcpClient::connect(addr.as_str(), TcpOptions::default())?;
+    println!("connected to {addr}; server eta = {:.3e}", client.eta());
+
+    let delay = if ro.offset > 0.0 {
+        DelayModel::paper_offset(ro.time_scale.mul_f64(ro.offset))
+    } else {
+        DelayModel::None
+    };
+    // Fork this node's RNG stream exactly the way the in-proc session
+    // does (`Rng::fork` advances the root, so the session's node-t stream
+    // is the (t+1)-th sequential fork): a two-process run on the same
+    // seed sees the same randomness as `train` would.
+    let mut root = Rng::new(ro.seed);
+    let mut node_rng = root.fork(0);
+    for i in 1..=t {
+        node_rng = root.fork(i as u64);
+    }
+    let ctx = WorkerCtx {
+        t,
+        iters: ro.iters,
+        transport: Box::new(client),
+        controller: Arc::new(StepController::new(
+            KmSchedule::fixed(ro.eta_k),
+            ro.dynamic,
+            problem.t(),
+            amtl::coordinator::RunConfig::default().dyn_window,
+        )),
+        delay,
+        faults: FaultModel::None,
+        sgd_fraction: ro.sgd_fraction,
+        time_scale: ro.time_scale,
+        sink: None,
+        rng: node_rng,
+        gate: None,
+    };
+    let stats = run_worker(ctx, compute.as_mut())?;
+    println!(
+        "node {t} done: {} updates ({} dropped), delay {:.2}s, compute {:.2}s, backward wait {:.2}s, last task loss {:.6}",
+        stats.updates,
+        stats.dropped,
+        stats.total_delay_secs,
+        stats.compute_secs,
+        stats.backward_wait_secs,
+        stats.last_task_loss,
     );
     Ok(())
 }

@@ -1,0 +1,77 @@
+//! The shared-memory transport: direct calls into the central server.
+//!
+//! This is the pre-transport data path, preserved exactly: `fetch` is
+//! [`CentralServer::prox_col`], `push` is [`CentralServer::commit_update`]
+//! (the same KM-relaxation + online-SVD bookkeeping the worker loop used
+//! to inline). No serialization, no copies beyond the column hand-off —
+//! and therefore bit-identical behavior to the coordinator before the
+//! transport layer existed.
+
+use super::Transport;
+use crate::coordinator::server::CentralServer;
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Shared-memory edge: every "message" is a method call on the server.
+pub struct InProc {
+    server: Arc<CentralServer>,
+}
+
+impl InProc {
+    pub fn new(server: Arc<CentralServer>) -> InProc {
+        InProc { server }
+    }
+}
+
+impl Transport for InProc {
+    fn eta(&self) -> f64 {
+        self.server.eta()
+    }
+
+    fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>> {
+        Ok(self.server.prox_col(t))
+    }
+
+    fn push_update(&mut self, t: usize, step: f64, u: &[f64]) -> Result<u64> {
+        Ok(self.server.commit_update(t, u, step))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::SharedState;
+    use crate::optim::prox::{Regularizer, RegularizerKind};
+    use crate::util::Rng;
+
+    fn server(d: usize, t: usize) -> Arc<CentralServer> {
+        let state = Arc::new(SharedState::zeros(d, t));
+        Arc::new(CentralServer::new(state, Regularizer::new(RegularizerKind::L21, 0.2), 0.1))
+    }
+
+    #[test]
+    fn inproc_matches_direct_server_calls() {
+        let srv = server(5, 3);
+        let mut tr = InProc::new(Arc::clone(&srv));
+        assert_eq!(tr.eta(), srv.eta());
+        let mut rng = Rng::new(900);
+        let u = rng.normal_vec(5);
+        let v1 = tr.push_update(1, 0.7, &u).unwrap();
+        assert_eq!(v1, 1);
+        assert_eq!(srv.state().col_version(1), 1);
+        // The fetched column is exactly the server's prox column.
+        let got = tr.fetch_prox_col(1).unwrap();
+        assert_eq!(got, srv.prox_col(1));
+        // And push applied the KM relaxation: v = 0 + 0.7 (u - 0).
+        let col = srv.state().read_col(1);
+        for (c, ui) in col.iter().zip(&u) {
+            assert!((c - 0.7 * ui).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn close_is_a_noop() {
+        let mut tr = InProc::new(server(2, 1));
+        assert!(tr.close().is_ok());
+    }
+}

@@ -1,0 +1,103 @@
+//! The worker↔server transport layer: how model vectors cross the
+//! "network" of Algorithm 1's star topology.
+//!
+//! The paper's premise is that task data lives on separate nodes and only
+//! model vectors travel ("it may not always be feasible to transfer the
+//! data … due to high data volume and privacy"). This module makes that
+//! edge explicit: a task node talks to the central server *only* through
+//! the [`Transport`] trait —
+//!
+//! * [`Transport::eta`] — the forward step size η (a run constant),
+//! * [`Transport::fetch_prox_col`] — retrieve the backward-step block
+//!   `(Prox_{ηλg}(V̂))_t`,
+//! * [`Transport::push_update`] — commit a forward-step result via the KM
+//!   relaxation.
+//!
+//! Two implementations:
+//!
+//! * [`InProc`] — the shared-memory path: direct calls into an
+//!   `Arc<CentralServer>`, no serialization, bit-identical to the
+//!   pre-transport coordinator. The default.
+//! * [`TcpClient`] / [`TcpServer`] — a real network path: the versioned,
+//!   checksummed binary frames of [`wire`] over `std::net` TCP, one
+//!   connection per task node, with client-side timeouts and reconnects.
+//!   The privacy boundary stops being a simulation: the protocol has no
+//!   frame type that could carry task data (`X_t`, `y_t`) at all — only
+//!   prox columns, update vectors, and scalars ever cross the socket.
+//!
+//! Every [`Schedule`](crate::coordinator::Schedule) routes its backward
+//! fetches and KM commits through this trait, so asynchronous,
+//! synchronized, and semi-synchronous runs all work over either transport
+//! (select with
+//! [`SessionBuilder::transport`](crate::coordinator::SessionBuilder::transport)),
+//! and the `amtl --serve` / `amtl --node` CLI modes run the two halves as
+//! separate OS processes.
+
+pub mod inproc;
+pub mod tcp;
+pub mod wire;
+
+pub use inproc::InProc;
+pub use tcp::{TcpClient, TcpOptions, TcpServer, TcpServerHandle};
+
+use anyhow::Result;
+
+/// How a [`Session`](crate::coordinator::Session) wires its workers to the
+/// central server.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Shared-memory calls through `Arc<CentralServer>` (the default;
+    /// bit-identical to the pre-transport coordinator).
+    #[default]
+    InProc,
+    /// Spawn a loopback TCP server around the session's central server and
+    /// connect every worker through its own socket: all algorithmic
+    /// traffic crosses the real wire protocol.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "inproc" => Some(TransportKind::InProc),
+            "tcp" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// One task node's channel to the central server (the worker side of the
+/// star edge). Implementations are per-node — each worker owns its own
+/// transport (for TCP: its own connection and framing state), hence
+/// `&mut self`.
+pub trait Transport: Send {
+    /// The run's forward step size η (Eq. III.4). Fixed for the lifetime
+    /// of a run; TCP clients fetch it once at connect and cache it.
+    fn eta(&self) -> f64;
+
+    /// Retrieve `(Prox_{ηλg}(V̂))_t` — the backward step for task `t`,
+    /// computed server-side over a fresh-enough snapshot of `V`.
+    fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>>;
+
+    /// Commit a forward-step result: `v_t ← v_t + step·(u − v_t)` on the
+    /// server. Returns the new global version (total KM updates).
+    ///
+    /// Over TCP this is at-least-once: a response lost to a transient
+    /// failure triggers a reconnect-and-resend, which may double-apply the
+    /// relaxation — the same class of perturbation as the paper's delayed
+    /// updates, and harmless to convergence for `step ∈ (0, 1)`.
+    fn push_update(&mut self, t: usize, step: f64, u: &[f64]) -> Result<u64>;
+
+    /// Graceful teardown (TCP sends a `Shutdown` frame; in-proc is a
+    /// no-op). Called by the worker loop on exit; errors are advisory.
+    fn close(&mut self) -> Result<()> {
+        Ok(())
+    }
+}

@@ -1,0 +1,475 @@
+//! The TCP transport: a multi-threaded prox server around
+//! [`CentralServer`] and a reconnecting per-node client, speaking the
+//! [`wire`](super::wire) protocol over `std::net` sockets.
+//!
+//! Server side ([`TcpServer::spawn`]): one non-blocking accept loop plus
+//! one thread per connection. Each connection is independently framed —
+//! a protocol error on one node's socket never corrupts another's. All
+//! remote input is validated (task index bounds, update dimension, step
+//! finiteness) before it touches the shared state; invalid requests get
+//! an `Error` response, never a panic.
+//!
+//! Client side ([`TcpClient`]): connect/read/write timeouts, `TCP_NODELAY`
+//! (frames are latency-bound request/response pairs, not bulk streams),
+//! and bounded reconnect-and-resend on transient failures. Fetches are
+//! idempotent; `PushUpdate` resends are at-least-once (see
+//! [`Transport::push_update`]).
+
+use super::wire::{Request, Response, WireError};
+use super::Transport;
+use crate::coordinator::metrics::Recorder;
+use crate::coordinator::server::CentralServer;
+use anyhow::{anyhow, bail, Result};
+use std::io::{ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Client-side networking knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TcpOptions {
+    /// TCP connect timeout.
+    pub connect_timeout: Duration,
+    /// Per-read/per-write socket timeout.
+    pub io_timeout: Duration,
+    /// Reconnect-and-resend attempts after the first failure.
+    pub retries: u32,
+    /// Base backoff between attempts (scaled linearly by attempt number).
+    pub retry_backoff: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> TcpOptions {
+        TcpOptions {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(30),
+            retries: 3,
+            retry_backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+/// How often blocked server threads wake up to check the shutdown flag.
+const POLL: Duration = Duration::from_millis(20);
+
+/// Server-side per-response write timeout: a client that stops reading
+/// cannot pin a connection thread (and therefore
+/// [`TcpServerHandle::shutdown`], which joins them) forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The serving side: accepts task-node connections and answers requests
+/// against a shared [`CentralServer`].
+pub struct TcpServer;
+
+/// Running server handle. Dropping it (or calling
+/// [`TcpServerHandle::shutdown`]) stops the accept loop and joins every
+/// connection thread.
+pub struct TcpServerHandle {
+    addr: SocketAddr,
+    stop_flag: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
+    /// and serve `server` until the handle is shut down. When `recorder`
+    /// is given, every committed update drives trajectory sampling
+    /// server-side (used by the standalone `amtl --serve` process; library
+    /// sessions record worker-side instead so in-proc and TCP runs sample
+    /// identically).
+    pub fn spawn(
+        addr: &str,
+        server: Arc<CentralServer>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Result<TcpServerHandle> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("cannot bind tcp server on {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop_flag = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let stop = Arc::clone(&stop_flag);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("amtl-tcp-accept".into())
+                .spawn(move || loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let server = Arc::clone(&server);
+                            let recorder = recorder.clone();
+                            let stop = Arc::clone(&stop);
+                            let spawned = std::thread::Builder::new()
+                                .name("amtl-tcp-conn".into())
+                                .spawn(move || {
+                                    serve_conn(stream, &server, recorder.as_deref(), &stop)
+                                });
+                            if let Ok(h) = spawned {
+                                // Reap finished connection threads so a
+                                // long-lived server under reconnect churn
+                                // does not accumulate handles unboundedly.
+                                let mut conns = conns.lock().unwrap();
+                                conns.retain(|c| !c.is_finished());
+                                conns.push(h);
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                })?
+        };
+
+        Ok(TcpServerHandle { addr: local, stop_flag, accept: Some(accept), conns })
+    }
+}
+
+impl TcpServerHandle {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake blocked connection threads, join everything.
+    /// Idempotent; also invoked on drop.
+    pub fn shutdown(&mut self) {
+        self.stop_flag.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// `Read` adapter that turns socket read timeouts into shutdown checks:
+/// blocked connection threads wake every [`POLL`] interval, look at the
+/// stop flag, and otherwise keep waiting. EOF and real errors pass
+/// through untouched.
+struct PatientReader<'a> {
+    stream: &'a TcpStream,
+    stop: &'a AtomicBool,
+}
+
+impl Read for PatientReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            match (&mut &*self.stream).read(buf) {
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return Err(std::io::Error::new(
+                            ErrorKind::ConnectionAborted,
+                            "server shutting down",
+                        ));
+                    }
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+/// One connection's request loop: validate → execute → respond.
+fn serve_conn(
+    stream: TcpStream,
+    server: &CentralServer,
+    recorder: Option<&Recorder>,
+    stop: &AtomicBool,
+) {
+    // Accepted sockets may inherit the listener's non-blocking mode on
+    // some platforms; force blocking + a short timeout so PatientReader
+    // can poll the stop flag.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = PatientReader { stream: &stream, stop };
+    loop {
+        let req = match Request::read_from(&mut reader) {
+            Ok(req) => req,
+            // Client closed, or we are shutting down: silent exit.
+            Err(WireError::Io(_)) => return,
+            // Framing is corrupt; report once and drop the connection
+            // (we cannot resynchronize a byte stream mid-frame).
+            Err(e) => {
+                let _ = Response::Error(format!("protocol error: {e}")).write_to(&mut &stream);
+                return;
+            }
+        };
+        let resp = match req {
+            Request::FetchEta => Response::Eta(server.eta()),
+            Request::FetchProxCol { t } => {
+                let t = t as usize;
+                if t < server.state().t() {
+                    Response::ProxCol(server.prox_col(t))
+                } else {
+                    Response::Error(format!(
+                        "task index {t} out of range (T={})",
+                        server.state().t()
+                    ))
+                }
+            }
+            Request::PushUpdate { t, step, u } => {
+                let t = t as usize;
+                let (d, t_count) = (server.state().d(), server.state().t());
+                if t >= t_count {
+                    Response::Error(format!("task index {t} out of range (T={t_count})"))
+                } else if u.len() != d {
+                    Response::Error(format!("update has dimension {}, expected {d}", u.len()))
+                } else if !step.is_finite() {
+                    Response::Error(format!("non-finite km step {step}"))
+                } else if !u.iter().all(|x| x.is_finite()) {
+                    Response::Error("update vector contains non-finite values".into())
+                } else {
+                    let version = server.commit_update(t, &u, step);
+                    if let Some(rec) = recorder {
+                        rec.maybe_record(version, || server.state().snapshot());
+                    }
+                    Response::Pushed { version }
+                }
+            }
+            Request::Shutdown => {
+                let _ = Response::ShutdownAck.write_to(&mut &stream);
+                return;
+            }
+        };
+        if resp.write_to(&mut &stream).is_err() {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------- client
+
+/// A task node's connection to a remote prox server. One client per node;
+/// reconnects (with bounded retries and backoff) on transient failures.
+pub struct TcpClient {
+    addr: SocketAddr,
+    opts: TcpOptions,
+    stream: Option<TcpStream>,
+    eta: f64,
+}
+
+impl TcpClient {
+    /// Resolve `addr`, connect, and fetch the run's η. Fails fast if the
+    /// server is unreachable or speaks a different protocol version.
+    pub fn connect(addr: impl ToSocketAddrs, opts: TcpOptions) -> Result<TcpClient> {
+        let addr = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("cannot resolve server address: {e}"))?
+            .next()
+            .ok_or_else(|| anyhow!("server address resolved to nothing"))?;
+        let mut client = TcpClient { addr, opts, stream: None, eta: f64::NAN };
+        match client.request(&Request::FetchEta)? {
+            Response::Eta(eta) => client.eta = eta,
+            other => bail!("handshake expected Eta, got {other:?}"),
+        }
+        Ok(client)
+    }
+
+    fn ensure_connected(&mut self) -> Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect_timeout(&self.addr, self.opts.connect_timeout)
+                .map_err(|e| anyhow!("connect to {}: {e}", self.addr))?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(self.opts.io_timeout))?;
+            stream.set_write_timeout(Some(self.opts.io_timeout))?;
+            self.stream = Some(stream);
+        }
+        Ok(self.stream.as_mut().expect("just connected"))
+    }
+
+    fn try_request(&mut self, req: &Request) -> Result<Response> {
+        let stream = self.ensure_connected()?;
+        req.write_to(stream)?;
+        Ok(Response::read_from(stream)?)
+    }
+
+    /// Send one request, reconnecting and resending on transient
+    /// failures. A semantic rejection (`Response::Error`) is terminal —
+    /// the server understood us and said no.
+    fn request(&mut self, req: &Request) -> Result<Response> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                std::thread::sleep(self.opts.retry_backoff * attempt);
+            }
+            match self.try_request(req) {
+                Ok(Response::Error(msg)) => bail!("server rejected request: {msg}"),
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    // Connection state is suspect: force a fresh socket.
+                    self.stream = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        let attempts = self.opts.retries + 1;
+        Err(last_err
+            .unwrap_or_else(|| anyhow!("request failed"))
+            .context(format!("giving up on {} after {attempts} attempts", self.addr)))
+    }
+}
+
+impl Transport for TcpClient {
+    fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>> {
+        match self.request(&Request::FetchProxCol { t: t as u32 })? {
+            Response::ProxCol(col) => Ok(col),
+            other => bail!("expected ProxCol, got {other:?}"),
+        }
+    }
+
+    fn push_update(&mut self, t: usize, step: f64, u: &[f64]) -> Result<u64> {
+        match self.request(&Request::PushUpdate { t: t as u32, step, u: u.to_vec() })? {
+            Response::Pushed { version } => Ok(version),
+            other => bail!("expected Pushed, got {other:?}"),
+        }
+    }
+
+    fn close(&mut self) -> Result<()> {
+        // Best-effort polite teardown; a vanished server is not an error.
+        if self.stream.is_some() {
+            let _ = self.try_request(&Request::Shutdown);
+            self.stream = None;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::SharedState;
+    use crate::optim::prox::{Regularizer, RegularizerKind};
+    use crate::util::Rng;
+
+    fn server(d: usize, t: usize) -> Arc<CentralServer> {
+        let state = Arc::new(SharedState::zeros(d, t));
+        Arc::new(CentralServer::new(state, Regularizer::new(RegularizerKind::L21, 0.2), 0.125))
+    }
+
+    fn quick_opts() -> TcpOptions {
+        TcpOptions {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(500),
+            retries: 1,
+            retry_backoff: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn loopback_roundtrip_fetch_push_eta() {
+        let srv = server(6, 3);
+        let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+        assert_eq!(client.eta(), 0.125, "handshake fetched eta");
+
+        let mut rng = Rng::new(910);
+        let u = rng.normal_vec(6);
+        let version = client.push_update(2, 0.5, &u).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(srv.state().col_version(2), 1);
+
+        // The fetched column equals the server's own prox column.
+        let got = client.fetch_prox_col(2).unwrap();
+        assert_eq!(got, srv.prox_col(2));
+
+        client.close().unwrap();
+        handle.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_get_error_responses_not_panics() {
+        let srv = server(4, 2);
+        let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+
+        let err = client.fetch_prox_col(9).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        let err = client.push_update(0, 0.5, &[1.0; 3]).unwrap_err();
+        assert!(format!("{err:#}").contains("dimension"), "{err:#}");
+        let err = client.push_update(0, f64::NAN, &[1.0; 4]).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        let err = client.push_update(0, 0.5, &[1.0, f64::INFINITY, 0.0, 0.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+
+        // The connection survives rejections: a valid request still works.
+        assert_eq!(client.push_update(0, 1.0, &[1.0; 4]).unwrap(), 1);
+        assert_eq!(srv.state().read_col(0), vec![1.0; 4]);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_commit() {
+        let srv = server(5, 4);
+        let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), None).unwrap();
+        let addr = handle.addr();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let mut client = TcpClient::connect(addr, quick_opts()).unwrap();
+                    for _ in 0..25 {
+                        let col = client.fetch_prox_col(t).unwrap();
+                        assert_eq!(col.len(), 5);
+                        client.push_update(t, 0.5, &[1.0; 5]).unwrap();
+                    }
+                    client.close().unwrap();
+                });
+            }
+        });
+        assert_eq!(srv.state().version(), 100);
+        for t in 0..4 {
+            assert_eq!(srv.state().col_version(t), 25);
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn requests_after_server_shutdown_error_in_bounded_time() {
+        let srv = server(3, 1);
+        let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+        handle.shutdown();
+        let start = std::time::Instant::now();
+        let err = client.fetch_prox_col(0).unwrap_err();
+        assert!(format!("{err:#}").contains("giving up"), "{err:#}");
+        assert!(start.elapsed() < Duration::from_secs(5), "retry loop must be bounded");
+    }
+
+    #[test]
+    fn server_side_recorder_samples_commits() {
+        let srv = server(2, 1);
+        let recorder = Arc::new(Recorder::new(1));
+        let mut handle =
+            TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), Some(Arc::clone(&recorder)))
+                .unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+        for _ in 0..5 {
+            client.push_update(0, 1.0, &[2.0, 2.0]).unwrap();
+        }
+        client.close().unwrap();
+        handle.shutdown();
+        let recorder = Arc::try_unwrap(recorder).ok().expect("all clones dropped");
+        assert_eq!(recorder.into_points().len(), 5);
+    }
+}

@@ -1,0 +1,567 @@
+//! The AMTL wire protocol: versioned, length-prefixed, checksummed binary
+//! frames carrying the four messages of Algorithm 1's star topology.
+//!
+//! Every frame is
+//!
+//! ```text
+//! ┌───────┬─────────┬────────┬──────────┬───────────┬──────────┐
+//! │ magic │ version │ opcode │ len(u32) │ payload   │ crc(u32) │
+//! │ 4 B   │ 1 B     │ 1 B    │ 4 B LE   │ len bytes │ 4 B LE   │
+//! └───────┴─────────┴────────┴──────────┴───────────┴──────────┘
+//! ```
+//!
+//! with `magic = b"AMTL"`, `version = 1`, and `crc` the FNV-1a (32-bit)
+//! checksum of `version ‖ opcode ‖ len ‖ payload` — every header or payload
+//! corruption downstream of the magic is caught either by an explicit field
+//! check or by the checksum. All multi-byte integers and every `f64` are
+//! little-endian. There are no external dependencies: the codec is plain
+//! `std`, and decoding NEVER panics on malformed input — truncated,
+//! oversized, or corrupted frames return a [`WireError`].
+//!
+//! What crosses the wire is only what the paper's privacy argument allows:
+//! model vectors (prox columns, forward-step results) and scalars (η, KM
+//! steps, version counters). Task data (`X_t`, `y_t`) has no frame type at
+//! all — it *cannot* be transmitted by this protocol.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Frame prefix identifying the protocol.
+pub const MAGIC: [u8; 4] = *b"AMTL";
+/// Current protocol version; bumped on any incompatible frame change.
+pub const VERSION: u8 = 1;
+/// Upper bound on payload size (guards allocation on corrupted lengths:
+/// 64 MiB ≫ any model column we ship).
+pub const MAX_PAYLOAD: u32 = 1 << 26;
+
+// Request opcodes (client → server).
+const OP_FETCH_PROX_COL: u8 = 0x01;
+const OP_PUSH_UPDATE: u8 = 0x02;
+const OP_FETCH_ETA: u8 = 0x03;
+const OP_SHUTDOWN: u8 = 0x04;
+
+// Response opcodes (server → client).
+const OP_PROX_COL: u8 = 0x81;
+const OP_PUSHED: u8 = 0x82;
+const OP_ETA: u8 = 0x83;
+const OP_SHUTDOWN_ACK: u8 = 0x84;
+const OP_ERROR: u8 = 0xFF;
+
+/// Decode/IO failure. Malformed input is an error, never a panic.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    BadOpcode(u8),
+    Oversize(u32),
+    BadChecksum { got: u32, want: u32 },
+    Malformed(&'static str),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (expected {VERSION})")
+            }
+            WireError::BadOpcode(op) => write!(f, "unknown opcode {op:#04x}"),
+            WireError::Oversize(n) => {
+                write!(f, "payload length {n} exceeds maximum {MAX_PAYLOAD}")
+            }
+            WireError::BadChecksum { got, want } => {
+                write!(f, "checksum mismatch: frame says {want:#010x}, computed {got:#010x}")
+            }
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// FNV-1a 32-bit over a sequence of byte slices.
+fn fnv1a32(chunks: &[&[u8]]) -> u32 {
+    let mut h: u32 = 0x811c9dc5;
+    for chunk in chunks {
+        for &b in *chunk {
+            h ^= b as u32;
+            h = h.wrapping_mul(0x01000193);
+        }
+    }
+    h
+}
+
+/// Write one frame: header, payload, checksum.
+pub fn write_frame(w: &mut impl Write, opcode: u8, payload: &[u8]) -> Result<(), WireError> {
+    debug_assert!(payload.len() as u64 <= MAX_PAYLOAD as u64);
+    let len = (payload.len() as u32).to_le_bytes();
+    let crc = fnv1a32(&[&[VERSION, opcode], &len, payload]).to_le_bytes();
+    w.write_all(&MAGIC)?;
+    w.write_all(&[VERSION, opcode])?;
+    w.write_all(&len)?;
+    w.write_all(payload)?;
+    w.write_all(&crc)?;
+    Ok(())
+}
+
+/// Read one frame, verifying magic, version, size bound, and checksum.
+/// Returns `(opcode, payload)`; the opcode is validated by the message
+/// decoders ([`Request::decode`] / [`Response::decode`]).
+pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), WireError> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let mut head = [0u8; 6]; // version, opcode, len
+    r.read_exact(&mut head)?;
+    if head[0] != VERSION {
+        return Err(WireError::BadVersion(head[0]));
+    }
+    let opcode = head[1];
+    let len = u32::from_le_bytes([head[2], head[3], head[4], head[5]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversize(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc)?;
+    let want = u32::from_le_bytes(crc);
+    let got = fnv1a32(&[&head, &payload]);
+    if got != want {
+        return Err(WireError::BadChecksum { got, want });
+    }
+    Ok((opcode, payload))
+}
+
+// ------------------------------------------------------- payload cursor
+
+/// Bounds-checked little-endian reader over a payload slice.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or(WireError::Malformed("payload shorter than declared field"))?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// All remaining bytes as a little-endian f64 vector.
+    fn rest_f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let rest = &self.b[self.i..];
+        if rest.len() % 8 != 0 {
+            return Err(WireError::Malformed("f64 vector length not a multiple of 8"));
+        }
+        self.i = self.b.len();
+        Ok(rest
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])))
+            .collect())
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes after payload"))
+        }
+    }
+}
+
+fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.reserve(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+// ------------------------------------------------------------- messages
+
+/// Client → server messages (the task-node side of Algorithm 1).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Retrieve `(Prox_{ηλg}(V̂))_t` — the backward step for task `t`.
+    FetchProxCol { t: u32 },
+    /// Commit a forward-step result: `v_t ← v_t + step·(u − v_t)`.
+    PushUpdate { t: u32, step: f64, u: Vec<f64> },
+    /// Retrieve the run's forward step size η (a run constant).
+    FetchEta,
+    /// Graceful connection teardown.
+    Shutdown,
+}
+
+/// Server → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    ProxCol(Vec<f64>),
+    /// The global version (total KM updates) after the commit landed.
+    Pushed { version: u64 },
+    Eta(f64),
+    ShutdownAck,
+    /// Request rejected (bad task index, dimension mismatch, …). The
+    /// connection stays usable.
+    Error(String),
+}
+
+impl Request {
+    fn opcode(&self) -> u8 {
+        match self {
+            Request::FetchProxCol { .. } => OP_FETCH_PROX_COL,
+            Request::PushUpdate { .. } => OP_PUSH_UPDATE,
+            Request::FetchEta => OP_FETCH_ETA,
+            Request::Shutdown => OP_SHUTDOWN,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Request::FetchProxCol { t } => t.to_le_bytes().to_vec(),
+            Request::PushUpdate { t, step, u } => {
+                let mut out = Vec::with_capacity(12 + u.len() * 8);
+                out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&step.to_bits().to_le_bytes());
+                push_f64s(&mut out, u);
+                out
+            }
+            Request::FetchEta | Request::Shutdown => Vec::new(),
+        }
+    }
+
+    /// Decode from a frame's `(opcode, payload)`.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Request, WireError> {
+        let mut c = Cursor::new(payload);
+        let req = match opcode {
+            OP_FETCH_PROX_COL => Request::FetchProxCol { t: c.u32()? },
+            OP_PUSH_UPDATE => {
+                let t = c.u32()?;
+                let step = c.f64()?;
+                let u = c.rest_f64s()?;
+                Request::PushUpdate { t, step, u }
+            }
+            OP_FETCH_ETA => Request::FetchEta,
+            OP_SHUTDOWN => Request::Shutdown,
+            other => return Err(WireError::BadOpcode(other)),
+        };
+        c.finish()?;
+        Ok(req)
+    }
+
+    /// Serialize to one complete frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, self.opcode(), &self.payload()).expect("vec write is infallible");
+        out
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<(), WireError> {
+        write_frame(w, self.opcode(), &self.payload())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Request, WireError> {
+        let (opcode, payload) = read_frame(r)?;
+        Request::decode(opcode, &payload)
+    }
+}
+
+impl Response {
+    fn opcode(&self) -> u8 {
+        match self {
+            Response::ProxCol(_) => OP_PROX_COL,
+            Response::Pushed { .. } => OP_PUSHED,
+            Response::Eta(_) => OP_ETA,
+            Response::ShutdownAck => OP_SHUTDOWN_ACK,
+            Response::Error(_) => OP_ERROR,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Response::ProxCol(col) => {
+                let mut out = Vec::new();
+                push_f64s(&mut out, col);
+                out
+            }
+            Response::Pushed { version } => version.to_le_bytes().to_vec(),
+            Response::Eta(eta) => eta.to_bits().to_le_bytes().to_vec(),
+            Response::ShutdownAck => Vec::new(),
+            Response::Error(msg) => msg.as_bytes().to_vec(),
+        }
+    }
+
+    /// Decode from a frame's `(opcode, payload)`.
+    pub fn decode(opcode: u8, payload: &[u8]) -> Result<Response, WireError> {
+        let mut c = Cursor::new(payload);
+        let resp = match opcode {
+            OP_PROX_COL => Response::ProxCol(c.rest_f64s()?),
+            OP_PUSHED => Response::Pushed { version: c.u64()? },
+            OP_ETA => Response::Eta(c.f64()?),
+            OP_SHUTDOWN_ACK => Response::ShutdownAck,
+            OP_ERROR => {
+                let msg = String::from_utf8(payload.to_vec())
+                    .map_err(|_| WireError::Malformed("error message is not utf-8"))?;
+                return Ok(Response::Error(msg));
+            }
+            other => return Err(WireError::BadOpcode(other)),
+        };
+        c.finish()?;
+        Ok(resp)
+    }
+
+    /// Serialize to one complete frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, self.opcode(), &self.payload()).expect("vec write is infallible");
+        out
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> Result<(), WireError> {
+        write_frame(w, self.opcode(), &self.payload())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> Result<Response, WireError> {
+        let (opcode, payload) = read_frame(r)?;
+        Response::decode(opcode, &payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let bytes = req.encode();
+        let mut r = std::io::Cursor::new(bytes);
+        Request::read_from(&mut r).unwrap()
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let bytes = resp.encode();
+        let mut r = std::io::Cursor::new(bytes);
+        Response::read_from(&mut r).unwrap()
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        for req in [
+            Request::FetchProxCol { t: 0 },
+            Request::FetchProxCol { t: u32::MAX },
+            Request::PushUpdate { t: 3, step: 0.9, u: vec![1.0, -2.5, f64::MIN_POSITIVE] },
+            Request::PushUpdate { t: 0, step: f64::NEG_INFINITY, u: vec![] },
+            Request::FetchEta,
+            Request::Shutdown,
+        ] {
+            assert_eq!(roundtrip_request(&req), req);
+        }
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips() {
+        for resp in [
+            Response::ProxCol(vec![0.0, -0.0, 1e300]),
+            Response::ProxCol(vec![]),
+            Response::Pushed { version: u64::MAX },
+            Response::Eta(1.25e-3),
+            Response::ShutdownAck,
+            Response::Error("task index 9 out of range (T=4)".into()),
+            Response::Error(String::new()),
+        ] {
+            assert_eq!(roundtrip_response(&resp), resp);
+        }
+    }
+
+    #[test]
+    fn prop_arbitrary_push_update_roundtrips() {
+        forall(
+            "push-update frames encode/decode identically",
+            60,
+            |g| {
+                let n = g.usize_in(0, 400);
+                let u = g.normal_vec(n);
+                let step = g.f64_in(-10.0, 10.0);
+                let t = g.usize_in(0, 1000);
+                ((u, step), t)
+            },
+            |((u, step), t)| {
+                let req = Request::PushUpdate { t: *t as u32, step: *step, u: u.clone() };
+                roundtrip_request(&req) == req
+            },
+        );
+    }
+
+    #[test]
+    fn prop_arbitrary_prox_col_roundtrips() {
+        forall(
+            "prox-col frames encode/decode identically",
+            60,
+            |g| {
+                let n = g.usize_in(0, 400);
+                g.normal_vec(n)
+            },
+            |col| {
+                let resp = Response::ProxCol(col.clone());
+                roundtrip_response(&resp) == resp
+            },
+        );
+    }
+
+    #[test]
+    fn nan_payloads_roundtrip_bitwise() {
+        // PartialEq on NaN is false; compare bit patterns instead.
+        let req = Request::PushUpdate { t: 1, step: f64::NAN, u: vec![f64::NAN, 1.0] };
+        match roundtrip_request(&req) {
+            Request::PushUpdate { t, step, u } => {
+                assert_eq!(t, 1);
+                assert_eq!(step.to_bits(), f64::NAN.to_bits());
+                assert_eq!(u[0].to_bits(), f64::NAN.to_bits());
+                assert_eq!(u[1], 1.0);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_never_panic() {
+        let frames = [
+            Request::PushUpdate { t: 2, step: 0.5, u: vec![1.0, 2.0, 3.0] }.encode(),
+            Request::FetchEta.encode(),
+            Response::ProxCol(vec![4.0; 7]).encode(),
+            Response::Error("boom".into()).encode(),
+        ];
+        for full in &frames {
+            for cut in 0..full.len() {
+                let mut r = std::io::Cursor::new(&full[..cut]);
+                assert!(
+                    read_frame(&mut r).is_err(),
+                    "prefix of {cut}/{} bytes must not decode",
+                    full.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_bytes_error_never_panic() {
+        // Any single-byte corruption is caught: magic/version by field
+        // checks, everything else by the checksum (which covers the header
+        // after the magic and the whole payload).
+        let frames = [
+            Request::PushUpdate { t: 2, step: 0.5, u: vec![1.0, -2.0] }.encode(),
+            Request::FetchProxCol { t: 7 }.encode(),
+            Response::Pushed { version: 41 }.encode(),
+            Response::Eta(0.125).encode(),
+        ];
+        for full in &frames {
+            for pos in 0..full.len() {
+                for flip in [0xFFu8, 0x01, 0x80] {
+                    let mut bad = full.clone();
+                    bad[pos] ^= flip;
+                    let mut r = std::io::Cursor::new(bad);
+                    // Whichever message family the (possibly corrupted)
+                    // opcode lands in, the frame must be rejected: both
+                    // decoders have to refuse it.
+                    let accepted = match read_frame(&mut r) {
+                        Err(_) => false,
+                        Ok((op, payload)) => {
+                            Request::decode(op, &payload).is_ok()
+                                || Response::decode(op, &payload).is_ok()
+                        }
+                    };
+                    assert!(!accepted, "corruption at byte {pos} (xor {flip:#x}) must error");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_length_is_rejected_without_allocating() {
+        let mut frame = Request::FetchEta.encode();
+        // len field lives at bytes 6..10.
+        frame[6..10].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let mut r = std::io::Cursor::new(frame);
+        assert!(matches!(read_frame(&mut r), Err(WireError::Oversize(_))));
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_rejected() {
+        let mut frame = Request::Shutdown.encode();
+        frame[0] = b'X';
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(frame.clone())),
+            Err(WireError::BadMagic(_))
+        ));
+        let mut frame = Request::Shutdown.encode();
+        frame[4] = VERSION + 1;
+        assert!(matches!(
+            read_frame(&mut std::io::Cursor::new(frame)),
+            Err(WireError::BadVersion(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_opcode_is_rejected_at_decode() {
+        // A frame with a valid checksum but an opcode neither side knows.
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x7E, &[]).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Request::decode(op, &payload), Err(WireError::BadOpcode(0x7E))));
+        assert!(matches!(Response::decode(op, &payload), Err(WireError::BadOpcode(0x7E))));
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        // FetchEta must have an empty payload; 4 stray bytes are malformed.
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x03, &[0, 0, 0, 0]).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Request::decode(op, &payload), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn ragged_f64_vector_is_rejected() {
+        // 9 bytes after (t, step) is not a whole number of f64s.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&0.5f64.to_bits().to_le_bytes());
+        payload.extend_from_slice(&[0u8; 9]);
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x02, &payload).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Request::decode(op, &payload), Err(WireError::Malformed(_))));
+    }
+}

@@ -255,13 +255,6 @@ fn mismatched_compute_count_is_an_error() {
     let mut computes = p.build_computes(Engine::Native, None).unwrap();
     computes.pop();
     assert!(Session::builder(&p).computes(computes).build().is_err());
-    // The deprecated shim surfaces the same validation.
-    #[allow(deprecated)]
-    {
-        let mut computes = p.build_computes(Engine::Native, None).unwrap();
-        computes.pop();
-        assert!(amtl::coordinator::run_amtl(&p, computes, &RunConfig::default()).is_err());
-    }
 }
 
 #[test]

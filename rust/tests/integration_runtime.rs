@@ -300,10 +300,11 @@ fn full_pjrt_l21_amtl_run() {
     use amtl::coordinator::server::CentralServer;
     use amtl::coordinator::state::SharedState;
     use amtl::coordinator::step_size::{KmSchedule, StepController};
-    use amtl::coordinator::worker::{run_worker, WorkerCtx};
+    use amtl::coordinator::worker::{run_worker, TrajectorySink, WorkerCtx};
     use amtl::coordinator::metrics::Recorder;
     use amtl::net::{DelayModel, FaultModel};
     use amtl::optim::prox::{Regularizer, RegularizerKind};
+    use amtl::transport::InProc;
     use std::sync::Arc;
 
     let Some(pool) = pool(1) else { return };
@@ -334,13 +335,16 @@ fn full_pjrt_l21_amtl_run() {
             let ctx = WorkerCtx {
                 t,
                 iters: 40,
-                server: Arc::clone(&server),
+                transport: Box::new(InProc::new(Arc::clone(&server))),
                 controller: Arc::clone(&controller),
                 delay: DelayModel::None,
                 faults: FaultModel::None,
                 sgd_fraction: None,
                 time_scale: std::time::Duration::from_millis(10),
-                recorder: Arc::clone(&recorder),
+                sink: Some(TrajectorySink {
+                    recorder: Arc::clone(&recorder),
+                    state: Arc::clone(server.state()),
+                }),
                 rng: Rng::new(700 + t as u64),
                 gate: None,
             };

@@ -1,6 +1,6 @@
 //! Integration tests for the unified `Session` + `Schedule` API: builder
-//! validation, equivalence with the deprecated entry points, and the
-//! semi-synchronous schedule the old forked drivers could not express.
+//! validation, convergence against the centralized FISTA reference, and
+//! the semi-synchronous schedule the old forked drivers could not express.
 
 use amtl::coordinator::{
     Async, MtlProblem, RunConfig, Schedule, SemiSync, Session, Synchronized,
@@ -48,66 +48,93 @@ fn builder_reports_bad_run_config() {
     assert!(Session::builder(&p).dyn_window(0).build().is_err());
 }
 
-// ------------------------------------------------- shim equivalence
+// ------------------------------------------------- determinism & quality
 
 #[test]
-#[allow(deprecated)]
-fn session_async_is_bit_identical_to_run_amtl_on_one_task() {
-    // One task ⇒ no thread interleaving ⇒ both paths must agree exactly.
+fn session_async_is_deterministic_on_one_task() {
+    // One task ⇒ no thread interleaving ⇒ two runs must agree exactly.
     let p = lowrank_problem(803, 1, 40, 6, 0.2);
     let cfg = RunConfig { iters_per_node: 30, ..Default::default() };
-    let r_new = Session::builder(&p)
-        .config(cfg.clone())
+    let run = || {
+        Session::builder(&p)
+            .config(cfg.clone())
+            .schedule(Async)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.v_final, r2.v_final, "V bit-identical");
+    assert_eq!(r1.w_final, r2.w_final, "W bit-identical");
+    assert_eq!(r1.updates, r2.updates);
+    assert_eq!(r1.prox_count, r2.prox_count);
+    assert_eq!(r1.method, "amtl");
+}
+
+#[test]
+fn session_async_converges_to_fista_optimum() {
+    let p = lowrank_problem(804, 4, 50, 6, 0.2);
+    // Centralized FISTA reference optimum.
+    let tasks = p.fista_tasks();
+    let mut reg = p.regularizer();
+    let fista = amtl::optim::fista::fista(&tasks, &mut reg, p.l_max, 2000, 1e-12);
+    let f_star = *fista.history.last().unwrap();
+
+    let r = Session::builder(&p)
+        .iters_per_node(400)
+        .eta_k(0.9)
+        .record_every(1_000_000)
         .schedule(Async)
         .build()
         .unwrap()
         .run()
         .unwrap();
-    let r_old = amtl::coordinator::run_amtl(
-        &p,
-        p.build_computes(Engine::Native, None).unwrap(),
-        &cfg,
-    )
-    .unwrap();
-    assert_eq!(r_new.v_final, r_old.v_final, "V bit-identical");
-    assert_eq!(r_new.w_final, r_old.w_final, "W bit-identical");
-    assert_eq!(r_new.updates, r_old.updates);
-    assert_eq!(r_new.prox_count, r_old.prox_count);
-    assert_eq!(r_new.method, r_old.method);
+    let f_amtl = p.objective(&r.w_final);
+    assert!(
+        f_amtl <= f_star * 1.05 + 1e-6,
+        "AMTL {f_amtl} vs FISTA {f_star}"
+    );
 }
 
 #[test]
-#[allow(deprecated)]
-fn session_synchronized_matches_run_smtl_updates_and_objective() {
-    let p = lowrank_problem(804, 4, 30, 6, 0.2);
-    let r_new = Session::builder(&p)
-        .iters_per_node(25)
-        .eta_k(0.9)
-        .schedule(Synchronized)
+fn online_svd_session_matches_exact_session_approximately() {
+    // Brand's incremental SVD must track the exact Jacobi prox, not just
+    // decrease the objective on its own.
+    let p = lowrank_problem(810, 3, 30, 6, 0.2);
+    let run = |online: bool| {
+        Session::builder(&p)
+            .iters_per_node(30)
+            .online_svd(online)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let f_exact = p.objective(&run(false).w_final);
+    let f_online = p.objective(&run(true).w_final);
+    assert!(
+        (f_exact - f_online).abs() / f_exact.max(1e-9) < 0.2,
+        "exact {f_exact} vs online {f_online}"
+    );
+}
+
+#[test]
+fn session_records_decreasing_trajectory() {
+    let p = lowrank_problem(809, 3, 20, 4, 0.1);
+    let r = Session::builder(&p)
+        .iters_per_node(10)
+        .record_every(5)
+        .schedule(Async)
         .build()
         .unwrap()
         .run()
         .unwrap();
-    let old_cfg = amtl::coordinator::SmtlConfig {
-        iters: 25,
-        km: amtl::coordinator::step_size::KmSchedule::fixed(0.9),
-        ..Default::default()
-    };
-    let r_old = amtl::coordinator::run_smtl(
-        &p,
-        p.build_computes(Engine::Native, None).unwrap(),
-        &old_cfg,
-    )
-    .unwrap();
-    assert_eq!(r_new.updates, r_old.updates);
-    assert_eq!(r_new.updates_per_node, r_old.updates_per_node);
-    let f_new = p.objective(&r_new.w_final);
-    let f_old = p.objective(&r_old.w_final);
-    // Synchronized rounds are deterministic in value: exact agreement.
-    assert!(
-        (f_new - f_old).abs() < 1e-9,
-        "sync objective {f_new} vs shim {f_old}"
-    );
+    // 30 updates / stride 5 = ~6 samples + initial + final.
+    assert!(r.trajectory.len() >= 4, "only {} points", r.trajectory.len());
+    let objs = r.compute_objectives(|w| p.objective(w), |v| p.prox_map(v));
+    assert!(objs.last().unwrap().2 < objs[0].2, "objective must decrease");
 }
 
 // --------------------------------------------------------- semi-sync

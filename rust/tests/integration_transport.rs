@@ -1,0 +1,167 @@
+//! Integration tests for the transport layer: loopback-TCP sessions must
+//! reach the same answers as in-proc sessions, under every schedule, and
+//! the two-process deployment shape (`--serve` / `--node`) must converge
+//! when exercised as server + independent TCP worker clients.
+
+use amtl::coordinator::server::CentralServer;
+use amtl::coordinator::state::SharedState;
+use amtl::coordinator::step_size::{KmSchedule, StepController};
+use amtl::coordinator::worker::{run_worker, WorkerCtx};
+use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Session, Synchronized};
+use amtl::data::synthetic;
+use amtl::net::{DelayModel, FaultModel};
+use amtl::optim::prox::RegularizerKind;
+use amtl::transport::{TcpClient, TcpOptions, TcpServer, TransportKind};
+use amtl::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+fn run_with(
+    p: &MtlProblem,
+    kind: TransportKind,
+    schedule: impl Schedule + 'static,
+    iters: usize,
+) -> amtl::coordinator::RunResult {
+    Session::builder(p)
+        .iters_per_node(iters)
+        .eta_k(0.9)
+        .record_every(1_000_000)
+        .transport(kind)
+        .schedule(schedule)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+// ------------------------------------------------ session over loopback
+
+#[test]
+fn tcp_session_is_bit_identical_to_inproc_on_one_task() {
+    // One task ⇒ a deterministic fetch/commit sequence ⇒ serialization
+    // must be exactly invertible: same bits out of either transport.
+    let p = lowrank_problem(830, 1, 40, 6, 0.2);
+    let a = run_with(&p, TransportKind::InProc, Async, 30);
+    let b = run_with(&p, TransportKind::Tcp, Async, 30);
+    assert_eq!(a.updates, b.updates);
+    assert_eq!(a.prox_count, b.prox_count);
+    assert_eq!(a.v_final, b.v_final, "V bit-identical across transports");
+    assert_eq!(a.w_final, b.w_final, "W bit-identical across transports");
+}
+
+#[test]
+fn tcp_async_session_converges_like_inproc() {
+    // The acceptance check: same seed, same budget — the TCP run must land
+    // at the same objective (within the tolerance that concurrent
+    // interleaving already implies for in-proc runs).
+    let p = lowrank_problem(831, 4, 40, 8, 0.3);
+    let f_inproc = p.objective(&run_with(&p, TransportKind::InProc, Async, 150).w_final);
+    let f_tcp = p.objective(&run_with(&p, TransportKind::Tcp, Async, 150).w_final);
+    assert!(
+        (f_tcp - f_inproc).abs() / f_inproc.max(1e-9) < 0.05,
+        "tcp {f_tcp} vs inproc {f_inproc}"
+    );
+}
+
+#[test]
+fn tcp_synchronized_session_matches_inproc_exactly() {
+    // Synchronized rounds are deterministic in value: the transport must
+    // not move the objective at all.
+    let p = lowrank_problem(832, 3, 30, 6, 0.2);
+    let a = run_with(&p, TransportKind::InProc, Synchronized, 25);
+    let b = run_with(&p, TransportKind::Tcp, Synchronized, 25);
+    assert_eq!(a.updates, b.updates);
+    assert_eq!(a.updates_per_node, b.updates_per_node);
+    let (fa, fb) = (p.objective(&a.w_final), p.objective(&b.w_final));
+    assert!((fa - fb).abs() < 1e-9, "sync inproc {fa} vs tcp {fb}");
+}
+
+#[test]
+fn tcp_semisync_session_runs_full_budget() {
+    let p = lowrank_problem(833, 3, 30, 6, 0.2);
+    let r = run_with(&p, TransportKind::Tcp, SemiSync { staleness_bound: 2 }, 40);
+    assert_eq!(r.updates, 120);
+    assert_eq!(r.updates_per_node, vec![40; 3]);
+    let f0 = p.objective(&p.prox_map(&amtl::linalg::Mat::zeros(6, 3)));
+    let f1 = p.objective(&r.w_final);
+    assert!(f1 < 0.5 * f0, "semisync over tcp: {f0} -> {f1}");
+}
+
+#[test]
+fn tcp_session_supports_faults_like_inproc() {
+    let p = lowrank_problem(834, 3, 20, 5, 0.2);
+    let r = Session::builder(&p)
+        .iters_per_node(20)
+        .faults(FaultModel::CrashAfter { node: 1, after: 3 })
+        .transport(TransportKind::Tcp)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(r.crashed_nodes, vec![1]);
+    assert_eq!(r.updates_per_node, vec![20, 3, 20]);
+}
+
+// ------------------------------------- two-process shape over loopback
+
+/// The `--serve` / `--node` deployment, compressed into one test process:
+/// a standalone TCP server wrapping its own state, and one independent
+/// client-driven worker per task — each holding only its task's compute,
+/// exactly like `amtl --node <t>` — connected over real sockets.
+#[test]
+fn node_style_tcp_cluster_converges_to_inproc_objective() {
+    let p = lowrank_problem(835, 3, 40, 6, 0.2);
+    let iters = 120;
+
+    // Reference: plain in-proc session, same seeds.
+    let f_ref = p.objective(&run_with(&p, TransportKind::InProc, Async, iters).w_final);
+
+    // "serve" side: state + central server + listener.
+    let state = Arc::new(SharedState::zeros(p.d(), p.t()));
+    let server = Arc::new(CentralServer::new(Arc::clone(&state), p.regularizer(), p.eta));
+    let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), None).unwrap();
+    let addr = handle.addr();
+
+    // "node" side: one worker per task, own compute, own connection, own
+    // RNG stream (forked like the session forks them).
+    let mut computes = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let controller = Arc::new(StepController::new(KmSchedule::fixed(0.9), false, p.t(), 5));
+    let mut root = Rng::new(7);
+    std::thread::scope(|s| {
+        for (t, compute) in computes.iter_mut().enumerate() {
+            let client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+            let ctx = WorkerCtx {
+                t,
+                iters,
+                transport: Box::new(client),
+                controller: Arc::clone(&controller),
+                delay: DelayModel::None,
+                faults: FaultModel::None,
+                sgd_fraction: None,
+                time_scale: Duration::from_millis(100),
+                sink: None,
+                rng: root.fork(t as u64),
+                gate: None,
+            };
+            s.spawn(move || {
+                let stats = run_worker(ctx, compute.as_mut()).unwrap();
+                assert_eq!(stats.updates, iters as u64);
+            });
+        }
+    });
+    handle.shutdown();
+
+    assert_eq!(state.version(), (p.t() * iters) as u64);
+    let w = server.final_w();
+    let f_cluster = p.objective(&w);
+    assert!(
+        (f_cluster - f_ref).abs() / f_ref.max(1e-9) < 0.05,
+        "cluster {f_cluster} vs in-proc {f_ref}"
+    );
+}
