@@ -8,7 +8,7 @@
 //! forward steps. The run logs the objective curve, compares AMTL vs SMTL
 //! wall-clock under identical networks, and reports effectiveness vs
 //! single-task learning (no coupling). Results are recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! docs/ARCHITECTURE.md (the two data paths).
 //!
 //! ```text
 //! cargo run --release --example hospital_network [-- --quick]
@@ -132,7 +132,7 @@ fn main() -> anyhow::Result<()> {
         / svd.sigma.iter().sum::<f64>().max(1e-12);
     println!("shared structure: top-4 singular values carry {:.0}% of spectrum", 100.0 * energy_top4);
 
-    // --- Persist the run record (consumed by EXPERIMENTS.md). -----------
+    // --- Persist the run record (machine-readable, like BENCH_*.json). --
     let record = Json::obj(vec![
         ("scenario", Json::Str("hospital_network".into())),
         ("tasks", Json::Num(t_count as f64)),

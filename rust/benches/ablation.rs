@@ -1,4 +1,4 @@
-//! Ablations over the design choices DESIGN.md calls out:
+//! Ablations over the repo's load-bearing design choices:
 //!
 //! 1. **prox stride** (`prox_every`): how often the server recomputes the
 //!    backward step. The paper (§III.C) notes the prox "can be applied
@@ -6,7 +6,7 @@
 //!    server-throughput trade-off.
 //! 2. **online SVD vs full Jacobi** for the nuclear prox (§IV.A).
 //! 3. **delay distribution** sensitivity: the ×100 time-compression claim
-//!    (DESIGN.md) — the AMTL/SMTL wall-clock ratio is stable across time
+//!    — the AMTL/SMTL wall-clock ratio is stable across time
 //!    scales.
 //! 4. **update schedule**: async vs bounded-staleness vs synchronized
 //!    under one network setting — the staleness bound sweeps between the
@@ -19,6 +19,7 @@ use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Synchronized};
 use amtl::data::synthetic;
 use amtl::experiments::{auto_engine, banner, run_once, BenchLog, ExpConfig, Table};
 use amtl::optim::prox::RegularizerKind;
+use amtl::optim::svd::SvdMode;
 use amtl::util::Rng;
 use std::time::Duration;
 
@@ -26,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let opts = Opts::from_env()?;
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
+    let svd = amtl::experiments::bench_flags(&opts)?;
     println!("engine: {engine:?}");
     let mut log = BenchLog::new("ablation");
 
@@ -45,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             iters: if quick { 4 } else { 15 },
             offset_units: 2.0,
             prox_every: pe,
+            svd,
             ..Default::default()
         };
         let r = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
@@ -60,11 +63,22 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 2. online SVD --------------------------------------------------
     banner(
-        "Ablation — nuclear prox backend (T=40, d=50)",
-        "online SVD trades exactness for per-update cost at high T (§IV.A)",
+        "Ablation — nuclear prox backend and refresh stride (T=40, d=50)",
+        "online SVD cuts per-update cost at high T (§IV.A); exact refresh bounds drift",
     );
-    let mut table = Table::new(&["backend", "objective", "wall (s)"]);
-    for online in [false, true] {
+    let mut table = Table::new(&["backend", "resvd_every", "objective", "refreshes", "wall (s)"]);
+    let variants: &[(SvdMode, u64)] = if quick {
+        &[(SvdMode::Exact, 0), (SvdMode::Online, 64)]
+    } else {
+        &[
+            (SvdMode::Exact, 0),
+            (SvdMode::Online, 0),
+            (SvdMode::Online, 16),
+            (SvdMode::Online, 64),
+            (SvdMode::Online, 256),
+        ]
+    };
+    for &(mode, resvd_every) in variants {
         let mut rng = Rng::new(12);
         let t = if quick { 10 } else { 40 };
         let ds = synthetic::lowrank_regression(&vec![100; t], 50, 3, 0.5, &mut rng);
@@ -73,15 +87,21 @@ fn main() -> anyhow::Result<()> {
         let cfg = ExpConfig {
             iters: if quick { 4 } else { 10 },
             offset_units: 1.0,
-            online_svd: online,
+            svd: mode,
+            resvd_every,
             ..Default::default()
         };
         let r = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
-        let backend = if online { "online_svd" } else { "jacobi" };
-        log.record_run(&format!("nuclear_{backend}"), &r, p.objective(&r.w_final));
+        log.record_run(
+            &format!("nuclear_{}_resvd{resvd_every}", mode.name()),
+            &r,
+            p.objective(&r.w_final),
+        );
         table.row(vec![
-            if online { "online (Brand)" } else { "full Jacobi" }.into(),
+            mode.name().into(),
+            resvd_every.to_string(),
             format!("{:.2}", p.objective(&r.w_final)),
+            r.svd_refreshes.to_string(),
             format!("{:.2}", r.wall_time.as_secs_f64()),
         ]);
     }
@@ -90,7 +110,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. time-scale sensitivity --------------------------------------
     banner(
         "Ablation — delay time-scale sensitivity (T=8, offset 5)",
-        "the AMTL/SMTL ratio is stable under the x100 compression (DESIGN.md)",
+        "the AMTL/SMTL ratio is stable under the x100 time compression",
     );
     let scales: &[u64] = if quick { &[5, 20] } else { &[2, 5, 10, 20, 50] };
     let mut table = Table::new(&["ms per paper-s", "AMTL (s)", "SMTL (s)", "ratio"]);
@@ -103,6 +123,7 @@ fn main() -> anyhow::Result<()> {
             iters: if quick { 3 } else { 8 },
             offset_units: 5.0,
             time_scale: Duration::from_millis(ms),
+            svd,
             ..Default::default()
         };
         let a = run_once(&p, engine, pool.as_ref(), &cfg, Async)?;
@@ -137,6 +158,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = ExpConfig {
         iters: if quick { 3 } else { 10 },
         offset_units: 3.0,
+        svd,
         ..Default::default()
     };
     for (label, schedule) in schedules {

@@ -7,7 +7,7 @@
 //! gap grows with T (3a) and with d (3c); both are mostly flat in n until
 //! the gradient cost bites (3b).
 //!
-//! Delay scaling: one paper-second = 10 ms here (DESIGN.md §Substitutions);
+//! Delay scaling: one paper-second = 10 ms here (the x100 compression);
 //! the injected offset is 2 paper-units per activation — the distributed
 //! setting always has communication delay, and it is what the barrier
 //! amplifies.
@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let all = which.is_empty();
     let (engine, pool) = auto_engine(1);
+    let svd = amtl::experiments::bench_flags(&opts)?;
     println!("engine: {engine:?}  (1 paper-second = 10 ms)");
     let mut log = BenchLog::new("fig3_scaling");
 
@@ -45,6 +46,7 @@ fn main() -> anyhow::Result<()> {
             iters: if quick { 3 } else { 10 },
             offset_units: 2.0,
             prox_every,
+            svd,
             ..Default::default()
         };
         amtl::experiments::warm(&problem, engine, pool.as_ref())?;

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     let opts = Opts::from_env()?;
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
+    let svd = amtl::experiments::bench_flags(&opts)?;
     println!("engine: {engine:?}");
     let mut log = BenchLog::new("fig4_convergence");
 
@@ -36,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         let iters = if quick { 10 } else { 30 };
         let cfg = ExpConfig {
             iters,
+            svd,
             offset_units: 1.0,
             record_every: t as u64, // one sample per "epoch" of T updates
             ..Default::default()

@@ -1,26 +1,47 @@
-//! §Perf harness — per-step latency of the PJRT forward-step artifacts
-//! across shape buckets, plus the server-side backward-step (prox) cost
-//! for full Jacobi SVD vs Brand online SVD.
+//! §Perf harness — the performance baseline of record (see
+//! `docs/PERFORMANCE.md` for the recorded numbers and the schema).
 //!
-//! This is the measurement tool of the performance pass (EXPERIMENTS.md
-//! §Perf). Point `AMTL_ARTIFACTS` at an alternative artifact directory to
-//! A/B kernel variants (e.g. fixed- vs adaptive-tile lowering).
+//! Four sections:
 //!
-//! Run: `cargo bench --bench perf_step`
+//! 1. forward-step latency of the PJRT artifacts across shape buckets;
+//! 2. backward-step (nuclear prox) per-op cost: full Jacobi SVT vs Brand
+//!    online update + SVT;
+//! 3. parallel linalg kernels: blocked matmul/gram on the worker pool vs
+//!    the serial loop (same bits, different wall-clock);
+//! 4. **end-to-end server throughput** (the acceptance metric): an
+//!    asynchronous nuclear-norm session with zero injected delay, driven
+//!    once with `--svd exact` semantics and once with the incremental
+//!    default — `updates_per_sec` for both lands in
+//!    `BENCH_perf_step.json`, so a single run records the before/after.
+//!
+//! Point `AMTL_ARTIFACTS` at an alternative artifact directory to A/B
+//! kernel variants. `--threads N` sizes the linalg pool for section 3/4.
+//!
+//! Run: `cargo bench --bench perf_step [-- --threads 4]`
 
-use amtl::coordinator::MtlProblem;
+use amtl::config::Opts;
+use amtl::coordinator::{Async, MtlProblem};
 use amtl::data::synthetic;
-use amtl::experiments::{auto_engine, BenchLog, Table};
+use amtl::experiments::{auto_engine, run_once, BenchLog, ExpConfig, Table};
 use amtl::linalg::Mat;
+use amtl::linalg::par;
 use amtl::optim::prox::RegularizerKind;
-use amtl::optim::svd::{OnlineSvd, Svd};
+use amtl::optim::svd::{OnlineSvd, Svd, SvdMode};
+use amtl::runtime::WorkerPool;
 use amtl::util::stats::bench_secs;
 use amtl::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    // Shared bench flags (--threads / --svd); the returned mode is unused
+    // because the throughput section sweeps both backends explicitly.
+    let _ = amtl::experiments::bench_flags(&opts)?;
     let (engine, pool) = auto_engine(1);
-    println!("engine: {engine:?} (artifacts: {:?})", amtl::runtime::manifest::default_dir());
+    println!(
+        "engine: {engine:?} (artifacts: {:?})",
+        amtl::runtime::manifest::default_dir()
+    );
     let mut log = BenchLog::new("perf_step");
 
     // ---- L2/L1: forward-step latency per bucket -------------------------
@@ -68,10 +89,11 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    // ---- L3: backward-step (nuclear prox) cost --------------------------
+    // ---- L3: backward-step (nuclear prox) per-op cost -------------------
     println!("\n=== backward-step cost: full Jacobi SVT vs online SVD (per prox) ===");
     let mut table = Table::new(&["d", "T", "full SVT ms", "online update+SVT ms"]);
-    let dims: &[(usize, usize)] = if quick { &[(50, 10)] } else { &[(28, 139), (50, 15), (50, 100), (400, 5)] };
+    let dims: &[(usize, usize)] =
+        if quick { &[(50, 10)] } else { &[(28, 139), (50, 15), (50, 100), (400, 5)] };
     for &(d, t) in dims {
         let mut rng = Rng::new(2);
         let m = Mat::randn(d, t, &mut rng);
@@ -98,6 +120,114 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
+
+    // ---- linalg kernels: serial vs pool ---------------------------------
+    println!("\n=== blocked linalg kernels: serial vs worker pool (bitwise-identical) ===");
+    let kernel_pool = WorkerPool::new(amtl::linalg::threads().max(2));
+    let mut table = Table::new(&["kernel", "shape", "serial ms", "pool ms", "speedup"]);
+    let mm_shapes: &[(usize, usize, usize)] =
+        if quick {
+            &[(128, 64, 128)]
+        } else {
+            &[(256, 128, 256), (512, 256, 512), (400, 400, 139)]
+        };
+    for &(m, k, n) in mm_shapes {
+        let mut rng = Rng::new(4);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let reps = if quick { 3 } else { 8 };
+        let serial = bench_secs(1, reps, || {
+            let _ = par::matmul_serial(&a, &b);
+        });
+        let pooled = bench_secs(1, reps, || {
+            let _ = par::matmul_on(Some(&kernel_pool), &a, &b);
+        });
+        log.record_kv(
+            &format!("matmul_{m}x{k}x{n}"),
+            &[
+                ("serial_ms", serial.mean * 1e3),
+                ("pool_ms", pooled.mean * 1e3),
+                ("threads", kernel_pool.threads() as f64),
+            ],
+        );
+        table.row(vec![
+            "matmul".into(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.2}", serial.mean * 1e3),
+            format!("{:.2}", pooled.mean * 1e3),
+            format!("{:.2}x", serial.mean / pooled.mean.max(1e-12)),
+        ]);
+    }
+    let gram_shapes: &[(usize, usize)] =
+        if quick { &[(256, 64)] } else { &[(1024, 128), (4096, 64)] };
+    for &(m, n) in gram_shapes {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(m, n, &mut rng);
+        let reps = if quick { 3 } else { 8 };
+        let serial = bench_secs(1, reps, || {
+            let _ = par::gram_serial(&a);
+        });
+        let pooled = bench_secs(1, reps, || {
+            let _ = par::gram_on(Some(&kernel_pool), &a);
+        });
+        log.record_kv(
+            &format!("gram_{m}x{n}"),
+            &[
+                ("serial_ms", serial.mean * 1e3),
+                ("pool_ms", pooled.mean * 1e3),
+                ("threads", kernel_pool.threads() as f64),
+            ],
+        );
+        table.row(vec![
+            "gram".into(),
+            format!("{m}x{n}"),
+            format!("{:.2}", serial.mean * 1e3),
+            format!("{:.2}", pooled.mean * 1e3),
+            format!("{:.2}x", serial.mean / pooled.mean.max(1e-12)),
+        ]);
+    }
+    table.print();
+
+    // ---- end-to-end server throughput (the acceptance metric) -----------
+    println!("\n=== server throughput: exact Jacobi vs incremental prox (updates/sec) ===");
+    let (t_count, n, d, iters) = if quick { (6, 30, 20, 5) } else { (50, 100, 100, 20) };
+    let mut results = Vec::new();
+    for mode in [SvdMode::Exact, SvdMode::Online] {
+        let mut rng = Rng::new(6);
+        let ds = synthetic::lowrank_regression(&vec![n; t_count], d, 3, 0.5, &mut rng);
+        let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+        amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+        let cfg = ExpConfig {
+            iters,
+            offset_units: 0.0, // no injected delay: measure the server, not the network
+            svd: mode,
+            ..Default::default()
+        };
+        let r = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
+        let ups = r.updates as f64 / r.wall_time.as_secs_f64().max(1e-12);
+        let label = format!("throughput_svd_{}", mode.name());
+        log.record_run(&label, &r, problem.objective(&r.w_final));
+        println!(
+            "  svd={:<6} {:8.1} updates/sec  (wall {:.2}s, prox {}, coalesced {}, refreshes {})",
+            mode.name(),
+            ups,
+            r.wall_time.as_secs_f64(),
+            r.prox_count,
+            r.coalesced_updates,
+            r.svd_refreshes,
+        );
+        results.push(ups);
+    }
+    let speedup = results[1] / results[0].max(1e-12);
+    log.record_kv(
+        "throughput_speedup",
+        &[
+            ("online_over_exact", speedup),
+            ("threads", amtl::linalg::threads() as f64),
+        ],
+    );
+    println!("  online/exact speedup: {speedup:.2}x (threads={})", amtl::linalg::threads());
+
     println!("bench records: {}", log.write()?.display());
     Ok(())
 }

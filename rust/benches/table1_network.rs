@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
     let opts = Opts::from_env()?;
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
+    let svd = amtl::experiments::bench_flags(&opts)?;
     banner(
         "Table I — AMTL vs SMTL under different network delays",
         "AMTL wins everywhere; SMTL degrades as T grows (barrier on stragglers)",
@@ -49,7 +50,7 @@ fn main() -> anyhow::Result<()> {
                 let ds = synthetic::random_regression(t, 100, 50, &mut rng);
                 let problem =
                     MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
-                let cfg = ExpConfig { iters, offset_units: off, ..Default::default() };
+                let cfg = ExpConfig { iters, offset_units: off, svd, ..Default::default() };
                 amtl::experiments::warm(&problem, engine, pool.as_ref())?;
                 let r = if method == "AMTL" {
                     run_once(&problem, engine, pool.as_ref(), &cfg, Async)?
@@ -80,7 +81,7 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
-    // Shape check (who wins), printed for EXPERIMENTS.md.
+    // Shape check (who wins), printed for the bench log.
     let n_off = offsets.len();
     let mut holds = true;
     for i in 0..n_off {

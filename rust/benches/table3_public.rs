@@ -14,7 +14,7 @@
 //! Expected shape: AMTL ≤ SMTL everywhere; the gap is widest for School
 //! (139 tasks — the barrier pays the slowest of 139 draws) and narrow for
 //! MTFL (4 tasks). The datasets are simulated equivalents matching Table II
-//! exactly in (T, n-range, d, loss) — see `data::public` and DESIGN.md.
+//! exactly in (T, n-range, d, loss) — see `data::public`.
 //!
 //! Run: `cargo bench --bench table3_public [-- --quick]`
 
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
     let opts = Opts::from_env()?;
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
+    let svd = amtl::experiments::bench_flags(&opts)?;
 
     banner("Table II — dataset descriptions", "matched to the paper's Table II");
     let mut rng = Rng::new(42);
@@ -64,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                 let cfg = ExpConfig {
                     iters,
                     offset_units: off,
+                    svd,
                     // Keep the backward step off the critical path for the
                     // 139-task School run (§III.C allows batched proxes).
                     prox_every: (t_count as u64 / 4).max(1),

@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     let opts = Opts::from_env()?;
     let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
     let (engine, pool) = auto_engine(1);
+    let svd = amtl::experiments::bench_flags(&opts)?;
     println!("engine: {engine:?}");
 
     let selected: Vec<usize> = opts
@@ -60,6 +61,7 @@ fn main() -> anyhow::Result<()> {
                 let cfg = ExpConfig {
                     iters: 10, // the paper's fixed budget
                     offset_units: off,
+                    svd,
                     eta_k: 0.3, // dynamic multiplier stays in the stable range
                     dynamic_step: dynamic,
                     ..Default::default()

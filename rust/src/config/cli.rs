@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A CLI parsing/validation error (the message is user-facing).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CliError(pub String);
 
@@ -18,6 +19,7 @@ impl std::error::Error for CliError {}
 /// Parsed command-line options.
 #[derive(Debug, Clone, Default)]
 pub struct Opts {
+    /// Arguments that are not `--options` (e.g. the subcommand).
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -57,6 +59,7 @@ impl Opts {
         Ok(opts)
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Result<Opts, CliError> {
         Opts::parse(std::env::args().skip(1))
     }
@@ -65,15 +68,18 @@ impl Opts {
         self.known.borrow_mut().push(key.to_string());
     }
 
+    /// Raw value of `--key`, if supplied.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer value of `--key`, or `default`; errors on a non-integer.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -83,6 +89,7 @@ impl Opts {
         }
     }
 
+    /// `u64` value of `--key`, or `default`; errors on a non-integer.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -92,6 +99,7 @@ impl Opts {
         }
     }
 
+    /// Float value of `--key`, or `default`; errors on a non-number.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -101,6 +109,7 @@ impl Opts {
         }
     }
 
+    /// True when the bare `--key` flag was supplied.
     pub fn flag(&self, key: &str) -> bool {
         self.mark(key);
         self.flags.iter().any(|f| f == key)

@@ -29,6 +29,7 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// A recorder sampling every `every` updates (clamped to ≥ 1).
     pub fn new(every: u64) -> Recorder {
         Recorder {
             start: Instant::now(),
@@ -64,10 +65,12 @@ impl Recorder {
         });
     }
 
+    /// Consume the recorder, yielding the points in record order.
     pub fn into_points(self) -> Vec<TrajectoryPoint> {
         self.points.into_inner().unwrap()
     }
 
+    /// The instant the recorder (and so the run clock) started.
     pub fn start_instant(&self) -> Instant {
         self.start
     }
@@ -90,6 +93,12 @@ pub struct RunResult {
     pub updates_per_node: Vec<u64>,
     /// Number of proximal mappings actually computed by the server.
     pub prox_count: u64,
+    /// Same-task commits the server coalesced before folding them into
+    /// the online SVD (0 on the exact path).
+    pub coalesced_updates: u64,
+    /// Exact Jacobi refreshes of the online factorization (0 on the
+    /// exact path).
+    pub svd_refreshes: u64,
     /// Recorded trajectory (V snapshots).
     pub trajectory: Vec<TrajectoryPoint>,
     /// Mean observed per-activation injected delay, in seconds.
@@ -126,11 +135,12 @@ impl RunResult {
     /// Paper-style one-line summary.
     pub fn summary(&self) -> String {
         format!(
-            "{}: wall={:.2}s updates={} prox={} mean_delay={:.3}s",
+            "{}: wall={:.2}s updates={} prox={} coalesced={} mean_delay={:.3}s",
             self.method,
             self.wall_time.as_secs_f64(),
             self.updates,
             self.prox_count,
+            self.coalesced_updates,
             self.mean_delay_secs,
         )
     }
@@ -177,6 +187,8 @@ mod tests {
             updates: 1,
             updates_per_node: vec![1],
             prox_count: 1,
+            coalesced_updates: 0,
+            svd_refreshes: 0,
             trajectory: vec![TrajectoryPoint {
                 elapsed: Duration::from_millis(500),
                 version: 1,
@@ -211,6 +223,8 @@ mod tests {
             updates: 42,
             updates_per_node: vec![21, 21],
             prox_count: 7,
+            coalesced_updates: 0,
+            svd_refreshes: 0,
             trajectory: vec![],
             mean_delay_secs: 0.1,
             dropped_updates: 0,

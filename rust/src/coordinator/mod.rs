@@ -72,4 +72,4 @@ pub mod worker;
 pub use metrics::RunResult;
 pub use problem::MtlProblem;
 pub use schedule::{Async, Schedule, SemiSync, StalenessGate, Synchronized};
-pub use session::{RunConfig, Session, SessionBuilder};
+pub use session::{DEFAULT_RESVD_EVERY, RunConfig, Session, SessionBuilder};

@@ -12,8 +12,11 @@ use anyhow::Result;
 
 /// `min_W Σ_t ℓ_t(w_t) + λ g(W)` over a concrete dataset.
 pub struct MtlProblem {
+    /// The per-task data.
     pub dataset: MultiTaskDataset,
+    /// Which coupling regularizer the problem uses.
     pub reg_kind: RegularizerKind,
+    /// Regularization strength λ.
     pub lambda: f64,
     /// Elastic-net ℓ2 weight (ignored by other regularizers).
     pub gamma: f64,
@@ -47,10 +50,12 @@ impl MtlProblem {
         MtlProblem { dataset, reg_kind, lambda, gamma: 1.0, eta, l_max, ones_masks }
     }
 
+    /// Number of tasks.
     pub fn t(&self) -> usize {
         self.dataset.t()
     }
 
+    /// Feature dimension.
     pub fn d(&self) -> usize {
         self.dataset.d()
     }

@@ -293,6 +293,7 @@ struct GateInner {
 }
 
 impl StalenessGate {
+    /// A gate over `t_count` nodes with staleness bound `bound`.
     pub fn new(t_count: usize, bound: u64) -> StalenessGate {
         StalenessGate {
             bound,

@@ -15,22 +15,61 @@
 //! gradient updates depending on the speed of gradient update"). The
 //! `prox_every` knob generalizes this: with `prox_every = k`, a cached
 //! prox is reused until `k` new block updates have landed.
+//!
+//! ## Hot-path sharding
+//!
+//! With many TCP task nodes committing concurrently, the commit path must
+//! not funnel through any server-wide lock. [`CentralServer::commit_update`]
+//! touches only per-column state: the column's KM lock inside
+//! [`SharedState`], then the column's *pending slot*. The slot holds the
+//! latest committed value of that column, not yet folded into the online
+//! SVD; the fold happens lazily at the next prox, under the regularizer
+//! lock that the prox needs anyway. Because a rank-1 *column replacement*
+//! is idempotent in the latest value, adjacent commits from the same task
+//! coalesce into one fold — the server does O(distinct-columns) incremental
+//! work per prox no matter how fast any single node spins (the
+//! [`CentralServer::coalesced_count`] counter measures the savings).
+//! Fetches hit the prox cache through a read lock; only an actual
+//! recompute takes the write side, behind a double-checked serialization
+//! gate (one server, one prox at a time — as in the paper).
 
 use super::state::SharedState;
 use crate::linalg::Mat;
 use crate::optim::prox::Regularizer;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 
+/// The central node: regularizer owner and backward-step executor.
 pub struct CentralServer {
     state: Arc<SharedState>,
     reg: Mutex<Regularizer>,
+    /// True iff `reg` runs the incremental nuclear prox (fixed at
+    /// construction; lets the commit path skip the pending slots — and any
+    /// shared state beyond the column — when the fold would be a no-op).
+    online: bool,
     /// Prox step size `η` (the same η as the forward step, Eq. III.4).
     eta: f64,
     /// Reuse the cached prox until this many new updates have landed.
     prox_every: u64,
-    cache: Mutex<Option<(u64, Arc<Mat>)>>,
+    /// Version-keyed prox cache: read-locked on the (frequent) hit path,
+    /// write-locked only to install a fresh result.
+    cache: RwLock<Option<(u64, Arc<Mat>)>>,
+    /// Serializes prox *computation* (the cache lock is no longer held
+    /// while the SVD runs, so fetches of the cached matrix never wait
+    /// behind a recompute they don't need).
+    prox_gate: Mutex<()>,
     prox_count: AtomicU64,
+    /// Same-column commits that overwrote a not-yet-folded pending slot
+    /// (each one is an online-SVD rank-1 update the server never ran).
+    coalesced: AtomicU64,
+    /// Raw commits not yet handed to the regularizer's refresh-stride
+    /// counter (drained — with the pending slots — at prox time). Counted
+    /// per commit so the `resvd_every` drift bound holds even when
+    /// coalescing collapses several commits into one fold.
+    uncounted_commits: AtomicU64,
+    /// Per-column staging for the online SVD: the latest committed column
+    /// value awaiting its fold into the factorization.
+    pending: Vec<Mutex<Option<Vec<f64>>>>,
     /// When set (ℓ2,1 only), the backward step runs through the
     /// `prox_l21` Pallas artifact instead of the native mirror — the whole
     /// data path is then AOT-compiled kernels (see `runtime::prox_compute`).
@@ -38,14 +77,22 @@ pub struct CentralServer {
 }
 
 impl CentralServer {
+    /// A server over `state` applying `reg` with prox step `eta`.
     pub fn new(state: Arc<SharedState>, reg: Regularizer, eta: f64) -> CentralServer {
+        let online = reg.uses_online_svd();
+        let pending = (0..state.t()).map(|_| Mutex::new(None)).collect();
         CentralServer {
             state,
             reg: Mutex::new(reg),
+            online,
             eta,
             prox_every: 1,
-            cache: Mutex::new(None),
+            cache: RwLock::new(None),
+            prox_gate: Mutex::new(()),
             prox_count: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            uncounted_commits: AtomicU64::new(0),
+            pending,
             pjrt_prox: None,
         }
     }
@@ -71,10 +118,12 @@ impl CentralServer {
         Ok(self)
     }
 
+    /// The shared auxiliary state `V` this server proxes over.
     pub fn state(&self) -> &Arc<SharedState> {
         &self.state
     }
 
+    /// The prox step size η.
     pub fn eta(&self) -> f64 {
         self.eta
     }
@@ -84,33 +133,97 @@ impl CentralServer {
         self.prox_count.load(Ordering::Relaxed)
     }
 
+    /// Same-task commits that were coalesced before the online SVD ever
+    /// saw them (0 on the exact path, where there is nothing to fold).
+    pub fn coalesced_count(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Exact refreshes the online factorization has gone through.
+    pub fn svd_refresh_count(&self) -> u64 {
+        self.reg.lock().unwrap().svd_refreshes()
+    }
+
+    /// Reconstruction drift measured at the last exact refresh.
+    pub fn svd_drift(&self) -> f64 {
+        self.reg.lock().unwrap().svd_drift()
+    }
+
     /// The full backward step `Prox_{ηλg}(V̂)` over a fresh-enough snapshot.
     pub fn prox_matrix(&self) -> Arc<Mat> {
         let version = self.state.version();
-        let mut cache = self.cache.lock().unwrap();
-        if let Some((v, m)) = cache.as_ref() {
+        if let Some((v, m)) = self.cache.read().unwrap().as_ref() {
             if version < v + self.prox_every {
                 return Arc::clone(m);
             }
         }
-        // Compute a fresh prox. The cache lock is held during the prox:
-        // the central node applies proximal mappings one at a time (as in
-        // the paper — there is one server).
-        let mut snap = self.state.snapshot();
-        if let Some(pjrt) = &self.pjrt_prox {
-            let tau = self.eta * self.reg.lock().unwrap().lambda;
-            // Artifact failures fall back to the native mirror (identical
-            // math) rather than poisoning the run.
-            if pjrt.apply(&mut snap, tau).is_err() {
-                self.reg.lock().unwrap().prox(&mut snap, self.eta);
+        // Recompute, one prox at a time (the paper has one central node);
+        // concurrent fetchers that raced here park on the gate, then
+        // re-check the cache — usually the winner's result serves them.
+        let _gate = self.prox_gate.lock().unwrap();
+        let version = self.state.version();
+        if let Some((v, m)) = self.cache.read().unwrap().as_ref() {
+            if version < v + self.prox_every {
+                return Arc::clone(m);
             }
-        } else {
-            self.reg.lock().unwrap().prox(&mut snap, self.eta);
         }
-        self.prox_count.fetch_add(1, Ordering::Relaxed);
-        let m = Arc::new(snap);
-        *cache = Some((version, Arc::clone(&m)));
+        let m = Arc::new(self.compute_prox());
+        *self.cache.write().unwrap() = Some((version, Arc::clone(&m)));
         m
+    }
+
+    /// One uncached backward step: fold staged column commits into the
+    /// online factorization (if any), re-anchor it on an exact Jacobi SVD
+    /// when the raw-commit counter says the stride is due, then apply the
+    /// prox. On the incremental path no full-matrix snapshot is taken at
+    /// all (the factorization *is* the operand) — the server only pays
+    /// the T column-lock sweep when refreshing or running an exact prox.
+    fn compute_prox(&self) -> Mat {
+        let mut reg = self.reg.lock().unwrap();
+        self.drain_pending(&mut reg);
+        if reg.needs_refresh() {
+            // Snapshot after the counter drain (in drain_pending): commits
+            // that land in between are already inside the snapshot the
+            // factorization is rebuilt from, so no commit ever escapes the
+            // stride accounting.
+            reg.refresh_online(&self.state.snapshot());
+        }
+        let out = if let Some(m) = reg.online_prox(self.eta) {
+            m
+        } else {
+            let mut snap = self.state.snapshot();
+            if let Some(pjrt) = &self.pjrt_prox {
+                let tau = self.eta * reg.lambda;
+                // Artifact failures fall back to the native mirror
+                // (identical math) rather than poisoning the run.
+                if pjrt.apply(&mut snap, tau).is_err() {
+                    reg.prox(&mut snap, self.eta);
+                }
+            } else {
+                reg.prox(&mut snap, self.eta);
+            }
+            snap
+        };
+        self.prox_count.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    /// Fold every staged column into the online factorization and hand the
+    /// raw-commit count to the regularizer's refresh-stride counter.
+    /// Called with the regularizer lock held; a no-op on the exact path.
+    fn drain_pending(&self, reg: &mut Regularizer) {
+        if !self.online {
+            return;
+        }
+        for (t, slot) in self.pending.iter().enumerate() {
+            let staged = slot.lock().unwrap().take();
+            if let Some(col) = staged {
+                reg.notify_column_update(t, &col);
+            }
+        }
+        // `swap` (not load+store) so increments racing with the drain are
+        // kept for the next one instead of silently dropped.
+        reg.note_commits(self.uncounted_commits.swap(0, Ordering::AcqRel));
     }
 
     /// `(Prox_{ηλg}(V̂))_t` — what an activated task node retrieves.
@@ -118,26 +231,39 @@ impl CentralServer {
         self.prox_matrix().col(t).to_vec()
     }
 
-    /// Tell the regularizer a column changed (drives the online-SVD path).
+    /// Tell the server a column changed (drives the online-SVD path).
+    /// Stages the value in the column's pending slot; the fold into the
+    /// factorization happens at the next prox, so adjacent updates of the
+    /// same column coalesce into one rank-1 replacement.
     pub fn notify_column_update(&self, t: usize, col: &[f64]) {
-        let mut reg = self.reg.lock().unwrap();
-        if reg.uses_online_svd() {
-            reg.notify_column_update(t, col);
+        if !self.online {
+            return;
+        }
+        let mut slot = self.pending[t].lock().unwrap();
+        if slot.replace(col.to_vec()).is_some() {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     /// Commit one forward-step result: the KM relaxation
     /// `v_t ← v_t + step·(u − v_t)` on block `t`, plus the online-SVD
-    /// bookkeeping. This is the single server-side commit path — both the
+    /// staging. This is the single server-side commit path — both the
     /// in-proc and the TCP [`Transport`](crate::transport::Transport)
     /// implementations land updates through it, so the commit protocol
-    /// cannot drift between the two.
+    /// cannot drift between the two. Touches only block-`t` state: commits
+    /// from different tasks never contend.
     ///
     /// Returns the new global version (total KM updates).
     pub fn commit_update(&self, t: usize, u: &[f64], step: f64) -> u64 {
         let version = self.state.km_update(t, u, step);
-        let new_col = self.state.read_col(t);
-        self.notify_column_update(t, &new_col);
+        if self.online {
+            let new_col = self.state.read_col(t);
+            self.notify_column_update(t, &new_col);
+            // Raw-commit count for the refresh stride: coalescing may fold
+            // several of these into one factorization update, but the
+            // drift bound is promised per *commit*.
+            self.uncounted_commits.fetch_add(1, Ordering::AcqRel);
+        }
         version
     }
 
@@ -149,8 +275,13 @@ impl CentralServer {
     /// The final primal iterate `W* = Prox_{ηλg}(V*)` (one extra backward
     /// step maps the auxiliary variable back — §III.C).
     pub fn final_w(&self) -> Mat {
+        let mut reg = self.reg.lock().unwrap();
+        self.drain_pending(&mut reg);
+        if let Some(m) = reg.online_prox(self.eta) {
+            return m;
+        }
         let mut snap = self.state.snapshot();
-        self.reg.lock().unwrap().prox(&mut snap, self.eta);
+        reg.prox(&mut snap, self.eta);
         snap
     }
 }
@@ -229,6 +360,63 @@ mod tests {
         let mut want = m.clone();
         Regularizer::new(RegularizerKind::L1, 0.4).prox(&mut want, 0.5);
         assert!(srv.final_w().max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn pending_commits_coalesce_per_column() {
+        let mut rng = Rng::new(103);
+        let m = Mat::randn(6, 3, &mut rng);
+        let state = Arc::new(SharedState::new(&m));
+        let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3).with_online_svd(&m);
+        let srv = CentralServer::new(state, reg, 0.2);
+        // Three commits to one block before any prox: two coalesce away.
+        for _ in 0..3 {
+            let u = rng.normal_vec(6);
+            srv.commit_update(0, &u, 0.5);
+        }
+        assert_eq!(srv.coalesced_count(), 2);
+        // The prox still matches the exact backward step of the current V.
+        let got = srv.prox_matrix();
+        let mut want = srv.state().snapshot();
+        Regularizer::new(RegularizerKind::Nuclear, 0.3).prox(&mut want, 0.2);
+        assert!(got.max_abs_diff(&want) < 1e-7, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn online_server_tracks_exact_server_with_refresh() {
+        let mut rng = Rng::new(104);
+        let m = Mat::randn(8, 4, &mut rng);
+        let exact = CentralServer::new(
+            Arc::new(SharedState::new(&m)),
+            Regularizer::new(RegularizerKind::Nuclear, 0.4),
+            0.25,
+        );
+        let online = CentralServer::new(
+            Arc::new(SharedState::new(&m)),
+            Regularizer::new(RegularizerKind::Nuclear, 0.4)
+                .with_online_svd(&m)
+                .with_resvd_every(3),
+            0.25,
+        );
+        for step in 0..12 {
+            let t = step % 4;
+            let u = rng.normal_vec(8);
+            exact.commit_update(t, &u, 0.6);
+            online.commit_update(t, &u, 0.6);
+            let a = exact.prox_matrix();
+            let b = online.prox_matrix();
+            assert!(
+                a.max_abs_diff(&b) < 1e-7,
+                "step {step}: online prox diverged {}",
+                a.max_abs_diff(&b)
+            );
+        }
+        assert!(online.svd_refresh_count() >= 3, "refresh stride 3 over 12 commits");
+        assert!(online.svd_drift() < 1e-8, "drift {}", online.svd_drift());
+        assert!(
+            exact.final_w().max_abs_diff(&online.final_w()) < 1e-7,
+            "final iterates must agree"
+        );
     }
 
     #[test]

@@ -32,6 +32,7 @@ use super::state::SharedState;
 use super::step_size::{KmSchedule, StepController};
 use super::worker::{TrajectorySink, WorkerCtx};
 use crate::net::{DelayModel, FaultModel};
+use crate::optim::svd::SvdMode;
 use crate::runtime::{ComputePool, Engine, TaskCompute};
 use crate::transport::{InProc, TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use crate::util::Rng;
@@ -54,7 +55,7 @@ pub struct RunConfig {
     pub faults: FaultModel,
     /// Minibatch fraction for stochastic forward steps (None = full batch).
     pub sgd_fraction: Option<f64>,
-    /// Wall-clock duration of one paper delay-unit (DESIGN.md: 100 ms
+    /// Wall-clock duration of one paper delay-unit (default: 100 ms
     /// represents one paper "second").
     pub time_scale: Duration,
     /// KM relaxation step η_k.
@@ -67,8 +68,14 @@ pub struct RunConfig {
     pub prox_every: u64,
     /// Trajectory sampling stride in updates.
     pub record_every: u64,
-    /// Use the Brand online-SVD incremental prox (nuclear norm only).
-    pub online_svd: bool,
+    /// Which SVD backs the nuclear prox: incremental Brand updates (the
+    /// default) or exact Jacobi on every uncached prox. Ignored by
+    /// non-nuclear regularizers.
+    pub svd: SvdMode,
+    /// Online-SVD drift bound: exact Jacobi refresh every this many
+    /// commits (0 = never refresh). Ignored under [`SvdMode::Exact`].
+    pub resvd_every: u64,
+    /// Root seed for the run's deterministic per-node RNG streams.
     pub seed: u64,
 }
 
@@ -85,11 +92,17 @@ impl Default for RunConfig {
             dyn_window: 5,
             prox_every: 1,
             record_every: 1,
-            online_svd: false,
+            svd: SvdMode::default(),
+            resvd_every: DEFAULT_RESVD_EVERY,
             seed: 7,
         }
     }
 }
+
+/// Default exact-refresh stride for the online nuclear prox: deep enough
+/// that refresh cost amortizes away, shallow enough that drift stays far
+/// below the 1e-8 verification tolerance (see `docs/PERFORMANCE.md`).
+pub const DEFAULT_RESVD_EVERY: u64 = 64;
 
 impl RunConfig {
     /// The paper's AMTL-k / SMTL-k network setting: delay offset of
@@ -114,8 +127,11 @@ impl RunConfig {
     ) -> (Arc<SharedState>, Arc<CentralServer>, Arc<Recorder>) {
         let state = Arc::new(SharedState::zeros(problem.d(), problem.t()));
         let mut reg = problem.regularizer();
-        if self.online_svd {
-            reg = reg.with_online_svd(&state.snapshot());
+        if self.svd == SvdMode::Online && reg.kind == crate::optim::prox::RegularizerKind::Nuclear
+        {
+            reg = reg
+                .with_online_svd(&state.snapshot())
+                .with_resvd_every(self.resvd_every);
         }
         let server = Arc::new(
             CentralServer::new(Arc::clone(&state), reg, problem.eta)
@@ -208,31 +224,37 @@ impl<'p> SessionBuilder<'p> {
         self
     }
 
+    /// Activation budget per task node.
     pub fn iters_per_node(mut self, iters: usize) -> Self {
         self.cfg.iters_per_node = iters;
         self
     }
 
+    /// Injected network-delay model.
     pub fn delay(mut self, delay: DelayModel) -> Self {
         self.cfg.delay = delay;
         self
     }
 
+    /// Injected fault model (drops/crashes).
     pub fn faults(mut self, faults: FaultModel) -> Self {
         self.cfg.faults = faults;
         self
     }
 
+    /// Minibatch fraction for stochastic forward steps (`None` = full).
     pub fn sgd_fraction(mut self, fraction: Option<f64>) -> Self {
         self.cfg.sgd_fraction = fraction;
         self
     }
 
+    /// Wall-clock duration of one paper delay-unit.
     pub fn time_scale(mut self, time_scale: Duration) -> Self {
         self.cfg.time_scale = time_scale;
         self
     }
 
+    /// The KM relaxation schedule.
     pub fn km(mut self, km: KmSchedule) -> Self {
         self.cfg.km = km;
         self
@@ -244,31 +266,43 @@ impl<'p> SessionBuilder<'p> {
         self
     }
 
+    /// Enable the Eq. III.6 dynamic step size.
     pub fn dynamic_step(mut self, on: bool) -> Self {
         self.cfg.dynamic_step = on;
         self
     }
 
+    /// Delay-history window for the dynamic step (the paper uses 5).
     pub fn dyn_window(mut self, window: usize) -> Self {
         self.cfg.dyn_window = window;
         self
     }
 
+    /// Server re-prox stride (1 = after every update).
     pub fn prox_every(mut self, stride: u64) -> Self {
         self.cfg.prox_every = stride;
         self
     }
 
+    /// Trajectory sampling stride in updates.
     pub fn record_every(mut self, stride: u64) -> Self {
         self.cfg.record_every = stride;
         self
     }
 
-    pub fn online_svd(mut self, on: bool) -> Self {
-        self.cfg.online_svd = on;
+    /// Which SVD backs the nuclear prox (default [`SvdMode::Online`]).
+    pub fn svd(mut self, mode: SvdMode) -> Self {
+        self.cfg.svd = mode;
         self
     }
 
+    /// Online-SVD exact-refresh stride in commits (0 = never refresh).
+    pub fn resvd_every(mut self, k: u64) -> Self {
+        self.cfg.resvd_every = k;
+        self
+    }
+
+    /// Root seed for the per-node RNG streams.
     pub fn seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self
@@ -331,6 +365,7 @@ pub struct Session<'p> {
 }
 
 impl<'p> Session<'p> {
+    /// Start configuring a run over `problem`.
     pub fn builder(problem: &'p MtlProblem) -> SessionBuilder<'p> {
         SessionBuilder::new(problem)
     }
@@ -413,6 +448,8 @@ impl<'p> Session<'p> {
             updates: total_updates,
             updates_per_node,
             prox_count: server.prox_count(),
+            coalesced_updates: server.coalesced_count(),
+            svd_refreshes: server.svd_refresh_count(),
             trajectory: recorder.into_points(),
             mean_delay_secs,
             dropped_updates: stats.iter().map(|s| s.dropped).sum(),
@@ -452,26 +489,32 @@ pub struct Orchestrator<'r> {
 }
 
 impl<'r> Orchestrator<'r> {
+    /// The problem under optimization.
     pub fn problem(&self) -> &'r MtlProblem {
         self.problem
     }
 
+    /// The run configuration.
     pub fn cfg(&self) -> &'r RunConfig {
         self.cfg
     }
 
+    /// Number of task nodes.
     pub fn t_count(&self) -> usize {
         self.computes.len()
     }
 
+    /// The run's central server.
     pub fn server(&self) -> Arc<CentralServer> {
         Arc::clone(&self.server)
     }
 
+    /// The shared KM step controller.
     pub fn controller(&self) -> Arc<StepController> {
         Arc::clone(&self.controller)
     }
 
+    /// The run's trajectory recorder.
     pub fn recorder(&self) -> Arc<Recorder> {
         Arc::clone(&self.recorder)
     }

@@ -11,37 +11,56 @@
 //!
 //! A global version counter (total KM updates, the `k` of Algorithm 1) and
 //! per-column counters drive the prox cache and the metrics sampler.
+//!
+//! Each block (its lock + its version counter) is padded to a cache line
+//! so concurrent commits to adjacent task ids — the layout the TCP server
+//! produces under load — never false-share.
 
 use crate::linalg::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// One task block, padded out to its own cache line so that task nodes
+/// hammering adjacent columns (the common case: task ids are dense) never
+/// false-share a line between their locks or their version counters.
+#[repr(align(64))]
+struct ColBlock {
+    values: Mutex<Vec<f64>>,
+    /// Updates applied to this block.
+    version: AtomicU64,
+}
+
+/// The shared auxiliary matrix `V`, sharded by task block.
 pub struct SharedState {
     d: usize,
-    cols: Vec<Mutex<Vec<f64>>>,
+    cols: Vec<ColBlock>,
     /// Total KM updates applied (the global iteration counter `k`).
     version: AtomicU64,
-    col_versions: Vec<AtomicU64>,
 }
 
 impl SharedState {
+    /// Shared state initialized from `initial` (one block per column).
     pub fn new(initial: &Mat) -> SharedState {
-        let d = initial.rows();
         let cols = (0..initial.cols())
-            .map(|c| Mutex::new(initial.col(c).to_vec()))
+            .map(|c| ColBlock {
+                values: Mutex::new(initial.col(c).to_vec()),
+                version: AtomicU64::new(0),
+            })
             .collect();
-        let col_versions = (0..initial.cols()).map(|_| AtomicU64::new(0)).collect();
-        SharedState { d, cols, version: AtomicU64::new(0), col_versions }
+        SharedState { d: initial.rows(), cols, version: AtomicU64::new(0) }
     }
 
+    /// All-zeros shared state (`d × t`).
     pub fn zeros(d: usize, t: usize) -> SharedState {
         SharedState::new(&Mat::zeros(d, t))
     }
 
+    /// Feature dimension `d`.
     pub fn d(&self) -> usize {
         self.d
     }
 
+    /// Number of task blocks `T`.
     pub fn t(&self) -> usize {
         self.cols.len()
     }
@@ -51,20 +70,21 @@ impl SharedState {
         self.version.load(Ordering::Acquire)
     }
 
+    /// Updates applied to block `t` so far.
     pub fn col_version(&self, t: usize) -> u64 {
-        self.col_versions[t].load(Ordering::Acquire)
+        self.cols[t].version.load(Ordering::Acquire)
     }
 
     /// Copy of one task block.
     pub fn read_col(&self, t: usize) -> Vec<f64> {
-        self.cols[t].lock().unwrap().clone()
+        self.cols[t].values.lock().unwrap().clone()
     }
 
     /// Overwrite one task block (initialization / SMTL broadcast).
     pub fn write_col(&self, t: usize, v: &[f64]) {
         assert_eq!(v.len(), self.d);
-        self.cols[t].lock().unwrap().copy_from_slice(v);
-        self.col_versions[t].fetch_add(1, Ordering::AcqRel);
+        self.cols[t].values.lock().unwrap().copy_from_slice(v);
+        self.cols[t].version.fetch_add(1, Ordering::AcqRel);
         self.version.fetch_add(1, Ordering::AcqRel);
     }
 
@@ -73,7 +93,7 @@ impl SharedState {
     pub fn snapshot(&self) -> Mat {
         let mut m = Mat::zeros(self.d, self.cols.len());
         for (c, col) in self.cols.iter().enumerate() {
-            let guard = col.lock().unwrap();
+            let guard = col.values.lock().unwrap();
             m.col_mut(c).copy_from_slice(&guard);
         }
         m
@@ -85,12 +105,12 @@ impl SharedState {
     pub fn km_update(&self, t: usize, u: &[f64], step: f64) -> u64 {
         assert_eq!(u.len(), self.d);
         {
-            let mut guard = self.cols[t].lock().unwrap();
+            let mut guard = self.cols[t].values.lock().unwrap();
             for (v, ui) in guard.iter_mut().zip(u) {
                 *v += step * (ui - *v);
             }
         }
-        self.col_versions[t].fetch_add(1, Ordering::AcqRel);
+        self.cols[t].version.fetch_add(1, Ordering::AcqRel);
         self.version.fetch_add(1, Ordering::AcqRel) + 1
     }
 }

@@ -9,6 +9,7 @@ use std::sync::Mutex;
 /// update counts and `T` the number of tasks.
 #[derive(Clone, Copy, Debug)]
 pub struct KmSchedule {
+    /// The relaxation step η_k.
     pub eta_k: f64,
 }
 
@@ -19,6 +20,7 @@ impl KmSchedule {
         KmSchedule { eta_k: hi.max(eta_min) }
     }
 
+    /// A fixed η_k (the paper's tables use 0.5/0.9-style constants).
     pub fn fixed(eta_k: f64) -> KmSchedule {
         KmSchedule { eta_k }
     }
@@ -38,6 +40,7 @@ pub struct StepController {
 }
 
 impl StepController {
+    /// A controller over `t_count` nodes (`dynamic` enables Eq. III.6).
     pub fn new(schedule: KmSchedule, dynamic: bool, t_count: usize, window: usize) -> StepController {
         StepController {
             schedule,
@@ -47,10 +50,12 @@ impl StepController {
         }
     }
 
+    /// The delay-history window length (the paper uses 5).
     pub fn window(&self) -> usize {
         self.window
     }
 
+    /// True when the Eq. III.6 multiplier is active.
     pub fn is_dynamic(&self) -> bool {
         self.dynamic
     }
@@ -74,6 +79,7 @@ impl StepController {
         self.multiplier(t) * self.schedule.eta_k
     }
 
+    /// The base relaxation step η_k.
     pub fn eta_k(&self) -> f64 {
         self.schedule.eta_k
     }

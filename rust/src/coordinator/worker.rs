@@ -35,7 +35,9 @@ use std::time::{Duration, Instant};
 /// node, where the serving process samples instead (see
 /// [`crate::transport::TcpServer::spawn`]).
 pub struct TrajectorySink {
+    /// The run's trajectory recorder.
     pub recorder: Arc<Recorder>,
+    /// The locally-held shared state it snapshots.
     pub state: Arc<SharedState>,
 }
 
@@ -47,22 +49,27 @@ impl TrajectorySink {
 
 /// Everything one free-running worker thread needs.
 pub struct WorkerCtx {
+    /// This node's task index.
     pub t: usize,
+    /// Activation budget.
     pub iters: usize,
     /// The node's channel to the central server (fetch + commit + η).
     pub transport: Box<dyn Transport>,
+    /// KM step-size controller (shared across nodes).
     pub controller: Arc<StepController>,
+    /// Injected network-delay model.
     pub delay: DelayModel,
     /// Fault injection (robustness experiments; default none).
     pub faults: FaultModel,
     /// When set, forward steps use importance-corrected Bernoulli
     /// minibatches of this fraction (the paper's future-work SGD variant).
     pub sgd_fraction: Option<f64>,
-    /// Wall-clock duration of one paper delay-unit (see DESIGN.md
-    /// §Substitutions: the paper's "seconds" are scaled).
+    /// Wall-clock duration of one paper delay-unit (the paper's
+    /// "seconds" are scaled; benches use 10 ms per paper-second).
     pub time_scale: Duration,
     /// Trajectory sampling (`None` on remote task nodes).
     pub sink: Option<TrajectorySink>,
+    /// This node's deterministic RNG stream.
     pub rng: Rng,
     /// Bounded-staleness gate (the `SemiSync` schedule); `None` = fully
     /// asynchronous.
@@ -72,6 +79,7 @@ pub struct WorkerCtx {
 /// Per-worker outcome.
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
+    /// Updates successfully committed.
     pub updates: u64,
     /// Activations whose update was lost in transit (fault injection).
     pub dropped: u64,

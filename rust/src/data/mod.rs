@@ -8,7 +8,8 @@
 //!   downloadable in this offline environment; the simulators match the
 //!   task counts, per-task sample-size ranges, dimensionalities and loss
 //!   types exactly, and plant a shared low-rank structure so the MTL
-//!   coupling is exercised — see DESIGN.md §Substitutions.
+//!   coupling is exercised (simulated stand-ins: the real files are not
+//!   redistributable in an offline build).
 
 pub mod public;
 pub mod synthetic;
@@ -18,17 +19,23 @@ use crate::optim::losses::{Loss, RowMat};
 /// One task's dataset: features, labels, and loss type.
 #[derive(Clone, Debug)]
 pub struct TaskDataset {
+    /// Human-readable task name.
     pub name: String,
+    /// Feature matrix (rows are samples).
     pub x: RowMat,
+    /// Labels, one per sample.
     pub y: Vec<f64>,
+    /// The task's loss function.
     pub loss: Loss,
 }
 
 impl TaskDataset {
+    /// Sample count.
     pub fn n(&self) -> usize {
         self.x.rows
     }
 
+    /// Feature dimension.
     pub fn d(&self) -> usize {
         self.x.cols
     }
@@ -37,17 +44,21 @@ impl TaskDataset {
 /// A multi-task problem: T tasks over a common feature dimension.
 #[derive(Clone, Debug)]
 pub struct MultiTaskDataset {
+    /// Dataset name (e.g. `school`, `synthetic-lowrank`).
     pub name: String,
+    /// One dataset per task.
     pub tasks: Vec<TaskDataset>,
     /// Planted model matrix, when the generator knows it (synthetic data).
     pub w_true: Option<crate::linalg::Mat>,
 }
 
 impl MultiTaskDataset {
+    /// Number of tasks.
     pub fn t(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Common feature dimension (0 for an empty dataset).
     pub fn d(&self) -> usize {
         self.tasks.first().map(|t| t.d()).unwrap_or(0)
     }

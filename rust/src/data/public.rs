@@ -63,6 +63,7 @@ pub fn school_sim_small(rng: &mut Rng) -> MultiTaskDataset {
     ds
 }
 
+/// Look up a simulated public dataset by its Table-II name.
 pub fn by_name(name: &str, rng: &mut Rng) -> Option<MultiTaskDataset> {
     Some(match name {
         "school" => school_sim(rng),

@@ -6,14 +6,15 @@
 //! Delay units: the paper injects delays measured in seconds (offsets
 //! 5/10/30 s). Experiments here scale one "paper second" to
 //! [`ExpConfig::time_scale`] of wall-clock (default 10 ms in benches) so
-//! the full suite runs in minutes; ratios are preserved (DESIGN.md
-//! §Substitutions, sensitivity check in EXPERIMENTS.md).
+//! the full suite runs in minutes; ratios are preserved (sensitivity
+//! check: the `ablation` bench's time-scale section).
 
 use crate::coordinator::step_size::KmSchedule;
 use crate::coordinator::{
     Async, MtlProblem, RunConfig, RunResult, Schedule, Session, Synchronized,
 };
 use crate::net::DelayModel;
+use crate::optim::svd::SvdMode;
 use crate::runtime::{ComputePool, Engine, PoolConfig};
 use anyhow::Result;
 use std::time::Duration;
@@ -21,17 +22,25 @@ use std::time::Duration;
 /// Experiment-wide knobs shared by AMTL and SMTL runs.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
+    /// Activations per task node.
     pub iters: usize,
     /// Delay offset in paper units (the `k` of AMTL-k / SMTL-k).
     pub offset_units: f64,
     /// Wall-clock per paper unit.
     pub time_scale: Duration,
+    /// KM relaxation step.
     pub eta_k: f64,
+    /// Enable the Eq. III.6 dynamic step size.
     pub dynamic_step: bool,
     /// Server re-prox stride (see `CentralServer::with_prox_every`).
     pub prox_every: u64,
+    /// Trajectory sampling stride.
     pub record_every: u64,
-    pub online_svd: bool,
+    /// Nuclear-prox SVD backend (see [`SvdMode`]; default online).
+    pub svd: SvdMode,
+    /// Online-SVD exact-refresh stride (0 = never).
+    pub resvd_every: u64,
+    /// Root RNG seed.
     pub seed: u64,
 }
 
@@ -45,7 +54,8 @@ impl Default for ExpConfig {
             dynamic_step: false,
             prox_every: 1,
             record_every: u64::MAX / 2,
-            online_svd: false,
+            svd: SvdMode::default(),
+            resvd_every: crate::coordinator::session::DEFAULT_RESVD_EVERY,
             seed: 7,
         }
     }
@@ -73,10 +83,32 @@ impl ExpConfig {
             dyn_window: 5,
             prox_every: self.prox_every,
             record_every: self.record_every,
-            online_svd: self.online_svd,
+            svd: self.svd,
+            resvd_every: self.resvd_every,
             seed: self.seed,
         }
     }
+}
+
+/// Apply the bench flags every bench binary shares: `--threads N` sizes
+/// the linalg worker pool (frozen at first kernel use; 0/absent defers to
+/// `PALLAS_THREADS`, then core count) and `--svd exact|online` selects the
+/// nuclear-prox backend for [`ExpConfig`]-driven runs. Returns the chosen
+/// SVD mode and prints the resolved parallelism so recorded numbers are
+/// attributable.
+pub fn bench_flags(opts: &crate::config::Opts) -> Result<SvdMode> {
+    let threads = opts
+        .get_usize("threads", 0)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if threads > 0 {
+        crate::linalg::configure_threads(threads);
+    }
+    let svd = opts
+        .get_one_of("svd", &["online", "exact"], SvdMode::default().name())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mode = SvdMode::parse(&svd).expect("get_one_of validated the value");
+    println!("linalg threads: {}  svd: {}", crate::linalg::threads(), mode.name());
+    Ok(mode)
 }
 
 /// Pick the PJRT engine when artifacts are available, else fall back to the
@@ -162,6 +194,7 @@ pub struct BenchLog {
 }
 
 impl BenchLog {
+    /// A log named `name` (becomes `BENCH_<name>.json`).
     pub fn new(name: &str) -> BenchLog {
         BenchLog { name: name.to_string(), records: Vec::new() }
     }
@@ -179,6 +212,9 @@ impl BenchLog {
             ("updates", Json::Num(r.updates as f64)),
             ("updates_per_sec", Json::Num(r.updates as f64 / wall.max(1e-12))),
             ("prox_count", Json::Num(r.prox_count as f64)),
+            ("coalesced_updates", Json::Num(r.coalesced_updates as f64)),
+            ("svd_refreshes", Json::Num(r.svd_refreshes as f64)),
+            ("threads", Json::Num(crate::linalg::threads() as f64)),
             ("mean_delay_secs", Json::Num(r.mean_delay_secs)),
         ]));
     }
@@ -199,6 +235,7 @@ impl BenchLog {
         self.records.len()
     }
 
+    /// True when nothing has been recorded.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
@@ -233,15 +270,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append a row (must match the header count).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len());
         self.rows.push(cells);
     }
 
+    /// Print the table, column-aligned, to stdout.
     pub fn print(&self) {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

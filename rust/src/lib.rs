@@ -36,8 +36,26 @@
 //!   and scalars cross the wire; `(X_t, y_t)` provably cannot — the
 //!   protocol has no frame type for data.
 //!
-//! Also see the `amtl` CLI (`rust/src/main.rs`) and the runnable
-//! `examples/`.
+//! ## The server hot path
+//!
+//! The backward step is where a central server melts under load, so it is
+//! engineered for throughput (measured in `rust/benches/perf_step.rs`,
+//! documented in `docs/PERFORMANCE.md`):
+//!
+//! * [`linalg`] matmul/gram kernels are blocked across a worker pool —
+//!   `--threads` / `PALLAS_THREADS` — with bitwise-identical serial
+//!   fallback (a chunked axpy for long spans ships alongside);
+//! * the nuclear prox is **incremental by default**: Brand rank-1 column
+//!   updates ([`optim::svd::OnlineSvd`]) instead of a full Jacobi SVD per
+//!   prox, re-anchored exactly every `--resvd-every` commits;
+//! * shared state and commit bookkeeping are sharded per task column, so
+//!   concurrent `PushUpdate`/`FetchProxCol` traffic never serializes on a
+//!   server-wide lock, and back-to-back commits from one task coalesce.
+//!
+//! Also see the `amtl` CLI (`rust/src/main.rs`), the runnable
+//! `examples/`, and `docs/ARCHITECTURE.md` for the paper-to-code map.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

@@ -11,10 +11,12 @@ pub struct Mat {
 }
 
 impl Mat {
+    /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Assemble from per-column vectors (each of length `rows`).
     pub fn from_cols(rows: usize, cols: Vec<Vec<f64>>) -> Mat {
         let c = cols.len();
         let mut data = Vec::with_capacity(rows * c);
@@ -42,27 +44,32 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// The `n × n` identity.
     pub fn identity(n: usize) -> Mat {
         Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
     }
 
     #[inline]
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     #[inline]
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
     #[inline]
+    /// Read entry `(r, c)`.
     pub fn get(&self, r: usize, c: usize) -> f64 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[c * self.rows + r]
     }
 
     #[inline]
+    /// Write entry `(r, c)`.
     pub fn set(&mut self, r: usize, c: usize, v: f64) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[c * self.rows + r] = v;
@@ -75,43 +82,43 @@ impl Mat {
     }
 
     #[inline]
+    /// Mutable contiguous view of column `c`.
     pub fn col_mut(&mut self, c: usize) -> &mut [f64] {
         &mut self.data[c * self.rows..(c + 1) * self.rows]
     }
 
+    /// Overwrite column `c`.
     pub fn set_col(&mut self, c: usize, v: &[f64]) {
         self.col_mut(c).copy_from_slice(v);
     }
 
+    /// The raw column-major backing slice.
     pub fn data(&self) -> &[f64] {
         &self.data
     }
 
+    /// Mutable raw column-major backing slice.
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
+    /// `selfᵀ` as a new matrix.
     pub fn transpose(&self) -> Mat {
         Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
     }
 
-    /// `self * other` (naive triple loop, column-major friendly order).
+    /// `self * other` — blocked over output columns on the global linalg
+    /// pool when the shape is large enough (see [`crate::linalg::par`]),
+    /// serial column-major triple loop otherwise. Parallel and serial
+    /// results are bitwise identical.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let mut out = Mat::zeros(self.rows, other.cols);
-        for j in 0..other.cols {
-            let out_col = &mut out.data[j * self.rows..(j + 1) * self.rows];
-            for k in 0..self.cols {
-                let a_col = &self.data[k * self.rows..(k + 1) * self.rows];
-                let b = other.get(k, j);
-                if b != 0.0 {
-                    for (o, a) in out_col.iter_mut().zip(a_col) {
-                        *o += a * b;
-                    }
-                }
-            }
-        }
-        out
+        crate::linalg::par::matmul(self, other)
+    }
+
+    /// The Gram matrix `selfᵀ · self`, through the same parallel kernel
+    /// layer as [`Mat::matmul`].
+    pub fn gram(&self) -> Mat {
+        crate::linalg::par::gram(self)
     }
 
     /// `self · v` (matrix–vector).
@@ -135,6 +142,7 @@ impl Mat {
         (0..self.cols).map(|c| crate::linalg::dot(self.col(c), v)).collect()
     }
 
+    /// `‖self‖_F`.
     pub fn frobenius_norm(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
     }
@@ -173,6 +181,7 @@ impl Mat {
         Mat { rows: self.rows, cols: self.cols, data }
     }
 
+    /// `max |self − other|` over entries (shape-checked).
     pub fn max_abs_diff(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data

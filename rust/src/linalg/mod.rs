@@ -5,9 +5,16 @@
 //! (`w_t`) on every update, and the server's proximal step consumes whole
 //! columns. `f64` is used for all server-side math (prox / SVD); the PJRT
 //! boundary converts to `f32` (the artifact dtype).
+//!
+//! Heavy kernels (matmul, Gram, long axpy) route through [`par`], which
+//! blocks the output over a process-wide worker pool — sized by
+//! `--threads` / `PALLAS_THREADS` via [`configure_threads`] — and is
+//! bitwise identical to the serial loops at any thread count.
 
 mod mat;
 mod ops;
+pub mod par;
 
 pub use mat::Mat;
 pub use ops::{axpy, dot, nrm2, scal};
+pub use par::{configure_threads, threads};

@@ -1,0 +1,329 @@
+//! Thread-pool-backed linear-algebra kernels.
+//!
+//! The server's backward step is dense linalg over the `d × T` model
+//! matrix — SVT reconstruction matmuls in the prox, online-SVD basis
+//! rotations per commit, and the `XᵀX` Gram products behind the Lipschitz
+//! estimates; with task nodes committing asynchronously, a
+//! single-threaded server becomes the bottleneck exactly where the paper
+//! promises scaling. The kernels here block their output into per-column
+//! chunks and fan the chunks out over a process-wide [`WorkerPool`] (the
+//! generic CPU pool in `runtime::pool`, shared with the PJRT executor
+//! plumbing — no new dependencies).
+//!
+//! **Determinism:** every parallel kernel partitions the *output* and
+//! computes each element with exactly the serial loop structure and
+//! summation order, so parallel results are **bitwise identical** to the
+//! serial fallback (property-tested in `rust/tests/properties.rs`). Thread
+//! count changes wall-clock, never bits.
+//!
+//! **Thread-count resolution** (first use wins, then frozen for the
+//! process):
+//!
+//! 1. [`configure_threads`] — explicit, e.g. from the CLI `--threads` flag;
+//! 2. the `PALLAS_THREADS` environment variable;
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! A resolved count of 1 (or a small problem — see `PAR_MIN_WORK`) skips
+//! the pool entirely and runs the serial loop in place.
+
+use crate::linalg::Mat;
+use crate::linalg::ops::{axpy, dot};
+use crate::runtime::pool::WorkerPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Below this many flop-equivalents a kernel runs serially: chunk setup +
+/// latch wake-ups cost more than the arithmetic they would spread out.
+const PAR_MIN_WORK: usize = 32 * 1024;
+
+/// Thread count requested via [`configure_threads`] (0 = unset).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// The lazily-built process-wide pool; `None` when the resolved thread
+/// count is 1.
+static POOL: OnceLock<Option<WorkerPool>> = OnceLock::new();
+
+/// Request `threads` workers for the global linalg pool (0 = keep the
+/// `PALLAS_THREADS` / auto default). Returns `false` if the pool was
+/// already built — the count is frozen at first use, so call this before
+/// any parallel kernel runs (the `amtl` CLI does it while parsing flags).
+pub fn configure_threads(threads: usize) -> bool {
+    CONFIGURED.store(threads, Ordering::Relaxed);
+    POOL.get().is_none()
+}
+
+/// The thread count the global pool uses (resolves and freezes it if this
+/// is the first linalg-pool touch). 1 means all kernels run serially.
+pub fn threads() -> usize {
+    match pool() {
+        Some(p) => p.threads(),
+        None => 1,
+    }
+}
+
+fn resolve_threads() -> usize {
+    let configured = CONFIGURED.load(Ordering::Relaxed);
+    if configured > 0 {
+        return configured;
+    }
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+fn pool() -> Option<&'static WorkerPool> {
+    POOL.get_or_init(|| {
+        let n = resolve_threads();
+        if n <= 1 {
+            None
+        } else {
+            Some(WorkerPool::new(n))
+        }
+    })
+    .as_ref()
+}
+
+/// The pool, gated on problem size: `None` (serial path) when the work is
+/// too small to amortize fan-out or the process is single-threaded.
+fn pool_for(work: usize) -> Option<&'static WorkerPool> {
+    if work < PAR_MIN_WORK {
+        return None;
+    }
+    pool()
+}
+
+// ---------------------------------------------------------------- matmul
+
+/// `a · b`, parallelized over output-column chunks on the global pool
+/// (serial for small shapes). Bitwise identical to [`matmul_serial`].
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let work = a.rows().saturating_mul(a.cols()).saturating_mul(b.cols());
+    matmul_on(pool_for(work), a, b)
+}
+
+/// `a · b` with an explicit pool choice (`None` = serial). Exposed so
+/// tests and benches can pin the execution mode regardless of machine
+/// shape or global configuration.
+pub fn matmul_on(pool: Option<&WorkerPool>, a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let m = a.rows();
+    let n = b.cols();
+    let mut out = Mat::zeros(m, n);
+    match pool {
+        Some(pool) if m > 0 && n > 1 => {
+            let cols_per_job = n.div_ceil(pool.threads());
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .data_mut()
+                .chunks_mut(m * cols_per_job)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    let j0 = i * cols_per_job;
+                    Box::new(move || matmul_cols_into(a, b, j0, chunk))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        _ => matmul_cols_into(a, b, 0, out.data_mut()),
+    }
+    out
+}
+
+/// Serial reference matmul (the seed's triple loop, column-major order).
+pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
+    matmul_on(None, a, b)
+}
+
+/// Compute output columns `j0..` of `a · b` into `out` (a column-major
+/// span of whole columns). This is the one inner loop both the serial and
+/// every parallel chunk run, so their results cannot differ by a bit.
+fn matmul_cols_into(a: &Mat, b: &Mat, j0: usize, out: &mut [f64]) {
+    let m = a.rows();
+    if m == 0 {
+        return;
+    }
+    for (jj, out_col) in out.chunks_mut(m).enumerate() {
+        let j = j0 + jj;
+        for k in 0..a.cols() {
+            let bkj = b.get(k, j);
+            if bkj != 0.0 {
+                axpy(bkj, a.col(k), out_col);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ gram
+
+/// The Gram matrix `aᵀ · a` (`cols × cols`), parallelized over output
+/// columns. Bitwise identical to [`gram_serial`].
+pub fn gram(a: &Mat) -> Mat {
+    let work = a.rows().saturating_mul(a.cols()).saturating_mul(a.cols());
+    gram_on(pool_for(work), a)
+}
+
+/// `aᵀ · a` with an explicit pool choice (`None` = serial).
+///
+/// The Gram matrix is symmetric, so each unordered column pair's dot
+/// product is computed **once** into a packed upper triangle (the
+/// triangle's per-column spans are contiguous, giving the pool disjoint
+/// `&mut` chunks) and then mirrored — half the flops of filling the full
+/// matrix, with the mirrored entry bitwise equal to an independently
+/// computed one (`dot` is elementwise-commutative in its arguments).
+pub fn gram_on(pool: Option<&WorkerPool>, a: &Mat) -> Mat {
+    let n = a.cols();
+    // Packed upper triangle: column j's entries (i ≤ j) live at
+    // `tri[j(j+1)/2 .. j(j+1)/2 + j + 1]`.
+    let mut tri = vec![0.0f64; n * (n + 1) / 2];
+    match pool {
+        Some(pool) if n > 1 => {
+            // Equal column counts per job (later chunks carry longer
+            // triangle columns; fine for the shapes we run).
+            let cols_per_job = n.div_ceil(pool.threads());
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            let mut rest: &mut [f64] = &mut tri;
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + cols_per_job).min(n);
+                let len = tri_offset(j1) - tri_offset(j0);
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                rest = tail;
+                jobs.push(Box::new(move || gram_tri_into(a, j0, j1, chunk)));
+                j0 = j1;
+            }
+            pool.scope(jobs);
+        }
+        _ => gram_tri_into(a, 0, n, &mut tri),
+    }
+    let mut out = Mat::zeros(n, n);
+    for j in 0..n {
+        let base = tri_offset(j);
+        for i in 0..=j {
+            let v = tri[base + i];
+            out.set(i, j, v);
+            out.set(j, i, v);
+        }
+    }
+    out
+}
+
+/// Serial reference Gram product.
+pub fn gram_serial(a: &Mat) -> Mat {
+    gram_on(None, a)
+}
+
+/// Start of column `j`'s span in the packed upper triangle.
+fn tri_offset(j: usize) -> usize {
+    j * (j + 1) / 2
+}
+
+/// Fill the packed upper-triangle entries of columns `j0..j1` into `tri`
+/// (whose length is exactly those columns' spans).
+fn gram_tri_into(a: &Mat, j0: usize, j1: usize, tri: &mut [f64]) {
+    let mut pos = 0;
+    for j in j0..j1 {
+        let aj = a.col(j);
+        for i in 0..=j {
+            tri[pos] = dot(a.col(i), aj);
+            pos += 1;
+        }
+    }
+}
+
+// ------------------------------------------------------------------ axpy
+
+/// `y += alpha * x` over long spans, chunked across the pool. Bitwise
+/// identical to the serial [`axpy`] (each element touches exactly one
+/// fused multiply-add either way). Small spans run serially in place.
+pub fn axpy_par(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    let pool = match pool_for(y.len()) {
+        Some(p) => p,
+        None => return axpy(alpha, x, y),
+    };
+    let chunk = y.len().div_ceil(pool.threads()).max(1);
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = y
+        .chunks_mut(chunk)
+        .zip(x.chunks(chunk))
+        .map(|(yc, xc)| {
+            Box::new(move || axpy(alpha, xc, yc)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.scope(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_matmul_is_bitwise_serial() {
+        let pool = WorkerPool::new(3);
+        let mut rng = Rng::new(600);
+        for (m, k, n) in [(7, 5, 9), (16, 16, 16), (1, 4, 6), (5, 1, 3), (33, 20, 2)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            let serial = matmul_serial(&a, &b);
+            let par = matmul_on(Some(&pool), &a, &b);
+            assert_eq!(serial, par, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn parallel_gram_is_bitwise_serial_and_symmetric() {
+        let pool = WorkerPool::new(4);
+        let mut rng = Rng::new(601);
+        let a = Mat::randn(23, 11, &mut rng);
+        let serial = gram_serial(&a);
+        let par = gram_on(Some(&pool), &a);
+        assert_eq!(serial, par);
+        for i in 0..11 {
+            for j in 0..11 {
+                assert_eq!(serial.get(i, j), serial.get(j, i), "gram symmetry");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_explicit_transpose_matmul() {
+        let mut rng = Rng::new(602);
+        let a = Mat::randn(14, 6, &mut rng);
+        let want = a.transpose().matmul(&a);
+        let got = gram_serial(&a);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn axpy_par_matches_serial_on_long_spans() {
+        let mut rng = Rng::new(603);
+        let x = rng.normal_vec(100_000);
+        let mut y1 = rng.normal_vec(100_000);
+        let mut y2 = y1.clone();
+        axpy(0.37, &x, &mut y1);
+        axpy_par(0.37, &x, &mut y2);
+        assert_eq!(y1, y2, "parallel axpy must be bitwise serial");
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let pool = WorkerPool::new(2);
+        let a = Mat::zeros(0, 3);
+        let b = Mat::zeros(3, 4);
+        assert_eq!(matmul_on(Some(&pool), &a, &b).rows(), 0);
+        let g = gram_on(Some(&pool), &Mat::zeros(5, 0));
+        assert_eq!((g.rows(), g.cols()), (0, 0));
+        let mut y: [f64; 0] = [];
+        axpy_par(1.0, &[], &mut y);
+    }
+
+    #[test]
+    fn global_threads_resolves_to_at_least_one() {
+        assert!(threads() >= 1);
+    }
+}

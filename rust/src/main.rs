@@ -44,6 +44,7 @@ use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Session, Synchron
 use amtl::data::{public, synthetic, MultiTaskDataset};
 use amtl::net::{DelayModel, FaultModel};
 use amtl::optim::prox::RegularizerKind;
+use amtl::optim::svd::SvdMode;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
 use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use amtl::util::Rng;
@@ -66,6 +67,12 @@ fn main() {
 }
 
 fn run(opts: &Opts) -> Result<()> {
+    // Size the linalg worker pool before any kernel runs (the count is
+    // frozen at first use). 0 = PALLAS_THREADS env var, else all cores.
+    let threads = opts.get_usize("threads", 0)?;
+    if threads > 0 {
+        amtl::linalg::configure_threads(threads);
+    }
     // Distributed modes are flag-driven (no subcommand): `--serve <addr>`
     // hosts the central node, `--node <t> --connect <addr>` runs one task
     // node against it.
@@ -141,7 +148,14 @@ RUN OPTIONS:
   --time-scale MS  wall-clock ms per paper unit     [100]
   --eta-k V      KM relaxation step                 [0.5]
   --dynamic-step enable Eq. III.6 dynamic step
-  --online-svd   incremental nuclear prox (ablation)
+  --svd <online|exact>                             [online]
+                 online = incremental Brand SVD prox (the default; exact
+                          Jacobi re-anchor every --resvd-every commits)
+                 exact  = full Jacobi SVD on every uncached prox
+  --resvd-every K  online-SVD exact refresh stride (0 = never) [64]
+  --online-svd   legacy alias for --svd online
+  --threads N    linalg worker threads (0 = PALLAS_THREADS env, else
+                 all cores; parallel results are bitwise serial)  [0]
   --sgd FRAC     stochastic forward steps with this minibatch fraction
   --prox-every K server re-prox stride              [1]
   --engine <pjrt|native>                           [native]
@@ -181,7 +195,8 @@ struct RunOpts {
     time_scale: Duration,
     eta_k: f64,
     dynamic: bool,
-    online_svd: bool,
+    svd: SvdMode,
+    resvd_every: u64,
     prox_every: u64,
     engine: Engine,
     executors: usize,
@@ -196,6 +211,9 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
     let default_record = ((t * iters) as u64 / 50).max(1);
     let sgd = opts.get_f64("sgd", 0.0)?;
     let transport = opts.get_one_of("transport", &["inproc", "tcp"], "inproc")?;
+    // `--online-svd` predates `--svd` and forces the online backend.
+    let svd_default = if opts.flag("online-svd") { "online" } else { SvdMode::default().name() };
+    let svd = opts.get_one_of("svd", &["online", "exact"], svd_default)?;
     Ok(RunOpts {
         iters,
         sgd_fraction: if sgd > 0.0 { Some(sgd) } else { None },
@@ -203,7 +221,8 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
         time_scale: Duration::from_millis(opts.get_u64("time-scale", 100)?),
         eta_k: opts.get_f64("eta-k", 0.5)?,
         dynamic: opts.flag("dynamic-step"),
-        online_svd: opts.flag("online-svd"),
+        svd: SvdMode::parse(&svd).expect("get_one_of validated the value"),
+        resvd_every: opts.get_u64("resvd-every", amtl::coordinator::DEFAULT_RESVD_EVERY)?,
         prox_every: opts.get_u64("prox-every", 1)?,
         engine: Engine::parse(&opts.get_or("engine", "native"))
             .ok_or_else(|| anyhow!("bad --engine"))?,
@@ -233,7 +252,8 @@ fn session<'p>(
         .dynamic_step(ro.dynamic)
         .prox_every(ro.prox_every)
         .record_every(ro.record_every)
-        .online_svd(ro.online_svd)
+        .svd(ro.svd)
+        .resvd_every(ro.resvd_every)
         .seed(ro.seed)
         .paper_offset(ro.offset)
         .transport(ro.transport)
@@ -278,12 +298,14 @@ fn cmd_train(opts: &Opts) -> Result<()> {
 
     println!("dataset: {}", problem.dataset.describe());
     println!(
-        "problem: reg={} lambda={} eta={:.3e} L={:.3e} transport={}",
+        "problem: reg={} lambda={} eta={:.3e} L={:.3e} transport={} svd={} threads={}",
         problem.reg_kind.name(),
         problem.lambda,
         problem.eta,
         problem.l_max,
         ro.transport.name(),
+        ro.svd.name(),
+        amtl::linalg::threads(),
     );
     let pool = make_pool(&ro)?;
     let result = session(&problem, pool.as_ref(), &ro, schedule).build()?.run()?;
@@ -345,7 +367,8 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         iters_per_node: ro.iters,
         prox_every: ro.prox_every,
         record_every: ro.record_every,
-        online_svd: ro.online_svd,
+        svd: ro.svd,
+        resvd_every: ro.resvd_every,
         seed: ro.seed,
         ..Default::default()
     };

@@ -13,8 +13,8 @@ pub enum DelayModel {
     OffsetJitter { offset: Duration, jitter: Duration },
     /// The paper's model: "the sum of the offset and a random value" —
     /// offset plus an exponential random component with the given mean.
-    /// AMTL-k in the tables uses `offset = k` (paper: seconds; here scaled,
-    /// see DESIGN.md §Substitutions). The heavy-ish tail is what makes the
+    /// AMTL-k in the tables uses `offset = k` (paper: seconds; here scaled
+    /// by the run's `time_scale`). The heavy-ish tail is what makes the
     /// synchronous barrier's `E[max over T nodes]` grow with T.
     OffsetExp { offset: Duration, mean: Duration },
     /// Exponential inter-activation gaps — task nodes as independent
@@ -30,6 +30,7 @@ pub enum DelayModel {
 /// needs (Eq. III.6 averages the recent delays per node).
 #[derive(Clone, Copy, Debug)]
 pub struct DelaySample {
+    /// The injected wall-clock delay for this activation.
     pub duration: Duration,
 }
 
@@ -90,10 +91,12 @@ pub struct NodeDelays {
 }
 
 impl NodeDelays {
+    /// Tracker for `nodes` nodes with a rolling `window` per node.
     pub fn new(nodes: usize, window: usize) -> NodeDelays {
         NodeDelays { window, recent: vec![Vec::new(); nodes] }
     }
 
+    /// Record one observed delay (paper units) for `node`.
     pub fn record(&mut self, node: usize, delay_units: f64) {
         let buf = &mut self.recent[node];
         buf.push(delay_units);
@@ -114,6 +117,7 @@ impl NodeDelays {
         }
     }
 
+    /// Number of delays currently in `node`'s window.
     pub fn count(&self, node: usize) -> usize {
         self.recent[node].len()
     }

@@ -12,16 +12,23 @@ use crate::optim::prox::Regularizer;
 
 /// One task's centralized view.
 pub struct TaskData<'a> {
+    /// Feature matrix `X_t` (rows are samples).
     pub x: &'a RowMat,
+    /// Labels `y_t`.
     pub y: &'a [f64],
+    /// Per-sample weights (1 = present; supports padding).
     pub mask: &'a [f64],
+    /// Which loss `ℓ_t` is.
     pub loss: Loss,
 }
 
+/// Outcome of a centralized FISTA solve.
 pub struct FistaResult {
+    /// The final iterate `W`.
     pub w: Mat,
     /// Objective after every iteration (F = f + λg).
     pub history: Vec<f64>,
+    /// Iterations actually run (≤ `max_iters` with early stopping).
     pub iterations: usize,
 }
 

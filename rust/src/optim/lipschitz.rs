@@ -5,6 +5,7 @@
 //! `L` for the joint smooth loss `f(W) = Σ_t ℓ_t(w_t)` is the max of the
 //! per-task constants (block-separable f ⇒ block-diagonal Hessian).
 
+use crate::linalg::Mat;
 use crate::optim::losses::{Loss, RowMat};
 use crate::util::Rng;
 
@@ -13,11 +14,42 @@ use crate::util::Rng;
 /// * squared loss `Σ(x·w−y)²`: `L_t = 2‖X‖₂²`
 /// * logistic loss: `L_t = ‖X‖₂²/4` (σ′ ≤ 1/4)
 pub fn task_lipschitz(loss: Loss, x: &RowMat, rng: &mut Rng) -> f64 {
-    let s = x.spectral_norm(100, rng);
+    let s = gram_spectral_norm(x, 100, rng);
     match loss {
         Loss::Squared => 2.0 * s * s,
         Loss::Logistic => 0.25 * s * s,
     }
+}
+
+/// `‖X‖₂` via power iteration on the Gram matrix `G = XᵀX`.
+///
+/// `G` is built once through the pooled [`Mat::gram`] kernel, then the
+/// iteration runs on the small `d × d` product: `O(n·d²) + O(iters·d²)`
+/// instead of `O(iters·n·d)` for the matvec/tmatvec form, and the Gram
+/// build parallelizes across the linalg worker pool. Same fixed point as
+/// iterating `Xᵀ(Xv)` directly — that product *is* `Gv` — up to
+/// floating-point association.
+fn gram_spectral_norm(x: &RowMat, iters: usize, rng: &mut Rng) -> f64 {
+    if x.rows == 0 || x.cols == 0 {
+        return 0.0;
+    }
+    // Column-major copy of the row-major task data.
+    let xm = Mat::from_fn(x.rows, x.cols, |r, c| x.data[r * x.cols + c]);
+    let g = xm.gram();
+    let mut v = rng.normal_vec(x.cols);
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let gv = g.matvec(&v);
+        let nrm = crate::linalg::nrm2(&gv);
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        for (vi, gi) in v.iter_mut().zip(&gv) {
+            *vi = gi / nrm;
+        }
+        sigma = nrm.sqrt();
+    }
+    sigma
 }
 
 /// Forward step size `η = scale · 2/L` with `scale ∈ (0,1)` for safety.

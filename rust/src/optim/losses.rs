@@ -7,6 +7,7 @@
 //! loss, Eq. IV.1 — note: *not* halved) or the logistic loss
 //! `Σ_i log(1+exp(x_i·w)) − y_i (x_i·w)` with labels in {0,1}.
 
+/// The per-task smooth loss `ℓ_t`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Loss {
     /// `Σ (x·w − y)²`, gradient `2 Xᵀ(Xw − y)`.
@@ -16,6 +17,7 @@ pub enum Loss {
 }
 
 impl Loss {
+    /// Parse a CLI value (`"squared"` | `"logistic"`, plus aliases).
     pub fn parse(s: &str) -> Option<Loss> {
         match s {
             "squared" | "lsq" | "l2" => Some(Loss::Squared),
@@ -24,6 +26,7 @@ impl Loss {
         }
     }
 
+    /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             Loss::Squared => "squared",
@@ -95,6 +98,7 @@ impl Loss {
     }
 }
 
+/// Numerically-stable logistic sigmoid `1/(1+e^{−z})`.
 #[inline]
 pub fn sigmoid(z: f64) -> f64 {
     if z >= 0.0 {
@@ -105,6 +109,7 @@ pub fn sigmoid(z: f64) -> f64 {
     }
 }
 
+/// Numerically-stable `log(1+e^z)`.
 #[inline]
 pub fn softplus(z: f64) -> f64 {
     z.max(0.0) + (-z.abs()).exp().ln_1p()
@@ -115,26 +120,33 @@ pub fn softplus(z: f64) -> f64 {
 /// PJRT artifact input layout (row-major f32).
 #[derive(Clone, Debug)]
 pub struct RowMat {
+    /// Number of rows (samples).
     pub rows: usize,
+    /// Number of columns (features).
     pub cols: usize,
+    /// Row-major backing storage (`data[i * cols + j]`).
     pub data: Vec<f64>,
 }
 
 impl RowMat {
+    /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> RowMat {
         RowMat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
     #[inline]
+    /// Contiguous view of row `i` (one sample).
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Mutable view of row `i`.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Downcast to the PJRT artifact dtype (row-major f32).
     pub fn as_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&x| x as f32).collect()
     }

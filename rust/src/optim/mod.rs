@@ -4,7 +4,7 @@
 //! The nuclear-norm backward step (singular-value thresholding, Eq. IV.2 of
 //! the paper) runs natively here: `jnp.linalg.svd` lowers to a typed-FFI
 //! LAPACK custom-call that the CPU PJRT plugin of xla_extension 0.5.1
-//! cannot execute (verified — see EXPERIMENTS.md), and architecturally the
+//! cannot execute (verified empirically), and architecturally the
 //! prox is the *central server's* job, which is rust.
 
 pub mod fista;
@@ -14,4 +14,4 @@ pub mod prox;
 pub mod svd;
 
 pub use prox::{Regularizer, RegularizerKind};
-pub use svd::{OnlineSvd, Svd};
+pub use svd::{OnlineSvd, Svd, SvdMode};

@@ -16,16 +16,23 @@
 use crate::linalg::Mat;
 use crate::optim::svd::{OnlineSvd, Svd};
 
+/// Which coupling regularizer `g(W)` the problem uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RegularizerKind {
+    /// Shared-subspace / low-rank MTL: `g(W) = ‖W‖_*` (SVT prox).
     Nuclear,
+    /// Joint feature selection: `g(W) = ‖W‖_{2,1}` (row shrinkage).
     L21,
+    /// Elementwise sparsity (Lasso-style soft threshold).
     L1,
+    /// `‖W‖₁ + (γ/2)‖W‖²_F` — the strongly convex variant.
     ElasticNet,
+    /// No coupling: decoupled single-task learning baseline.
     None,
 }
 
 impl RegularizerKind {
+    /// Parse a CLI value (`"nuclear"`, `"l21"`, `"l1"`, ...).
     pub fn parse(s: &str) -> Option<RegularizerKind> {
         Some(match s {
             "nuclear" | "trace" | "lowrank" => RegularizerKind::Nuclear,
@@ -37,6 +44,7 @@ impl RegularizerKind {
         })
     }
 
+    /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             RegularizerKind::Nuclear => "nuclear",
@@ -51,40 +59,137 @@ impl RegularizerKind {
 /// A regularizer `λ·g(W)` with its prox and value.
 #[derive(Clone, Debug)]
 pub struct Regularizer {
+    /// Which coupling `g` is (nuclear, ℓ2,1, …).
     pub kind: RegularizerKind,
+    /// Regularization strength λ.
     pub lambda: f64,
     /// ℓ2 weight for the elastic-net variant.
     pub gamma: f64,
     /// When set, the nuclear prox maintains an incremental factorization
     /// (Brand online SVD) instead of refactorizing; see `svd::OnlineSvd`.
+    /// This is the default nuclear path (see `SvdMode`).
     online: Option<OnlineSvd>,
+    /// Exact-refresh stride for the online path: after this many column
+    /// commits the factorization is rebuilt from an exact Jacobi SVD of
+    /// the true matrix, bounding numerical drift. 0 = never refresh.
+    resvd_every: u64,
+    /// Column commits folded into the factorization since the last exact
+    /// refresh.
+    commits_since_refresh: u64,
+    /// Number of exact refreshes performed.
+    refreshes: u64,
+    /// Max-abs reconstruction drift observed at the last exact refresh
+    /// (`‖UΣVᵀ − W‖_max` just before re-initializing).
+    last_drift: f64,
 }
 
 impl Regularizer {
+    /// A regularizer with strength `lambda` (elastic-net γ defaults to 1).
     pub fn new(kind: RegularizerKind, lambda: f64) -> Regularizer {
-        Regularizer { kind, lambda, gamma: 1.0, online: None }
+        Regularizer {
+            kind,
+            lambda,
+            gamma: 1.0,
+            online: None,
+            resvd_every: 0,
+            commits_since_refresh: 0,
+            refreshes: 0,
+            last_drift: 0.0,
+        }
     }
 
+    /// The strongly convex `‖W‖₁ + (γ/2)‖W‖²_F` variant.
     pub fn elastic_net(lambda: f64, gamma: f64) -> Regularizer {
-        Regularizer { kind: RegularizerKind::ElasticNet, lambda, gamma, online: None }
+        let mut reg = Regularizer::new(RegularizerKind::ElasticNet, lambda);
+        reg.gamma = gamma;
+        reg
     }
 
-    /// Enable the online-SVD path for the nuclear prox (ablation).
+    /// Enable the incremental (Brand online-SVD) nuclear prox, seeded from
+    /// `w0`. This is the primary nuclear path; pair with
+    /// [`Regularizer::with_resvd_every`] to bound drift.
     pub fn with_online_svd(mut self, w0: &Mat) -> Regularizer {
         assert_eq!(self.kind, RegularizerKind::Nuclear);
         self.online = Some(OnlineSvd::init(w0));
+        self.commits_since_refresh = 0;
         self
     }
 
+    /// Set the exact-refresh stride for the online path (0 = never): the
+    /// factorization is rebuilt from an exact Jacobi SVD every `k` commits
+    /// (see [`Regularizer::refresh_online`]). The stride counter advances
+    /// via [`Regularizer::note_commits`] — `CentralServer` feeds it raw
+    /// commit counts, so commits that coalesce into one fold still count.
+    pub fn with_resvd_every(mut self, k: u64) -> Regularizer {
+        self.resvd_every = k;
+        self
+    }
+
+    /// Advance the refresh-stride counter by `n` raw commits. Kept
+    /// separate from [`Regularizer::notify_column_update`] because one
+    /// fold may represent many coalesced commits, and the drift bound is
+    /// promised per commit.
+    pub fn note_commits(&mut self, n: u64) {
+        if self.online.is_some() {
+            self.commits_since_refresh += n;
+        }
+    }
+
+    /// The incremental nuclear prox `U (Σ − ηλ)₊ Vᵀ`, when the online path
+    /// is active (`None` otherwise). Reads only the factorization — the
+    /// caller does not need a snapshot of the operand matrix.
+    pub fn online_prox(&self, eta: f64) -> Option<Mat> {
+        self.online
+            .as_ref()
+            .map(|osvd| osvd.shrink_reconstruct(eta * self.lambda))
+    }
+
+    /// True when the incremental nuclear path is active.
     pub fn uses_online_svd(&self) -> bool {
         self.online.is_some()
     }
 
+    /// The configured exact-refresh stride (0 = never).
+    pub fn resvd_every(&self) -> u64 {
+        self.resvd_every
+    }
+
+    /// Exact refreshes performed so far on the online path.
+    pub fn svd_refreshes(&self) -> u64 {
+        self.refreshes
+    }
+
+    /// Reconstruction drift measured at the most recent exact refresh.
+    pub fn svd_drift(&self) -> f64 {
+        self.last_drift
+    }
+
     /// Inform the incremental factorization that column `j` of the operand
-    /// changed (no-op unless the online path is active).
+    /// changed (no-op unless the online path is active). Does not advance
+    /// the refresh stride — pair with [`Regularizer::note_commits`].
     pub fn notify_column_update(&mut self, j: usize, col: &[f64]) {
         if let Some(osvd) = self.online.as_mut() {
             osvd.replace_column(j, col);
+        }
+    }
+
+    /// True when the drift counter says the online factorization is due
+    /// for an exact rebuild.
+    pub fn needs_refresh(&self) -> bool {
+        self.online.is_some()
+            && self.resvd_every > 0
+            && self.commits_since_refresh >= self.resvd_every
+    }
+
+    /// Rebuild the online factorization from an exact Jacobi SVD of
+    /// `current` (the true matrix), recording the drift the incremental
+    /// path had accumulated. No-op unless the online path is active.
+    pub fn refresh_online(&mut self, current: &Mat) {
+        if let Some(osvd) = self.online.as_ref() {
+            self.last_drift = osvd.reconstruct().max_abs_diff(current);
+            self.online = Some(OnlineSvd::init(current));
+            self.refreshes += 1;
+            self.commits_since_refresh = 0;
         }
     }
 
@@ -287,6 +392,40 @@ mod tests {
                 w_full.max_abs_diff(&w_online)
             );
         }
+    }
+
+    #[test]
+    fn resvd_refresh_bounds_drift_and_tracks_exact() {
+        let mut rng = Rng::new(26);
+        let mut a = Mat::randn(10, 6, &mut rng);
+        let mut reg = Regularizer::new(RegularizerKind::Nuclear, 0.3)
+            .with_online_svd(&a)
+            .with_resvd_every(4);
+        let mut refreshes = 0;
+        for step in 0..20 {
+            let j = step % 6;
+            let col = rng.normal_vec(10);
+            a.set_col(j, &col);
+            reg.notify_column_update(j, &col);
+            reg.note_commits(1);
+            if reg.needs_refresh() {
+                reg.refresh_online(&a);
+                refreshes += 1;
+                assert!(reg.svd_drift() < 1e-8, "refresh drift {}", reg.svd_drift());
+            }
+            let mut w_online = a.clone();
+            reg.prox(&mut w_online, 0.5);
+            let mut w_exact = a.clone();
+            Regularizer::new(RegularizerKind::Nuclear, 0.3).prox(&mut w_exact, 0.5);
+            assert!(
+                w_online.max_abs_diff(&w_exact) < 1e-7,
+                "step {step}: online prox drifted {}",
+                w_online.max_abs_diff(&w_exact)
+            );
+        }
+        assert_eq!(refreshes, 5, "20 commits / resvd_every=4");
+        assert_eq!(reg.svd_refreshes(), 5);
+        assert_eq!(reg.resvd_every(), 4);
     }
 
     #[test]

@@ -3,21 +3,63 @@
 //! Two implementations, mirroring §IV.A of the paper:
 //!
 //! * [`Svd::jacobi`] — one-sided Jacobi: numerically robust, exact to
-//!   machine precision, O(sweeps · m · n²). The model matrix is `d × T`
-//!   with `T ≤ ~139`, so this is cheap and is the default backward step.
+//!   machine precision, O(sweeps · m · n²). The reference backward step
+//!   (`--svd exact`) and the periodic-refresh anchor of the online path.
 //! * [`OnlineSvd`] — Brand-style rank-1 column update ("online SVD" in the
-//!   paper): after a task node replaces one column of `W`, the factorization
-//!   is updated in O((d + T) k + k³) instead of recomputed, where `k` is the
-//!   retained rank. Exposed as an ablation (`--online-svd`) and benchmarked
-//!   in the perf pass.
+//!   paper, §IV.A): after a task node replaces one column of `W`, the
+//!   factorization is updated in O((d + T) k + k³) instead of recomputed,
+//!   where `k` is the retained rank. This is the **default** nuclear-prox
+//!   path (`--svd online`), re-anchored to an exact Jacobi factorization
+//!   every `--resvd-every` commits (see [`SvdMode`] and
+//!   `Regularizer::with_resvd_every`).
 
 use crate::linalg::{dot, nrm2, Mat};
+
+/// Which SVD backs the nuclear-norm proximal step (Eq. IV.2).
+///
+/// [`SvdMode::Online`] is the default: the server maintains a Brand
+/// rank-1-update factorization across commits instead of refactorizing the
+/// whole `d × T` matrix on every prox, falling back to an exact Jacobi
+/// refactorization every `resvd_every` commits to bound numerical drift.
+/// [`SvdMode::Exact`] recomputes the one-sided Jacobi SVD on every
+/// uncached prox — the pre-incremental behavior, kept as the reference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SvdMode {
+    /// Exact one-sided Jacobi SVD on every uncached prox.
+    Exact,
+    /// Incremental Brand rank-1 column updates with periodic exact
+    /// refresh (see `Regularizer::with_resvd_every`).
+    #[default]
+    Online,
+}
+
+impl SvdMode {
+    /// Parse a CLI value (`"exact"` | `"online"`).
+    pub fn parse(s: &str) -> Option<SvdMode> {
+        match s {
+            "exact" | "jacobi" => Some(SvdMode::Exact),
+            "online" | "brand" => Some(SvdMode::Online),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SvdMode::Exact => "exact",
+            SvdMode::Online => "online",
+        }
+    }
+}
 
 /// Thin SVD `A = U Σ Vᵀ` with `U: m×k`, `Σ: k`, `V: n×k`, `k = min(m,n)`.
 #[derive(Clone, Debug)]
 pub struct Svd {
+    /// Left singular vectors (`m × k`, orthonormal columns).
     pub u: Mat,
+    /// Singular values, sorted descending.
     pub sigma: Vec<f64>,
+    /// Right singular vectors (`n × k`, orthonormal columns).
     pub v: Mat,
 }
 
@@ -119,6 +161,7 @@ impl Svd {
         us.matmul(&self.v.transpose())
     }
 
+    /// `‖A‖_* = Σ σᵢ`.
     pub fn nuclear_norm(&self) -> f64 {
         self.sigma.iter().sum()
     }
@@ -143,9 +186,12 @@ fn rotate_cols(m: &mut Mat, i: usize, j: usize, c: f64, s: f64) {
 /// `(k+1) × (k+1)` core matrix — done here with the Jacobi SVD above.
 #[derive(Clone, Debug)]
 pub struct OnlineSvd {
-    pub u: Mat,          // m × k
-    pub sigma: Vec<f64>, // k
-    pub v: Mat,          // n × k
+    /// Left factor (`m × k`).
+    pub u: Mat,
+    /// Retained singular values (`k`).
+    pub sigma: Vec<f64>,
+    /// Right factor (`n × k`).
+    pub v: Mat,
 }
 
 impl OnlineSvd {
@@ -155,6 +201,7 @@ impl OnlineSvd {
         OnlineSvd { u: s.u, sigma: s.sigma, v: s.v }
     }
 
+    /// Currently retained rank `k`.
     pub fn rank(&self) -> usize {
         self.sigma.len()
     }
@@ -226,28 +273,31 @@ impl OnlineSvd {
         };
 
         // U' = [U r̂] · Uc,  V' = [V ĥ] · Vc; keep the top-k' = min(m, n, kk)
-        // columns (drop the trailing one if it carries ~zero energy).
+        // columns (drop the trailing one if it carries ~zero energy). The
+        // extended bases are materialized so the rotations run through the
+        // blocked (pool-parallel) matmul kernel — this is the per-commit
+        // hot loop of the incremental prox.
         let keep = kk.min(m).min(n);
-        let mut new_u = Mat::zeros(m, keep);
-        let mut new_v = Mat::zeros(n, keep);
+        let mut ext_u = Mat::zeros(m, kk);
+        for i in 0..k {
+            ext_u.set_col(i, self.u.col(i));
+        }
+        ext_u.set_col(k, &r_unit);
+        let mut ext_v = Mat::zeros(n, kk);
+        for i in 0..k {
+            ext_v.set_col(i, self.v.col(i));
+        }
+        ext_v.set_col(k, &h_unit);
+        let mut rot_u = Mat::zeros(kk, keep);
+        let mut rot_v = Mat::zeros(kk, keep);
         let mut new_sigma = vec![0.0; keep];
         for col in 0..keep {
             new_sigma[col] = cs.sigma[col];
-            for r_i in 0..m {
-                let mut acc = r_unit[r_i] * cs.u.get(k, col);
-                for i in 0..k {
-                    acc += self.u.get(r_i, i) * cs.u.get(i, col);
-                }
-                new_u.set(r_i, col, acc);
-            }
-            for r_i in 0..n {
-                let mut acc = h_unit[r_i] * cs.v.get(k, col);
-                for i in 0..k {
-                    acc += self.v.get(r_i, i) * cs.v.get(i, col);
-                }
-                new_v.set(r_i, col, acc);
-            }
+            rot_u.set_col(col, &cs.u.col(col)[..kk]);
+            rot_v.set_col(col, &cs.v.col(col)[..kk]);
         }
+        let mut new_u = ext_u.matmul(&rot_u);
+        let mut new_v = ext_v.matmul(&rot_v);
         // Truncate numerically-dead trailing rank to keep k bounded by n.
         let tol = new_sigma.first().copied().unwrap_or(0.0) * 1e-13;
         let mut kept = new_sigma.iter().take_while(|s| **s > tol).count().max(1);
@@ -268,10 +318,12 @@ impl OnlineSvd {
         self.sigma = new_sigma;
     }
 
+    /// Materialize `U Σ Vᵀ` (the tracked matrix approximation).
     pub fn reconstruct(&self) -> Mat {
         Svd { u: self.u.clone(), sigma: self.sigma.clone(), v: self.v.clone() }.reconstruct()
     }
 
+    /// SVT through the incremental factorization: `U (Σ − τ)₊ Vᵀ`.
     pub fn shrink_reconstruct(&self, tau: f64) -> Mat {
         Svd { u: self.u.clone(), sigma: self.sigma.clone(), v: self.v.clone() }
             .shrink_reconstruct(tau)

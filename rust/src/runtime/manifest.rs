@@ -8,9 +8,13 @@ use std::path::{Path, PathBuf};
 /// Identity of one compiled artifact: op name + static shape.
 #[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct OpKey {
+    /// Operation name (e.g. `step_lsq`, `prox_l21`).
     pub op: String,
+    /// Sample-count bucket the artifact was lowered for.
     pub n: usize,
+    /// Feature dimension.
     pub d: usize,
+    /// Task count (0 for per-task ops).
     pub t: usize,
 }
 
@@ -21,16 +25,22 @@ impl std::fmt::Display for OpKey {
 }
 
 #[derive(Clone, Debug)]
+/// One artifact: its identity plus the HLO text file backing it.
 pub struct ManifestEntry {
+    /// Which op/shape this artifact implements.
     pub key: OpKey,
+    /// Path to the HLO text file.
     pub file: PathBuf,
 }
 
 /// Parsed artifact manifest with bucket lookup.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Sample-count tiling stride used at lowering time.
     pub tile_n: usize,
+    /// Feature-dimension tiling stride.
     pub tile_d: usize,
     entries: BTreeMap<OpKey, ManifestEntry>,
 }
@@ -81,18 +91,22 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), tile_n, tile_d, entries })
     }
 
+    /// Number of artifacts.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the manifest lists no artifacts.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Exact-key lookup.
     pub fn get(&self, key: &OpKey) -> Option<&ManifestEntry> {
         self.entries.get(key)
     }
 
+    /// All artifact keys, in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &OpKey> {
         self.entries.keys()
     }

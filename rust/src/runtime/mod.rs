@@ -13,7 +13,9 @@
 //!   with zero unsafe). Static per-task inputs (X, y, mask) are uploaded
 //!   once per executor and cached **device-resident**; only `w` and `η`
 //!   cross the host boundary per step — exactly the paper's communication
-//!   pattern (models move, data does not).
+//!   pattern (models move, data does not). The same module hosts
+//!   [`WorkerPool`], the generic CPU pool behind the blocked
+//!   [`linalg::par`](crate::linalg::par) kernels.
 //! * [`task_compute`] — the [`TaskCompute`] abstraction the coordinator
 //!   calls: a PJRT-backed implementation (pads task data to the bucket) and
 //!   a pure-rust native implementation (oracle / fallback when artifacts
@@ -26,7 +28,7 @@ pub mod task_compute;
 pub mod tensor;
 
 pub use manifest::{Manifest, OpKey};
-pub use pool::{ComputePool, PoolConfig};
+pub use pool::{ComputePool, PoolConfig, WorkerPool};
 pub use prox_compute::PjrtL21Prox;
 pub use task_compute::{make_task_computes, Engine, NativeTaskCompute, TaskCompute};
 pub use tensor::HostTensor;

@@ -39,6 +39,7 @@ struct Request {
     resp: mpsc::SyncSender<Result<Vec<HostTensor>>>,
 }
 
+/// Configuration for [`ComputePool::new`].
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
     /// Number of executor threads (PJRT clients).
@@ -77,11 +78,13 @@ pub fn new_static_id() -> u64 {
 }
 
 impl ComputePool {
+    /// Spawn the executor pool, loading the manifest from `config`.
     pub fn new(config: PoolConfig) -> Result<ComputePool> {
         let manifest = Arc::new(Manifest::load(&config.artifacts_dir)?);
         Self::with_manifest(config, manifest)
     }
 
+    /// Spawn the executor pool over an already-loaded manifest.
     pub fn with_manifest(config: PoolConfig, manifest: Arc<Manifest>) -> Result<ComputePool> {
         assert!(config.executors >= 1);
         let (tx, rx) = mpsc::channel::<Request>();
@@ -104,6 +107,7 @@ impl ComputePool {
         })
     }
 
+    /// The artifact manifest the executors serve from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -251,4 +255,234 @@ fn upload(client: &xla::PjRtClient, t: &HostTensor) -> Result<xla::PjRtBuffer> {
     client
         .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
         .map_err(|e| anyhow!("uploading tensor {:?}: {e}", t.shape))
+}
+
+// ------------------------------------------------------------------------
+// Generic CPU worker pool (the host-side counterpart of the PJRT executor
+// pool above). Used by `linalg::par` for blocked matmul/gram/axpy kernels.
+
+/// One unit of pool work: a boxed closure with its lifetime erased (see the
+/// safety argument in [`WorkerPool::scope`]).
+type PoolJob = Box<dyn FnOnce() + Send + 'static>;
+
+std::thread_local! {
+    /// True on threads owned by a [`WorkerPool`]. [`WorkerPool::scope`]
+    /// consults this to run nested submissions inline instead of
+    /// deadlocking the pool against itself.
+    static IN_WORKER_POOL: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+/// A fixed-size pool of host threads for CPU-bound, data-parallel kernels
+/// (blocked matmul, Gram columns, long axpy spans).
+///
+/// Unlike [`ComputePool`], which owns per-thread PJRT clients and speaks a
+/// request/response protocol, this pool runs plain closures: callers hand
+/// [`WorkerPool::scope`] a batch of jobs over *disjoint* slices of one
+/// output buffer and block until every job has finished. Workers never
+/// submit to their own pool (nested scopes run inline), so the pool cannot
+/// deadlock against itself.
+pub struct WorkerPool {
+    tx: mpsc::Sender<PoolJob>,
+    threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("pallas-linalg-{i}"))
+                    .spawn(move || {
+                        IN_WORKER_POOL.with(|f| f.set(true));
+                        loop {
+                            // Hold the receiver lock only while dequeuing.
+                            let job = { rx.lock().unwrap().recv() };
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => return, // all senders gone: shut down
+                            }
+                        }
+                    })
+                    .expect("spawning linalg worker thread")
+            })
+            .collect();
+        WorkerPool { tx, threads, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` on the pool and block until every one has completed.
+    ///
+    /// Jobs may borrow from the caller's stack (disjoint `&mut` chunks of
+    /// an output buffer, `&` views of the inputs). A job that panics is
+    /// caught on the worker (the thread survives) and the panic is
+    /// re-raised here after the remaining jobs drain.
+    ///
+    /// Called from *inside* a pool worker, the jobs run inline on the
+    /// current thread instead — submitting to the own pool while every
+    /// worker is blocked in `scope` would deadlock.
+    pub fn scope<'s>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 's>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if IN_WORKER_POOL.with(|f| f.get()) {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        for job in jobs {
+            // SAFETY: the job may borrow data with lifetime 's from the
+            // caller's frame. We block on `latch.wait()` below until every
+            // job has run to completion (panic included — the catch path
+            // also counts down), so no borrow is used after this call
+            // returns. The transmute only erases the lifetime; the layout
+            // of the fat Box pointer is unchanged.
+            let job: PoolJob = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 's>, PoolJob>(job)
+            };
+            let latch = Arc::clone(&latch);
+            let wrapped: PoolJob = Box::new(move || {
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                latch.complete(outcome.err());
+            });
+            self.tx.send(wrapped).expect("worker pool channel closed");
+        }
+        if let Some(payload) = latch.wait() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel lets workers drain and exit; join them so no
+        // job outlives borrows owned by the dropping thread.
+        drop(std::mem::replace(&mut self.tx, mpsc::channel().0));
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Count-down latch for [`WorkerPool::scope`]: tracks outstanding jobs and
+/// carries the first panic payload back to the submitting thread.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: std::sync::Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch {
+            state: Mutex::new(LatchState { remaining: jobs, panic: None }),
+            cv: std::sync::Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if let Some(p) = panic {
+            s.panic.get_or_insert(p);
+        }
+        if s.remaining == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Option<Box<dyn std::any::Any + Send>> {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.panic.take()
+    }
+}
+
+#[cfg(test)]
+mod worker_pool_tests {
+    use super::WorkerPool;
+
+    #[test]
+    fn scope_runs_every_job_over_borrowed_chunks() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u64; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, x) in chunk.iter_mut().enumerate() {
+                        *x = (i * 16 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+
+    #[test]
+    fn scope_with_more_jobs_than_threads_completes() {
+        let pool = WorkerPool::new(2);
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..50)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope(jobs);
+        assert_eq!(counter.load(std::sync::atomic::Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope(vec![Box::new(|| panic!("kernel bug")) as Box<dyn FnOnce() + Send>]);
+        }));
+        assert!(caught.is_err(), "panic must cross scope()");
+        // The worker that caught the panic is still alive and serving.
+        let flag = std::sync::atomic::AtomicUsize::new(0);
+        pool.scope(vec![Box::new(|| {
+            flag.store(7, std::sync::atomic::Ordering::Relaxed);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(flag.load(std::sync::atomic::Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn nested_scope_runs_inline_without_deadlock() {
+        let pool = std::sync::Arc::new(WorkerPool::new(1));
+        let inner_ran = std::sync::atomic::AtomicUsize::new(0);
+        let p2 = std::sync::Arc::clone(&pool);
+        let inner_ref = &inner_ran;
+        pool.scope(vec![Box::new(move || {
+            // Submitting from a worker of the same (fully busy) pool:
+            // must run inline, not deadlock.
+            p2.scope(vec![Box::new(|| {
+                inner_ref.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }) as Box<dyn FnOnce() + Send + '_>]);
+        }) as Box<dyn FnOnce() + Send + '_>]);
+        assert_eq!(inner_ran.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
 }

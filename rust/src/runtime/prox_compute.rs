@@ -3,7 +3,8 @@
 //!
 //! The ℓ2,1 prox is the one MTL backward step that *is* expressible as an
 //! L1 kernel (row-separable — unlike the nuclear-norm SVT, whose SVD can't
-//! lower to executable HLO here, see DESIGN.md). With this enabled the
+//! lower to executable HLO here — see `optim`'s module docs). With this
+//! enabled the
 //! **entire** AMTL data path — forward steps at the task nodes *and* the
 //! backward step at the central server — executes through AOT-compiled
 //! Pallas kernels.
@@ -19,6 +20,7 @@ use crate::linalg::Mat;
 use anyhow::Result;
 use std::sync::Arc;
 
+/// The ℓ2,1 backward step as an AOT-compiled artifact call.
 pub struct PjrtL21Prox {
     pool: ComputePool,
     key: OpKey,
@@ -40,6 +42,7 @@ impl PjrtL21Prox {
         })
     }
 
+    /// The artifact bucket serving this shape.
     pub fn bucket(&self) -> &OpKey {
         &self.key
     }

@@ -21,11 +21,14 @@ use std::sync::Arc;
 /// Which compute engine backs the task nodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
+    /// AOT-compiled JAX/Pallas artifacts executed through PJRT.
     Pjrt,
+    /// Pure-rust mirror of the same math (oracle / fallback).
     Native,
 }
 
 impl Engine {
+    /// Parse a CLI value (`"pjrt"` | `"native"`).
     pub fn parse(s: &str) -> Option<Engine> {
         match s {
             "pjrt" | "xla" => Some(Engine::Pjrt),
@@ -75,6 +78,7 @@ pub struct NativeTaskCompute {
 }
 
 impl NativeTaskCompute {
+    /// A native compute over one task's data.
     pub fn new(task: &TaskDataset) -> NativeTaskCompute {
         NativeTaskCompute {
             x: task.x.clone(),
@@ -159,6 +163,7 @@ impl PjrtTaskCompute {
         })
     }
 
+    /// The artifact bucket serving this task's shape.
     pub fn bucket(&self) -> &OpKey {
         &self.key
     }

@@ -4,36 +4,45 @@
 /// A dense row-major f32 tensor with explicit shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
+    /// Dimensions (row-major).
     pub shape: Vec<usize>,
+    /// Flat row-major values (the artifact dtype is f32).
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// A tensor from shape + flat data (length-checked).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         HostTensor { shape, data }
     }
 
+    /// A rank-1 single-element tensor (artifact scalars are `[1]`).
     pub fn scalar1(v: f32) -> HostTensor {
         HostTensor { shape: vec![1], data: vec![v] }
     }
 
+    /// A rank-1 tensor over `data`.
     pub fn vec1(data: Vec<f32>) -> HostTensor {
         HostTensor { shape: vec![data.len()], data }
     }
 
+    /// Downcast host f64 data into an artifact-dtype tensor.
     pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> HostTensor {
         HostTensor::new(shape, data.iter().map(|&x| x as f32).collect())
     }
 
+    /// Upcast back to host f64.
     pub fn to_f64(&self) -> Vec<f64> {
         self.data.iter().map(|&x| x as f64).collect()
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True for zero elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -18,6 +18,7 @@ pub struct InProc {
 }
 
 impl InProc {
+    /// A transport bound to `server`.
     pub fn new(server: Arc<CentralServer>) -> InProc {
         InProc { server }
     }

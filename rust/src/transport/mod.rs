@@ -57,6 +57,7 @@ pub enum TransportKind {
 }
 
 impl TransportKind {
+    /// Parse a CLI value (`"inproc"` | `"tcp"`).
     pub fn parse(s: &str) -> Option<TransportKind> {
         match s {
             "inproc" => Some(TransportKind::InProc),
@@ -65,6 +66,7 @@ impl TransportKind {
         }
     }
 
+    /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             TransportKind::InProc => "inproc",

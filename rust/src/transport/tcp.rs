@@ -7,7 +7,11 @@
 //! a protocol error on one node's socket never corrupts another's. All
 //! remote input is validated (task index bounds, update dimension, step
 //! finiteness) before it touches the shared state; invalid requests get
-//! an `Error` response, never a panic.
+//! an `Error` response, never a panic. Connection threads inherit the
+//! server's lock sharding: a `PushUpdate` touches only the target column's
+//! block and pending slot, and a `FetchProxCol` takes the prox cache's
+//! read lock — concurrent nodes contend per-column, never on one
+//! server-wide mutex (see [`CentralServer`]'s hot-path notes).
 //!
 //! Client side ([`TcpClient`]): connect/read/write timeouts, `TCP_NODELAY`
 //! (frames are latency-bound request/response pairs, not bulk streams),

@@ -50,12 +50,24 @@ const OP_ERROR: u8 = 0xFF;
 /// Decode/IO failure. Malformed input is an error, never a panic.
 #[derive(Debug)]
 pub enum WireError {
+    /// Underlying socket/stream failure (includes clean EOF).
     Io(std::io::Error),
+    /// Frame did not start with the protocol magic.
     BadMagic([u8; 4]),
+    /// Peer speaks a different protocol version.
     BadVersion(u8),
+    /// Unknown message opcode.
     BadOpcode(u8),
+    /// Declared payload length exceeds the frame size cap.
     Oversize(u32),
-    BadChecksum { got: u32, want: u32 },
+    /// FNV checksum mismatch (corrupt payload).
+    BadChecksum {
+        /// Checksum computed over the received payload.
+        got: u32,
+        /// Checksum declared in the frame header.
+        want: u32,
+    },
+    /// Structurally invalid payload for the opcode.
     Malformed(&'static str),
 }
 
@@ -228,10 +240,13 @@ pub enum Request {
 /// Server → client messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
+    /// The requested backward-step column.
     ProxCol(Vec<f64>),
     /// The global version (total KM updates) after the commit landed.
     Pushed { version: u64 },
+    /// The run's forward step size η.
     Eta(f64),
+    /// Acknowledges a `Shutdown` request.
     ShutdownAck,
     /// Request rejected (bad task index, dimension mismatch, …). The
     /// connection stays usable.
@@ -288,10 +303,12 @@ impl Request {
         out
     }
 
+    /// Write one framed request to `w`.
     pub fn write_to(&self, w: &mut impl Write) -> Result<(), WireError> {
         write_frame(w, self.opcode(), &self.payload())
     }
 
+    /// Read one framed request from `r`.
     pub fn read_from(r: &mut impl Read) -> Result<Request, WireError> {
         let (opcode, payload) = read_frame(r)?;
         Request::decode(opcode, &payload)
@@ -349,10 +366,12 @@ impl Response {
         out
     }
 
+    /// Write one framed response to `w`.
     pub fn write_to(&self, w: &mut impl Write) -> Result<(), WireError> {
         write_frame(w, self.opcode(), &self.payload())
     }
 
+    /// Read one framed response from `r`.
     pub fn read_from(r: &mut impl Read) -> Result<Response, WireError> {
         let (opcode, payload) = read_frame(r)?;
         Response::decode(opcode, &payload)

@@ -8,19 +8,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always carried as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys, so output is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
+/// A JSON parse failure, with position context.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the error in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -33,6 +43,7 @@ impl fmt::Display for ParseError {
 impl std::error::Error for ParseError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json, ParseError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -46,6 +57,7 @@ impl Json {
 
     // ----- typed accessors ------------------------------------------------
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -53,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The number as a non-negative integer, if it is one exactly.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -63,6 +76,7 @@ impl Json {
         })
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -70,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -77,6 +92,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -84,6 +100,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup (`None` for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -93,10 +110,12 @@ impl Json {
 
     // ----- construction helpers ------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }

@@ -2,7 +2,8 @@
 //!
 //! The build is fully offline against a minimal vendored crate set (no
 //! `rand`, `serde_json`, `proptest` or `criterion`), so these are
-//! implemented from scratch — see DESIGN.md §Substitutions.
+//! implemented from scratch (the vendored-set substitutions are listed
+//! in `docs/ARCHITECTURE.md`).
 
 pub mod json;
 pub mod proptest;

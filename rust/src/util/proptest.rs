@@ -31,31 +31,38 @@ pub struct Gen {
 }
 
 impl Gen {
+    /// The underlying PRNG (for custom generation).
     pub fn rng(&mut self) -> &mut Rng {
         &mut self.rng
     }
 
+    /// Uniform integer in `[lo, hi_incl]`, scaled by the case size.
     pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
         let span = (hi_incl - lo) as f64 * self.size;
         lo + self.rng.below(span as u64 + 1) as usize
     }
 
+    /// Uniform float in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.range_f64(lo, hi)
     }
 
+    /// `len` uniform floats in `[lo, hi)`.
     pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
         (0..len).map(|_| self.f64_in(lo, hi)).collect()
     }
 
+    /// `len` standard-normal samples.
     pub fn normal_vec(&mut self, len: usize) -> Vec<f64> {
         self.rng.normal_vec(len)
     }
 
+    /// Bernoulli(`p`).
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.bool(p)
     }
 
+    /// Uniform choice from a non-empty slice.
     pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.below(xs.len() as u64) as usize]
     }

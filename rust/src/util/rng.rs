@@ -38,6 +38,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output (xoshiro256++).
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -75,6 +76,7 @@ impl Rng {
         lo + self.below(hi - lo)
     }
 
+    /// Bernoulli(`p`).
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -97,6 +99,7 @@ impl Rng {
         }
     }
 
+    /// Normal with the given mean and standard deviation.
     pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }

@@ -7,15 +7,22 @@ use std::time::{Duration, Instant};
 /// Summary statistics over a sample of measurements.
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (midpoint average for even `n`).
     pub median: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (all-zeros for an empty slice).
     pub fn from(xs: &[f64]) -> Summary {
         if xs.is_empty() {
             return Summary::default();

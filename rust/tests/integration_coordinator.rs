@@ -273,18 +273,22 @@ fn prox_every_tradeoff_preserves_convergence() {
 }
 
 #[test]
-fn online_svd_ablation_converges_on_small_problem() {
+fn online_svd_default_converges_on_small_problem() {
+    // The incremental prox is the default; pin it explicitly with a short
+    // refresh stride and check convergence plus the refresh accounting.
     let p = lowrank_problem(214, 3, 30, 6, 0.2);
     let cfg = RunConfig {
         iters_per_node: 100,
         km: KmSchedule::fixed(0.9),
-        online_svd: true,
+        svd: amtl::optim::svd::SvdMode::Online,
+        resvd_every: 16,
         ..Default::default()
     };
     let r = run_schedule(&p, &cfg, Async).unwrap();
     let f0 = p.objective(&amtl::linalg::Mat::zeros(6, 3));
     let f1 = p.objective(&r.w_final);
     assert!(f1 < 0.2 * f0, "online-SVD run: {f0} -> {f1}");
+    assert!(r.svd_refreshes >= 1, "300 commits at stride 16 must refresh");
 }
 
 // ------------------------------------------------------------ faults

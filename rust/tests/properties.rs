@@ -279,3 +279,59 @@ fn prop_backward_forward_iteration_is_nonexpansive() {
         },
     );
 }
+
+// ------------------------------------------------- parallel linalg kernels
+
+#[test]
+fn prop_parallel_matmul_bitwise_equals_serial() {
+    // The pool-blocked matmul partitions the output but keeps the serial
+    // per-column loop order, so results must be *bitwise* identical for
+    // arbitrary f64 inputs — not merely close.
+    use amtl::linalg::par;
+    use amtl::runtime::WorkerPool;
+    let pool = WorkerPool::new(4);
+    forall(
+        "parallel matmul == serial matmul (bitwise)",
+        40,
+        |g| {
+            let m = g.usize_in(1, 24).max(1);
+            let k = g.usize_in(1, 24).max(1);
+            let n = g.usize_in(1, 24).max(1);
+            ((g.normal_vec(m * k), g.normal_vec(k * n)), (m, k, n))
+        },
+        |((av, bv), (m, k, n))| {
+            // Shrink candidates may break the length/shape relation.
+            if av.len() != m * k || bv.len() != k * n {
+                return true;
+            }
+            let a = mat_from(av, *m);
+            let b = mat_from(bv, *k);
+            let serial = par::matmul_serial(&a, &b);
+            let parallel = par::matmul_on(Some(&pool), &a, &b);
+            serial == parallel && parallel.rows() == *m && parallel.cols() == *n
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_gram_bitwise_equals_serial() {
+    use amtl::linalg::par;
+    use amtl::runtime::WorkerPool;
+    let pool = WorkerPool::new(3);
+    forall(
+        "parallel gram == serial gram (bitwise)",
+        40,
+        |g| {
+            let m = g.usize_in(1, 30).max(1);
+            let n = g.usize_in(1, 16).max(1);
+            (g.normal_vec(m * n), m)
+        },
+        |(av, m)| {
+            if *m == 0 || av.len() % m != 0 {
+                return true;
+            }
+            let a = mat_from(av, *m);
+            par::gram_serial(&a) == par::gram_on(Some(&pool), &a)
+        },
+    );
+}
