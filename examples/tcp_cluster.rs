@@ -69,6 +69,8 @@ fn main() -> anyhow::Result<()> {
                 sink: None,
                 rng: root.fork(t as u64),
                 gate: None,
+                heartbeat: None,
+                resume: false,
             };
             s.spawn(move || {
                 let stats = run_worker(ctx, compute.as_mut()).expect("worker failed");

@@ -12,7 +12,10 @@
 //!    asynchronous nuclear-norm session with zero injected delay, driven
 //!    once with `--svd exact` semantics and once with the incremental
 //!    default — `updates_per_sec` for both lands in
-//!    `BENCH_perf_step.json`, so a single run records the before/after.
+//!    `BENCH_perf_step.json`, so a single run records the before/after;
+//! 5. durability overhead: the same throughput run with checkpointing on
+//!    (WAL fsync per commit + snapshot rotations), recorded as
+//!    `throughput_checkpointed` / `durability_overhead`.
 //!
 //! Point `AMTL_ARTIFACTS` at an alternative artifact directory to A/B
 //! kernel variants. `--threads N` sizes the linalg pool for section 3/4.
@@ -227,6 +230,43 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     println!("  online/exact speedup: {speedup:.2}x (threads={})", amtl::linalg::threads());
+
+    // ---- durability overhead: same run with the WAL + snapshots on ------
+    println!("\n=== durability: checkpointed run (WAL fsync per commit + snapshots) ===");
+    {
+        let mut rng = Rng::new(6);
+        let ds = synthetic::lowrank_regression(&vec![n; t_count], d, 3, 0.5, &mut rng);
+        let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+        amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+        let cfg = ExpConfig { iters, offset_units: 0.0, ..Default::default() };
+        let dir = std::env::temp_dir().join(format!("amtl_bench_ckpt_{}", std::process::id()));
+        let r = amtl::coordinator::Session::builder(&problem)
+            .engine(engine)
+            .pool(pool.as_ref())
+            .config(cfg.run_config())
+            .checkpoint_dir(Some(dir.clone()))
+            .checkpoint_every(64)
+            .schedule(Async)
+            .build()?
+            .run()?;
+        let ups = r.updates as f64 / r.wall_time.as_secs_f64().max(1e-12);
+        log.record_run("throughput_checkpointed", &r, problem.objective(&r.w_final));
+        log.record_kv(
+            "durability_overhead",
+            &[
+                ("updates_per_sec", ups),
+                ("durable_over_plain", ups / results[1].max(1e-12)),
+                ("checkpoints_written", r.checkpoints_written as f64),
+            ],
+        );
+        println!(
+            "  checkpointed {:8.1} updates/sec  ({:.2}x of the online baseline, {} snapshots)",
+            ups,
+            ups / results[1].max(1e-12),
+            r.checkpoints_written,
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     println!("bench records: {}", log.write()?.display());
     Ok(())

@@ -111,6 +111,13 @@ pub struct RunResult {
     pub compute_secs: f64,
     /// Total wall-clock nodes spent waiting on the server's backward step.
     pub backward_wait_secs: f64,
+    /// Snapshots the server wrote during the run (0 without durability).
+    pub checkpoints_written: u64,
+    /// WAL entries replayed into the server by `--resume` recovery (0 on
+    /// a fresh start).
+    pub wal_replayed: u64,
+    /// Nodes evicted by heartbeat timeout (empty without membership).
+    pub evicted_nodes: Vec<usize>,
 }
 
 impl RunResult {
@@ -134,7 +141,7 @@ impl RunResult {
 
     /// Paper-style one-line summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{}: wall={:.2}s updates={} prox={} coalesced={} mean_delay={:.3}s",
             self.method,
             self.wall_time.as_secs_f64(),
@@ -142,7 +149,17 @@ impl RunResult {
             self.prox_count,
             self.coalesced_updates,
             self.mean_delay_secs,
-        )
+        );
+        if self.checkpoints_written > 0 || self.wal_replayed > 0 {
+            s.push_str(&format!(
+                " checkpoints={} wal_replayed={}",
+                self.checkpoints_written, self.wal_replayed
+            ));
+        }
+        if !self.evicted_nodes.is_empty() {
+            s.push_str(&format!(" evicted={:?}", self.evicted_nodes));
+        }
+        s
     }
 }
 
@@ -199,6 +216,9 @@ mod tests {
             crashed_nodes: vec![],
             compute_secs: 0.0,
             backward_wait_secs: 0.0,
+            checkpoints_written: 0,
+            wal_replayed: 0,
+            evicted_nodes: vec![],
         };
         let objs = result.compute_objectives(
             |w| w.get(0, 0),           // objective = the entry itself
@@ -231,6 +251,9 @@ mod tests {
             crashed_nodes: vec![],
             compute_secs: 0.0,
             backward_wait_secs: 0.0,
+            checkpoints_written: 0,
+            wal_replayed: 0,
+            evicted_nodes: vec![],
         };
         let s = result.summary();
         assert!(s.contains("smtl") && s.contains("42") && s.contains("7"));

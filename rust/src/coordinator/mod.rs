@@ -50,6 +50,10 @@
 //! * [`step_size`] — Theorem 1 step bound and the dynamic multiplier
 //!   `c_{t,k} = log(max(ν̄_{t,k}, 10))` of Eq. III.6.
 //! * [`metrics`] — objective trajectories, update counts, timing.
+//! * [`registry`] — elastic membership: register/heartbeat/leave with
+//!   timeout-based eviction, so a silently dead task node stops gating
+//!   every schedule and a restarted one rejoins mid-run (durability for
+//!   the server side lives in [`crate::persist`]).
 //!
 //! ## Data paths (what crosses the worker↔server edge)
 //!
@@ -62,6 +66,7 @@
 
 pub mod metrics;
 pub mod problem;
+pub mod registry;
 pub mod schedule;
 pub mod server;
 pub mod session;
@@ -71,5 +76,6 @@ pub mod worker;
 
 pub use metrics::RunResult;
 pub use problem::MtlProblem;
+pub use registry::{NodeRegistry, NodeStatus};
 pub use schedule::{Async, Schedule, SemiSync, StalenessGate, Synchronized};
 pub use session::{DEFAULT_RESVD_EVERY, RunConfig, Session, SessionBuilder};

@@ -1,0 +1,269 @@
+//! Elastic task-node membership: who is in the run *right now*.
+//!
+//! The paper's premise is that task nodes are unreliable — the schedules
+//! already tolerate a node that *reports* its crash (fault injection),
+//! but a silently dead TCP peer used to stall anything waiting on it
+//! forever. The [`NodeRegistry`] closes that gap with timeout-based
+//! liveness: nodes `register` when they join, `heartbeat` while they
+//! work, and `leave` when they are done; a `sweep` evicts any registered
+//! node whose last sign of life is older than the timeout and fires the
+//! eviction callbacks (`SemiSync` hooks its
+//! [`StalenessGate`](super::schedule::StalenessGate) in here so a dead
+//! straggler stops gating the federation, and the `--serve` wait loop
+//! stops waiting for evicted nodes).
+//!
+//! Sweeps are opportunistic — every `register`/`heartbeat` sweeps first —
+//! so any live traffic is enough to detect dead peers; pollers with no
+//! traffic of their own (the serve loop) call [`NodeRegistry::sweep`]
+//! directly. An evicted node that comes back is told so on its next
+//! heartbeat (`live = false`) and rejoins by re-registering, which bumps
+//! its membership generation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Membership state of one task node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    /// Never registered (a run may legitimately never start this node).
+    Unseen,
+    /// Registered and inside the liveness timeout.
+    Live,
+    /// Registered once, then silent past the timeout.
+    Evicted,
+    /// Departed politely via `leave`.
+    Left,
+}
+
+struct Slot {
+    status: NodeStatus,
+    last_seen: Option<Instant>,
+    generation: u64,
+}
+
+/// Timeout-based liveness table over the run's `T` task-node slots.
+pub struct NodeRegistry {
+    timeout: Duration,
+    slots: Mutex<Vec<Slot>>,
+    callbacks: Mutex<Vec<Box<dyn Fn(usize) + Send + Sync>>>,
+    evictions: AtomicU64,
+}
+
+impl NodeRegistry {
+    /// A registry for `t_count` nodes: a registered node silent for
+    /// longer than `timeout` is evicted at the next sweep.
+    pub fn new(t_count: usize, timeout: Duration) -> NodeRegistry {
+        NodeRegistry {
+            timeout,
+            slots: Mutex::new(
+                (0..t_count)
+                    .map(|_| Slot { status: NodeStatus::Unseen, last_seen: None, generation: 0 })
+                    .collect(),
+            ),
+            callbacks: Mutex::new(Vec::new()),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The eviction timeout.
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Number of node slots.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when the registry tracks zero nodes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Register (or re-register) node `t`, returning its membership
+    /// generation — 1 on first join, incremented on every rejoin after an
+    /// eviction, restart, or departure. Sweeps first.
+    pub fn register(&self, t: usize) -> u64 {
+        self.fire(self.sweep_internal());
+        let mut slots = self.slots.lock().unwrap();
+        let slot = &mut slots[t];
+        slot.status = NodeStatus::Live;
+        slot.last_seen = Some(Instant::now());
+        slot.generation += 1;
+        slot.generation
+    }
+
+    /// Record a sign of life from node `t`. Returns `true` while the node
+    /// is a live member; `false` means it was evicted (or never joined)
+    /// and must re-register. Sweeps first, so any node's traffic detects
+    /// everyone else's silence.
+    pub fn heartbeat(&self, t: usize) -> bool {
+        self.fire(self.sweep_internal());
+        let mut slots = self.slots.lock().unwrap();
+        let slot = &mut slots[t];
+        if slot.status == NodeStatus::Live {
+            slot.last_seen = Some(Instant::now());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Polite departure of node `t` (the run stops waiting for it; not an
+    /// eviction, so no callbacks fire). An already-evicted node stays
+    /// `Evicted` — it is not a member, and the eviction record is part of
+    /// the run's report.
+    pub fn leave(&self, t: usize) {
+        let mut slots = self.slots.lock().unwrap();
+        if slots[t].status != NodeStatus::Evicted {
+            slots[t].status = NodeStatus::Left;
+        }
+    }
+
+    /// Evict every live node whose last sign of life is older than the
+    /// timeout; fires the eviction callbacks and returns the newly
+    /// evicted node ids.
+    pub fn sweep(&self) -> Vec<usize> {
+        let evicted = self.sweep_internal();
+        self.fire(evicted.clone());
+        evicted
+    }
+
+    /// Current status of node `t`.
+    pub fn status(&self, t: usize) -> NodeStatus {
+        self.slots.lock().unwrap()[t].status
+    }
+
+    /// True when node `t` has been evicted.
+    pub fn is_evicted(&self, t: usize) -> bool {
+        self.status(t) == NodeStatus::Evicted
+    }
+
+    /// Ids of all currently evicted nodes.
+    pub fn evicted_nodes(&self) -> Vec<usize> {
+        let slots = self.slots.lock().unwrap();
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.status == NodeStatus::Evicted)
+            .map(|(t, _)| t)
+            .collect()
+    }
+
+    /// Total evictions so far (rejoining does not subtract).
+    pub fn eviction_count(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Run `cb(t)` whenever node `t` is evicted. Callbacks run outside
+    /// the registry lock (they may take their own locks, e.g. a staleness
+    /// gate's).
+    pub fn on_evict(&self, cb: impl Fn(usize) + Send + Sync + 'static) {
+        self.callbacks.lock().unwrap().push(Box::new(cb));
+    }
+
+    fn sweep_internal(&self) -> Vec<usize> {
+        let now = Instant::now();
+        let mut evicted = Vec::new();
+        let mut slots = self.slots.lock().unwrap();
+        for (t, slot) in slots.iter_mut().enumerate() {
+            if slot.status == NodeStatus::Live {
+                let stale = slot
+                    .last_seen
+                    .map(|seen| now.duration_since(seen) > self.timeout)
+                    .unwrap_or(true);
+                if stale {
+                    slot.status = NodeStatus::Evicted;
+                    evicted.push(t);
+                }
+            }
+        }
+        drop(slots);
+        self.evictions.fetch_add(evicted.len() as u64, Ordering::Relaxed);
+        evicted
+    }
+
+    fn fire(&self, evicted: Vec<usize>) {
+        if evicted.is_empty() {
+            return;
+        }
+        let callbacks = self.callbacks.lock().unwrap();
+        for t in evicted {
+            for cb in callbacks.iter() {
+                cb(t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn lifecycle_register_heartbeat_leave() {
+        let reg = NodeRegistry::new(3, Duration::from_secs(60));
+        assert_eq!(reg.status(0), NodeStatus::Unseen);
+        assert_eq!(reg.register(0), 1);
+        assert_eq!(reg.status(0), NodeStatus::Live);
+        assert!(reg.heartbeat(0));
+        reg.leave(0);
+        assert_eq!(reg.status(0), NodeStatus::Left);
+        assert!(!reg.heartbeat(0), "a departed node is no longer a member");
+        assert_eq!(reg.register(0), 2, "rejoin bumps the generation");
+    }
+
+    #[test]
+    fn unregistered_nodes_fail_heartbeats_but_are_not_evicted() {
+        let reg = NodeRegistry::new(2, Duration::from_millis(1));
+        assert!(!reg.heartbeat(1));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(reg.sweep().is_empty(), "Unseen nodes are not members, so never evicted");
+        assert_eq!(reg.status(1), NodeStatus::Unseen);
+    }
+
+    #[test]
+    fn silent_nodes_are_evicted_on_sweep() {
+        let reg = NodeRegistry::new(2, Duration::from_millis(10));
+        reg.register(0);
+        reg.register(1);
+        let hot = std::time::Instant::now();
+        while hot.elapsed() < Duration::from_millis(25) {
+            assert!(reg.heartbeat(0), "node 0 keeps heartbeating");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Node 1 went silent: node 0's heartbeats swept it out.
+        assert_eq!(reg.status(1), NodeStatus::Evicted);
+        assert_eq!(reg.evicted_nodes(), vec![1]);
+        assert!(reg.eviction_count() >= 1);
+        assert!(!reg.heartbeat(1), "evicted node learns it must re-register");
+        assert_eq!(reg.register(1), 2);
+        assert_eq!(reg.status(1), NodeStatus::Live);
+    }
+
+    #[test]
+    fn eviction_fires_callbacks_once_per_eviction() {
+        let reg = NodeRegistry::new(2, Duration::from_millis(5));
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&count);
+        reg.on_evict(move |t| {
+            assert_eq!(t, 1);
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        reg.register(1);
+        std::thread::sleep(Duration::from_millis(12));
+        reg.sweep();
+        reg.sweep(); // already evicted: no second firing
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn len_reports_slot_count() {
+        let reg = NodeRegistry::new(4, Duration::from_secs(1));
+        assert_eq!(reg.len(), 4);
+        assert!(!reg.is_empty());
+    }
+}

@@ -73,16 +73,36 @@ impl Schedule for SemiSync {
         "semisync"
     }
 
-    fn validate(&self, _cfg: &RunConfig) -> Result<()> {
+    fn validate(&self, cfg: &RunConfig) -> Result<()> {
         anyhow::ensure!(
             self.staleness_bound >= 1,
             "staleness_bound must be >= 1 (use Synchronized for a full barrier)"
+        );
+        anyhow::ensure!(
+            !cfg.faults.has_silent_window() || cfg.heartbeat.is_some(),
+            "a silent crash/restart fault under bounded staleness needs heartbeat \
+             eviction (set heartbeat_ms), or the live nodes stall on the dead one"
         );
         Ok(())
     }
 
     fn orchestrate(&self, orch: &mut Orchestrator<'_>) -> Result<Vec<WorkerStats>> {
         let gate = std::sync::Arc::new(StalenessGate::new(orch.t_count(), self.staleness_bound));
+        // A resumed run's workers start at their applied-commit horizon;
+        // the gate's completed counters must start there too, or every
+        // worker would park forever behind counters stuck at zero.
+        if orch.cfg().resume {
+            let server = orch.server();
+            let counts: Vec<u64> =
+                (0..orch.t_count()).map(|t| server.applied_commits(t)).collect();
+            gate.prime_completed(&counts);
+        }
+        // Elastic membership: a node evicted for silence stops gating the
+        // federation — exactly like one that reported its own crash.
+        if let Some(registry) = orch.registry() {
+            let g = std::sync::Arc::clone(&gate);
+            registry.on_evict(move |t| g.deactivate(t));
+        }
         run_free(orch, self.name(), Some(gate))
     }
 }
@@ -159,6 +179,19 @@ impl Schedule for Synchronized {
         let server = orch.server();
         let controller = orch.controller();
         let recorder = orch.recorder();
+        // A resumed run continues at the round the durable state ends at
+        // (rounds below a column's applied-commit horizon would only be
+        // deduplicated away). Columns that were already ahead of the
+        // lowest horizon are caught up by the dedup itself.
+        let start_round = if orch.cfg().resume {
+            (0..t_count)
+                .map(|t| server.applied_commits(t))
+                .min()
+                .unwrap_or(0)
+                .min(iters as u64) as usize
+        } else {
+            0
+        };
         // The round loop's own channel to the server (over TCP: its own
         // connection) — workers only *fetch*; commits all flow through
         // this one handle, in task order, exactly one batch per round.
@@ -193,7 +226,7 @@ impl Schedule for Synchronized {
                         // park the error, keep pacing rounds, surface it
                         // after the loop.
                         let mut failure: Option<anyhow::Error> = None;
-                        for k in 0..ctx.iters {
+                        for k in start_round..ctx.iters {
                             barrier.wait(); // round start: commits landed
                             if stats.crashed || failure.is_some() {
                                 // Dead node: keep the barrier count, do
@@ -222,7 +255,7 @@ impl Schedule for Synchronized {
                             });
                             match outcome {
                                 Ok(Activation::Crashed) => stats.crashed = true,
-                                Ok(Activation::Dropped) => {}
+                                Ok(Activation::Dropped) | Ok(Activation::Offline) => {}
                                 Ok(Activation::Update(u)) => {
                                     *slots[t].lock().unwrap() = Some(u);
                                     stats.updates += 1;
@@ -246,7 +279,7 @@ impl Schedule for Synchronized {
             // keep the rounds turning without commits, surface it after
             // the workers are joined.
             let mut commit_failure: Option<anyhow::Error> = None;
-            for _ in 0..iters {
+            for round in start_round..iters {
                 barrier.wait(); // release workers into the round
                 barrier.wait(); // wait for the slowest worker
                 if commit_failure.is_some() {
@@ -255,7 +288,9 @@ impl Schedule for Synchronized {
                 for t in 0..t_count {
                     if let Some(u) = slots[t].lock().unwrap().take() {
                         let step = controller.step(t);
-                        if let Err(e) = commit.push_update(t, step, &u) {
+                        // The round number is each column's activation
+                        // counter (the commit dedup key).
+                        if let Err(e) = commit.push_update(t, round as u64, step, &u) {
                             commit_failure = Some(e);
                             break;
                         }
@@ -324,9 +359,48 @@ impl StalenessGate {
         }
     }
 
+    /// Like [`StalenessGate::wait_to_start`], but runs `tick()` (outside
+    /// the gate lock) at least every `interval` while parked. Workers
+    /// with elastic membership tick their heartbeat here, so a node
+    /// blocked on a silent straggler both stays live itself and keeps
+    /// sweeping the registry — which is what eventually evicts the
+    /// straggler and (via the eviction callback) unblocks this wait.
+    pub fn wait_to_start_ticking(
+        &self,
+        k: u64,
+        interval: std::time::Duration,
+        mut tick: impl FnMut(),
+    ) {
+        loop {
+            {
+                let inner = self.inner.lock().unwrap();
+                if k <= Self::min_live_completed(&inner).saturating_add(self.bound) {
+                    return;
+                }
+                let (inner, _timeout) = self.cv.wait_timeout(inner, interval).unwrap();
+                if k <= Self::min_live_completed(&inner).saturating_add(self.bound) {
+                    return;
+                }
+            }
+            tick();
+        }
+    }
+
     /// Record one completed activation for node `t`.
     pub fn finish_iter(&self, t: usize) {
         self.inner.lock().unwrap().completed[t] += 1;
+        self.cv.notify_all();
+    }
+
+    /// Pre-load the completed counters (a resumed run's workers begin at
+    /// their applied-commit horizons, and `wait_to_start` measures
+    /// staleness against these counts).
+    pub fn prime_completed(&self, counts: &[u64]) {
+        let mut inner = self.inner.lock().unwrap();
+        for (slot, &c) in inner.completed.iter_mut().zip(counts) {
+            *slot = c;
+        }
+        drop(inner);
         self.cv.notify_all();
     }
 
@@ -483,6 +557,76 @@ mod tests {
             sparse.prox_count,
             dense.prox_count
         );
+    }
+
+    #[test]
+    fn async_node_survives_silent_restart_window() {
+        // A crash/restart window under Async: the node misses its window
+        // and resumes — nobody waits on it, so nothing else changes.
+        let p = problem(726, 3, 20, 5);
+        let r = Session::builder(&p)
+            .iters_per_node(10)
+            .time_scale(Duration::from_millis(5))
+            .faults(FaultModel::CrashRestart { node: 0, down_from: 3, down_for: 4 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.updates_per_node, vec![6, 10, 10]);
+        assert_eq!(r.updates, 26);
+        assert!(r.crashed_nodes.is_empty(), "offline is not a crash");
+    }
+
+    #[test]
+    fn synchronized_tolerates_silent_restart_window() {
+        let p = problem(727, 3, 20, 5);
+        let r = Session::builder(&p)
+            .iters_per_node(10)
+            .faults(FaultModel::CrashRestart { node: 2, down_from: 1, down_for: 3 })
+            .schedule(Synchronized)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.updates_per_node, vec![10, 10, 7]);
+    }
+
+    #[test]
+    fn semisync_evicts_silent_node_and_does_not_stall() {
+        // The acceptance scenario: a node goes silent mid-run under
+        // bounded staleness. Without membership the live nodes would park
+        // at the gate forever; with heartbeats the registry evicts the
+        // silent node (swept by the parked peers' ticks), the eviction
+        // callback deactivates its gate slot, and the rest of the
+        // federation finishes its full budget.
+        let p = problem(728, 3, 20, 5);
+        let r = Session::builder(&p)
+            .iters_per_node(12)
+            .eta_k(0.9)
+            .faults(FaultModel::CrashRestart { node: 1, down_from: 2, down_for: 100 })
+            .heartbeat(Some(Duration::from_millis(25)))
+            .schedule(SemiSync { staleness_bound: 1 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(r.updates_per_node[0], 12, "live node 0 must finish");
+        assert_eq!(r.updates_per_node[2], 12, "live node 2 must finish");
+        assert_eq!(r.updates_per_node[1], 2, "silent node stopped at its window");
+        assert!(r.evicted_nodes.contains(&1), "evicted: {:?}", r.evicted_nodes);
+    }
+
+    #[test]
+    fn semisync_rejects_silent_faults_without_heartbeats() {
+        // A silent window with no eviction mechanism would stall the live
+        // nodes forever; the builder refuses the combination up front.
+        let p = problem(729, 2, 10, 4);
+        let err = Session::builder(&p)
+            .faults(FaultModel::CrashRestart { node: 0, down_from: 1, down_for: 5 })
+            .schedule(SemiSync { staleness_bound: 1 })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("heartbeat"), "{err}");
     }
 
     #[test]

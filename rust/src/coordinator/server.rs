@@ -33,9 +33,12 @@
 //! recompute takes the write side, behind a double-checked serialization
 //! gate (one server, one prox at a time — as in the paper).
 
+use super::registry::NodeRegistry;
 use super::state::SharedState;
 use crate::linalg::Mat;
 use crate::optim::prox::Regularizer;
+use crate::persist::{Checkpointer, ServerSnapshot, WalEntry};
+use crate::util::RngState;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -70,6 +73,20 @@ pub struct CentralServer {
     /// Per-column staging for the online SVD: the latest committed column
     /// value awaiting its fold into the factorization.
     pending: Vec<Mutex<Option<Vec<f64>>>>,
+    /// Per-column commit dedup keys: 0 = no commit applied yet, else the
+    /// highest applied activation counter plus one. A resent `PushUpdate`
+    /// (the TCP client's at-least-once retry, or a node replaying after a
+    /// server restart) is acknowledged without re-applying — commits are
+    /// exactly-once end to end.
+    applied_k: Vec<AtomicU64>,
+    /// When set, every commit and uncached prox is written ahead to the
+    /// WAL and snapshots rotate on the configured stride.
+    persist: Option<Arc<Checkpointer>>,
+    /// WAL entries replayed into this server by recovery (0 on a fresh
+    /// start); reported through `RunResult`.
+    wal_replayed: AtomicU64,
+    /// Elastic-membership liveness table, when heartbeats are enabled.
+    registry: Option<Arc<NodeRegistry>>,
     /// When set (ℓ2,1 only), the backward step runs through the
     /// `prox_l21` Pallas artifact instead of the native mirror — the whole
     /// data path is then AOT-compiled kernels (see `runtime::prox_compute`).
@@ -81,6 +98,7 @@ impl CentralServer {
     pub fn new(state: Arc<SharedState>, reg: Regularizer, eta: f64) -> CentralServer {
         let online = reg.uses_online_svd();
         let pending = (0..state.t()).map(|_| Mutex::new(None)).collect();
+        let applied_k = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
         CentralServer {
             state,
             reg: Mutex::new(reg),
@@ -93,6 +111,10 @@ impl CentralServer {
             coalesced: AtomicU64::new(0),
             uncounted_commits: AtomicU64::new(0),
             pending,
+            applied_k,
+            persist: None,
+            wal_replayed: AtomicU64::new(0),
+            registry: None,
             pjrt_prox: None,
         }
     }
@@ -101,6 +123,60 @@ impl CentralServer {
     pub fn with_prox_every(mut self, k: u64) -> CentralServer {
         self.prox_every = k.max(1);
         self
+    }
+
+    /// Attach durability: every commit is written ahead to `cp`'s WAL and
+    /// snapshots rotate on its stride. Writes the genesis snapshot (the
+    /// server's current state) so the directory is recoverable from the
+    /// first moment.
+    pub fn with_checkpointer(
+        mut self,
+        cp: Arc<Checkpointer>,
+    ) -> anyhow::Result<CentralServer> {
+        self.persist = Some(Arc::clone(&cp));
+        cp.checkpoint_now(&self)?;
+        Ok(self)
+    }
+
+    /// Attach an elastic-membership registry (`Register`/`Heartbeat`/
+    /// `Leave` traffic lands in it; both transports reach it through
+    /// [`CentralServer::registry`]).
+    pub fn with_registry(mut self, registry: Arc<NodeRegistry>) -> CentralServer {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// The attached membership registry, if heartbeats are enabled.
+    pub fn registry(&self) -> Option<&Arc<NodeRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// The attached checkpointer, if durability is enabled.
+    pub fn checkpointer(&self) -> Option<&Arc<Checkpointer>> {
+        self.persist.as_ref()
+    }
+
+    /// Snapshots written for this server so far (0 without durability).
+    pub fn checkpoints_written(&self) -> u64 {
+        self.persist.as_ref().map(|cp| cp.checkpoints_written()).unwrap_or(0)
+    }
+
+    /// WAL entries replayed into this server by recovery.
+    pub fn wal_replayed(&self) -> u64 {
+        self.wal_replayed.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_wal_replayed(&self, n: u64) {
+        self.wal_replayed.store(n, Ordering::Relaxed);
+    }
+
+    /// fsync in-flight WAL writes (the `Shutdown` handler acknowledges
+    /// only after this returns). No-op without durability.
+    pub fn sync_persist(&self) -> anyhow::Result<()> {
+        match &self.persist {
+            Some(cp) => cp.sync(),
+            None => Ok(()),
+        }
     }
 
     /// Route the ℓ2,1 backward step through the `prox_l21` PJRT artifact.
@@ -172,13 +248,31 @@ impl CentralServer {
         m
     }
 
-    /// One uncached backward step: fold staged column commits into the
-    /// online factorization (if any), re-anchor it on an exact Jacobi SVD
-    /// when the raw-commit counter says the stride is due, then apply the
-    /// prox. On the incremental path no full-matrix snapshot is taken at
-    /// all (the factorization *is* the operand) — the server only pays
-    /// the T column-lock sweep when refreshing or running an exact prox.
+    /// One uncached backward step, logged to the WAL when durability is
+    /// on: the *fold order* the log preserves is what lets recovery
+    /// rebuild the online factorization bitwise.
     fn compute_prox(&self) -> Mat {
+        // Quiesce gate read side: a snapshot never lands between the fold
+        // and its log entry. Acquired before the regularizer lock —
+        // the same order the snapshot writer uses.
+        let _quiesce = self.persist.as_ref().map(|cp| cp.commit_gate());
+        if let Some(cp) = &self.persist {
+            // Logged before the fold (WAL discipline). An append failure
+            // degrades durability of THIS fold's ordering, but must not
+            // poison the fetch path serving live workers.
+            let _ = cp.log_prox();
+        }
+        self.prox_fold_and_compute()
+    }
+
+    /// Fold staged column commits into the online factorization (if
+    /// any), re-anchor it on an exact Jacobi SVD when the raw-commit
+    /// counter says the stride is due, then apply the prox. On the
+    /// incremental path no full-matrix snapshot is taken at all (the
+    /// factorization *is* the operand) — the server only pays the T
+    /// column-lock sweep when refreshing or running an exact prox.
+    /// Shared by the live fetch path and WAL replay.
+    fn prox_fold_and_compute(&self) -> Mat {
         let mut reg = self.reg.lock().unwrap();
         self.drain_pending(&mut reg);
         if reg.needs_refresh() {
@@ -253,9 +347,50 @@ impl CentralServer {
     /// cannot drift between the two. Touches only block-`t` state: commits
     /// from different tasks never contend.
     ///
+    /// `k` is the committing node's activation counter: an activation
+    /// already applied (a transport resend, or a node replaying after a
+    /// server restart) is acknowledged without re-applying, making the
+    /// at-least-once wire retry exactly-once. With durability attached,
+    /// the commit is WAL-appended and fsync'd *before* it is applied
+    /// (write-ahead discipline), so an acknowledged update survives
+    /// SIGKILL; the error case is a failed append, which leaves state
+    /// untouched.
+    ///
     /// Returns the new global version (total KM updates).
-    pub fn commit_update(&self, t: usize, u: &[f64], step: f64) -> u64 {
+    pub fn commit_update(&self, t: usize, k: u64, u: &[f64], step: f64) -> anyhow::Result<u64> {
+        if k.saturating_add(1) <= self.applied_k[t].load(Ordering::Acquire) {
+            // Duplicate of an applied activation: acknowledge, don't apply.
+            return Ok(self.state.version());
+        }
+        match &self.persist {
+            None => Ok(self.apply_commit(t, k, u, step)),
+            Some(cp) => {
+                let version = {
+                    let _quiesce = cp.commit_gate();
+                    cp.log_commit(t, k, step, u)?;
+                    self.apply_commit(t, k, u, step)
+                };
+                // The commit is applied and WAL-durable at this point; a
+                // failed snapshot *rotation* must not fail acknowledged
+                // work. Warn and keep serving — the WAL keeps growing and
+                // the rotation retries on the next commit.
+                if let Err(e) = cp.maybe_snapshot(self) {
+                    eprintln!(
+                        "warning: checkpoint rotation failed ({e:#}); \
+                         continuing on the write-ahead log"
+                    );
+                }
+                Ok(version)
+            }
+        }
+    }
+
+    /// Apply one commit to in-memory state (no logging, no dedup): the KM
+    /// relaxation, the dedup-key advance, and the online-SVD staging.
+    /// Shared by the live commit path and WAL replay.
+    fn apply_commit(&self, t: usize, k: u64, u: &[f64], step: f64) -> u64 {
         let version = self.state.km_update(t, u, step);
+        self.applied_k[t].fetch_max(k.saturating_add(1), Ordering::AcqRel);
         if self.online {
             let new_col = self.state.read_col(t);
             self.notify_column_update(t, &new_col);
@@ -267,9 +402,87 @@ impl CentralServer {
         version
     }
 
+    /// Commits already applied for column `t` (the dedup horizon a
+    /// re-registering node catches up from).
+    pub fn applied_commits(&self, t: usize) -> u64 {
+        self.applied_k[t].load(Ordering::Acquire)
+    }
+
+    /// Re-apply one WAL entry during recovery (no re-logging — the entry
+    /// is already durable).
+    pub(crate) fn replay_entry(&self, entry: &WalEntry) {
+        match entry {
+            WalEntry::Commit { t, k, step, u, .. } => {
+                self.apply_commit(*t as usize, *k, u, *step);
+            }
+            WalEntry::Prox { .. } => {
+                let _ = self.prox_fold_and_compute();
+            }
+        }
+    }
+
     /// `λ·g(W)` for objective reporting.
     pub fn reg_value(&self, w: &Mat) -> f64 {
         self.reg.lock().unwrap().value(w)
+    }
+
+    /// Capture the server's complete state at WAL horizon `seq`. Called
+    /// by the checkpointer with the quiesce gate's write side held, so no
+    /// commit or prox is mid-flight: the capture is consistent with
+    /// exactly the operations logged so far.
+    pub(crate) fn capture_snapshot(
+        &self,
+        seq: u64,
+        rng_streams: Vec<(u64, RngState)>,
+    ) -> ServerSnapshot {
+        let reg = self.reg.lock().unwrap();
+        let pending: Vec<Option<Vec<f64>>> =
+            self.pending.iter().map(|slot| slot.lock().unwrap().clone()).collect();
+        ServerSnapshot {
+            seq,
+            eta: self.eta,
+            prox_every: self.prox_every,
+            version: self.state.version(),
+            col_versions: (0..self.state.t()).map(|t| self.state.col_version(t)).collect(),
+            applied_k: self.applied_k.iter().map(|a| a.load(Ordering::Acquire)).collect(),
+            v: self.state.snapshot(),
+            pending,
+            prox_count: self.prox_count.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            uncounted_commits: self.uncounted_commits.load(Ordering::Acquire),
+            reg: reg.snapshot_parts(),
+            rng_streams,
+        }
+    }
+
+    /// Rebuild a server from a snapshot: shared state (values *and*
+    /// version counters), regularizer (online factorization and resvd
+    /// counter included, so the drift bound continues instead of
+    /// resetting), pending slots, dedup keys, and metrics counters. The
+    /// result has no checkpointer/registry attached and no PJRT prox
+    /// (re-attach what the deployment needs).
+    pub fn from_snapshot(snap: &ServerSnapshot) -> CentralServer {
+        let state = Arc::new(SharedState::restore(&snap.v, &snap.col_versions, snap.version));
+        let reg = Regularizer::from_snapshot(&snap.reg);
+        let online = reg.uses_online_svd();
+        CentralServer {
+            state,
+            reg: Mutex::new(reg),
+            online,
+            eta: snap.eta,
+            prox_every: snap.prox_every,
+            cache: RwLock::new(None),
+            prox_gate: Mutex::new(()),
+            prox_count: AtomicU64::new(snap.prox_count),
+            coalesced: AtomicU64::new(snap.coalesced),
+            uncounted_commits: AtomicU64::new(snap.uncounted_commits),
+            pending: snap.pending.iter().cloned().map(Mutex::new).collect(),
+            applied_k: snap.applied_k.iter().map(|&k| AtomicU64::new(k)).collect(),
+            persist: None,
+            wal_replayed: AtomicU64::new(0),
+            registry: None,
+            pjrt_prox: None,
+        }
     }
 
     /// The final primal iterate `W* = Prox_{ηλg}(V*)` (one extra backward
@@ -370,9 +583,9 @@ mod tests {
         let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3).with_online_svd(&m);
         let srv = CentralServer::new(state, reg, 0.2);
         // Three commits to one block before any prox: two coalesce away.
-        for _ in 0..3 {
+        for k in 0..3 {
             let u = rng.normal_vec(6);
-            srv.commit_update(0, &u, 0.5);
+            srv.commit_update(0, k, &u, 0.5).unwrap();
         }
         assert_eq!(srv.coalesced_count(), 2);
         // The prox still matches the exact backward step of the current V.
@@ -400,9 +613,10 @@ mod tests {
         );
         for step in 0..12 {
             let t = step % 4;
+            let k = (step / 4) as u64;
             let u = rng.normal_vec(8);
-            exact.commit_update(t, &u, 0.6);
-            online.commit_update(t, &u, 0.6);
+            exact.commit_update(t, k, &u, 0.6).unwrap();
+            online.commit_update(t, k, &u, 0.6).unwrap();
             let a = exact.prox_matrix();
             let b = online.prox_matrix();
             assert!(
@@ -417,6 +631,23 @@ mod tests {
             exact.final_w().max_abs_diff(&online.final_w()) < 1e-7,
             "final iterates must agree"
         );
+    }
+
+    #[test]
+    fn duplicate_commits_are_acknowledged_not_reapplied() {
+        let srv = server_with(RegularizerKind::L21, 0.1, 0.1, 3, 2);
+        let v1 = srv.commit_update(0, 0, &[1.0, 0.0, 0.0], 0.5).unwrap();
+        assert_eq!(v1, 1);
+        let col_after = srv.state().read_col(0);
+        // A resend of activation 0 must not move the state.
+        let v2 = srv.commit_update(0, 0, &[9.0, 9.0, 9.0], 0.5).unwrap();
+        assert_eq!(v2, 1, "duplicate acks the current version");
+        assert_eq!(srv.state().read_col(0), col_after);
+        assert_eq!(srv.applied_commits(0), 1);
+        // The next activation applies normally.
+        assert_eq!(srv.commit_update(0, 1, &[1.0, 1.0, 1.0], 1.0).unwrap(), 2);
+        // Dedup is per column: the same counter on another column applies.
+        assert_eq!(srv.commit_update(1, 0, &[2.0, 2.0, 2.0], 1.0).unwrap(), 3);
     }
 
     #[test]

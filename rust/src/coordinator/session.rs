@@ -26,6 +26,7 @@
 
 use super::metrics::{Recorder, RunResult};
 use super::problem::MtlProblem;
+use super::registry::NodeRegistry;
 use super::schedule::{Async, Schedule};
 use super::server::CentralServer;
 use super::state::SharedState;
@@ -33,11 +34,13 @@ use super::step_size::{KmSchedule, StepController};
 use super::worker::{TrajectorySink, WorkerCtx};
 use crate::net::{DelayModel, FaultModel};
 use crate::optim::svd::SvdMode;
+use crate::persist::{Checkpointer, PersistConfig};
 use crate::runtime::{ComputePool, Engine, TaskCompute};
 use crate::transport::{InProc, TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use crate::util::Rng;
 use anyhow::Result;
 use std::net::SocketAddr;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -77,6 +80,19 @@ pub struct RunConfig {
     pub resvd_every: u64,
     /// Root seed for the run's deterministic per-node RNG streams.
     pub seed: u64,
+    /// Durability: when set, the central server checkpoints to this
+    /// directory (snapshots + a commit WAL fsync'd before each ack).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Commits between snapshot rotations.
+    pub checkpoint_every: u64,
+    /// Resume from `checkpoint_dir` instead of starting fresh: the
+    /// server is rebuilt from the latest valid snapshot + WAL replay,
+    /// and workers skip the activations already applied to their column.
+    pub resume: bool,
+    /// Elastic-membership heartbeat interval; nodes silent for
+    /// [`HEARTBEAT_TIMEOUT_FACTOR`] intervals are evicted. `None` =
+    /// membership disabled.
+    pub heartbeat: Option<Duration>,
 }
 
 impl Default for RunConfig {
@@ -95,6 +111,10 @@ impl Default for RunConfig {
             svd: SvdMode::default(),
             resvd_every: DEFAULT_RESVD_EVERY,
             seed: 7,
+            checkpoint_dir: None,
+            checkpoint_every: crate::persist::DEFAULT_SNAPSHOT_EVERY,
+            resume: false,
+            heartbeat: None,
         }
     }
 }
@@ -103,6 +123,11 @@ impl Default for RunConfig {
 /// that refresh cost amortizes away, shallow enough that drift stays far
 /// below the 1e-8 verification tolerance (see `docs/PERFORMANCE.md`).
 pub const DEFAULT_RESVD_EVERY: u64 = 64;
+
+/// A node is evicted after this many missed heartbeat intervals: tight
+/// enough that a dead node stops gating a run quickly, loose enough that
+/// one slow heartbeat round-trip is never read as death.
+pub const HEARTBEAT_TIMEOUT_FACTOR: u32 = 3;
 
 impl RunConfig {
     /// The paper's AMTL-k / SMTL-k network setting: delay offset of
@@ -117,29 +142,68 @@ impl RunConfig {
     }
 
     /// Assemble the server side of a run — shared state `V`, the central
-    /// server (regularizer, prox stride, optional online-SVD seeding), and
-    /// the trajectory recorder with its initial sample. This is the ONE
-    /// construction path for both [`Session::run`] and the standalone
-    /// `amtl --serve` process, so the two cannot drift apart.
+    /// server (regularizer, prox stride, optional online-SVD seeding,
+    /// optional durability + membership), and the trajectory recorder with
+    /// its initial sample. This is the ONE construction path for both
+    /// [`Session::run`] and the standalone `amtl --serve` process, so the
+    /// two cannot drift apart. With `resume` set, the server is rebuilt
+    /// from `checkpoint_dir` (latest valid snapshot + WAL replay) instead
+    /// of starting from zero.
     pub fn build_server(
         &self,
         problem: &MtlProblem,
-    ) -> (Arc<SharedState>, Arc<CentralServer>, Arc<Recorder>) {
-        let state = Arc::new(SharedState::zeros(problem.d(), problem.t()));
-        let mut reg = problem.regularizer();
-        if self.svd == SvdMode::Online && reg.kind == crate::optim::prox::RegularizerKind::Nuclear
-        {
-            reg = reg
-                .with_online_svd(&state.snapshot())
-                .with_resvd_every(self.resvd_every);
+    ) -> Result<(Arc<SharedState>, Arc<CentralServer>, Arc<Recorder>)> {
+        let mut server = if self.resume {
+            let dir = self
+                .checkpoint_dir
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("resume requires a checkpoint_dir"))?;
+            let recovered =
+                crate::persist::recover(PersistConfig::new(dir, self.checkpoint_every))?;
+            let server = recovered.server;
+            anyhow::ensure!(
+                server.state().d() == problem.d() && server.state().t() == problem.t(),
+                "checkpoint is {}x{} but the problem is {}x{} — resumed runs must use \
+                 the original data/problem options",
+                server.state().d(),
+                server.state().t(),
+                problem.d(),
+                problem.t()
+            );
+            server
+        } else {
+            let state = Arc::new(SharedState::zeros(problem.d(), problem.t()));
+            let mut reg = problem.regularizer();
+            if self.svd == SvdMode::Online
+                && reg.kind == crate::optim::prox::RegularizerKind::Nuclear
+            {
+                reg = reg
+                    .with_online_svd(&state.snapshot())
+                    .with_resvd_every(self.resvd_every);
+            }
+            let mut server = CentralServer::new(Arc::clone(&state), reg, problem.eta)
+                .with_prox_every(self.prox_every);
+            if let Some(dir) = &self.checkpoint_dir {
+                let cp = Arc::new(Checkpointer::create(PersistConfig::new(
+                    dir,
+                    self.checkpoint_every,
+                ))?);
+                cp.set_rng_stream(0, Rng::new(self.seed).state());
+                server = server.with_checkpointer(cp)?;
+            }
+            server
+        };
+        if let Some(interval) = self.heartbeat {
+            server = server.with_registry(Arc::new(NodeRegistry::new(
+                problem.t(),
+                interval * HEARTBEAT_TIMEOUT_FACTOR,
+            )));
         }
-        let server = Arc::new(
-            CentralServer::new(Arc::clone(&state), reg, problem.eta)
-                .with_prox_every(self.prox_every),
-        );
+        let server = Arc::new(server);
+        let state = Arc::clone(server.state());
         let recorder = Arc::new(Recorder::new(self.record_every));
-        recorder.record_now(0, state.snapshot());
-        (state, server, recorder)
+        recorder.record_now(state.version(), state.snapshot());
+        Ok((state, server, recorder))
     }
 
     /// Validate parameter ranges (called by [`SessionBuilder::build`]).
@@ -156,6 +220,13 @@ impl RunConfig {
             );
         }
         anyhow::ensure!(self.dyn_window >= 1, "dyn_window must be >= 1");
+        anyhow::ensure!(
+            !self.resume || self.checkpoint_dir.is_some(),
+            "resume requires a checkpoint_dir"
+        );
+        if let Some(interval) = self.heartbeat {
+            anyhow::ensure!(!interval.is_zero(), "heartbeat interval must be positive");
+        }
         Ok(())
     }
 }
@@ -308,6 +379,34 @@ impl<'p> SessionBuilder<'p> {
         self
     }
 
+    /// Durability: checkpoint the central server into `dir` (`None`
+    /// disables; the default).
+    pub fn checkpoint_dir(mut self, dir: Option<PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = dir;
+        self
+    }
+
+    /// Commits between snapshot rotations (default
+    /// [`crate::persist::DEFAULT_SNAPSHOT_EVERY`]).
+    pub fn checkpoint_every(mut self, every: u64) -> Self {
+        self.cfg.checkpoint_every = every;
+        self
+    }
+
+    /// Resume from the checkpoint directory instead of starting fresh.
+    pub fn resume(mut self, resume: bool) -> Self {
+        self.cfg.resume = resume;
+        self
+    }
+
+    /// Elastic-membership heartbeat interval (`None` disables; the
+    /// default). Nodes silent for [`HEARTBEAT_TIMEOUT_FACTOR`] intervals
+    /// are evicted and stop gating any schedule.
+    pub fn heartbeat(mut self, interval: Option<Duration>) -> Self {
+        self.cfg.heartbeat = interval;
+        self
+    }
+
     /// How workers reach the central server (default
     /// [`TransportKind::InProc`]). [`TransportKind::Tcp`] spawns a
     /// loopback TCP server around the session's central server and routes
@@ -380,7 +479,7 @@ impl<'p> Session<'p> {
         // standalone serve process, via the same helper): state, server
         // with the problem's regularizer, recorder, step controller, and
         // the root RNG that forks one stream per task node.
-        let (state, server, recorder) = cfg.build_server(problem);
+        let (state, server, recorder) = cfg.build_server(problem)?;
         let controller = Arc::new(StepController::new(
             cfg.km,
             cfg.dynamic_step,
@@ -409,7 +508,15 @@ impl<'p> Session<'p> {
             endpoint,
             controller,
             recorder: Arc::clone(&recorder),
-            root_rng: Rng::new(cfg.seed),
+            // The root stream the per-node streams fork from. A durable
+            // run persists it (stream 0), so a resumed run derives the
+            // SAME worker streams as the original even if the resume
+            // command line carries a different seed.
+            root_rng: server
+                .checkpointer()
+                .and_then(|cp| cp.rng_stream(0))
+                .map(Rng::from_state)
+                .unwrap_or_else(|| Rng::new(cfg.seed)),
             forked: 0,
         };
         let stats = self.schedule.orchestrate(&mut orch)?;
@@ -461,6 +568,9 @@ impl<'p> Session<'p> {
                 .collect(),
             compute_secs: stats.iter().map(|s| s.compute_secs).sum(),
             backward_wait_secs: stats.iter().map(|s| s.backward_wait_secs).sum(),
+            checkpoints_written: server.checkpoints_written(),
+            wal_replayed: server.wal_replayed(),
+            evicted_nodes: server.registry().map(|r| r.evicted_nodes()).unwrap_or_default(),
         })
     }
 }
@@ -519,6 +629,12 @@ impl<'r> Orchestrator<'r> {
         Arc::clone(&self.recorder)
     }
 
+    /// The run's membership registry, when heartbeats are enabled
+    /// (schedules hook eviction callbacks here).
+    pub fn registry(&self) -> Option<Arc<NodeRegistry>> {
+        self.server.registry().cloned()
+    }
+
     /// A fresh channel to this run's central server: direct calls for the
     /// in-proc session, a new socket (own connection, own framing) for the
     /// TCP session. Schedules use this for commit paths that are not tied
@@ -554,6 +670,8 @@ impl<'r> Orchestrator<'r> {
                     }),
                     rng: self.root_rng.fork(t as u64),
                     gate: None,
+                    heartbeat: self.cfg.heartbeat,
+                    resume: self.cfg.resume,
                 })
             })
             .collect()

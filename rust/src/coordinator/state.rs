@@ -55,6 +55,20 @@ impl SharedState {
         SharedState::new(&Mat::zeros(d, t))
     }
 
+    /// Rebuild shared state from a persisted snapshot: values *and*
+    /// version counters, so a resumed run's prox cache keys, trajectory
+    /// stride, and progress accounting continue where they left off.
+    pub(crate) fn restore(initial: &Mat, col_versions: &[u64], version: u64) -> SharedState {
+        assert_eq!(col_versions.len(), initial.cols());
+        let cols = (0..initial.cols())
+            .map(|c| ColBlock {
+                values: Mutex::new(initial.col(c).to_vec()),
+                version: AtomicU64::new(col_versions[c]),
+            })
+            .collect();
+        SharedState { d: initial.rows(), cols, version: AtomicU64::new(version) }
+    }
+
     /// Feature dimension `d`.
     pub fn d(&self) -> usize {
         self.d

@@ -74,6 +74,15 @@ pub struct WorkerCtx {
     /// Bounded-staleness gate (the `SemiSync` schedule); `None` = fully
     /// asynchronous.
     pub gate: Option<Arc<StalenessGate>>,
+    /// Heartbeat interval for elastic membership: long delay sleeps and
+    /// gate waits are chunked to this stride so the node keeps proving
+    /// liveness (and learns it was evicted, re-registering). `None` =
+    /// membership disabled.
+    pub heartbeat: Option<Duration>,
+    /// Resume a restarted node: skip the activations the server already
+    /// has applied for this column (reported by `Register`) instead of
+    /// redoing them.
+    pub resume: bool,
 }
 
 /// Per-worker outcome.
@@ -95,6 +104,9 @@ pub struct WorkerStats {
     /// Objective values of `ℓ_t` observed at each forward step (free —
     /// the fused kernels return them).
     pub last_task_loss: f64,
+    /// Activations spent inside a silent crash/restart window
+    /// (`FaultModel::CrashRestart`): the node was down, nothing ran.
+    pub offline: u64,
 }
 
 /// Deactivates a node's staleness-gate slot on drop — including a panic
@@ -119,8 +131,11 @@ pub fn run_worker(mut ctx: WorkerCtx, compute: &mut dyn TaskCompute) -> Result<W
     // no peer blocks on a dead node.
     let gate_guard = ctx.gate.clone().map(|gate| GateGuard { gate, t: ctx.t });
     let result = worker_loop(&mut ctx, compute);
-    // Unblock peers first, then tear the transport down politely.
+    // Unblock peers first, then depart membership and tear the transport
+    // down politely (both best-effort — a vanished server is not an
+    // error on the way out).
     drop(gate_guard);
+    let _ = ctx.transport.leave(ctx.t);
     let _ = ctx.transport.close();
     result
 }
@@ -132,6 +147,8 @@ pub(crate) enum Activation {
     Crashed,
     /// The compute ran but the update was lost in transit.
     Dropped,
+    /// The node is inside a silent-down window: nothing ran at all.
+    Offline,
     /// A forward-step update ready to commit.
     Update(Vec<f64>),
 }
@@ -154,11 +171,16 @@ pub(crate) fn run_activation(
     if outcome == FaultOutcome::Crashed {
         return Ok(Activation::Crashed);
     }
+    if outcome == FaultOutcome::Offline {
+        stats.offline += 1;
+        return Ok(Activation::Offline);
+    }
 
-    // 1. Simulated network delay for this activation.
+    // 1. Simulated network delay for this activation (heartbeating
+    //    through long waits so the node is not spuriously evicted).
     let sample = ctx.delay.sample(ctx.t, &mut ctx.rng);
     if sample.duration > Duration::ZERO {
-        std::thread::sleep(sample.duration);
+        sleep_heartbeating(ctx, sample.duration);
     }
     stats.total_delay_secs += sample.duration.as_secs_f64();
     let units = sample.duration.as_secs_f64() / ctx.time_scale.as_secs_f64().max(1e-12);
@@ -188,12 +210,70 @@ pub(crate) fn run_activation(
     Ok(Activation::Update(u))
 }
 
+/// Sleep `total`, chunked to the heartbeat interval so a long injected
+/// delay keeps proving liveness; a node that learns it was evicted
+/// rejoins by re-registering.
+fn sleep_heartbeating(ctx: &mut WorkerCtx, total: Duration) {
+    let Some(interval) = ctx.heartbeat else {
+        std::thread::sleep(total);
+        return;
+    };
+    let mut remaining = total;
+    loop {
+        let nap = remaining.min(interval);
+        std::thread::sleep(nap);
+        remaining = remaining.saturating_sub(nap);
+        if remaining.is_zero() {
+            return;
+        }
+        if let Ok(false) = ctx.transport.heartbeat(ctx.t) {
+            let _ = ctx.transport.register(ctx.t);
+        }
+    }
+}
+
 fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<WorkerStats> {
     let mut stats = WorkerStats::default();
-    for k in 0..ctx.iters {
-        // Bounded staleness: wait until activation `k` is allowed.
-        if let Some(g) = &ctx.gate {
-            g.wait_to_start(k as u64);
+    // Join the run. Without a registry this is a cheap ack that still
+    // reports the column's applied-commit horizon — which is exactly
+    // where a restarted node resumes when `resume` is set.
+    let ack = ctx.transport.register(ctx.t)?;
+    let start = if ctx.resume { ack.col_version.min(ctx.iters as u64) as usize } else { 0 };
+    let mut was_offline = false;
+    for k in start..ctx.iters {
+        // Silent-down window (crash/restart fault): the node is simply
+        // not there — no gate interaction, no heartbeat, no compute.
+        // Wall-clock passes so timeout eviction can observe the silence.
+        if ctx.faults.offline_at(ctx.t, k as u64) {
+            stats.offline += 1;
+            std::thread::sleep(ctx.heartbeat.unwrap_or(ctx.time_scale));
+            was_offline = true;
+            continue;
+        }
+        if was_offline {
+            // Back from the dead: rejoin membership (the server very
+            // likely evicted us during the silence).
+            was_offline = false;
+            let _ = ctx.transport.register(ctx.t);
+        }
+
+        // Bounded staleness: wait until activation `k` is allowed —
+        // heartbeating while parked, so a slow-but-alive federation
+        // never reads as dead (and so *somebody* keeps sweeping the
+        // registry while everyone waits on a silent straggler).
+        if let Some(g) = ctx.gate.clone() {
+            match ctx.heartbeat {
+                Some(interval) => {
+                    let t = ctx.t;
+                    let transport = ctx.transport.as_mut();
+                    g.wait_to_start_ticking(k as u64, interval, || {
+                        if let Ok(false) = transport.heartbeat(t) {
+                            let _ = transport.register(t);
+                        }
+                    });
+                }
+                None => g.wait_to_start(k as u64),
+            }
         }
 
         let t = ctx.t;
@@ -202,12 +282,13 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
                 stats.crashed = true;
                 break;
             }
-            Activation::Dropped => {}
+            Activation::Dropped | Activation::Offline => {}
             Activation::Update(u) => {
                 // KM relaxation on this task block, committed through the
-                // transport (shared memory or the wire).
+                // transport (shared memory or the wire). `k` is the dedup
+                // key that makes transport resends exactly-once.
                 let step = ctx.controller.step(ctx.t);
-                let version = ctx.transport.push_update(ctx.t, step, &u)?;
+                let version = ctx.transport.push_update(ctx.t, k as u64, step, &u)?;
                 stats.updates += 1;
                 if let Some(sink) = &ctx.sink {
                     sink.record(version);
@@ -274,6 +355,8 @@ mod tests {
             sink: sink(&server, 1),
             rng: Rng::new(121),
             gate: None,
+            heartbeat: None,
+            resume: false,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert_eq!(stats.updates, 7);
@@ -298,6 +381,8 @@ mod tests {
             sink: sink(&server, 1000),
             rng: Rng::new(123),
             gate: None,
+            heartbeat: None,
+            resume: false,
         };
         run_worker(ctx, &mut compute).unwrap();
         let w1 = server.prox_col(0);
@@ -328,6 +413,8 @@ mod tests {
             sink: sink(&server, 1000),
             rng: Rng::new(125),
             gate: None,
+            heartbeat: None,
+            resume: false,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert!((stats.total_delay_secs - 0.06).abs() < 0.02);
@@ -364,6 +451,8 @@ mod tests {
                 sink: None,
                 rng: Rng::new(127),
                 gate: None,
+                heartbeat: None,
+                resume: false,
             };
             let stats = run_worker(ctx, &mut compute).unwrap();
             assert_eq!(stats.updates, 12);

@@ -86,6 +86,7 @@ impl ExpConfig {
             svd: self.svd,
             resvd_every: self.resvd_every,
             seed: self.seed,
+            ..Default::default()
         }
     }
 }

@@ -52,6 +52,24 @@
 //!   concurrent `PushUpdate`/`FetchProxCol` traffic never serializes on a
 //!   server-wide lock, and back-to-back commits from one task coalesce.
 //!
+//! ## Durability & elastic membership
+//!
+//! A production run must survive its own infrastructure ([`persist`],
+//! [`coordinator::registry`], `docs/ARCHITECTURE.md` § "Durability &
+//! membership"):
+//!
+//! * the central server checkpoints to disk — versioned, checksummed
+//!   snapshots plus a commit WAL fsync'd before each acknowledgement —
+//!   and `amtl --serve … --checkpoint-dir D` can be SIGKILL'd and
+//!   restarted with `--resume`, recovering bitwise-identical state for a
+//!   sequential run (snapshot + WAL replay);
+//! * commits carry the node's activation counter, so at-least-once
+//!   transport retries and post-restart replays are **exactly-once**;
+//! * task nodes `Register`, `Heartbeat`, and `Leave` over the wire; a
+//!   node that dies silently is evicted on a timeout (`--heartbeat-ms`)
+//!   and stops gating every schedule, and a restarted node rejoins and
+//!   catches up from its applied-commit horizon.
+//!
 //! Also see the `amtl` CLI (`rust/src/main.rs`), the runnable
 //! `examples/`, and `docs/ARCHITECTURE.md` for the paper-to-code map.
 
@@ -64,6 +82,7 @@ pub mod data;
 pub mod linalg;
 pub mod net;
 pub mod optim;
+pub mod persist;
 pub mod runtime;
 pub mod transport;
 pub mod util;

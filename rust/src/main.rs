@@ -163,6 +163,17 @@ RUN OPTIONS:
   --artifacts-dir PATH                             [artifacts]
   --record-every K  trajectory sampling stride      [max(1, T*iters/50)]
   --seed S                                         [7]
+
+DURABILITY & MEMBERSHIP (train + distributed modes):
+  --checkpoint-dir D   checkpoint the central server into D: versioned
+                       snapshots + a commit WAL fsync'd before every ack
+  --checkpoint-every K commits between snapshot rotations    [256]
+  --resume             recover from --checkpoint-dir (latest valid
+                       snapshot + WAL replay) instead of starting fresh;
+                       on --node: skip commits the server already has
+  --heartbeat-ms MS    elastic membership: nodes heartbeat every MS ms
+                       and are evicted after 3 missed intervals (0 = off)
+                       [0]
 ";
 
 /// Assemble the dataset from CLI options.
@@ -204,6 +215,10 @@ struct RunOpts {
     record_every: u64,
     transport: TransportKind,
     seed: u64,
+    checkpoint_dir: Option<std::path::PathBuf>,
+    checkpoint_every: u64,
+    resume: bool,
+    heartbeat: Option<Duration>,
 }
 
 fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
@@ -231,6 +246,14 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
         record_every: opts.get_u64("record-every", default_record)?,
         transport: TransportKind::parse(&transport).expect("get_one_of validated the value"),
         seed: opts.get_u64("seed", 7)?,
+        checkpoint_dir: opts.get("checkpoint-dir").map(std::path::PathBuf::from),
+        checkpoint_every: opts
+            .get_u64("checkpoint-every", amtl::persist::DEFAULT_SNAPSHOT_EVERY)?,
+        resume: opts.flag("resume"),
+        heartbeat: match opts.get_u64("heartbeat-ms", 0)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
     })
 }
 
@@ -255,6 +278,10 @@ fn session<'p>(
         .svd(ro.svd)
         .resvd_every(ro.resvd_every)
         .seed(ro.seed)
+        .checkpoint_dir(ro.checkpoint_dir.clone())
+        .checkpoint_every(ro.checkpoint_every)
+        .resume(ro.resume)
+        .heartbeat(ro.heartbeat)
         .paper_offset(ro.offset)
         .transport(ro.transport)
         .schedule_box(schedule)
@@ -370,9 +397,23 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         svd: ro.svd,
         resvd_every: ro.resvd_every,
         seed: ro.seed,
+        checkpoint_dir: ro.checkpoint_dir.clone(),
+        checkpoint_every: ro.checkpoint_every,
+        resume: ro.resume,
+        heartbeat: ro.heartbeat,
         ..Default::default()
     };
-    let (state, server, recorder) = cfg.build_server(&problem);
+    let (state, server, recorder) = cfg.build_server(&problem)?;
+    if ro.resume {
+        println!(
+            "resumed from {}: {} updates already applied ({} wal entries replayed)",
+            ro.checkpoint_dir.as_ref().map(|d| d.display().to_string()).unwrap_or_default(),
+            state.version(),
+            server.wal_replayed(),
+        );
+    } else if let Some(dir) = &ro.checkpoint_dir {
+        println!("checkpointing to {} (snapshot every {} commits)", dir.display(), ro.checkpoint_every);
+    }
     let mut handle = TcpServer::spawn(&addr, Arc::clone(&server), Some(Arc::clone(&recorder)))?;
 
     let expected = (t_count * ro.iters) as u64;
@@ -395,15 +436,39 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     let mut last_progress = (0u64, std::time::Instant::now());
     loop {
         std::thread::sleep(Duration::from_millis(100));
+        // With membership enabled the serve loop is the traffic-free
+        // poller: sweep so silent nodes are evicted even when no other
+        // node's request would have done it.
+        if let Some(registry) = server.registry() {
+            for t in registry.sweep() {
+                println!(
+                    "  node {t} evicted (silent past the heartbeat timeout); \
+                     not waiting for its remaining budget"
+                );
+            }
+        }
         let v = state.version();
         if v >= last_report + report_stride && v < expected {
             println!("  {v}/{expected} updates committed");
             last_report = v;
         }
-        // Exit on per-node counts, not the global version: the at-least-
-        // once PushUpdate resend can double-apply on ONE node, and that
-        // must not end the run while other nodes still have budget left.
-        if (0..t_count).all(|t| state.col_version(t) >= ro.iters as u64) {
+        // Exit on per-node progress: a node is done when its budget is
+        // committed, or when membership says it is gone (evicted on
+        // timeout, or departed politely without finishing).
+        let node_done = |t: usize| {
+            state.col_version(t) >= ro.iters as u64
+                || server
+                    .registry()
+                    .map(|r| {
+                        matches!(
+                            r.status(t),
+                            amtl::coordinator::NodeStatus::Evicted
+                                | amtl::coordinator::NodeStatus::Left
+                        )
+                    })
+                    .unwrap_or(false)
+        };
+        if (0..t_count).all(node_done) {
             break;
         }
         // No hard timeout (node budgets are theirs to pace), but surface a
@@ -421,14 +486,27 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
             last_progress = (v, std::time::Instant::now());
         }
     }
-    // Let trailing Pushed responses flush before tearing connections down.
-    // (Residual at-least-once caveat: a node whose own update was double-
-    // applied by a resend finishes its last logical activation during this
-    // grace window — or reports a push failure, with the run itself fine.)
+    // Let trailing Pushed responses flush before tearing connections
+    // down. (Commits are exactly-once — resends are deduplicated on the
+    // node's activation counter — so this grace window is only about
+    // letting final responses reach their nodes.)
     std::thread::sleep(Duration::from_millis(500));
+    // Durability epilogue: fsync the WAL and cut a final snapshot so a
+    // later `--resume` (or offline inspection) sees the finished state.
+    server.sync_persist()?;
+    if let Some(cp) = server.checkpointer() {
+        cp.checkpoint_now(&server)?;
+    }
     handle.shutdown();
 
     println!("run complete: {} updates, {} proxes", state.version(), server.prox_count());
+    if server.checkpoints_written() > 0 || server.wal_replayed() > 0 {
+        println!(
+            "  durability: {} checkpoints written, {} wal entries replayed at startup",
+            server.checkpoints_written(),
+            server.wal_replayed()
+        );
+    }
     for t in 0..t_count {
         println!("  node {t}: {} updates", state.col_version(t));
     }
@@ -514,6 +592,11 @@ fn cmd_node(opts: &Opts) -> Result<()> {
         sink: None,
         rng: node_rng,
         gate: None,
+        // The worker registers on start and heartbeats through long
+        // delays; with --resume it skips the commits the server already
+        // has (a restarted node catches up instead of redoing work).
+        heartbeat: ro.heartbeat,
+        resume: ro.resume,
     };
     let stats = run_worker(ctx, compute.as_mut())?;
     println!(

@@ -10,6 +10,11 @@
 //!   no update (retry next activation).
 //! * `CrashAfter` — the node dies permanently after a given number of
 //!   activations (its block freezes; others continue).
+//! * `CrashRestart` — the node dies *silently* for a window of
+//!   activations, then comes back: no updates, no heartbeats, no polite
+//!   departure — the failure mode only timeout-based eviction
+//!   ([`crate::coordinator::registry::NodeRegistry`]) can detect — and on
+//!   return it re-registers and resumes its budget.
 
 use crate::util::Rng;
 
@@ -21,6 +26,9 @@ pub enum FaultOutcome {
     Dropped,
     /// The node is dead: stop its loop.
     Crashed,
+    /// The node is down for this activation (crash/restart window): no
+    /// compute, no update, no heartbeat — silence, until it ends.
+    Offline,
 }
 
 /// Per-node fault model.
@@ -32,6 +40,9 @@ pub enum FaultModel {
     DropActivation { p: f64 },
     /// Node `node` crashes permanently after `after` activations.
     CrashAfter { node: usize, after: u64 },
+    /// Node `node` dies silently at activation `down_from` and restarts
+    /// `down_for` activations later (a kill-and-resume mid-training).
+    CrashRestart { node: usize, down_from: u64, down_for: u64 },
     /// Compose: first matching non-Ok outcome wins.
     Both { drop_p: f64, crash_node: usize, crash_after: u64 },
 }
@@ -55,6 +66,13 @@ impl FaultModel {
                     FaultOutcome::Ok
                 }
             }
+            FaultModel::CrashRestart { .. } => {
+                if self.offline_at(node, k) {
+                    FaultOutcome::Offline
+                } else {
+                    FaultOutcome::Ok
+                }
+            }
             FaultModel::Both { drop_p, crash_node, crash_after } => {
                 if node == *crash_node && k >= *crash_after {
                     FaultOutcome::Crashed
@@ -65,6 +83,26 @@ impl FaultModel {
                 }
             }
         }
+    }
+
+    /// True when `node` is inside a silent-down window at activation `k`.
+    /// Deterministic (no RNG draw), so the worker loop can check it
+    /// *before* engaging schedule machinery — a down node must not
+    /// heartbeat, and must not advance a staleness gate.
+    pub fn offline_at(&self, node: usize, k: u64) -> bool {
+        match self {
+            FaultModel::CrashRestart { node: n, down_from, down_for } => {
+                node == *n && k >= *down_from && k < down_from.saturating_add(*down_for)
+            }
+            _ => false,
+        }
+    }
+
+    /// True when the model contains a silent crash/restart window (used
+    /// by schedule validation: such a window needs heartbeat eviction to
+    /// avoid stalling barrier-free bounded-staleness runs).
+    pub fn has_silent_window(&self) -> bool {
+        matches!(self, FaultModel::CrashRestart { .. })
     }
 }
 
@@ -99,6 +137,22 @@ mod tests {
         assert_eq!(m.outcome(1, 3, &mut rng), FaultOutcome::Crashed);
         assert_eq!(m.outcome(1, 10, &mut rng), FaultOutcome::Crashed);
         assert_eq!(m.outcome(0, 10, &mut rng), FaultOutcome::Ok);
+    }
+
+    #[test]
+    fn crash_restart_window_is_silent_then_over() {
+        let mut rng = Rng::new(304);
+        let m = FaultModel::CrashRestart { node: 2, down_from: 3, down_for: 4 };
+        assert_eq!(m.outcome(2, 2, &mut rng), FaultOutcome::Ok);
+        for k in 3..7 {
+            assert_eq!(m.outcome(2, k, &mut rng), FaultOutcome::Offline);
+            assert!(m.offline_at(2, k));
+        }
+        assert_eq!(m.outcome(2, 7, &mut rng), FaultOutcome::Ok);
+        assert!(!m.offline_at(2, 7));
+        assert_eq!(m.outcome(0, 4, &mut rng), FaultOutcome::Ok, "other nodes unaffected");
+        assert!(m.has_silent_window());
+        assert!(!FaultModel::None.has_silent_window());
     }
 
     #[test]

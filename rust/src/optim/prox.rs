@@ -181,6 +181,46 @@ impl Regularizer {
             && self.commits_since_refresh >= self.resvd_every
     }
 
+    /// Serialize the regularizer — factorization basis, resvd stride
+    /// counter, and drift metrics included — for a persist snapshot.
+    pub(crate) fn snapshot_parts(&self) -> crate::persist::RegSnapshot {
+        crate::persist::RegSnapshot {
+            kind: self.kind,
+            lambda: self.lambda,
+            gamma: self.gamma,
+            resvd_every: self.resvd_every,
+            commits_since_refresh: self.commits_since_refresh,
+            refreshes: self.refreshes,
+            last_drift: self.last_drift,
+            online: self.online.as_ref().map(|osvd| crate::persist::SvdFactors {
+                u: osvd.u.clone(),
+                sigma: osvd.sigma.clone(),
+                v: osvd.v.clone(),
+            }),
+        }
+    }
+
+    /// Rebuild a regularizer from a persist snapshot. The restored online
+    /// factorization and `commits_since_refresh` counter continue the
+    /// original run's resvd stride — resuming does not reset the drift
+    /// bound.
+    pub(crate) fn from_snapshot(rs: &crate::persist::RegSnapshot) -> Regularizer {
+        Regularizer {
+            kind: rs.kind,
+            lambda: rs.lambda,
+            gamma: rs.gamma,
+            online: rs.online.as_ref().map(|f| OnlineSvd {
+                u: f.u.clone(),
+                sigma: f.sigma.clone(),
+                v: f.v.clone(),
+            }),
+            resvd_every: rs.resvd_every,
+            commits_since_refresh: rs.commits_since_refresh,
+            refreshes: rs.refreshes,
+            last_drift: rs.last_drift,
+        }
+    }
+
     /// Rebuild the online factorization from an exact Jacobi SVD of
     /// `current` (the true matrix), recording the drift the incremental
     /// path had accumulated. No-op unless the online path is active.

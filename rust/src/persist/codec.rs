@@ -1,0 +1,281 @@
+//! Record framing shared by snapshot and WAL files.
+//!
+//! Durable files reuse the wire protocol's codec discipline
+//! (`transport/wire.rs`): little-endian integers, `f64`s as raw bit
+//! patterns, length prefixes bounded before allocation, and the same
+//! FNV-1a 32-bit checksum over every record. A file is
+//!
+//! ```text
+//! ┌───────┬─────────┬─ repeated ─────────────────────────────┐
+//! │ magic │ version │ tag(1B) len(u32) payload crc(u32) ...  │
+//! └───────┴─────────┴────────────────────────────────────────┘
+//! ```
+//!
+//! with `crc = fnv1a32(tag ‖ len ‖ payload)`. Decoding NEVER panics:
+//! truncated or corrupted input returns a [`PersistError`]. A clean EOF at
+//! a record boundary reads as `Ok(None)` — that distinction is what lets
+//! WAL recovery treat a torn tail (the normal crash artifact) differently
+//! from mid-file corruption.
+
+use crate::transport::wire::{fnv1a32, WireError};
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// Snapshot-file magic (`AMTS`nap).
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"AMTS";
+/// WAL-file magic (`AMTW`al).
+pub const WAL_MAGIC: [u8; 4] = *b"AMTW";
+/// On-disk format version; bumped on any incompatible record change.
+pub const FORMAT_VERSION: u8 = 1;
+/// Upper bound on a single record's payload (guards allocation on
+/// corrupted lengths; large state is split across per-column records).
+pub const MAX_RECORD: u32 = 1 << 26;
+
+/// Durable-format decode/IO failure. Malformed input is an error, never a
+/// panic.
+#[derive(Debug)]
+pub enum PersistError {
+    /// Underlying filesystem failure.
+    Io(std::io::Error),
+    /// File did not start with the expected magic.
+    BadMagic([u8; 4]),
+    /// File written by a different (incompatible) format version.
+    BadVersion(u8),
+    /// Unknown record tag.
+    BadTag(u8),
+    /// Declared record length exceeds [`MAX_RECORD`].
+    Oversize(u32),
+    /// FNV checksum mismatch (corrupt record).
+    BadChecksum {
+        /// Checksum computed over the stored record.
+        got: u32,
+        /// Checksum the record claims.
+        want: u32,
+    },
+    /// File ended mid-record (torn write or truncation).
+    Truncated,
+    /// Structurally invalid record payload.
+    Malformed(&'static str),
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "persist io error: {e}"),
+            PersistError::BadMagic(m) => write!(f, "bad file magic {m:02x?}"),
+            PersistError::BadVersion(v) => {
+                write!(f, "unsupported persist format version {v} (expected {FORMAT_VERSION})")
+            }
+            PersistError::BadTag(t) => write!(f, "unknown record tag {t:#04x}"),
+            PersistError::Oversize(n) => {
+                write!(f, "record length {n} exceeds maximum {MAX_RECORD}")
+            }
+            PersistError::BadChecksum { got, want } => {
+                write!(f, "record checksum mismatch: file says {want:#010x}, computed {got:#010x}")
+            }
+            PersistError::Truncated => write!(f, "file ends mid-record (torn write)"),
+            PersistError::Malformed(what) => write!(f, "malformed record: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> PersistError {
+        if e.kind() == ErrorKind::UnexpectedEof {
+            PersistError::Truncated
+        } else {
+            PersistError::Io(e)
+        }
+    }
+}
+
+impl From<WireError> for PersistError {
+    fn from(e: WireError) -> PersistError {
+        match e {
+            WireError::Io(e) => PersistError::from(e),
+            WireError::BadMagic(m) => PersistError::BadMagic(m),
+            WireError::BadVersion(v) => PersistError::BadVersion(v),
+            WireError::BadOpcode(op) => PersistError::BadTag(op),
+            WireError::Oversize(n) => PersistError::Oversize(n),
+            WireError::BadChecksum { got, want } => PersistError::BadChecksum { got, want },
+            WireError::Malformed(what) => PersistError::Malformed(what),
+        }
+    }
+}
+
+/// Write the file header: magic + format version.
+pub fn write_header(w: &mut impl Write, magic: [u8; 4]) -> Result<(), PersistError> {
+    w.write_all(&magic)?;
+    w.write_all(&[FORMAT_VERSION])?;
+    Ok(())
+}
+
+/// Read and validate the file header against `magic`.
+pub fn read_header(r: &mut impl Read, magic: [u8; 4]) -> Result<(), PersistError> {
+    let mut got = [0u8; 4];
+    r.read_exact(&mut got)?;
+    if got != magic {
+        return Err(PersistError::BadMagic(got));
+    }
+    let mut ver = [0u8; 1];
+    r.read_exact(&mut ver)?;
+    if ver[0] != FORMAT_VERSION {
+        return Err(PersistError::BadVersion(ver[0]));
+    }
+    Ok(())
+}
+
+/// Write one checksummed record: tag, length, payload, crc.
+pub fn write_record(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<(), PersistError> {
+    debug_assert!(payload.len() as u64 <= MAX_RECORD as u64);
+    let len = (payload.len() as u32).to_le_bytes();
+    let crc = fnv1a32(&[&[tag], &len, payload]).to_le_bytes();
+    w.write_all(&[tag])?;
+    w.write_all(&len)?;
+    w.write_all(payload)?;
+    w.write_all(&crc)?;
+    Ok(())
+}
+
+/// Read one record, verifying the size bound and checksum. Returns
+/// `Ok(None)` on a clean EOF at a record boundary; a partial record is
+/// [`PersistError::Truncated`] and a checksum mismatch is
+/// [`PersistError::BadChecksum`] — callers decide whether a failure at the
+/// tail is tolerable (WAL recovery) or fatal (snapshot load).
+pub fn read_record(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>, PersistError> {
+    let mut head = [0u8; 5]; // tag, len
+    match read_exact_or_eof(r, &mut head)? {
+        ReadOutcome::Eof => return Ok(None),
+        ReadOutcome::Full => {}
+    }
+    let tag = head[0];
+    let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]);
+    if len > MAX_RECORD {
+        return Err(PersistError::Oversize(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut crc = [0u8; 4];
+    r.read_exact(&mut crc)?;
+    let want = u32::from_le_bytes(crc);
+    let got = fnv1a32(&[&head, &payload]);
+    if got != want {
+        return Err(PersistError::BadChecksum { got, want });
+    }
+    Ok(Some((tag, payload)))
+}
+
+enum ReadOutcome {
+    Full,
+    Eof,
+}
+
+/// Fill `buf` completely, or report a clean EOF if the stream ended
+/// *before the first byte*. EOF mid-buffer is a truncation error.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> Result<ReadOutcome, PersistError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(ReadOutcome::Eof)
+                } else {
+                    Err(PersistError::Truncated)
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_record(tag: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_record(&mut out, tag, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn record_roundtrips() {
+        let bytes = one_record(0x11, b"hello persist");
+        let mut r = std::io::Cursor::new(&bytes);
+        let (tag, payload) = read_record(&mut r).unwrap().unwrap();
+        assert_eq!(tag, 0x11);
+        assert_eq!(payload, b"hello persist");
+        assert!(read_record(&mut r).unwrap().is_none(), "clean EOF after the record");
+    }
+
+    #[test]
+    fn empty_stream_is_clean_eof() {
+        let mut r = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_record(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        let bytes = one_record(0x07, &[9u8; 33]);
+        for cut in 1..bytes.len() {
+            let mut r = std::io::Cursor::new(&bytes[..cut]);
+            assert!(
+                matches!(read_record(&mut r), Err(PersistError::Truncated)),
+                "prefix of {cut}/{} bytes must read as truncated",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_caught() {
+        let bytes = one_record(0x07, &[1, 2, 3, 4, 5, 6, 7]);
+        for pos in 0..bytes.len() {
+            for flip in [0xFFu8, 0x01, 0x80] {
+                let mut bad = bytes.clone();
+                bad[pos] ^= flip;
+                let mut r = std::io::Cursor::new(&bad);
+                // A corrupted length can read as Oversize or Truncated; any
+                // payload/tag/crc damage is a checksum mismatch. All error.
+                assert!(
+                    read_record(&mut r).is_err(),
+                    "corruption at byte {pos} (xor {flip:#x}) must error"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_length_rejected_without_allocating() {
+        let mut bytes = one_record(0x01, &[]);
+        bytes[1..5].copy_from_slice(&(MAX_RECORD + 1).to_le_bytes());
+        let mut r = std::io::Cursor::new(&bytes);
+        assert!(matches!(read_record(&mut r), Err(PersistError::Oversize(_))));
+    }
+
+    #[test]
+    fn header_roundtrips_and_rejects_mismatch() {
+        let mut out = Vec::new();
+        write_header(&mut out, SNAPSHOT_MAGIC).unwrap();
+        assert!(read_header(&mut std::io::Cursor::new(&out), SNAPSHOT_MAGIC).is_ok());
+        assert!(matches!(
+            read_header(&mut std::io::Cursor::new(&out), WAL_MAGIC),
+            Err(PersistError::BadMagic(_))
+        ));
+        let mut bad = out.clone();
+        bad[4] = FORMAT_VERSION + 1;
+        assert!(matches!(
+            read_header(&mut std::io::Cursor::new(&bad), SNAPSHOT_MAGIC),
+            Err(PersistError::BadVersion(_))
+        ));
+        assert!(matches!(
+            read_header(&mut std::io::Cursor::new(&out[..3]), SNAPSHOT_MAGIC),
+            Err(PersistError::Truncated)
+        ));
+    }
+}

@@ -1,0 +1,529 @@
+//! The snapshot format: one durable file capturing
+//! [`CentralServer`](crate::coordinator::server::CentralServer) state end
+//! to end.
+//!
+//! A snapshot holds everything recovery needs to rebuild the server at an
+//! exact WAL horizon (`seq`): the shared matrix `V` with its version
+//! counters, the per-column commit-dedup keys, the pending online-SVD
+//! slots, the full [`Regularizer`](crate::optim::prox::Regularizer) —
+//! including the incremental factorization's basis and the resvd stride
+//! counter, so the online nuclear prox resumes *without* resetting its
+//! drift bound — the run constants (η, prox stride), the server metrics
+//! counters, and any registered RNG streams.
+//!
+//! Files are written atomically (temp file + fsync + rename) and every
+//! record is checksummed; a damaged snapshot reads as an error and
+//! recovery falls back to the previous one.
+
+use super::codec::{
+    read_header, read_record, write_header, write_record, PersistError, SNAPSHOT_MAGIC,
+};
+use crate::linalg::Mat;
+use crate::optim::prox::RegularizerKind;
+use crate::transport::wire::{push_f64s, Cursor};
+use crate::util::RngState;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const TAG_META: u8 = 0x01;
+const TAG_COL_VERSIONS: u8 = 0x02;
+const TAG_APPLIED: u8 = 0x03;
+const TAG_COLUMN: u8 = 0x04;
+const TAG_PENDING: u8 = 0x05;
+const TAG_REG: u8 = 0x06;
+const TAG_FACTOR: u8 = 0x07;
+const TAG_SIGMA: u8 = 0x08;
+const TAG_RNG: u8 = 0x09;
+const TAG_END: u8 = 0x7E;
+
+/// The online-SVD factorization `U diag(σ) Vᵀ`, serialized basis and all.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SvdFactors {
+    /// Left factor (`d × k`).
+    pub u: Mat,
+    /// Retained singular values.
+    pub sigma: Vec<f64>,
+    /// Right factor (`T × k`).
+    pub v: Mat,
+}
+
+/// Serialized [`Regularizer`](crate::optim::prox::Regularizer) state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegSnapshot {
+    /// Which coupling `g` is.
+    pub kind: RegularizerKind,
+    /// Regularization strength λ.
+    pub lambda: f64,
+    /// Elastic-net ℓ2 weight γ.
+    pub gamma: f64,
+    /// Exact-refresh stride (0 = never).
+    pub resvd_every: u64,
+    /// Commits folded since the last exact refresh — preserved so a
+    /// resumed run refreshes on the original stride, not a reset one.
+    pub commits_since_refresh: u64,
+    /// Exact refreshes performed so far.
+    pub refreshes: u64,
+    /// Drift recorded at the last exact refresh.
+    pub last_drift: f64,
+    /// The incremental factorization, when the online path is active.
+    pub online: Option<SvdFactors>,
+}
+
+/// A complete, consistent capture of central-server state at WAL horizon
+/// `seq` (every operation with sequence number ≤ `seq` is inside it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerSnapshot {
+    /// WAL horizon: replay skips entries with `seq` ≤ this.
+    pub seq: u64,
+    /// Prox step size η (a run constant).
+    pub eta: f64,
+    /// Server re-prox stride.
+    pub prox_every: u64,
+    /// Global KM version (total updates applied).
+    pub version: u64,
+    /// Per-column update counters.
+    pub col_versions: Vec<u64>,
+    /// Per-column commit dedup keys (0 = none applied, else `k + 1`).
+    pub applied_k: Vec<u64>,
+    /// The shared auxiliary matrix `V`.
+    pub v: Mat,
+    /// Per-column pending slots awaiting their online-SVD fold.
+    pub pending: Vec<Option<Vec<f64>>>,
+    /// Proximal computations performed.
+    pub prox_count: u64,
+    /// Same-column commits coalesced before folding.
+    pub coalesced: u64,
+    /// Raw commits not yet handed to the refresh-stride counter.
+    pub uncounted_commits: u64,
+    /// The regularizer, factorization included.
+    pub reg: RegSnapshot,
+    /// Named RNG streams (id → exact generator state); which streams are
+    /// stored is the embedding run's choice. The in-proc session stores
+    /// its *root* stream as id 0 — the state worker streams fork from —
+    /// so a resumed run reproduces the original run's per-node streams
+    /// regardless of the seed on the resume command line.
+    pub rng_streams: Vec<(u64, RngState)>,
+}
+
+fn kind_code(kind: RegularizerKind) -> u8 {
+    match kind {
+        RegularizerKind::Nuclear => 0,
+        RegularizerKind::L21 => 1,
+        RegularizerKind::L1 => 2,
+        RegularizerKind::ElasticNet => 3,
+        RegularizerKind::None => 4,
+    }
+}
+
+fn kind_from_code(code: u8) -> Result<RegularizerKind, PersistError> {
+    Ok(match code {
+        0 => RegularizerKind::Nuclear,
+        1 => RegularizerKind::L21,
+        2 => RegularizerKind::L1,
+        3 => RegularizerKind::ElasticNet,
+        4 => RegularizerKind::None,
+        _ => return Err(PersistError::Malformed("unknown regularizer kind code")),
+    })
+}
+
+fn push_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    out.reserve(xs.len() * 8);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn mat_payload(which: u8, m: &Mat) -> Vec<u8> {
+    let mut out = Vec::with_capacity(9 + m.rows() * m.cols() * 8);
+    out.push(which);
+    out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    push_f64s(&mut out, m.data());
+    out
+}
+
+fn mat_from_payload(payload: &[u8]) -> Result<(u8, Mat), PersistError> {
+    let mut c = Cursor::new(payload);
+    let which = c.u8()?;
+    let rows = c.u32()? as usize;
+    let cols = c.u32()? as usize;
+    let data = c.rest_f64s()?;
+    c.finish()?;
+    if data.len() != rows * cols {
+        return Err(PersistError::Malformed("factor data does not match its dimensions"));
+    }
+    let mut m = Mat::zeros(rows, cols);
+    m.data_mut().copy_from_slice(&data);
+    Ok((which, m))
+}
+
+impl ServerSnapshot {
+    /// Serialize to `w` (header + records + end marker).
+    pub fn encode(&self, w: &mut impl Write) -> Result<(), PersistError> {
+        let d = self.v.rows();
+        let t = self.v.cols();
+        write_header(w, SNAPSHOT_MAGIC)?;
+
+        let mut meta = Vec::with_capacity(64);
+        push_u64s(&mut meta, &[self.seq]);
+        meta.extend_from_slice(&(d as u32).to_le_bytes());
+        meta.extend_from_slice(&(t as u32).to_le_bytes());
+        meta.extend_from_slice(&self.eta.to_bits().to_le_bytes());
+        push_u64s(
+            &mut meta,
+            &[self.prox_every, self.version, self.prox_count, self.coalesced, self.uncounted_commits],
+        );
+        write_record(w, TAG_META, &meta)?;
+
+        let mut vers = Vec::new();
+        push_u64s(&mut vers, &self.col_versions);
+        write_record(w, TAG_COL_VERSIONS, &vers)?;
+
+        let mut applied = Vec::new();
+        push_u64s(&mut applied, &self.applied_k);
+        write_record(w, TAG_APPLIED, &applied)?;
+
+        for c in 0..t {
+            let mut payload = Vec::with_capacity(4 + d * 8);
+            payload.extend_from_slice(&(c as u32).to_le_bytes());
+            push_f64s(&mut payload, self.v.col(c));
+            write_record(w, TAG_COLUMN, &payload)?;
+        }
+        for (c, slot) in self.pending.iter().enumerate() {
+            if let Some(col) = slot {
+                let mut payload = Vec::with_capacity(4 + col.len() * 8);
+                payload.extend_from_slice(&(c as u32).to_le_bytes());
+                push_f64s(&mut payload, col);
+                write_record(w, TAG_PENDING, &payload)?;
+            }
+        }
+
+        let mut reg = Vec::with_capacity(64);
+        reg.push(kind_code(self.reg.kind));
+        reg.extend_from_slice(&self.reg.lambda.to_bits().to_le_bytes());
+        reg.extend_from_slice(&self.reg.gamma.to_bits().to_le_bytes());
+        push_u64s(&mut reg, &[self.reg.resvd_every, self.reg.commits_since_refresh, self.reg.refreshes]);
+        reg.extend_from_slice(&self.reg.last_drift.to_bits().to_le_bytes());
+        reg.push(u8::from(self.reg.online.is_some()));
+        write_record(w, TAG_REG, &reg)?;
+
+        if let Some(f) = &self.reg.online {
+            write_record(w, TAG_FACTOR, &mat_payload(0, &f.u))?;
+            write_record(w, TAG_FACTOR, &mat_payload(1, &f.v))?;
+            let mut sig = Vec::new();
+            push_f64s(&mut sig, &f.sigma);
+            write_record(w, TAG_SIGMA, &sig)?;
+        }
+
+        for (id, st) in &self.rng_streams {
+            let mut payload = Vec::with_capacity(49);
+            push_u64s(&mut payload, &[*id]);
+            push_u64s(&mut payload, &st.s);
+            match st.spare {
+                None => payload.push(0),
+                Some(x) => {
+                    payload.push(1);
+                    payload.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            write_record(w, TAG_RNG, &payload)?;
+        }
+
+        write_record(w, TAG_END, &[])?;
+        Ok(())
+    }
+
+    /// Decode from `r`, validating structure as well as checksums: all
+    /// columns present, dedup/version vectors sized `T`, factor
+    /// dimensions consistent, and an explicit end marker (so a truncated
+    /// snapshot can never read as a shorter valid one).
+    pub fn decode(r: &mut impl Read) -> Result<ServerSnapshot, PersistError> {
+        read_header(r, SNAPSHOT_MAGIC)?;
+        let (tag, meta) = read_record(r)?.ok_or(PersistError::Truncated)?;
+        if tag != TAG_META {
+            return Err(PersistError::Malformed("snapshot must start with its meta record"));
+        }
+        let mut c = Cursor::new(&meta);
+        let seq = c.u64()?;
+        let d = c.u32()? as usize;
+        let t = c.u32()? as usize;
+        let eta = c.f64()?;
+        let prox_every = c.u64()?;
+        let version = c.u64()?;
+        let prox_count = c.u64()?;
+        let coalesced = c.u64()?;
+        let uncounted_commits = c.u64()?;
+        c.finish()?;
+
+        let mut col_versions: Option<Vec<u64>> = None;
+        let mut applied_k: Option<Vec<u64>> = None;
+        let mut v = Mat::zeros(d, t);
+        let mut seen_cols = vec![false; t];
+        let mut pending: Vec<Option<Vec<f64>>> = vec![None; t];
+        let mut reg: Option<RegSnapshot> = None;
+        let mut fac_u: Option<Mat> = None;
+        let mut fac_v: Option<Mat> = None;
+        let mut sigma: Option<Vec<f64>> = None;
+        let mut online_expected = false;
+        let mut rng_streams = Vec::new();
+        let mut ended = false;
+
+        while let Some((tag, payload)) = read_record(r)? {
+            let mut c = Cursor::new(&payload);
+            match tag {
+                TAG_COL_VERSIONS => {
+                    let xs = read_u64s(&mut c, t)?;
+                    c.finish()?;
+                    col_versions = Some(xs);
+                }
+                TAG_APPLIED => {
+                    let xs = read_u64s(&mut c, t)?;
+                    c.finish()?;
+                    applied_k = Some(xs);
+                }
+                TAG_COLUMN | TAG_PENDING => {
+                    let idx = c.u32()? as usize;
+                    let col = c.rest_f64s()?;
+                    c.finish()?;
+                    if idx >= t || col.len() != d {
+                        return Err(PersistError::Malformed("column record out of shape"));
+                    }
+                    if tag == TAG_COLUMN {
+                        v.set_col(idx, &col);
+                        seen_cols[idx] = true;
+                    } else {
+                        pending[idx] = Some(col);
+                    }
+                }
+                TAG_REG => {
+                    let kind = kind_from_code(c.u8()?)?;
+                    let lambda = c.f64()?;
+                    let gamma = c.f64()?;
+                    let resvd_every = c.u64()?;
+                    let commits_since_refresh = c.u64()?;
+                    let refreshes = c.u64()?;
+                    let last_drift = c.f64()?;
+                    online_expected = match c.u8()? {
+                        0 => false,
+                        1 => true,
+                        _ => return Err(PersistError::Malformed("online flag not 0/1")),
+                    };
+                    c.finish()?;
+                    reg = Some(RegSnapshot {
+                        kind,
+                        lambda,
+                        gamma,
+                        resvd_every,
+                        commits_since_refresh,
+                        refreshes,
+                        last_drift,
+                        online: None,
+                    });
+                }
+                TAG_FACTOR => {
+                    let (which, m) = mat_from_payload(&payload)?;
+                    match which {
+                        0 => fac_u = Some(m),
+                        1 => fac_v = Some(m),
+                        _ => return Err(PersistError::Malformed("factor selector not U/V")),
+                    }
+                }
+                TAG_SIGMA => {
+                    let xs = c.rest_f64s()?;
+                    c.finish()?;
+                    sigma = Some(xs);
+                }
+                TAG_RNG => {
+                    let id = c.u64()?;
+                    let s = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];
+                    let spare = match c.u8()? {
+                        0 => None,
+                        1 => Some(c.f64()?),
+                        _ => return Err(PersistError::Malformed("rng spare flag not 0/1")),
+                    };
+                    c.finish()?;
+                    rng_streams.push((id, RngState { s, spare }));
+                }
+                TAG_END => {
+                    c.finish()?;
+                    ended = true;
+                    break;
+                }
+                other => return Err(PersistError::BadTag(other)),
+            }
+        }
+
+        if !ended {
+            return Err(PersistError::Truncated);
+        }
+        if !seen_cols.iter().all(|&s| s) {
+            return Err(PersistError::Malformed("snapshot is missing matrix columns"));
+        }
+        let col_versions =
+            col_versions.ok_or(PersistError::Malformed("snapshot has no version record"))?;
+        let applied_k =
+            applied_k.ok_or(PersistError::Malformed("snapshot has no dedup record"))?;
+        let mut reg =
+            reg.ok_or(PersistError::Malformed("snapshot has no regularizer record"))?;
+        if online_expected {
+            let u = fac_u.ok_or(PersistError::Malformed("online snapshot missing U factor"))?;
+            let vv = fac_v.ok_or(PersistError::Malformed("online snapshot missing V factor"))?;
+            let sigma =
+                sigma.ok_or(PersistError::Malformed("online snapshot missing sigma"))?;
+            if u.cols() != sigma.len() || vv.cols() != sigma.len() || u.rows() != d || vv.rows() != t
+            {
+                return Err(PersistError::Malformed("factor dimensions inconsistent"));
+            }
+            reg.online = Some(SvdFactors { u, sigma, v: vv });
+        }
+
+        Ok(ServerSnapshot {
+            seq,
+            eta,
+            prox_every,
+            version,
+            col_versions,
+            applied_k,
+            v,
+            pending,
+            prox_count,
+            coalesced,
+            uncounted_commits,
+            reg,
+            rng_streams,
+        })
+    }
+
+    /// Write atomically to `path`: temp file in the same directory, fsync,
+    /// rename over the target, then best-effort directory fsync — a crash
+    /// leaves either the old snapshot or the new one, never a torn mix.
+    pub fn write_file(&self, path: &Path) -> Result<(), PersistError> {
+        let tmp = path.with_extension("tmp");
+        {
+            let file = File::create(&tmp)?;
+            let mut w = BufWriter::new(file);
+            self.encode(&mut w)?;
+            w.flush()?;
+            w.get_ref().sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Read and fully validate a snapshot file.
+    pub fn read_file(path: &Path) -> Result<ServerSnapshot, PersistError> {
+        let mut r = BufReader::new(File::open(path)?);
+        ServerSnapshot::decode(&mut r)
+    }
+}
+
+fn read_u64s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<u64>, PersistError> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(c.u64()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(online: bool) -> ServerSnapshot {
+        let mut rng = Rng::new(4040);
+        let d = 6;
+        let t = 3;
+        let v = Mat::randn(d, t, &mut rng);
+        let online_factors = online.then(|| {
+            let s = crate::optim::svd::Svd::jacobi(&v);
+            SvdFactors { u: s.u, sigma: s.sigma, v: s.v }
+        });
+        ServerSnapshot {
+            seq: 41,
+            eta: 0.125,
+            prox_every: 2,
+            version: 17,
+            col_versions: vec![5, 8, 4],
+            applied_k: vec![5, 0, 4],
+            v,
+            pending: vec![None, Some(rng.normal_vec(d)), None],
+            prox_count: 9,
+            coalesced: 3,
+            uncounted_commits: 2,
+            reg: RegSnapshot {
+                kind: RegularizerKind::Nuclear,
+                lambda: 0.4,
+                gamma: 1.0,
+                resvd_every: 64,
+                commits_since_refresh: 13,
+                refreshes: 2,
+                last_drift: 3.2e-12,
+                online: online_factors,
+            },
+            rng_streams: vec![(0, Rng::new(7).state()), (3, Rng::new(8).state())],
+        }
+    }
+
+    fn roundtrip(s: &ServerSnapshot) -> ServerSnapshot {
+        let mut buf = Vec::new();
+        s.encode(&mut buf).unwrap();
+        ServerSnapshot::decode(&mut std::io::Cursor::new(&buf)).unwrap()
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bitwise() {
+        for online in [false, true] {
+            let s = sample(online);
+            assert_eq!(roundtrip(&s), s);
+        }
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        let s = sample(true);
+        let mut buf = Vec::new();
+        s.encode(&mut buf).unwrap();
+        for cut in 0..buf.len() {
+            assert!(
+                ServerSnapshot::decode(&mut std::io::Cursor::new(&buf[..cut])).is_err(),
+                "prefix of {cut}/{} bytes must not decode",
+                buf.len()
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_bytes_error_never_panic() {
+        let s = sample(true);
+        let mut buf = Vec::new();
+        s.encode(&mut buf).unwrap();
+        // Stride through the file (it is a few KB) flipping one byte.
+        for pos in (0..buf.len()).step_by(17) {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x20;
+            assert!(
+                ServerSnapshot::decode(&mut std::io::Cursor::new(&bad)).is_err(),
+                "corruption at byte {pos} must error"
+            );
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_write() {
+        let dir = std::env::temp_dir().join(format!("amtl_snap_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snapshot-41.amtls");
+        let s = sample(true);
+        s.write_file(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "temp file renamed away");
+        assert_eq!(ServerSnapshot::read_file(&path).unwrap(), s);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

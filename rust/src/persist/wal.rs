@@ -1,0 +1,306 @@
+//! The commit write-ahead log.
+//!
+//! Between snapshots, every state-mutating server operation is appended
+//! here: KM commits (`Commit`) and uncached proximal computations
+//! (`Prox`). Recovery replays the tail of this log on top of the latest
+//! snapshot; because both entry kinds are deterministic given the replay
+//! order, a sequentially-committed run recovers **bitwise identical**
+//! state — including the online-SVD factorization, whose value depends on
+//! the fold history that the `Prox` markers preserve.
+//!
+//! Entries carry a global sequence number so a log can be replayed
+//! against any snapshot: entries at or below the snapshot's horizon are
+//! skipped. Appends are fsync'd before the server acknowledges the commit
+//! (see [`Checkpointer`](super::Checkpointer)), so an acknowledged update
+//! is never lost to a crash.
+
+use super::codec::{
+    read_header, read_record, write_header, write_record, PersistError, WAL_MAGIC,
+};
+use crate::transport::wire::{push_f64s, Cursor};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+const TAG_COMMIT: u8 = 0x01;
+const TAG_PROX: u8 = 0x02;
+
+/// One durable server operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WalEntry {
+    /// A KM commit `v_t ← v_t + step·(u − v_t)` from activation `k` of
+    /// task node `t`.
+    Commit {
+        /// Global operation sequence number.
+        seq: u64,
+        /// Task (column) index.
+        t: u32,
+        /// The node's activation counter (commit dedup key).
+        k: u64,
+        /// KM relaxation step.
+        step: f64,
+        /// The forward-step result `u`.
+        u: Vec<f64>,
+    },
+    /// An uncached proximal computation: the server drained its pending
+    /// column slots into the online factorization (refreshing it if the
+    /// stride was due) and computed `Prox_{ηλg}(V̂)`.
+    Prox {
+        /// Global operation sequence number.
+        seq: u64,
+    },
+}
+
+impl WalEntry {
+    /// The entry's global sequence number.
+    pub fn seq(&self) -> u64 {
+        match self {
+            WalEntry::Commit { seq, .. } | WalEntry::Prox { seq } => *seq,
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            WalEntry::Commit { .. } => TAG_COMMIT,
+            WalEntry::Prox { .. } => TAG_PROX,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            WalEntry::Commit { seq, t, k, step, u } => {
+                let mut out = Vec::with_capacity(28 + u.len() * 8);
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&step.to_bits().to_le_bytes());
+                push_f64s(&mut out, u);
+                out
+            }
+            WalEntry::Prox { seq } => seq.to_le_bytes().to_vec(),
+        }
+    }
+
+    /// Decode one entry from a record's `(tag, payload)`.
+    pub fn decode(tag: u8, payload: &[u8]) -> Result<WalEntry, PersistError> {
+        let mut c = Cursor::new(payload);
+        let entry = match tag {
+            TAG_COMMIT => {
+                let seq = c.u64().map_err(PersistError::from)?;
+                let t = c.u32().map_err(PersistError::from)?;
+                let k = c.u64().map_err(PersistError::from)?;
+                let step = c.f64().map_err(PersistError::from)?;
+                let u = c.rest_f64s().map_err(PersistError::from)?;
+                WalEntry::Commit { seq, t, k, step, u }
+            }
+            TAG_PROX => WalEntry::Prox { seq: c.u64().map_err(PersistError::from)? },
+            other => return Err(PersistError::BadTag(other)),
+        };
+        c.finish().map_err(PersistError::from)?;
+        Ok(entry)
+    }
+}
+
+/// Append-only WAL file handle.
+pub struct WalWriter {
+    file: File,
+    path: PathBuf,
+    /// Entries appended but not yet fsync'd.
+    dirty: bool,
+}
+
+impl WalWriter {
+    /// Create (truncating) a WAL at `path`, write its header, and fsync so
+    /// an immediately-following crash still finds a valid empty log.
+    pub fn create(path: &Path) -> Result<WalWriter, PersistError> {
+        let file = File::create(path)?;
+        let mut w = WalWriter { file, path: path.to_path_buf(), dirty: false };
+        write_header(&mut w.file, WAL_MAGIC)?;
+        w.file.sync_data()?;
+        Ok(w)
+    }
+
+    /// The log's filesystem path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one entry. Call [`WalWriter::sync`] before acknowledging the
+    /// operation to the client.
+    pub fn append(&mut self, entry: &WalEntry) -> Result<(), PersistError> {
+        let mut buf = Vec::new();
+        write_record(&mut buf, entry.tag(), &entry.payload())?;
+        self.file.write_all(&buf)?;
+        self.dirty = true;
+        Ok(())
+    }
+
+    /// fsync appended entries to stable storage (no-op when clean).
+    pub fn sync(&mut self) -> Result<(), PersistError> {
+        if self.dirty {
+            self.file.sync_data()?;
+            self.dirty = false;
+        }
+        Ok(())
+    }
+}
+
+/// Result of scanning one WAL file.
+pub struct WalScan {
+    /// Entries read, in append order.
+    pub entries: Vec<WalEntry>,
+    /// True when the scan stopped at an invalid tail record (the normal
+    /// artifact of a crash mid-append) rather than a clean EOF. The
+    /// damaged record and everything after it are unrecoverable; `error`
+    /// says what was wrong with it.
+    pub torn_tail: bool,
+    /// The decode failure that terminated a torn scan.
+    pub error: Option<PersistError>,
+}
+
+/// Scan a WAL file, tolerating a torn tail: entries are read until the
+/// first invalid record, which ends the scan (a crash mid-append is
+/// expected, and resynchronizing a byte stream after damage is not
+/// possible). A missing or damaged *header* is a hard error — that file
+/// was never a valid log.
+pub fn read_wal(path: &Path) -> Result<WalScan, PersistError> {
+    let mut r = BufReader::new(File::open(path)?);
+    read_header(&mut r, WAL_MAGIC)?;
+    let mut entries = Vec::new();
+    loop {
+        match read_record(&mut r) {
+            Ok(None) => return Ok(WalScan { entries, torn_tail: false, error: None }),
+            Ok(Some((tag, payload))) => match WalEntry::decode(tag, &payload) {
+                Ok(entry) => entries.push(entry),
+                Err(e) => return Ok(WalScan { entries, torn_tail: true, error: Some(e) }),
+            },
+            Err(e) => return Ok(WalScan { entries, torn_tail: true, error: Some(e) }),
+        }
+    }
+}
+
+/// Strict scan: any irregularity — torn tail included — is an error.
+/// Used by tests and integrity checks; recovery uses [`read_wal`].
+pub fn read_wal_strict(path: &Path) -> Result<Vec<WalEntry>, PersistError> {
+    let scan = read_wal(path)?;
+    if scan.torn_tail {
+        return Err(scan.error.unwrap_or(PersistError::Truncated));
+    }
+    Ok(scan.entries)
+}
+
+/// Write a whole WAL in one call (tests and tooling).
+pub fn write_wal(path: &Path, entries: &[WalEntry]) -> Result<(), PersistError> {
+    let file = File::create(path)?;
+    let mut w = BufWriter::new(file);
+    write_header(&mut w, WAL_MAGIC)?;
+    for e in entries {
+        write_record(&mut w, e.tag(), &e.payload())?;
+    }
+    w.flush()?;
+    w.get_ref().sync_data()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("amtl_wal_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("log.amtlw")
+    }
+
+    fn sample_entries() -> Vec<WalEntry> {
+        vec![
+            WalEntry::Commit { seq: 1, t: 0, k: 0, step: 0.5, u: vec![1.0, -2.0, 3.5] },
+            WalEntry::Prox { seq: 2 },
+            WalEntry::Commit { seq: 3, t: 2, k: 7, step: 1.0, u: vec![] },
+            WalEntry::Commit { seq: 4, t: 1, k: 1, step: 0.25, u: vec![f64::MIN_POSITIVE] },
+        ]
+    }
+
+    #[test]
+    fn wal_roundtrips_through_writer_and_reader() {
+        let path = tmp("roundtrip");
+        let mut w = WalWriter::create(&path).unwrap();
+        for e in sample_entries() {
+            w.append(&e).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        assert_eq!(read_wal_strict(&path).unwrap(), sample_entries());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_and_reported() {
+        let path = tmp("torn");
+        write_wal(&path, &sample_entries()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Chop the file mid-final-record: the first three entries survive.
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let scan = read_wal(&path).unwrap();
+        assert!(scan.torn_tail);
+        assert_eq!(scan.entries, sample_entries()[..3].to_vec());
+        assert!(read_wal_strict(&path).is_err(), "strict read must reject the torn tail");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_checksum_errors_never_panics() {
+        let path = tmp("corrupt");
+        write_wal(&path, &sample_entries()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(read_wal_strict(&path).is_err());
+        // The tolerant scan stops at the damage instead of erroring.
+        let scan = read_wal(&path).unwrap();
+        assert!(scan.torn_tail && scan.entries.len() < sample_entries().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_damage_is_a_hard_error() {
+        let path = tmp("header");
+        write_wal(&path, &sample_entries()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(read_wal(&path), Err(PersistError::BadMagic(_))));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prop_entries_roundtrip_bitwise() {
+        forall(
+            "wal commit entries encode/decode identically",
+            60,
+            |g| {
+                let n = g.usize_in(0, 200);
+                let u = g.normal_vec(n);
+                let step = g.f64_in(-4.0, 4.0);
+                let seq = g.usize_in(0, 1 << 20);
+                ((u, step), seq)
+            },
+            |((u, step), seq)| {
+                let e = WalEntry::Commit {
+                    seq: *seq as u64,
+                    t: (*seq % 97) as u32,
+                    k: *seq as u64 / 3,
+                    step: *step,
+                    u: u.clone(),
+                };
+                let mut buf = Vec::new();
+                write_record(&mut buf, e.tag(), &e.payload()).unwrap();
+                let (tag, payload) =
+                    read_record(&mut std::io::Cursor::new(&buf)).unwrap().unwrap();
+                WalEntry::decode(tag, &payload).unwrap() == e
+            },
+        );
+    }
+}

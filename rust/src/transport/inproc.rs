@@ -7,7 +7,7 @@
 //! and therefore bit-identical behavior to the coordinator before the
 //! transport layer existed.
 
-use super::Transport;
+use super::{RegisterAck, Transport};
 use crate::coordinator::server::CentralServer;
 use anyhow::Result;
 use std::sync::Arc;
@@ -22,6 +22,14 @@ impl InProc {
     pub fn new(server: Arc<CentralServer>) -> InProc {
         InProc { server }
     }
+
+    /// Algorithmic traffic doubles as a heartbeat, exactly like the TCP
+    /// server does for remote nodes: an active node is a live node.
+    fn touch(&self, t: usize) {
+        if let Some(r) = self.server.registry() {
+            let _ = r.heartbeat(t);
+        }
+    }
 }
 
 impl Transport for InProc {
@@ -30,11 +38,29 @@ impl Transport for InProc {
     }
 
     fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>> {
+        self.touch(t);
         Ok(self.server.prox_col(t))
     }
 
-    fn push_update(&mut self, t: usize, step: f64, u: &[f64]) -> Result<u64> {
-        Ok(self.server.commit_update(t, u, step))
+    fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
+        self.touch(t);
+        self.server.commit_update(t, k, u, step)
+    }
+
+    fn register(&mut self, t: usize) -> Result<RegisterAck> {
+        let generation = self.server.registry().map(|r| r.register(t)).unwrap_or(0);
+        Ok(RegisterAck { col_version: self.server.applied_commits(t), generation })
+    }
+
+    fn heartbeat(&mut self, t: usize) -> Result<bool> {
+        Ok(self.server.registry().map(|r| r.heartbeat(t)).unwrap_or(true))
+    }
+
+    fn leave(&mut self, t: usize) -> Result<()> {
+        if let Some(r) = self.server.registry() {
+            r.leave(t);
+        }
+        Ok(())
     }
 }
 
@@ -57,9 +83,14 @@ mod tests {
         assert_eq!(tr.eta(), srv.eta());
         let mut rng = Rng::new(900);
         let u = rng.normal_vec(5);
-        let v1 = tr.push_update(1, 0.7, &u).unwrap();
+        let v1 = tr.push_update(1, 0, 0.7, &u).unwrap();
         assert_eq!(v1, 1);
         assert_eq!(srv.state().col_version(1), 1);
+        // Membership defaults without a registry: catch-up info still real.
+        let ack = tr.register(1).unwrap();
+        assert_eq!(ack, super::super::RegisterAck { col_version: 1, generation: 0 });
+        assert!(tr.heartbeat(1).unwrap());
+        tr.leave(1).unwrap();
         // The fetched column is exactly the server's prox column.
         let got = tr.fetch_prox_col(1).unwrap();
         assert_eq!(got, srv.prox_col(1));

@@ -75,6 +75,18 @@ impl TransportKind {
     }
 }
 
+/// What a node learns when it registers: where its column already stands
+/// (so a restarted node resumes instead of redoing finished activations)
+/// and its membership generation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RegisterAck {
+    /// Commits already applied for this node's column.
+    pub col_version: u64,
+    /// Membership generation (0 when no registry is attached; otherwise 1
+    /// on first join, +1 per rejoin).
+    pub generation: u64,
+}
+
 /// One task node's channel to the central server (the worker side of the
 /// star edge). Implementations are per-node — each worker owns its own
 /// transport (for TCP: its own connection and framing state), hence
@@ -89,13 +101,37 @@ pub trait Transport: Send {
     fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>>;
 
     /// Commit a forward-step result: `v_t ← v_t + step·(u − v_t)` on the
-    /// server. Returns the new global version (total KM updates).
+    /// server, where `k` is this node's activation counter. Returns the
+    /// new global version (total KM updates).
     ///
-    /// Over TCP this is at-least-once: a response lost to a transient
-    /// failure triggers a reconnect-and-resend, which may double-apply the
-    /// relaxation — the same class of perturbation as the paper's delayed
-    /// updates, and harmless to convergence for `step ∈ (0, 1)`.
-    fn push_update(&mut self, t: usize, step: f64, u: &[f64]) -> Result<u64>;
+    /// Over TCP the transport is at-least-once — a response lost to a
+    /// transient failure triggers a reconnect-and-resend — but the server
+    /// deduplicates on `(t, k)`, so the *commit* is exactly-once even
+    /// across a server restart.
+    fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64>;
+
+    /// Join (or rejoin) the run as task node `t`. Without a membership
+    /// registry this still reports the column's applied-commit horizon,
+    /// which is what lets a restarted node catch up.
+    fn register(&mut self, t: usize) -> Result<RegisterAck> {
+        let _ = t;
+        Ok(RegisterAck::default())
+    }
+
+    /// Prove liveness for task node `t`. `Ok(false)` means the node was
+    /// evicted and must [`Transport::register`] again to rejoin; without
+    /// a registry this is trivially `Ok(true)`.
+    fn heartbeat(&mut self, t: usize) -> Result<bool> {
+        let _ = t;
+        Ok(true)
+    }
+
+    /// Politely depart the run as task node `t` (the run stops waiting
+    /// for this node). No-op without a registry.
+    fn leave(&mut self, t: usize) -> Result<()> {
+        let _ = t;
+        Ok(())
+    }
 
     /// Graceful teardown (TCP sends a `Shutdown` frame; in-proc is a
     /// no-op). Called by the worker loop on exit; errors are advisory.

@@ -16,11 +16,18 @@
 //! Client side ([`TcpClient`]): connect/read/write timeouts, `TCP_NODELAY`
 //! (frames are latency-bound request/response pairs, not bulk streams),
 //! and bounded reconnect-and-resend on transient failures. Fetches are
-//! idempotent; `PushUpdate` resends are at-least-once (see
+//! idempotent; `PushUpdate` resends are deduplicated server-side on the
+//! node's activation counter, so commits are exactly-once (see
 //! [`Transport::push_update`]).
+//!
+//! Membership: `Register`/`Heartbeat`/`Leave` frames land in the server's
+//! [`NodeRegistry`](crate::coordinator::registry::NodeRegistry) when one
+//! is attached, and any fetch/commit from a registered node doubles as a
+//! heartbeat. `Shutdown` fsyncs in-flight WAL writes before it is
+//! acknowledged.
 
 use super::wire::{Request, Response, WireError};
-use super::Transport;
+use super::{RegisterAck, Transport};
 use crate::coordinator::metrics::Recorder;
 use crate::coordinator::server::CentralServer;
 use anyhow::{anyhow, bail, Result};
@@ -189,6 +196,15 @@ impl Read for PatientReader<'_> {
     }
 }
 
+/// Algorithmic traffic from a registered node doubles as a heartbeat:
+/// any fetch/commit for column `t` refreshes its liveness (and sweeps,
+/// so one node's traffic detects another's silence).
+fn touch(server: &CentralServer, t: usize) {
+    if let Some(reg) = server.registry() {
+        let _ = reg.heartbeat(t);
+    }
+}
+
 /// One connection's request loop: validate → execute → respond.
 fn serve_conn(
     stream: TcpStream,
@@ -221,6 +237,7 @@ fn serve_conn(
             Request::FetchProxCol { t } => {
                 let t = t as usize;
                 if t < server.state().t() {
+                    touch(server, t);
                     Response::ProxCol(server.prox_col(t))
                 } else {
                     Response::Error(format!(
@@ -229,7 +246,7 @@ fn serve_conn(
                     ))
                 }
             }
-            Request::PushUpdate { t, step, u } => {
+            Request::PushUpdate { t, k, step, u } => {
                 let t = t as usize;
                 let (d, t_count) = (server.state().d(), server.state().t());
                 if t >= t_count {
@@ -241,14 +258,63 @@ fn serve_conn(
                 } else if !u.iter().all(|x| x.is_finite()) {
                     Response::Error("update vector contains non-finite values".into())
                 } else {
-                    let version = server.commit_update(t, &u, step);
-                    if let Some(rec) = recorder {
-                        rec.maybe_record(version, || server.state().snapshot());
+                    touch(server, t);
+                    match server.commit_update(t, k, &u, step) {
+                        Ok(version) => {
+                            if let Some(rec) = recorder {
+                                rec.maybe_record(version, || server.state().snapshot());
+                            }
+                            Response::Pushed { version }
+                        }
+                        // Durability failure (e.g. WAL disk error): the
+                        // update was NOT applied; tell the node so it
+                        // retries rather than silently losing work.
+                        Err(e) => Response::Error(format!("commit not durable: {e:#}")),
                     }
-                    Response::Pushed { version }
+                }
+            }
+            Request::Register { t } => {
+                let t = t as usize;
+                if t < server.state().t() {
+                    let generation = server.registry().map(|r| r.register(t)).unwrap_or(0);
+                    Response::Registered { col_version: server.applied_commits(t), generation }
+                } else {
+                    Response::Error(format!(
+                        "task index {t} out of range (T={})",
+                        server.state().t()
+                    ))
+                }
+            }
+            Request::Heartbeat { t } => {
+                let t = t as usize;
+                if t < server.state().t() {
+                    let live = server.registry().map(|r| r.heartbeat(t)).unwrap_or(true);
+                    Response::HeartbeatAck { live }
+                } else {
+                    Response::Error(format!(
+                        "task index {t} out of range (T={})",
+                        server.state().t()
+                    ))
+                }
+            }
+            Request::Leave { t } => {
+                let t = t as usize;
+                if t < server.state().t() {
+                    if let Some(r) = server.registry() {
+                        r.leave(t);
+                    }
+                    Response::LeaveAck
+                } else {
+                    Response::Error(format!(
+                        "task index {t} out of range (T={})",
+                        server.state().t()
+                    ))
                 }
             }
             Request::Shutdown => {
+                // Durability before politeness: fsync in-flight WAL
+                // writes, then acknowledge the teardown.
+                let _ = server.sync_persist();
                 let _ = Response::ShutdownAck.write_to(&mut &stream);
                 return;
             }
@@ -343,10 +409,33 @@ impl Transport for TcpClient {
         }
     }
 
-    fn push_update(&mut self, t: usize, step: f64, u: &[f64]) -> Result<u64> {
-        match self.request(&Request::PushUpdate { t: t as u32, step, u: u.to_vec() })? {
+    fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
+        match self.request(&Request::PushUpdate { t: t as u32, k, step, u: u.to_vec() })? {
             Response::Pushed { version } => Ok(version),
             other => bail!("expected Pushed, got {other:?}"),
+        }
+    }
+
+    fn register(&mut self, t: usize) -> Result<RegisterAck> {
+        match self.request(&Request::Register { t: t as u32 })? {
+            Response::Registered { col_version, generation } => {
+                Ok(RegisterAck { col_version, generation })
+            }
+            other => bail!("expected Registered, got {other:?}"),
+        }
+    }
+
+    fn heartbeat(&mut self, t: usize) -> Result<bool> {
+        match self.request(&Request::Heartbeat { t: t as u32 })? {
+            Response::HeartbeatAck { live } => Ok(live),
+            other => bail!("expected HeartbeatAck, got {other:?}"),
+        }
+    }
+
+    fn leave(&mut self, t: usize) -> Result<()> {
+        match self.request(&Request::Leave { t: t as u32 })? {
+            Response::LeaveAck => Ok(()),
+            other => bail!("expected LeaveAck, got {other:?}"),
         }
     }
 
@@ -390,7 +479,7 @@ mod tests {
 
         let mut rng = Rng::new(910);
         let u = rng.normal_vec(6);
-        let version = client.push_update(2, 0.5, &u).unwrap();
+        let version = client.push_update(2, 0, 0.5, &u).unwrap();
         assert_eq!(version, 1);
         assert_eq!(srv.state().col_version(2), 1);
 
@@ -410,15 +499,15 @@ mod tests {
 
         let err = client.fetch_prox_col(9).unwrap_err();
         assert!(format!("{err:#}").contains("out of range"), "{err:#}");
-        let err = client.push_update(0, 0.5, &[1.0; 3]).unwrap_err();
+        let err = client.push_update(0, 0, 0.5, &[1.0; 3]).unwrap_err();
         assert!(format!("{err:#}").contains("dimension"), "{err:#}");
-        let err = client.push_update(0, f64::NAN, &[1.0; 4]).unwrap_err();
+        let err = client.push_update(0, 0, f64::NAN, &[1.0; 4]).unwrap_err();
         assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
-        let err = client.push_update(0, 0.5, &[1.0, f64::INFINITY, 0.0, 0.0]).unwrap_err();
+        let err = client.push_update(0, 0, 0.5, &[1.0, f64::INFINITY, 0.0, 0.0]).unwrap_err();
         assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
 
         // The connection survives rejections: a valid request still works.
-        assert_eq!(client.push_update(0, 1.0, &[1.0; 4]).unwrap(), 1);
+        assert_eq!(client.push_update(0, 0, 1.0, &[1.0; 4]).unwrap(), 1);
         assert_eq!(srv.state().read_col(0), vec![1.0; 4]);
         handle.shutdown();
     }
@@ -432,10 +521,10 @@ mod tests {
             for t in 0..4 {
                 s.spawn(move || {
                     let mut client = TcpClient::connect(addr, quick_opts()).unwrap();
-                    for _ in 0..25 {
+                    for k in 0..25 {
                         let col = client.fetch_prox_col(t).unwrap();
                         assert_eq!(col.len(), 5);
-                        client.push_update(t, 0.5, &[1.0; 5]).unwrap();
+                        client.push_update(t, k, 0.5, &[1.0; 5]).unwrap();
                     }
                     client.close().unwrap();
                 });
@@ -445,6 +534,67 @@ mod tests {
         for t in 0..4 {
             assert_eq!(srv.state().col_version(t), 25);
         }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn resent_push_updates_are_exactly_once() {
+        // The at-least-once wire retry must not double-apply: resending
+        // the same activation acks without moving the state.
+        let srv = server(3, 1);
+        let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+        assert_eq!(client.push_update(0, 0, 0.5, &[2.0, 2.0, 2.0]).unwrap(), 1);
+        let col = srv.state().read_col(0);
+        assert_eq!(client.push_update(0, 0, 0.5, &[2.0, 2.0, 2.0]).unwrap(), 1);
+        assert_eq!(srv.state().read_col(0), col, "resend must not re-apply");
+        assert_eq!(client.push_update(0, 1, 0.5, &[2.0, 2.0, 2.0]).unwrap(), 2);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn membership_frames_roundtrip_against_a_registry() {
+        let state = Arc::new(SharedState::zeros(4, 2));
+        let registry = Arc::new(crate::coordinator::registry::NodeRegistry::new(
+            2,
+            Duration::from_millis(150),
+        ));
+        let srv = Arc::new(
+            CentralServer::new(state, Regularizer::new(RegularizerKind::L21, 0.2), 0.125)
+                .with_registry(Arc::clone(&registry)),
+        );
+        let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+
+        // Heartbeat before registering: not a member.
+        assert!(!client.heartbeat(0).unwrap());
+        let ack = client.register(0).unwrap();
+        assert_eq!(ack, RegisterAck { col_version: 0, generation: 1 });
+        assert!(client.heartbeat(0).unwrap());
+
+        // Commits advance the catch-up horizon a re-registration reports.
+        client.push_update(0, 0, 1.0, &[1.0; 4]).unwrap();
+        client.push_update(0, 1, 1.0, &[1.0; 4]).unwrap();
+        let ack = client.register(0).unwrap();
+        assert_eq!(ack.col_version, 2);
+        assert_eq!(ack.generation, 2, "re-registration bumps the generation");
+
+        // Node 0 goes silent while node 1 keeps heartbeating: node 1's
+        // traffic performs the sweeps, node 0 is evicted on the timeout
+        // and told to rejoin on its next heartbeat.
+        client.register(1).unwrap();
+        let silent_since = std::time::Instant::now();
+        while silent_since.elapsed() < Duration::from_millis(400) && !registry.is_evicted(0) {
+            client.heartbeat(1).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        assert!(registry.is_evicted(0), "silent node evicted by peer traffic");
+        assert!(!client.heartbeat(0).unwrap());
+        client.leave(1).unwrap();
+        assert_eq!(
+            registry.status(1),
+            crate::coordinator::registry::NodeStatus::Left
+        );
         handle.shutdown();
     }
 
@@ -468,8 +618,8 @@ mod tests {
             TcpServer::spawn("127.0.0.1:0", Arc::clone(&srv), Some(Arc::clone(&recorder)))
                 .unwrap();
         let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
-        for _ in 0..5 {
-            client.push_update(0, 1.0, &[2.0, 2.0]).unwrap();
+        for k in 0..5 {
+            client.push_update(0, k, 1.0, &[2.0, 2.0]).unwrap();
         }
         client.close().unwrap();
         handle.shutdown();

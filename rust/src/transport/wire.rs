@@ -1,5 +1,8 @@
 //! The AMTL wire protocol: versioned, length-prefixed, checksummed binary
-//! frames carrying the four messages of Algorithm 1's star topology.
+//! frames carrying the messages of Algorithm 1's star topology — the four
+//! algorithmic messages (`FetchProxCol`/`PushUpdate`/`FetchEta`/`Shutdown`)
+//! plus the elastic-membership frames (`Register`/`Heartbeat`/`Leave`)
+//! that let task nodes join, prove liveness, and depart mid-run.
 //!
 //! Every frame is
 //!
@@ -29,7 +32,10 @@ use std::io::{Read, Write};
 /// Frame prefix identifying the protocol.
 pub const MAGIC: [u8; 4] = *b"AMTL";
 /// Current protocol version; bumped on any incompatible frame change.
-pub const VERSION: u8 = 1;
+/// v2: `PushUpdate` carries the node's activation counter `k` (commit
+/// dedup key for at-least-once resends) and the membership frames
+/// (`Register`/`Heartbeat`/`Leave`) exist.
+pub const VERSION: u8 = 2;
 /// Upper bound on payload size (guards allocation on corrupted lengths:
 /// 64 MiB ≫ any model column we ship).
 pub const MAX_PAYLOAD: u32 = 1 << 26;
@@ -39,12 +45,18 @@ const OP_FETCH_PROX_COL: u8 = 0x01;
 const OP_PUSH_UPDATE: u8 = 0x02;
 const OP_FETCH_ETA: u8 = 0x03;
 const OP_SHUTDOWN: u8 = 0x04;
+const OP_REGISTER: u8 = 0x05;
+const OP_HEARTBEAT: u8 = 0x06;
+const OP_LEAVE: u8 = 0x07;
 
 // Response opcodes (server → client).
 const OP_PROX_COL: u8 = 0x81;
 const OP_PUSHED: u8 = 0x82;
 const OP_ETA: u8 = 0x83;
 const OP_SHUTDOWN_ACK: u8 = 0x84;
+const OP_REGISTERED: u8 = 0x85;
+const OP_HEARTBEAT_ACK: u8 = 0x86;
+const OP_LEAVE_ACK: u8 = 0x87;
 const OP_ERROR: u8 = 0xFF;
 
 /// Decode/IO failure. Malformed input is an error, never a panic.
@@ -99,8 +111,10 @@ impl From<std::io::Error> for WireError {
     }
 }
 
-/// FNV-1a 32-bit over a sequence of byte slices.
-fn fnv1a32(chunks: &[&[u8]]) -> u32 {
+/// FNV-1a 32-bit over a sequence of byte slices. Shared with the
+/// [`persist`](crate::persist) codec, so wire frames and durable records
+/// are protected by the same (well-tested) checksum.
+pub(crate) fn fnv1a32(chunks: &[&[u8]]) -> u32 {
     let mut h: u32 = 0x811c9dc5;
     for chunk in chunks {
         for &b in *chunk {
@@ -157,18 +171,20 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), WireError> {
 
 // ------------------------------------------------------- payload cursor
 
-/// Bounds-checked little-endian reader over a payload slice.
-struct Cursor<'a> {
+/// Bounds-checked little-endian reader over a payload slice. Shared with
+/// the [`persist`](crate::persist) codec (snapshot/WAL records reuse the
+/// wire framing discipline).
+pub(crate) struct Cursor<'a> {
     b: &'a [u8],
     i: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn new(b: &'a [u8]) -> Cursor<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> Cursor<'a> {
         Cursor { b, i: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         let end = self
             .i
             .checked_add(n)
@@ -179,22 +195,26 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         let s = self.take(4)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
-    fn u64(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, WireError> {
         let s = self.take(8)?;
         Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
     }
 
-    fn f64(&mut self) -> Result<f64, WireError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
     /// All remaining bytes as a little-endian f64 vector.
-    fn rest_f64s(&mut self) -> Result<Vec<f64>, WireError> {
+    pub(crate) fn rest_f64s(&mut self) -> Result<Vec<f64>, WireError> {
         let rest = &self.b[self.i..];
         if rest.len() % 8 != 0 {
             return Err(WireError::Malformed("f64 vector length not a multiple of 8"));
@@ -206,7 +226,7 @@ impl<'a> Cursor<'a> {
             .collect())
     }
 
-    fn finish(self) -> Result<(), WireError> {
+    pub(crate) fn finish(self) -> Result<(), WireError> {
         if self.i == self.b.len() {
             Ok(())
         } else {
@@ -215,7 +235,7 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+pub(crate) fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
     out.reserve(xs.len() * 8);
     for x in xs {
         out.extend_from_slice(&x.to_bits().to_le_bytes());
@@ -230,11 +250,24 @@ pub enum Request {
     /// Retrieve `(Prox_{ηλg}(V̂))_t` — the backward step for task `t`.
     FetchProxCol { t: u32 },
     /// Commit a forward-step result: `v_t ← v_t + step·(u − v_t)`.
-    PushUpdate { t: u32, step: f64, u: Vec<f64> },
+    /// `k` is the node's activation counter for this commit — the server
+    /// deduplicates on it, turning the at-least-once reconnect-and-resend
+    /// of the TCP client into an exactly-once commit (resends of an
+    /// already-applied activation are acknowledged without re-applying).
+    PushUpdate { t: u32, k: u64, step: f64, u: Vec<f64> },
     /// Retrieve the run's forward step size η (a run constant).
     FetchEta,
     /// Graceful connection teardown.
     Shutdown,
+    /// Join (or rejoin) the run as task node `t`. The reply tells the
+    /// node how many of its commits have already been applied, so a
+    /// restarted node catches up instead of redoing finished work.
+    Register { t: u32 },
+    /// Liveness proof for task node `t` (see
+    /// [`NodeRegistry`](crate::coordinator::registry::NodeRegistry)).
+    Heartbeat { t: u32 },
+    /// Polite departure of task node `t` (the run stops waiting for it).
+    Leave { t: u32 },
 }
 
 /// Server → client messages.
@@ -246,8 +279,18 @@ pub enum Response {
     Pushed { version: u64 },
     /// The run's forward step size η.
     Eta(f64),
-    /// Acknowledges a `Shutdown` request.
+    /// Acknowledges a `Shutdown` request. Over a durable server this is
+    /// only sent after in-flight WAL writes are fsync'd.
     ShutdownAck,
+    /// Membership granted: how many commits task `t` already has applied
+    /// (`col_version`) and the node's membership generation (increments
+    /// on every re-registration after an eviction or restart).
+    Registered { col_version: u64, generation: u64 },
+    /// Heartbeat reply; `live = false` means the node was evicted (or was
+    /// never registered) and must `Register` again to rejoin.
+    HeartbeatAck { live: bool },
+    /// Acknowledges a `Leave` request.
+    LeaveAck,
     /// Request rejected (bad task index, dimension mismatch, …). The
     /// connection stays usable.
     Error(String),
@@ -260,15 +303,22 @@ impl Request {
             Request::PushUpdate { .. } => OP_PUSH_UPDATE,
             Request::FetchEta => OP_FETCH_ETA,
             Request::Shutdown => OP_SHUTDOWN,
+            Request::Register { .. } => OP_REGISTER,
+            Request::Heartbeat { .. } => OP_HEARTBEAT,
+            Request::Leave { .. } => OP_LEAVE,
         }
     }
 
     fn payload(&self) -> Vec<u8> {
         match self {
-            Request::FetchProxCol { t } => t.to_le_bytes().to_vec(),
-            Request::PushUpdate { t, step, u } => {
-                let mut out = Vec::with_capacity(12 + u.len() * 8);
+            Request::FetchProxCol { t }
+            | Request::Register { t }
+            | Request::Heartbeat { t }
+            | Request::Leave { t } => t.to_le_bytes().to_vec(),
+            Request::PushUpdate { t, k, step, u } => {
+                let mut out = Vec::with_capacity(20 + u.len() * 8);
                 out.extend_from_slice(&t.to_le_bytes());
+                out.extend_from_slice(&k.to_le_bytes());
                 out.extend_from_slice(&step.to_bits().to_le_bytes());
                 push_f64s(&mut out, u);
                 out
@@ -284,12 +334,16 @@ impl Request {
             OP_FETCH_PROX_COL => Request::FetchProxCol { t: c.u32()? },
             OP_PUSH_UPDATE => {
                 let t = c.u32()?;
+                let k = c.u64()?;
                 let step = c.f64()?;
                 let u = c.rest_f64s()?;
-                Request::PushUpdate { t, step, u }
+                Request::PushUpdate { t, k, step, u }
             }
             OP_FETCH_ETA => Request::FetchEta,
             OP_SHUTDOWN => Request::Shutdown,
+            OP_REGISTER => Request::Register { t: c.u32()? },
+            OP_HEARTBEAT => Request::Heartbeat { t: c.u32()? },
+            OP_LEAVE => Request::Leave { t: c.u32()? },
             other => return Err(WireError::BadOpcode(other)),
         };
         c.finish()?;
@@ -322,6 +376,9 @@ impl Response {
             Response::Pushed { .. } => OP_PUSHED,
             Response::Eta(_) => OP_ETA,
             Response::ShutdownAck => OP_SHUTDOWN_ACK,
+            Response::Registered { .. } => OP_REGISTERED,
+            Response::HeartbeatAck { .. } => OP_HEARTBEAT_ACK,
+            Response::LeaveAck => OP_LEAVE_ACK,
             Response::Error(_) => OP_ERROR,
         }
     }
@@ -335,7 +392,14 @@ impl Response {
             }
             Response::Pushed { version } => version.to_le_bytes().to_vec(),
             Response::Eta(eta) => eta.to_bits().to_le_bytes().to_vec(),
-            Response::ShutdownAck => Vec::new(),
+            Response::ShutdownAck | Response::LeaveAck => Vec::new(),
+            Response::Registered { col_version, generation } => {
+                let mut out = Vec::with_capacity(16);
+                out.extend_from_slice(&col_version.to_le_bytes());
+                out.extend_from_slice(&generation.to_le_bytes());
+                out
+            }
+            Response::HeartbeatAck { live } => vec![u8::from(*live)],
             Response::Error(msg) => msg.as_bytes().to_vec(),
         }
     }
@@ -348,6 +412,15 @@ impl Response {
             OP_PUSHED => Response::Pushed { version: c.u64()? },
             OP_ETA => Response::Eta(c.f64()?),
             OP_SHUTDOWN_ACK => Response::ShutdownAck,
+            OP_REGISTERED => Response::Registered { col_version: c.u64()?, generation: c.u64()? },
+            OP_HEARTBEAT_ACK => Response::HeartbeatAck {
+                live: match c.u8()? {
+                    0 => false,
+                    1 => true,
+                    _ => return Err(WireError::Malformed("heartbeat liveness flag not 0/1")),
+                },
+            },
+            OP_LEAVE_ACK => Response::LeaveAck,
             OP_ERROR => {
                 let msg = String::from_utf8(payload.to_vec())
                     .map_err(|_| WireError::Malformed("error message is not utf-8"))?;
@@ -400,10 +473,13 @@ mod tests {
         for req in [
             Request::FetchProxCol { t: 0 },
             Request::FetchProxCol { t: u32::MAX },
-            Request::PushUpdate { t: 3, step: 0.9, u: vec![1.0, -2.5, f64::MIN_POSITIVE] },
-            Request::PushUpdate { t: 0, step: f64::NEG_INFINITY, u: vec![] },
+            Request::PushUpdate { t: 3, k: 7, step: 0.9, u: vec![1.0, -2.5, f64::MIN_POSITIVE] },
+            Request::PushUpdate { t: 0, k: u64::MAX, step: f64::NEG_INFINITY, u: vec![] },
             Request::FetchEta,
             Request::Shutdown,
+            Request::Register { t: 2 },
+            Request::Heartbeat { t: u32::MAX },
+            Request::Leave { t: 0 },
         ] {
             assert_eq!(roundtrip_request(&req), req);
         }
@@ -417,6 +493,11 @@ mod tests {
             Response::Pushed { version: u64::MAX },
             Response::Eta(1.25e-3),
             Response::ShutdownAck,
+            Response::Registered { col_version: 41, generation: 3 },
+            Response::Registered { col_version: 0, generation: 0 },
+            Response::HeartbeatAck { live: true },
+            Response::HeartbeatAck { live: false },
+            Response::LeaveAck,
             Response::Error("task index 9 out of range (T=4)".into()),
             Response::Error(String::new()),
         ] {
@@ -437,7 +518,12 @@ mod tests {
                 ((u, step), t)
             },
             |((u, step), t)| {
-                let req = Request::PushUpdate { t: *t as u32, step: *step, u: u.clone() };
+                let req = Request::PushUpdate {
+                    t: *t as u32,
+                    k: *t as u64 * 31,
+                    step: *step,
+                    u: u.clone(),
+                };
                 roundtrip_request(&req) == req
             },
         );
@@ -462,9 +548,9 @@ mod tests {
     #[test]
     fn nan_payloads_roundtrip_bitwise() {
         // PartialEq on NaN is false; compare bit patterns instead.
-        let req = Request::PushUpdate { t: 1, step: f64::NAN, u: vec![f64::NAN, 1.0] };
+        let req = Request::PushUpdate { t: 1, k: 0, step: f64::NAN, u: vec![f64::NAN, 1.0] };
         match roundtrip_request(&req) {
-            Request::PushUpdate { t, step, u } => {
+            Request::PushUpdate { t, k: _, step, u } => {
                 assert_eq!(t, 1);
                 assert_eq!(step.to_bits(), f64::NAN.to_bits());
                 assert_eq!(u[0].to_bits(), f64::NAN.to_bits());
@@ -477,9 +563,11 @@ mod tests {
     #[test]
     fn truncated_frames_error_never_panic() {
         let frames = [
-            Request::PushUpdate { t: 2, step: 0.5, u: vec![1.0, 2.0, 3.0] }.encode(),
+            Request::PushUpdate { t: 2, k: 5, step: 0.5, u: vec![1.0, 2.0, 3.0] }.encode(),
             Request::FetchEta.encode(),
+            Request::Register { t: 1 }.encode(),
             Response::ProxCol(vec![4.0; 7]).encode(),
+            Response::Registered { col_version: 9, generation: 1 }.encode(),
             Response::Error("boom".into()).encode(),
         ];
         for full in &frames {
@@ -500,10 +588,12 @@ mod tests {
         // checks, everything else by the checksum (which covers the header
         // after the magic and the whole payload).
         let frames = [
-            Request::PushUpdate { t: 2, step: 0.5, u: vec![1.0, -2.0] }.encode(),
+            Request::PushUpdate { t: 2, k: 3, step: 0.5, u: vec![1.0, -2.0] }.encode(),
             Request::FetchProxCol { t: 7 }.encode(),
+            Request::Heartbeat { t: 1 }.encode(),
             Response::Pushed { version: 41 }.encode(),
             Response::Eta(0.125).encode(),
+            Response::HeartbeatAck { live: true }.encode(),
         ];
         for full in &frames {
             for pos in 0..full.len() {
@@ -573,9 +663,10 @@ mod tests {
 
     #[test]
     fn ragged_f64_vector_is_rejected() {
-        // 9 bytes after (t, step) is not a whole number of f64s.
+        // 9 bytes after (t, k, step) is not a whole number of f64s.
         let mut payload = Vec::new();
         payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&4u64.to_le_bytes());
         payload.extend_from_slice(&0.5f64.to_bits().to_le_bytes());
         payload.extend_from_slice(&[0u8; 9]);
         let mut out = Vec::new();

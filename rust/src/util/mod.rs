@@ -10,4 +10,4 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 
-pub use rng::Rng;
+pub use rng::{Rng, RngState};

@@ -1,0 +1,447 @@
+//! Integration tests for durability + elastic membership: checkpointed
+//! sessions recover bitwise, a SIGKILL'd serving process resumes to the
+//! same answer, and a task node that dies mid-training is evicted and
+//! replaced without losing the run.
+
+use amtl::coordinator::registry::NodeRegistry;
+use amtl::coordinator::server::CentralServer;
+use amtl::coordinator::state::SharedState;
+use amtl::coordinator::step_size::{KmSchedule, StepController};
+use amtl::coordinator::worker::{run_worker, WorkerCtx};
+use amtl::coordinator::{MtlProblem, SemiSync, Session, Synchronized};
+use amtl::data::synthetic;
+use amtl::net::{DelayModel, FaultModel};
+use amtl::optim::prox::RegularizerKind;
+use amtl::persist::{has_checkpoint, recover, PersistConfig};
+use amtl::runtime::TaskCompute;
+use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport};
+use amtl::util::Rng;
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("amtl_ipersist_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+// ------------------------------------------------ in-proc bitwise recovery
+
+#[test]
+fn checkpointed_session_recovers_bitwise() {
+    // One task ⇒ a strictly sequential commit/prox history ⇒ snapshot +
+    // WAL replay must reproduce the server — online-SVD factorization
+    // included — bit for bit.
+    let dir = tmp_dir("session_bitwise");
+    let p = lowrank_problem(840, 1, 40, 6, 0.2);
+    let r = Session::builder(&p)
+        .iters_per_node(30)
+        .eta_k(0.9)
+        .record_every(1_000_000)
+        .checkpoint_dir(Some(dir.clone()))
+        .checkpoint_every(7)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(r.checkpoints_written >= 2, "genesis + at least one rotation");
+    assert!(has_checkpoint(&dir));
+
+    let rec = recover(PersistConfig::new(&dir, 7)).unwrap();
+    assert_eq!(rec.server.state().snapshot(), r.v_final, "V recovers bitwise");
+    assert_eq!(rec.server.final_w(), r.w_final, "W recovers bitwise");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resumed_session_continues_to_the_uninterrupted_answer() {
+    // Run 8 of 20 activations, drop everything, resume from disk for the
+    // remaining 12: the final iterate must equal a straight 20-activation
+    // run bitwise (single task ⇒ deterministic; commit dedup keys make
+    // the resumed worker start exactly where the durable state ends).
+    let dir = tmp_dir("session_resume");
+    let p = lowrank_problem(841, 1, 40, 6, 0.2);
+    let run = |iters: usize, resume: bool, checkpoint: bool| {
+        let mut b = Session::builder(&p)
+            .iters_per_node(iters)
+            .eta_k(0.9)
+            .record_every(1_000_000);
+        if checkpoint {
+            b = b.checkpoint_dir(Some(dir.clone())).checkpoint_every(5).resume(resume);
+        }
+        b.build().unwrap().run().unwrap()
+    };
+    let partial = run(8, false, true);
+    assert_eq!(partial.updates, 8);
+
+    let resumed = run(20, true, true);
+    assert_eq!(resumed.updates, 12, "resume skips the 8 applied activations");
+    assert!(resumed.wal_replayed > 0, "the WAL tail must have replayed");
+
+    let uninterrupted = run(20, false, false);
+    assert_eq!(resumed.w_final, uninterrupted.w_final, "resumed W bitwise");
+    assert_eq!(resumed.v_final, uninterrupted.v_final, "resumed V bitwise");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resumed_synchronized_session_continues_at_the_right_round() {
+    // The round counter must continue at the durable horizon: restarting
+    // it at 0 would let the dedup keys silently swallow the resumed
+    // rounds (regression test).
+    let dir = tmp_dir("resume_smtl");
+    let p = lowrank_problem(843, 2, 30, 5, 0.2);
+    let run = |iters: usize, resume: bool, checkpoint: bool| {
+        let mut b = Session::builder(&p)
+            .iters_per_node(iters)
+            .eta_k(0.9)
+            .record_every(1_000_000)
+            .schedule(Synchronized);
+        if checkpoint {
+            b = b.checkpoint_dir(Some(dir.clone())).checkpoint_every(4).resume(resume);
+        }
+        b.build().unwrap().run().unwrap()
+    };
+    let partial = run(6, false, true);
+    assert_eq!(partial.updates, 12, "6 rounds x 2 nodes");
+    let resumed = run(15, true, true);
+    assert_eq!(resumed.updates, 18, "9 resumed rounds x 2 nodes");
+    let uninterrupted = run(15, false, false);
+    assert_eq!(resumed.v_final, uninterrupted.v_final, "smtl resume is bitwise");
+    assert_eq!(resumed.w_final, uninterrupted.w_final);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resumed_semisync_session_does_not_stall() {
+    // The staleness gate's completed counters are primed with the
+    // applied-commit horizons on resume: with them at 0, every resumed
+    // worker would park forever (regression test).
+    let dir = tmp_dir("resume_semisync");
+    let p = lowrank_problem(844, 3, 20, 5, 0.2);
+    let run = |iters: usize, resume: bool| {
+        Session::builder(&p)
+            .iters_per_node(iters)
+            .eta_k(0.9)
+            .record_every(1_000_000)
+            .checkpoint_dir(Some(dir.clone()))
+            .checkpoint_every(5)
+            .resume(resume)
+            .schedule(SemiSync { staleness_bound: 2 })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let partial = run(5, false);
+    assert_eq!(partial.updates, 15);
+    let resumed = run(12, true);
+    assert_eq!(resumed.updates, 21, "7 resumed activations x 3 nodes");
+    assert_eq!(resumed.updates_per_node, vec![7; 3]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------- SIGKILL the serve process
+
+fn amtl_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_amtl")
+}
+
+/// The shared problem definition every process derives (mirrors
+/// `build_problem` for `--tasks 1 --n 40 --dim 6` + defaults).
+fn serve_problem() -> MtlProblem {
+    let mut rng = Rng::new(7);
+    let ds = synthetic::lowrank_regression(&[40; 1], 6, 3, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng)
+}
+
+/// Spawn `amtl --serve 127.0.0.1:0 …` and return the child plus the
+/// address it reports on stdout (the rest of stdout keeps draining in a
+/// background thread so the child never blocks on a full pipe).
+fn spawn_serve(dir: &Path, resume: bool) -> (Child, String) {
+    let mut cmd = Command::new(amtl_bin());
+    cmd.args([
+        "--serve",
+        "127.0.0.1:0",
+        "--tasks",
+        "1",
+        "--n",
+        "40",
+        "--dim",
+        "6",
+        "--iters",
+        "60",
+        "--svd",
+        "exact",
+        "--checkpoint-every",
+        "8",
+        "--checkpoint-dir",
+    ])
+    .arg(dir)
+    .stdout(Stdio::piped())
+    .stderr(Stdio::null());
+    if resume {
+        cmd.arg("--resume");
+    }
+    let mut child = cmd.spawn().expect("spawn amtl --serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        for line in std::io::BufReader::new(stdout).lines().map_while(Result::ok) {
+            if let Some(addr) = line.strip_prefix("central node serving on ") {
+                let _ = tx.send(addr.trim().to_string());
+            }
+        }
+    });
+    let addr = rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("serve process must report its address");
+    (child, addr)
+}
+
+fn serve_worker(addr: &str, resume: bool, delay: DelayModel, opts: TcpOptions) -> WorkerCtx {
+    let client = TcpClient::connect(addr, opts).expect("connect to serve process");
+    WorkerCtx {
+        t: 0,
+        iters: 60,
+        transport: Box::new(client),
+        controller: Arc::new(StepController::new(KmSchedule::fixed(0.5), false, 1, 5)),
+        delay,
+        faults: FaultModel::None,
+        sgd_fraction: None,
+        time_scale: Duration::from_millis(100),
+        sink: None,
+        rng: Rng::new(7).fork(0),
+        gate: None,
+        heartbeat: None,
+        resume,
+    }
+}
+
+fn wait_exit(child: &mut Child, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(status.success(), "{what} exited with {status}");
+                return;
+            }
+            None if Instant::now() > deadline => {
+                let _ = child.kill();
+                panic!("{what} did not exit in time");
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+/// Objective of the state a checkpoint directory recovers to.
+fn recovered_objective(dir: &Path, p: &MtlProblem) -> f64 {
+    let rec = recover(PersistConfig::new(dir, 8)).unwrap();
+    assert_eq!(rec.server.state().col_version(0), 60, "full budget recovered");
+    p.objective(&rec.server.final_w())
+}
+
+#[test]
+fn sigkilled_server_resumes_to_the_uninterrupted_objective() {
+    let p = serve_problem();
+
+    // Reference: uninterrupted serve + node run.
+    let dir_a = tmp_dir("serve_ref");
+    let (mut child_a, addr_a) = spawn_serve(&dir_a, false);
+    let mut compute_a = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let stats = run_worker(
+        serve_worker(&addr_a, false, DelayModel::None, TcpOptions::default()),
+        compute_a[0].as_mut(),
+    )
+    .unwrap();
+    assert_eq!(stats.updates, 60);
+    wait_exit(&mut child_a, "uninterrupted serve");
+    let f_ref = recovered_objective(&dir_a, &p);
+
+    // Interrupted: same run, but the server is SIGKILL'd mid-training.
+    let dir_b = tmp_dir("serve_kill");
+    let (mut child_b, addr_b) = spawn_serve(&dir_b, false);
+    let mut compute_b = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    // ~25 ms per activation: the 60-activation budget takes ~1.5 s, and
+    // the kill lands mid-run. Short retries so the orphaned worker gives
+    // up quickly once the server is gone.
+    let slow = DelayModel::OffsetJitter { offset: Duration::from_millis(25), jitter: Duration::ZERO };
+    let quick = TcpOptions {
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_millis(500),
+        retries: 2,
+        retry_backoff: Duration::from_millis(50),
+    };
+    let worker = std::thread::spawn({
+        let addr_b = addr_b.clone();
+        let mut compute = compute_b.remove(0);
+        move || {
+            // The worker errors out when the server dies under it —
+            // that is the expected outcome, not a test failure.
+            let _ = run_worker(serve_worker(&addr_b, false, slow, quick), compute.as_mut());
+        }
+    });
+    std::thread::sleep(Duration::from_millis(700));
+    child_b.kill().expect("SIGKILL the serve process");
+    let _ = child_b.wait();
+    worker.join().unwrap();
+
+    // Some progress must have been made and must have survived the kill.
+    let partial = recover(PersistConfig::new(&dir_b, 8)).unwrap();
+    let done = partial.server.state().col_version(0);
+    assert!(done > 0 && done < 60, "kill must land mid-run (got {done} commits)");
+    drop(partial);
+
+    // Restart with --resume; a fresh node catches up from the applied-
+    // commit horizon and finishes the budget.
+    let (mut child_b2, addr_b2) = spawn_serve(&dir_b, true);
+    let mut compute_b2 = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let stats = run_worker(
+        serve_worker(&addr_b2, true, DelayModel::None, TcpOptions::default()),
+        compute_b2[0].as_mut(),
+    )
+    .unwrap();
+    assert_eq!(stats.updates + done, 60, "resumed node does only the remainder");
+    wait_exit(&mut child_b2, "resumed serve");
+
+    // Acceptance: the resumed run lands on the uninterrupted objective.
+    let f_resumed = recovered_objective(&dir_b, &p);
+    assert!(
+        (f_resumed - f_ref).abs() < 1e-10,
+        "objective after kill+resume {f_resumed} vs uninterrupted {f_ref}"
+    );
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
+// ------------------------------------- kill and replace a TCP task node
+
+#[test]
+fn killed_tcp_node_is_evicted_and_a_replacement_catches_up() {
+    let p = lowrank_problem(842, 3, 40, 6, 0.2);
+    let iters = 100;
+
+    // Reference objective: plain in-proc session, same seeds.
+    let f_ref = {
+        let r = Session::builder(&p)
+            .iters_per_node(iters)
+            .eta_k(0.9)
+            .record_every(1_000_000)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        p.objective(&r.w_final)
+    };
+
+    // Cluster under test: TCP server + registry (20 ms heartbeats, 60 ms
+    // eviction timeout).
+    let state = Arc::new(SharedState::zeros(p.d(), p.t()));
+    let registry = Arc::new(NodeRegistry::new(p.t(), Duration::from_millis(60)));
+    let server = Arc::new(
+        CentralServer::new(Arc::clone(&state), p.regularizer(), p.eta)
+            .with_registry(Arc::clone(&registry)),
+    );
+    let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), None).unwrap();
+    let addr = handle.addr();
+
+    let mut computes = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let controller = Arc::new(StepController::new(KmSchedule::fixed(0.9), false, p.t(), 5));
+    let mut victim_compute = computes.remove(1); // task 1's private data
+    let mut root = Rng::new(7);
+    let rng0 = root.fork(0);
+    let rng1 = root.fork(1);
+    let rng2 = root.fork(2);
+
+    std::thread::scope(|s| {
+        // Peers 0 and 2: full budget, paced by a small per-activation
+        // delay so they outlive the victim's death + replacement.
+        let (left, right) = computes.split_at_mut(1);
+        for (t, compute, rng) in [(0usize, &mut left[0], rng0), (2, &mut right[0], rng2)] {
+            let controller = Arc::clone(&controller);
+            let client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+            let ctx = WorkerCtx {
+                t,
+                iters,
+                transport: Box::new(client),
+                controller,
+                delay: DelayModel::OffsetJitter {
+                    offset: Duration::from_millis(8),
+                    jitter: Duration::ZERO,
+                },
+                faults: FaultModel::None,
+                sgd_fraction: None,
+                time_scale: Duration::from_millis(100),
+                sink: None,
+                rng,
+                gate: None,
+                heartbeat: Some(Duration::from_millis(20)),
+                resume: false,
+            };
+            let compute = &mut **compute;
+            s.spawn(move || {
+                let stats = run_worker(ctx, compute).unwrap();
+                assert_eq!(stats.updates, iters as u64);
+            });
+        }
+
+        // The victim: drive 30 activations of task 1 by hand, then DROP
+        // the connection — a silent death, no Leave frame, mid-training.
+        let mut client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+        client.register(1).unwrap();
+        let eta = client.eta();
+        for k in 0..30u64 {
+            let w_hat = client.fetch_prox_col(1).unwrap();
+            let (u, _loss) = victim_compute.step(&w_hat, eta).unwrap();
+            client.push_update(1, k, 0.9, &u).unwrap();
+        }
+        drop(client);
+
+        // The peers' heartbeats sweep the registry: the silent node is
+        // evicted within the timeout.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !registry.is_evicted(1) {
+            assert!(Instant::now() < deadline, "victim was never evicted");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        // The replacement node registers, learns 30 commits are already
+        // applied, and does exactly the remaining 70.
+        let client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+        let ctx = WorkerCtx {
+            t: 1,
+            iters,
+            transport: Box::new(client),
+            controller: Arc::clone(&controller),
+            delay: DelayModel::None,
+            faults: FaultModel::None,
+            sgd_fraction: None,
+            time_scale: Duration::from_millis(100),
+            sink: None,
+            rng: rng1,
+            gate: None,
+            heartbeat: Some(Duration::from_millis(20)),
+            resume: true,
+        };
+        let stats = run_worker(ctx, victim_compute.as_mut()).unwrap();
+        assert_eq!(stats.updates, 70, "replacement does only the remainder");
+    });
+    handle.shutdown();
+
+    assert_eq!(state.col_version(1), iters as u64, "task 1's budget fully landed");
+    let f_cluster = p.objective(&server.final_w());
+    assert!(
+        (f_cluster - f_ref).abs() / f_ref.max(1e-9) < 0.05,
+        "kill-and-replace cluster {f_cluster} vs in-proc {f_ref}"
+    );
+}

@@ -347,6 +347,8 @@ fn full_pjrt_l21_amtl_run() {
                 }),
                 rng: Rng::new(700 + t as u64),
                 gate: None,
+                heartbeat: None,
+                resume: false,
             };
             s.spawn(move || run_worker(ctx, c.as_mut()).unwrap());
         }

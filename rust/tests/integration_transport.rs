@@ -148,6 +148,8 @@ fn node_style_tcp_cluster_converges_to_inproc_objective() {
                 sink: None,
                 rng: root.fork(t as u64),
                 gate: None,
+                heartbeat: None,
+                resume: false,
             };
             s.spawn(move || {
                 let stats = run_worker(ctx, compute.as_mut()).unwrap();

@@ -335,3 +335,111 @@ fn prop_parallel_gram_bitwise_equals_serial() {
         },
     );
 }
+
+// --------------------------------------------------- persist codec / WAL
+
+#[test]
+fn prop_snapshot_roundtrips_bitwise() {
+    use amtl::coordinator::server::CentralServer;
+    use amtl::persist::{Checkpointer, PersistConfig, ServerSnapshot};
+    forall(
+        "server snapshot encode/decode is the identity",
+        15,
+        |g| {
+            let d = g.usize_in(1, 8).max(1);
+            let t = g.usize_in(1, 5).max(1);
+            let commits = g.usize_in(0, 12);
+            ((g.normal_vec(d * t), d), (t, commits))
+        },
+        |((v, d), (t, commits))| {
+            // Build a durable server, drive a few commit/prox rounds so
+            // every snapshot section is non-trivial, then round-trip the
+            // latest snapshot through bytes.
+            let dir = std::env::temp_dir().join(format!(
+                "amtl_prop_snap_{}_{d}x{t}_{commits}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            let m = mat_from(v, *d);
+            let state = std::sync::Arc::new(SharedState::new(&m));
+            let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3)
+                .with_online_svd(&m)
+                .with_resvd_every(4);
+            let cp = std::sync::Arc::new(
+                Checkpointer::create(PersistConfig::new(&dir, 3)).unwrap(),
+            );
+            let srv = CentralServer::new(state, reg, 0.2)
+                .with_checkpointer(cp)
+                .unwrap();
+            let mut rng = Rng::new((*commits as u64 + 1) * 31);
+            for i in 0..*commits {
+                let u = rng.normal_vec(*d);
+                srv.commit_update(i % t, (i / t) as u64, &u, 0.6).unwrap();
+                let _ = srv.prox_matrix();
+            }
+            if let Some(cp) = srv.checkpointer() {
+                cp.checkpoint_now(&srv).unwrap();
+            }
+            // Round-trip the newest snapshot file through the codec.
+            let newest = std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().map(|x| x == "amtls").unwrap_or(false))
+                .max()
+                .unwrap();
+            let snap = ServerSnapshot::read_file(&newest).unwrap();
+            let mut buf = Vec::new();
+            snap.encode(&mut buf).unwrap();
+            let back = ServerSnapshot::decode(&mut std::io::Cursor::new(&buf)).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            back == snap
+        },
+    );
+}
+
+#[test]
+fn prop_wal_replay_equals_live_run_bitwise() {
+    use amtl::coordinator::server::CentralServer;
+    use amtl::persist::{recover, Checkpointer, PersistConfig};
+    forall(
+        "snapshot + wal replay reproduces the live server bitwise",
+        10,
+        |g| {
+            let d = g.usize_in(2, 8).max(2);
+            let t = g.usize_in(1, 4).max(1);
+            let commits = g.usize_in(1, 15).max(1);
+            let stride = g.usize_in(1, 6).max(1);
+            ((d, t), (commits, stride))
+        },
+        |((d, t), (commits, stride))| {
+            let dir = std::env::temp_dir().join(format!(
+                "amtl_prop_replay_{}_{d}x{t}_{commits}_{stride}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            let mut rng = Rng::new((*commits * 7 + *stride) as u64);
+            let m = Mat::randn(*d, *t, &mut rng);
+            let state = std::sync::Arc::new(SharedState::new(&m));
+            let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3)
+                .with_online_svd(&m)
+                .with_resvd_every(3);
+            let cp = std::sync::Arc::new(
+                Checkpointer::create(PersistConfig::new(&dir, *stride as u64)).unwrap(),
+            );
+            let srv = CentralServer::new(state, reg, 0.2)
+                .with_checkpointer(cp)
+                .unwrap();
+            for i in 0..*commits {
+                let u = rng.normal_vec(*d);
+                srv.commit_update(i % t, (i / t) as u64, &u, 0.6).unwrap();
+                let _ = srv.prox_matrix();
+            }
+            let rec = recover(PersistConfig::new(&dir, *stride as u64)).unwrap();
+            let ok = rec.server.state().snapshot() == srv.state().snapshot()
+                && rec.server.final_w() == srv.final_w();
+            std::fs::remove_dir_all(&dir).ok();
+            ok
+        },
+    );
+}
