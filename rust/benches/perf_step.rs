@@ -13,7 +13,11 @@
 //!    once with `--svd exact` semantics and once with the incremental
 //!    default — `updates_per_sec` for both lands in
 //!    `BENCH_perf_step.json`, so a single run records the before/after;
-//! 5. durability overhead: the same throughput run with checkpointing on
+//! 5. **per-formulation throughput**: an async run per registered
+//!    coupling (nuclear, ℓ2,1, elastic net, graph, mean) —
+//!    `throughput_reg_<name>` records cover every server prox path the
+//!    open formulation API ships;
+//! 6. durability overhead: the same throughput run with checkpointing on
 //!    (WAL fsync per commit + snapshot rotations), recorded as
 //!    `throughput_checkpointed` / `durability_overhead`.
 //!
@@ -230,6 +234,33 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     println!("  online/exact speedup: {speedup:.2}x (threads={})", amtl::linalg::threads());
+
+    // ---- per-formulation server throughput (the open formulation API) ---
+    println!("\n=== per-formulation server throughput (updates/sec, async, no delay) ===");
+    {
+        let (ft, fn_, fd, fiters) = if quick { (4, 20, 10, 3) } else { (20, 60, 40, 10) };
+        let mut table = Table::new(&["formulation", "updates/sec", "objective", "prox"]);
+        for spec_str in ["nuclear", "l21", "elasticnet", "graph:topology=ring,weight=0.5", "mean"]
+        {
+            let spec = amtl::optim::FormulationSpec::parse(spec_str)?;
+            let name = spec.name();
+            let mut rng = Rng::new(8);
+            let ds = synthetic::lowrank_regression(&vec![fn_; ft], fd, 3, 0.5, &mut rng);
+            let problem = MtlProblem::try_new(ds, spec, 0.3, 0.5, &mut rng)?;
+            amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+            let cfg = ExpConfig { iters: fiters, offset_units: 0.0, ..Default::default() };
+            let r = run_once(&problem, engine, pool.as_ref(), &cfg, Async)?;
+            let ups = r.updates as f64 / r.wall_time.as_secs_f64().max(1e-12);
+            log.record_run(&format!("throughput_reg_{name}"), &r, problem.objective(&r.w_final));
+            table.row(vec![
+                name.to_string(),
+                format!("{ups:.1}"),
+                format!("{:.4}", problem.objective(&r.w_final)),
+                r.prox_count.to_string(),
+            ]);
+        }
+        table.print();
+    }
 
     // ---- durability overhead: same run with the WAL + snapshots on ------
     println!("\n=== durability: checkpointed run (WAL fsync per commit + snapshots) ===");

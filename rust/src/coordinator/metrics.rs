@@ -94,10 +94,12 @@ pub struct RunResult {
     /// Number of proximal mappings actually computed by the server.
     pub prox_count: u64,
     /// Same-task commits the server coalesced before folding them into
-    /// the online SVD (0 on the exact path).
+    /// the formulation's incremental state (0 on the exact path, or for
+    /// formulations without an incremental form).
     pub coalesced_updates: u64,
-    /// Exact Jacobi refreshes of the online factorization (0 on the
-    /// exact path).
+    /// Exact refreshes of the formulation's incremental state — Jacobi
+    /// re-anchors of the online SVD, re-centres of the mean formulation's
+    /// running centroid (0 on the exact path).
     pub svd_refreshes: u64,
     /// Recorded trajectory (V snapshots).
     pub trajectory: Vec<TrajectoryPoint>,

@@ -38,7 +38,9 @@
 //!   (the lock-free-read semantics of §III.C / Fig. 2, which the ARock
 //!   convergence analysis explicitly tolerates).
 //! * [`server`] — the backward step: proximal mapping of the coupling
-//!   regularizer over a snapshot of `V`, with a version-keyed cache, plus
+//!   regularizer — any [`SharedProx`](crate::optim::formulation::SharedProx)
+//!   impl from the formulation registry — over a snapshot of `V` (or its
+//!   snapshot-free incremental path), with a version-keyed cache, plus
 //!   [`server::CentralServer::commit_update`], the single commit path
 //!   both transports land updates through.
 //! * [`worker`] — a task node: network delay → fetch its prox block
@@ -77,5 +79,5 @@ pub mod worker;
 pub use metrics::RunResult;
 pub use problem::MtlProblem;
 pub use registry::{NodeRegistry, NodeStatus};
-pub use schedule::{Async, Schedule, SemiSync, StalenessGate, Synchronized};
+pub use schedule::{schedule_from_cli, Async, Schedule, SemiSync, StalenessGate, Synchronized};
 pub use session::{DEFAULT_RESVD_EVERY, RunConfig, Session, SessionBuilder};

@@ -1,11 +1,18 @@
 //! Problem definition: a multi-task dataset + regularized MTL formulation
 //! (Eq. III.1), with derived constants (Lipschitz, step sizes) and the
 //! exact objective evaluator used for reporting.
+//!
+//! The coupling regularizer is addressed through the open
+//! [`formulation`](crate::optim::formulation) API: the problem carries a
+//! [`FormulationSpec`] (a registered name + params, e.g. `nuclear` or
+//! `graph:topology=ring`), resolves it once at construction, and hands
+//! fresh [`SharedProx`] instances to whoever needs one (the central
+//! server owns a mutable one; reporting paths use throwaway clones).
 
 use crate::data::MultiTaskDataset;
 use crate::linalg::Mat;
+use crate::optim::formulation::{self, FormulationSpec, SharedProx};
 use crate::optim::lipschitz::task_lipschitz;
-use crate::optim::prox::{Regularizer, RegularizerKind};
 use crate::runtime::{make_task_computes, ComputePool, Engine, TaskCompute};
 use crate::util::Rng;
 use anyhow::Result;
@@ -14,16 +21,18 @@ use anyhow::Result;
 pub struct MtlProblem {
     /// The per-task data.
     pub dataset: MultiTaskDataset,
-    /// Which coupling regularizer the problem uses.
-    pub reg_kind: RegularizerKind,
+    /// Which coupling formulation the problem uses (resolved through the
+    /// registry at construction).
+    pub formulation: FormulationSpec,
     /// Regularization strength λ.
     pub lambda: f64,
-    /// Elastic-net ℓ2 weight (ignored by other regularizers).
-    pub gamma: f64,
     /// Forward/backward step size `η ∈ (0, 2/L)`.
     pub eta: f64,
     /// Max per-task Lipschitz constant (the `L` of the joint loss).
     pub l_max: f64,
+    /// The resolved regularizer prototype; [`MtlProblem::regularizer`]
+    /// clones it so the spec is validated exactly once.
+    reg_proto: Box<dyn SharedProx>,
     /// Cached all-ones row masks, one per task (the loss kernels take a
     /// mask argument; reporting paths reuse these instead of allocating a
     /// fresh `vec![1.0; n]` per objective evaluation).
@@ -33,13 +42,36 @@ pub struct MtlProblem {
 impl MtlProblem {
     /// Build a problem, estimating `L` by power iteration and choosing
     /// `η = eta_scale · 2/L` (`eta_scale ∈ (0,1)`, typically 0.5).
+    ///
+    /// `reg` is anything that converts into a [`FormulationSpec`] — a
+    /// classic [`RegularizerKind`](crate::optim::prox::RegularizerKind)
+    /// or a parsed spec. Panics if the spec does not resolve (a classic
+    /// kind always does); use [`MtlProblem::try_new`] for fallible specs
+    /// such as CLI input or file-backed graphs.
     pub fn new(
         dataset: MultiTaskDataset,
-        reg_kind: RegularizerKind,
+        reg: impl Into<FormulationSpec>,
         lambda: f64,
         eta_scale: f64,
         rng: &mut Rng,
     ) -> MtlProblem {
+        MtlProblem::try_new(dataset, reg, lambda, eta_scale, rng)
+            .expect("formulation spec must resolve (use try_new for fallible specs)")
+    }
+
+    /// Fallible form of [`MtlProblem::new`]: errors when the formulation
+    /// spec does not resolve against the registry (unknown params, graph
+    /// that does not cover the task count, ...).
+    pub fn try_new(
+        dataset: MultiTaskDataset,
+        reg: impl Into<FormulationSpec>,
+        lambda: f64,
+        eta_scale: f64,
+        rng: &mut Rng,
+    ) -> Result<MtlProblem> {
+        let formulation = reg.into();
+        // Default elastic-net ℓ2 weight; override per spec (`:gamma=G`).
+        let reg_proto = formulation::resolve(&formulation, lambda, 1.0, dataset.t())?;
         let l_max = dataset
             .tasks
             .iter()
@@ -47,7 +79,15 @@ impl MtlProblem {
             .fold(0.0, f64::max);
         let eta = crate::optim::lipschitz::forward_step_size(l_max, eta_scale);
         let ones_masks = dataset.tasks.iter().map(|t| vec![1.0; t.n()]).collect();
-        MtlProblem { dataset, reg_kind, lambda, gamma: 1.0, eta, l_max, ones_masks }
+        Ok(MtlProblem {
+            dataset,
+            formulation,
+            lambda,
+            eta,
+            l_max,
+            reg_proto,
+            ones_masks,
+        })
     }
 
     /// Number of tasks.
@@ -61,11 +101,13 @@ impl MtlProblem {
     }
 
     /// A fresh regularizer instance (the server owns a mutable one).
-    pub fn regularizer(&self) -> Regularizer {
-        match self.reg_kind {
-            RegularizerKind::ElasticNet => Regularizer::elastic_net(self.lambda, self.gamma),
-            k => Regularizer::new(k, self.lambda),
-        }
+    pub fn regularizer(&self) -> Box<dyn SharedProx> {
+        self.reg_proto.clone_box()
+    }
+
+    /// Canonical name of the problem's coupling formulation.
+    pub fn reg_name(&self) -> &'static str {
+        self.reg_proto.id()
     }
 
     /// The cached all-ones mask for task `t` (full-batch evaluation).
@@ -92,7 +134,7 @@ impl MtlProblem {
     /// Exact objective `F(W) = Σ ℓ_t(w_t) + λ g(W)` (native f64 path —
     /// never on the update path).
     pub fn objective(&self, w: &Mat) -> f64 {
-        self.loss_value(w) + self.regularizer().value(w)
+        self.loss_value(w) + self.reg_proto.value(w)
     }
 
     /// Smooth part only: `Σ_t ℓ_t(w_t)`.
@@ -144,6 +186,7 @@ impl MtlProblem {
 mod tests {
     use super::*;
     use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
 
     fn small_problem(seed: u64) -> MtlProblem {
         let mut rng = Rng::new(seed);
@@ -203,5 +246,24 @@ mod tests {
         let w = ds.w_true.clone().unwrap();
         let p = MtlProblem::new(ds, RegularizerKind::None, 0.0, 0.5, &mut rng);
         assert!(p.train_rmse(&w) < 1e-9);
+    }
+
+    #[test]
+    fn problem_resolves_open_formulations_by_spec() {
+        let mut rng = Rng::new(118);
+        let ds = synthetic::lowrank_regression(&[20; 3], 6, 2, 0.1, &mut rng);
+        let spec = FormulationSpec::parse("graph:topology=ring,weight=0.5").unwrap();
+        let p = MtlProblem::try_new(ds, spec, 0.3, 0.5, &mut rng).unwrap();
+        assert_eq!(p.reg_name(), "graph");
+        assert_eq!(p.formulation.name(), "graph");
+        assert_eq!(p.regularizer().lambda(), 0.3);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_specs() {
+        let mut rng = Rng::new(119);
+        let ds = synthetic::lowrank_regression(&[20; 2], 5, 2, 0.1, &mut rng);
+        let spec = FormulationSpec::parse("mean:bogus=1").unwrap();
+        assert!(MtlProblem::try_new(ds, spec, 0.3, 0.5, &mut rng).is_err());
     }
 }

@@ -312,6 +312,24 @@ impl Schedule for Synchronized {
     }
 }
 
+/// Resolve a CLI `--method` name (+ the optional `--staleness` bound)
+/// into a schedule, rejecting the contradictory combination of a
+/// staleness bound with a schedule that has no staleness concept — that
+/// flag silently doing nothing is exactly the misconfiguration class
+/// `RunConfig::validate` exists to catch.
+pub fn schedule_from_cli(method: &str, staleness: Option<u64>) -> Result<Box<dyn Schedule>> {
+    anyhow::ensure!(
+        staleness.is_none() || method == "semisync",
+        "--staleness only applies to --method semisync (got --method {method})"
+    );
+    Ok(match method {
+        "amtl" => Box::new(Async),
+        "smtl" => Box::new(Synchronized),
+        "semisync" => Box::new(SemiSync { staleness_bound: staleness.unwrap_or(4) }),
+        other => anyhow::bail!("unknown --method '{other}' (expected one of amtl|smtl|semisync)"),
+    })
+}
+
 /// Progress tracker for [`SemiSync`]: nodes block in `wait_to_start(k)`
 /// until every *live* node has completed at least `k - bound` activations.
 /// Finished/crashed/errored nodes deactivate themselves so they stop
@@ -428,6 +446,18 @@ mod tests {
         let mut rng = Rng::new(seed);
         let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.05, &mut rng);
         MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn schedule_from_cli_resolves_and_rejects_contradictions() {
+        assert_eq!(schedule_from_cli("amtl", None).unwrap().name(), "amtl");
+        assert_eq!(schedule_from_cli("smtl", None).unwrap().name(), "smtl");
+        assert_eq!(schedule_from_cli("semisync", Some(2)).unwrap().name(), "semisync");
+        assert_eq!(schedule_from_cli("semisync", None).unwrap().name(), "semisync");
+        let err = schedule_from_cli("amtl", Some(3)).unwrap_err();
+        assert!(format!("{err}").contains("--staleness"), "{err}");
+        let err = schedule_from_cli("bogus", None).unwrap_err();
+        assert!(format!("{err}").contains("amtl|smtl|semisync"), "{err}");
     }
 
     #[test]

@@ -36,8 +36,8 @@
 use super::registry::NodeRegistry;
 use super::state::SharedState;
 use crate::linalg::Mat;
-use crate::optim::prox::Regularizer;
-use crate::persist::{Checkpointer, ServerSnapshot, WalEntry};
+use crate::optim::formulation::{self, SharedProx};
+use crate::persist::{Checkpointer, FormulationState, ServerSnapshot, WalEntry};
 use crate::util::RngState;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -45,10 +45,12 @@ use std::sync::{Arc, Mutex, RwLock};
 /// The central node: regularizer owner and backward-step executor.
 pub struct CentralServer {
     state: Arc<SharedState>,
-    reg: Mutex<Regularizer>,
-    /// True iff `reg` runs the incremental nuclear prox (fixed at
-    /// construction; lets the commit path skip the pending slots — and any
-    /// shared state beyond the column — when the fold would be a no-op).
+    /// The coupling formulation, behind the open
+    /// [`SharedProx`] API — any registered regularizer plugs in here.
+    reg: Mutex<Box<dyn SharedProx>>,
+    /// True iff `reg` runs an incremental prox (fixed at construction;
+    /// lets the commit path skip the pending slots — and any shared state
+    /// beyond the column — when the fold would be a no-op).
     online: bool,
     /// Prox step size `η` (the same η as the forward step, Eq. III.4).
     eta: f64,
@@ -95,8 +97,8 @@ pub struct CentralServer {
 
 impl CentralServer {
     /// A server over `state` applying `reg` with prox step `eta`.
-    pub fn new(state: Arc<SharedState>, reg: Regularizer, eta: f64) -> CentralServer {
-        let online = reg.uses_online_svd();
+    pub fn new(state: Arc<SharedState>, reg: Box<dyn SharedProx>, eta: f64) -> CentralServer {
+        let online = reg.is_incremental();
         let pending = (0..state.t()).map(|_| Mutex::new(None)).collect();
         let applied_k = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
         CentralServer {
@@ -186,7 +188,7 @@ impl CentralServer {
         pool: &crate::runtime::ComputePool,
     ) -> anyhow::Result<CentralServer> {
         anyhow::ensure!(
-            self.reg.lock().unwrap().kind == crate::optim::prox::RegularizerKind::L21,
+            self.reg.lock().unwrap().id() == "l21",
             "PJRT prox is only available for the l21 regularizer"
         );
         let prox = crate::runtime::PjrtL21Prox::new(pool, self.state.d(), self.state.t())?;
@@ -204,6 +206,16 @@ impl CentralServer {
         self.eta
     }
 
+    /// Registry id of the coupling formulation this server applies.
+    pub fn reg_id(&self) -> &'static str {
+        self.reg.lock().unwrap().id()
+    }
+
+    /// Strength λ of the coupling formulation this server applies.
+    pub fn reg_lambda(&self) -> f64 {
+        self.reg.lock().unwrap().lambda()
+    }
+
     /// Number of proximal mappings actually computed (not cache hits).
     pub fn prox_count(&self) -> u64 {
         self.prox_count.load(Ordering::Relaxed)
@@ -215,14 +227,14 @@ impl CentralServer {
         self.coalesced.load(Ordering::Relaxed)
     }
 
-    /// Exact refreshes the online factorization has gone through.
+    /// Exact refreshes the incremental formulation state has gone through.
     pub fn svd_refresh_count(&self) -> u64 {
-        self.reg.lock().unwrap().svd_refreshes()
+        self.reg.lock().unwrap().refresh_count()
     }
 
-    /// Reconstruction drift measured at the last exact refresh.
+    /// Drift measured at the last exact refresh.
     pub fn svd_drift(&self) -> f64 {
-        self.reg.lock().unwrap().svd_drift()
+        self.reg.lock().unwrap().refresh_drift()
     }
 
     /// The full backward step `Prox_{ηλg}(V̂)` over a fresh-enough snapshot.
@@ -274,20 +286,20 @@ impl CentralServer {
     /// Shared by the live fetch path and WAL replay.
     fn prox_fold_and_compute(&self) -> Mat {
         let mut reg = self.reg.lock().unwrap();
-        self.drain_pending(&mut reg);
+        self.drain_pending(&mut **reg);
         if reg.needs_refresh() {
             // Snapshot after the counter drain (in drain_pending): commits
             // that land in between are already inside the snapshot the
-            // factorization is rebuilt from, so no commit ever escapes the
-            // stride accounting.
-            reg.refresh_online(&self.state.snapshot());
+            // incremental state is rebuilt from, so no commit ever escapes
+            // the stride accounting.
+            reg.refresh(&self.state.snapshot());
         }
         let out = if let Some(m) = reg.online_prox(self.eta) {
             m
         } else {
             let mut snap = self.state.snapshot();
             if let Some(pjrt) = &self.pjrt_prox {
-                let tau = self.eta * reg.lambda;
+                let tau = self.eta * reg.lambda();
                 // Artifact failures fall back to the native mirror
                 // (identical math) rather than poisoning the run.
                 if pjrt.apply(&mut snap, tau).is_err() {
@@ -302,10 +314,11 @@ impl CentralServer {
         out
     }
 
-    /// Fold every staged column into the online factorization and hand the
-    /// raw-commit count to the regularizer's refresh-stride counter.
-    /// Called with the regularizer lock held; a no-op on the exact path.
-    fn drain_pending(&self, reg: &mut Regularizer) {
+    /// Fold every staged column into the incremental formulation state and
+    /// hand the raw-commit count to the regularizer's refresh-stride
+    /// counter. Called with the regularizer lock held; a no-op on the
+    /// exact path.
+    fn drain_pending(&self, reg: &mut dyn SharedProx) {
         if !self.online {
             return;
         }
@@ -450,22 +463,24 @@ impl CentralServer {
             prox_count: self.prox_count.load(Ordering::Relaxed),
             coalesced: self.coalesced.load(Ordering::Relaxed),
             uncounted_commits: self.uncounted_commits.load(Ordering::Acquire),
-            reg: reg.snapshot_parts(),
+            reg: FormulationState { id: reg.id().to_string(), blob: reg.state_save() },
             rng_streams,
         }
     }
 
     /// Rebuild a server from a snapshot: shared state (values *and*
-    /// version counters), regularizer (online factorization and resvd
-    /// counter included, so the drift bound continues instead of
-    /// resetting), pending slots, dedup keys, and metrics counters. The
-    /// result has no checkpointer/registry attached and no PJRT prox
-    /// (re-attach what the deployment needs).
-    pub fn from_snapshot(snap: &ServerSnapshot) -> CentralServer {
+    /// version counters), the formulation restored by id through the
+    /// registry (incremental state and refresh-stride counter included,
+    /// so the drift bound continues instead of resetting), pending slots,
+    /// dedup keys, and metrics counters. The result has no
+    /// checkpointer/registry attached and no PJRT prox (re-attach what
+    /// the deployment needs). Errors when the snapshot names a
+    /// formulation this build does not register.
+    pub fn from_snapshot(snap: &ServerSnapshot) -> anyhow::Result<CentralServer> {
         let state = Arc::new(SharedState::restore(&snap.v, &snap.col_versions, snap.version));
-        let reg = Regularizer::from_snapshot(&snap.reg);
-        let online = reg.uses_online_svd();
-        CentralServer {
+        let reg = formulation::restore(&snap.reg.id, &snap.reg.blob)?;
+        let online = reg.is_incremental();
+        Ok(CentralServer {
             state,
             reg: Mutex::new(reg),
             online,
@@ -482,14 +497,14 @@ impl CentralServer {
             wal_replayed: AtomicU64::new(0),
             registry: None,
             pjrt_prox: None,
-        }
+        })
     }
 
     /// The final primal iterate `W* = Prox_{ηλg}(V*)` (one extra backward
     /// step maps the auxiliary variable back — §III.C).
     pub fn final_w(&self) -> Mat {
         let mut reg = self.reg.lock().unwrap();
-        self.drain_pending(&mut reg);
+        self.drain_pending(&mut **reg);
         if let Some(m) = reg.online_prox(self.eta) {
             return m;
         }
@@ -502,7 +517,7 @@ impl CentralServer {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::prox::RegularizerKind;
+    use crate::optim::prox::{NuclearProx, Regularizer, RegularizerKind};
     use crate::util::Rng;
 
     fn server_with(kind: RegularizerKind, lambda: f64, eta: f64, d: usize, t: usize) -> CentralServer {
@@ -580,7 +595,7 @@ mod tests {
         let mut rng = Rng::new(103);
         let m = Mat::randn(6, 3, &mut rng);
         let state = Arc::new(SharedState::new(&m));
-        let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3).with_online_svd(&m);
+        let reg = Box::new(NuclearProx::new(0.3).with_online(&m));
         let srv = CentralServer::new(state, reg, 0.2);
         // Three commits to one block before any prox: two coalesce away.
         for k in 0..3 {
@@ -606,9 +621,7 @@ mod tests {
         );
         let online = CentralServer::new(
             Arc::new(SharedState::new(&m)),
-            Regularizer::new(RegularizerKind::Nuclear, 0.4)
-                .with_online_svd(&m)
-                .with_resvd_every(3),
+            Box::new(NuclearProx::new(0.4).with_online(&m).with_resvd_every(3)),
             0.25,
         );
         for step in 0..12 {

@@ -33,6 +33,7 @@ use super::state::SharedState;
 use super::step_size::{KmSchedule, StepController};
 use super::worker::{TrajectorySink, WorkerCtx};
 use crate::net::{DelayModel, FaultModel};
+use crate::optim::formulation::SharedProx;
 use crate::optim::svd::SvdMode;
 use crate::persist::{Checkpointer, PersistConfig};
 use crate::runtime::{ComputePool, Engine, TaskCompute};
@@ -170,16 +171,33 @@ impl RunConfig {
                 problem.d(),
                 problem.t()
             );
+            // The restored formulation must match the problem's spec, or
+            // the server would prox with one coupling while objectives are
+            // reported with another (silently wrong results).
+            anyhow::ensure!(
+                server.reg_id() == problem.reg_name(),
+                "checkpoint was written with the '{}' formulation but the problem \
+                 uses '{}' — resumed runs must keep the original --reg",
+                server.reg_id(),
+                problem.reg_name()
+            );
+            anyhow::ensure!(
+                server.reg_lambda() == problem.lambda,
+                "checkpoint was written with lambda {} but the problem has {} — \
+                 resumed runs must keep the original regularization strength",
+                server.reg_lambda(),
+                problem.lambda
+            );
             server
         } else {
             let state = Arc::new(SharedState::zeros(problem.d(), problem.t()));
             let mut reg = problem.regularizer();
-            if self.svd == SvdMode::Online
-                && reg.kind == crate::optim::prox::RegularizerKind::Nuclear
-            {
-                reg = reg
-                    .with_online_svd(&state.snapshot())
-                    .with_resvd_every(self.resvd_every);
+            if self.svd == SvdMode::Online {
+                // The formulation decides what "incremental" means:
+                // nuclear seeds its Brand factorization, mean its running
+                // centroid; formulations without an incremental form
+                // ignore the hook.
+                reg.enable_incremental(&state.snapshot(), self.resvd_every);
             }
             let mut server = CentralServer::new(Arc::clone(&state), reg, problem.eta)
                 .with_prox_every(self.prox_every);
@@ -220,6 +238,16 @@ impl RunConfig {
             );
         }
         anyhow::ensure!(self.dyn_window >= 1, "dyn_window must be >= 1");
+        anyhow::ensure!(
+            !(self.svd == SvdMode::Exact
+                && self.resvd_every != DEFAULT_RESVD_EVERY
+                && self.resvd_every != 0),
+            "resvd_every only applies to the incremental path (svd = online): \
+             with svd = exact every uncached prox recomputes from scratch, so a \
+             refresh stride of {} would silently do nothing",
+            self.resvd_every
+        );
+        anyhow::ensure!(self.checkpoint_every >= 1, "checkpoint_every must be >= 1");
         anyhow::ensure!(
             !self.resume || self.checkpoint_dir.is_some(),
             "resume requires a checkpoint_dir"
@@ -747,6 +775,29 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(format!("{err}").contains("staleness_bound"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_resvd_with_exact_svd() {
+        // Contradictory-flag fix: an explicit refresh stride under the
+        // exact backend used to pass silently and do nothing.
+        let p = problem(707, 2, 10, 4);
+        let err = Session::builder(&p)
+            .svd(SvdMode::Exact)
+            .resvd_every(32)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("resvd_every"), "{err}");
+        // The default stride and 0 (= never) are not contradictions.
+        assert!(Session::builder(&p).svd(SvdMode::Exact).build().is_ok());
+        assert!(Session::builder(&p).svd(SvdMode::Exact).resvd_every(0).build().is_ok());
+    }
+
+    #[test]
+    fn builder_rejects_zero_checkpoint_stride() {
+        let p = problem(708, 2, 10, 4);
+        let err = Session::builder(&p).checkpoint_every(0).build().unwrap_err();
+        assert!(format!("{err}").contains("checkpoint_every"), "{err}");
     }
 
     #[test]

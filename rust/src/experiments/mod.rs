@@ -104,10 +104,10 @@ pub fn bench_flags(opts: &crate::config::Opts) -> Result<SvdMode> {
     if threads > 0 {
         crate::linalg::configure_threads(threads);
     }
-    let svd = opts
-        .get_one_of("svd", &["online", "exact"], SvdMode::default().name())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mode = SvdMode::parse(&svd).expect("get_one_of validated the value");
+    let mode = match opts.get("svd") {
+        Some(v) => SvdMode::parse(v)?,
+        None => SvdMode::default(),
+    };
     println!("linalg threads: {}  svd: {}", crate::linalg::threads(), mode.name());
     Ok(mode)
 }

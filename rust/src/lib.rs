@@ -18,6 +18,19 @@
 //! [`coordinator::SemiSync`] (bounded staleness) — and a pluggable
 //! [`transport::Transport`] connecting task nodes to the central server.
 //!
+//! ## The open formulation layer
+//!
+//! The math is open-world ([`optim::formulation`]): the coupling
+//! regularizer is a [`optim::SharedProx`] trait object (prox, value,
+//! incremental hooks, persist-state hooks) and the per-task smooth loss
+//! a [`optim::TaskLoss`] impl, both resolved by name through a registry
+//! ([`optim::FormulationSpec`], CLI `--reg name[:k=v,...]`). Registered
+//! formulations: `nuclear`, `l21`, `l1`, `elasticnet`, `none`
+//! ([`optim::prox`]), plus graph-Laplacian relationship coupling and
+//! mean-regularized clustering ([`optim::coupling`]) — every one runs
+//! under every schedule, both transports, and survives
+//! checkpoint/`--resume` through its own opaque state blob.
+//!
 //! ## The transport layer
 //!
 //! The paper's deployment premise is that task data is too large or too

@@ -40,11 +40,12 @@
 use amtl::config::Opts;
 use amtl::coordinator::step_size::{KmSchedule, StepController};
 use amtl::coordinator::worker::{run_worker, WorkerCtx};
-use amtl::coordinator::{Async, MtlProblem, Schedule, SemiSync, Session, Synchronized};
+use amtl::coordinator::{schedule_from_cli, Async, MtlProblem, Schedule, Session, Synchronized};
 use amtl::data::{public, synthetic, MultiTaskDataset};
 use amtl::net::{DelayModel, FaultModel};
-use amtl::optim::prox::RegularizerKind;
+use amtl::optim::coupling::TaskGraph;
 use amtl::optim::svd::SvdMode;
+use amtl::optim::FormulationSpec;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
 use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use amtl::util::Rng;
@@ -129,7 +130,20 @@ DATA OPTIONS (synthetic unless --dataset is given):
   --noise S      label noise sigma                  [0.1]
 
 PROBLEM OPTIONS:
-  --reg <nuclear|l21|l1|elasticnet|none>           [nuclear]
+  --reg <name[:k=v,...]>                           [nuclear]
+                 any registered formulation:
+                   nuclear     low-rank coupling ||W||_* (SVT prox)
+                   l21         joint feature selection ||W||_{2,1}
+                   l1          elementwise sparsity
+                   elasticnet  ||W||_1 + (gamma/2)||W||_F^2  (:gamma=G)
+                   none        decoupled single-task baseline
+                   graph       task-relationship coupling tr(W L W^T)
+                               (:topology=full|ring,weight=W, or
+                               --graph-file)
+                   mean        mean-regularized clustering toward the
+                               task centroid (incremental centroid)
+  --graph-file F similarity graph for --reg graph, JSON:
+                 {"tasks": T, "edges": [[i, j, weight], ...]}
   --lambda L     regularization strength            [0.5]
   --eta-scale S  eta = S * 2/L_max, S in (0,1)      [0.5]
 
@@ -192,11 +206,21 @@ fn build_dataset(opts: &Opts, rng: &mut Rng) -> Result<MultiTaskDataset> {
 
 fn build_problem(opts: &Opts, rng: &mut Rng) -> Result<MtlProblem> {
     let ds = build_dataset(opts, rng)?;
-    let reg = RegularizerKind::parse(&opts.get_or("reg", "nuclear"))
-        .ok_or_else(|| anyhow!("bad --reg"))?;
+    // `--reg` resolves through the open formulation registry: classic
+    // kinds, the new couplings (graph, mean), and `name:key=value` params
+    // all go through one parser.
+    let mut spec = FormulationSpec::parse(&opts.get_or("reg", "nuclear"))?;
+    if let Some(path) = opts.get("graph-file") {
+        ensure!(
+            spec.name() == "graph",
+            "--graph-file only applies to --reg graph (got --reg {})",
+            spec.name()
+        );
+        spec = spec.with_graph(TaskGraph::from_json_file(std::path::Path::new(path))?);
+    }
     let lambda = opts.get_f64("lambda", 0.5)?;
     let eta_scale = opts.get_f64("eta-scale", 0.5)?;
-    Ok(MtlProblem::new(ds, reg, lambda, eta_scale, rng))
+    MtlProblem::try_new(ds, spec, lambda, eta_scale, rng)
 }
 
 struct RunOpts {
@@ -225,10 +249,21 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
     let iters = opts.get_usize("iters", 10)?;
     let default_record = ((t * iters) as u64 / 50).max(1);
     let sgd = opts.get_f64("sgd", 0.0)?;
-    let transport = opts.get_one_of("transport", &["inproc", "tcp"], "inproc")?;
+    let transport = TransportKind::parse(&opts.get_or("transport", "inproc"))?;
     // `--online-svd` predates `--svd` and forces the online backend.
-    let svd_default = if opts.flag("online-svd") { "online" } else { SvdMode::default().name() };
-    let svd = opts.get_one_of("svd", &["online", "exact"], svd_default)?;
+    // (Queried unconditionally so reject_unknown never trips on it.)
+    let legacy_online = opts.flag("online-svd");
+    let svd = match opts.get("svd") {
+        Some(v) => SvdMode::parse(v)?,
+        None if legacy_online => SvdMode::Online,
+        None => SvdMode::default(),
+    };
+    // Contradictory-flag check (mirrored in RunConfig::validate for
+    // programmatic callers): an explicit refresh stride is meaningless
+    // under the exact backend and used to pass silently.
+    if opts.get("resvd-every").is_some() && svd == SvdMode::Exact {
+        bail!("--resvd-every only applies to --svd online (exact recomputes every prox)");
+    }
     Ok(RunOpts {
         iters,
         sgd_fraction: if sgd > 0.0 { Some(sgd) } else { None },
@@ -236,15 +271,19 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
         time_scale: Duration::from_millis(opts.get_u64("time-scale", 100)?),
         eta_k: opts.get_f64("eta-k", 0.5)?,
         dynamic: opts.flag("dynamic-step"),
-        svd: SvdMode::parse(&svd).expect("get_one_of validated the value"),
-        resvd_every: opts.get_u64("resvd-every", amtl::coordinator::DEFAULT_RESVD_EVERY)?,
+        svd,
+        resvd_every: if svd == SvdMode::Exact {
+            amtl::coordinator::DEFAULT_RESVD_EVERY
+        } else {
+            opts.get_u64("resvd-every", amtl::coordinator::DEFAULT_RESVD_EVERY)?
+        },
         prox_every: opts.get_u64("prox-every", 1)?,
         engine: Engine::parse(&opts.get_or("engine", "native"))
             .ok_or_else(|| anyhow!("bad --engine"))?,
         executors: opts.get_usize("executors", 2)?,
         artifacts_dir: opts.get_or("artifacts-dir", "artifacts"),
         record_every: opts.get_u64("record-every", default_record)?,
-        transport: TransportKind::parse(&transport).expect("get_one_of validated the value"),
+        transport,
         seed: opts.get_u64("seed", 7)?,
         checkpoint_dir: opts.get("checkpoint-dir").map(std::path::PathBuf::from),
         checkpoint_every: opts
@@ -287,22 +326,16 @@ fn session<'p>(
         .schedule_box(schedule)
 }
 
-/// Resolve `--method` (+ `--staleness`) into a schedule.
+/// Resolve `--method` (+ `--staleness`) into a schedule (the shared,
+/// unit-tested helper rejects a staleness bound on schedules without a
+/// staleness concept).
 fn parse_schedule(opts: &Opts) -> Result<Box<dyn Schedule>> {
-    let method = opts
-        .get_one_of("method", &["amtl", "smtl", "semisync"], "amtl")
-        .map_err(|e| anyhow!("{e}"))?;
-    let staleness_given = opts.get("staleness").is_some();
-    let staleness = opts.get_u64("staleness", 4)?;
-    if staleness_given && method != "semisync" {
-        bail!("--staleness only applies to --method semisync (got --method {method})");
-    }
-    Ok(match method.as_str() {
-        "amtl" => Box::new(Async),
-        "smtl" => Box::new(Synchronized),
-        "semisync" => Box::new(SemiSync { staleness_bound: staleness }),
-        _ => unreachable!("get_one_of validated the method"),
-    })
+    let method = opts.get_or("method", "amtl");
+    let staleness = match opts.get("staleness") {
+        Some(_) => Some(opts.get_u64("staleness", 4)?),
+        None => None,
+    };
+    schedule_from_cli(&method, staleness)
 }
 
 fn make_pool(ro: &RunOpts) -> Result<Option<ComputePool>> {
@@ -326,7 +359,7 @@ fn cmd_train(opts: &Opts) -> Result<()> {
     println!("dataset: {}", problem.dataset.describe());
     println!(
         "problem: reg={} lambda={} eta={:.3e} L={:.3e} transport={} svd={} threads={}",
-        problem.reg_kind.name(),
+        problem.reg_name(),
         problem.lambda,
         problem.eta,
         problem.l_max,
@@ -421,7 +454,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     println!("dataset: {}", problem.dataset.describe());
     println!(
         "problem: reg={} lambda={} eta={:.3e}; waiting for {t_count} nodes x {} activations = {expected} updates",
-        problem.reg_kind.name(),
+        problem.reg_name(),
         problem.lambda,
         problem.eta,
         ro.iters,

@@ -7,8 +7,8 @@
 //! check that AMTL/SMTL converge to the same objective value.
 
 use crate::linalg::Mat;
+use crate::optim::formulation::SharedProx;
 use crate::optim::losses::{Loss, RowMat};
-use crate::optim::prox::Regularizer;
 
 /// One task's centralized view.
 pub struct TaskData<'a> {
@@ -36,7 +36,7 @@ pub struct FistaResult {
 /// Stops early when the relative objective change drops below `rel_tol`.
 pub fn fista(
     tasks: &[TaskData],
-    reg: &mut Regularizer,
+    reg: &mut dyn SharedProx,
     l: f64,
     max_iters: usize,
     rel_tol: f64,
@@ -83,7 +83,7 @@ pub fn fista(
 }
 
 /// Full MTL objective `Σ_t ℓ_t(w_t) + λ g(W)`.
-pub fn objective(tasks: &[TaskData], w: &Mat, reg: &Regularizer) -> f64 {
+pub fn objective(tasks: &[TaskData], w: &Mat, reg: &dyn SharedProx) -> f64 {
     let f: f64 = tasks
         .iter()
         .enumerate()
@@ -96,7 +96,7 @@ pub fn objective(tasks: &[TaskData], w: &Mat, reg: &Regularizer) -> f64 {
 mod tests {
     use super::*;
     use crate::optim::lipschitz::task_lipschitz;
-    use crate::optim::prox::RegularizerKind;
+    use crate::optim::prox::{Regularizer, RegularizerKind};
     use crate::util::Rng;
 
     fn make_tasks(

@@ -1,0 +1,545 @@
+//! The open formulation API: trait-based losses and proximable
+//! regularizers behind a name-keyed registry.
+//!
+//! The paper's claim is that "many regularized MTL formulations can
+//! benefit from this framework" — so the math layer must be an *open*
+//! world. Two traits define the seams:
+//!
+//! * [`SharedProx`] — the coupling regularizer `λ·g(W)` the **central
+//!   server** owns: its prox, its value, optional *incremental* hooks
+//!   (column-update notifications, a snapshot-free `online_prox`, a
+//!   periodic exact `refresh` that bounds drift) and *state* hooks
+//!   (`state_save`/`state_load`) so persist snapshots stay generic.
+//! * [`TaskLoss`] — the smooth per-task loss a **task node** owns:
+//!   gradient + objective, the fused forward step, its Lipschitz
+//!   constant, and the AOT artifact op that implements it.
+//!
+//! Concrete formulations live in [`prox`](crate::optim::prox) (the
+//! classics: nuclear, ℓ2,1, ℓ1, elastic net, none) and
+//! [`coupling`](crate::optim::coupling) (graph-Laplacian relationship
+//! coupling and mean-regularized clustering); losses in
+//! [`losses`](crate::optim::losses). The [`FormulationSpec`] /
+//! [`resolve`] pair is how the CLI (`--reg graph:weight=0.5`) and
+//! `SessionBuilder` reach them by name + params, and [`restore`] is how a
+//! persist snapshot rebuilds one from its saved id + state blob.
+//!
+//! ## Adding a formulation
+//!
+//! 1. Implement [`SharedProx`] (only `id`, `lambda`, `prox`, `value`,
+//!    `clone_box`, `state_save`, `state_load` are mandatory; the
+//!    incremental hooks default to "not incremental").
+//! 2. Register it: a row in [`FORMULATIONS`], an arm in [`resolve`] and
+//!    one in [`restore`].
+//! 3. The CLI flag, the persist layer, every
+//!    [`Schedule`](crate::coordinator::Schedule)
+//!    (Async/Synchronized/SemiSync) and the prox proptests in
+//!    `rust/tests/properties.rs` pick it up from the registry — no
+//!    coordinator changes.
+
+use crate::linalg::Mat;
+use crate::optim::coupling::{GraphProx, MeanProx, TaskGraph};
+use crate::optim::losses::RowMat;
+use crate::optim::prox::{
+    ElasticNetProx, L1Prox, L21Prox, NuclearProx, RegularizerKind, ZeroProx,
+};
+use crate::transport::wire::{Cursor, WireError};
+use crate::util::Rng;
+use anyhow::Result;
+
+// ------------------------------------------------------------- SharedProx
+
+/// A coupling regularizer `λ·g(W)` as the central server consumes it: the
+/// proximal operator, the value for objective reporting, optional
+/// incremental hooks, and opaque persist state.
+///
+/// The incremental contract mirrors the server's hot path: the server
+/// stages committed columns, calls [`SharedProx::notify_column_update`]
+/// for each distinct column at prox time (coalescing adjacent commits),
+/// advances the raw-commit counter via [`SharedProx::note_commits`], runs
+/// an exact [`SharedProx::refresh`] when [`SharedProx::needs_refresh`]
+/// says the drift stride is due, and asks [`SharedProx::online_prox`] for
+/// a snapshot-free backward step. A formulation with no incremental form
+/// simply keeps the defaults and is proxed over a matrix snapshot.
+pub trait SharedProx: Send + Sync {
+    /// Registry id (canonical formulation name; also the persist tag).
+    fn id(&self) -> &'static str;
+
+    /// Regularization strength λ.
+    fn lambda(&self) -> f64;
+
+    /// `Prox_{η λ g}(W)`, overwriting `w`. `eta` is the prox step size.
+    fn prox(&mut self, w: &mut Mat, eta: f64);
+
+    /// `λ·g(W)` for objective reporting.
+    fn value(&self, w: &Mat) -> f64;
+
+    /// A boxed deep copy (object-safe `Clone`).
+    fn clone_box(&self) -> Box<dyn SharedProx>;
+
+    /// Switch on the incremental path, seeded from the operand `w0`, with
+    /// an exact refresh every `refresh_every` commits (0 = never). No-op
+    /// for formulations without an incremental form.
+    fn enable_incremental(&mut self, _w0: &Mat, _refresh_every: u64) {}
+
+    /// True when the incremental path is active (the server then stages
+    /// column updates and may use [`SharedProx::online_prox`]).
+    fn is_incremental(&self) -> bool {
+        false
+    }
+
+    /// Column `j` of the operand changed to `col` (no-op unless
+    /// incremental). Does not advance the refresh stride — the server
+    /// feeds raw commit counts through [`SharedProx::note_commits`],
+    /// because one notification may represent many coalesced commits.
+    fn notify_column_update(&mut self, _j: usize, _col: &[f64]) {}
+
+    /// Advance the refresh-stride counter by `n` raw commits.
+    fn note_commits(&mut self, _n: u64) {}
+
+    /// The snapshot-free incremental prox, when active (`None` otherwise):
+    /// reads only the formulation's internal state, so the caller does not
+    /// need a snapshot of the operand matrix.
+    fn online_prox(&self, _eta: f64) -> Option<Mat> {
+        None
+    }
+
+    /// True when the commit counter says the incremental state is due for
+    /// an exact rebuild.
+    fn needs_refresh(&self) -> bool {
+        false
+    }
+
+    /// Rebuild the incremental state exactly from `current` (the true
+    /// operand), recording the drift the incremental path had accumulated.
+    fn refresh(&mut self, _current: &Mat) {}
+
+    /// Exact refreshes performed so far on the incremental path.
+    fn refresh_count(&self) -> u64 {
+        0
+    }
+
+    /// Drift measured at the most recent exact refresh.
+    fn refresh_drift(&self) -> f64 {
+        0.0
+    }
+
+    /// Serialize the formulation's complete state (strength, counters,
+    /// incremental basis, …) as an opaque blob for a persist snapshot.
+    /// Paired with [`restore`], which rebuilds the formulation from
+    /// `(id, blob)`; the round trip must be bitwise exact.
+    fn state_save(&self) -> Vec<u8>;
+
+    /// Overwrite this formulation's state from a blob produced by
+    /// [`SharedProx::state_save`]. Malformed input is an error, never a
+    /// panic.
+    fn state_load(&mut self, bytes: &[u8]) -> Result<()>;
+}
+
+// --------------------------------------------------------------- TaskLoss
+
+/// The smooth per-task loss `ℓ_t` as a task node consumes it.
+pub trait TaskLoss: Send + Sync {
+    /// Canonical loss name (`"squared"`, `"logistic"`).
+    fn name(&self) -> &'static str;
+
+    /// The AOT artifact op implementing this loss's fused forward step.
+    fn step_op(&self) -> &'static str;
+
+    /// Gradient and objective at `w` over row-major `x` (`n × d`), labels
+    /// `y`, with a row `mask` (1 = real row, 0 = padding).
+    fn grad_obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> (Vec<f64>, f64);
+
+    /// Objective only.
+    fn obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> f64 {
+        self.grad_obj(x, y, w, mask).1
+    }
+
+    /// Fused forward step `u = w − η ∇ℓ(w)`, returning `(u, ℓ(w))`.
+    fn step(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64], eta: f64) -> (Vec<f64>, f64) {
+        let (g, obj) = self.grad_obj(x, y, w, mask);
+        let u = w.iter().zip(&g).map(|(wi, gi)| wi - eta * gi).collect();
+        (u, obj)
+    }
+
+    /// Lipschitz constant of `∇ℓ` over the data `x` (power iteration).
+    fn lipschitz(&self, x: &RowMat, rng: &mut Rng) -> f64;
+}
+
+/// Resolve a loss by name (canonical or alias) to its registered impl.
+pub fn resolve_loss(name: &str) -> Result<&'static dyn TaskLoss> {
+    Ok(crate::optim::losses::Loss::parse(name)?.task_loss())
+}
+
+// -------------------------------------------------------------- the spec
+
+/// A formulation request: a registered name plus free-form `key=value`
+/// parameters, optionally carrying a preloaded task-similarity graph.
+/// Parsed from CLI syntax like `nuclear`, `elasticnet:gamma=2`,
+/// `graph:topology=ring,weight=0.5` or `mean`.
+#[derive(Clone, Debug)]
+pub struct FormulationSpec {
+    name: &'static str,
+    params: Vec<(String, String)>,
+    graph: Option<TaskGraph>,
+}
+
+impl FormulationSpec {
+    /// Parse `name[:k=v,k=v,...]`, validating the name against the
+    /// registry (aliases accepted, canonicalized).
+    pub fn parse(s: &str) -> Result<FormulationSpec> {
+        let (name, rest) = match s.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (s, None),
+        };
+        let name = canonical(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --reg formulation '{name}' (expected one of {})",
+                FORMULATIONS.iter().map(|f| f.name).collect::<Vec<_>>().join("|")
+            )
+        })?;
+        let mut params = Vec::new();
+        if let Some(rest) = rest {
+            for part in rest.split(',').filter(|p| !p.is_empty()) {
+                let (k, v) = part.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "malformed --reg parameter '{part}' (expected key=value)"
+                    )
+                })?;
+                params.push((k.to_string(), v.to_string()));
+            }
+        }
+        Ok(FormulationSpec { name, params, graph: None })
+    }
+
+    /// The canonical formulation name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The value of parameter `key`, if supplied.
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.params.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// `f64` value of parameter `key`, or `default`.
+    pub fn param_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.param(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("--reg parameter {key} expects a number, got '{v}'")
+            }),
+        }
+    }
+
+    /// Attach a preloaded task-similarity graph (the `--graph-file` path;
+    /// only meaningful for the `graph` formulation).
+    pub fn with_graph(mut self, graph: TaskGraph) -> FormulationSpec {
+        self.graph = Some(graph);
+        self
+    }
+
+    /// The attached similarity graph, if any.
+    pub fn graph(&self) -> Option<&TaskGraph> {
+        self.graph.as_ref()
+    }
+
+    /// Error on parameters outside `allowed` (typo protection: an unknown
+    /// key must not silently change nothing).
+    fn expect_params(&self, allowed: &[&str]) -> Result<()> {
+        for (k, _) in &self.params {
+            anyhow::ensure!(
+                allowed.iter().any(|a| *a == k.as_str()),
+                "formulation '{}' does not take parameter '{k}'{}",
+                self.name,
+                if allowed.is_empty() {
+                    String::new()
+                } else {
+                    format!(" (allowed: {})", allowed.join(", "))
+                }
+            );
+        }
+        Ok(())
+    }
+}
+
+impl From<RegularizerKind> for FormulationSpec {
+    fn from(kind: RegularizerKind) -> FormulationSpec {
+        FormulationSpec { name: kind.name(), params: Vec::new(), graph: None }
+    }
+}
+
+// --------------------------------------------------------------- registry
+
+/// One registry row: how a formulation is named and what it is.
+pub struct FormulationInfo {
+    /// Canonical name (the [`SharedProx::id`] and persist tag).
+    pub name: &'static str,
+    /// Accepted aliases.
+    pub aliases: &'static [&'static str],
+    /// One-line description (CLI/docs).
+    pub summary: &'static str,
+    /// What the incremental hooks do for this formulation, if anything.
+    pub incremental: &'static str,
+}
+
+/// The registered shared-prox formulations.
+pub const FORMULATIONS: &[FormulationInfo] = &[
+    FormulationInfo {
+        name: "nuclear",
+        aliases: &["trace", "lowrank"],
+        summary: "low-rank coupling g(W)=||W||_* (SVT prox)",
+        incremental: "Brand online SVD, exact Jacobi re-anchor every resvd_every commits",
+    },
+    FormulationInfo {
+        name: "l21",
+        aliases: &[],
+        summary: "joint feature selection g(W)=||W||_{2,1} (row shrinkage)",
+        incremental: "none (row-separable prox over a snapshot)",
+    },
+    FormulationInfo {
+        name: "l1",
+        aliases: &[],
+        summary: "elementwise sparsity (soft threshold)",
+        incremental: "none",
+    },
+    FormulationInfo {
+        name: "elasticnet",
+        aliases: &["en"],
+        summary: "||W||_1 + (gamma/2)||W||_F^2, the strongly convex variant",
+        incremental: "none",
+    },
+    FormulationInfo {
+        name: "none",
+        aliases: &["stl"],
+        summary: "no coupling: decoupled single-task learning baseline",
+        incremental: "none",
+    },
+    FormulationInfo {
+        name: "graph",
+        aliases: &["laplacian"],
+        summary: "task-relationship coupling g(W)=tr(W L W^T) over a similarity graph",
+        incremental: "none (closed-form prox W(I+2*tau*L)^-1, inverse cached per tau)",
+    },
+    FormulationInfo {
+        name: "mean",
+        aliases: &["centroid"],
+        summary: "mean-regularized clustering g(W)=(1/2)sum_t ||w_t - mean(W)||^2",
+        incremental: "O(d) centroid update per commit; exact recentre every refresh stride",
+    },
+];
+
+/// Canonicalize a formulation name or alias.
+pub fn canonical(name: &str) -> Option<&'static str> {
+    FORMULATIONS
+        .iter()
+        .find(|f| f.name == name || f.aliases.contains(&name))
+        .map(|f| f.name)
+}
+
+/// Build the formulation `spec` names, with strength `lambda`, default
+/// elastic-net weight `gamma`, over `t` tasks.
+///
+/// This is the one construction path: `MtlProblem`, the CLI and the
+/// persist layer's [`restore`] all resolve through the same registry, so a
+/// formulation registered here is immediately reachable from every
+/// schedule, both transports, and `--resume`.
+pub fn resolve(
+    spec: &FormulationSpec,
+    lambda: f64,
+    gamma: f64,
+    t: usize,
+) -> Result<Box<dyn SharedProx>> {
+    anyhow::ensure!(lambda >= 0.0, "regularization strength must be >= 0, got {lambda}");
+    Ok(match spec.name() {
+        "nuclear" => {
+            spec.expect_params(&[])?;
+            Box::new(NuclearProx::new(lambda))
+        }
+        "l21" => {
+            spec.expect_params(&[])?;
+            Box::new(L21Prox::new(lambda))
+        }
+        "l1" => {
+            spec.expect_params(&[])?;
+            Box::new(L1Prox::new(lambda))
+        }
+        "elasticnet" => {
+            spec.expect_params(&["gamma"])?;
+            let gamma = spec.param_f64("gamma", gamma)?;
+            anyhow::ensure!(gamma >= 0.0, "elastic-net gamma must be >= 0, got {gamma}");
+            Box::new(ElasticNetProx::new(lambda, gamma))
+        }
+        "none" => {
+            spec.expect_params(&[])?;
+            Box::new(ZeroProx::new(lambda))
+        }
+        "graph" => {
+            spec.expect_params(&["topology", "weight"])?;
+            let graph = match spec.graph() {
+                Some(g) => {
+                    anyhow::ensure!(
+                        spec.param("topology").is_none() && spec.param("weight").is_none(),
+                        "graph topology/weight params conflict with an explicitly \
+                         provided similarity graph (--graph-file): pick one source"
+                    );
+                    anyhow::ensure!(
+                        g.t() == t,
+                        "similarity graph covers {} tasks but the problem has {t}",
+                        g.t()
+                    );
+                    g.clone()
+                }
+                None => {
+                    let weight = spec.param_f64("weight", 1.0)?;
+                    anyhow::ensure!(weight > 0.0, "graph weight must be > 0, got {weight}");
+                    match spec.param("topology").unwrap_or("full") {
+                        "full" => TaskGraph::fully_connected(t, weight),
+                        "ring" => TaskGraph::ring(t, weight),
+                        other => anyhow::bail!(
+                            "unknown graph topology '{other}' (expected full|ring, \
+                             or pass --graph-file)"
+                        ),
+                    }
+                }
+            };
+            Box::new(GraphProx::new(lambda, graph))
+        }
+        "mean" => {
+            spec.expect_params(&[])?;
+            Box::new(MeanProx::new(lambda))
+        }
+        other => anyhow::bail!("formulation '{other}' is registered but has no constructor"),
+    })
+}
+
+/// Rebuild a formulation from its persist tag and state blob (the inverse
+/// of [`SharedProx::id`] + [`SharedProx::state_save`]).
+pub fn restore(id: &str, blob: &[u8]) -> Result<Box<dyn SharedProx>> {
+    let mut reg: Box<dyn SharedProx> = match id {
+        "nuclear" => Box::new(NuclearProx::new(0.0)),
+        "l21" => Box::new(L21Prox::new(0.0)),
+        "l1" => Box::new(L1Prox::new(0.0)),
+        "elasticnet" => Box::new(ElasticNetProx::new(0.0, 1.0)),
+        "none" => Box::new(ZeroProx::new(0.0)),
+        "graph" => Box::new(GraphProx::blank()),
+        "mean" => Box::new(MeanProx::new(0.0)),
+        other => anyhow::bail!("snapshot names unknown formulation '{other}'"),
+    };
+    reg.state_load(blob)?;
+    Ok(reg)
+}
+
+// ----------------------------------------------- shared state-blob codecs
+
+/// Read exactly `n` little-endian f64s from a state-blob cursor.
+pub(crate) fn read_f64s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<f64>, WireError> {
+    let len = n.checked_mul(8).ok_or(WireError::Malformed("f64 vector length overflow"))?;
+    let bytes = c.take(len)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|b| {
+            f64::from_bits(u64::from_le_bytes([
+                b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+            ]))
+        })
+        .collect())
+}
+
+/// Append a matrix (rows, cols, column-major f64 data) to a state blob.
+pub(crate) fn push_mat(out: &mut Vec<u8>, m: &Mat) {
+    out.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    out.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    crate::transport::wire::push_f64s(out, m.data());
+}
+
+/// Read a matrix written by [`push_mat`].
+pub(crate) fn read_mat(c: &mut Cursor<'_>) -> Result<Mat, WireError> {
+    let rows = c.u32()? as usize;
+    let cols = c.u32()? as usize;
+    let Some(len) = rows.checked_mul(cols) else {
+        return Err(WireError::Malformed("matrix dimensions overflow"));
+    };
+    let data = read_f64s(c, len)?;
+    let mut m = Mat::zeros(rows, cols);
+    m.data_mut().copy_from_slice(&data);
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_names_aliases_and_params() {
+        assert_eq!(FormulationSpec::parse("nuclear").unwrap().name(), "nuclear");
+        assert_eq!(FormulationSpec::parse("trace").unwrap().name(), "nuclear");
+        assert_eq!(FormulationSpec::parse("en").unwrap().name(), "elasticnet");
+        let s = FormulationSpec::parse("graph:topology=ring,weight=0.5").unwrap();
+        assert_eq!(s.name(), "graph");
+        assert_eq!(s.param("topology"), Some("ring"));
+        assert_eq!(s.param_f64("weight", 1.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn spec_rejects_unknown_names_and_malformed_params() {
+        let err = FormulationSpec::parse("bogus").unwrap_err();
+        assert!(format!("{err}").contains("nuclear|l21|l1|elasticnet|none|graph|mean"), "{err}");
+        assert!(FormulationSpec::parse("graph:ring").is_err(), "bare param must error");
+    }
+
+    #[test]
+    fn resolve_rejects_graph_params_alongside_an_attached_graph() {
+        let spec = FormulationSpec::parse("graph:weight=2").unwrap().with_graph(
+            crate::optim::coupling::TaskGraph::ring(3, 1.0),
+        );
+        let err = resolve(&spec, 0.5, 1.0, 3).unwrap_err();
+        assert!(format!("{err}").contains("conflict"), "{err}");
+        // Without the contradictory params the attached graph resolves.
+        let spec = FormulationSpec::parse("graph").unwrap().with_graph(
+            crate::optim::coupling::TaskGraph::ring(3, 1.0),
+        );
+        assert!(resolve(&spec, 0.5, 1.0, 3).is_ok());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_params() {
+        let s = FormulationSpec::parse("mean:weight=2").unwrap();
+        let err = resolve(&s, 0.5, 1.0, 3).unwrap_err();
+        assert!(format!("{err}").contains("does not take parameter"), "{err}");
+    }
+
+    #[test]
+    fn every_registered_formulation_resolves_and_restores() {
+        for info in FORMULATIONS {
+            let spec = FormulationSpec::parse(info.name).unwrap();
+            let reg = resolve(&spec, 0.4, 1.5, 4).unwrap();
+            assert_eq!(reg.id(), info.name);
+            assert_eq!(reg.lambda(), 0.4);
+            let blob = reg.state_save();
+            let back = restore(reg.id(), &blob).unwrap();
+            assert_eq!(back.id(), info.name);
+            assert_eq!(back.lambda(), 0.4);
+            assert_eq!(back.state_save(), blob, "{}: save/restore/save must be stable", info.name);
+        }
+    }
+
+    #[test]
+    fn restore_rejects_unknown_id_and_garbage() {
+        assert!(restore("bogus", &[]).is_err());
+        assert!(restore("nuclear", &[1, 2, 3]).is_err(), "truncated blob must error");
+    }
+
+    #[test]
+    fn kind_converts_to_spec() {
+        let s: FormulationSpec = RegularizerKind::ElasticNet.into();
+        assert_eq!(s.name(), "elasticnet");
+    }
+
+    #[test]
+    fn losses_resolve_by_name() {
+        assert_eq!(resolve_loss("squared").unwrap().name(), "squared");
+        assert_eq!(resolve_loss("lsq").unwrap().name(), "squared");
+        assert_eq!(resolve_loss("logistic").unwrap().name(), "logistic");
+        assert!(resolve_loss("hinge").is_err());
+    }
+}

@@ -9,19 +9,17 @@ use crate::linalg::Mat;
 use crate::optim::losses::{Loss, RowMat};
 use crate::util::Rng;
 
-/// Per-task Lipschitz constant of `∇ℓ_t`.
+/// Per-task Lipschitz constant of `∇ℓ_t`, delegated to the loss's
+/// [`TaskLoss`](crate::optim::formulation::TaskLoss) impl:
 ///
 /// * squared loss `Σ(x·w−y)²`: `L_t = 2‖X‖₂²`
 /// * logistic loss: `L_t = ‖X‖₂²/4` (σ′ ≤ 1/4)
 pub fn task_lipschitz(loss: Loss, x: &RowMat, rng: &mut Rng) -> f64 {
-    let s = gram_spectral_norm(x, 100, rng);
-    match loss {
-        Loss::Squared => 2.0 * s * s,
-        Loss::Logistic => 0.25 * s * s,
-    }
+    loss.task_loss().lipschitz(x, rng)
 }
 
-/// `‖X‖₂` via power iteration on the Gram matrix `G = XᵀX`.
+/// `‖X‖₂` via power iteration on the Gram matrix `G = XᵀX` (the kernel
+/// behind every registered loss's `lipschitz` hook).
 ///
 /// `G` is built once through the pooled [`Mat::gram`] kernel, then the
 /// iteration runs on the small `d × d` product: `O(n·d²) + O(iters·d²)`
@@ -29,7 +27,7 @@ pub fn task_lipschitz(loss: Loss, x: &RowMat, rng: &mut Rng) -> f64 {
 /// build parallelizes across the linalg worker pool. Same fixed point as
 /// iterating `Xᵀ(Xv)` directly — that product *is* `Gv` — up to
 /// floating-point association.
-fn gram_spectral_norm(x: &RowMat, iters: usize, rng: &mut Rng) -> f64 {
+pub(crate) fn gram_spectral_norm(x: &RowMat, iters: usize, rng: &mut Rng) -> f64 {
     if x.rows == 0 || x.cols == 0 {
         return 0.0;
     }

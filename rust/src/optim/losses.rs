@@ -6,8 +6,26 @@
 //! The paper's loss for task t is `ℓ_t(w) = Σ_i (x_i·w − y_i)²` (squared
 //! loss, Eq. IV.1 — note: *not* halved) or the logistic loss
 //! `Σ_i log(1+exp(x_i·w)) − y_i (x_i·w)` with labels in {0,1}.
+//!
+//! Each loss is a [`TaskLoss`](crate::optim::formulation::TaskLoss) impl
+//! ([`LeastSquares`], [`LogisticLoss`]); the [`Loss`] enum remains the
+//! compact storage form datasets carry and delegates every operation to
+//! the trait impl, so downstream code can hold either.
 
-/// The per-task smooth loss `ℓ_t`.
+use crate::optim::formulation::TaskLoss;
+use crate::util::{EnumTable, Rng};
+
+/// Name table for [`Loss`].
+const LOSSES: EnumTable<Loss> = EnumTable {
+    what: "loss",
+    rows: &[
+        ("squared", &["lsq", "l2"], Loss::Squared),
+        ("logistic", &["logreg"], Loss::Logistic),
+    ],
+};
+
+/// The per-task smooth loss `ℓ_t` (storage form; see
+/// [`Loss::task_loss`] for the trait impl it delegates to).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Loss {
     /// `Σ (x·w − y)²`, gradient `2 Xᵀ(Xw − y)`.
@@ -17,69 +35,39 @@ pub enum Loss {
 }
 
 impl Loss {
-    /// Parse a CLI value (`"squared"` | `"logistic"`, plus aliases).
-    pub fn parse(s: &str) -> Option<Loss> {
-        match s {
-            "squared" | "lsq" | "l2" => Some(Loss::Squared),
-            "logistic" | "logreg" => Some(Loss::Logistic),
-            _ => None,
-        }
+    /// Parse a CLI value (`"squared"` | `"logistic"`, plus aliases); the
+    /// error lists the valid values.
+    pub fn parse(s: &str) -> anyhow::Result<Loss> {
+        LOSSES.parse(s)
     }
 
     /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
+        LOSSES.name(*self)
+    }
+
+    /// The registered [`TaskLoss`] impl this enum value stands for.
+    pub fn task_loss(&self) -> &'static dyn TaskLoss {
         match self {
-            Loss::Squared => "squared",
-            Loss::Logistic => "logistic",
+            Loss::Squared => &LeastSquares,
+            Loss::Logistic => &LogisticLoss,
         }
     }
 
     /// The AOT artifact op implementing this loss's fused forward step.
     pub fn step_op(&self) -> &'static str {
-        match self {
-            Loss::Squared => "lsq_step",
-            Loss::Logistic => "logistic_step",
-        }
+        self.task_loss().step_op()
     }
 
     /// Gradient and objective at `w` over row-major `x` (`n × d`), labels
     /// `y`, with a row `mask` (1 = real row, 0 = padding).
     pub fn grad_obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> (Vec<f64>, f64) {
-        let n = x.rows;
-        let d = x.cols;
-        debug_assert_eq!(y.len(), n);
-        debug_assert_eq!(mask.len(), n);
-        debug_assert_eq!(w.len(), d);
-        let mut g = vec![0.0; d];
-        let mut obj = 0.0;
-        for i in 0..n {
-            if mask[i] == 0.0 {
-                continue;
-            }
-            let xi = x.row(i);
-            let z: f64 = xi.iter().zip(w).map(|(a, b)| a * b).sum();
-            let (coef, contrib) = match self {
-                Loss::Squared => {
-                    let r = z - y[i];
-                    (2.0 * r, r * r)
-                }
-                Loss::Logistic => {
-                    let p = sigmoid(z);
-                    (p - y[i], softplus(z) - y[i] * z)
-                }
-            };
-            let coef = coef * mask[i];
-            for (gk, xk) in g.iter_mut().zip(xi) {
-                *gk += coef * xk;
-            }
-            obj += mask[i] * contrib;
-        }
-        (g, obj)
+        self.task_loss().grad_obj(x, y, w, mask)
     }
 
     /// Objective only.
     pub fn obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> f64 {
-        self.grad_obj(x, y, w, mask).1
+        self.task_loss().obj(x, y, w, mask)
     }
 
     /// Fused forward step `u = w − η ∇ℓ(w)`, returning `(u, ℓ(w))` — the
@@ -92,9 +80,94 @@ impl Loss {
         mask: &[f64],
         eta: f64,
     ) -> (Vec<f64>, f64) {
-        let (g, obj) = self.grad_obj(x, y, w, mask);
-        let u = w.iter().zip(&g).map(|(wi, gi)| wi - eta * gi).collect();
-        (u, obj)
+        self.task_loss().step(x, y, w, mask, eta)
+    }
+}
+
+/// One masked accumulation pass shared by every loss: for each live row,
+/// `per_row(z, y)` returns the gradient coefficient and the objective
+/// contribution at margin `z = x_i · w`.
+fn accumulate(
+    x: &RowMat,
+    y: &[f64],
+    w: &[f64],
+    mask: &[f64],
+    per_row: impl Fn(f64, f64) -> (f64, f64),
+) -> (Vec<f64>, f64) {
+    let n = x.rows;
+    let d = x.cols;
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(mask.len(), n);
+    debug_assert_eq!(w.len(), d);
+    let mut g = vec![0.0; d];
+    let mut obj = 0.0;
+    for i in 0..n {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let xi = x.row(i);
+        let z: f64 = xi.iter().zip(w).map(|(a, b)| a * b).sum();
+        let (coef, contrib) = per_row(z, y[i]);
+        let coef = coef * mask[i];
+        for (gk, xk) in g.iter_mut().zip(xi) {
+            *gk += coef * xk;
+        }
+        obj += mask[i] * contrib;
+    }
+    (g, obj)
+}
+
+/// Masked least squares `Σ (x·w − y)²` (Eq. IV.1; not halved).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastSquares;
+
+impl TaskLoss for LeastSquares {
+    fn name(&self) -> &'static str {
+        "squared"
+    }
+
+    fn step_op(&self) -> &'static str {
+        "lsq_step"
+    }
+
+    fn grad_obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> (Vec<f64>, f64) {
+        accumulate(x, y, w, mask, |z, yi| {
+            let r = z - yi;
+            (2.0 * r, r * r)
+        })
+    }
+
+    fn lipschitz(&self, x: &RowMat, rng: &mut Rng) -> f64 {
+        // `L = 2‖X‖₂²` (Hessian `2XᵀX`).
+        let s = crate::optim::lipschitz::gram_spectral_norm(x, 100, rng);
+        2.0 * s * s
+    }
+}
+
+/// Masked logistic loss `Σ softplus(x·w) − y(x·w)` with labels in {0,1}.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LogisticLoss;
+
+impl TaskLoss for LogisticLoss {
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+
+    fn step_op(&self) -> &'static str {
+        "logistic_step"
+    }
+
+    fn grad_obj(&self, x: &RowMat, y: &[f64], w: &[f64], mask: &[f64]) -> (Vec<f64>, f64) {
+        accumulate(x, y, w, mask, |z, yi| {
+            let p = sigmoid(z);
+            (p - yi, softplus(z) - yi * z)
+        })
+    }
+
+    fn lipschitz(&self, x: &RowMat, rng: &mut Rng) -> f64 {
+        // `L = ‖X‖₂²/4` (σ′ ≤ 1/4).
+        let s = crate::optim::lipschitz::gram_spectral_norm(x, 100, rng);
+        0.25 * s * s
     }
 }
 
@@ -199,6 +272,27 @@ mod tests {
         let w = rng.normal_vec(d);
         let mask = vec![1.0; n];
         (x, y, w, mask)
+    }
+
+    #[test]
+    fn loss_parse_names_and_errors() {
+        assert_eq!(Loss::parse("squared").unwrap(), Loss::Squared);
+        assert_eq!(Loss::parse("lsq").unwrap(), Loss::Squared);
+        assert_eq!(Loss::parse("logreg").unwrap(), Loss::Logistic);
+        assert_eq!(Loss::Logistic.name(), "logistic");
+        let err = Loss::parse("hinge").unwrap_err();
+        assert!(format!("{err}").contains("squared|logistic"), "{err}");
+    }
+
+    #[test]
+    fn enum_delegates_to_trait_impls() {
+        let (x, y, w, mask) = make(10, 4, 29);
+        let (ge, oe) = Loss::Squared.grad_obj(&x, &y, &w, &mask);
+        let (gt, ot) = LeastSquares.grad_obj(&x, &y, &w, &mask);
+        assert_eq!(ge, gt);
+        assert_eq!(oe, ot);
+        assert_eq!(Loss::Squared.step_op(), "lsq_step");
+        assert_eq!(Loss::Logistic.task_loss().name(), "logistic");
     }
 
     #[test]

@@ -1,5 +1,14 @@
-//! Optimization substrate: SVD, proximal operators, losses, Lipschitz
-//! estimation, and the centralized FISTA baseline.
+//! Optimization substrate: SVD, the open formulation API (trait-based
+//! losses + proximable regularizers), Lipschitz estimation, and the
+//! centralized FISTA baseline.
+//!
+//! The formulation layer is an **open world** (see [`formulation`]): a
+//! [`SharedProx`] coupling regularizer and a [`TaskLoss`] smooth loss are
+//! traits, the concrete formulations — nuclear, ℓ2,1, ℓ1, elastic net,
+//! none ([`prox`]), graph-Laplacian relationship coupling and
+//! mean-regularized clustering ([`coupling`]) — are registered impls, and
+//! a [`FormulationSpec`] resolves them by name + params for the CLI and
+//! the session builder.
 //!
 //! The nuclear-norm backward step (singular-value thresholding, Eq. IV.2 of
 //! the paper) runs natively here: `jnp.linalg.svd` lowers to a typed-FFI
@@ -7,11 +16,15 @@
 //! cannot execute (verified empirically), and architecturally the
 //! prox is the *central server's* job, which is rust.
 
+pub mod coupling;
 pub mod fista;
+pub mod formulation;
 pub mod lipschitz;
 pub mod losses;
 pub mod prox;
 pub mod svd;
 
+pub use coupling::{GraphProx, MeanProx, TaskGraph};
+pub use formulation::{FormulationSpec, SharedProx, TaskLoss};
 pub use prox::{Regularizer, RegularizerKind};
 pub use svd::{OnlineSvd, Svd, SvdMode};

@@ -1,22 +1,47 @@
-//! Proximal operators for regularized MTL (the server's backward step,
-//! Eq. III.3), plus the regularizer values used for objective reporting.
+//! The classic proximable regularizers of §III.A, as
+//! [`SharedProx`](crate::optim::formulation::SharedProx) impls (the
+//! server's backward step, Eq. III.3), plus the regularizer values used
+//! for objective reporting.
 //!
-//! Supported couplings — the formulations named in §III.A of the paper:
-//!
-//! * [`RegularizerKind::Nuclear`] — shared-subspace / low-rank MTL,
-//!   `g(W) = ‖W‖_*`; prox = singular-value thresholding (Eq. IV.2).
-//! * [`RegularizerKind::L21`] — joint feature selection, `g(W) = ‖W‖_{2,1}`;
-//!   prox = row-wise group soft-threshold.
-//! * [`RegularizerKind::L1`] — elementwise sparsity (Lasso-style).
-//! * [`RegularizerKind::ElasticNet`] — `‖W‖₁ + (γ/2)‖W‖²_F`, the strongly
-//!   convex variant the paper invokes for linear convergence (Remark after
+//! * [`NuclearProx`] — shared-subspace / low-rank MTL, `g(W) = ‖W‖_*`;
+//!   prox = singular-value thresholding (Eq. IV.2), with the Brand
+//!   online-SVD incremental path behind the trait's incremental hooks.
+//! * [`L21Prox`] — joint feature selection, `g(W) = ‖W‖_{2,1}`; prox =
+//!   row-wise group soft-threshold.
+//! * [`L1Prox`] — elementwise sparsity (Lasso-style).
+//! * [`ElasticNetProx`] — `‖W‖₁ + (γ/2)‖W‖²_F`, the strongly convex
+//!   variant the paper invokes for linear convergence (Remark after
 //!   Theorem 1).
-//! * [`RegularizerKind::None`] — decoupled single-task learning baseline.
+//! * [`ZeroProx`] — no coupling: decoupled single-task learning baseline.
+//!
+//! The graph-Laplacian and mean-regularized formulations live in
+//! [`coupling`](crate::optim::coupling); all are registered in
+//! [`formulation`](crate::optim::formulation) and reachable by name.
 
 use crate::linalg::Mat;
+use crate::optim::formulation::{push_mat, read_f64s, read_mat, SharedProx};
 use crate::optim::svd::{OnlineSvd, Svd};
+use crate::transport::wire::{push_f64s, Cursor, WireError};
+use crate::util::EnumTable;
 
-/// Which coupling regularizer `g(W)` the problem uses.
+/// Name table for [`RegularizerKind`] (classic formulations only; the
+/// full open set is [`formulation::FORMULATIONS`](crate::optim::formulation::FORMULATIONS)).
+const KINDS: EnumTable<RegularizerKind> = EnumTable {
+    what: "--reg value",
+    rows: &[
+        ("nuclear", &["trace", "lowrank"], RegularizerKind::Nuclear),
+        ("l21", &[], RegularizerKind::L21),
+        ("l1", &[], RegularizerKind::L1),
+        ("elasticnet", &["en"], RegularizerKind::ElasticNet),
+        ("none", &["stl"], RegularizerKind::None),
+    ],
+};
+
+/// Which *classic* coupling regularizer `g(W)` a problem uses — shorthand
+/// for the five formulations of §III.A. The open set (graph, mean, and
+/// anything registered later) is addressed by name through
+/// [`FormulationSpec`](crate::optim::formulation::FormulationSpec);
+/// `RegularizerKind` converts into a spec via `From`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RegularizerKind {
     /// Shared-subspace / low-rank MTL: `g(W) = ‖W‖_*` (SVT prox).
@@ -32,64 +57,69 @@ pub enum RegularizerKind {
 }
 
 impl RegularizerKind {
-    /// Parse a CLI value (`"nuclear"`, `"l21"`, `"l1"`, ...).
-    pub fn parse(s: &str) -> Option<RegularizerKind> {
-        Some(match s {
-            "nuclear" | "trace" | "lowrank" => RegularizerKind::Nuclear,
-            "l21" => RegularizerKind::L21,
-            "l1" => RegularizerKind::L1,
-            "elasticnet" | "en" => RegularizerKind::ElasticNet,
-            "none" | "stl" => RegularizerKind::None,
-            _ => return None,
-        })
+    /// Parse a CLI value (`"nuclear"`, `"l21"`, `"l1"`, ...); the error
+    /// lists the valid values.
+    pub fn parse(s: &str) -> anyhow::Result<RegularizerKind> {
+        KINDS.parse(s)
     }
 
     /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
-        match self {
-            RegularizerKind::Nuclear => "nuclear",
-            RegularizerKind::L21 => "l21",
-            RegularizerKind::L1 => "l1",
-            RegularizerKind::ElasticNet => "elasticnet",
-            RegularizerKind::None => "none",
-        }
+        KINDS.name(*self)
     }
 }
 
-/// A regularizer `λ·g(W)` with its prox and value.
+/// Factory for the classic regularizers: the closed-enum constructor the
+/// open [`SharedProx`] API replaced, kept as the idiomatic way to build
+/// one of the five §III.A couplings directly.
+pub struct Regularizer;
+
+impl Regularizer {
+    /// A classic regularizer with strength `lambda` (elastic-net γ = 1).
+    pub fn new(kind: RegularizerKind, lambda: f64) -> Box<dyn SharedProx> {
+        match kind {
+            RegularizerKind::Nuclear => Box::new(NuclearProx::new(lambda)),
+            RegularizerKind::L21 => Box::new(L21Prox::new(lambda)),
+            RegularizerKind::L1 => Box::new(L1Prox::new(lambda)),
+            RegularizerKind::ElasticNet => Box::new(ElasticNetProx::new(lambda, 1.0)),
+            RegularizerKind::None => Box::new(ZeroProx::new(lambda)),
+        }
+    }
+
+    /// The strongly convex `‖W‖₁ + (γ/2)‖W‖²_F` variant.
+    pub fn elastic_net(lambda: f64, gamma: f64) -> Box<dyn SharedProx> {
+        Box::new(ElasticNetProx::new(lambda, gamma))
+    }
+}
+
+// ---------------------------------------------------------------- nuclear
+
+/// Low-rank coupling `g(W) = ‖W‖_*`: prox is singular-value thresholding,
+/// either over an exact Jacobi SVD of the operand or — when the
+/// incremental path is enabled — over a maintained Brand online-SVD
+/// factorization re-anchored every `resvd_every` commits.
 #[derive(Clone, Debug)]
-pub struct Regularizer {
-    /// Which coupling `g` is (nuclear, ℓ2,1, …).
-    pub kind: RegularizerKind,
-    /// Regularization strength λ.
-    pub lambda: f64,
-    /// ℓ2 weight for the elastic-net variant.
-    pub gamma: f64,
-    /// When set, the nuclear prox maintains an incremental factorization
-    /// (Brand online SVD) instead of refactorizing; see `svd::OnlineSvd`.
-    /// This is the default nuclear path (see `SvdMode`).
+pub struct NuclearProx {
+    lambda: f64,
+    /// The incremental factorization, when the online path is active.
     online: Option<OnlineSvd>,
-    /// Exact-refresh stride for the online path: after this many column
-    /// commits the factorization is rebuilt from an exact Jacobi SVD of
-    /// the true matrix, bounding numerical drift. 0 = never refresh.
+    /// Exact-refresh stride for the online path (0 = never refresh).
     resvd_every: u64,
-    /// Column commits folded into the factorization since the last exact
-    /// refresh.
+    /// Column commits folded since the last exact refresh.
     commits_since_refresh: u64,
-    /// Number of exact refreshes performed.
+    /// Exact refreshes performed.
     refreshes: u64,
     /// Max-abs reconstruction drift observed at the last exact refresh
     /// (`‖UΣVᵀ − W‖_max` just before re-initializing).
     last_drift: f64,
 }
 
-impl Regularizer {
-    /// A regularizer with strength `lambda` (elastic-net γ defaults to 1).
-    pub fn new(kind: RegularizerKind, lambda: f64) -> Regularizer {
-        Regularizer {
-            kind,
+impl NuclearProx {
+    /// A nuclear-norm regularizer with strength `lambda` (exact path
+    /// until [`SharedProx::enable_incremental`] is called).
+    pub fn new(lambda: f64) -> NuclearProx {
+        NuclearProx {
             lambda,
-            gamma: 1.0,
             online: None,
             resvd_every: 0,
             commits_since_refresh: 0,
@@ -98,133 +128,112 @@ impl Regularizer {
         }
     }
 
-    /// The strongly convex `‖W‖₁ + (γ/2)‖W‖²_F` variant.
-    pub fn elastic_net(lambda: f64, gamma: f64) -> Regularizer {
-        let mut reg = Regularizer::new(RegularizerKind::ElasticNet, lambda);
-        reg.gamma = gamma;
-        reg
-    }
-
-    /// Enable the incremental (Brand online-SVD) nuclear prox, seeded from
-    /// `w0`. This is the primary nuclear path; pair with
-    /// [`Regularizer::with_resvd_every`] to bound drift.
-    pub fn with_online_svd(mut self, w0: &Mat) -> Regularizer {
-        assert_eq!(self.kind, RegularizerKind::Nuclear);
+    /// Builder form of the incremental path, seeded from `w0`.
+    pub fn with_online(mut self, w0: &Mat) -> NuclearProx {
         self.online = Some(OnlineSvd::init(w0));
         self.commits_since_refresh = 0;
         self
     }
 
-    /// Set the exact-refresh stride for the online path (0 = never): the
-    /// factorization is rebuilt from an exact Jacobi SVD every `k` commits
-    /// (see [`Regularizer::refresh_online`]). The stride counter advances
-    /// via [`Regularizer::note_commits`] — `CentralServer` feeds it raw
-    /// commit counts, so commits that coalesce into one fold still count.
-    pub fn with_resvd_every(mut self, k: u64) -> Regularizer {
+    /// Builder form of the exact-refresh stride (0 = never).
+    pub fn with_resvd_every(mut self, k: u64) -> NuclearProx {
         self.resvd_every = k;
         self
     }
 
-    /// Advance the refresh-stride counter by `n` raw commits. Kept
-    /// separate from [`Regularizer::notify_column_update`] because one
-    /// fold may represent many coalesced commits, and the drift bound is
-    /// promised per commit.
-    pub fn note_commits(&mut self, n: u64) {
-        if self.online.is_some() {
-            self.commits_since_refresh += n;
+    /// Serialize nuclear-prox state from explicit parts. Shared by
+    /// [`SharedProx::state_save`] and the persist layer's v1-snapshot
+    /// migration, so the two encodings cannot drift apart.
+    pub(crate) fn encode_state_parts(
+        lambda: f64,
+        resvd_every: u64,
+        commits_since_refresh: u64,
+        refreshes: u64,
+        last_drift: f64,
+        online: Option<(&Mat, &[f64], &Mat)>,
+    ) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(&lambda.to_bits().to_le_bytes());
+        out.extend_from_slice(&resvd_every.to_le_bytes());
+        out.extend_from_slice(&commits_since_refresh.to_le_bytes());
+        out.extend_from_slice(&refreshes.to_le_bytes());
+        out.extend_from_slice(&last_drift.to_bits().to_le_bytes());
+        match online {
+            None => out.push(0),
+            Some((u, sigma, v)) => {
+                out.push(1);
+                push_mat(&mut out, u);
+                out.extend_from_slice(&(sigma.len() as u32).to_le_bytes());
+                push_f64s(&mut out, sigma);
+                push_mat(&mut out, v);
+            }
         }
+        out
+    }
+}
+
+impl SharedProx for NuclearProx {
+    fn id(&self) -> &'static str {
+        "nuclear"
     }
 
-    /// The incremental nuclear prox `U (Σ − ηλ)₊ Vᵀ`, when the online path
-    /// is active (`None` otherwise). Reads only the factorization — the
-    /// caller does not need a snapshot of the operand matrix.
-    pub fn online_prox(&self, eta: f64) -> Option<Mat> {
-        self.online
-            .as_ref()
-            .map(|osvd| osvd.shrink_reconstruct(eta * self.lambda))
+    fn lambda(&self) -> f64 {
+        self.lambda
     }
 
-    /// True when the incremental nuclear path is active.
-    pub fn uses_online_svd(&self) -> bool {
+    fn prox(&mut self, w: &mut Mat, eta: f64) {
+        let tau = eta * self.lambda;
+        let out = if let Some(osvd) = self.online.as_ref() {
+            osvd.shrink_reconstruct(tau)
+        } else {
+            Svd::jacobi(w).shrink_reconstruct(tau)
+        };
+        *w = out;
+    }
+
+    fn value(&self, w: &Mat) -> f64 {
+        self.lambda * Svd::jacobi(w).nuclear_norm()
+    }
+
+    fn clone_box(&self) -> Box<dyn SharedProx> {
+        Box::new(self.clone())
+    }
+
+    fn enable_incremental(&mut self, w0: &Mat, refresh_every: u64) {
+        self.online = Some(OnlineSvd::init(w0));
+        self.resvd_every = refresh_every;
+        self.commits_since_refresh = 0;
+    }
+
+    fn is_incremental(&self) -> bool {
         self.online.is_some()
     }
 
-    /// The configured exact-refresh stride (0 = never).
-    pub fn resvd_every(&self) -> u64 {
-        self.resvd_every
-    }
-
-    /// Exact refreshes performed so far on the online path.
-    pub fn svd_refreshes(&self) -> u64 {
-        self.refreshes
-    }
-
-    /// Reconstruction drift measured at the most recent exact refresh.
-    pub fn svd_drift(&self) -> f64 {
-        self.last_drift
-    }
-
-    /// Inform the incremental factorization that column `j` of the operand
-    /// changed (no-op unless the online path is active). Does not advance
-    /// the refresh stride — pair with [`Regularizer::note_commits`].
-    pub fn notify_column_update(&mut self, j: usize, col: &[f64]) {
+    fn notify_column_update(&mut self, j: usize, col: &[f64]) {
         if let Some(osvd) = self.online.as_mut() {
             osvd.replace_column(j, col);
         }
     }
 
-    /// True when the drift counter says the online factorization is due
-    /// for an exact rebuild.
-    pub fn needs_refresh(&self) -> bool {
+    fn note_commits(&mut self, n: u64) {
+        if self.online.is_some() {
+            self.commits_since_refresh += n;
+        }
+    }
+
+    fn online_prox(&self, eta: f64) -> Option<Mat> {
+        self.online
+            .as_ref()
+            .map(|osvd| osvd.shrink_reconstruct(eta * self.lambda))
+    }
+
+    fn needs_refresh(&self) -> bool {
         self.online.is_some()
             && self.resvd_every > 0
             && self.commits_since_refresh >= self.resvd_every
     }
 
-    /// Serialize the regularizer — factorization basis, resvd stride
-    /// counter, and drift metrics included — for a persist snapshot.
-    pub(crate) fn snapshot_parts(&self) -> crate::persist::RegSnapshot {
-        crate::persist::RegSnapshot {
-            kind: self.kind,
-            lambda: self.lambda,
-            gamma: self.gamma,
-            resvd_every: self.resvd_every,
-            commits_since_refresh: self.commits_since_refresh,
-            refreshes: self.refreshes,
-            last_drift: self.last_drift,
-            online: self.online.as_ref().map(|osvd| crate::persist::SvdFactors {
-                u: osvd.u.clone(),
-                sigma: osvd.sigma.clone(),
-                v: osvd.v.clone(),
-            }),
-        }
-    }
-
-    /// Rebuild a regularizer from a persist snapshot. The restored online
-    /// factorization and `commits_since_refresh` counter continue the
-    /// original run's resvd stride — resuming does not reset the drift
-    /// bound.
-    pub(crate) fn from_snapshot(rs: &crate::persist::RegSnapshot) -> Regularizer {
-        Regularizer {
-            kind: rs.kind,
-            lambda: rs.lambda,
-            gamma: rs.gamma,
-            online: rs.online.as_ref().map(|f| OnlineSvd {
-                u: f.u.clone(),
-                sigma: f.sigma.clone(),
-                v: f.v.clone(),
-            }),
-            resvd_every: rs.resvd_every,
-            commits_since_refresh: rs.commits_since_refresh,
-            refreshes: rs.refreshes,
-            last_drift: rs.last_drift,
-        }
-    }
-
-    /// Rebuild the online factorization from an exact Jacobi SVD of
-    /// `current` (the true matrix), recording the drift the incremental
-    /// path had accumulated. No-op unless the online path is active.
-    pub fn refresh_online(&mut self, current: &Mat) {
+    fn refresh(&mut self, current: &Mat) {
         if let Some(osvd) = self.online.as_ref() {
             self.last_drift = osvd.reconstruct().max_abs_diff(current);
             self.online = Some(OnlineSvd::init(current));
@@ -233,64 +242,274 @@ impl Regularizer {
         }
     }
 
-    /// `Prox_{η λ g}(W)`, overwriting `w`. `eta` is the prox step size.
-    pub fn prox(&mut self, w: &mut Mat, eta: f64) {
-        let tau = eta * self.lambda;
-        match self.kind {
-            RegularizerKind::None => {}
-            RegularizerKind::Nuclear => {
-                let out = if let Some(osvd) = self.online.as_ref() {
-                    osvd.shrink_reconstruct(tau)
-                } else {
-                    Svd::jacobi(w).shrink_reconstruct(tau)
-                };
-                *w = out;
-            }
-            RegularizerKind::L21 => prox_l21(w, tau),
-            RegularizerKind::L1 => {
-                for x in w.data_mut() {
-                    *x = soft(*x, tau);
-                }
-            }
-            RegularizerKind::ElasticNet => {
-                // prox of τ‖·‖₁ + (τγ/2)‖·‖² = soft(x, τ) / (1 + τγ)
-                let scale = 1.0 / (1.0 + tau * self.gamma);
-                for x in w.data_mut() {
-                    *x = soft(*x, tau) * scale;
-                }
-            }
-        }
+    fn refresh_count(&self) -> u64 {
+        self.refreshes
     }
 
-    /// `λ·g(W)` for objective reporting.
-    pub fn value(&self, w: &Mat) -> f64 {
-        match self.kind {
-            RegularizerKind::None => 0.0,
-            RegularizerKind::Nuclear => self.lambda * Svd::jacobi(w).nuclear_norm(),
-            RegularizerKind::L21 => {
-                let mut sum = 0.0;
-                for r in 0..w.rows() {
-                    let mut s = 0.0;
-                    for c in 0..w.cols() {
-                        let x = w.get(r, c);
-                        s += x * x;
-                    }
-                    sum += s.sqrt();
+    fn refresh_drift(&self) -> f64 {
+        self.last_drift
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        NuclearProx::encode_state_parts(
+            self.lambda,
+            self.resvd_every,
+            self.commits_since_refresh,
+            self.refreshes,
+            self.last_drift,
+            self.online.as_ref().map(|o| (&o.u, o.sigma.as_slice(), &o.v)),
+        )
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut c = Cursor::new(bytes);
+        self.lambda = c.f64()?;
+        self.resvd_every = c.u64()?;
+        self.commits_since_refresh = c.u64()?;
+        self.refreshes = c.u64()?;
+        self.last_drift = c.f64()?;
+        self.online = match c.u8()? {
+            0 => None,
+            1 => {
+                let u = read_mat(&mut c)?;
+                let k = c.u32()? as usize;
+                let sigma = read_f64s(&mut c, k)?;
+                let v = read_mat(&mut c)?;
+                if u.cols() != k || v.cols() != k {
+                    return Err(WireError::Malformed(
+                        "nuclear factor dimensions inconsistent",
+                    )
+                    .into());
                 }
-                self.lambda * sum
+                Some(OnlineSvd { u, sigma, v })
             }
-            RegularizerKind::L1 => self.lambda * w.data().iter().map(|x| x.abs()).sum::<f64>(),
-            RegularizerKind::ElasticNet => {
-                let l1: f64 = w.data().iter().map(|x| x.abs()).sum();
-                let sq: f64 = w.data().iter().map(|x| x * x).sum();
-                self.lambda * (l1 + 0.5 * self.gamma * sq)
-            }
-        }
+            _ => return Err(WireError::Malformed("nuclear online flag not 0/1").into()),
+        };
+        c.finish()?;
+        Ok(())
     }
 }
 
+// ------------------------------------------------------- l21 / l1 / en / 0
+
+/// Joint feature selection `g(W) = ‖W‖_{2,1}` (row-wise group shrinkage).
+#[derive(Clone, Debug)]
+pub struct L21Prox {
+    lambda: f64,
+}
+
+impl L21Prox {
+    /// An ℓ2,1 regularizer with strength `lambda`.
+    pub fn new(lambda: f64) -> L21Prox {
+        L21Prox { lambda }
+    }
+}
+
+impl SharedProx for L21Prox {
+    fn id(&self) -> &'static str {
+        "l21"
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn prox(&mut self, w: &mut Mat, eta: f64) {
+        prox_l21(w, eta * self.lambda);
+    }
+
+    fn value(&self, w: &Mat) -> f64 {
+        let mut sum = 0.0;
+        for r in 0..w.rows() {
+            let mut s = 0.0;
+            for c in 0..w.cols() {
+                let x = w.get(r, c);
+                s += x * x;
+            }
+            sum += s.sqrt();
+        }
+        self.lambda * sum
+    }
+
+    fn clone_box(&self) -> Box<dyn SharedProx> {
+        Box::new(self.clone())
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        self.lambda.to_bits().to_le_bytes().to_vec()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut c = Cursor::new(bytes);
+        self.lambda = c.f64()?;
+        c.finish()?;
+        Ok(())
+    }
+}
+
+/// Elementwise sparsity `g(W) = ‖W‖₁` (soft threshold).
+#[derive(Clone, Debug)]
+pub struct L1Prox {
+    lambda: f64,
+}
+
+impl L1Prox {
+    /// An ℓ1 regularizer with strength `lambda`.
+    pub fn new(lambda: f64) -> L1Prox {
+        L1Prox { lambda }
+    }
+}
+
+impl SharedProx for L1Prox {
+    fn id(&self) -> &'static str {
+        "l1"
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn prox(&mut self, w: &mut Mat, eta: f64) {
+        let tau = eta * self.lambda;
+        for x in w.data_mut() {
+            *x = soft(*x, tau);
+        }
+    }
+
+    fn value(&self, w: &Mat) -> f64 {
+        self.lambda * w.data().iter().map(|x| x.abs()).sum::<f64>()
+    }
+
+    fn clone_box(&self) -> Box<dyn SharedProx> {
+        Box::new(self.clone())
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        self.lambda.to_bits().to_le_bytes().to_vec()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut c = Cursor::new(bytes);
+        self.lambda = c.f64()?;
+        c.finish()?;
+        Ok(())
+    }
+}
+
+/// The strongly convex `‖W‖₁ + (γ/2)‖W‖²_F` variant.
+#[derive(Clone, Debug)]
+pub struct ElasticNetProx {
+    lambda: f64,
+    gamma: f64,
+}
+
+impl ElasticNetProx {
+    /// An elastic-net regularizer with strength `lambda` and ℓ2 weight
+    /// `gamma`.
+    pub fn new(lambda: f64, gamma: f64) -> ElasticNetProx {
+        ElasticNetProx { lambda, gamma }
+    }
+
+    /// The ℓ2 weight γ.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+}
+
+impl SharedProx for ElasticNetProx {
+    fn id(&self) -> &'static str {
+        "elasticnet"
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn prox(&mut self, w: &mut Mat, eta: f64) {
+        // prox of τ‖·‖₁ + (τγ/2)‖·‖² = soft(x, τ) / (1 + τγ)
+        let tau = eta * self.lambda;
+        let scale = 1.0 / (1.0 + tau * self.gamma);
+        for x in w.data_mut() {
+            *x = soft(*x, tau) * scale;
+        }
+    }
+
+    fn value(&self, w: &Mat) -> f64 {
+        let l1: f64 = w.data().iter().map(|x| x.abs()).sum();
+        let sq: f64 = w.data().iter().map(|x| x * x).sum();
+        self.lambda * (l1 + 0.5 * self.gamma * sq)
+    }
+
+    fn clone_box(&self) -> Box<dyn SharedProx> {
+        Box::new(self.clone())
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.lambda.to_bits().to_le_bytes());
+        out.extend_from_slice(&self.gamma.to_bits().to_le_bytes());
+        out
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut c = Cursor::new(bytes);
+        self.lambda = c.f64()?;
+        self.gamma = c.f64()?;
+        c.finish()?;
+        Ok(())
+    }
+}
+
+/// No coupling: prox is the identity, value is zero (the single-task
+/// learning baseline). Keeps its λ only so a restored snapshot reports
+/// the strength it was configured with.
+#[derive(Clone, Debug)]
+pub struct ZeroProx {
+    lambda: f64,
+}
+
+impl ZeroProx {
+    /// The no-coupling baseline (λ recorded but unused).
+    pub fn new(lambda: f64) -> ZeroProx {
+        ZeroProx { lambda }
+    }
+}
+
+impl SharedProx for ZeroProx {
+    fn id(&self) -> &'static str {
+        "none"
+    }
+
+    fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn prox(&mut self, _w: &mut Mat, _eta: f64) {}
+
+    fn value(&self, _w: &Mat) -> f64 {
+        0.0
+    }
+
+    fn clone_box(&self) -> Box<dyn SharedProx> {
+        Box::new(self.clone())
+    }
+
+    fn state_save(&self) -> Vec<u8> {
+        self.lambda.to_bits().to_le_bytes().to_vec()
+    }
+
+    fn state_load(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut c = Cursor::new(bytes);
+        self.lambda = c.f64()?;
+        c.finish()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- kernels
+
 #[inline]
-fn soft(x: f64, tau: f64) -> f64 {
+pub(crate) fn soft(x: f64, tau: f64) -> f64 {
     if x > tau {
         x - tau
     } else if x < -tau {
@@ -332,6 +551,19 @@ mod tests {
         assert_eq!(soft(0.5, 1.0), 0.0);
         assert_eq!(soft(-0.5, 1.0), 0.0);
         assert_eq!(soft(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn kind_parse_names_and_errors() {
+        assert_eq!(RegularizerKind::parse("nuclear").unwrap(), RegularizerKind::Nuclear);
+        assert_eq!(RegularizerKind::parse("lowrank").unwrap(), RegularizerKind::Nuclear);
+        assert_eq!(RegularizerKind::parse("en").unwrap(), RegularizerKind::ElasticNet);
+        assert_eq!(RegularizerKind::Nuclear.name(), "nuclear");
+        let err = RegularizerKind::parse("ridge").unwrap_err();
+        assert!(
+            format!("{err}").contains("nuclear|l21|l1|elasticnet|none"),
+            "{err}"
+        );
     }
 
     #[test]
@@ -415,8 +647,8 @@ mod tests {
     fn online_svd_prox_matches_full_prox() {
         let mut rng = Rng::new(25);
         let mut a = Mat::randn(12, 5, &mut rng);
-        let mut full = Regularizer::new(RegularizerKind::Nuclear, 0.4);
-        let mut online = Regularizer::new(RegularizerKind::Nuclear, 0.4).with_online_svd(&a);
+        let mut full = NuclearProx::new(0.4);
+        let mut online = NuclearProx::new(0.4).with_online(&a);
         for step in 0..6 {
             let j = step % 5;
             let col = rng.normal_vec(12);
@@ -438,9 +670,7 @@ mod tests {
     fn resvd_refresh_bounds_drift_and_tracks_exact() {
         let mut rng = Rng::new(26);
         let mut a = Mat::randn(10, 6, &mut rng);
-        let mut reg = Regularizer::new(RegularizerKind::Nuclear, 0.3)
-            .with_online_svd(&a)
-            .with_resvd_every(4);
+        let mut reg = NuclearProx::new(0.3).with_online(&a).with_resvd_every(4);
         let mut refreshes = 0;
         for step in 0..20 {
             let j = step % 6;
@@ -449,14 +679,14 @@ mod tests {
             reg.notify_column_update(j, &col);
             reg.note_commits(1);
             if reg.needs_refresh() {
-                reg.refresh_online(&a);
+                reg.refresh(&a);
                 refreshes += 1;
-                assert!(reg.svd_drift() < 1e-8, "refresh drift {}", reg.svd_drift());
+                assert!(reg.refresh_drift() < 1e-8, "refresh drift {}", reg.refresh_drift());
             }
             let mut w_online = a.clone();
             reg.prox(&mut w_online, 0.5);
             let mut w_exact = a.clone();
-            Regularizer::new(RegularizerKind::Nuclear, 0.3).prox(&mut w_exact, 0.5);
+            NuclearProx::new(0.3).prox(&mut w_exact, 0.5);
             assert!(
                 w_online.max_abs_diff(&w_exact) < 1e-7,
                 "step {step}: online prox drifted {}",
@@ -464,13 +694,51 @@ mod tests {
             );
         }
         assert_eq!(refreshes, 5, "20 commits / resvd_every=4");
-        assert_eq!(reg.svd_refreshes(), 5);
-        assert_eq!(reg.resvd_every(), 4);
+        assert_eq!(reg.refresh_count(), 5);
+    }
+
+    #[test]
+    fn nuclear_state_roundtrips_online_path_bitwise() {
+        let mut rng = Rng::new(27);
+        let a = Mat::randn(9, 4, &mut rng);
+        let mut reg = NuclearProx::new(0.6).with_online(&a).with_resvd_every(16);
+        reg.notify_column_update(1, &rng.normal_vec(9));
+        reg.note_commits(3);
+        let blob = reg.state_save();
+        let mut back = NuclearProx::new(0.0);
+        back.state_load(&blob).unwrap();
+        assert_eq!(back.state_save(), blob, "save/load/save must be stable");
+        assert_eq!(
+            reg.online_prox(0.5).unwrap(),
+            back.online_prox(0.5).unwrap(),
+            "restored factorization must prox bitwise-identically"
+        );
+        assert!(!back.needs_refresh());
+        back.note_commits(13);
+        assert!(back.needs_refresh(), "restored stride counter continues (3+13 >= 16)");
+    }
+
+    #[test]
+    fn state_load_rejects_truncated_blobs() {
+        let mut rng = Rng::new(28);
+        let a = Mat::randn(6, 3, &mut rng);
+        let reg = NuclearProx::new(0.2).with_online(&a);
+        let blob = reg.state_save();
+        for cut in 0..blob.len() {
+            let mut back = NuclearProx::new(0.0);
+            assert!(
+                back.state_load(&blob[..cut]).is_err(),
+                "prefix of {cut}/{} bytes must not load",
+                blob.len()
+            );
+        }
     }
 
     #[test]
     fn prop_all_proxes_nonexpansive() {
         // Non-expansiveness of the backward operator underpins Theorem 1.
+        // (The full registered set, graph and mean included, is covered in
+        // rust/tests/properties.rs; this is the classic-kind fast check.)
         for kind in [
             RegularizerKind::Nuclear,
             RegularizerKind::L21,
@@ -515,8 +783,8 @@ mod tests {
                 let tau = 0.6;
                 reg.prox(&mut p, tau);
                 let lhs = 0.5 * p.add_scaled(-1.0, &m).frobenius_norm().powi(2)
-                    + tau * reg.value(&p) / reg.lambda;
-                let rhs = tau * reg.value(&m) / reg.lambda;
+                    + tau * reg.value(&p) / reg.lambda();
+                let rhs = tau * reg.value(&m) / reg.lambda();
                 lhs <= rhs + 1e-9
             },
         );

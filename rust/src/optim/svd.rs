@@ -11,44 +11,50 @@
 //!   where `k` is the retained rank. This is the **default** nuclear-prox
 //!   path (`--svd online`), re-anchored to an exact Jacobi factorization
 //!   every `--resvd-every` commits (see [`SvdMode`] and
-//!   `Regularizer::with_resvd_every`).
+//!   [`NuclearProx`](crate::optim::prox::NuclearProx)).
 
 use crate::linalg::{dot, nrm2, Mat};
+use crate::util::EnumTable;
 
-/// Which SVD backs the nuclear-norm proximal step (Eq. IV.2).
+/// Name table for [`SvdMode`].
+const SVD_MODES: EnumTable<SvdMode> = EnumTable {
+    what: "--svd value",
+    rows: &[
+        ("exact", &["jacobi"], SvdMode::Exact),
+        ("online", &["brand"], SvdMode::Online),
+    ],
+};
+
+/// Which backend drives a formulation's *incremental* path — for the
+/// nuclear-norm prox (Eq. IV.2), which SVD it runs on.
 ///
-/// [`SvdMode::Online`] is the default: the server maintains a Brand
-/// rank-1-update factorization across commits instead of refactorizing the
-/// whole `d × T` matrix on every prox, falling back to an exact Jacobi
-/// refactorization every `resvd_every` commits to bound numerical drift.
-/// [`SvdMode::Exact`] recomputes the one-sided Jacobi SVD on every
-/// uncached prox — the pre-incremental behavior, kept as the reference.
+/// [`SvdMode::Online`] is the default: `build_server` calls the
+/// formulation's `enable_incremental` hook, so the nuclear prox maintains
+/// a Brand rank-1-update factorization across commits (refreshed exactly
+/// every `resvd_every` commits to bound drift, see
+/// [`NuclearProx`](crate::optim::prox::NuclearProx)) and the mean
+/// formulation maintains its running centroid. [`SvdMode::Exact`] skips
+/// the hook: every uncached prox recomputes from a matrix snapshot — the
+/// pre-incremental behavior, kept as the reference.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum SvdMode {
-    /// Exact one-sided Jacobi SVD on every uncached prox.
+    /// Exact recompute from a snapshot on every uncached prox.
     Exact,
-    /// Incremental Brand rank-1 column updates with periodic exact
-    /// refresh (see `Regularizer::with_resvd_every`).
+    /// Incremental updates with periodic exact refresh.
     #[default]
     Online,
 }
 
 impl SvdMode {
-    /// Parse a CLI value (`"exact"` | `"online"`).
-    pub fn parse(s: &str) -> Option<SvdMode> {
-        match s {
-            "exact" | "jacobi" => Some(SvdMode::Exact),
-            "online" | "brand" => Some(SvdMode::Online),
-            _ => None,
-        }
+    /// Parse a CLI value (`"exact"` | `"online"`); the error lists the
+    /// valid values.
+    pub fn parse(s: &str) -> anyhow::Result<SvdMode> {
+        SVD_MODES.parse(s)
     }
 
     /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
-        match self {
-            SvdMode::Exact => "exact",
-            SvdMode::Online => "online",
-        }
+        SVD_MODES.name(*self)
     }
 }
 

@@ -26,7 +26,12 @@ pub const SNAPSHOT_MAGIC: [u8; 4] = *b"AMTS";
 /// WAL-file magic (`AMTW`al).
 pub const WAL_MAGIC: [u8; 4] = *b"AMTW";
 /// On-disk format version; bumped on any incompatible record change.
-pub const FORMAT_VERSION: u8 = 1;
+/// v2 replaced the fixed-layout regularizer record with a generic
+/// formulation tag + opaque state blob (see `snapshot.rs`); v1 files
+/// remain readable ([`read_header`] accepts [`MIN_FORMAT_VERSION`]..).
+pub const FORMAT_VERSION: u8 = 2;
+/// Oldest on-disk format version the readers still decode.
+pub const MIN_FORMAT_VERSION: u8 = 1;
 /// Upper bound on a single record's payload (guards allocation on
 /// corrupted lengths; large state is split across per-column records).
 pub const MAX_RECORD: u32 = 1 << 26;
@@ -64,7 +69,11 @@ impl fmt::Display for PersistError {
             PersistError::Io(e) => write!(f, "persist io error: {e}"),
             PersistError::BadMagic(m) => write!(f, "bad file magic {m:02x?}"),
             PersistError::BadVersion(v) => {
-                write!(f, "unsupported persist format version {v} (expected {FORMAT_VERSION})")
+                write!(
+                    f,
+                    "unsupported persist format version {v} \
+                     (supported: {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
+                )
             }
             PersistError::BadTag(t) => write!(f, "unknown record tag {t:#04x}"),
             PersistError::Oversize(n) => {
@@ -112,8 +121,10 @@ pub fn write_header(w: &mut impl Write, magic: [u8; 4]) -> Result<(), PersistErr
     Ok(())
 }
 
-/// Read and validate the file header against `magic`.
-pub fn read_header(r: &mut impl Read, magic: [u8; 4]) -> Result<(), PersistError> {
+/// Read and validate the file header against `magic`, returning the
+/// file's format version (any supported version; decoders branch on it
+/// for read-compat with older files).
+pub fn read_header(r: &mut impl Read, magic: [u8; 4]) -> Result<u8, PersistError> {
     let mut got = [0u8; 4];
     r.read_exact(&mut got)?;
     if got != magic {
@@ -121,15 +132,20 @@ pub fn read_header(r: &mut impl Read, magic: [u8; 4]) -> Result<(), PersistError
     }
     let mut ver = [0u8; 1];
     r.read_exact(&mut ver)?;
-    if ver[0] != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&ver[0]) {
         return Err(PersistError::BadVersion(ver[0]));
     }
-    Ok(())
+    Ok(ver[0])
 }
 
 /// Write one checksummed record: tag, length, payload, crc.
 pub fn write_record(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<(), PersistError> {
-    debug_assert!(payload.len() as u64 <= MAX_RECORD as u64);
+    // Hard error (not a debug_assert): a record the reader's MAX_RECORD
+    // bound would reject must never be written — an unreadable checkpoint
+    // is worse than a failed write.
+    if payload.len() as u64 > MAX_RECORD as u64 {
+        return Err(PersistError::Oversize(payload.len().min(u32::MAX as usize) as u32));
+    }
     let len = (payload.len() as u32).to_le_bytes();
     let crc = fnv1a32(&[&[tag], &len, payload]).to_le_bytes();
     w.write_all(&[tag])?;
@@ -262,7 +278,17 @@ mod tests {
     fn header_roundtrips_and_rejects_mismatch() {
         let mut out = Vec::new();
         write_header(&mut out, SNAPSHOT_MAGIC).unwrap();
-        assert!(read_header(&mut std::io::Cursor::new(&out), SNAPSHOT_MAGIC).is_ok());
+        assert_eq!(
+            read_header(&mut std::io::Cursor::new(&out), SNAPSHOT_MAGIC).unwrap(),
+            FORMAT_VERSION
+        );
+        // Older supported versions are accepted and reported.
+        let mut v1 = out.clone();
+        v1[4] = MIN_FORMAT_VERSION;
+        assert_eq!(
+            read_header(&mut std::io::Cursor::new(&v1), SNAPSHOT_MAGIC).unwrap(),
+            MIN_FORMAT_VERSION
+        );
         assert!(matches!(
             read_header(&mut std::io::Cursor::new(&out), WAL_MAGIC),
             Err(PersistError::BadMagic(_))

@@ -8,10 +8,14 @@
 //!
 //! * **Snapshots** ([`ServerSnapshot`]) — a versioned, checksummed binary
 //!   capture of the whole server: `V` with its version counters, the
-//!   per-column commit dedup keys, pending online-SVD slots, the
-//!   regularizer (incremental factorization basis and resvd counter
-//!   included, so Online mode resumes without resetting its drift
-//!   bound), η, the metrics counters, and registered RNG streams.
+//!   per-column commit dedup keys, pending column slots, the coupling
+//!   formulation as a generic [`FormulationState`] (registry id + the
+//!   opaque blob its `state_save` hook produced — incremental SVD basis,
+//!   resvd counter, similarity graph, centroid cache, whatever the
+//!   formulation keeps — so Online mode resumes without resetting its
+//!   drift bound and *any* registered formulation persists), η, the
+//!   metrics counters, and registered RNG streams. Format v2; v1 files
+//!   (fixed-layout classic regularizer record) remain readable.
 //! * **A WAL** ([`WalEntry`]) — every commit (and every uncached prox,
 //!   whose fold order matters to the online factorization) between
 //!   snapshots, fsync'd before the commit is acknowledged.
@@ -39,7 +43,7 @@ pub mod snapshot;
 pub mod wal;
 
 pub use codec::PersistError;
-pub use snapshot::{RegSnapshot, ServerSnapshot, SvdFactors};
+pub use snapshot::{FormulationState, ServerSnapshot};
 pub use wal::{WalEntry, WalScan, WalWriter};
 
 use crate::coordinator::server::CentralServer;
@@ -307,7 +311,7 @@ pub fn recover(cfg: PersistConfig) -> Result<Recovered> {
     // Files are scanned in start order; a torn tail ends that file's
     // contribution, and a sequence gap ends the whole replay (entries
     // beyond a gap are causally unsafe).
-    let server = CentralServer::from_snapshot(&snap);
+    let server = CentralServer::from_snapshot(&snap)?;
     let (d, t_count) = (server.state().d(), server.state().t());
     let mut expected = snap.seq + 1;
     let mut replayed = 0u64;
@@ -383,7 +387,8 @@ fn list_numbered(dir: &Path, prefix: &str, ext: &str) -> Result<Vec<(u64, PathBu
 mod tests {
     use super::*;
     use crate::coordinator::state::SharedState;
-    use crate::optim::prox::{Regularizer, RegularizerKind};
+    use crate::optim::prox::NuclearProx;
+    use crate::optim::SharedProx;
     use crate::util::Rng;
     use std::sync::Arc;
 
@@ -397,10 +402,11 @@ mod tests {
         let mut rng = Rng::new(5150);
         let m = crate::linalg::Mat::randn(d, t, &mut rng);
         let state = Arc::new(SharedState::new(&m));
-        let mut reg = Regularizer::new(RegularizerKind::Nuclear, 0.3);
+        let mut reg = NuclearProx::new(0.3);
         if online {
-            reg = reg.with_online_svd(&m).with_resvd_every(5);
+            reg = reg.with_online(&m).with_resvd_every(5);
         }
+        let reg: Box<dyn SharedProx> = Box::new(reg);
         let cp = Arc::new(
             Checkpointer::create(PersistConfig::new(dir, every)).unwrap(),
         );

@@ -4,12 +4,20 @@
 //!
 //! A snapshot holds everything recovery needs to rebuild the server at an
 //! exact WAL horizon (`seq`): the shared matrix `V` with its version
-//! counters, the per-column commit-dedup keys, the pending online-SVD
-//! slots, the full [`Regularizer`](crate::optim::prox::Regularizer) —
-//! including the incremental factorization's basis and the resvd stride
-//! counter, so the online nuclear prox resumes *without* resetting its
-//! drift bound — the run constants (η, prox stride), the server metrics
-//! counters, and any registered RNG streams.
+//! counters, the per-column commit-dedup keys, the pending column slots,
+//! the full coupling formulation — as a [`FormulationState`]: the
+//! registry id plus the opaque blob its
+//! [`state_save`](crate::optim::formulation::SharedProx::state_save) hook
+//! produced, so *any* registered formulation (incremental basis, resvd
+//! stride counter, similarity graph, centroid cache, …) persists without
+//! the codec knowing its internals — the run constants (η, prox stride),
+//! the server metrics counters, and any registered RNG streams.
+//!
+//! Format **v2** introduced the generic formulation record. **v1** files
+//! (fixed-layout nuclear/ℓ2,1/ℓ1/elastic-net/none regularizer record +
+//! separate factor records) are still readable: the decoder maps the
+//! legacy layout onto the same [`FormulationState`] the v2 impls expect,
+//! so a pre-redesign checkpoint resumes under the trait-based server.
 //!
 //! Files are written atomically (temp file + fsync + rename) and every
 //! record is checksummed; a damaged snapshot reads as an error and
@@ -19,7 +27,8 @@ use super::codec::{
     read_header, read_record, write_header, write_record, PersistError, SNAPSHOT_MAGIC,
 };
 use crate::linalg::Mat;
-use crate::optim::prox::RegularizerKind;
+use crate::optim::prox::{ElasticNetProx, L1Prox, L21Prox, NuclearProx, ZeroProx};
+use crate::optim::SharedProx;
 use crate::transport::wire::{push_f64s, Cursor};
 use crate::util::RngState;
 use std::fs::File;
@@ -32,42 +41,29 @@ const TAG_APPLIED: u8 = 0x03;
 const TAG_COLUMN: u8 = 0x04;
 const TAG_PENDING: u8 = 0x05;
 const TAG_REG: u8 = 0x06;
+/// v1-only: online-SVD factor matrices (v2 folds them into the blob).
 const TAG_FACTOR: u8 = 0x07;
+/// v1-only: online-SVD singular values.
 const TAG_SIGMA: u8 = 0x08;
 const TAG_RNG: u8 = 0x09;
 const TAG_END: u8 = 0x7E;
 
-/// The online-SVD factorization `U diag(σ) Vᵀ`, serialized basis and all.
-#[derive(Clone, Debug, PartialEq)]
-pub struct SvdFactors {
-    /// Left factor (`d × k`).
-    pub u: Mat,
-    /// Retained singular values.
-    pub sigma: Vec<f64>,
-    /// Right factor (`T × k`).
-    pub v: Mat,
-}
+/// Max formulation-state bytes per TAG_REG record. Large state (a
+/// similarity graph over thousands of tasks, a big SVD basis) is split
+/// across continuation records (`id_len = 0`) so no single record ever
+/// approaches the reader's `MAX_RECORD` bound.
+const REG_CHUNK: usize = 1 << 22;
 
-/// Serialized [`Regularizer`](crate::optim::prox::Regularizer) state.
+/// A formulation's persist identity: its registry id (see
+/// [`SharedProx::id`]) and the opaque state blob its `state_save` hook
+/// produced. Recovery hands both to
+/// [`formulation::restore`](crate::optim::formulation::restore).
 #[derive(Clone, Debug, PartialEq)]
-pub struct RegSnapshot {
-    /// Which coupling `g` is.
-    pub kind: RegularizerKind,
-    /// Regularization strength λ.
-    pub lambda: f64,
-    /// Elastic-net ℓ2 weight γ.
-    pub gamma: f64,
-    /// Exact-refresh stride (0 = never).
-    pub resvd_every: u64,
-    /// Commits folded since the last exact refresh — preserved so a
-    /// resumed run refreshes on the original stride, not a reset one.
-    pub commits_since_refresh: u64,
-    /// Exact refreshes performed so far.
-    pub refreshes: u64,
-    /// Drift recorded at the last exact refresh.
-    pub last_drift: f64,
-    /// The incremental factorization, when the online path is active.
-    pub online: Option<SvdFactors>,
+pub struct FormulationState {
+    /// Canonical formulation name (registry key).
+    pub id: String,
+    /// Opaque state bytes, as produced by `state_save`.
+    pub blob: Vec<u8>,
 }
 
 /// A complete, consistent capture of central-server state at WAL horizon
@@ -88,7 +84,7 @@ pub struct ServerSnapshot {
     pub applied_k: Vec<u64>,
     /// The shared auxiliary matrix `V`.
     pub v: Mat,
-    /// Per-column pending slots awaiting their online-SVD fold.
+    /// Per-column pending slots awaiting their incremental fold.
     pub pending: Vec<Option<Vec<f64>>>,
     /// Proximal computations performed.
     pub prox_count: u64,
@@ -96,35 +92,14 @@ pub struct ServerSnapshot {
     pub coalesced: u64,
     /// Raw commits not yet handed to the refresh-stride counter.
     pub uncounted_commits: u64,
-    /// The regularizer, factorization included.
-    pub reg: RegSnapshot,
+    /// The coupling formulation, by registry id + opaque state.
+    pub reg: FormulationState,
     /// Named RNG streams (id → exact generator state); which streams are
     /// stored is the embedding run's choice. The in-proc session stores
     /// its *root* stream as id 0 — the state worker streams fork from —
     /// so a resumed run reproduces the original run's per-node streams
     /// regardless of the seed on the resume command line.
     pub rng_streams: Vec<(u64, RngState)>,
-}
-
-fn kind_code(kind: RegularizerKind) -> u8 {
-    match kind {
-        RegularizerKind::Nuclear => 0,
-        RegularizerKind::L21 => 1,
-        RegularizerKind::L1 => 2,
-        RegularizerKind::ElasticNet => 3,
-        RegularizerKind::None => 4,
-    }
-}
-
-fn kind_from_code(code: u8) -> Result<RegularizerKind, PersistError> {
-    Ok(match code {
-        0 => RegularizerKind::Nuclear,
-        1 => RegularizerKind::L21,
-        2 => RegularizerKind::L1,
-        3 => RegularizerKind::ElasticNet,
-        4 => RegularizerKind::None,
-        _ => return Err(PersistError::Malformed("unknown regularizer kind code")),
-    })
 }
 
 fn push_u64s(out: &mut Vec<u8>, xs: &[u64]) {
@@ -158,8 +133,58 @@ fn mat_from_payload(payload: &[u8]) -> Result<(u8, Mat), PersistError> {
     Ok((which, m))
 }
 
+/// The v1 fixed-layout regularizer record, held until the decode loop has
+/// also collected the factor records it may reference.
+struct V1Reg {
+    id: &'static str,
+    lambda: f64,
+    gamma: f64,
+    resvd_every: u64,
+    commits_since_refresh: u64,
+    refreshes: u64,
+    last_drift: f64,
+    online_expected: bool,
+}
+
+/// Map a v1 kind code to the formulation registry id.
+fn v1_kind_id(code: u8) -> Result<&'static str, PersistError> {
+    Ok(match code {
+        0 => "nuclear",
+        1 => "l21",
+        2 => "l1",
+        3 => "elasticnet",
+        4 => "none",
+        _ => return Err(PersistError::Malformed("unknown regularizer kind code")),
+    })
+}
+
+/// Assemble the v2 state blob a v1 record stands for, through the same
+/// impls `state_save` uses — the two encodings cannot drift apart.
+fn v1_reg_to_state(
+    legacy: V1Reg,
+    factors: Option<(Mat, Vec<f64>, Mat)>,
+) -> Result<FormulationState, PersistError> {
+    let blob = match legacy.id {
+        "nuclear" => NuclearProx::encode_state_parts(
+            legacy.lambda,
+            legacy.resvd_every,
+            legacy.commits_since_refresh,
+            legacy.refreshes,
+            legacy.last_drift,
+            factors.as_ref().map(|(u, s, v)| (u, s.as_slice(), v)),
+        ),
+        "l21" => L21Prox::new(legacy.lambda).state_save(),
+        "l1" => L1Prox::new(legacy.lambda).state_save(),
+        "elasticnet" => ElasticNetProx::new(legacy.lambda, legacy.gamma).state_save(),
+        "none" => ZeroProx::new(legacy.lambda).state_save(),
+        _ => return Err(PersistError::Malformed("v1 kind outside the classic set")),
+    };
+    Ok(FormulationState { id: legacy.id.to_string(), blob })
+}
+
 impl ServerSnapshot {
-    /// Serialize to `w` (header + records + end marker).
+    /// Serialize to `w` (header + records + end marker), always in the
+    /// current format version.
     pub fn encode(&self, w: &mut impl Write) -> Result<(), PersistError> {
         let d = self.v.rows();
         let t = self.v.cols();
@@ -199,21 +224,31 @@ impl ServerSnapshot {
             }
         }
 
-        let mut reg = Vec::with_capacity(64);
-        reg.push(kind_code(self.reg.kind));
-        reg.extend_from_slice(&self.reg.lambda.to_bits().to_le_bytes());
-        reg.extend_from_slice(&self.reg.gamma.to_bits().to_le_bytes());
-        push_u64s(&mut reg, &[self.reg.resvd_every, self.reg.commits_since_refresh, self.reg.refreshes]);
-        reg.extend_from_slice(&self.reg.last_drift.to_bits().to_le_bytes());
-        reg.push(u8::from(self.reg.online.is_some()));
-        write_record(w, TAG_REG, &reg)?;
-
-        if let Some(f) = &self.reg.online {
-            write_record(w, TAG_FACTOR, &mat_payload(0, &f.u))?;
-            write_record(w, TAG_FACTOR, &mat_payload(1, &f.v))?;
-            let mut sig = Vec::new();
-            push_f64s(&mut sig, &f.sigma);
-            write_record(w, TAG_SIGMA, &sig)?;
+        // v2 formulation record: id (length-prefixed) + opaque state
+        // blob, chunked across continuation records when large.
+        let id = self.reg.id.as_bytes();
+        if id.is_empty() || id.len() > u8::MAX as usize {
+            return Err(PersistError::Malformed("formulation id must be 1..=255 bytes"));
+        }
+        let mut first = true;
+        let mut off = 0;
+        loop {
+            let end = (off + REG_CHUNK).min(self.reg.blob.len());
+            let chunk = &self.reg.blob[off..end];
+            let mut payload = Vec::with_capacity(1 + id.len() + chunk.len());
+            if first {
+                payload.push(id.len() as u8);
+                payload.extend_from_slice(id);
+            } else {
+                payload.push(0);
+            }
+            payload.extend_from_slice(chunk);
+            write_record(w, TAG_REG, &payload)?;
+            first = false;
+            off = end;
+            if off >= self.reg.blob.len() {
+                break;
+            }
         }
 
         for (id, st) in &self.rng_streams {
@@ -235,11 +270,13 @@ impl ServerSnapshot {
     }
 
     /// Decode from `r`, validating structure as well as checksums: all
-    /// columns present, dedup/version vectors sized `T`, factor
-    /// dimensions consistent, and an explicit end marker (so a truncated
-    /// snapshot can never read as a shorter valid one).
+    /// columns present, dedup/version vectors sized `T`, an explicit end
+    /// marker (so a truncated snapshot can never read as a shorter valid
+    /// one), and — branching on the header version — either the v2
+    /// formulation record or the v1 fixed regularizer layout (mapped onto
+    /// the same [`FormulationState`]).
     pub fn decode(r: &mut impl Read) -> Result<ServerSnapshot, PersistError> {
-        read_header(r, SNAPSHOT_MAGIC)?;
+        let file_version = read_header(r, SNAPSHOT_MAGIC)?;
         let (tag, meta) = read_record(r)?.ok_or(PersistError::Truncated)?;
         if tag != TAG_META {
             return Err(PersistError::Malformed("snapshot must start with its meta record"));
@@ -261,11 +298,11 @@ impl ServerSnapshot {
         let mut v = Mat::zeros(d, t);
         let mut seen_cols = vec![false; t];
         let mut pending: Vec<Option<Vec<f64>>> = vec![None; t];
-        let mut reg: Option<RegSnapshot> = None;
+        let mut reg: Option<FormulationState> = None;
+        let mut v1_reg: Option<V1Reg> = None;
         let mut fac_u: Option<Mat> = None;
         let mut fac_v: Option<Mat> = None;
         let mut sigma: Option<Vec<f64>> = None;
-        let mut online_expected = false;
         let mut rng_streams = Vec::new();
         let mut ended = false;
 
@@ -296,32 +333,63 @@ impl ServerSnapshot {
                         pending[idx] = Some(col);
                     }
                 }
+                TAG_REG if file_version >= 2 => {
+                    let id_len = c.u8()? as usize;
+                    if id_len == 0 {
+                        // Continuation chunk of a large state blob.
+                        let state = reg.as_mut().ok_or(PersistError::Malformed(
+                            "formulation continuation before its header record",
+                        ))?;
+                        state.blob.extend_from_slice(c.take_rest());
+                    } else {
+                        if reg.is_some() {
+                            return Err(PersistError::Malformed(
+                                "duplicate formulation record",
+                            ));
+                        }
+                        let id_bytes = c.take(id_len)?;
+                        let id = std::str::from_utf8(id_bytes)
+                            .map_err(|_| {
+                                PersistError::Malformed("formulation id not utf-8")
+                            })?
+                            .to_string();
+                        let blob = c.take_rest().to_vec();
+                        reg = Some(FormulationState { id, blob });
+                    }
+                }
                 TAG_REG => {
-                    let kind = kind_from_code(c.u8()?)?;
+                    // v1 fixed layout: kind code + λ/γ + resvd counters +
+                    // drift + online flag (factors follow separately).
+                    let id = v1_kind_id(c.u8()?)?;
                     let lambda = c.f64()?;
                     let gamma = c.f64()?;
                     let resvd_every = c.u64()?;
                     let commits_since_refresh = c.u64()?;
                     let refreshes = c.u64()?;
                     let last_drift = c.f64()?;
-                    online_expected = match c.u8()? {
+                    let online_expected = match c.u8()? {
                         0 => false,
                         1 => true,
                         _ => return Err(PersistError::Malformed("online flag not 0/1")),
                     };
                     c.finish()?;
-                    reg = Some(RegSnapshot {
-                        kind,
+                    v1_reg = Some(V1Reg {
+                        id,
                         lambda,
                         gamma,
                         resvd_every,
                         commits_since_refresh,
                         refreshes,
                         last_drift,
-                        online: None,
+                        online_expected,
                     });
                 }
                 TAG_FACTOR => {
+                    if file_version >= 2 {
+                        return Err(PersistError::Malformed(
+                            "factor records are v1-only (v2 stores factors in the blob)",
+                        ));
+                    }
                     let (which, m) = mat_from_payload(&payload)?;
                     match which {
                         0 => fac_u = Some(m),
@@ -330,6 +398,11 @@ impl ServerSnapshot {
                     }
                 }
                 TAG_SIGMA => {
+                    if file_version >= 2 {
+                        return Err(PersistError::Malformed(
+                            "sigma records are v1-only (v2 stores factors in the blob)",
+                        ));
+                    }
                     let xs = c.rest_f64s()?;
                     c.finish()?;
                     sigma = Some(xs);
@@ -364,19 +437,31 @@ impl ServerSnapshot {
             col_versions.ok_or(PersistError::Malformed("snapshot has no version record"))?;
         let applied_k =
             applied_k.ok_or(PersistError::Malformed("snapshot has no dedup record"))?;
-        let mut reg =
-            reg.ok_or(PersistError::Malformed("snapshot has no regularizer record"))?;
-        if online_expected {
-            let u = fac_u.ok_or(PersistError::Malformed("online snapshot missing U factor"))?;
-            let vv = fac_v.ok_or(PersistError::Malformed("online snapshot missing V factor"))?;
-            let sigma =
-                sigma.ok_or(PersistError::Malformed("online snapshot missing sigma"))?;
-            if u.cols() != sigma.len() || vv.cols() != sigma.len() || u.rows() != d || vv.rows() != t
-            {
-                return Err(PersistError::Malformed("factor dimensions inconsistent"));
-            }
-            reg.online = Some(SvdFactors { u, sigma, v: vv });
-        }
+        let reg = if file_version >= 2 {
+            reg.ok_or(PersistError::Malformed("snapshot has no formulation record"))?
+        } else {
+            let legacy =
+                v1_reg.ok_or(PersistError::Malformed("snapshot has no regularizer record"))?;
+            let factors = if legacy.online_expected {
+                let u =
+                    fac_u.ok_or(PersistError::Malformed("online snapshot missing U factor"))?;
+                let vv =
+                    fac_v.ok_or(PersistError::Malformed("online snapshot missing V factor"))?;
+                let sigma =
+                    sigma.ok_or(PersistError::Malformed("online snapshot missing sigma"))?;
+                if u.cols() != sigma.len()
+                    || vv.cols() != sigma.len()
+                    || u.rows() != d
+                    || vv.rows() != t
+                {
+                    return Err(PersistError::Malformed("factor dimensions inconsistent"));
+                }
+                Some((u, sigma, vv))
+            } else {
+                None
+            };
+            v1_reg_to_state(legacy, factors)?
+        };
 
         Ok(ServerSnapshot {
             seq,
@@ -434,17 +519,25 @@ fn read_u64s(c: &mut Cursor<'_>, n: usize) -> Result<Vec<u64>, PersistError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::formulation::{self, FormulationSpec, FORMULATIONS};
+    use crate::optim::svd::Svd;
     use crate::util::Rng;
+
+    fn nuclear_state(online: bool, v: &Mat) -> FormulationState {
+        let mut reg = NuclearProx::new(0.4).with_resvd_every(64);
+        if online {
+            reg = reg.with_online(v);
+        }
+        reg.note_commits(13);
+        FormulationState { id: "nuclear".into(), blob: reg.state_save() }
+    }
 
     fn sample(online: bool) -> ServerSnapshot {
         let mut rng = Rng::new(4040);
         let d = 6;
         let t = 3;
         let v = Mat::randn(d, t, &mut rng);
-        let online_factors = online.then(|| {
-            let s = crate::optim::svd::Svd::jacobi(&v);
-            SvdFactors { u: s.u, sigma: s.sigma, v: s.v }
-        });
+        let reg = nuclear_state(online, &v);
         ServerSnapshot {
             seq: 41,
             eta: 0.125,
@@ -452,21 +545,12 @@ mod tests {
             version: 17,
             col_versions: vec![5, 8, 4],
             applied_k: vec![5, 0, 4],
-            v,
             pending: vec![None, Some(rng.normal_vec(d)), None],
+            v,
             prox_count: 9,
             coalesced: 3,
             uncounted_commits: 2,
-            reg: RegSnapshot {
-                kind: RegularizerKind::Nuclear,
-                lambda: 0.4,
-                gamma: 1.0,
-                resvd_every: 64,
-                commits_since_refresh: 13,
-                refreshes: 2,
-                last_drift: 3.2e-12,
-                online: online_factors,
-            },
+            reg,
             rng_streams: vec![(0, Rng::new(7).state()), (3, Rng::new(8).state())],
         }
     }
@@ -483,6 +567,45 @@ mod tests {
             let s = sample(online);
             assert_eq!(roundtrip(&s), s);
         }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_every_registered_formulation() {
+        // The generic record must carry any registered formulation's
+        // state — including the two shipped through the open API — and
+        // the restored impl must re-save the identical blob.
+        let mut rng = Rng::new(4141);
+        let v = Mat::randn(5, 4, &mut rng);
+        for info in FORMULATIONS {
+            let spec = FormulationSpec::parse(info.name).unwrap();
+            let mut reg = formulation::resolve(&spec, 0.3, 1.25, 4).unwrap();
+            reg.enable_incremental(&v, 32);
+            reg.notify_column_update(1, &rng.normal_vec(5));
+            reg.note_commits(2);
+            let mut s = sample(false);
+            s.v = v.clone();
+            s.col_versions = vec![1; 4];
+            s.applied_k = vec![1; 4];
+            s.pending = vec![None; 4];
+            s.reg = FormulationState { id: reg.id().to_string(), blob: reg.state_save() };
+            let back = roundtrip(&s);
+            assert_eq!(back, s, "{}", info.name);
+            let restored = formulation::restore(&back.reg.id, &back.reg.blob).unwrap();
+            assert_eq!(restored.state_save(), s.reg.blob, "{}", info.name);
+        }
+    }
+
+    #[test]
+    fn oversized_formulation_blobs_chunk_across_records() {
+        // A state blob bigger than one chunk must round-trip via
+        // continuation records (e.g. a similarity graph over thousands of
+        // tasks). The blob is opaque to the codec, so synthesize one.
+        let mut s = sample(false);
+        s.reg = FormulationState {
+            id: "graph".into(),
+            blob: (0..(REG_CHUNK * 2 + 123)).map(|i| (i * 31 % 251) as u8).collect(),
+        };
+        assert_eq!(roundtrip(&s), s);
     }
 
     #[test]
@@ -525,5 +648,173 @@ mod tests {
         assert!(!path.with_extension("tmp").exists(), "temp file renamed away");
         assert_eq!(ServerSnapshot::read_file(&path).unwrap(), s);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ------------------------------------------------- v1 read-compat
+
+    /// Byte-exact replica of the v1 writer (the pre-redesign fixed
+    /// regularizer layout), used to prove the new decoder reads old
+    /// checkpoints.
+    fn encode_v1(
+        s: &ServerSnapshot,
+        kind_code: u8,
+        lambda: f64,
+        gamma: f64,
+        resvd_every: u64,
+        commits: u64,
+        refreshes: u64,
+        drift: f64,
+        factors: Option<(&Mat, &[f64], &Mat)>,
+    ) -> Vec<u8> {
+        let d = s.v.rows();
+        let t = s.v.cols();
+        let mut w = Vec::new();
+        w.extend_from_slice(&SNAPSHOT_MAGIC);
+        w.push(1); // v1 header
+
+        let mut meta = Vec::new();
+        push_u64s(&mut meta, &[s.seq]);
+        meta.extend_from_slice(&(d as u32).to_le_bytes());
+        meta.extend_from_slice(&(t as u32).to_le_bytes());
+        meta.extend_from_slice(&s.eta.to_bits().to_le_bytes());
+        push_u64s(
+            &mut meta,
+            &[s.prox_every, s.version, s.prox_count, s.coalesced, s.uncounted_commits],
+        );
+        write_record(&mut w, TAG_META, &meta).unwrap();
+
+        let mut vers = Vec::new();
+        push_u64s(&mut vers, &s.col_versions);
+        write_record(&mut w, TAG_COL_VERSIONS, &vers).unwrap();
+        let mut applied = Vec::new();
+        push_u64s(&mut applied, &s.applied_k);
+        write_record(&mut w, TAG_APPLIED, &applied).unwrap();
+        for c in 0..t {
+            let mut payload = Vec::new();
+            payload.extend_from_slice(&(c as u32).to_le_bytes());
+            push_f64s(&mut payload, s.v.col(c));
+            write_record(&mut w, TAG_COLUMN, &payload).unwrap();
+        }
+        for (c, slot) in s.pending.iter().enumerate() {
+            if let Some(col) = slot {
+                let mut payload = Vec::new();
+                payload.extend_from_slice(&(c as u32).to_le_bytes());
+                push_f64s(&mut payload, col);
+                write_record(&mut w, TAG_PENDING, &payload).unwrap();
+            }
+        }
+
+        let mut reg = Vec::new();
+        reg.push(kind_code);
+        reg.extend_from_slice(&lambda.to_bits().to_le_bytes());
+        reg.extend_from_slice(&gamma.to_bits().to_le_bytes());
+        push_u64s(&mut reg, &[resvd_every, commits, refreshes]);
+        reg.extend_from_slice(&drift.to_bits().to_le_bytes());
+        reg.push(u8::from(factors.is_some()));
+        write_record(&mut w, TAG_REG, &reg).unwrap();
+
+        if let Some((u, sigma, v)) = factors {
+            write_record(&mut w, TAG_FACTOR, &mat_payload(0, u)).unwrap();
+            write_record(&mut w, TAG_FACTOR, &mat_payload(1, v)).unwrap();
+            let mut sig = Vec::new();
+            push_f64s(&mut sig, sigma);
+            write_record(&mut w, TAG_SIGMA, &sig).unwrap();
+        }
+
+        for (id, st) in &s.rng_streams {
+            let mut payload = Vec::new();
+            push_u64s(&mut payload, &[*id]);
+            push_u64s(&mut payload, &st.s);
+            match st.spare {
+                None => payload.push(0),
+                Some(x) => {
+                    payload.push(1);
+                    payload.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            write_record(&mut w, TAG_RNG, &payload).unwrap();
+        }
+        write_record(&mut w, TAG_END, &[]).unwrap();
+        w
+    }
+
+    #[test]
+    fn v1_snapshot_decodes_to_equivalent_formulation_state() {
+        // An online-nuclear v1 checkpoint: the decoder must map the fixed
+        // layout + factor records onto the exact blob the v2 NuclearProx
+        // would save, so `restore` resumes it with the factorization and
+        // the resvd stride counter intact.
+        let skeleton = sample(false);
+        let svd = Svd::jacobi(&skeleton.v);
+        let bytes = encode_v1(
+            &skeleton,
+            0, // nuclear
+            0.4,
+            1.0,
+            64,
+            13,
+            2,
+            3.5e-12,
+            Some((&svd.u, &svd.sigma, &svd.v)),
+        );
+        let got = ServerSnapshot::decode(&mut std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(got.reg.id, "nuclear");
+        let want_blob = NuclearProx::encode_state_parts(
+            0.4,
+            64,
+            13,
+            2,
+            3.5e-12,
+            Some((&svd.u, svd.sigma.as_slice(), &svd.v)),
+        );
+        assert_eq!(got.reg.blob, want_blob);
+        let restored = formulation::restore(&got.reg.id, &got.reg.blob).unwrap();
+        assert!(restored.is_incremental(), "online path must survive v1 migration");
+        assert_eq!(restored.lambda(), 0.4);
+        // Stride counter continues: 13 folded + 51 more = 64 ⇒ due.
+        let mut restored = restored;
+        assert!(!restored.needs_refresh());
+        restored.note_commits(51);
+        assert!(restored.needs_refresh());
+        // Everything else decodes unchanged.
+        assert_eq!(got.v, skeleton.v);
+        assert_eq!(got.seq, skeleton.seq);
+        assert_eq!(got.col_versions, skeleton.col_versions);
+    }
+
+    #[test]
+    fn v1_classic_kinds_map_to_their_impl_blobs() {
+        let skeleton = sample(false);
+        for (code, id) in [(1u8, "l21"), (2, "l1"), (3, "elasticnet"), (4, "none")] {
+            let bytes =
+                encode_v1(&skeleton, code, 0.7, 2.5, 0, 0, 0, 0.0, None);
+            let got = ServerSnapshot::decode(&mut std::io::Cursor::new(&bytes)).unwrap();
+            assert_eq!(got.reg.id, id);
+            let restored = formulation::restore(&got.reg.id, &got.reg.blob).unwrap();
+            assert_eq!(restored.id(), id);
+            assert_eq!(restored.lambda(), 0.7);
+        }
+        // Unknown kind code must error, not panic.
+        let bad = encode_v1(&skeleton, 9, 0.7, 1.0, 0, 0, 0, 0.0, None);
+        assert!(ServerSnapshot::decode(&mut std::io::Cursor::new(&bad)).is_err());
+    }
+
+    #[test]
+    fn v2_rejects_stray_v1_factor_records() {
+        let s = sample(false);
+        let mut buf = Vec::new();
+        s.encode(&mut buf).unwrap();
+        // Splice a factor record before the end marker: the v2 decoder
+        // must reject it rather than silently ignore half a factorization.
+        let end_record_len = {
+            let mut end = Vec::new();
+            write_record(&mut end, TAG_END, &[]).unwrap();
+            end.len()
+        };
+        let split = buf.len() - end_record_len;
+        let mut spliced = buf[..split].to_vec();
+        write_record(&mut spliced, TAG_FACTOR, &mat_payload(0, &s.v)).unwrap();
+        spliced.extend_from_slice(&buf[split..]);
+        assert!(ServerSnapshot::decode(&mut std::io::Cursor::new(&spliced)).is_err());
     }
 }

@@ -41,6 +41,16 @@ pub use inproc::InProc;
 pub use tcp::{TcpClient, TcpOptions, TcpServer, TcpServerHandle};
 
 use anyhow::Result;
+use crate::util::EnumTable;
+
+/// Name table for [`TransportKind`].
+const TRANSPORTS: EnumTable<TransportKind> = EnumTable {
+    what: "--transport value",
+    rows: &[
+        ("inproc", &[], TransportKind::InProc),
+        ("tcp", &[], TransportKind::Tcp),
+    ],
+};
 
 /// How a [`Session`](crate::coordinator::Session) wires its workers to the
 /// central server.
@@ -57,21 +67,15 @@ pub enum TransportKind {
 }
 
 impl TransportKind {
-    /// Parse a CLI value (`"inproc"` | `"tcp"`).
-    pub fn parse(s: &str) -> Option<TransportKind> {
-        match s {
-            "inproc" => Some(TransportKind::InProc),
-            "tcp" => Some(TransportKind::Tcp),
-            _ => None,
-        }
+    /// Parse a CLI value (`"inproc"` | `"tcp"`); the error lists the
+    /// valid values.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        TRANSPORTS.parse(s)
     }
 
     /// Canonical CLI name.
     pub fn name(&self) -> &'static str {
-        match self {
-            TransportKind::InProc => "inproc",
-            TransportKind::Tcp => "tcp",
-        }
+        TRANSPORTS.name(*self)
     }
 }
 

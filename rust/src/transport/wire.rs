@@ -213,6 +213,13 @@ impl<'a> Cursor<'a> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    /// All remaining bytes, verbatim (opaque payload tails).
+    pub(crate) fn take_rest(&mut self) -> &'a [u8] {
+        let rest = &self.b[self.i..];
+        self.i = self.b.len();
+        rest
+    }
+
     /// All remaining bytes as a little-endian f64 vector.
     pub(crate) fn rest_f64s(&mut self) -> Result<Vec<f64>, WireError> {
         let rest = &self.b[self.i..];

@@ -6,8 +6,10 @@
 //! in `docs/ARCHITECTURE.md`).
 
 pub mod json;
+pub mod names;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 
+pub use names::EnumTable;
 pub use rng::{Rng, RngState};

@@ -1,0 +1,93 @@
+//! One table-driven parse/name helper for every string-keyed enum.
+//!
+//! Before this module, `SvdMode`, `Loss`, `RegularizerKind` and
+//! `TransportKind` each hand-rolled the same `parse`/`name` pair with
+//! slightly different error behavior (all returned `Option`, so every call
+//! site invented its own error message). An [`EnumTable`] holds the
+//! canonical name, the accepted aliases and the variant in one place; the
+//! enums keep their `parse`/`name` methods as one-line wrappers, and every
+//! parse failure produces the same `anyhow` message shape listing the
+//! valid values.
+
+/// A static name table for one enum: `(canonical, aliases, variant)` rows.
+pub struct EnumTable<T: 'static> {
+    /// What the value is, for error messages (e.g. `"--svd value"`).
+    pub what: &'static str,
+    /// One row per variant: canonical name, accepted aliases, the variant.
+    pub rows: &'static [(&'static str, &'static [&'static str], T)],
+}
+
+impl<T: Copy + PartialEq + 'static> EnumTable<T> {
+    /// Parse `s` against the canonical names and aliases. The error names
+    /// every valid canonical value.
+    pub fn parse(&self, s: &str) -> anyhow::Result<T> {
+        for (canon, aliases, v) in self.rows {
+            if *canon == s || aliases.contains(&s) {
+                return Ok(*v);
+            }
+        }
+        anyhow::bail!(
+            "unknown {} '{}' (expected one of {})",
+            self.what,
+            s,
+            self.joined_names()
+        )
+    }
+
+    /// The canonical name of `v`.
+    pub fn name(&self, v: T) -> &'static str {
+        self.rows
+            .iter()
+            .find(|(_, _, x)| *x == v)
+            .map(|(n, _, _)| *n)
+            .expect("every variant has a table row")
+    }
+
+    /// Canonical names, in table order.
+    pub fn canonical_names(&self) -> Vec<&'static str> {
+        self.rows.iter().map(|(n, _, _)| *n).collect()
+    }
+
+    /// `a|b|c` over the canonical names (for error/help text).
+    pub fn joined_names(&self) -> String {
+        self.canonical_names().join("|")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum Fruit {
+        Apple,
+        Pear,
+    }
+
+    const FRUITS: EnumTable<Fruit> = EnumTable {
+        what: "fruit",
+        rows: &[("apple", &["pomme"], Fruit::Apple), ("pear", &[], Fruit::Pear)],
+    };
+
+    #[test]
+    fn parses_canonical_and_aliases() {
+        assert_eq!(FRUITS.parse("apple").unwrap(), Fruit::Apple);
+        assert_eq!(FRUITS.parse("pomme").unwrap(), Fruit::Apple);
+        assert_eq!(FRUITS.parse("pear").unwrap(), Fruit::Pear);
+    }
+
+    #[test]
+    fn error_lists_valid_values() {
+        let err = FRUITS.parse("banana").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown fruit 'banana'"), "{msg}");
+        assert!(msg.contains("apple|pear"), "{msg}");
+    }
+
+    #[test]
+    fn names_are_canonical() {
+        assert_eq!(FRUITS.name(Fruit::Apple), "apple");
+        assert_eq!(FRUITS.name(Fruit::Pear), "pear");
+        assert_eq!(FRUITS.joined_names(), "apple|pear");
+    }
+}

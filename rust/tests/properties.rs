@@ -5,8 +5,10 @@
 use amtl::coordinator::state::SharedState;
 use amtl::linalg::Mat;
 use amtl::optim::losses::{Loss, RowMat};
-use amtl::optim::prox::{prox_l21, Regularizer, RegularizerKind};
+use amtl::optim::formulation::{self, FormulationSpec, FORMULATIONS};
+use amtl::optim::prox::{prox_l21, NuclearProx, Regularizer, RegularizerKind};
 use amtl::optim::svd::Svd;
+use amtl::optim::SharedProx;
 use amtl::util::proptest::forall;
 use amtl::util::Rng;
 
@@ -258,13 +260,13 @@ fn prop_backward_forward_iteration_is_nonexpansive() {
             let mut rng = Rng::new(9);
             let l = amtl::optim::lipschitz::task_lipschitz(Loss::Squared, &x, &mut rng) * 1.001;
             let eta = 1.0 / l;
-            let mut reg = Regularizer::new(RegularizerKind::L1, 0.3);
+            let reg = Regularizer::new(RegularizerKind::L1, 0.3);
             let eta_k = 0.8;
             let apply = |v: &[f64]| -> Vec<f64> {
                 // backward
                 let mut m = Mat::zeros(3, 1);
                 m.col_mut(0).copy_from_slice(v);
-                reg.clone().prox(&mut m, eta);
+                reg.clone_box().prox(&mut m, eta);
                 let w_hat = m.col(0);
                 // forward
                 let (u, _) = Loss::Squared.step(&x, &y, w_hat, &mask, eta);
@@ -362,9 +364,7 @@ fn prop_snapshot_roundtrips_bitwise() {
             std::fs::remove_dir_all(&dir).ok();
             let m = mat_from(v, *d);
             let state = std::sync::Arc::new(SharedState::new(&m));
-            let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3)
-                .with_online_svd(&m)
-                .with_resvd_every(4);
+            let reg = Box::new(NuclearProx::new(0.3).with_online(&m).with_resvd_every(4));
             let cp = std::sync::Arc::new(
                 Checkpointer::create(PersistConfig::new(&dir, 3)).unwrap(),
             );
@@ -421,9 +421,7 @@ fn prop_wal_replay_equals_live_run_bitwise() {
             let mut rng = Rng::new((*commits * 7 + *stride) as u64);
             let m = Mat::randn(*d, *t, &mut rng);
             let state = std::sync::Arc::new(SharedState::new(&m));
-            let reg = Regularizer::new(RegularizerKind::Nuclear, 0.3)
-                .with_online_svd(&m)
-                .with_resvd_every(3);
+            let reg = Box::new(NuclearProx::new(0.3).with_online(&m).with_resvd_every(3));
             let cp = std::sync::Arc::new(
                 Checkpointer::create(PersistConfig::new(&dir, *stride as u64)).unwrap(),
             );
@@ -440,6 +438,147 @@ fn prop_wal_replay_equals_live_run_bitwise() {
                 && rec.server.final_w() == srv.final_w();
             std::fs::remove_dir_all(&dir).ok();
             ok
+        },
+    );
+}
+
+// ------------------------------------------------ formulation registry
+
+/// Resolve every registered formulation at strength `lambda` over `t`
+/// tasks (the registry is the single source of truth for "every
+/// regularizer" — a formulation added later is covered automatically).
+fn all_formulations(lambda: f64, t: usize) -> Vec<Box<dyn SharedProx>> {
+    FORMULATIONS
+        .iter()
+        .map(|info| {
+            let spec = FormulationSpec::parse(info.name).unwrap();
+            formulation::resolve(&spec, lambda, 1.5, t).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn prop_every_registered_prox_nonexpansive() {
+    // ‖prox(a) − prox(b)‖_F ≤ ‖a − b‖_F for every formulation in the
+    // registry — the property Theorem 1's operator analysis rests on,
+    // checked against the same registry the CLI and persist layer use.
+    forall(
+        "registered prox nonexpansive",
+        25,
+        |g| (g.normal_vec(12), g.normal_vec(12), g.f64_in(0.05, 1.5)),
+        |(a, b, eta)| {
+            let ma = mat_from(a, 3);
+            let mb = mat_from(b, 3);
+            let before = ma.add_scaled(-1.0, &mb).frobenius_norm();
+            all_formulations(0.6, 4).into_iter().all(|mut reg| {
+                let mut pa = ma.clone();
+                let mut pb = mb.clone();
+                reg.prox(&mut pa, *eta);
+                reg.prox(&mut pb, *eta);
+                let after = pa.add_scaled(-1.0, &pb).frobenius_norm();
+                assert!(
+                    after <= before + 1e-9,
+                    "{}: prox expanded {before} -> {after}",
+                    reg.id()
+                );
+                true
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_every_registered_prox_satisfies_moreau_optimality() {
+    // prox(v) minimizes ½‖z−v‖² + η·λg(z): its objective must not exceed
+    // the objective at v itself or at random candidate points. This is
+    // the formulation-agnostic correctness check (soft-threshold families
+    // and matrix-coupled families alike).
+    forall(
+        "registered prox minimizes the Moreau objective",
+        20,
+        |g| (g.normal_vec(12), g.normal_vec(12), g.f64_in(0.05, 1.0)),
+        |(v, z, eta)| {
+            let mv = mat_from(v, 3);
+            let mz = mat_from(z, 3);
+            all_formulations(0.8, 4).into_iter().all(|mut reg| {
+                let mut p = mv.clone();
+                reg.prox(&mut p, *eta);
+                let moreau = |cand: &Mat| {
+                    0.5 * cand.add_scaled(-1.0, &mv).frobenius_norm().powi(2)
+                        + eta * reg.value(cand)
+                };
+                let at_prox = moreau(&p);
+                assert!(
+                    at_prox <= moreau(&mv) + 1e-9,
+                    "{}: prox objective above the anchor point",
+                    reg.id()
+                );
+                assert!(
+                    at_prox <= moreau(&mz) + 1e-9,
+                    "{}: prox objective above a random candidate",
+                    reg.id()
+                );
+                true
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_sparsity_family_prox_is_soft_threshold_on_diagonals() {
+    // On a diagonal input W = diag(σ) the nuclear, ℓ2,1 and ℓ1 proxes all
+    // collapse to the same closed form — elementwise soft-thresholding of
+    // the diagonal (singular values = row norms = |entries|), and the
+    // elastic net is that shrunk by 1/(1+τγ). This pins each prox to its
+    // textbook formula, not just to qualitative properties.
+    let soft = |x: f64, tau: f64| {
+        if x > tau {
+            x - tau
+        } else if x < -tau {
+            x + tau
+        } else {
+            0.0
+        }
+    };
+    forall(
+        "diagonal prox = soft threshold",
+        30,
+        |g| (g.normal_vec(4), g.f64_in(0.05, 1.2)),
+        |(diag, eta)| {
+            let lambda = 0.7;
+            let tau = eta * lambda;
+            let mut w0 = Mat::zeros(4, 4);
+            for (i, x) in diag.iter().enumerate() {
+                w0.set(i, i, *x);
+            }
+            for kind in [
+                RegularizerKind::Nuclear,
+                RegularizerKind::L21,
+                RegularizerKind::L1,
+                RegularizerKind::ElasticNet,
+            ] {
+                let mut reg = Regularizer::new(kind, lambda);
+                let mut w = w0.clone();
+                reg.prox(&mut w, *eta);
+                let scale = if kind == RegularizerKind::ElasticNet {
+                    1.0 / (1.0 + tau) // γ = 1 from the classic factory
+                } else {
+                    1.0
+                };
+                for i in 0..4 {
+                    for j in 0..4 {
+                        let want =
+                            if i == j { soft(diag[i], tau) * scale } else { 0.0 };
+                        assert!(
+                            (w.get(i, j) - want).abs() < 1e-8,
+                            "{:?} diag prox ({i},{j}): got {} want {want}",
+                            kind,
+                            w.get(i, j)
+                        );
+                    }
+                }
+            }
+            true
         },
     );
 }
