@@ -1,0 +1,323 @@
+//! Load generator for the serving tier: hammer a read replica with
+//! concurrent predict traffic while training runs live, and emit
+//! `BENCH_serve.json` (client-observed p50/p99/max latency, request
+//! throughput, and the worst replica lag seen during the run).
+//!
+//! ```text
+//! # self-contained: spins up a durable TCP trainer + replica, then loads it
+//! cargo run --release --example load_gen
+//! cargo run --release --example load_gen -- --quick
+//!
+//! # external: hammer an already-running `amtl --replica <addr> --follow <dir>`
+//! cargo run --release --example load_gen -- --connect 127.0.0.1:7272 --quick
+//! ```
+//!
+//! Options: `--clients N` concurrent connections, `--duration-secs S`
+//! load window, `--quick` (or `AMTL_BENCH_QUICK=1`) for the CI-sized
+//! run. Latencies are measured at the *client* (request write to
+//! response decode), so they include the wire — the replica's own
+//! server-side histogram is also sampled via `FetchStats` and reported
+//! alongside. Exits nonzero if any request errored: the acceptance bar
+//! for the tier is a replica that never refuses a well-formed predict,
+//! even mid-hot-swap.
+
+use amtl::config::Opts;
+use amtl::coordinator::step_size::{KmSchedule, StepController};
+use amtl::coordinator::worker::{run_worker, WorkerCtx};
+use amtl::coordinator::{MtlProblem, RunConfig};
+use amtl::data::synthetic;
+use amtl::experiments::BenchLog;
+use amtl::net::{DelayModel, FaultModel};
+use amtl::optim::prox::RegularizerKind;
+use amtl::runtime::Engine;
+use amtl::serve::{ModelReplica, PredictClient, ReplicaServer};
+use amtl::transport::{TcpClient, TcpOptions, TcpServer};
+use amtl::util::Rng;
+use anyhow::bail;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+/// What one load window measured.
+struct LoadReport {
+    latencies_us: Vec<u64>,
+    requests: u64,
+    errors: u64,
+    max_lag: u64,
+    final_lag: u64,
+    elapsed_secs: f64,
+    tasks: u32,
+    dim: u32,
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = Opts::from_env()?;
+    let quick = opts.flag("quick") || std::env::var_os("AMTL_BENCH_QUICK").is_some();
+    let clients = opts.get_usize("clients", if quick { 4 } else { 8 })?;
+    let secs = opts.get_f64("duration-secs", if quick { 2.0 } else { 8.0 })?;
+    let external = opts.get("connect").map(|s| s.to_string());
+    opts.reject_unknown()?;
+
+    let (label, report) = match external {
+        Some(addr) => {
+            println!("loading external replica at {addr}: {clients} clients x {secs}s");
+            ("external", hammer(&addr, clients, secs)?)
+        }
+        None => ("local-cluster", local_cluster(clients, secs, quick)?),
+    };
+
+    let p = |q: f64| quantile_us(&report.latencies_us, q);
+    let req_per_sec = report.requests as f64 / report.elapsed_secs.max(1e-9);
+    println!(
+        "load done: {} requests in {:.2}s ({:.0} req/s), {} errors",
+        report.requests, report.elapsed_secs, req_per_sec, report.errors
+    );
+    println!(
+        "  client latency: p50 {}us  p99 {}us  max {}us",
+        p(0.50),
+        p(0.99),
+        report.latencies_us.iter().max().copied().unwrap_or(0)
+    );
+    println!("  replica lag: max {} commits, final {}", report.max_lag, report.final_lag);
+
+    let mut log = BenchLog::new("serve");
+    log.record_kv(
+        label,
+        &[
+            ("clients", clients as f64),
+            ("duration_secs", report.elapsed_secs),
+            ("requests", report.requests as f64),
+            ("errors", report.errors as f64),
+            ("req_per_sec", req_per_sec),
+            ("p50_us", p(0.50) as f64),
+            ("p99_us", p(0.99) as f64),
+            ("max_us", report.latencies_us.iter().max().copied().unwrap_or(0) as f64),
+            ("max_lag", report.max_lag as f64),
+            ("final_lag", report.final_lag as f64),
+            ("tasks", report.tasks as f64),
+            ("dim", report.dim as f64),
+        ],
+    );
+    let path = log.write()?;
+    println!("wrote {}", path.display());
+
+    if report.errors > 0 {
+        eprintln!("FAIL: {} predict requests errored (the replica must never refuse one)", report.errors);
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Exact quantile over the collected client latencies (sorted copy;
+/// nearest-rank). Returns 0 when nothing was collected.
+fn quantile_us(latencies: &[u64], q: f64) -> u64 {
+    if latencies.is_empty() {
+        return 0;
+    }
+    let mut sorted = latencies.to_vec();
+    sorted.sort_unstable();
+    let idx = ((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Spin up the whole tier in one process — a durable TCP trainer, one
+/// worker thread per task, and a replica following the trainer's
+/// checkpoint directory — then run the load window while training is
+/// live. Afterwards, cut a final checkpoint, let the replica drain, and
+/// report how far its model sits from the trainer's own serving state.
+fn local_cluster(clients: usize, secs: f64, quick: bool) -> anyhow::Result<LoadReport> {
+    let dir = std::env::temp_dir().join(format!("amtl_load_gen_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let iters = if quick { 800 } else { 4000 };
+
+    let mut rng = Rng::new(11);
+    let dataset = synthetic::lowrank_regression(&[80; 4], 24, 3, 0.3, &mut rng);
+    println!("dataset: {}", dataset.describe());
+    let problem = MtlProblem::new(dataset, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+
+    let cfg = RunConfig {
+        iters_per_node: iters,
+        record_every: 1_000_000,
+        checkpoint_dir: Some(dir.clone()),
+        // Small stride so keep-2 rotation prunes WALs *during* the load
+        // window and the replica's hot-swap path is actually exercised.
+        checkpoint_every: 64,
+        ..Default::default()
+    };
+    let (state, server, recorder) = cfg.build_server(&problem)?;
+    let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), Some(recorder))?;
+    let addr = handle.addr();
+    println!("trainer on {addr}, checkpointing to {} every 64 commits", dir.display());
+
+    let replica = ModelReplica::follow(&dir, Duration::from_millis(20));
+    let rep_handle = ReplicaServer::spawn("127.0.0.1:0", &replica)?;
+    let rep_addr = rep_handle.addr().to_string();
+    println!("replica on {rep_addr}, following {}", dir.display());
+
+    let mut computes = problem.build_computes(Engine::Native, None)?;
+    let controller = Arc::new(StepController::new(KmSchedule::fixed(0.9), false, problem.t(), 5));
+    let mut root = Rng::new(11);
+    println!("loading replica while training runs: {clients} clients x {secs}s");
+    let report = std::thread::scope(|s| -> anyhow::Result<LoadReport> {
+        for (t, compute) in computes.iter_mut().enumerate() {
+            let client = TcpClient::connect(addr, TcpOptions::default())?;
+            let ctx = WorkerCtx {
+                t,
+                iters,
+                transport: Box::new(client),
+                controller: Arc::clone(&controller),
+                delay: DelayModel::None,
+                faults: FaultModel::None,
+                sgd_fraction: None,
+                time_scale: Duration::from_millis(100),
+                sink: None,
+                rng: root.fork(t as u64),
+                gate: None,
+                heartbeat: None,
+                resume: false,
+            };
+            s.spawn(move || {
+                run_worker(ctx, compute.as_mut()).expect("worker failed");
+            });
+        }
+        hammer(&rep_addr, clients, secs)
+    })?;
+    println!("training finished: {} updates committed", state.version());
+
+    // Final durability cut, then give the replica a bounded window to
+    // drain to the trainer's horizon before comparing models.
+    server.sync_persist()?;
+    if let Some(cp) = server.checkpointer() {
+        cp.checkpoint_now(&server)?;
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while replica.stats().lag() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let final_lag = replica.stats().lag();
+    if let Some(m) = replica.serving() {
+        let diff = m.w.max_abs_diff(&server.serving_w());
+        println!(
+            "drained: replica at seq {} (lag {}), max |replica W - trainer W| = {diff:.3e}",
+            m.seq, final_lag
+        );
+        if final_lag == 0 && diff != 0.0 {
+            bail!("replica drained to the trainer's horizon but its model diverged ({diff:.3e})");
+        }
+    }
+    handle.shutdown();
+    drop(rep_handle);
+    drop(replica);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(LoadReport { final_lag, ..report })
+}
+
+/// The load window itself: wait (bounded) for the replica to bootstrap,
+/// discover the model shape from its stats frame, then run `clients`
+/// connections of back-to-back predicts for `secs` seconds while a
+/// poller thread tracks the worst lag the replica admits to.
+fn hammer(addr: &str, clients: usize, secs: f64) -> anyhow::Result<LoadReport> {
+    let mut probe = PredictClient::connect(addr, TIMEOUT)?;
+    let bootstrap_deadline = Instant::now() + Duration::from_secs(30);
+    let shape = loop {
+        let s = probe.stats()?;
+        if s.tasks > 0 {
+            break s;
+        }
+        if Instant::now() > bootstrap_deadline {
+            bail!("replica at {addr} did not bootstrap a model within 30s");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    let (tasks, dim) = (shape.tasks, shape.dim);
+    println!("replica serves {tasks} tasks x {dim} features (model seq {})", shape.model_seq);
+
+    let started = Instant::now();
+    let window = Duration::from_secs_f64(secs);
+    let max_lag = Arc::new(AtomicU64::new(0));
+
+    // Lag poller: samples FetchStats through its own connection for the
+    // whole window, then reports the final lag it saw.
+    let poller = {
+        let max_lag = Arc::clone(&max_lag);
+        std::thread::spawn(move || -> u64 {
+            let mut last = 0u64;
+            while started.elapsed() < window {
+                if let Ok(s) = probe.stats() {
+                    last = s.lag();
+                    max_lag.fetch_max(last, Ordering::Relaxed);
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            if let Ok(s) = probe.stats() {
+                last = s.lag();
+                max_lag.fetch_max(last, Ordering::Relaxed);
+            }
+            let _ = probe.close();
+            last
+        })
+    };
+
+    let mut workers = Vec::new();
+    for c in 0..clients {
+        let addr = addr.to_string();
+        workers.push(std::thread::spawn(move || -> (Vec<u64>, u64) {
+            let mut rng = Rng::new(0xC0FFEE ^ (c as u64).wrapping_mul(0x9E37));
+            let mut latencies = Vec::new();
+            let mut errors = 0u64;
+            let mut client = match PredictClient::connect(addr.as_str(), TIMEOUT) {
+                Ok(c) => c,
+                Err(_) => return (latencies, 1),
+            };
+            while started.elapsed() < window {
+                let t = rng.below(tasks as u64) as usize;
+                let x = rng.normal_vec(dim as usize);
+                let t0 = Instant::now();
+                match client.predict(t, &x) {
+                    Ok((y, _model_seq)) => {
+                        latencies.push(t0.elapsed().as_micros() as u64);
+                        if !y.is_finite() {
+                            // A non-finite score means a partially-applied
+                            // column leaked through — count it as an error.
+                            errors += 1;
+                        }
+                    }
+                    Err(_) => {
+                        errors += 1;
+                        // The socket may be dead; one reconnect per failure,
+                        // give up on the connection if even that fails.
+                        match PredictClient::connect(addr.as_str(), TIMEOUT) {
+                            Ok(fresh) => client = fresh,
+                            Err(_) => break,
+                        }
+                    }
+                }
+            }
+            let _ = client.close();
+            (latencies, errors)
+        }));
+    }
+
+    let mut latencies_us = Vec::new();
+    let mut errors = 0u64;
+    for w in workers {
+        let (lat, err) = w.join().expect("load client panicked");
+        latencies_us.extend(lat);
+        errors += err;
+    }
+    let elapsed_secs = started.elapsed().as_secs_f64();
+    let final_lag = poller.join().expect("lag poller panicked");
+
+    Ok(LoadReport {
+        requests: latencies_us.len() as u64 + errors,
+        latencies_us,
+        errors,
+        max_lag: max_lag.load(Ordering::Relaxed),
+        final_lag,
+        elapsed_secs,
+        tasks,
+        dim,
+    })
+}

@@ -512,6 +512,36 @@ impl CentralServer {
         reg.prox(&mut snap, self.eta);
         snap
     }
+
+    /// The serving iterate `W = Prox_{ηλg}(V)` computed **without mutating
+    /// any replay state** — the read-replica analogue of
+    /// [`CentralServer::final_w`].
+    ///
+    /// `final_w` drains the pending slots into the live formulation. That
+    /// is exactly right at the end of a run, but would corrupt a replica
+    /// mid-tail: the WAL's `Prox` markers dictate *when* staged columns
+    /// fold into the online factorization, and an early drain diverges
+    /// the fold history from the trainer's. This method instead folds
+    /// *clones* of the staged columns into a *clone* of the formulation,
+    /// leaving the server bitwise-identical to before the call. At any
+    /// quiesced point it equals `final_w()` over the same state.
+    pub fn serving_w(&self) -> Mat {
+        let mut reg = self.reg.lock().unwrap().clone_box();
+        if self.online {
+            for (t, slot) in self.pending.iter().enumerate() {
+                let staged = slot.lock().unwrap().clone();
+                if let Some(col) = staged {
+                    reg.notify_column_update(t, &col);
+                }
+            }
+        }
+        if let Some(m) = reg.online_prox(self.eta) {
+            return m;
+        }
+        let mut snap = self.state.snapshot();
+        reg.prox(&mut snap, self.eta);
+        snap
+    }
 }
 
 #[cfg(test)]
@@ -644,6 +674,26 @@ mod tests {
             exact.final_w().max_abs_diff(&online.final_w()) < 1e-7,
             "final iterates must agree"
         );
+    }
+
+    #[test]
+    fn serving_w_matches_final_w_without_draining() {
+        let mut rng = Rng::new(105);
+        let m = Mat::randn(7, 3, &mut rng);
+        let reg = Box::new(NuclearProx::new(0.3).with_online(&m));
+        let srv = CentralServer::new(Arc::new(SharedState::new(&m)), reg, 0.2);
+        for k in 0..2 {
+            for t in 0..3 {
+                let u = rng.normal_vec(7);
+                srv.commit_update(t, k, &u, 0.5).unwrap();
+            }
+        }
+        // Two reads in a row are bitwise-identical: nothing inside moved.
+        let a = srv.serving_w();
+        let b = srv.serving_w();
+        assert_eq!(a.max_abs_diff(&b), 0.0, "serving_w must not mutate");
+        // And both equal the draining read over the same state.
+        assert_eq!(a.max_abs_diff(&srv.final_w()), 0.0);
     }
 
     #[test]

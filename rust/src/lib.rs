@@ -83,6 +83,16 @@
 //!   and stops gating every schedule, and a restarted node rejoins and
 //!   catches up from its applied-commit horizon.
 //!
+//! ## The serving tier
+//!
+//! Trained models answer queries without touching the training hot path
+//! ([`serve`]): a read replica bootstraps from the newest snapshot, tails
+//! the trainer's WAL at byte offsets, hot-swaps across checkpoint
+//! rotations, and serves `Predict { t, x } → ŷ = ⟨w_t, x⟩` over the same
+//! wire codec — `amtl --replica <addr> --follow <dir>` runs one, `amtl
+//! predict` queries it, and `examples/load_gen.rs` measures it under
+//! load while training runs live.
+//!
 //! Also see the `amtl` CLI (`rust/src/main.rs`), the runnable
 //! `examples/`, and `docs/ARCHITECTURE.md` for the paper-to-code map.
 
@@ -97,5 +107,6 @@ pub mod net;
 pub mod optim;
 pub mod persist;
 pub mod runtime;
+pub mod serve;
 pub mod transport;
 pub mod util;

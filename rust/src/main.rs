@@ -15,6 +15,10 @@
 //! * `--serve <addr>`             — host the central (prox) server.
 //! * `--node <t> --connect <addr>` — run task node `t`, which owns only
 //!   its task's data; only model vectors cross the wire.
+//! * `--replica <addr> --follow <dir>` — serve predictions from a read
+//!   replica that bootstraps from the newest snapshot in `<dir>` and
+//!   tails the trainer's WAL (plus `predict`, the matching query
+//!   client).
 //!
 //! Examples:
 //!
@@ -47,6 +51,7 @@ use amtl::optim::coupling::TaskGraph;
 use amtl::optim::svd::SvdMode;
 use amtl::optim::FormulationSpec;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
+use amtl::serve::{ModelReplica, PredictClient, ReplicaServer};
 use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use amtl::util::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
@@ -83,12 +88,18 @@ fn run(opts: &Opts) -> Result<()> {
     if opts.get("node").is_some() {
         return cmd_node(opts);
     }
-    if opts.flag("serve") || opts.flag("node") {
-        bail!("--serve needs an address and --node a task index (see `amtl help`)");
+    if opts.get("replica").is_some() {
+        return cmd_replica(opts);
+    }
+    if opts.flag("serve") || opts.flag("node") || opts.flag("replica") {
+        bail!(
+            "--serve and --replica need an address and --node a task index (see `amtl help`)"
+        );
     }
     let cmd = opts.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(opts),
+        "predict" => cmd_predict(opts),
         "compare" => cmd_compare(opts),
         "datasets" => cmd_datasets(opts),
         "artifacts" => cmd_artifacts(opts),
@@ -106,9 +117,11 @@ amtl — Asynchronous Multi-Task Learning (Baytas et al., 2016)
 USAGE: amtl <command> [options]
        amtl --serve <addr> [options]
        amtl --node <t> --connect <addr> [options]
+       amtl --replica <addr> --follow <dir> [options]
 
 COMMANDS:
   train       run one optimization (default method: amtl)
+  predict     query a read replica (see SERVING TIER below)
   compare     run AMTL and SMTL under identical network settings
   datasets    describe the built-in dataset simulators
   artifacts   validate the AOT artifact manifest
@@ -120,6 +133,23 @@ DISTRIBUTED MODES (two-terminal walkthrough in README.md):
   --node T       run task node T only (owns only task T's data)
   --connect ADDR server address for --node
   Launch serve and every node with the SAME data/problem options.
+
+SERVING TIER (three-terminal walkthrough in README.md):
+  --replica ADDR     serve Predict/FetchStats on ADDR from a read
+                     replica; never touches the trainer, only its
+                     checkpoint directory
+  --follow DIR       the trainer's --checkpoint-dir: bootstrap from the
+                     newest snapshot, tail the WAL at byte offsets,
+                     hot-swap across checkpoint rotations
+  --poll-ms MS       WAL tail poll interval                       [50]
+  predict --connect ADDR --task T --x V1,V2,...
+                     score one feature vector against task T's column;
+                     prints yhat and the model's WAL horizon
+  predict --connect ADDR --stats
+                     print the replica's stats frame (lag, latency
+                     quantiles, request counters)
+  predict --timeout-ms MS   connect/read/write timeout           [5000]
+  Load-test a replica with examples/load_gen.rs (BENCH_serve.json).
 
 DATA OPTIONS (synthetic unless --dataset is given):
   --dataset <school|mnist|mtfl|school-small>   simulated public dataset
@@ -642,6 +672,108 @@ fn cmd_node(opts: &Opts) -> Result<()> {
         stats.last_task_loss,
     );
     Ok(())
+}
+
+/// `--replica <addr> --follow <dir>`: run a read replica. Bootstraps
+/// from the newest snapshot in the followed checkpoint directory, tails
+/// the WAL, and serves the predict protocol until killed. Needs no
+/// data/problem options — everything it serves comes from the
+/// directory's artifacts.
+fn cmd_replica(opts: &Opts) -> Result<()> {
+    let addr = opts.require("replica").map_err(|e| anyhow!("{e}"))?;
+    let dir = std::path::PathBuf::from(opts.require("follow").map_err(|e| anyhow!("{e}"))?);
+    let poll = Duration::from_millis(opts.get_u64("poll-ms", 50)?.max(1));
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    let replica = ModelReplica::follow(&dir, poll);
+    let handle = ReplicaServer::spawn(&addr, &replica)?;
+    println!("replica serving on {} (following {})", handle.addr(), dir.display());
+    println!(
+        "query with: amtl predict --connect {} --task <t> --x <v1,v2,...>  (or --stats)",
+        handle.addr()
+    );
+    if !replica.wait_ready(Duration::from_millis(250)) {
+        println!(
+            "waiting for a first snapshot in {} (start the trainer with --checkpoint-dir)",
+            dir.display()
+        );
+    }
+    // Serve until killed; surface the feed's progress without spamming a
+    // quiet terminal (the uptime/latency fields churn on their own, so
+    // only the state-bearing counters gate a report line).
+    let mut last = (0u64, 0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+    loop {
+        std::thread::sleep(Duration::from_secs(5));
+        let s = replica.stats();
+        let now = (
+            s.model_seq,
+            s.latest_seq,
+            s.applied_entries,
+            s.predictions,
+            s.errors,
+            s.bootstraps,
+            s.hot_swaps,
+        );
+        if now != last {
+            println!(
+                "  model seq {} (lag {}): {} wal entries applied, {} bootstraps, {} hot-swaps; \
+                 {} predictions ({} errors), p50 {}us p99 {}us",
+                s.model_seq,
+                s.lag(),
+                s.applied_entries,
+                s.bootstraps,
+                s.hot_swaps,
+                s.predictions,
+                s.errors,
+                s.p50_us,
+                s.p99_us,
+            );
+            last = now;
+        }
+    }
+}
+
+/// `predict --connect <addr>`: one-shot query client for a replica.
+/// `--task T --x v1,v2,...` scores a vector; `--stats` prints the
+/// replica's counters instead.
+fn cmd_predict(opts: &Opts) -> Result<()> {
+    let addr = opts.require("connect").map_err(|e| anyhow!("{e}"))?;
+    let timeout = Duration::from_millis(opts.get_u64("timeout-ms", 5000)?.max(1));
+    let want_stats = opts.flag("stats");
+    let task = opts.get_usize("task", 0)?;
+    let raw_x = opts.get("x").map(|s| s.to_string());
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    let mut client = PredictClient::connect(addr.as_str(), timeout)?;
+    if want_stats {
+        let s = client.stats()?;
+        println!("replica stats from {addr}:");
+        println!(
+            "  model: {} tasks x {} features, seq {} (lag {})",
+            s.tasks,
+            s.dim,
+            s.model_seq,
+            s.lag()
+        );
+        println!(
+            "  feed:  {} wal entries applied, {} bootstraps, {} hot-swaps",
+            s.applied_entries, s.bootstraps, s.hot_swaps
+        );
+        println!(
+            "  load:  {} predictions, {} errors, p50 {}us p99 {}us max {}us, up {}ms",
+            s.predictions, s.errors, s.p50_us, s.p99_us, s.max_us, s.uptime_ms
+        );
+        return client.close();
+    }
+    let raw_x = raw_x.ok_or_else(|| anyhow!("predict needs --x v1,v2,... (or --stats)"))?;
+    let x = raw_x
+        .split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<std::result::Result<Vec<f64>, _>>()
+        .map_err(|e| anyhow!("--x expects comma-separated numbers: {e}"))?;
+    let (y, model_seq) = client.predict(task, &x)?;
+    println!("task {task}: yhat = {y:.6}  (model seq {model_seq})");
+    client.close()
 }
 
 fn cmd_datasets(opts: &Opts) -> Result<()> {

@@ -51,7 +51,8 @@ use crate::util::RngState;
 use anyhow::Result;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock, RwLockReadGuard};
+use std::sync::{Condvar, Mutex, RwLock, RwLockReadGuard};
+use std::time::{Duration, Instant};
 
 /// Durability knobs.
 #[derive(Clone, Debug)]
@@ -97,6 +98,11 @@ pub struct Checkpointer {
     inner: Mutex<CpInner>,
     checkpoints: AtomicU64,
     rng_streams: Mutex<Vec<(u64, RngState)>>,
+    /// Horizon of the newest snapshot, published outside `inner` so
+    /// observers (the serve loop's rotation reporting, tests) can wait on
+    /// rotations without contending with the WAL append path.
+    rotation: Mutex<u64>,
+    rotation_cv: Condvar,
 }
 
 impl Checkpointer {
@@ -132,7 +138,35 @@ impl Checkpointer {
             }),
             checkpoints: AtomicU64::new(0),
             rng_streams: Mutex::new(Vec::new()),
+            rotation: Mutex::new(next_seq - 1),
+            rotation_cv: Condvar::new(),
         })
+    }
+
+    /// Horizon (last covered sequence number) of the newest snapshot this
+    /// checkpointer has written — 0 until the first post-genesis rotation.
+    pub fn snapshot_horizon(&self) -> u64 {
+        *self.rotation.lock().unwrap()
+    }
+
+    /// Block until a snapshot with horizon greater than `after` has been
+    /// written, or `timeout` elapses. Returns the newest snapshot horizon
+    /// either way — callers compare it against `after` to tell a rotation
+    /// from a timeout. This is how the serve loop (and replica-aware
+    /// tooling) observes checkpoint rotations without polling the
+    /// directory.
+    pub fn wait_rotation(&self, after: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut horizon = self.rotation.lock().unwrap();
+        while *horizon <= after {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (guard, _) = self.rotation_cv.wait_timeout(horizon, left).unwrap();
+            horizon = guard;
+        }
+        *horizon
     }
 
     /// The checkpoint directory.
@@ -236,6 +270,11 @@ impl Checkpointer {
         let fallback = inner.prev_snapshot_seq;
         drop(inner);
         self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut rot = self.rotation.lock().unwrap();
+            *rot = horizon;
+            self.rotation_cv.notify_all();
+        }
         for (seq, path) in list_numbered(&self.cfg.dir, "snapshot-", ".amtls")? {
             if seq < fallback {
                 let _ = std::fs::remove_file(path);
@@ -268,19 +307,26 @@ pub fn has_checkpoint(dir: &Path) -> bool {
     list_numbered(dir, "snapshot-", ".amtls").map(|v| !v.is_empty()).unwrap_or(false)
 }
 
-/// Rebuild a central server from `cfg.dir`: load the newest snapshot that
-/// validates (falling back across damaged ones), replay the WAL tail in
-/// sequence order — stopping at the first gap or torn record — and
-/// re-attach a checkpointer so the resumed run stays durable.
-pub fn recover(cfg: PersistConfig) -> Result<Recovered> {
-    let mut snapshots = list_numbered(&cfg.dir, "snapshot-", ".amtls")?;
+/// `(horizon, path)` for every snapshot file in `dir`, ascending — part
+/// of the tail-reader API a read replica uses to follow a live
+/// checkpoint directory.
+pub fn list_snapshot_files(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    list_numbered(dir, "snapshot-", ".amtls")
+}
+
+/// `(start_seq, path)` for every WAL file in `dir`, ascending by the
+/// sequence number of the first entry each file may hold.
+pub fn list_wal_files(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    list_numbered(dir, "wal-", ".amtlw")
+}
+
+/// Load the newest snapshot in `dir` that validates, falling back across
+/// damaged or misnamed files exactly like [`recover`] does. `Ok(None)`
+/// when the directory has no usable snapshot (empty, or every file
+/// damaged) — a tailer treats that as "trainer not up yet" and retries.
+pub fn newest_valid_snapshot(dir: &Path) -> Result<Option<ServerSnapshot>> {
+    let mut snapshots = list_numbered(dir, "snapshot-", ".amtls")?;
     snapshots.reverse(); // newest first
-    anyhow::ensure!(
-        !snapshots.is_empty(),
-        "no snapshot found in {} — nothing to resume",
-        cfg.dir.display()
-    );
-    let mut snap = None;
     for (seq, path) in &snapshots {
         match ServerSnapshot::read_file(path) {
             // A snapshot whose internal horizon disagrees with its name
@@ -293,10 +339,7 @@ pub fn recover(cfg: PersistConfig) -> Result<Recovered> {
                     s.seq
                 );
             }
-            Ok(s) => {
-                snap = Some(s);
-                break;
-            }
+            Ok(s) => return Ok(Some(s)),
             Err(e) => {
                 eprintln!(
                     "warning: snapshot {} is unreadable ({e}); falling back",
@@ -305,7 +348,21 @@ pub fn recover(cfg: PersistConfig) -> Result<Recovered> {
             }
         }
     }
-    let snap = snap.ok_or_else(|| anyhow::anyhow!("every snapshot in the directory is damaged"))?;
+    Ok(None)
+}
+
+/// Rebuild a central server from `cfg.dir`: load the newest snapshot that
+/// validates (falling back across damaged ones), replay the WAL tail in
+/// sequence order — stopping at the first gap or torn record — and
+/// re-attach a checkpointer so the resumed run stays durable.
+pub fn recover(cfg: PersistConfig) -> Result<Recovered> {
+    anyhow::ensure!(
+        has_checkpoint(&cfg.dir),
+        "no snapshot found in {} — nothing to resume",
+        cfg.dir.display()
+    );
+    let snap = newest_valid_snapshot(&cfg.dir)?
+        .ok_or_else(|| anyhow::anyhow!("every snapshot in the directory is damaged"))?;
 
     // Gather WAL entries past the snapshot's horizon, in sequence order.
     // Files are scanned in start order; a torn tail ends that file's
@@ -437,6 +494,27 @@ mod tests {
         let srv = durable_server(&dir, 100, false, 4, 2);
         assert!(has_checkpoint(&dir));
         assert_eq!(srv.checkpoints_written(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_notification_tracks_checkpoints() {
+        let dir = tmp_dir("rotation");
+        let srv = durable_server(&dir, 4, false, 4, 2);
+        let cp = Arc::clone(srv.checkpointer().unwrap());
+        assert_eq!(cp.snapshot_horizon(), 0, "genesis snapshot is horizon 0");
+        // No rotation pending: the wait times out and reports the horizon.
+        assert_eq!(cp.wait_rotation(0, Duration::from_millis(20)), 0);
+        // Cross the stride while a waiter blocks: it must be released by
+        // the rotation, not by its (long) timeout.
+        let waiter = {
+            let cp = Arc::clone(&cp);
+            std::thread::spawn(move || cp.wait_rotation(0, Duration::from_secs(30)))
+        };
+        drive(&srv, 9, 2, 902, 0);
+        let seen = waiter.join().unwrap();
+        assert!(seen > 0, "waiter released by a real rotation (saw {seen})");
+        assert!(cp.snapshot_horizon() >= seen);
         std::fs::remove_dir_all(&dir).ok();
     }
 

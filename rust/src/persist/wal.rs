@@ -19,11 +19,15 @@ use super::codec::{
 };
 use crate::transport::wire::{push_f64s, Cursor};
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 const TAG_COMMIT: u8 = 0x01;
 const TAG_PROX: u8 = 0x02;
+
+/// Byte length of the WAL file header (magic + format version). The first
+/// record starts here, so this is also the smallest valid resume offset.
+pub const WAL_HEADER_LEN: u64 = 5;
 
 /// One durable server operation.
 #[derive(Clone, Debug, PartialEq)]
@@ -156,6 +160,28 @@ pub struct WalScan {
     pub torn_tail: bool,
     /// The decode failure that terminated a torn scan.
     pub error: Option<PersistError>,
+    /// Byte offset just past the last *valid* entry — the position a
+    /// tailer should hand back to [`read_wal_from`] to resume without
+    /// re-scanning the file. On a torn tail this still points at the last
+    /// valid record boundary, so a live tailer that caught a writer
+    /// mid-append simply retries the same offset once the record is
+    /// complete. Never less than [`WAL_HEADER_LEN`].
+    pub resume_offset: u64,
+}
+
+/// Counts bytes consumed through it, so the scan knows the exact boundary
+/// of the last valid record even when a later read fails mid-record.
+struct CountingReader<R> {
+    inner: R,
+    pos: u64,
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
 }
 
 /// Scan a WAL file, tolerating a torn tail: entries are read until the
@@ -164,17 +190,53 @@ pub struct WalScan {
 /// possible). A missing or damaged *header* is a hard error — that file
 /// was never a valid log.
 pub fn read_wal(path: &Path) -> Result<WalScan, PersistError> {
-    let mut r = BufReader::new(File::open(path)?);
-    read_header(&mut r, WAL_MAGIC)?;
+    read_wal_from(path, 0)
+}
+
+/// Scan a WAL file starting at byte `offset` — the tail-reader entry
+/// point. `offset` must be a record boundary previously returned in
+/// [`WalScan::resume_offset`] (or `0` / [`WAL_HEADER_LEN`] for a full
+/// scan); an arbitrary offset lands mid-record and reads as a torn tail.
+/// The header is validated on every call, so a tailer resuming into a
+/// file that was replaced by something else entirely still gets a hard
+/// error rather than garbage entries.
+pub fn read_wal_from(path: &Path, offset: u64) -> Result<WalScan, PersistError> {
+    let mut file = File::open(path)?;
+    read_header(&mut file, WAL_MAGIC)?;
+    let start = offset.max(WAL_HEADER_LEN);
+    if start > WAL_HEADER_LEN {
+        file.seek(SeekFrom::Start(start))?;
+    }
+    let mut r = CountingReader { inner: BufReader::new(file), pos: start };
     let mut entries = Vec::new();
+    let mut resume = start;
     loop {
         match read_record(&mut r) {
-            Ok(None) => return Ok(WalScan { entries, torn_tail: false, error: None }),
+            Ok(None) => {
+                return Ok(WalScan { entries, torn_tail: false, error: None, resume_offset: resume })
+            }
             Ok(Some((tag, payload))) => match WalEntry::decode(tag, &payload) {
-                Ok(entry) => entries.push(entry),
-                Err(e) => return Ok(WalScan { entries, torn_tail: true, error: Some(e) }),
+                Ok(entry) => {
+                    entries.push(entry);
+                    resume = r.pos;
+                }
+                Err(e) => {
+                    return Ok(WalScan {
+                        entries,
+                        torn_tail: true,
+                        error: Some(e),
+                        resume_offset: resume,
+                    })
+                }
             },
-            Err(e) => return Ok(WalScan { entries, torn_tail: true, error: Some(e) }),
+            Err(e) => {
+                return Ok(WalScan {
+                    entries,
+                    torn_tail: true,
+                    error: Some(e),
+                    resume_offset: resume,
+                })
+            }
         }
     }
 }
@@ -222,6 +284,11 @@ mod tests {
         ]
     }
 
+    /// Byte offset of the record boundary after `entries[..i]`.
+    fn boundary(entries: &[WalEntry], i: usize) -> u64 {
+        WAL_HEADER_LEN + entries[..i].iter().map(|e| 9 + e.payload().len() as u64).sum::<u64>()
+    }
+
     #[test]
     fn wal_roundtrips_through_writer_and_reader() {
         let path = tmp("roundtrip");
@@ -232,6 +299,8 @@ mod tests {
         w.sync().unwrap();
         drop(w);
         assert_eq!(read_wal_strict(&path).unwrap(), sample_entries());
+        let scan = read_wal(&path).unwrap();
+        assert_eq!(scan.resume_offset, std::fs::metadata(&path).unwrap().len());
         std::fs::remove_file(&path).ok();
     }
 
@@ -245,7 +314,47 @@ mod tests {
         let scan = read_wal(&path).unwrap();
         assert!(scan.torn_tail);
         assert_eq!(scan.entries, sample_entries()[..3].to_vec());
+        // The resume offset points at the last valid record boundary, not 0.
+        assert_eq!(scan.resume_offset, boundary(&sample_entries(), 3));
         assert!(read_wal_strict(&path).is_err(), "strict read must reject the torn tail");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_resume_offset_picks_up_the_completed_record() {
+        // The live-tailer scenario: a scan catches the writer mid-append
+        // (torn tail), then the record completes; resuming at the reported
+        // offset yields exactly the remaining entries.
+        let path = tmp("resume_completion");
+        write_wal(&path, &sample_entries()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 3]).unwrap();
+        let scan = read_wal(&path).unwrap();
+        assert!(scan.torn_tail);
+        std::fs::write(&path, &full).unwrap(); // the append completes
+        let resumed = read_wal_from(&path, scan.resume_offset).unwrap();
+        assert!(!resumed.torn_tail);
+        assert_eq!(resumed.entries, sample_entries()[3..].to_vec());
+        assert_eq!(resumed.resume_offset, full.len() as u64);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_from_zero_or_header_is_a_full_scan() {
+        let path = tmp("resume_zero");
+        write_wal(&path, &sample_entries()).unwrap();
+        for off in [0, WAL_HEADER_LEN] {
+            let scan = read_wal_from(&path, off).unwrap();
+            assert_eq!(scan.entries, sample_entries());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn resume_into_replaced_file_is_a_hard_error() {
+        let path = tmp("resume_replaced");
+        std::fs::write(&path, b"not a wal at all").unwrap();
+        assert!(matches!(read_wal_from(&path, 9), Err(PersistError::BadMagic(_))));
         std::fs::remove_file(&path).ok();
     }
 
@@ -272,6 +381,47 @@ mod tests {
         bytes[0] = b'X';
         std::fs::write(&path, &bytes).unwrap();
         assert!(matches!(read_wal(&path), Err(PersistError::BadMagic(_))));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prop_resume_at_any_valid_offset_matches_full_scan_suffix() {
+        let path = tmp("prop_resume");
+        forall(
+            "wal tail-reads resumed at any record boundary equal the full-scan suffix",
+            40,
+            |g| {
+                let n = g.usize_in(0, 10);
+                let entries: Vec<WalEntry> = (0..n)
+                    .map(|i| {
+                        if g.usize_in(0, 3) == 0 {
+                            WalEntry::Prox { seq: i as u64 + 1 }
+                        } else {
+                            let len = g.usize_in(0, 12);
+                            WalEntry::Commit {
+                                seq: i as u64 + 1,
+                                t: g.usize_in(0, 7) as u32,
+                                k: g.usize_in(0, 100) as u64,
+                                step: g.f64_in(0.0, 1.0),
+                                u: g.normal_vec(len),
+                            }
+                        }
+                    })
+                    .collect();
+                let cut = g.usize_in(0, n);
+                (entries, cut)
+            },
+            |(entries, cut)| {
+                let cut = (*cut).min(entries.len()); // shrinking may shorten entries
+                write_wal(&path, entries).unwrap();
+                let full = read_wal(&path).unwrap();
+                let resumed = read_wal_from(&path, boundary(entries, cut)).unwrap();
+                full.entries == *entries
+                    && !resumed.torn_tail
+                    && resumed.entries == entries[cut..]
+                    && resumed.resume_offset == full.resume_offset
+            },
+        );
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,69 @@
+//! A minimal blocking client for the predict protocol.
+//!
+//! Deliberately *without* the training client's reconnect-and-resend
+//! loop: load generators and smoke tests must observe every failure (the
+//! acceptance bar is a replica that never errors under live traffic), so
+//! nothing here retries a failure away. One request in flight at a time,
+//! one socket for the connection's lifetime.
+
+use crate::transport::wire::{ReplicaStats, Request, Response};
+use anyhow::{anyhow, bail, Result};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// One connection to a replica's predict endpoint.
+pub struct PredictClient {
+    stream: TcpStream,
+}
+
+impl PredictClient {
+    /// Resolve `addr` and connect; `timeout` bounds the connect and every
+    /// subsequent read/write.
+    pub fn connect(addr: impl ToSocketAddrs, timeout: Duration) -> Result<PredictClient> {
+        let addr = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("cannot resolve replica address: {e}"))?
+            .next()
+            .ok_or_else(|| anyhow!("replica address resolved to nothing"))?;
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .map_err(|e| anyhow!("connect to {addr}: {e}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(PredictClient { stream })
+    }
+
+    fn request(&mut self, req: &Request) -> Result<Response> {
+        req.write_to(&mut self.stream)?;
+        match Response::read_from(&mut self.stream)? {
+            Response::Error(msg) => bail!("replica rejected request: {msg}"),
+            resp => Ok(resp),
+        }
+    }
+
+    /// Score the caller's own feature vector `x` against task `t`'s
+    /// serving column. Returns `(ŷ, model_seq)` — the prediction and the
+    /// WAL horizon of the model that produced it.
+    pub fn predict(&mut self, t: usize, x: &[f64]) -> Result<(f64, u64)> {
+        match self.request(&Request::Predict { t: t as u32, x: x.to_vec() })? {
+            Response::Prediction { y, model_seq } => Ok((y, model_seq)),
+            other => bail!("expected Prediction, got {other:?}"),
+        }
+    }
+
+    /// Fetch the replica's stats frame (lag, latency quantiles, request
+    /// counters).
+    pub fn stats(&mut self) -> Result<ReplicaStats> {
+        match self.request(&Request::FetchStats)? {
+            Response::Stats(stats) => Ok(stats),
+            other => bail!("expected Stats, got {other:?}"),
+        }
+    }
+
+    /// Polite teardown: tells the replica to close this connection (the
+    /// replica itself keeps serving). Errors are advisory.
+    pub fn close(mut self) -> Result<()> {
+        let _ = self.request(&Request::Shutdown);
+        Ok(())
+    }
+}

@@ -1,0 +1,52 @@
+//! The serving tier: read-optimized model replicas fed by the trainer's
+//! own durability artifacts.
+//!
+//! The paper ends where training ends, but a deployed multi-task model
+//! has to *answer queries* while training continues. This module closes
+//! that loop without ever letting read traffic touch the training hot
+//! path: a replica process shares **no memory and no locks** with the
+//! trainer — its only coupling is the checkpoint directory the trainer
+//! already writes for durability ([`crate::persist`]).
+//!
+//! A [`ModelReplica`]:
+//!
+//! 1. **bootstraps** from the newest valid snapshot (same fallback rules
+//!    as recovery),
+//! 2. **tails the WAL**, resuming each poll at the byte offset where the
+//!    last one stopped (`WalScan::resume_offset`) and applying committed
+//!    entries in order through the trainer's own replay machinery — so
+//!    the replica's state, including the online SVD's fold history, is
+//!    bitwise what the trainer would recover to,
+//! 3. **hot-swaps** onto a newer snapshot when keep-2 checkpoint
+//!    rotation prunes the WAL tail out from under it — a replica can
+//!    fall behind, but it can never be stranded.
+//!
+//! Each drain batch publishes one immutable
+//! [`ServingModel`](replica::ServingModel) (`W = Prox_{ηλg}(V)` via the
+//! non-mutating `CentralServer::serving_w`), swapped atomically — a
+//! concurrent predict sees a whole batch or none of it, never a
+//! partially-applied column.
+//!
+//! Queries arrive over the same wire codec the trainer speaks
+//! ([`crate::transport::wire`]), extended with two additive frames:
+//! `Predict { t, x } → Prediction { ŷ, model_seq }` (per-task routing:
+//! `ŷ = ⟨w_t, x⟩`) and `FetchStats → Stats` ([`ReplicaStats`]: replica
+//! lag in commit sequence numbers, request counters, and latency
+//! quantiles from a lock-free log₂ histogram ([`metrics`])).
+//!
+//! The CLI runs the tier as `amtl --replica <addr> --follow <dir>`; `amtl
+//! predict` is the matching query client, and `examples/load_gen.rs`
+//! measures the endpoint under concurrent load while training runs live
+//! (`BENCH_serve.json`). See `docs/ARCHITECTURE.md` § "Serving tier".
+
+pub mod client;
+pub mod metrics;
+pub mod replica;
+pub mod server;
+
+pub use client::PredictClient;
+pub use metrics::LatencyHistogram;
+pub use replica::{ModelReplica, ReplicaCore, ServingModel};
+pub use server::{ReplicaServer, ReplicaServerHandle};
+
+pub use crate::transport::wire::ReplicaStats;

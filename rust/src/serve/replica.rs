@@ -1,0 +1,600 @@
+//! The replica itself: snapshot bootstrap, WAL tailing, hot-swap.
+//!
+//! [`ReplicaCore`] is the synchronous state machine — bootstrap from the
+//! newest valid snapshot, then per [`ReplicaCore::poll`] drain every WAL
+//! entry currently on disk, in order, resuming at the byte offset where
+//! the previous drain stopped (`WalScan::resume_offset`). It reuses the
+//! trainer's own recovery machinery (`CentralServer::from_snapshot` +
+//! `replay_entry`), so the replica's state — including the online SVD's
+//! fold history, which the WAL's `Prox` markers order — is bitwise the
+//! trainer's. The serving iterate is computed with
+//! [`CentralServer::serving_w`], which never disturbs that replay state.
+//!
+//! Readers never see the replay in progress: each drain batch publishes
+//! one immutable [`ServingModel`] behind an `RwLock<Arc<..>>` swap, so a
+//! concurrent predict observes either the whole batch or none of it —
+//! no partially-applied column can ever be read.
+//!
+//! [`ModelReplica`] wraps the core in a polling thread (the `amtl
+//! --replica … --follow <dir>` process) and owns the shared stats the
+//! predict endpoint reports.
+
+use super::metrics::LatencyHistogram;
+use crate::coordinator::server::CentralServer;
+use crate::linalg::{self, Mat};
+use crate::persist::{self, wal};
+use crate::transport::wire::ReplicaStats;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One immutable, fully-consistent serving iterate: the whole primal
+/// matrix `W = Prox_{ηλg}(V)` as of one WAL horizon. Swapped in
+/// atomically after a drain batch — never mutated in place.
+pub struct ServingModel {
+    /// The primal iterate, `d × T` (column `t` scores task `t`).
+    pub w: Mat,
+    /// WAL sequence horizon this iterate incorporates (snapshot horizon
+    /// plus every entry applied since).
+    pub seq: u64,
+    /// KM update count of the underlying auxiliary state.
+    pub version: u64,
+}
+
+/// State shared between the tail thread and the predict endpoint: the
+/// current [`ServingModel`] plus every counter [`ReplicaStats`] reports.
+pub(crate) struct ReplicaShared {
+    /// `None` until the bootstrap snapshot is found and applied.
+    model: RwLock<Option<Arc<ServingModel>>>,
+    /// Newest WAL sequence number observed on disk (may run ahead of the
+    /// serving model's horizon while a drain batch is in flight).
+    latest_seq: AtomicU64,
+    applied_entries: AtomicU64,
+    predictions: AtomicU64,
+    errors: AtomicU64,
+    bootstraps: AtomicU64,
+    hot_swaps: AtomicU64,
+    /// Per-request service latency, recorded by the predict endpoint.
+    pub(crate) hist: LatencyHistogram,
+    started: Instant,
+}
+
+impl ReplicaShared {
+    fn new() -> Arc<ReplicaShared> {
+        Arc::new(ReplicaShared {
+            model: RwLock::new(None),
+            latest_seq: AtomicU64::new(0),
+            applied_entries: AtomicU64::new(0),
+            predictions: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            bootstraps: AtomicU64::new(0),
+            hot_swaps: AtomicU64::new(0),
+            hist: LatencyHistogram::new(),
+            started: Instant::now(),
+        })
+    }
+
+    /// The current serving model (cheap: clones an `Arc` under a read
+    /// lock held for the clone only).
+    pub(crate) fn model(&self) -> Option<Arc<ServingModel>> {
+        self.model.read().unwrap().clone()
+    }
+
+    /// Score the querier's feature vector `x` against task `t`:
+    /// `ŷ = ⟨w_t, x⟩` over the current serving model. Validation failures
+    /// are counted and reported as messages, never panics.
+    pub(crate) fn predict(&self, t: u32, x: &[f64]) -> std::result::Result<(f64, u64), String> {
+        let reject = |msg: String| {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+            Err(msg)
+        };
+        let Some(model) = self.model() else {
+            return reject("replica is still bootstrapping (no snapshot applied yet)".into());
+        };
+        let (d, t_count) = (model.w.rows(), model.w.cols());
+        let t = t as usize;
+        if t >= t_count {
+            return reject(format!("task index {t} out of range (T={t_count})"));
+        }
+        if x.len() != d {
+            return reject(format!("feature vector has dimension {}, expected {d}", x.len()));
+        }
+        if !x.iter().all(|v| v.is_finite()) {
+            return reject("feature vector contains non-finite values".into());
+        }
+        let y = linalg::dot(model.w.col(t), x);
+        self.predictions.fetch_add(1, Ordering::Relaxed);
+        Ok((y, model.seq))
+    }
+
+    /// Assemble the stats frame the wire protocol serves.
+    pub(crate) fn stats(&self) -> ReplicaStats {
+        let (tasks, dim, model_seq) = match self.model() {
+            Some(m) => (m.w.cols() as u32, m.w.rows() as u32, m.seq),
+            None => (0, 0, 0),
+        };
+        ReplicaStats {
+            tasks,
+            dim,
+            model_seq,
+            latest_seq: self.latest_seq.load(Ordering::Relaxed).max(model_seq),
+            applied_entries: self.applied_entries.load(Ordering::Relaxed),
+            predictions: self.predictions.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            bootstraps: self.bootstraps.load(Ordering::Relaxed),
+            hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
+            p50_us: self.hist.quantile(0.5),
+            p99_us: self.hist.quantile(0.99),
+            max_us: self.hist.max(),
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+        }
+    }
+}
+
+/// Position within the WAL file currently being tailed, so the next poll
+/// resumes mid-file instead of re-scanning from the header.
+struct TailFile {
+    /// The file's start sequence (from its name — part of its identity).
+    start: u64,
+    path: PathBuf,
+    /// Byte offset just past the last entry consumed.
+    offset: u64,
+}
+
+/// The synchronous tailer: bootstraps from the newest valid snapshot in a
+/// checkpoint directory and replays the trainer's WAL in order. Exposed
+/// directly for deterministic tests; production wraps it in a
+/// [`ModelReplica`] thread.
+pub struct ReplicaCore {
+    dir: PathBuf,
+    server: CentralServer,
+    /// Next WAL sequence number to apply.
+    expected: u64,
+    tail: Option<TailFile>,
+    shared: Arc<ReplicaShared>,
+}
+
+impl ReplicaCore {
+    /// Bootstrap from the newest valid snapshot in `dir`. Errors when the
+    /// directory has no readable snapshot yet — callers poll until the
+    /// trainer's genesis snapshot lands.
+    pub fn bootstrap(dir: impl Into<PathBuf>) -> Result<ReplicaCore> {
+        ReplicaCore::bootstrap_shared(dir.into(), ReplicaShared::new())
+    }
+
+    fn bootstrap_shared(dir: PathBuf, shared: Arc<ReplicaShared>) -> Result<ReplicaCore> {
+        let snap = persist::newest_valid_snapshot(&dir)?
+            .ok_or_else(|| anyhow::anyhow!("no readable snapshot in {}", dir.display()))?;
+        let server = CentralServer::from_snapshot(&snap)
+            .map_err(|e| e.context(format!("bootstrapping replica from {}", dir.display())))?;
+        let core = ReplicaCore { dir, server, expected: snap.seq + 1, tail: None, shared };
+        core.shared.bootstraps.fetch_add(1, Ordering::Relaxed);
+        core.publish();
+        Ok(core)
+    }
+
+    /// Publish the current state as one immutable [`ServingModel`].
+    fn publish(&self) {
+        let model = ServingModel {
+            w: self.server.serving_w(),
+            seq: self.expected - 1,
+            version: self.server.state().version(),
+        };
+        *self.shared.model.write().unwrap() = Some(Arc::new(model));
+        self.shared.latest_seq.fetch_max(self.expected - 1, Ordering::Relaxed);
+    }
+
+    /// Drain every WAL entry currently on disk into the replica's state,
+    /// publishing a fresh [`ServingModel`] when at least one applied.
+    /// Returns the number of entries applied.
+    ///
+    /// Running behind never errors: a torn tail is a live writer caught
+    /// mid-append (the stored offset retries that boundary next poll),
+    /// and a WAL pruned out from under us by keep-2 rotation triggers a
+    /// hot-swap — re-bootstrap from the newer snapshot that justified the
+    /// pruning. Errors are reserved for a directory the replica cannot
+    /// make progress in at all.
+    pub fn poll(&mut self) -> Result<u64> {
+        let mut applied = 0u64;
+        // At most one snapshot re-bootstrap per poll: a replica can fall
+        // behind, but it can never spin here.
+        let mut swaps_left = 1u32;
+        loop {
+            let wals = persist::list_wal_files(&self.dir)?;
+            // The file covering `expected`: the last one starting at or
+            // before it (names carry the start sequence).
+            let covering = wals.iter().rev().find(|(s, _)| *s <= self.expected).cloned();
+            let Some((start, path)) = covering else {
+                // Every WAL on disk starts past us: rotation pruned our
+                // tail. The snapshot that justified the pruning is newer
+                // than our state — swap to it.
+                if swaps_left > 0 && self.hot_swap()? {
+                    swaps_left -= 1;
+                    continue;
+                }
+                break;
+            };
+            let offset = self.resume_offset(start, &path);
+            let scan = match wal::read_wal_from(&path, offset) {
+                Ok(scan) => scan,
+                // The file vanished (or was replaced) between listing and
+                // opening — pruning raced us. Same remedy as above.
+                Err(e) => {
+                    if swaps_left > 0 && self.hot_swap()? {
+                        swaps_left -= 1;
+                        continue;
+                    }
+                    return Err(e).with_context(|| format!("tailing {}", path.display()));
+                }
+            };
+            let mut gap = false;
+            for entry in &scan.entries {
+                let seq = entry.seq();
+                if seq < self.expected {
+                    continue; // resumed from 0: already applied
+                }
+                if seq > self.expected {
+                    gap = true;
+                    break;
+                }
+                self.server.replay_entry(entry);
+                self.expected += 1;
+                applied += 1;
+            }
+            self.shared.latest_seq.fetch_max(self.expected - 1, Ordering::Relaxed);
+            self.tail = Some(TailFile { start, path, offset: scan.resume_offset });
+            if gap {
+                // A sequence hole inside the log: unreachable by the
+                // writer's append discipline, so treat it as damage and
+                // recover the way the trainer would — from a snapshot.
+                if swaps_left > 0 && self.hot_swap()? {
+                    swaps_left -= 1;
+                    continue;
+                }
+                anyhow::bail!(
+                    "WAL sequence gap at {} in {} with no newer snapshot to swap to",
+                    self.expected,
+                    self.dir.display()
+                );
+            }
+            // A successor file starting exactly at `expected` means the
+            // writer rotated past this file; loop so the covering pick
+            // moves to it. Otherwise we are caught up (a torn tail here
+            // is just the writer mid-append — the stored offset makes
+            // the next poll retry the same boundary).
+            let rotated = wals.iter().any(|(s, _)| *s == self.expected && *s > start);
+            if !rotated {
+                break;
+            }
+        }
+        if applied > 0 {
+            self.shared.applied_entries.fetch_add(applied, Ordering::Relaxed);
+            self.publish();
+        }
+        Ok(applied)
+    }
+
+    /// The byte offset to resume scanning `path` from: the stored tail
+    /// position when it provably refers to the same file (same start
+    /// sequence, same path, file at least as long as the stored offset —
+    /// shorter means truncated or recreated), else 0. A header re-scan is
+    /// safe: already-applied entries are skipped by sequence number.
+    fn resume_offset(&self, start: u64, path: &Path) -> u64 {
+        match &self.tail {
+            Some(t) if t.start == start && t.path == *path => {
+                let len = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+                if len >= t.offset {
+                    t.offset
+                } else {
+                    0
+                }
+            }
+            _ => 0,
+        }
+    }
+
+    /// Re-bootstrap from the newest valid snapshot, provided it is ahead
+    /// of the state we already hold (a replica never steps backwards).
+    /// Returns whether a swap happened.
+    fn hot_swap(&mut self) -> Result<bool> {
+        let Some(snap) = persist::newest_valid_snapshot(&self.dir)? else {
+            return Ok(false);
+        };
+        if snap.seq < self.expected {
+            return Ok(false);
+        }
+        self.server = CentralServer::from_snapshot(&snap)
+            .map_err(|e| e.context(format!("hot-swapping replica onto snapshot {}", snap.seq)))?;
+        self.expected = snap.seq + 1;
+        self.tail = None;
+        self.shared.hot_swaps.fetch_add(1, Ordering::Relaxed);
+        self.publish();
+        Ok(true)
+    }
+
+    /// The current serving model (always `Some` after bootstrap).
+    pub fn serving(&self) -> Option<Arc<ServingModel>> {
+        self.shared.model()
+    }
+
+    /// The same stats frame the wire protocol serves.
+    pub fn stats(&self) -> ReplicaStats {
+        self.shared.stats()
+    }
+
+    /// Next WAL sequence number the tailer expects.
+    pub fn expected_seq(&self) -> u64 {
+        self.expected
+    }
+}
+
+/// A background tailer around [`ReplicaCore`]: waits for the trainer's
+/// genesis snapshot, bootstraps, then drains the WAL every `poll`
+/// interval. The `amtl --replica … --follow <dir>` process is one of
+/// these plus a [`ReplicaServer`](super::server::ReplicaServer).
+pub struct ModelReplica {
+    shared: Arc<ReplicaShared>,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl ModelReplica {
+    /// Follow checkpoint directory `dir`, polling for new WAL entries
+    /// (and, before bootstrap, for the first snapshot) every `poll`.
+    pub fn follow(dir: impl Into<PathBuf>, poll: Duration) -> ModelReplica {
+        let dir = dir.into();
+        let shared = ReplicaShared::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let shared = Arc::clone(&shared);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("amtl-replica-tail".into())
+                .spawn(move || run_tail(&dir, poll, &shared, &stop))
+                .expect("spawn replica tail thread")
+        };
+        ModelReplica { shared, stop, thread: Some(thread) }
+    }
+
+    pub(crate) fn shared(&self) -> Arc<ReplicaShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// The current serving model, if bootstrap has happened.
+    pub fn serving(&self) -> Option<Arc<ServingModel>> {
+        self.shared.model()
+    }
+
+    /// A stats snapshot of the replica right now.
+    pub fn stats(&self) -> ReplicaStats {
+        self.shared.stats()
+    }
+
+    /// Block until the first serving model is published (the bootstrap
+    /// snapshot was found and applied), up to `timeout`. Returns whether
+    /// the replica is ready.
+    pub fn wait_ready(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.shared.model().is_none() {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
+
+    /// Stop the tail thread and join it. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ModelReplica {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The tail thread body: bootstrap as soon as a snapshot exists, then
+/// drain on the poll cadence. Tail errors are reported and retried — a
+/// replica outlives transient filesystem races with the trainer.
+fn run_tail(dir: &Path, poll: Duration, shared: &Arc<ReplicaShared>, stop: &AtomicBool) {
+    let mut core: Option<ReplicaCore> = None;
+    while !stop.load(Ordering::SeqCst) {
+        match &mut core {
+            None => {
+                if persist::has_checkpoint(dir) {
+                    match ReplicaCore::bootstrap_shared(dir.to_path_buf(), Arc::clone(shared)) {
+                        Ok(c) => {
+                            core = Some(c);
+                            continue; // drain what is already on disk
+                        }
+                        Err(e) => {
+                            eprintln!("warning: replica bootstrap failed ({e:#}); retrying");
+                        }
+                    }
+                }
+            }
+            Some(c) => {
+                if let Err(e) = c.poll() {
+                    eprintln!("warning: replica tail error ({e:#}); retrying");
+                }
+            }
+        }
+        sleep_checking(stop, poll);
+    }
+}
+
+/// Sleep `total`, waking every 20 ms to honor a shutdown request.
+fn sleep_checking(stop: &AtomicBool, total: Duration) {
+    let deadline = Instant::now() + total;
+    while !stop.load(Ordering::SeqCst) {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            break;
+        }
+        std::thread::sleep(left.min(Duration::from_millis(20)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::SharedState;
+    use crate::optim::prox::NuclearProx;
+    use crate::optim::SharedProx;
+    use crate::persist::{Checkpointer, PersistConfig};
+    use crate::util::Rng;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("amtl_serve_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn durable_server(dir: &Path, every: u64, online: bool, d: usize, t: usize) -> CentralServer {
+        let mut rng = Rng::new(6200);
+        let m = Mat::randn(d, t, &mut rng);
+        let state = Arc::new(SharedState::new(&m));
+        let mut reg = NuclearProx::new(0.3);
+        if online {
+            reg = reg.with_online(&m).with_resvd_every(5);
+        }
+        let reg: Box<dyn SharedProx> = Box::new(reg);
+        let cp = Arc::new(Checkpointer::create(PersistConfig::new(dir, every)).unwrap());
+        CentralServer::new(state, reg, 0.2).with_checkpointer(cp).unwrap()
+    }
+
+    fn drive(srv: &CentralServer, n: usize, t_count: usize, seed: u64, k0: u64) {
+        let mut rng = Rng::new(seed);
+        let d = srv.state().d();
+        for i in 0..n {
+            let t = i % t_count;
+            let u = rng.normal_vec(d);
+            srv.commit_update(t, k0 + (i / t_count) as u64, &u, 0.6).unwrap();
+            let _ = srv.prox_matrix();
+        }
+    }
+
+    #[test]
+    fn bootstrap_requires_a_snapshot() {
+        let dir = tmp_dir("no_snap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ReplicaCore::bootstrap(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("no readable snapshot"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replica_drains_wal_to_trainer_state() {
+        let dir = tmp_dir("drain");
+        let srv = durable_server(&dir, 1000, true, 6, 3);
+        drive(&srv, 17, 3, 6201, 0);
+        srv.sync_persist().unwrap();
+
+        let mut replica = ReplicaCore::bootstrap(&dir).unwrap();
+        let applied = replica.poll().unwrap();
+        assert!(applied > 0, "stride 1000 means everything lives in the WAL");
+        let model = replica.serving().unwrap();
+        assert_eq!(model.w.max_abs_diff(&srv.serving_w()), 0.0, "serving W is bitwise the trainer's");
+        assert_eq!(model.version, srv.state().version());
+        // Caught up: another poll applies nothing and changes nothing.
+        assert_eq!(replica.poll().unwrap(), 0);
+        assert_eq!(replica.stats().lag(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incremental_polls_match_one_full_drain() {
+        let dir = tmp_dir("incremental");
+        let srv = durable_server(&dir, 1000, true, 5, 2);
+        let mut incremental = ReplicaCore::bootstrap(&dir).unwrap();
+        // Interleave training with tailing: the replica resumes mid-file
+        // every time instead of re-scanning.
+        for round in 0..6 {
+            drive(&srv, 5, 2, 6300 + round, 3 * round);
+            srv.sync_persist().unwrap();
+            incremental.poll().unwrap();
+        }
+        let mut full = ReplicaCore::bootstrap(&dir).unwrap();
+        full.poll().unwrap();
+        let a = incremental.serving().unwrap();
+        let b = full.serving().unwrap();
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.w.max_abs_diff(&b.w), 0.0, "resumed tailing must equal a full scan");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rotation_hot_swap_survives_pruning() {
+        let dir = tmp_dir("hot_swap");
+        // Aggressive rotation: keep-2 pruning removes old WALs quickly.
+        let srv = durable_server(&dir, 3, false, 4, 2);
+        let mut replica = ReplicaCore::bootstrap(&dir).unwrap();
+        drive(&srv, 30, 2, 6400, 0);
+        srv.sync_persist().unwrap();
+        // The replica's original tail was pruned away several rotations
+        // ago; it must recover through a snapshot, not error.
+        replica.poll().unwrap();
+        let model = replica.serving().unwrap();
+        assert_eq!(model.w.max_abs_diff(&srv.serving_w()), 0.0);
+        assert!(replica.stats().hot_swaps >= 1, "pruned tail forces a snapshot swap");
+        assert_eq!(replica.stats().lag(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn predict_validates_and_counts() {
+        let dir = tmp_dir("predict");
+        let srv = durable_server(&dir, 1000, false, 3, 2);
+        drive(&srv, 4, 2, 6500, 0);
+        srv.sync_persist().unwrap();
+        let mut replica = ReplicaCore::bootstrap(&dir).unwrap();
+        replica.poll().unwrap();
+        let shared = &replica.shared;
+
+        let w = srv.serving_w();
+        let x = [1.0, -2.0, 0.5];
+        let (y, seq) = shared.predict(1, &x).unwrap();
+        assert_eq!(y, linalg::dot(w.col(1), &x));
+        assert_eq!(seq, replica.serving().unwrap().seq);
+        assert!(shared.predict(9, &x).is_err(), "task out of range");
+        assert!(shared.predict(0, &[1.0]).is_err(), "dimension mismatch");
+        assert!(shared.predict(0, &[f64::NAN, 0.0, 0.0]).is_err(), "non-finite input");
+        let stats = shared.stats();
+        assert_eq!(stats.predictions, 1);
+        assert_eq!(stats.errors, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn model_replica_thread_follows_a_live_directory() {
+        let dir = tmp_dir("thread");
+        // Start following before any snapshot exists: the thread waits.
+        let mut replica = ModelReplica::follow(&dir, Duration::from_millis(10));
+        assert!(replica.serving().is_none());
+        let srv = durable_server(&dir, 8, false, 4, 2);
+        assert!(replica.wait_ready(Duration::from_secs(30)), "bootstrap after genesis");
+        drive(&srv, 12, 2, 6600, 0);
+        srv.sync_persist().unwrap();
+        // Exact mode: the serving iterate is a pure function of V, so
+        // matching KM versions means matching models.
+        let want = srv.state().version();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while replica.serving().map(|m| m.version) != Some(want) {
+            assert!(Instant::now() < deadline, "replica never caught up: {:?}", replica.stats());
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let model = replica.serving().unwrap();
+        assert_eq!(model.w.max_abs_diff(&srv.serving_w()), 0.0);
+        replica.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,163 @@
+//! The predict endpoint: a TCP server answering `Predict`/`FetchStats`
+//! frames against a [`ModelReplica`]'s latest published serving model.
+//!
+//! Mirrors the training-side [`TcpServer`](crate::transport::tcp::TcpServer)
+//! discipline exactly — non-blocking accept loop, one thread per
+//! connection, `PatientReader` polling the stop flag, per-response write
+//! timeout, reaping of finished connection threads — but shares *no
+//! state* with a trainer: every answer comes from the immutable
+//! [`ServingModel`](super::replica::ServingModel) swap, so predict
+//! traffic never takes a lock a training commit could hold. Training
+//! frames arriving here are refused with an `Error` response.
+
+use super::replica::{ModelReplica, ReplicaShared};
+use crate::transport::tcp::{PatientReader, POLL, WRITE_TIMEOUT};
+use crate::transport::wire::{Request, Response, WireError};
+use anyhow::{anyhow, Result};
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// The serving side of the predict protocol.
+pub struct ReplicaServer;
+
+/// Running predict-endpoint handle. Dropping it (or calling
+/// [`ReplicaServerHandle::shutdown`]) stops the accept loop and joins
+/// every connection thread. Does not stop the replica's tail thread —
+/// that belongs to the [`ModelReplica`].
+pub struct ReplicaServerHandle {
+    addr: SocketAddr,
+    stop_flag: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ReplicaServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// answer predict traffic against `replica`'s serving model until the
+    /// handle is shut down. Serving starts immediately: requests arriving
+    /// before the replica bootstraps get an `Error` response, not a hang.
+    pub fn spawn(addr: &str, replica: &ModelReplica) -> Result<ReplicaServerHandle> {
+        let shared = replica.shared();
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("cannot bind replica server on {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop_flag = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let accept = {
+            let stop = Arc::clone(&stop_flag);
+            let conns = Arc::clone(&conns);
+            std::thread::Builder::new()
+                .name("amtl-replica-accept".into())
+                .spawn(move || loop {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let shared = Arc::clone(&shared);
+                            let stop = Arc::clone(&stop);
+                            let spawned = std::thread::Builder::new()
+                                .name("amtl-replica-conn".into())
+                                .spawn(move || serve_conn(stream, &shared, &stop));
+                            if let Ok(h) = spawned {
+                                let mut conns = conns.lock().unwrap();
+                                conns.retain(|c| !c.is_finished());
+                                conns.push(h);
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+                        Err(_) => std::thread::sleep(POLL),
+                    }
+                })?
+        };
+
+        Ok(ReplicaServerHandle { addr: local, stop_flag, accept: Some(accept), conns })
+    }
+}
+
+impl ReplicaServerHandle {
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake blocked connection threads, join everything.
+    /// Idempotent; also invoked on drop.
+    pub fn shutdown(&mut self) {
+        self.stop_flag.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplicaServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One connection's request loop: validate → score → respond. Latency is
+/// recorded per `Predict`, measured from request decode to the response
+/// hitting the socket (the full server-side service time).
+fn serve_conn(stream: TcpStream, shared: &ReplicaShared, stop: &AtomicBool) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let mut reader = PatientReader { stream: &stream, stop };
+    loop {
+        let req = match Request::read_from(&mut reader) {
+            Ok(req) => req,
+            // Client closed, or we are shutting down: silent exit.
+            Err(WireError::Io(_)) => return,
+            Err(e) => {
+                let _ = Response::Error(format!("protocol error: {e}")).write_to(&mut &stream);
+                return;
+            }
+        };
+        let started = Instant::now();
+        let is_predict = matches!(req, Request::Predict { .. });
+        let resp = match req {
+            Request::Predict { t, x } => match shared.predict(t, &x) {
+                Ok((y, model_seq)) => Response::Prediction { y, model_seq },
+                Err(msg) => Response::Error(msg),
+            },
+            Request::FetchStats => Response::Stats(shared.stats()),
+            Request::Shutdown => {
+                // Closes this connection only; the replica keeps serving.
+                let _ = Response::ShutdownAck.write_to(&mut &stream);
+                return;
+            }
+            // Training traffic has no business here: a replica holds a
+            // read-only shadow of V and could neither commit nor prox.
+            Request::FetchProxCol { .. }
+            | Request::PushUpdate { .. }
+            | Request::FetchEta
+            | Request::Register { .. }
+            | Request::Heartbeat { .. }
+            | Request::Leave { .. } => Response::Error(
+                "this is a read replica; training traffic goes to the central \
+                 server (`amtl --serve`)"
+                    .into(),
+            ),
+        };
+        let wrote = resp.write_to(&mut &stream).is_ok();
+        if is_predict {
+            shared.hist.record(started.elapsed().as_micros() as u64);
+        }
+        if !wrote {
+            return;
+        }
+    }
+}

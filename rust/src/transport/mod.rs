@@ -22,8 +22,11 @@
 //!   checksummed binary frames of [`wire`] over `std::net` TCP, one
 //!   connection per task node, with client-side timeouts and reconnects.
 //!   The privacy boundary stops being a simulation: the protocol has no
-//!   frame type that could carry task data (`X_t`, `y_t`) at all — only
-//!   prox columns, update vectors, and scalars ever cross the socket.
+//!   frame type that could carry a task node's *training set* (`X_t`,
+//!   `y_t`) — only prox columns, update vectors, and scalars ever cross
+//!   the socket. (The serving-tier `Predict` frame carries a feature
+//!   vector too, but it is the *querier's own* input sent to a read
+//!   replica for scoring, never a training example leaving its node.)
 //!
 //! Every [`Schedule`](crate::coordinator::Schedule) routes its backward
 //! fetches and KM commits through this trait, so asynchronous,

@@ -65,12 +65,13 @@ impl Default for TcpOptions {
 // ---------------------------------------------------------------- server
 
 /// How often blocked server threads wake up to check the shutdown flag.
-const POLL: Duration = Duration::from_millis(20);
+/// Shared with the serving tier's replica server (`serve::ReplicaServer`).
+pub(crate) const POLL: Duration = Duration::from_millis(20);
 
 /// Server-side per-response write timeout: a client that stops reading
 /// cannot pin a connection thread (and therefore
 /// [`TcpServerHandle::shutdown`], which joins them) forever.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// The serving side: accepts task-node connections and answers requests
 /// against a shared [`CentralServer`].
@@ -172,10 +173,11 @@ impl Drop for TcpServerHandle {
 /// `Read` adapter that turns socket read timeouts into shutdown checks:
 /// blocked connection threads wake every [`POLL`] interval, look at the
 /// stop flag, and otherwise keep waiting. EOF and real errors pass
-/// through untouched.
-struct PatientReader<'a> {
-    stream: &'a TcpStream,
-    stop: &'a AtomicBool,
+/// through untouched. Shared with `serve::ReplicaServer`, whose
+/// connection loops follow the same discipline.
+pub(crate) struct PatientReader<'a> {
+    pub(crate) stream: &'a TcpStream,
+    pub(crate) stop: &'a AtomicBool,
 }
 
 impl Read for PatientReader<'_> {
@@ -311,6 +313,15 @@ fn serve_conn(
                     ))
                 }
             }
+            // Serving-tier frames belong to read replicas: the training
+            // server refuses them so nobody mistakes it for a predict
+            // endpoint (predictions must come from the snapshot+WAL feed,
+            // not from a lock on live training state).
+            Request::Predict { .. } | Request::FetchStats => Response::Error(
+                "this is the training server; predict/stats requests are answered \
+                 by a read replica (`amtl --replica <addr> --follow <dir>`)"
+                    .into(),
+            ),
             Request::Shutdown => {
                 // Durability before politeness: fsync in-flight WAL
                 // writes, then acknowledge the teardown.

@@ -2,7 +2,9 @@
 //! frames carrying the messages of Algorithm 1's star topology — the four
 //! algorithmic messages (`FetchProxCol`/`PushUpdate`/`FetchEta`/`Shutdown`)
 //! plus the elastic-membership frames (`Register`/`Heartbeat`/`Leave`)
-//! that let task nodes join, prove liveness, and depart mid-run.
+//! that let task nodes join, prove liveness, and depart mid-run, and the
+//! serving-tier frames (`Predict`/`FetchStats`) spoken by read replicas
+//! (see [`serve`](crate::serve)).
 //!
 //! Every frame is
 //!
@@ -23,8 +25,12 @@
 //!
 //! What crosses the wire is only what the paper's privacy argument allows:
 //! model vectors (prox columns, forward-step results) and scalars (η, KM
-//! steps, version counters). Task data (`X_t`, `y_t`) has no frame type at
-//! all — it *cannot* be transmitted by this protocol.
+//! steps, version counters). Task *training* data (`X_t`, `y_t`) has no
+//! frame type at all — it *cannot* be transmitted by this protocol. The
+//! serving-tier `Predict` frame carries a feature vector, but it is the
+//! *querier's own* input (the "user request" of the deployment story),
+//! sent voluntarily to a replica to be scored — no frame moves a task
+//! node's training set anywhere.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -34,7 +40,10 @@ pub const MAGIC: [u8; 4] = *b"AMTL";
 /// Current protocol version; bumped on any incompatible frame change.
 /// v2: `PushUpdate` carries the node's activation counter `k` (commit
 /// dedup key for at-least-once resends) and the membership frames
-/// (`Register`/`Heartbeat`/`Leave`) exist.
+/// (`Register`/`Heartbeat`/`Leave`) exist. The serving-tier frames
+/// (`Predict`/`FetchStats`) are an *additive* extension — new opcodes,
+/// same version: decoders reject opcodes they don't know, so older peers
+/// refuse the new frames cleanly without a version bump.
 pub const VERSION: u8 = 2;
 /// Upper bound on payload size (guards allocation on corrupted lengths:
 /// 64 MiB ≫ any model column we ship).
@@ -48,6 +57,8 @@ const OP_SHUTDOWN: u8 = 0x04;
 const OP_REGISTER: u8 = 0x05;
 const OP_HEARTBEAT: u8 = 0x06;
 const OP_LEAVE: u8 = 0x07;
+const OP_PREDICT: u8 = 0x08;
+const OP_FETCH_STATS: u8 = 0x09;
 
 // Response opcodes (server → client).
 const OP_PROX_COL: u8 = 0x81;
@@ -57,6 +68,8 @@ const OP_SHUTDOWN_ACK: u8 = 0x84;
 const OP_REGISTERED: u8 = 0x85;
 const OP_HEARTBEAT_ACK: u8 = 0x86;
 const OP_LEAVE_ACK: u8 = 0x87;
+const OP_PREDICTION: u8 = 0x88;
+const OP_STATS: u8 = 0x89;
 const OP_ERROR: u8 = 0xFF;
 
 /// Decode/IO failure. Malformed input is an error, never a panic.
@@ -251,6 +264,90 @@ pub(crate) fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
 
 // ------------------------------------------------------------- messages
 
+/// A read replica's self-description, served in reply to
+/// [`Request::FetchStats`]: model shape, how far behind the trainer it is
+/// (lag, in commit sequence numbers), and its request-side counters +
+/// latency quantiles. All fields are plain scalars so the frame is
+/// fixed-size and additive changes stay easy to audit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplicaStats {
+    /// Number of tasks T the serving model routes across.
+    pub tasks: u32,
+    /// Feature dimension d of every per-task model column.
+    pub dim: u32,
+    /// Commit sequence number the *serving* model incorporates.
+    pub model_seq: u64,
+    /// Newest commit sequence number the replica has observed on disk
+    /// (advances ahead of `model_seq` while a drain batch is in flight).
+    pub latest_seq: u64,
+    /// WAL entries applied since bootstrap (across hot-swaps).
+    pub applied_entries: u64,
+    /// Predict requests answered successfully.
+    pub predictions: u64,
+    /// Predict requests rejected (bad task index, dimension mismatch).
+    pub errors: u64,
+    /// Snapshot bootstraps performed (1 after a clean start).
+    pub bootstraps: u64,
+    /// Re-bootstraps forced by checkpoint rotation pruning the WAL tail
+    /// out from under the replica.
+    pub hot_swaps: u64,
+    /// Median per-request service latency, microseconds (histogram
+    /// estimate; 0 until the first request).
+    pub p50_us: u64,
+    /// 99th-percentile per-request service latency, microseconds.
+    pub p99_us: u64,
+    /// Worst observed per-request service latency, microseconds.
+    pub max_us: u64,
+    /// Milliseconds since the replica process started serving.
+    pub uptime_ms: u64,
+}
+
+impl ReplicaStats {
+    /// Replica lag: commit sequence numbers the serving model is behind
+    /// the newest trainer state the replica has seen on disk.
+    pub fn lag(&self) -> u64 {
+        self.latest_seq.saturating_sub(self.model_seq)
+    }
+
+    fn push(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.tasks.to_le_bytes());
+        out.extend_from_slice(&self.dim.to_le_bytes());
+        for v in [
+            self.model_seq,
+            self.latest_seq,
+            self.applied_entries,
+            self.predictions,
+            self.errors,
+            self.bootstraps,
+            self.hot_swaps,
+            self.p50_us,
+            self.p99_us,
+            self.max_us,
+            self.uptime_ms,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn parse(c: &mut Cursor<'_>) -> Result<ReplicaStats, WireError> {
+        Ok(ReplicaStats {
+            tasks: c.u32()?,
+            dim: c.u32()?,
+            model_seq: c.u64()?,
+            latest_seq: c.u64()?,
+            applied_entries: c.u64()?,
+            predictions: c.u64()?,
+            errors: c.u64()?,
+            bootstraps: c.u64()?,
+            hot_swaps: c.u64()?,
+            p50_us: c.u64()?,
+            p99_us: c.u64()?,
+            max_us: c.u64()?,
+            uptime_ms: c.u64()?,
+        })
+    }
+}
+
 /// Client → server messages (the task-node side of Algorithm 1).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -275,6 +372,13 @@ pub enum Request {
     Heartbeat { t: u32 },
     /// Polite departure of task node `t` (the run stops waiting for it).
     Leave { t: u32 },
+    /// Score the querier's own feature vector `x` against task `t`'s
+    /// serving model: `ŷ = ⟨w_t, x⟩`. Answered by read replicas
+    /// ([`serve`](crate::serve)), not by the training server.
+    Predict { t: u32, x: Vec<f64> },
+    /// Retrieve the replica's [`ReplicaStats`] (lag, latency quantiles,
+    /// request counters).
+    FetchStats,
 }
 
 /// Server → client messages.
@@ -298,6 +402,12 @@ pub enum Response {
     HeartbeatAck { live: bool },
     /// Acknowledges a `Leave` request.
     LeaveAck,
+    /// The prediction `ŷ` for a `Predict` request, plus the commit
+    /// sequence number of the serving model that produced it (so a
+    /// client can reason about staleness per answer).
+    Prediction { y: f64, model_seq: u64 },
+    /// The replica's current [`ReplicaStats`].
+    Stats(ReplicaStats),
     /// Request rejected (bad task index, dimension mismatch, …). The
     /// connection stays usable.
     Error(String),
@@ -313,6 +423,8 @@ impl Request {
             Request::Register { .. } => OP_REGISTER,
             Request::Heartbeat { .. } => OP_HEARTBEAT,
             Request::Leave { .. } => OP_LEAVE,
+            Request::Predict { .. } => OP_PREDICT,
+            Request::FetchStats => OP_FETCH_STATS,
         }
     }
 
@@ -330,7 +442,13 @@ impl Request {
                 push_f64s(&mut out, u);
                 out
             }
-            Request::FetchEta | Request::Shutdown => Vec::new(),
+            Request::Predict { t, x } => {
+                let mut out = Vec::with_capacity(4 + x.len() * 8);
+                out.extend_from_slice(&t.to_le_bytes());
+                push_f64s(&mut out, x);
+                out
+            }
+            Request::FetchEta | Request::Shutdown | Request::FetchStats => Vec::new(),
         }
     }
 
@@ -351,6 +469,12 @@ impl Request {
             OP_REGISTER => Request::Register { t: c.u32()? },
             OP_HEARTBEAT => Request::Heartbeat { t: c.u32()? },
             OP_LEAVE => Request::Leave { t: c.u32()? },
+            OP_PREDICT => {
+                let t = c.u32()?;
+                let x = c.rest_f64s()?;
+                Request::Predict { t, x }
+            }
+            OP_FETCH_STATS => Request::FetchStats,
             other => return Err(WireError::BadOpcode(other)),
         };
         c.finish()?;
@@ -386,6 +510,8 @@ impl Response {
             Response::Registered { .. } => OP_REGISTERED,
             Response::HeartbeatAck { .. } => OP_HEARTBEAT_ACK,
             Response::LeaveAck => OP_LEAVE_ACK,
+            Response::Prediction { .. } => OP_PREDICTION,
+            Response::Stats(_) => OP_STATS,
             Response::Error(_) => OP_ERROR,
         }
     }
@@ -407,6 +533,17 @@ impl Response {
                 out
             }
             Response::HeartbeatAck { live } => vec![u8::from(*live)],
+            Response::Prediction { y, model_seq } => {
+                let mut out = Vec::with_capacity(16);
+                out.extend_from_slice(&y.to_bits().to_le_bytes());
+                out.extend_from_slice(&model_seq.to_le_bytes());
+                out
+            }
+            Response::Stats(stats) => {
+                let mut out = Vec::with_capacity(96);
+                stats.push(&mut out);
+                out
+            }
             Response::Error(msg) => msg.as_bytes().to_vec(),
         }
     }
@@ -428,6 +565,8 @@ impl Response {
                 },
             },
             OP_LEAVE_ACK => Response::LeaveAck,
+            OP_PREDICTION => Response::Prediction { y: c.f64()?, model_seq: c.u64()? },
+            OP_STATS => Response::Stats(ReplicaStats::parse(&mut c)?),
             OP_ERROR => {
                 let msg = String::from_utf8(payload.to_vec())
                     .map_err(|_| WireError::Malformed("error message is not utf-8"))?;
@@ -487,9 +626,40 @@ mod tests {
             Request::Register { t: 2 },
             Request::Heartbeat { t: u32::MAX },
             Request::Leave { t: 0 },
+            Request::Predict { t: 1, x: vec![0.5, -1.5, 2.25] },
+            Request::Predict { t: u32::MAX, x: vec![] },
+            Request::FetchStats,
         ] {
             assert_eq!(roundtrip_request(&req), req);
         }
+    }
+
+    fn sample_stats() -> ReplicaStats {
+        ReplicaStats {
+            tasks: 4,
+            dim: 30,
+            model_seq: 412,
+            latest_seq: 415,
+            applied_entries: 412,
+            predictions: 10_000,
+            errors: 0,
+            bootstraps: 1,
+            hot_swaps: 2,
+            p50_us: 85,
+            p99_us: 410,
+            max_us: 2_150,
+            uptime_ms: 61_200,
+        }
+    }
+
+    #[test]
+    fn replica_stats_lag_semantics() {
+        let s = sample_stats();
+        assert_eq!(s.lag(), 3);
+        // A model ahead of the observed tip (impossible, but the math must
+        // not underflow) reads as zero lag.
+        let weird = ReplicaStats { model_seq: 9, latest_seq: 3, ..s };
+        assert_eq!(weird.lag(), 0);
     }
 
     #[test]
@@ -505,6 +675,10 @@ mod tests {
             Response::HeartbeatAck { live: true },
             Response::HeartbeatAck { live: false },
             Response::LeaveAck,
+            Response::Prediction { y: -3.75, model_seq: 412 },
+            Response::Prediction { y: f64::MAX, model_seq: 0 },
+            Response::Stats(sample_stats()),
+            Response::Stats(ReplicaStats::default()),
             Response::Error("task index 9 out of range (T=4)".into()),
             Response::Error(String::new()),
         ] {
@@ -573,8 +747,10 @@ mod tests {
             Request::PushUpdate { t: 2, k: 5, step: 0.5, u: vec![1.0, 2.0, 3.0] }.encode(),
             Request::FetchEta.encode(),
             Request::Register { t: 1 }.encode(),
+            Request::Predict { t: 0, x: vec![1.0, 2.0] }.encode(),
             Response::ProxCol(vec![4.0; 7]).encode(),
             Response::Registered { col_version: 9, generation: 1 }.encode(),
+            Response::Stats(sample_stats()).encode(),
             Response::Error("boom".into()).encode(),
         ];
         for full in &frames {
@@ -598,8 +774,12 @@ mod tests {
             Request::PushUpdate { t: 2, k: 3, step: 0.5, u: vec![1.0, -2.0] }.encode(),
             Request::FetchProxCol { t: 7 }.encode(),
             Request::Heartbeat { t: 1 }.encode(),
+            Request::Predict { t: 3, x: vec![0.5, 0.25] }.encode(),
+            Request::FetchStats.encode(),
             Response::Pushed { version: 41 }.encode(),
             Response::Eta(0.125).encode(),
+            Response::Prediction { y: 1.5, model_seq: 7 }.encode(),
+            Response::Stats(sample_stats()).encode(),
             Response::HeartbeatAck { live: true }.encode(),
         ];
         for full in &frames {

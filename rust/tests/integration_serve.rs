@@ -1,0 +1,267 @@
+//! Integration tests for the serving tier: a replica fed only by the
+//! trainer's checkpoint directory answers predictions that are bitwise
+//! the trainer's own, never errors under concurrent predict traffic
+//! while TCP training is live, and survives keep-2 checkpoint rotation
+//! pruning the WAL segment it was parked on.
+
+use amtl::coordinator::step_size::{KmSchedule, StepController};
+use amtl::coordinator::worker::{run_worker, WorkerCtx};
+use amtl::coordinator::{MtlProblem, RunConfig, Session};
+use amtl::data::synthetic;
+use amtl::net::{DelayModel, FaultModel};
+use amtl::optim::prox::RegularizerKind;
+use amtl::persist::{recover, PersistConfig};
+use amtl::runtime::Engine;
+use amtl::serve::{ModelReplica, PredictClient, ReplicaCore, ReplicaServer};
+use amtl::transport::{TcpClient, TcpOptions, TcpServer};
+use amtl::util::Rng;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("amtl_iserve_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+// ------------------------------------------- quiesce + drain ⇒ bitwise
+
+#[test]
+fn replica_predictions_match_the_trainer_bitwise_after_drain() {
+    // Train to completion with checkpoints, then serve the directory:
+    // once the replica drains the WAL, every prediction that crosses the
+    // wire must equal ⟨w_t, x⟩ against the trainer's own final W — not
+    // approximately, bitwise (same replay machinery, same fold order).
+    let dir = tmp_dir("bitwise_predict");
+    let p = lowrank_problem(6300, 2, 50, 8, 0.25);
+    let r = Session::builder(&p)
+        .iters_per_node(25)
+        .eta_k(0.9)
+        .record_every(1_000_000)
+        .checkpoint_dir(Some(dir.clone()))
+        .checkpoint_every(9)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    let mut replica = ModelReplica::follow(&dir, Duration::from_millis(5));
+    let mut rep = ReplicaServer::spawn("127.0.0.1:0", &replica).unwrap();
+    assert!(replica.wait_ready(Duration::from_secs(30)), "snapshot exists, bootstrap must land");
+
+    // Wait for the drain by watching the model itself (lag can read 0
+    // transiently right after bootstrap, before the first WAL discovery).
+    let want = r.w_final.clone();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if replica.serving().map(|m| m.w == want).unwrap_or(false) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replica never drained to the trainer's final W");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(replica.stats().lag(), 0, "drained replica admits no lag");
+
+    let mut client = PredictClient::connect(rep.addr(), TIMEOUT).unwrap();
+    let mut rng = Rng::new(99);
+    let mut asked = 0u64;
+    for t in 0..p.t() {
+        for _ in 0..5 {
+            let x = rng.normal_vec(p.d());
+            let (y, model_seq) = client.predict(t, &x).unwrap();
+            assert_eq!(y, amtl::linalg::dot(want.col(t), &x), "bitwise prediction, task {t}");
+            assert!(model_seq > 0, "a drained model carries its WAL horizon");
+            asked += 1;
+        }
+    }
+    // Malformed requests get a clean refusal — and the connection (plus
+    // the good path) keeps working afterwards.
+    assert!(client.predict(p.t(), &rng.normal_vec(p.d())).is_err(), "task out of range");
+    assert!(client.predict(0, &rng.normal_vec(p.d() + 1)).is_err(), "dimension mismatch");
+    let x = rng.normal_vec(p.d());
+    assert_eq!(client.predict(0, &x).unwrap().0, amtl::linalg::dot(want.col(0), &x));
+
+    let s = client.stats().unwrap();
+    assert_eq!(s.tasks as usize, p.t());
+    assert_eq!(s.dim as usize, p.d());
+    assert_eq!(s.errors, 2, "exactly the two malformed requests");
+    assert!(s.predictions >= asked + 1);
+    client.close().unwrap();
+    rep.shutdown();
+    replica.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --------------------------- live TCP training + concurrent predicts
+
+#[test]
+fn replica_never_errors_under_live_tcp_training() {
+    // The acceptance bar of the tier: while a real multi-process-shaped
+    // TCP training run commits updates (and checkpoint rotation prunes
+    // WALs under the replica), concurrent predict clients must never see
+    // an error or a non-finite score — every published model is a whole
+    // batch, never a partially-applied column.
+    let dir = tmp_dir("live_predict");
+    let p = lowrank_problem(6301, 3, 60, 10, 0.3);
+    let iters = 120;
+    let cfg = RunConfig {
+        iters_per_node: iters,
+        record_every: 1_000_000,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 16,
+        ..Default::default()
+    };
+    let (_state, server, recorder) = cfg.build_server(&p).unwrap();
+    let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), Some(recorder)).unwrap();
+    let addr = handle.addr();
+
+    let mut replica = ModelReplica::follow(&dir, Duration::from_millis(5));
+    let mut rep = ReplicaServer::spawn("127.0.0.1:0", &replica).unwrap();
+    // build_server claimed the directory and cut genesis: the replica can
+    // bootstrap before the first training commit.
+    assert!(replica.wait_ready(Duration::from_secs(30)));
+    let rep_addr = rep.addr();
+
+    let mut computes = p.build_computes(Engine::Native, None).unwrap();
+    let controller = Arc::new(StepController::new(KmSchedule::fixed(0.9), false, p.t(), 5));
+    let mut root = Rng::new(6301);
+    let done = Arc::new(AtomicBool::new(false));
+    let t_count = p.t() as u64;
+    let d = p.d();
+    let (predictions, errors) = std::thread::scope(|s| {
+        let mut workers = Vec::new();
+        for (t, compute) in computes.iter_mut().enumerate() {
+            let client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+            let ctx = WorkerCtx {
+                t,
+                iters,
+                transport: Box::new(client),
+                controller: Arc::clone(&controller),
+                delay: DelayModel::None,
+                faults: FaultModel::None,
+                sgd_fraction: None,
+                time_scale: Duration::from_millis(100),
+                sink: None,
+                rng: root.fork(t as u64),
+                gate: None,
+                heartbeat: None,
+                resume: false,
+            };
+            workers.push(s.spawn(move || {
+                run_worker(ctx, compute.as_mut()).expect("worker failed");
+            }));
+        }
+        let mut predictors = Vec::new();
+        for c in 0..3u64 {
+            let done = Arc::clone(&done);
+            predictors.push(s.spawn(move || -> (u64, u64) {
+                let mut rng = Rng::new(900 + c);
+                let mut client = PredictClient::connect(rep_addr, TIMEOUT).unwrap();
+                let (mut ok, mut bad) = (0u64, 0u64);
+                while !done.load(Ordering::SeqCst) {
+                    let t = rng.below(t_count) as usize;
+                    let x = rng.normal_vec(d);
+                    match client.predict(t, &x) {
+                        Ok((y, _)) if y.is_finite() => ok += 1,
+                        _ => bad += 1,
+                    }
+                }
+                let _ = client.close();
+                (ok, bad)
+            }));
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        done.store(true, Ordering::SeqCst);
+        predictors
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |acc, x| (acc.0 + x.0, acc.1 + x.1))
+    });
+    assert!(predictions > 0, "the load window overlapped live training");
+    assert_eq!(errors, 0, "no errors, no non-finite scores, ever");
+
+    // Quiesce: final checkpoint, let the replica drain, compare models.
+    server.sync_persist().unwrap();
+    server.checkpointer().unwrap().checkpoint_now(&server).unwrap();
+    let want = server.serving_w();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if replica.serving().map(|m| m.w == want).unwrap_or(false) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "replica never converged to the quiesced trainer");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    handle.shutdown();
+    rep.shutdown();
+    replica.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------ rotation pruning ⇒ hot swap
+
+#[test]
+fn stranded_replica_hot_swaps_to_a_newer_snapshot() {
+    // Park a replica at the horizon of a finished run, then resume the
+    // run with aggressive rotation so keep-2 pruning deletes the WAL
+    // segment the replica expects next. The replica must hot-swap onto a
+    // newer snapshot and still land bitwise on the recovered final state.
+    let dir = tmp_dir("hot_swap");
+    let p = lowrank_problem(6302, 1, 40, 6, 0.2);
+    let run = |iters: usize, resume: bool, every: u64| {
+        Session::builder(&p)
+            .iters_per_node(iters)
+            .eta_k(0.9)
+            .record_every(1_000_000)
+            .checkpoint_dir(Some(dir.clone()))
+            .checkpoint_every(every)
+            .resume(resume)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    run(8, false, 1000);
+
+    let mut core = ReplicaCore::bootstrap(&dir).unwrap();
+    while core.poll().unwrap() > 0 {}
+    assert_eq!(core.stats().hot_swaps, 0);
+    let parked_at = core.expected_seq();
+
+    let r = run(40, true, 4);
+
+    let mut quiet = 0;
+    let mut polls = 0;
+    while quiet < 2 {
+        if core.poll().unwrap() == 0 {
+            quiet += 1;
+        } else {
+            quiet = 0;
+        }
+        polls += 1;
+        assert!(polls < 10_000, "tail never drained");
+    }
+    assert!(
+        core.stats().hot_swaps >= 1,
+        "rotation pruned past seq {parked_at}; the replica must have swapped"
+    );
+    assert!(core.expected_seq() > parked_at);
+
+    let rec = recover(PersistConfig::new(&dir, 4)).unwrap();
+    let m = core.serving().unwrap();
+    assert_eq!(m.w, rec.server.final_w(), "post-swap model recovers bitwise");
+    assert_eq!(m.w, r.w_final, "…and equals the live run's final W");
+    std::fs::remove_dir_all(&dir).ok();
+}
