@@ -1,7 +1,7 @@
 //! §Perf harness — the performance baseline of record (see
 //! `docs/PERFORMANCE.md` for the recorded numbers and the schema).
 //!
-//! Four sections:
+//! Sections:
 //!
 //! 1. forward-step latency of the PJRT artifacts across shape buckets;
 //! 2. backward-step (nuclear prox) per-op cost: full Jacobi SVT vs Brand
@@ -19,7 +19,11 @@
 //!    open formulation API ships;
 //! 6. durability overhead: the same throughput run with checkpointing on
 //!    (WAL fsync per commit + snapshot rotations), recorded as
-//!    `throughput_checkpointed` / `durability_overhead`.
+//!    `throughput_checkpointed` / `durability_overhead`;
+//! 7. observability overhead: the same throughput run with the JSONL
+//!    trace writer attached (every activation/commit/prox traced),
+//!    recorded as `throughput_instrumented` / `instrumentation_overhead`
+//!    — the acceptance bar is instrumented ≥ 0.95x of plain.
 //!
 //! Point `AMTL_ARTIFACTS` at an alternative artifact directory to A/B
 //! kernel variants. `--threads N` sizes the linalg pool for section 3/4.
@@ -297,6 +301,44 @@ fn main() -> anyhow::Result<()> {
             r.checkpoints_written,
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    // ---- observability overhead: same run with the JSONL trace on -------
+    println!("\n=== observability: traced run (JSONL event per activation/commit/prox) ===");
+    {
+        let mut rng = Rng::new(6);
+        let ds = synthetic::lowrank_regression(&vec![n; t_count], d, 3, 0.5, &mut rng);
+        let problem = MtlProblem::new(ds, RegularizerKind::Nuclear, 0.5, 0.5, &mut rng);
+        amtl::experiments::warm(&problem, engine, pool.as_ref())?;
+        let cfg = ExpConfig { iters, offset_units: 0.0, ..Default::default() };
+        let path =
+            std::env::temp_dir().join(format!("amtl_bench_trace_{}.jsonl", std::process::id()));
+        let trace = std::sync::Arc::new(amtl::obs::TraceWriter::create(&path)?);
+        let r = amtl::coordinator::Session::builder(&problem)
+            .engine(engine)
+            .pool(pool.as_ref())
+            .config(cfg.run_config())
+            .trace(Some(std::sync::Arc::clone(&trace)))
+            .schedule(Async)
+            .build()?
+            .run()?;
+        trace.flush();
+        let ups = r.updates as f64 / r.wall_time.as_secs_f64().max(1e-12);
+        let over = ups / results[1].max(1e-12);
+        log.record_run("throughput_instrumented", &r, problem.objective(&r.w_final));
+        log.record_kv(
+            "instrumentation_overhead",
+            &[
+                ("updates_per_sec", ups),
+                ("instrumented_over_plain", over),
+                ("mean_staleness", r.mean_staleness),
+            ],
+        );
+        println!(
+            "  instrumented {:8.1} updates/sec  ({:.2}x of the online baseline, staleness mean {:.2})",
+            ups, over, r.mean_staleness,
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     println!("bench records: {}", log.write()?.display());

@@ -6,6 +6,7 @@
 //! afterwards by [`RunResult::compute_objectives`].
 
 use crate::linalg::Mat;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -20,30 +21,56 @@ pub struct TrajectoryPoint {
     pub v: Mat,
 }
 
+/// Points held before the recorder downsamples (kept deliberately small
+/// relative to snapshot size: each point owns a full `d × T` copy of `V`).
+const DEFAULT_CAPACITY: usize = 512;
+
 /// Thread-safe trajectory recorder sampled every `every` updates.
+///
+/// Memory is **bounded**: a long run (or a small stride against a huge
+/// budget) cannot grow the point vector without limit. On reaching the
+/// capacity the recorder halves its density — every other interior point
+/// is dropped (the first and newest points always survive) and the
+/// sampling stride doubles, so the kept trajectory stays evenly spaced
+/// over the whole run instead of truncating its tail.
 pub struct Recorder {
     start: Instant,
-    every: u64,
+    every: AtomicU64,
+    cap: usize,
     points: Mutex<Vec<TrajectoryPoint>>,
     last_version: Mutex<u64>,
 }
 
 impl Recorder {
-    /// A recorder sampling every `every` updates (clamped to ≥ 1).
+    /// A recorder sampling every `every` updates (clamped to ≥ 1), with
+    /// the default capacity bound.
     pub fn new(every: u64) -> Recorder {
+        Recorder::with_capacity(every, DEFAULT_CAPACITY)
+    }
+
+    /// A recorder with an explicit capacity bound (clamped to ≥ 4 so the
+    /// first/last points and some interior always fit).
+    pub fn with_capacity(every: u64, cap: usize) -> Recorder {
         Recorder {
             start: Instant::now(),
-            every: every.max(1),
+            every: AtomicU64::new(every.max(1)),
+            cap: cap.max(4),
             points: Mutex::new(Vec::new()),
             last_version: Mutex::new(0),
         }
     }
 
+    /// The current sampling stride (doubles on each downsampling pass).
+    pub fn stride(&self) -> u64 {
+        self.every.load(Ordering::Relaxed)
+    }
+
     /// Record if `version` crossed the sampling stride since the last
     /// recorded point. `snapshot` is only invoked when recording happens.
     pub fn maybe_record(&self, version: u64, snapshot: impl FnOnce() -> Mat) {
+        let every = self.every.load(Ordering::Relaxed);
         let mut last = self.last_version.lock().unwrap();
-        if version < *last + self.every {
+        if version < *last + every {
             return;
         }
         *last = version;
@@ -53,7 +80,23 @@ impl Recorder {
             version,
             v: snapshot(),
         };
-        self.points.lock().unwrap().push(p);
+        let mut points = self.points.lock().unwrap();
+        points.push(p);
+        if points.len() >= self.cap {
+            Recorder::halve_density(&mut points);
+            self.every.store(every.saturating_mul(2), Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every other interior point, keeping the first and the newest.
+    fn halve_density(points: &mut Vec<TrajectoryPoint>) {
+        let last = points.len() - 1;
+        let mut i = 0;
+        points.retain(|_| {
+            let keep = i == 0 || i == last || i % 2 == 0;
+            i += 1;
+            keep
+        });
     }
 
     /// Unconditionally record (used at run start/end).
@@ -113,6 +156,18 @@ pub struct RunResult {
     pub compute_secs: f64,
     /// Total wall-clock nodes spent waiting on the server's backward step.
     pub backward_wait_secs: f64,
+    /// Total wall-clock nodes spent committing updates (the KM push
+    /// round-trip; includes WAL fsync when durability is on).
+    pub commit_wait_secs: f64,
+    /// Mean commit staleness τ (versions): for each applied commit, the
+    /// global updates that landed between its fetch and its apply.
+    pub mean_staleness: f64,
+    /// Median commit staleness (versions; conservative log₂-bucket edge).
+    pub staleness_p50: u64,
+    /// 99th-percentile commit staleness (versions).
+    pub staleness_p99: u64,
+    /// Largest commit staleness observed (exact).
+    pub staleness_max: u64,
     /// Snapshots the server wrote during the run (0 without durability).
     pub checkpoints_written: u64,
     /// WAL entries replayed into the server by `--resume` recovery (0 on
@@ -152,6 +207,10 @@ impl RunResult {
             self.coalesced_updates,
             self.mean_delay_secs,
         );
+        s.push_str(&format!(
+            " staleness(mean={:.2} p99={} max={})",
+            self.mean_staleness, self.staleness_p99, self.staleness_max
+        ));
         if self.checkpoints_written > 0 || self.wal_replayed > 0 {
             s.push_str(&format!(
                 " checkpoints={} wal_replayed={}",
@@ -195,6 +254,22 @@ mod tests {
     }
 
     #[test]
+    fn recorder_bounds_memory_by_stride_doubling() {
+        let r = Recorder::with_capacity(1, 8);
+        for v in 1..=1000u64 {
+            r.maybe_record(v, || Mat::zeros(1, 1));
+        }
+        let stride = r.stride();
+        assert!(stride > 1, "stride doubled under pressure: {stride}");
+        let pts = r.into_points();
+        assert!(pts.len() <= 8, "bounded at capacity, got {}", pts.len());
+        assert_eq!(pts[0].version, 1, "the first point always survives");
+        let tail = pts.last().unwrap().version;
+        assert!(tail + 2 * stride > 1000, "tail lags ≤ ~2 strides: v={tail} stride={stride}");
+        assert!(pts.windows(2).all(|w| w[0].version < w[1].version), "order preserved");
+    }
+
+    #[test]
     fn compute_objectives_applies_prox_first() {
         let mut v = Mat::zeros(1, 1);
         v.set(0, 0, 3.0);
@@ -218,6 +293,11 @@ mod tests {
             crashed_nodes: vec![],
             compute_secs: 0.0,
             backward_wait_secs: 0.0,
+            commit_wait_secs: 0.0,
+            mean_staleness: 0.0,
+            staleness_p50: 0,
+            staleness_p99: 0,
+            staleness_max: 0,
             checkpoints_written: 0,
             wal_replayed: 0,
             evicted_nodes: vec![],
@@ -253,6 +333,11 @@ mod tests {
             crashed_nodes: vec![],
             compute_secs: 0.0,
             backward_wait_secs: 0.0,
+            commit_wait_secs: 0.0,
+            mean_staleness: 0.0,
+            staleness_p50: 0,
+            staleness_p99: 0,
+            staleness_max: 0,
             checkpoints_written: 0,
             wal_replayed: 0,
             evicted_nodes: vec![],

@@ -36,11 +36,42 @@
 use super::registry::NodeRegistry;
 use super::state::SharedState;
 use crate::linalg::Mat;
+use crate::obs::{self, Histogram, TraceWriter};
 use crate::optim::formulation::{self, SharedProx};
 use crate::persist::{Checkpointer, FormulationState, ServerSnapshot, WalEntry};
+use crate::util::json::Json;
 use crate::util::RngState;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// The server's handles into the process-wide metrics registry, resolved
+/// once at construction so the commit/prox hot paths record lock-free.
+struct ServerObs {
+    /// `server.commits` — updates applied (excludes dedup'd resends).
+    commits: Arc<AtomicU64>,
+    /// `server.coalesced` — pending-slot overwrites the online SVD skipped.
+    coalesced: Arc<AtomicU64>,
+    /// `server.version` gauge — the global KM version after the last commit.
+    version: Arc<AtomicU64>,
+    /// `server.staleness` — process-wide twin of the session-local histogram.
+    staleness: Arc<Histogram>,
+    /// `server.prox_us.<reg-id>` — wall time per uncached backward step.
+    prox_us: Arc<Histogram>,
+}
+
+impl ServerObs {
+    fn resolve(reg_id: &str) -> ServerObs {
+        let g = obs::global();
+        ServerObs {
+            commits: g.counter("server.commits"),
+            coalesced: g.counter("server.coalesced"),
+            version: g.gauge("server.version"),
+            staleness: g.hist("server.staleness"),
+            prox_us: g.hist(&format!("server.prox_us.{reg_id}")),
+        }
+    }
+}
 
 /// The central node: regularizer owner and backward-step executor.
 pub struct CentralServer {
@@ -93,14 +124,30 @@ pub struct CentralServer {
     /// `prox_l21` Pallas artifact instead of the native mirror — the whole
     /// data path is then AOT-compiled kernels (see `runtime::prox_compute`).
     pjrt_prox: Option<crate::runtime::PjrtL21Prox>,
+    /// Per-column: the global version `V` was at when column `t` was last
+    /// fetched (`prox_col`). Diffed against the apply-time version to
+    /// measure each commit's staleness τ — the quantity the paper's
+    /// convergence bound is parameterized by.
+    fetch_version: Vec<AtomicU64>,
+    /// Session-local staleness histogram (in versions, not time). Kept
+    /// separate from the process-global `server.staleness` twin so one
+    /// run's summary (`RunResult`) is not polluted by a parallel run in
+    /// the same process (e.g. `cargo test`).
+    staleness: Arc<Histogram>,
+    /// Optional JSONL trace sink for commit/prox events.
+    trace: Option<Arc<TraceWriter>>,
+    /// Registry handles for the hot paths, resolved at construction.
+    obs: ServerObs,
 }
 
 impl CentralServer {
     /// A server over `state` applying `reg` with prox step `eta`.
     pub fn new(state: Arc<SharedState>, reg: Box<dyn SharedProx>, eta: f64) -> CentralServer {
         let online = reg.is_incremental();
+        let obs = ServerObs::resolve(reg.id());
         let pending = (0..state.t()).map(|_| Mutex::new(None)).collect();
         let applied_k = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
+        let fetch_version = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
         CentralServer {
             state,
             reg: Mutex::new(reg),
@@ -118,6 +165,10 @@ impl CentralServer {
             wal_replayed: AtomicU64::new(0),
             registry: None,
             pjrt_prox: None,
+            fetch_version,
+            staleness: Arc::new(Histogram::new()),
+            trace: None,
+            obs,
         }
     }
 
@@ -145,6 +196,16 @@ impl CentralServer {
     /// [`CentralServer::registry`]).
     pub fn with_registry(mut self, registry: Arc<NodeRegistry>) -> CentralServer {
         self.registry = Some(registry);
+        self
+    }
+
+    /// Attach a JSONL trace sink: every applied commit and every uncached
+    /// prox emits one event (`docs/OBSERVABILITY.md` has the schema).
+    pub fn with_trace(mut self, trace: Arc<TraceWriter>) -> CentralServer {
+        if let Some(cp) = &self.persist {
+            cp.set_trace(Arc::clone(&trace));
+        }
+        self.trace = Some(trace);
         self
     }
 
@@ -237,6 +298,14 @@ impl CentralServer {
         self.reg.lock().unwrap().refresh_drift()
     }
 
+    /// A snapshot of this server's commit-staleness histogram (in
+    /// versions): for each applied commit, the gap between the global
+    /// version its fetch saw and the version it applied at. Session-local
+    /// — unaffected by other servers in the same process.
+    pub fn staleness_snapshot(&self) -> crate::obs::HistSnapshot {
+        self.staleness.snapshot()
+    }
+
     /// The full backward step `Prox_{ηλg}(V̂)` over a fresh-enough snapshot.
     pub fn prox_matrix(&self) -> Arc<Mat> {
         let version = self.state.version();
@@ -285,6 +354,7 @@ impl CentralServer {
     /// column-lock sweep when refreshing or running an exact prox.
     /// Shared by the live fetch path and WAL replay.
     fn prox_fold_and_compute(&self) -> Mat {
+        let started = Instant::now();
         let mut reg = self.reg.lock().unwrap();
         self.drain_pending(&mut **reg);
         if reg.needs_refresh() {
@@ -311,6 +381,10 @@ impl CentralServer {
             snap
         };
         self.prox_count.fetch_add(1, Ordering::Relaxed);
+        self.obs.prox_us.record(started.elapsed().as_micros() as u64);
+        if let Some(tr) = &self.trace {
+            tr.event("prox", None, None, Some(self.state.version()), &[]);
+        }
         out
     }
 
@@ -334,7 +408,10 @@ impl CentralServer {
     }
 
     /// `(Prox_{ηλg}(V̂))_t` — what an activated task node retrieves.
+    /// Remembers the version the fetch saw, so the column's next commit
+    /// can report its staleness.
     pub fn prox_col(&self, t: usize) -> Vec<f64> {
+        self.fetch_version[t].store(self.state.version(), Ordering::Relaxed);
         self.prox_matrix().col(t).to_vec()
     }
 
@@ -349,6 +426,7 @@ impl CentralServer {
         let mut slot = self.pending[t].lock().unwrap();
         if slot.replace(col.to_vec()).is_some() {
             self.coalesced.fetch_add(1, Ordering::Relaxed);
+            self.obs.coalesced.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -375,8 +453,8 @@ impl CentralServer {
             // Duplicate of an applied activation: acknowledge, don't apply.
             return Ok(self.state.version());
         }
-        match &self.persist {
-            None => Ok(self.apply_commit(t, k, u, step)),
+        let version = match &self.persist {
+            None => self.apply_commit(t, k, u, step),
             Some(cp) => {
                 let version = {
                     let _quiesce = cp.commit_gate();
@@ -388,13 +466,40 @@ impl CentralServer {
                 // work. Warn and keep serving — the WAL keeps growing and
                 // the rotation retries on the next commit.
                 if let Err(e) = cp.maybe_snapshot(self) {
-                    eprintln!(
-                        "warning: checkpoint rotation failed ({e:#}); \
+                    crate::log_warn!(
+                        "server",
+                        "checkpoint rotation failed ({e:#}); \
                          continuing on the write-ahead log"
                     );
                 }
-                Ok(version)
+                version
             }
+        };
+        self.note_commit(t, k, version);
+        Ok(version)
+    }
+
+    /// Observability for one *live* applied commit (WAL replay bypasses
+    /// this — replayed commits have no fetch to be stale against): the
+    /// staleness measurement, counters, and the trace event.
+    fn note_commit(&self, t: usize, k: u64, version: u64) {
+        // Staleness τ: KM updates that landed globally between this
+        // column's fetch and this commit's apply. `version` already
+        // counts this commit itself, hence the −1.
+        let fetched = self.fetch_version[t].load(Ordering::Relaxed);
+        let staleness = version.saturating_sub(1).saturating_sub(fetched);
+        self.staleness.record(staleness);
+        self.obs.staleness.record(staleness);
+        self.obs.commits.fetch_add(1, Ordering::Relaxed);
+        self.obs.version.store(version, Ordering::Relaxed);
+        if let Some(tr) = &self.trace {
+            tr.event(
+                "commit",
+                Some(t),
+                Some(k),
+                Some(version),
+                &[("staleness", Json::Num(staleness as f64))],
+            );
         }
     }
 
@@ -480,6 +585,8 @@ impl CentralServer {
         let state = Arc::new(SharedState::restore(&snap.v, &snap.col_versions, snap.version));
         let reg = formulation::restore(&snap.reg.id, &snap.reg.blob)?;
         let online = reg.is_incremental();
+        let obs = ServerObs::resolve(reg.id());
+        let fetch_version = (0..snap.col_versions.len()).map(|_| AtomicU64::new(0)).collect();
         Ok(CentralServer {
             state,
             reg: Mutex::new(reg),
@@ -497,6 +604,10 @@ impl CentralServer {
             wal_replayed: AtomicU64::new(0),
             registry: None,
             pjrt_prox: None,
+            fetch_version,
+            staleness: Arc::new(Histogram::new()),
+            trace: None,
+            obs,
         })
     }
 

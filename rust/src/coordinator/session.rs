@@ -33,6 +33,7 @@ use super::state::SharedState;
 use super::step_size::{KmSchedule, StepController};
 use super::worker::{TrajectorySink, WorkerCtx};
 use crate::net::{DelayModel, FaultModel};
+use crate::obs::TraceWriter;
 use crate::optim::formulation::SharedProx;
 use crate::optim::svd::SvdMode;
 use crate::persist::{Checkpointer, PersistConfig};
@@ -94,6 +95,9 @@ pub struct RunConfig {
     /// [`HEARTBEAT_TIMEOUT_FACTOR`] intervals are evicted. `None` =
     /// membership disabled.
     pub heartbeat: Option<Duration>,
+    /// When set, the run appends one JSONL event per activation, commit,
+    /// prox, checkpoint, and eviction to this writer (`--trace-out`).
+    pub trace: Option<Arc<TraceWriter>>,
 }
 
 impl Default for RunConfig {
@@ -116,6 +120,7 @@ impl Default for RunConfig {
             checkpoint_every: crate::persist::DEFAULT_SNAPSHOT_EVERY,
             resume: false,
             heartbeat: None,
+            trace: None,
         }
     }
 }
@@ -212,10 +217,23 @@ impl RunConfig {
             server
         };
         if let Some(interval) = self.heartbeat {
-            server = server.with_registry(Arc::new(NodeRegistry::new(
+            let registry = Arc::new(NodeRegistry::new(
                 problem.t(),
                 interval * HEARTBEAT_TIMEOUT_FACTOR,
-            )));
+            ));
+            // Observability rides the same callback path the schedules use,
+            // so every eviction is counted and traced no matter who sweeps.
+            let trace = self.trace.clone();
+            registry.on_evict(move |t| {
+                crate::obs::global().inc("registry.evictions", 1);
+                if let Some(tr) = &trace {
+                    tr.event("eviction", Some(t), None, None, &[]);
+                }
+            });
+            server = server.with_registry(registry);
+        }
+        if let Some(tr) = &self.trace {
+            server = server.with_trace(Arc::clone(tr));
         }
         let server = Arc::new(server);
         let state = Arc::clone(server.state());
@@ -435,6 +453,14 @@ impl<'p> SessionBuilder<'p> {
         self
     }
 
+    /// Per-run JSONL trace writer (`None` disables; the default). When
+    /// set, every activation, commit, prox, checkpoint, and eviction
+    /// appends one event line (see `docs/OBSERVABILITY.md`).
+    pub fn trace(mut self, trace: Option<Arc<TraceWriter>>) -> Self {
+        self.cfg.trace = trace;
+        self
+    }
+
     /// How workers reach the central server (default
     /// [`TransportKind::InProc`]). [`TransportKind::Tcp`] spawns a
     /// loopback TCP server around the session's central server and routes
@@ -575,6 +601,7 @@ impl<'p> Session<'p> {
         };
         let recorder = Arc::try_unwrap(recorder)
             .map_err(|_| anyhow::anyhow!("recorder still referenced"))?;
+        let stale = server.staleness_snapshot();
         Ok(RunResult {
             method: self.schedule.name().into(),
             wall_time,
@@ -596,6 +623,11 @@ impl<'p> Session<'p> {
                 .collect(),
             compute_secs: stats.iter().map(|s| s.compute_secs).sum(),
             backward_wait_secs: stats.iter().map(|s| s.backward_wait_secs).sum(),
+            commit_wait_secs: stats.iter().map(|s| s.commit_wait_secs).sum(),
+            mean_staleness: stale.mean(),
+            staleness_p50: stale.quantile(0.5),
+            staleness_p99: stale.quantile(0.99),
+            staleness_max: stale.max,
             checkpoints_written: server.checkpoints_written(),
             wal_replayed: server.wal_replayed(),
             evicted_nodes: server.registry().map(|r| r.evicted_nodes()).unwrap_or_default(),
@@ -700,6 +732,7 @@ impl<'r> Orchestrator<'r> {
                     gate: None,
                     heartbeat: self.cfg.heartbeat,
                     resume: self.cfg.resume,
+                    trace: self.cfg.trace.clone(),
                 })
             })
             .collect()

@@ -22,12 +22,36 @@ use super::schedule::StalenessGate;
 use super::state::SharedState;
 use super::step_size::StepController;
 use crate::net::{DelayModel, FaultModel, FaultOutcome};
+use crate::obs::{self, Histogram, TraceWriter};
 use crate::runtime::TaskCompute;
 use crate::transport::Transport;
+use crate::util::json::Json;
 use crate::util::Rng;
 use anyhow::Result;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
+
+/// The worker side's histogram handles (`node.*`, all µs), resolved once
+/// per process so the activation loop records lock-free.
+struct NodeObs {
+    delay_us: Arc<Histogram>,
+    fetch_us: Arc<Histogram>,
+    step_us: Arc<Histogram>,
+    commit_us: Arc<Histogram>,
+}
+
+fn node_obs() -> &'static NodeObs {
+    static OBS: OnceLock<NodeObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let g = obs::global();
+        NodeObs {
+            delay_us: g.hist("node.delay_us"),
+            fetch_us: g.hist("node.fetch_us"),
+            step_us: g.hist("node.step_us"),
+            commit_us: g.hist("node.commit_us"),
+        }
+    })
+}
 
 /// Trajectory sampling wiring: the run's recorder plus the locally-held
 /// model state it snapshots. Present when the state is co-located with the
@@ -83,6 +107,9 @@ pub struct WorkerCtx {
     /// has applied for this column (reported by `Register`) instead of
     /// redoing them.
     pub resume: bool,
+    /// When set, every activation appends one JSONL trace event carrying
+    /// its delay/fetch/compute timing split (`--trace-out`).
+    pub trace: Option<Arc<TraceWriter>>,
 }
 
 /// Per-worker outcome.
@@ -101,6 +128,9 @@ pub struct WorkerStats {
     /// Wall-clock spent waiting on the server's backward step (over TCP
     /// this includes the real network round-trip).
     pub backward_wait_secs: f64,
+    /// Wall-clock spent committing updates (the KM push round-trip; over
+    /// TCP this includes the WAL fsync the server performs before acking).
+    pub commit_wait_secs: f64,
     /// Objective values of `ℓ_t` observed at each forward step (free —
     /// the fused kernels return them).
     pub last_task_loss: f64,
@@ -183,13 +213,17 @@ pub(crate) fn run_activation(
         sleep_heartbeating(ctx, sample.duration);
     }
     stats.total_delay_secs += sample.duration.as_secs_f64();
+    let delay_us = sample.duration.as_micros() as u64;
+    node_obs().delay_us.record(delay_us);
     let units = sample.duration.as_secs_f64() / ctx.time_scale.as_secs_f64().max(1e-12);
     ctx.controller.record_delay(ctx.t, units);
 
     // 2. Backward step block (server prox column over the transport).
     let t0 = Instant::now();
     let w_hat = fetch_w(ctx.transport.as_mut())?;
+    let fetch_us = t0.elapsed().as_micros() as u64;
     stats.backward_wait_secs += t0.elapsed().as_secs_f64();
+    node_obs().fetch_us.record(fetch_us);
 
     // 3. Forward step on the task's private data.
     let eta = ctx.transport.eta();
@@ -198,8 +232,23 @@ pub(crate) fn run_activation(
         Some(frac) => compute.step_minibatch(&w_hat, eta, frac, &mut ctx.rng)?,
         None => compute.step(&w_hat, eta)?,
     };
+    let step_us = t1.elapsed().as_micros() as u64;
     stats.compute_secs += t1.elapsed().as_secs_f64();
+    node_obs().step_us.record(step_us);
     stats.last_task_loss = task_loss;
+    if let Some(tr) = &ctx.trace {
+        tr.event(
+            "activation",
+            Some(ctx.t),
+            Some(k),
+            None,
+            &[
+                ("delay_us", Json::Num(delay_us as f64)),
+                ("fetch_us", Json::Num(fetch_us as f64)),
+                ("step_us", Json::Num(step_us as f64)),
+            ],
+        );
+    }
 
     // 3b. Lost in transit? The compute happened but the server never
     // sees it (the paper's failure mode; the next activation retries).
@@ -288,7 +337,10 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
                 // transport (shared memory or the wire). `k` is the dedup
                 // key that makes transport resends exactly-once.
                 let step = ctx.controller.step(ctx.t);
+                let t2 = Instant::now();
                 let version = ctx.transport.push_update(ctx.t, k as u64, step, &u)?;
+                stats.commit_wait_secs += t2.elapsed().as_secs_f64();
+                node_obs().commit_us.record(t2.elapsed().as_micros() as u64);
                 stats.updates += 1;
                 if let Some(sink) = &ctx.sink {
                     sink.record(version);
@@ -357,6 +409,7 @@ mod tests {
             gate: None,
             heartbeat: None,
             resume: false,
+            trace: None,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert_eq!(stats.updates, 7);
@@ -383,6 +436,7 @@ mod tests {
             gate: None,
             heartbeat: None,
             resume: false,
+            trace: None,
         };
         run_worker(ctx, &mut compute).unwrap();
         let w1 = server.prox_col(0);
@@ -415,6 +469,7 @@ mod tests {
             gate: None,
             heartbeat: None,
             resume: false,
+            trace: None,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert!((stats.total_delay_secs - 0.06).abs() < 0.02);

@@ -123,8 +123,9 @@ pub fn auto_engine(executors: usize) -> (Engine, Option<ComputePool>) {
     match ComputePool::new(PoolConfig { executors, artifacts_dir: dir.clone() }) {
         Ok(pool) => (Engine::Pjrt, Some(pool)),
         Err(e) => {
-            eprintln!(
-                "note: PJRT artifacts unavailable ({e}); using native engine \
+            crate::log_warn!(
+                "experiments",
+                "PJRT artifacts unavailable ({e}); using native engine \
                  (run `make artifacts` for the full three-layer path)"
             );
             (Engine::Native, None)

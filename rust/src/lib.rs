@@ -83,6 +83,19 @@
 //!   and stops gating every schedule, and a restarted node rejoins and
 //!   catches up from its applied-commit horizon.
 //!
+//! ## Observability
+//!
+//! Every layer reports into one std-only observability subsystem
+//! ([`obs`], `docs/OBSERVABILITY.md`): a process-wide
+//! [`obs::MetricsRegistry`] of named counters/gauges/log₂ histograms
+//! (activation timing splits, commit staleness, prox/WAL/checkpoint
+//! latencies, transport retries, replica lag), a leveled logger behind
+//! the `log_error!` .. `log_trace!` macros (`--log-level` / `AMTL_LOG`),
+//! and an opt-in per-run JSONL trace (`--trace-out`). The registry is
+//! exported over the wire by the `FetchMetrics → MetricsReport` frame
+//! pair — answered by both the trainer and the replica — and rendered
+//! live by `amtl top --connect <addr>`.
+//!
 //! ## The serving tier
 //!
 //! Trained models answer queries without touching the training hot path
@@ -104,6 +117,7 @@ pub mod experiments;
 pub mod data;
 pub mod linalg;
 pub mod net;
+pub mod obs;
 pub mod optim;
 pub mod persist;
 pub mod runtime;

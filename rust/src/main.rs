@@ -47,12 +47,15 @@ use amtl::coordinator::worker::{run_worker, WorkerCtx};
 use amtl::coordinator::{schedule_from_cli, Async, MtlProblem, Schedule, Session, Synchronized};
 use amtl::data::{public, synthetic, MultiTaskDataset};
 use amtl::net::{DelayModel, FaultModel};
+use amtl::obs::TraceWriter;
 use amtl::optim::coupling::TaskGraph;
 use amtl::optim::svd::SvdMode;
 use amtl::optim::FormulationSpec;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
 use amtl::serve::{ModelReplica, PredictClient, ReplicaServer};
+use amtl::transport::wire::MetricsReport;
 use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
+use amtl::util::json::Json;
 use amtl::util::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
 use std::sync::Arc;
@@ -62,17 +65,20 @@ fn main() {
     let opts = match Opts::from_env() {
         Ok(o) => o,
         Err(e) => {
-            eprintln!("error: {e}");
+            amtl::log_error!("cli", "{e}");
             std::process::exit(2);
         }
     };
     if let Err(e) = run(&opts) {
-        eprintln!("error: {e:#}");
+        amtl::log_error!("cli", "{e:#}");
         std::process::exit(1);
     }
 }
 
 fn run(opts: &Opts) -> Result<()> {
+    // Logging first, so everything downstream (including option errors)
+    // is filtered consistently: --log-level, then AMTL_LOG, then warn.
+    amtl::obs::log::init(opts.get("log-level")).map_err(|e| anyhow!("{e}"))?;
     // Size the linalg worker pool before any kernel runs (the count is
     // frozen at first use). 0 = PALLAS_THREADS env var, else all cores.
     let threads = opts.get_usize("threads", 0)?;
@@ -100,6 +106,7 @@ fn run(opts: &Opts) -> Result<()> {
     match cmd {
         "train" => cmd_train(opts),
         "predict" => cmd_predict(opts),
+        "top" => cmd_top(opts),
         "compare" => cmd_compare(opts),
         "datasets" => cmd_datasets(opts),
         "artifacts" => cmd_artifacts(opts),
@@ -122,6 +129,7 @@ USAGE: amtl <command> [options]
 COMMANDS:
   train       run one optimization (default method: amtl)
   predict     query a read replica (see SERVING TIER below)
+  top         live metrics dashboard for a trainer or replica
   compare     run AMTL and SMTL under identical network settings
   datasets    describe the built-in dataset simulators
   artifacts   validate the AOT artifact manifest
@@ -218,6 +226,22 @@ DURABILITY & MEMBERSHIP (train + distributed modes):
   --heartbeat-ms MS    elastic membership: nodes heartbeat every MS ms
                        and are evicted after 3 missed intervals (0 = off)
                        [0]
+
+OBSERVABILITY (full metric/trace reference: docs/OBSERVABILITY.md):
+  --log-level L        stderr diagnostics filter:
+                       error|warn|info|debug|trace (AMTL_LOG env var is
+                       the fallback)                          [warn]
+  --trace-out PATH     append one JSONL event per activation, commit,
+                       prox, checkpoint, and eviction to PATH
+                       (train, --serve, --node)
+  top --connect ADDR   poll FetchMetrics on a trainer (--serve) or
+                       replica address and render a live dashboard:
+                       updates/sec, commit staleness p50/p99, per-layer
+                       latency histograms, counters
+  top --once           print one snapshot and exit (no screen clearing)
+  top --json           machine-readable snapshots (one JSON per poll)
+  top --interval-ms MS poll interval                          [1000]
+  top --timeout-ms MS  connect/read/write timeout             [5000]
 ";
 
 /// Assemble the dataset from CLI options.
@@ -273,6 +297,7 @@ struct RunOpts {
     checkpoint_every: u64,
     resume: bool,
     heartbeat: Option<Duration>,
+    trace: Option<Arc<TraceWriter>>,
 }
 
 fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
@@ -323,6 +348,12 @@ fn run_opts(opts: &Opts, t: usize) -> Result<RunOpts> {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         },
+        trace: match opts.get("trace-out") {
+            Some(path) => {
+                Some(Arc::new(TraceWriter::create(std::path::Path::new(path))?))
+            }
+            None => None,
+        },
     })
 }
 
@@ -351,6 +382,7 @@ fn session<'p>(
         .checkpoint_every(ro.checkpoint_every)
         .resume(ro.resume)
         .heartbeat(ro.heartbeat)
+        .trace(ro.trace.clone())
         .paper_offset(ro.offset)
         .transport(ro.transport)
         .schedule_box(schedule)
@@ -464,6 +496,7 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         checkpoint_every: ro.checkpoint_every,
         resume: ro.resume,
         heartbeat: ro.heartbeat,
+        trace: ro.trace.clone(),
         ..Default::default()
     };
     let (state, server, recorder) = cfg.build_server(&problem)?;
@@ -660,6 +693,7 @@ fn cmd_node(opts: &Opts) -> Result<()> {
         // has (a restarted node catches up instead of redoing work).
         heartbeat: ro.heartbeat,
         resume: ro.resume,
+        trace: ro.trace.clone(),
     };
     let stats = run_worker(ctx, compute.as_mut())?;
     println!(
@@ -774,6 +808,131 @@ fn cmd_predict(opts: &Opts) -> Result<()> {
     let (y, model_seq) = client.predict(task, &x)?;
     println!("task {task}: yhat = {y:.6}  (model seq {model_seq})");
     client.close()
+}
+
+/// `top --connect <addr>`: poll `FetchMetrics` on a trainer (`--serve`)
+/// or replica endpoint and render a live dashboard — updates/sec, commit
+/// staleness quantiles, per-layer latency histograms, and every counter
+/// and gauge the process registered. `--once` prints a single snapshot;
+/// `--json` emits one machine-readable JSON object per poll instead.
+fn cmd_top(opts: &Opts) -> Result<()> {
+    let addr = opts.require("connect").map_err(|e| anyhow!("{e}"))?;
+    let once = opts.flag("once");
+    let json = opts.flag("json");
+    let interval = Duration::from_millis(opts.get_u64("interval-ms", 1000)?.max(50));
+    let timeout = Duration::from_millis(opts.get_u64("timeout-ms", 5000)?.max(1));
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    // The predict client is just a framed request/response socket; both
+    // the trainer and the replica answer FetchMetrics on it.
+    let mut client = PredictClient::connect(addr.as_str(), timeout)?;
+    let mut prev: Option<(std::time::Instant, u64)> = None;
+    loop {
+        let report = client.metrics()?;
+        let now = std::time::Instant::now();
+        let commits = report.counter("server.commits").unwrap_or(0);
+        // Updates/sec from the commit delta between polls; the first
+        // frame falls back to the process-lifetime average.
+        let rate = match prev {
+            Some((at, last)) => {
+                commits.saturating_sub(last) as f64 / now.duration_since(at).as_secs_f64().max(1e-9)
+            }
+            None => commits as f64 / (report.uptime_ms as f64 / 1000.0).max(1e-9),
+        };
+        prev = Some((now, commits));
+        if json {
+            println!("{}", report_json(&report));
+        } else {
+            if !once {
+                // ANSI clear + home: redraw in place like top(1).
+                print!("\x1b[2J\x1b[H");
+            }
+            render_top(&addr, &report, rate);
+        }
+        if once {
+            break;
+        }
+        std::thread::sleep(interval);
+    }
+    client.close()
+}
+
+/// One dashboard frame for `amtl top`.
+fn render_top(addr: &str, r: &MetricsReport, updates_per_sec: f64) {
+    println!(
+        "amtl top — {} @ {addr}  up {:.1}s  updates/sec {updates_per_sec:.1}",
+        r.role_name(),
+        r.uptime_ms as f64 / 1000.0,
+    );
+    if let Some(h) = r.hist("server.staleness") {
+        println!(
+            "staleness (versions): p50 {}  p99 {}  max {}  mean {:.2}  ({} commits)",
+            h.quantile(0.5),
+            h.quantile(0.99),
+            h.max,
+            h.mean(),
+            h.count(),
+        );
+    }
+    if !r.hists.is_empty() {
+        println!("histograms (count / p50 / p99 / max):");
+        for (name, h) in &r.hists {
+            if name == "server.staleness" {
+                continue; // already summarized above
+            }
+            println!(
+                "  {name:<28} {:>9} / {:>8} / {:>8} / {:>8}",
+                h.count(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.max,
+            );
+        }
+    }
+    if !r.counters.is_empty() {
+        println!("counters:");
+        for (name, v) in &r.counters {
+            println!("  {name:<28} {v:>12}");
+        }
+    }
+    if !r.gauges.is_empty() {
+        println!("gauges:");
+        for (name, v) in &r.gauges {
+            println!("  {name:<28} {v:>12}");
+        }
+    }
+}
+
+/// Machine-readable form of one metrics frame (`top --json`).
+fn report_json(r: &MetricsReport) -> String {
+    let counters: Vec<(&str, Json)> =
+        r.counters.iter().map(|(k, v)| (k.as_str(), Json::Num(*v as f64))).collect();
+    let gauges: Vec<(&str, Json)> =
+        r.gauges.iter().map(|(k, v)| (k.as_str(), Json::Num(*v as f64))).collect();
+    let hists: Vec<(&str, Json)> = r
+        .hists
+        .iter()
+        .map(|(k, h)| {
+            (
+                k.as_str(),
+                Json::obj(vec![
+                    ("count", Json::Num(h.count() as f64)),
+                    ("mean", Json::Num(h.mean())),
+                    ("p50", Json::Num(h.quantile(0.5) as f64)),
+                    ("p99", Json::Num(h.quantile(0.99) as f64)),
+                    ("max", Json::Num(h.max as f64)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("role", Json::Str(r.role_name().to_string())),
+        ("uptime_ms", Json::Num(r.uptime_ms as f64)),
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+        ("hists", Json::obj(hists)),
+    ])
+    .to_string()
 }
 
 fn cmd_datasets(opts: &Opts) -> Result<()> {

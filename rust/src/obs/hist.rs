@@ -1,0 +1,333 @@
+//! Lock-free log₂ histograms, generalized from the serving tier's
+//! latency histogram so every layer (workers, server, WAL, transport,
+//! replica) shares one implementation with `merge` and snapshot
+//! iteration.
+//!
+//! Recording is one relaxed `fetch_add` per bucket plus a `fetch_max`
+//! and a sum accumulation — cheap enough for per-activation hot paths.
+//! A sample lands in the bucket of its bit length, so bucket `i` (for
+//! `i >= 1`) covers `[2^(i-1), 2^i - 1]` and bucket 0 holds exactly the
+//! zeros. Quantiles return the upper edge of the hit bucket clamped to
+//! the recorded maximum: never below the true value and at most 2x
+//! above it, at every magnitude up to `u64::MAX` (which is why there
+//! are 65 buckets, not 64 — values at or above `2^63` get their own
+//! bucket instead of being folded into the one below).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ buckets: one per `u64` bit length (0 through 64).
+pub const BUCKETS: usize = 65;
+
+/// Inclusive upper edge of bucket `idx`.
+fn upper_edge(idx: usize) -> u64 {
+    if idx == 0 {
+        0
+    } else if idx >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << idx) - 1
+    }
+}
+
+/// A lock-free base-2 histogram of `u64` samples. The unit (µs,
+/// versions, bytes) is the caller's; `docs/OBSERVABILITY.md` tabulates
+/// the unit of every registered metric.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    max: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            max: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket a sample lands in: its bit length.
+    fn bucket_index(v: u64) -> usize {
+        (u64::BITS - v.leading_zeros()) as usize
+    }
+
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Mean of the recorded samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        self.snapshot().mean()
+    }
+
+    /// Conservative quantile `q` in `[0, 1]`: the upper edge of the
+    /// bucket holding the rank-`q` sample, clamped to the recorded max
+    /// (so it is never below the true value and at most 2x above it).
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.max.fetch_max(other.max(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy for reporting and wire serialization.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            max: self.max(),
+            sum: self.sum(),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram(n={}, max={})", self.count(), self.max())
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`]: dense bucket counts plus
+/// the max/sum accumulators, with the same derived statistics.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// `counts[i]` holds the samples of bit length `i`.
+    pub counts: [u64; BUCKETS],
+    /// Largest recorded sample.
+    pub max: u64,
+    /// Sum of all recorded samples.
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// A snapshot with no samples.
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { counts: [0; BUCKETS], max: 0, sum: 0 }
+    }
+
+    /// Total number of samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// True when no samples were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Mean sample (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Conservative quantile (same contract as [`Histogram::quantile`]).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return upper_edge(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The non-empty buckets as `(bucket index, count)` pairs — the
+    /// sparse form the wire encoding ships.
+    pub fn nonzero(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(|(i, &c)| (i, c))
+    }
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot::empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use std::sync::Arc;
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn zero_and_one_bucket_exactly() {
+        let h = Histogram::new();
+        h.record(0);
+        h.record(0);
+        h.record(1);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.5), 0); // rank 2 of [0,0,1]
+        assert_eq!(h.quantile(1.0), 1);
+        assert_eq!(h.max(), 1);
+    }
+
+    #[test]
+    fn u64_edge_buckets_hold_the_two_times_bound() {
+        // The extremes that used to share a 64-bucket top bin: values at
+        // and above 2^63 get bucket 64 to themselves, so the quantile
+        // bound q <= 2x true value survives at the edge of u64.
+        for v in [u64::MAX, 1u64 << 63, (1u64 << 63) - 1, (1u64 << 62) + 1] {
+            let h = Histogram::new();
+            h.record(v);
+            let q = h.quantile(1.0);
+            assert!(q >= v, "quantile {q} under true value {v}");
+            assert!(q as u128 <= 2 * v as u128, "quantile {q} over 2x of {v}");
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.max(), 3999);
+    }
+
+    #[test]
+    fn snapshot_matches_live_statistics() {
+        let h = Histogram::new();
+        for v in [3u64, 17, 120, 4096, 0] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), h.count());
+        assert_eq!(s.max, h.max());
+        assert_eq!(s.sum, h.sum());
+        assert_eq!(s.quantile(0.5), h.quantile(0.5));
+        assert_eq!(s.nonzero().map(|(_, c)| c).sum::<u64>(), 5);
+    }
+
+    #[test]
+    fn prop_merge_equals_concatenated_recording() {
+        forall(
+            "hist merge == concatenated recording",
+            150,
+            |g| {
+                let n = g.usize_in(0, 40);
+                let m = g.usize_in(0, 40);
+                let a: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 1e12)).collect();
+                let b: Vec<f64> = (0..m).map(|_| g.f64_in(0.0, 1e12)).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let (ha, hb, hcat) = (Histogram::new(), Histogram::new(), Histogram::new());
+                for &x in a {
+                    ha.record(x as u64);
+                    hcat.record(x as u64);
+                }
+                for &x in b {
+                    hb.record(x as u64);
+                    hcat.record(x as u64);
+                }
+                ha.merge(&hb);
+                ha.snapshot() == hcat.snapshot()
+                    && ha.quantile(0.5) == hcat.quantile(0.5)
+                    && ha.quantile(0.99) == hcat.quantile(0.99)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_quantile_upper_edge_within_2x_of_true_value() {
+        forall(
+            "hist quantile in [true, 2x true]",
+            150,
+            |g| {
+                let n = g.usize_in(1, 60).max(1);
+                let q = g.f64_in(0.01, 1.0);
+                let xs: Vec<f64> =
+                    (0..n).map(|_| g.f64_in(0.0, 1e15).powf(g.f64_in(0.3, 1.0))).collect();
+                (xs, q)
+            },
+            |(xs, q)| {
+                let xs: Vec<u64> = xs.iter().map(|&x| x as u64).collect();
+                if xs.is_empty() {
+                    return true;
+                }
+                let h = Histogram::new();
+                for &x in &xs {
+                    h.record(x);
+                }
+                let mut sorted = xs.clone();
+                sorted.sort_unstable();
+                let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+                let truth = sorted[rank - 1];
+                let got = h.quantile(*q);
+                got >= truth && got as u128 <= (2 * truth as u128).max(1)
+            },
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Leveled, target-prefixed structured logging to stderr, timestamped
+//! against a process-wide monotonic run clock.
+//!
+//! The filter is set once at startup from `--log-level` (CLI) falling
+//! back to the `AMTL_LOG` environment variable, then `warn`. Every
+//! diagnostic in `rust/src/` goes through the `log_*!` macros (CI greps
+//! for raw `eprintln!` outside this module); user-facing CLI output in
+//! `main.rs` and the examples stays on stdout.
+//!
+//! ```text
+//! [   12.345s WARN  persist] snapshot 000042 unreadable; falling back
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log verbosity, ordered from most to least severe.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    /// The run cannot proceed as asked (mirrors fatal error paths).
+    Error = 0,
+    /// Something degraded but the run continues (the default filter).
+    Warn = 1,
+    /// Lifecycle milestones: connections, checkpoints, evictions.
+    Info = 2,
+    /// Per-component diagnostics useful when debugging a run.
+    Debug = 3,
+    /// Per-activation firehose; pair with `--trace-out` for analysis.
+    Trace = 4,
+}
+
+impl Level {
+    /// Parse a level name (case-insensitive); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// The lowercase level name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+static CLOCK: OnceLock<Instant> = OnceLock::new();
+
+/// Seconds on the monotonic run clock (started at first logger or
+/// metrics use in this process).
+pub fn run_clock_secs() -> f64 {
+    CLOCK.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Milliseconds on the monotonic run clock (the `uptime_ms` every
+/// `MetricsReport` carries).
+pub fn uptime_ms() -> u64 {
+    CLOCK.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Set the maximum emitted level (also starts the run clock).
+pub fn set_level(level: Level) {
+    CLOCK.get_or_init(Instant::now);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current maximum emitted level.
+pub fn max_level() -> Level {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// True when a record at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Initialize the filter: an explicit CLI value (`--log-level`) wins,
+/// then the `AMTL_LOG` environment variable, then `warn`. Errors name
+/// the accepted levels.
+pub fn init(cli: Option<&str>) -> Result<(), String> {
+    let source = match cli {
+        Some(v) => Some(v.to_string()),
+        None => std::env::var("AMTL_LOG").ok(),
+    };
+    let level = match source {
+        None => Level::Warn,
+        Some(v) => Level::parse(&v)
+            .ok_or_else(|| format!("bad log level '{v}' (error|warn|info|debug|trace)"))?,
+    };
+    set_level(level);
+    Ok(())
+}
+
+/// Emit one record (macro backend — call through the `log_*!` macros,
+/// which skip formatting entirely when the level is filtered out).
+pub fn emit(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    eprintln!("[{:10.3}s {} {}] {}", run_clock_secs(), level.tag(), target, args);
+}
+
+/// Log at `error` level: `log_error!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Error, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `warn` level: `log_warn!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Warn, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `info` level: `log_info!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Info, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `debug` level: `log_debug!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Debug, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// Log at `trace` level: `log_trace!("target", "fmt {}", args)`.
+#[macro_export]
+macro_rules! log_trace {
+    ($target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Trace) {
+            $crate::obs::log::emit(
+                $crate::obs::log::Level::Trace, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_level_name() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("Info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("trace"), Some(Level::Trace));
+        assert_eq!(Level::parse("loud"), None);
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug, Level::Trace] {
+            assert_eq!(Level::parse(l.name()), Some(l));
+        }
+    }
+
+    #[test]
+    fn severity_ordering_gates_levels() {
+        // Process-global state: assert the ordering relation rather than
+        // mutating the shared filter (tests run multithreaded).
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+        // Whatever the filter is, error is at least as enabled as trace.
+        assert!(enabled(Level::Error) || !enabled(Level::Trace));
+    }
+
+    #[test]
+    fn init_rejects_garbage_levels() {
+        let err = init(Some("loud")).unwrap_err();
+        assert!(err.contains("error|warn|info|debug|trace"), "{err}");
+    }
+
+    #[test]
+    fn run_clock_is_monotonic() {
+        let a = run_clock_secs();
+        let b = run_clock_secs();
+        assert!(b >= a);
+        let _ = uptime_ms();
+    }
+}

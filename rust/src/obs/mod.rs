@@ -1,0 +1,30 @@
+//! Unified observability: metrics registry, leveled logging, and
+//! per-run JSONL tracing.
+//!
+//! Three pieces, designed to stay std-only:
+//!
+//! * [`registry`] — a process-wide [`MetricsRegistry`] of named atomic
+//!   counters/gauges and log₂ [`Histogram`]s ([`hist`]), reported into
+//!   by every layer (workers, central server, WAL, transport, replica)
+//!   and dumped over the wire by the `FetchMetrics → MetricsReport`
+//!   frame pair that `amtl top` polls.
+//! * [`log`] — a leveled, target-prefixed logger (`--log-level` /
+//!   `AMTL_LOG`, default `warn`) behind the crate-level `log_error!` ..
+//!   `log_trace!` macros; all diagnostics in `rust/src/` route through
+//!   it (CI rejects raw `eprintln!` outside this module).
+//! * [`trace`] — an opt-in (`--trace-out <path>`) JSONL event stream:
+//!   one line per activation/commit/prox/checkpoint/eviction with node
+//!   id, activation counter `k`, and server version, for offline
+//!   staleness/delay timeline reconstruction.
+//!
+//! Metric names, units, and the trace schema are tabulated in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod hist;
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use hist::{HistSnapshot, Histogram};
+pub use registry::{global, MetricsRegistry, MetricsSnapshot};
+pub use trace::TraceWriter;

@@ -1,0 +1,155 @@
+//! A process-wide registry of named atomic counters, gauges, and log₂
+//! histograms — every layer reports into [`global()`], and the
+//! `FetchMetrics` wire frame snapshots it for `amtl top`.
+//!
+//! Names are dotted paths (`server.commits`, `wal.fsync_us`); the full
+//! table with units lives in `docs/OBSERVABILITY.md`. Lookup takes a
+//! short mutex, so hot paths should resolve their `Arc` handle once
+//! (e.g. at construction) and record through it lock-free.
+
+use super::hist::{HistSnapshot, Histogram};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A named collection of counters (monotonic), gauges (last-write), and
+/// histograms (log₂ buckets).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The shared counter named `name`, created at zero on first use.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.counters.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Add `delta` to the counter named `name`.
+    pub fn inc(&self, name: &str, delta: u64) {
+        self.counter(name).fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// The shared gauge named `name`, created at zero on first use.
+    pub fn gauge(&self, name: &str) -> Arc<AtomicU64> {
+        let mut m = self.gauges.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Set the gauge named `name` to `value`.
+    pub fn set_gauge(&self, name: &str, value: u64) {
+        self.gauge(name).store(value, Ordering::Relaxed);
+    }
+
+    /// The shared histogram named `name`, created empty on first use.
+    pub fn hist(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.hists.lock().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Record `value` into the histogram named `name`.
+    pub fn observe(&self, name: &str, value: u64) {
+        self.hist(name).record(value);
+    }
+
+    /// A point-in-time copy of every registered metric, sorted by name.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        MetricsSnapshot { counters, gauges, hists }
+    }
+}
+
+/// A point-in-time copy of a registry (name-sorted).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Counter name → value.
+    pub counters: Vec<(String, u64)>,
+    /// Gauge name → value.
+    pub gauges: Vec<(String, u64)>,
+    /// Histogram name → bucket snapshot.
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+/// The process-wide registry every layer reports into (and the one the
+/// `FetchMetrics` handlers dump).
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_share_handles() {
+        let r = MetricsRegistry::new();
+        r.inc("a.b", 2);
+        r.inc("a.b", 3);
+        let h = r.counter("a.b");
+        assert_eq!(h.load(Ordering::Relaxed), 5);
+        h.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(r.counter("a.b").load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn gauges_keep_the_last_write() {
+        let r = MetricsRegistry::new();
+        r.set_gauge("lag", 10);
+        r.set_gauge("lag", 3);
+        assert_eq!(r.gauge("lag").load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted_and_complete() {
+        let r = MetricsRegistry::new();
+        r.inc("z.last", 1);
+        r.inc("a.first", 1);
+        r.set_gauge("mid", 7);
+        r.observe("lat_us", 120);
+        r.observe("lat_us", 4000);
+        let s = r.snapshot();
+        assert_eq!(
+            s.counters.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
+            vec!["a.first", "z.last"]
+        );
+        assert_eq!(s.gauges, vec![("mid".to_string(), 7)]);
+        assert_eq!(s.hists.len(), 1);
+        assert_eq!(s.hists[0].1.count(), 2);
+        assert_eq!(s.hists[0].1.max, 4000);
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        global().inc("obs.selftest", 1);
+        assert!(global().counter("obs.selftest").load(Ordering::Relaxed) >= 1);
+    }
+}

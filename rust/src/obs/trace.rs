@@ -1,0 +1,127 @@
+//! Per-run JSONL trace: one JSON object per line, one line per run
+//! event (activation, commit, prox, checkpoint, eviction), so a
+//! cross-node delay/staleness timeline can be reconstructed offline.
+//!
+//! Every event carries `ts_us` (microseconds on this writer's monotonic
+//! clock) and `event`; identifiers (`node`, `k`, `version`) and
+//! event-specific extras ride along when known. The schema is tabulated
+//! in `docs/OBSERVABILITY.md`. Writers are shared (`Arc`) across the
+//! worker/server/persist layers; each line is flushed on write so a
+//! killed process leaves a complete prefix.
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// An append-only JSONL event sink (see the module docs for the
+/// schema). Cloned by `Arc` into every instrumented layer.
+pub struct TraceWriter {
+    out: Mutex<BufWriter<File>>,
+    start: Instant,
+}
+
+impl std::fmt::Debug for TraceWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceWriter")
+    }
+}
+
+impl TraceWriter {
+    /// Create (truncating) the trace file at `path`, creating parent
+    /// directories as needed.
+    pub fn create(path: &Path) -> Result<TraceWriter> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(TraceWriter {
+            out: Mutex::new(BufWriter::new(File::create(path)?)),
+            start: Instant::now(),
+        })
+    }
+
+    /// Append one event line. `node`, `k`, and `version` are emitted
+    /// only when known; `extra` carries event-specific fields.
+    pub fn event(
+        &self,
+        event: &str,
+        node: Option<usize>,
+        k: Option<u64>,
+        version: Option<u64>,
+        extra: &[(&str, Json)],
+    ) {
+        let mut fields = vec![
+            ("ts_us", Json::Num(self.start.elapsed().as_micros() as f64)),
+            ("event", Json::Str(event.to_string())),
+        ];
+        if let Some(n) = node {
+            fields.push(("node", Json::Num(n as f64)));
+        }
+        if let Some(k) = k {
+            fields.push(("k", Json::Num(k as f64)));
+        }
+        if let Some(v) = version {
+            fields.push(("version", Json::Num(v as f64)));
+        }
+        for (key, val) in extra {
+            fields.push((key, val.clone()));
+        }
+        let line = Json::obj(fields).to_string();
+        // Trace I/O must never take the run down: drop the line on a
+        // full disk rather than propagate.
+        let mut out = self.out.lock().unwrap();
+        let _ = writeln!(out, "{line}");
+        let _ = out.flush();
+    }
+
+    /// Flush buffered lines to the OS (each event already flushes; this
+    /// exists for explicit end-of-run barriers).
+    pub fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_are_one_json_object_per_line() {
+        let dir = std::env::temp_dir().join(format!("amtl_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let w = TraceWriter::create(&path).unwrap();
+        w.event("commit", Some(2), Some(7), Some(19), &[("staleness", Json::Num(3.0))]);
+        w.event("checkpoint", None, None, Some(20), &[]);
+        w.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").and_then(|j| j.as_str()), Some("commit"));
+        assert_eq!(first.get("node").and_then(|j| j.as_usize()), Some(2));
+        assert_eq!(first.get("k").and_then(|j| j.as_usize()), Some(7));
+        assert_eq!(first.get("version").and_then(|j| j.as_usize()), Some(19));
+        assert_eq!(first.get("staleness").and_then(|j| j.as_usize()), Some(3));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("event").and_then(|j| j.as_str()), Some("checkpoint"));
+        assert!(second.get("node").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_makes_parent_directories() {
+        let dir = std::env::temp_dir().join(format!("amtl_trace_mk_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("nested/run.jsonl");
+        let w = TraceWriter::create(&path).unwrap();
+        w.event("activation", Some(0), Some(1), None, &[]);
+        assert!(path.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -47,11 +47,12 @@ pub use snapshot::{FormulationState, ServerSnapshot};
 pub use wal::{WalEntry, WalScan, WalWriter};
 
 use crate::coordinator::server::CentralServer;
+use crate::obs::{self, Histogram, TraceWriter};
 use crate::util::RngState;
 use anyhow::Result;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex, RwLock, RwLockReadGuard};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard};
 use std::time::{Duration, Instant};
 
 /// Durability knobs.
@@ -72,6 +73,29 @@ impl PersistConfig {
 
 /// Default commits-per-snapshot stride (the CLI's `--checkpoint-every`).
 pub const DEFAULT_SNAPSHOT_EVERY: u64 = 256;
+
+/// Global-registry handles for the durability paths, resolved once at
+/// construction so the per-commit WAL path records lock-free.
+struct CpObs {
+    appends: Arc<AtomicU64>,
+    append_us: Arc<Histogram>,
+    fsync_us: Arc<Histogram>,
+    writes: Arc<AtomicU64>,
+    write_us: Arc<Histogram>,
+}
+
+impl CpObs {
+    fn resolve() -> CpObs {
+        let reg = obs::global();
+        CpObs {
+            appends: reg.counter("wal.appends"),
+            append_us: reg.hist("wal.append_us"),
+            fsync_us: reg.hist("wal.fsync_us"),
+            writes: reg.counter("checkpoint.writes"),
+            write_us: reg.hist("checkpoint.write_us"),
+        }
+    }
+}
 
 struct CpInner {
     wal: WalWriter,
@@ -103,6 +127,10 @@ pub struct Checkpointer {
     /// rotations without contending with the WAL append path.
     rotation: Mutex<u64>,
     rotation_cv: Condvar,
+    obs: CpObs,
+    /// Trace sink for "checkpoint" events (set when the owning server has
+    /// a [`TraceWriter`] attached).
+    trace: Mutex<Option<Arc<TraceWriter>>>,
 }
 
 impl Checkpointer {
@@ -140,7 +168,15 @@ impl Checkpointer {
             rng_streams: Mutex::new(Vec::new()),
             rotation: Mutex::new(next_seq - 1),
             rotation_cv: Condvar::new(),
+            obs: CpObs::resolve(),
+            trace: Mutex::new(None),
         })
+    }
+
+    /// Emit a "checkpoint" trace event for every snapshot rotation from
+    /// now on (wired by `CentralServer::with_trace`).
+    pub(crate) fn set_trace(&self, trace: Arc<TraceWriter>) {
+        *self.trace.lock().unwrap() = Some(trace);
     }
 
     /// Horizon (last covered sequence number) of the newest snapshot this
@@ -209,24 +245,36 @@ impl Checkpointer {
     /// Append one commit (WAL discipline: callers log *before* applying)
     /// and fsync it, so an acknowledged update is never lost.
     pub(crate) fn log_commit(&self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<()> {
+        let started = Instant::now();
         let mut inner = self.inner.lock().unwrap();
         let seq = inner.next_seq;
         inner.next_seq += 1;
         inner.commits_since_snapshot += 1;
         let entry = WalEntry::Commit { seq, t: t as u32, k, step, u: u.to_vec() };
         inner.wal.append(&entry)?;
+        let pre_sync = Instant::now();
         inner.wal.sync()?;
+        drop(inner);
+        self.obs.fsync_us.record(pre_sync.elapsed().as_micros() as u64);
+        self.obs.append_us.record(started.elapsed().as_micros() as u64);
+        self.obs.appends.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     /// Append a prox marker (uncached backward step: the fold order it
     /// fixes is what makes online-SVD recovery bitwise).
     pub(crate) fn log_prox(&self) -> Result<()> {
+        let started = Instant::now();
         let mut inner = self.inner.lock().unwrap();
         let seq = inner.next_seq;
         inner.next_seq += 1;
         inner.wal.append(&WalEntry::Prox { seq })?;
+        let pre_sync = Instant::now();
         inner.wal.sync()?;
+        drop(inner);
+        self.obs.fsync_us.record(pre_sync.elapsed().as_micros() as u64);
+        self.obs.append_us.record(started.elapsed().as_micros() as u64);
+        self.obs.appends.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
@@ -249,6 +297,7 @@ impl Checkpointer {
 
     /// Quiesce commits and write a snapshot + WAL rotation immediately.
     pub fn checkpoint_now(&self, server: &CentralServer) -> Result<()> {
+        let started = Instant::now();
         let _quiesced = self.gate.write().unwrap();
         let mut inner = self.inner.lock().unwrap();
         let horizon = inner.next_seq - 1;
@@ -284,6 +333,11 @@ impl Checkpointer {
             if start <= fallback {
                 let _ = std::fs::remove_file(path);
             }
+        }
+        self.obs.writes.fetch_add(1, Ordering::Relaxed);
+        self.obs.write_us.record(started.elapsed().as_micros() as u64);
+        if let Some(tr) = &*self.trace.lock().unwrap() {
+            tr.event("checkpoint", None, None, Some(horizon), &[]);
         }
         Ok(())
     }
@@ -333,16 +387,18 @@ pub fn newest_valid_snapshot(dir: &Path) -> Result<Option<ServerSnapshot>> {
             // (renamed, or copied from another directory) is as unusable
             // as a corrupt one: fall back rather than abort.
             Ok(s) if s.seq != *seq => {
-                eprintln!(
-                    "warning: snapshot {} claims horizon {} but is named {seq}; skipping",
+                crate::log_warn!(
+                    "persist",
+                    "snapshot {} claims horizon {} but is named {seq}; skipping",
                     path.display(),
                     s.seq
                 );
             }
             Ok(s) => return Ok(Some(s)),
             Err(e) => {
-                eprintln!(
-                    "warning: snapshot {} is unreadable ({e}); falling back",
+                crate::log_warn!(
+                    "persist",
+                    "snapshot {} is unreadable ({e}); falling back",
                     path.display()
                 );
             }

@@ -152,7 +152,7 @@ fn executor_loop(rx: Arc<Mutex<mpsc::Receiver<Request>>>, manifest: Arc<Manifest
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("executor: failed to create PJRT client: {e}");
+            crate::log_error!("executor", "failed to create PJRT client: {e}");
             return;
         }
     };

@@ -6,7 +6,7 @@
 //! nothing here retries a failure away. One request in flight at a time,
 //! one socket for the connection's lifetime.
 
-use crate::transport::wire::{ReplicaStats, Request, Response};
+use crate::transport::wire::{MetricsReport, ReplicaStats, Request, Response};
 use anyhow::{anyhow, bail, Result};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
@@ -57,6 +57,16 @@ impl PredictClient {
         match self.request(&Request::FetchStats)? {
             Response::Stats(stats) => Ok(stats),
             other => bail!("expected Stats, got {other:?}"),
+        }
+    }
+
+    /// Fetch the full observability dump ([`MetricsReport`]): the remote
+    /// process's metrics registry. Answered by replicas *and* by the
+    /// training server (`amtl top` points this client at either).
+    pub fn metrics(&mut self) -> Result<MetricsReport> {
+        match self.request(&Request::FetchMetrics)? {
+            Response::Metrics(report) => Ok(report),
+            other => bail!("expected Metrics, got {other:?}"),
         }
     }
 

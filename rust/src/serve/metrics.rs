@@ -1,104 +1,30 @@
 //! Lock-free latency accounting for the predict hot path.
 //!
 //! The replica answers predictions from many connection threads at once;
-//! per-request timing must not introduce a shared lock on that path. A
-//! [`LatencyHistogram`] is a fixed array of log₂ buckets behind relaxed
-//! atomics: recording is one `fetch_add` plus a `fetch_max`, and quantile
-//! reads walk the 64 buckets without stopping any writer.
+//! per-request timing must not introduce a shared lock on that path.
+//! Historically this module owned its own log₂ histogram; that structure
+//! was generalized into [`crate::obs::hist`] (adding `merge`, snapshots,
+//! and wire export) and the serving tier now reuses it under the
+//! [`LatencyHistogram`] name: recording is one `fetch_add` plus a
+//! `fetch_max`, and quantile reads walk the buckets without stopping any
+//! writer.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Bucket `i` holds samples needing `i` significant bits: value 0 lands
-/// in bucket 0, a value in `[2^(i-1), 2^i)` in bucket `i`. 64 buckets
-/// cover every `u64`.
-const BUCKETS: usize = 64;
-
-/// A concurrent log₂-bucketed histogram of microsecond latencies.
+/// A concurrent log₂-bucketed histogram of microsecond latencies — the
+/// observability layer's [`Histogram`](crate::obs::Histogram) under the
+/// serving tier's historical name.
 ///
-/// Quantiles report the matching bucket's upper edge, so estimates are
-/// conservative — they never claim a request was faster than it was, and
-/// overshoot by at most 2×. The maximum is tracked exactly.
-pub struct LatencyHistogram {
-    counts: [AtomicU64; BUCKETS],
-    max: AtomicU64,
-    total: AtomicU64,
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> LatencyHistogram {
-        LatencyHistogram {
-            counts: std::array::from_fn(|_| AtomicU64::new(0)),
-            max: AtomicU64::new(0),
-            total: AtomicU64::new(0),
-        }
-    }
-}
-
-impl LatencyHistogram {
-    /// An empty histogram.
-    pub fn new() -> LatencyHistogram {
-        LatencyHistogram::default()
-    }
-
-    /// Record one sample (microseconds).
-    pub fn record(&self, us: u64) {
-        let idx = ((u64::BITS - us.leading_zeros()) as usize).min(BUCKETS - 1);
-        self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.max.fetch_max(us, Ordering::Relaxed);
-        self.total.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Samples recorded so far.
-    pub fn count(&self) -> u64 {
-        self.total.load(Ordering::Relaxed)
-    }
-
-    /// The exact largest sample seen (0 when empty).
-    pub fn max(&self) -> u64 {
-        self.max.load(Ordering::Relaxed)
-    }
-
-    /// The `q`-quantile (`0.0 ..= 1.0`) as a bucket upper edge, 0 when
-    /// empty. Concurrent recording can make the walk fall short of the
-    /// rank; the exact maximum is the honest answer then.
-    pub fn quantile(&self, q: f64) -> u64 {
-        let total = self.total.load(Ordering::Relaxed);
-        if total == 0 {
-            return 0;
-        }
-        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (idx, c) in self.counts.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
-            if seen >= rank {
-                return upper_edge(idx);
-            }
-        }
-        self.max()
-    }
-}
-
-/// Largest value that lands in bucket `idx`.
-fn upper_edge(idx: usize) -> u64 {
-    if idx == 0 {
-        0
-    } else {
-        (1u64 << idx.min(63)) - 1
-    }
-}
+/// Quantiles report the matching bucket's upper edge (clamped to the
+/// exact maximum), so estimates are conservative — they never claim a
+/// request was faster than it was, and overshoot by at most 2×.
+pub use crate::obs::hist::Histogram as LatencyHistogram;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn empty_histogram_reports_zeros() {
-        let h = LatencyHistogram::new();
-        assert_eq!(h.count(), 0);
-        assert_eq!(h.max(), 0);
-        assert_eq!(h.quantile(0.5), 0);
-        assert_eq!(h.quantile(0.99), 0);
-    }
+    // The generalized histogram carries its own unit/property tests in
+    // `obs::hist`; these pin the serving-tier behaviors the predict
+    // endpoint's stats frame depends on.
 
     #[test]
     fn quantiles_are_conservative_upper_edges() {
@@ -127,22 +53,5 @@ mod tests {
         assert_eq!(h.quantile(0.5), 0, "first of two samples is the zero");
         assert_eq!(h.quantile(1.0), 1);
         assert_eq!(h.max(), 1);
-    }
-
-    #[test]
-    fn concurrent_recording_loses_nothing() {
-        let h = std::sync::Arc::new(LatencyHistogram::new());
-        std::thread::scope(|s| {
-            for t in 0..4 {
-                let h = std::sync::Arc::clone(&h);
-                s.spawn(move || {
-                    for i in 0..1000u64 {
-                        h.record(t * 1000 + i);
-                    }
-                });
-            }
-        });
-        assert_eq!(h.count(), 4000);
-        assert_eq!(h.max(), 3999);
     }
 }

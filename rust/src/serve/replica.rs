@@ -417,14 +417,14 @@ fn run_tail(dir: &Path, poll: Duration, shared: &Arc<ReplicaShared>, stop: &Atom
                             continue; // drain what is already on disk
                         }
                         Err(e) => {
-                            eprintln!("warning: replica bootstrap failed ({e:#}); retrying");
+                            crate::log_warn!("replica", "bootstrap failed ({e:#}); retrying");
                         }
                     }
                 }
             }
             Some(c) => {
                 if let Err(e) = c.poll() {
-                    eprintln!("warning: replica tail error ({e:#}); retrying");
+                    crate::log_warn!("replica", "tail error ({e:#}); retrying");
                 }
             }
         }

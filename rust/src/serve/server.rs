@@ -11,8 +11,9 @@
 //! frames arriving here are refused with an `Error` response.
 
 use super::replica::{ModelReplica, ReplicaShared};
+use crate::obs;
 use crate::transport::tcp::{PatientReader, POLL, WRITE_TIMEOUT};
-use crate::transport::wire::{Request, Response, WireError};
+use crate::transport::wire::{MetricsReport, Request, Response, WireError};
 use anyhow::{anyhow, Result};
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -107,6 +108,35 @@ impl Drop for ReplicaServerHandle {
     }
 }
 
+/// The replica's answer to `FetchMetrics`: the process-wide registry
+/// plus the replica-local stats (prediction/error counters, apply lag,
+/// predict latency histogram) folded in under `replica.*` names, so
+/// `amtl top --connect <replica>` sees one coherent table.
+fn metrics_report(shared: &ReplicaShared) -> MetricsReport {
+    let stats = shared.stats();
+    let mut report = MetricsReport::from_snapshot(
+        MetricsReport::ROLE_REPLICA,
+        stats.uptime_ms,
+        obs::global().snapshot(),
+    );
+    for (name, v) in [
+        ("replica.predictions", stats.predictions),
+        ("replica.errors", stats.errors),
+        ("replica.applied_entries", stats.applied_entries),
+        ("replica.bootstraps", stats.bootstraps),
+        ("replica.hot_swaps", stats.hot_swaps),
+    ] {
+        report.counters.push((name.to_string(), v));
+    }
+    report.counters.sort();
+    report.gauges.push(("replica.lag".to_string(), stats.lag()));
+    report.gauges.push(("replica.model_seq".to_string(), stats.model_seq));
+    report.gauges.sort();
+    report.hists.push(("replica.predict_us".to_string(), shared.hist.snapshot()));
+    report.hists.sort_by(|a, b| a.0.cmp(&b.0));
+    report
+}
+
 /// One connection's request loop: validate → score → respond. Latency is
 /// recorded per `Predict`, measured from request decode to the response
 /// hitting the socket (the full server-side service time).
@@ -134,6 +164,7 @@ fn serve_conn(stream: TcpStream, shared: &ReplicaShared, stop: &AtomicBool) {
                 Err(msg) => Response::Error(msg),
             },
             Request::FetchStats => Response::Stats(shared.stats()),
+            Request::FetchMetrics => Response::Metrics(metrics_report(shared)),
             Request::Shutdown => {
                 // Closes this connection only; the replica keeps serving.
                 let _ = Response::ShutdownAck.write_to(&mut &stream);

@@ -26,10 +26,11 @@
 //! heartbeat. `Shutdown` fsyncs in-flight WAL writes before it is
 //! acknowledged.
 
-use super::wire::{Request, Response, WireError};
+use super::wire::{MetricsReport, Request, Response, WireError};
 use super::{RegisterAck, Transport};
 use crate::coordinator::metrics::Recorder;
 use crate::coordinator::server::CentralServer;
+use crate::obs;
 use anyhow::{anyhow, bail, Result};
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -185,6 +186,7 @@ impl Read for PatientReader<'_> {
         loop {
             match (&mut &*self.stream).read(buf) {
                 Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    obs::global().inc("transport.short_reads", 1);
                     if self.stop.load(Ordering::SeqCst) {
                         return Err(std::io::Error::new(
                             ErrorKind::ConnectionAborted,
@@ -313,6 +315,14 @@ fn serve_conn(
                     ))
                 }
             }
+            // Observability: dump the process-wide metrics registry.
+            // Answered by the trainer *and* the replica, so `amtl top`
+            // can point at either end of a run.
+            Request::FetchMetrics => Response::Metrics(MetricsReport::from_snapshot(
+                MetricsReport::ROLE_TRAINER,
+                obs::log::uptime_ms(),
+                obs::global().snapshot(),
+            )),
             // Serving-tier frames belong to read replicas: the training
             // server refuses them so nobody mistakes it for a predict
             // endpoint (predictions must come from the snapshot+WAL feed,
@@ -345,6 +355,10 @@ pub struct TcpClient {
     opts: TcpOptions,
     stream: Option<TcpStream>,
     eta: f64,
+    /// Whether a socket has ever been established (distinguishes the
+    /// first connect from a reconnect in the `transport.reconnects`
+    /// counter).
+    connected_once: bool,
 }
 
 impl TcpClient {
@@ -356,7 +370,8 @@ impl TcpClient {
             .map_err(|e| anyhow!("cannot resolve server address: {e}"))?
             .next()
             .ok_or_else(|| anyhow!("server address resolved to nothing"))?;
-        let mut client = TcpClient { addr, opts, stream: None, eta: f64::NAN };
+        let mut client =
+            TcpClient { addr, opts, stream: None, eta: f64::NAN, connected_once: false };
         match client.request(&Request::FetchEta)? {
             Response::Eta(eta) => client.eta = eta,
             other => bail!("handshake expected Eta, got {other:?}"),
@@ -372,6 +387,10 @@ impl TcpClient {
             stream.set_read_timeout(Some(self.opts.io_timeout))?;
             stream.set_write_timeout(Some(self.opts.io_timeout))?;
             self.stream = Some(stream);
+            if self.connected_once {
+                obs::global().inc("transport.reconnects", 1);
+            }
+            self.connected_once = true;
         }
         Ok(self.stream.as_mut().expect("just connected"))
     }
@@ -389,6 +408,7 @@ impl TcpClient {
         let mut last_err: Option<anyhow::Error> = None;
         for attempt in 0..=self.opts.retries {
             if attempt > 0 {
+                obs::global().inc("transport.retries", 1);
                 std::thread::sleep(self.opts.retry_backoff * attempt);
             }
             match self.try_request(req) {

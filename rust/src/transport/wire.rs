@@ -2,9 +2,11 @@
 //! frames carrying the messages of Algorithm 1's star topology — the four
 //! algorithmic messages (`FetchProxCol`/`PushUpdate`/`FetchEta`/`Shutdown`)
 //! plus the elastic-membership frames (`Register`/`Heartbeat`/`Leave`)
-//! that let task nodes join, prove liveness, and depart mid-run, and the
+//! that let task nodes join, prove liveness, and depart mid-run, the
 //! serving-tier frames (`Predict`/`FetchStats`) spoken by read replicas
-//! (see [`serve`](crate::serve)).
+//! (see [`serve`](crate::serve)), and the observability frame pair
+//! (`FetchMetrics` → [`MetricsReport`]) answered by **both** the trainer
+//! and the replica (see [`obs`](crate::obs) and `amtl top`).
 //!
 //! Every frame is
 //!
@@ -32,6 +34,7 @@
 //! sent voluntarily to a replica to be scored — no frame moves a task
 //! node's training set anywhere.
 
+use crate::obs::hist::{HistSnapshot, BUCKETS};
 use std::fmt;
 use std::io::{Read, Write};
 
@@ -41,7 +44,8 @@ pub const MAGIC: [u8; 4] = *b"AMTL";
 /// v2: `PushUpdate` carries the node's activation counter `k` (commit
 /// dedup key for at-least-once resends) and the membership frames
 /// (`Register`/`Heartbeat`/`Leave`) exist. The serving-tier frames
-/// (`Predict`/`FetchStats`) are an *additive* extension — new opcodes,
+/// (`Predict`/`FetchStats`) and the observability frames
+/// (`FetchMetrics`/`Metrics`) are *additive* extensions — new opcodes,
 /// same version: decoders reject opcodes they don't know, so older peers
 /// refuse the new frames cleanly without a version bump.
 pub const VERSION: u8 = 2;
@@ -59,6 +63,7 @@ const OP_HEARTBEAT: u8 = 0x06;
 const OP_LEAVE: u8 = 0x07;
 const OP_PREDICT: u8 = 0x08;
 const OP_FETCH_STATS: u8 = 0x09;
+const OP_FETCH_METRICS: u8 = 0x0A;
 
 // Response opcodes (server → client).
 const OP_PROX_COL: u8 = 0x81;
@@ -70,6 +75,7 @@ const OP_HEARTBEAT_ACK: u8 = 0x86;
 const OP_LEAVE_ACK: u8 = 0x87;
 const OP_PREDICTION: u8 = 0x88;
 const OP_STATS: u8 = 0x89;
+const OP_METRICS: u8 = 0x8A;
 const OP_ERROR: u8 = 0xFF;
 
 /// Decode/IO failure. Malformed input is an error, never a panic.
@@ -348,6 +354,145 @@ impl ReplicaStats {
     }
 }
 
+/// A metrics dump answered to [`Request::FetchMetrics`] by **both** the
+/// trainer (central server) and the read replica: every named counter,
+/// gauge, and histogram in the process's [`obs`](crate::obs) registry
+/// at the moment of the request. `amtl top` polls this frame to render
+/// its live dashboard; metric names and units are tabulated in
+/// `docs/OBSERVABILITY.md`.
+///
+/// Histograms ship sparse — `(bucket index, count)` pairs for non-empty
+/// buckets plus the max/sum accumulators — so an idle registry costs a
+/// few bytes per metric, not 65 buckets each.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsReport {
+    /// Which process answered: [`MetricsReport::ROLE_TRAINER`] or
+    /// [`MetricsReport::ROLE_REPLICA`].
+    pub role: u8,
+    /// Milliseconds on the answering process's monotonic metrics clock.
+    pub uptime_ms: u64,
+    /// Monotonic counters, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// Last-write gauges, name-sorted.
+    pub gauges: Vec<(String, u64)>,
+    /// Histograms, name-sorted.
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl MetricsReport {
+    /// `role` tag of a training (central) server.
+    pub const ROLE_TRAINER: u8 = 0;
+    /// `role` tag of a read replica.
+    pub const ROLE_REPLICA: u8 = 1;
+
+    /// Assemble a report from a registry snapshot.
+    pub fn from_snapshot(role: u8, uptime_ms: u64, snap: crate::obs::MetricsSnapshot) -> MetricsReport {
+        MetricsReport {
+            role,
+            uptime_ms,
+            counters: snap.counters,
+            gauges: snap.gauges,
+            hists: snap.hists,
+        }
+    }
+
+    /// Human name of the answering role.
+    pub fn role_name(&self) -> &'static str {
+        if self.role == Self::ROLE_REPLICA {
+            "replica"
+        } else {
+            "trainer"
+        }
+    }
+
+    /// Value of the counter named `name`, if present.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// Value of the gauge named `name`, if present.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// The histogram named `name`, if present.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(k, _)| k == name).map(|(_, h)| h)
+    }
+
+    fn push_name(out: &mut Vec<u8>, name: &str) {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+    }
+
+    fn parse_name(c: &mut Cursor<'_>) -> Result<String, WireError> {
+        let n = c.u32()? as usize;
+        String::from_utf8(c.take(n)?.to_vec())
+            .map_err(|_| WireError::Malformed("metric name is not utf-8"))
+    }
+
+    fn push(&self, out: &mut Vec<u8>) {
+        out.push(self.role);
+        out.extend_from_slice(&self.uptime_ms.to_le_bytes());
+        out.extend_from_slice(&(self.counters.len() as u32).to_le_bytes());
+        for (name, v) in &self.counters {
+            Self::push_name(out, name);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.gauges.len() as u32).to_le_bytes());
+        for (name, v) in &self.gauges {
+            Self::push_name(out, name);
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.hists.len() as u32).to_le_bytes());
+        for (name, h) in &self.hists {
+            Self::push_name(out, name);
+            out.extend_from_slice(&h.max.to_le_bytes());
+            out.extend_from_slice(&h.sum.to_le_bytes());
+            let nz: Vec<(usize, u64)> = h.nonzero().collect();
+            out.extend_from_slice(&(nz.len() as u32).to_le_bytes());
+            for (idx, count) in nz {
+                out.push(idx as u8);
+                out.extend_from_slice(&count.to_le_bytes());
+            }
+        }
+    }
+
+    fn parse(c: &mut Cursor<'_>) -> Result<MetricsReport, WireError> {
+        let role = c.u8()?;
+        let uptime_ms = c.u64()?;
+        // No count-based preallocation: a corrupted count must run out of
+        // payload, not out of memory.
+        let mut counters = Vec::new();
+        for _ in 0..c.u32()? {
+            let name = Self::parse_name(c)?;
+            counters.push((name, c.u64()?));
+        }
+        let mut gauges = Vec::new();
+        for _ in 0..c.u32()? {
+            let name = Self::parse_name(c)?;
+            gauges.push((name, c.u64()?));
+        }
+        let mut hists = Vec::new();
+        for _ in 0..c.u32()? {
+            let name = Self::parse_name(c)?;
+            let mut snap = HistSnapshot::empty();
+            snap.max = c.u64()?;
+            snap.sum = c.u64()?;
+            for _ in 0..c.u32()? {
+                let idx = c.u8()? as usize;
+                let count = c.u64()?;
+                if idx >= BUCKETS {
+                    return Err(WireError::Malformed("histogram bucket index out of range"));
+                }
+                snap.counts[idx] = snap.counts[idx].wrapping_add(count);
+            }
+            hists.push((name, snap));
+        }
+        Ok(MetricsReport { role, uptime_ms, counters, gauges, hists })
+    }
+}
+
 /// Client → server messages (the task-node side of Algorithm 1).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -379,6 +524,11 @@ pub enum Request {
     /// Retrieve the replica's [`ReplicaStats`] (lag, latency quantiles,
     /// request counters).
     FetchStats,
+    /// Retrieve the process's full metrics registry as a
+    /// [`MetricsReport`]. Unlike `FetchStats`, this frame is answered by
+    /// **both** the trainer and the replica — it is what `amtl top`
+    /// polls.
+    FetchMetrics,
 }
 
 /// Server → client messages.
@@ -408,6 +558,8 @@ pub enum Response {
     Prediction { y: f64, model_seq: u64 },
     /// The replica's current [`ReplicaStats`].
     Stats(ReplicaStats),
+    /// The process's metrics registry dump (reply to `FetchMetrics`).
+    Metrics(MetricsReport),
     /// Request rejected (bad task index, dimension mismatch, …). The
     /// connection stays usable.
     Error(String),
@@ -425,6 +577,7 @@ impl Request {
             Request::Leave { .. } => OP_LEAVE,
             Request::Predict { .. } => OP_PREDICT,
             Request::FetchStats => OP_FETCH_STATS,
+            Request::FetchMetrics => OP_FETCH_METRICS,
         }
     }
 
@@ -448,7 +601,8 @@ impl Request {
                 push_f64s(&mut out, x);
                 out
             }
-            Request::FetchEta | Request::Shutdown | Request::FetchStats => Vec::new(),
+            Request::FetchEta | Request::Shutdown | Request::FetchStats
+            | Request::FetchMetrics => Vec::new(),
         }
     }
 
@@ -475,6 +629,7 @@ impl Request {
                 Request::Predict { t, x }
             }
             OP_FETCH_STATS => Request::FetchStats,
+            OP_FETCH_METRICS => Request::FetchMetrics,
             other => return Err(WireError::BadOpcode(other)),
         };
         c.finish()?;
@@ -512,6 +667,7 @@ impl Response {
             Response::LeaveAck => OP_LEAVE_ACK,
             Response::Prediction { .. } => OP_PREDICTION,
             Response::Stats(_) => OP_STATS,
+            Response::Metrics(_) => OP_METRICS,
             Response::Error(_) => OP_ERROR,
         }
     }
@@ -544,6 +700,11 @@ impl Response {
                 stats.push(&mut out);
                 out
             }
+            Response::Metrics(report) => {
+                let mut out = Vec::new();
+                report.push(&mut out);
+                out
+            }
             Response::Error(msg) => msg.as_bytes().to_vec(),
         }
     }
@@ -567,6 +728,7 @@ impl Response {
             OP_LEAVE_ACK => Response::LeaveAck,
             OP_PREDICTION => Response::Prediction { y: c.f64()?, model_seq: c.u64()? },
             OP_STATS => Response::Stats(ReplicaStats::parse(&mut c)?),
+            OP_METRICS => Response::Metrics(MetricsReport::parse(&mut c)?),
             OP_ERROR => {
                 let msg = String::from_utf8(payload.to_vec())
                     .map_err(|_| WireError::Malformed("error message is not utf-8"))?;
@@ -629,8 +791,26 @@ mod tests {
             Request::Predict { t: 1, x: vec![0.5, -1.5, 2.25] },
             Request::Predict { t: u32::MAX, x: vec![] },
             Request::FetchStats,
+            Request::FetchMetrics,
         ] {
             assert_eq!(roundtrip_request(&req), req);
+        }
+    }
+
+    fn sample_report() -> MetricsReport {
+        let h = crate::obs::Histogram::new();
+        for v in [0u64, 3, 17, 4096, u64::MAX] {
+            h.record(v);
+        }
+        MetricsReport {
+            role: MetricsReport::ROLE_TRAINER,
+            uptime_ms: 12_345,
+            counters: vec![("server.commits".into(), 9000), ("wal.appends".into(), 9000)],
+            gauges: vec![("server.version".into(), 9000)],
+            hists: vec![
+                ("node.step_us".into(), h.snapshot()),
+                ("server.staleness".into(), crate::obs::HistSnapshot::empty()),
+            ],
         }
     }
 
@@ -679,11 +859,54 @@ mod tests {
             Response::Prediction { y: f64::MAX, model_seq: 0 },
             Response::Stats(sample_stats()),
             Response::Stats(ReplicaStats::default()),
+            Response::Metrics(sample_report()),
+            Response::Metrics(MetricsReport::default()),
             Response::Error("task index 9 out of range (T=4)".into()),
             Response::Error(String::new()),
         ] {
             assert_eq!(roundtrip_response(&resp), resp);
         }
+    }
+
+    #[test]
+    fn metrics_report_roundtrip_preserves_statistics() {
+        let report = sample_report();
+        let back = match roundtrip_response(&Response::Metrics(report.clone())) {
+            Response::Metrics(r) => r,
+            other => panic!("wrong variant: {other:?}"),
+        };
+        assert_eq!(back.role_name(), "trainer");
+        assert_eq!(back.counter("server.commits"), Some(9000));
+        assert_eq!(back.counter("nope"), None);
+        assert_eq!(back.gauge("server.version"), Some(9000));
+        let h = back.hist("node.step_us").unwrap();
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max, u64::MAX);
+        assert_eq!(h.quantile(0.5), report.hist("node.step_us").unwrap().quantile(0.5));
+        assert!(back.hist("server.staleness").unwrap().is_empty());
+    }
+
+    #[test]
+    fn metrics_report_rejects_out_of_range_bucket_index() {
+        // Hand-build a Metrics payload whose one histogram claims bucket
+        // index 65 (valid indices are 0..=64).
+        let mut payload = Vec::new();
+        payload.push(1u8); // role
+        payload.extend_from_slice(&7u64.to_le_bytes()); // uptime
+        payload.extend_from_slice(&0u32.to_le_bytes()); // counters
+        payload.extend_from_slice(&0u32.to_le_bytes()); // gauges
+        payload.extend_from_slice(&1u32.to_le_bytes()); // hists
+        payload.extend_from_slice(&1u32.to_le_bytes()); // name len
+        payload.push(b'h');
+        payload.extend_from_slice(&9u64.to_le_bytes()); // max
+        payload.extend_from_slice(&9u64.to_le_bytes()); // sum
+        payload.extend_from_slice(&1u32.to_le_bytes()); // nonzero buckets
+        payload.push(65u8); // bucket index out of range
+        payload.extend_from_slice(&1u64.to_le_bytes());
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x8A, &payload).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Response::decode(op, &payload), Err(WireError::Malformed(_))));
     }
 
     #[test]
@@ -751,6 +974,7 @@ mod tests {
             Response::ProxCol(vec![4.0; 7]).encode(),
             Response::Registered { col_version: 9, generation: 1 }.encode(),
             Response::Stats(sample_stats()).encode(),
+            Response::Metrics(sample_report()).encode(),
             Response::Error("boom".into()).encode(),
         ];
         for full in &frames {
@@ -776,6 +1000,8 @@ mod tests {
             Request::Heartbeat { t: 1 }.encode(),
             Request::Predict { t: 3, x: vec![0.5, 0.25] }.encode(),
             Request::FetchStats.encode(),
+            Request::FetchMetrics.encode(),
+            Response::Metrics(sample_report()).encode(),
             Response::Pushed { version: 41 }.encode(),
             Response::Eta(0.125).encode(),
             Response::Prediction { y: 1.5, model_seq: 7 }.encode(),

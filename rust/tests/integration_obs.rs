@@ -1,0 +1,167 @@
+//! Integration tests for the observability layer: a traced 2-node TCP
+//! training run leaves a well-formed JSONL timeline (every commit
+//! present exactly once, strictly ordered per node), and the
+//! `FetchMetrics` wire frame is answered by both the trainer and a read
+//! replica.
+
+use amtl::coordinator::{MtlProblem, RunConfig, Session};
+use amtl::data::synthetic;
+use amtl::obs::TraceWriter;
+use amtl::optim::prox::RegularizerKind;
+use amtl::serve::{ModelReplica, PredictClient, ReplicaServer};
+use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
+use amtl::util::json::Json;
+use amtl::util::Rng;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("amtl_iobs_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+// ------------------------------------------------ trace completeness
+
+#[test]
+fn tcp_run_trace_is_ordered_and_complete() {
+    // A traced 2-node run over real loopback sockets must leave a JSONL
+    // file from which the per-node commit timeline reconstructs exactly:
+    // every line parses, every commit appears once with its staleness,
+    // and each node's activation counters are strictly increasing.
+    let dir = tmp_dir("trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.jsonl");
+    let iters = 30usize;
+    let p = lowrank_problem(6500, 2, 40, 6, 0.25);
+    let trace = Arc::new(TraceWriter::create(&path).unwrap());
+    let r = Session::builder(&p)
+        .iters_per_node(iters)
+        .eta_k(0.9)
+        .record_every(1_000_000)
+        .transport(TransportKind::Tcp)
+        .trace(Some(Arc::clone(&trace)))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    trace.flush();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut commits_per_node: HashMap<usize, Vec<u64>> = HashMap::new();
+    let mut commit_count = 0u64;
+    let mut activations = 0u64;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every trace line is one JSON object");
+        assert!(j.get("ts_us").and_then(|t| t.as_f64()).is_some(), "ts_us on every event");
+        let event = j.get("event").and_then(|e| e.as_str()).expect("event on every line").to_string();
+        match event.as_str() {
+            "commit" => {
+                let node = j.get("node").and_then(|n| n.as_usize()).expect("commit node");
+                let k = j.get("k").and_then(|k| k.as_usize()).expect("commit k") as u64;
+                assert!(j.get("version").and_then(|v| v.as_usize()).is_some(), "commit version");
+                assert!(j.get("staleness").and_then(|s| s.as_f64()).is_some(), "commit staleness");
+                commits_per_node.entry(node).or_default().push(k);
+                commit_count += 1;
+            }
+            "activation" => {
+                for field in ["node", "k"] {
+                    assert!(j.get(field).and_then(|v| v.as_usize()).is_some(), "{field}");
+                }
+                for field in ["delay_us", "fetch_us", "step_us"] {
+                    assert!(j.get(field).and_then(|v| v.as_f64()).is_some(), "{field}");
+                }
+                activations += 1;
+            }
+            "prox" | "checkpoint" | "eviction" => {}
+            other => panic!("unexpected trace event '{other}'"),
+        }
+    }
+    assert_eq!(commit_count, r.updates, "every commit traced exactly once");
+    assert_eq!(activations, r.updates, "no faults injected: every activation commits");
+    assert_eq!(commits_per_node.len(), p.t(), "both nodes appear in the timeline");
+    for (node, ks) in &commits_per_node {
+        assert_eq!(ks.len(), iters, "node {node} commits its whole budget");
+        assert!(
+            ks.windows(2).all(|w| w[0] < w[1]),
+            "node {node} commit events are strictly ordered by k"
+        );
+        assert_eq!(ks[0], 0, "node {node} starts at activation 0");
+        assert_eq!(*ks.last().unwrap(), iters as u64 - 1);
+    }
+    // The run result carries the staleness summary the trace corroborates.
+    assert!(r.mean_staleness.is_finite() && r.mean_staleness >= 0.0);
+    assert!(r.staleness_p99 >= r.staleness_p50);
+    assert!(r.commit_wait_secs >= 0.0);
+    assert!(r.summary().contains("staleness("), "{}", r.summary());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------ FetchMetrics on both roles
+
+#[test]
+fn fetch_metrics_is_answered_by_trainer_and_replica() {
+    let dir = tmp_dir("metrics_wire");
+    let p = lowrank_problem(6501, 2, 40, 6, 0.25);
+    let cfg = RunConfig {
+        iters_per_node: 5,
+        record_every: 1_000_000,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 4,
+        ..Default::default()
+    };
+    let (_state, server, recorder) = cfg.build_server(&p).unwrap();
+    let mut handle = TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), Some(recorder)).unwrap();
+    let addr = handle.addr();
+
+    // Drive real commits through the wire so the trainer has counted
+    // traffic to report.
+    let mut client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+    let mut rng = Rng::new(11);
+    for k in 0..5u64 {
+        let _w = client.fetch_prox_col(0).unwrap();
+        let u = rng.normal_vec(p.d());
+        client.push_update(0, k, 0.5, &u).unwrap();
+    }
+
+    // The trainer's TCP server answers FetchMetrics on the same framed
+    // socket the predict client speaks.
+    let mut mc = PredictClient::connect(addr, TIMEOUT).unwrap();
+    let m = mc.metrics().unwrap();
+    assert_eq!(m.role_name(), "trainer");
+    assert!(m.counter("server.commits").unwrap_or(0) >= 5, "{:?}", m.counters);
+    assert!(m.gauge("server.version").unwrap_or(0) >= 5, "{:?}", m.gauges);
+    let stale = m.hist("server.staleness").expect("staleness histogram registered");
+    assert!(stale.count() >= 5, "one staleness sample per commit");
+    assert!(m.counter("wal.appends").unwrap_or(0) >= 5, "durable run logs every commit");
+    mc.close().unwrap();
+
+    // The replica answers the same frame, tagged with its role and its
+    // serving stats merged in.
+    let mut replica = ModelReplica::follow(&dir, Duration::from_millis(5));
+    let mut rep = ReplicaServer::spawn("127.0.0.1:0", &replica).unwrap();
+    assert!(replica.wait_ready(Duration::from_secs(30)), "genesis snapshot exists");
+    let mut pc = PredictClient::connect(rep.addr(), TIMEOUT).unwrap();
+    let x = rng.normal_vec(p.d());
+    pc.predict(0, &x).unwrap();
+    let m = pc.metrics().unwrap();
+    assert_eq!(m.role_name(), "replica");
+    assert!(m.counter("replica.predictions").unwrap_or(0) >= 1, "{:?}", m.counters);
+    assert!(m.gauge("replica.model_seq").is_some());
+    assert!(m.hist("replica.predict_us").map(|h| h.count()).unwrap_or(0) >= 1);
+    pc.close().unwrap();
+    rep.shutdown();
+    replica.shutdown();
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

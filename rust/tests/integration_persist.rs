@@ -224,6 +224,7 @@ fn serve_worker(addr: &str, resume: bool, delay: DelayModel, opts: TcpOptions) -
         gate: None,
         heartbeat: None,
         resume,
+        trace: None,
     }
 }
 
@@ -387,6 +388,7 @@ fn killed_tcp_node_is_evicted_and_a_replacement_catches_up() {
                 gate: None,
                 heartbeat: Some(Duration::from_millis(20)),
                 resume: false,
+                trace: None,
             };
             let compute = &mut **compute;
             s.spawn(move || {
@@ -432,6 +434,7 @@ fn killed_tcp_node_is_evicted_and_a_replacement_catches_up() {
             gate: None,
             heartbeat: Some(Duration::from_millis(20)),
             resume: true,
+            trace: None,
         };
         let stats = run_worker(ctx, victim_compute.as_mut()).unwrap();
         assert_eq!(stats.updates, 70, "replacement does only the remainder");

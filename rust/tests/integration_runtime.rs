@@ -349,6 +349,7 @@ fn full_pjrt_l21_amtl_run() {
                 gate: None,
                 heartbeat: None,
                 resume: false,
+                trace: None,
             };
             s.spawn(move || run_worker(ctx, c.as_mut()).unwrap());
         }

@@ -156,6 +156,7 @@ fn replica_never_errors_under_live_tcp_training() {
                 gate: None,
                 heartbeat: None,
                 resume: false,
+                trace: None,
             };
             workers.push(s.spawn(move || {
                 run_worker(ctx, compute.as_mut()).expect("worker failed");

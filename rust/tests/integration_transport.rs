@@ -150,6 +150,7 @@ fn node_style_tcp_cluster_converges_to_inproc_objective() {
                 gate: None,
                 heartbeat: None,
                 resume: false,
+                trace: None,
             };
             s.spawn(move || {
                 let stats = run_worker(ctx, compute.as_mut()).unwrap();
