@@ -177,6 +177,7 @@ fn local_cluster(clients: usize, secs: f64, quick: bool) -> anyhow::Result<LoadR
                 gate: None,
                 heartbeat: None,
                 resume: false,
+                trace: None,
             };
             s.spawn(move || {
                 run_worker(ctx, compute.as_mut()).expect("worker failed");

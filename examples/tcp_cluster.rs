@@ -71,6 +71,7 @@ fn main() -> anyhow::Result<()> {
                 gate: None,
                 heartbeat: None,
                 resume: false,
+                trace: None,
             };
             s.spawn(move || {
                 let stats = run_worker(ctx, compute.as_mut()).expect("worker failed");

@@ -1,0 +1,724 @@
+//! Machine-checked invariants over a chaos run's evidence.
+//!
+//! After a storm, [`check_invariants`] replays the run's JSONL trace
+//! (one or more *legs* when the server was killed and resumed) against
+//! the [`RunResult`]s and asserts four families of invariants:
+//!
+//! 1. **Exactly-once** — every applied commit carries a per-node
+//!    activation counter that is strictly increasing across all legs
+//!    (no duplicate application, ever — including transport retries and
+//!    post-restart replays), and the trace's applied-commit counts agree
+//!    with the workers' own accounting.
+//! 2. **Convergence** — the storm run's final objective lands within a
+//!    relative tolerance of an undisturbed reference run.
+//! 3. **Membership balance** — every commit is preceded by a
+//!    registration, membership generations count up by exactly one per
+//!    (re-)registration, evictions and rejoins interleave (`R (E R)* E?`
+//!    per node per leg), and the server's final evicted set is exactly
+//!    the set of nodes whose last membership event is an eviction.
+//! 4. **Staleness bound** — under `SemiSync`, commits from the *cohort*
+//!    (nodes never silently down) respect the bound in trace order: a
+//!    cohort commit of activation `k` after another cohort commit of
+//!    activation `k′` implies `k ≥ k′ − b`. (Trace order is emission
+//!    order — the writer serializes — and a node only commits `k` after
+//!    the gate proved every live node had completed `k − b`.) Flapped
+//!    nodes are excluded: eviction removes them from the gate, so they
+//!    may lawfully burst old activations when they rejoin.
+//!
+//! Violations are *data*, not panics: callers print them next to the
+//! reproducing seed and fail their own assertion.
+
+use crate::coordinator::RunResult;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::fmt;
+use std::path::Path;
+
+/// One failed invariant, with enough detail to debug from the artifact.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Which invariant family failed:
+    /// `"exactly-once" | "convergence" | "membership" | "staleness-bound"`.
+    pub invariant: &'static str,
+    /// Human-readable specifics (node, activation, counts, ...).
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// What the checker is entitled to assume about the run it is checking.
+#[derive(Clone, Debug)]
+pub struct Expectations {
+    /// Swarm size (node ids in the trace must be below this).
+    pub nodes: usize,
+    /// The `SemiSync` bound, when that schedule was active.
+    pub staleness_bound: Option<u64>,
+    /// Nodes never targeted by a silent window (invariant 4's cohort).
+    pub cohort: Vec<usize>,
+    /// Relative tolerance for invariant 2.
+    pub convergence_tol: f64,
+    /// Whether workers register with the membership registry (true for
+    /// the free-running schedules under a heartbeat; false for
+    /// `Synchronized`, whose round loop never registers — there
+    /// invariant 3 degenerates to "no membership traffic at all").
+    pub membership: bool,
+    /// True when every silent window in the storm spans at least four
+    /// heartbeat-length sleeps, so a returning node is provably evicted
+    /// (by a peer's sweep, or by its own re-register's sweep of its
+    /// `> 3×` stale slot) *before* it rejoins. Only then does the strict
+    /// `R (E R)* E?` interleave hold; a node back from a shorter window
+    /// re-registers without an eviction, and the checker must fall back
+    /// to the one-sided `evictions ≤ registrations`.
+    pub evictions_guaranteed: bool,
+}
+
+/// One server lifetime: a trace file plus the [`RunResult`] of the
+/// session that produced it. A kill/resume chaos run hands the checker
+/// its legs in order; an uninterrupted run is a single leg.
+pub struct Leg<'a> {
+    /// The leg's JSONL trace.
+    pub trace: &'a Path,
+    /// The leg's run outcome.
+    pub result: &'a RunResult,
+}
+
+/// Per-leg evidence distilled from the trace.
+struct LegEvidence {
+    /// `(node, k)` for every applied commit, in emission order.
+    commits: Vec<(usize, u64)>,
+    /// Per node: applied-commit count.
+    commit_counts: Vec<u64>,
+    /// Per node: `generation` extras of its register events, in order.
+    generations: Vec<Vec<u64>>,
+    /// Per node: eviction-event count.
+    evictions: Vec<u64>,
+    /// Per node: whether the last membership event was a registration
+    /// (`Some(true)`), an eviction (`Some(false)`), or absent.
+    last_member_was_register: Vec<Option<bool>>,
+    /// Per node: trace index of the first commit / first register.
+    first_commit_at: Vec<Option<usize>>,
+    first_register_at: Vec<Option<usize>>,
+}
+
+/// Parse one leg's trace. A torn *final* line is tolerated — a
+/// SIGKILL'd server can die mid-write — but garbage anywhere else is an
+/// error (the artifact itself is corrupt, not merely the run wrong).
+fn read_leg(trace: &Path, nodes: usize) -> Result<LegEvidence> {
+    let text = std::fs::read_to_string(trace)
+        .with_context(|| format!("reading chaos trace {}", trace.display()))?;
+    let lines: Vec<&str> = text.lines().collect();
+    let mut ev = LegEvidence {
+        commits: Vec::new(),
+        commit_counts: vec![0; nodes],
+        generations: vec![Vec::new(); nodes],
+        evictions: vec![0; nodes],
+        last_member_was_register: vec![None; nodes],
+        first_commit_at: vec![None; nodes],
+        first_register_at: vec![None; nodes],
+    };
+    for (i, line) in lines.iter().enumerate() {
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(_) if i + 1 == lines.len() => break, // torn tail of a killed leg
+            Err(e) => {
+                anyhow::bail!("corrupt trace line {} in {}: {e}", i + 1, trace.display())
+            }
+        };
+        let event = v.get("event").and_then(Json::as_str).unwrap_or_default();
+        let node = v.get("node").and_then(Json::as_usize);
+        match (event, node) {
+            ("commit", Some(t)) => {
+                anyhow::ensure!(t < nodes, "commit from out-of-range node {t}");
+                let k = v
+                    .get("k")
+                    .and_then(Json::as_f64)
+                    .map(|x| x as u64)
+                    .context("commit event without activation counter")?;
+                ev.commits.push((t, k));
+                ev.commit_counts[t] += 1;
+                ev.first_commit_at[t].get_or_insert(i);
+            }
+            ("register", Some(t)) => {
+                anyhow::ensure!(t < nodes, "register from out-of-range node {t}");
+                let generation =
+                    v.get("generation").and_then(Json::as_f64).map(|x| x as u64).unwrap_or(0);
+                ev.generations[t].push(generation);
+                ev.last_member_was_register[t] = Some(true);
+                ev.first_register_at[t].get_or_insert(i);
+            }
+            ("eviction", Some(t)) => {
+                anyhow::ensure!(t < nodes, "eviction of out-of-range node {t}");
+                ev.evictions[t] += 1;
+                ev.last_member_was_register[t] = Some(false);
+            }
+            _ => {} // activation / prox / checkpoint: not evidence here
+        }
+    }
+    Ok(ev)
+}
+
+/// Run every invariant over the legs' evidence. Returns the (possibly
+/// empty) violation list; `Err` means the evidence itself was unusable.
+pub fn check_invariants(
+    legs: &[Leg<'_>],
+    objective_chaos: f64,
+    objective_reference: f64,
+    expect: &Expectations,
+) -> Result<Vec<Violation>> {
+    anyhow::ensure!(!legs.is_empty(), "invariant check needs at least one leg");
+    let mut violations = Vec::new();
+    let evidence: Vec<LegEvidence> = legs
+        .iter()
+        .map(|leg| read_leg(leg.trace, expect.nodes))
+        .collect::<Result<_>>()?;
+
+    check_exactly_once(legs, &evidence, expect, &mut violations);
+    check_convergence(objective_chaos, objective_reference, expect, &mut violations);
+    check_membership(legs, &evidence, expect, &mut violations);
+    if let Some(bound) = expect.staleness_bound {
+        check_staleness_bound(&evidence, bound, expect, &mut violations);
+    }
+    Ok(violations)
+}
+
+/// Invariant 1: strictly increasing per-node activation counters across
+/// all legs, and trace counts == worker counts == run total, per leg.
+fn check_exactly_once(
+    legs: &[Leg<'_>],
+    evidence: &[LegEvidence],
+    expect: &Expectations,
+    out: &mut Vec<Violation>,
+) {
+    let mut last_k: Vec<Option<u64>> = vec![None; expect.nodes];
+    for (leg_i, ev) in evidence.iter().enumerate() {
+        for &(t, k) in &ev.commits {
+            if let Some(prev) = last_k[t] {
+                if k <= prev {
+                    out.push(Violation {
+                        invariant: "exactly-once",
+                        detail: format!(
+                            "node {t} applied activation {k} after {prev} \
+                             (leg {leg_i}): duplicate or out-of-order application"
+                        ),
+                    });
+                }
+            }
+            last_k[t] = Some(k);
+        }
+        let result = legs[leg_i].result;
+        for t in 0..expect.nodes {
+            let traced = ev.commit_counts[t];
+            let counted = result.updates_per_node.get(t).copied().unwrap_or(0);
+            if traced != counted {
+                out.push(Violation {
+                    invariant: "exactly-once",
+                    detail: format!(
+                        "leg {leg_i} node {t}: trace applied {traced} commits \
+                         but the worker counted {counted}"
+                    ),
+                });
+            }
+        }
+        let traced_total: u64 = ev.commit_counts.iter().sum();
+        if traced_total != result.updates {
+            out.push(Violation {
+                invariant: "exactly-once",
+                detail: format!(
+                    "leg {leg_i}: trace applied {traced_total} commits \
+                     but the run reported {} updates",
+                    result.updates
+                ),
+            });
+        }
+    }
+}
+
+/// Invariant 2: the storm lands within tolerance of the reference.
+fn check_convergence(
+    objective_chaos: f64,
+    objective_reference: f64,
+    expect: &Expectations,
+    out: &mut Vec<Violation>,
+) {
+    if !objective_chaos.is_finite() || !objective_reference.is_finite() {
+        out.push(Violation {
+            invariant: "convergence",
+            detail: format!(
+                "non-finite objective (chaos {objective_chaos}, \
+                 reference {objective_reference})"
+            ),
+        });
+        return;
+    }
+    let limit = objective_reference * (1.0 + expect.convergence_tol) + 1e-9;
+    if objective_chaos > limit {
+        out.push(Violation {
+            invariant: "convergence",
+            detail: format!(
+                "chaos objective {objective_chaos:.6} exceeds \
+                 {:.0}%-tolerance limit {limit:.6} \
+                 (reference {objective_reference:.6})",
+                expect.convergence_tol * 100.0
+            ),
+        });
+    }
+}
+
+/// Invariant 3: registrations precede commits, generations count up by
+/// one, evictions interleave with rejoins, and the final evicted set
+/// matches the trace's last membership event per node.
+fn check_membership(
+    legs: &[Leg<'_>],
+    evidence: &[LegEvidence],
+    expect: &Expectations,
+    out: &mut Vec<Violation>,
+) {
+    if !expect.membership {
+        // The round-based schedule never registers: any membership
+        // traffic at all means a layer below acquired a behavior it
+        // must not have.
+        for (leg_i, ev) in evidence.iter().enumerate() {
+            let regs: usize = ev.generations.iter().map(Vec::len).sum();
+            let evs: u64 = ev.evictions.iter().sum();
+            if regs > 0 || evs > 0 {
+                out.push(Violation {
+                    invariant: "membership",
+                    detail: format!(
+                        "leg {leg_i}: {regs} registrations / {evs} evictions \
+                         under a schedule with no membership traffic"
+                    ),
+                });
+            }
+        }
+        return;
+    }
+    for (leg_i, ev) in evidence.iter().enumerate() {
+        for t in 0..expect.nodes {
+            match (ev.first_commit_at[t], ev.first_register_at[t]) {
+                (Some(c), Some(r)) if r > c => out.push(Violation {
+                    invariant: "membership",
+                    detail: format!(
+                        "leg {leg_i} node {t}: first commit (trace line {}) \
+                         precedes first registration (line {})",
+                        c + 1,
+                        r + 1
+                    ),
+                }),
+                (Some(c), None) => out.push(Violation {
+                    invariant: "membership",
+                    detail: format!(
+                        "leg {leg_i} node {t}: committed (trace line {}) \
+                         without ever registering",
+                        c + 1
+                    ),
+                }),
+                _ => {}
+            }
+            // Each leg's registry starts fresh, so generations within a
+            // leg must be exactly 1, 2, 3, ... — a gap means a lost
+            // registration, a repeat means a double-counted one.
+            for (i, &generation) in ev.generations[t].iter().enumerate() {
+                let want = i as u64 + 1;
+                if generation != want {
+                    out.push(Violation {
+                        invariant: "membership",
+                        detail: format!(
+                            "leg {leg_i} node {t}: registration #{want} \
+                             carried generation {generation}"
+                        ),
+                    });
+                }
+            }
+            // Per node per leg the membership history is R (E R)* E?:
+            // joins and evictions may differ by at most the leading join.
+            // (Only one-sided when short silent windows allow a rejoin
+            // with no eviction in between — see `evictions_guaranteed`.)
+            let regs = ev.generations[t].len() as u64;
+            let evs = ev.evictions[t];
+            let balanced = if expect.evictions_guaranteed {
+                regs == evs || regs == evs + 1
+            } else {
+                evs <= regs
+            };
+            if !balanced {
+                out.push(Violation {
+                    invariant: "membership",
+                    detail: format!(
+                        "leg {leg_i} node {t}: {regs} registrations vs \
+                         {evs} evictions cannot interleave as join/evict/rejoin"
+                    ),
+                });
+            }
+        }
+    }
+    // The last leg's final evicted set must be exactly the nodes whose
+    // membership history ends on an eviction.
+    let final_leg = evidence.last().expect("checked non-empty");
+    let final_result = legs.last().expect("checked non-empty").result;
+    for t in 0..expect.nodes {
+        let trace_says_evicted = final_leg.last_member_was_register[t] == Some(false);
+        let result_says_evicted = final_result.evicted_nodes.contains(&t);
+        if trace_says_evicted != result_says_evicted {
+            out.push(Violation {
+                invariant: "membership",
+                detail: format!(
+                    "node {t}: trace ends {} but the run reports it {}",
+                    if trace_says_evicted { "evicted" } else { "re-registered" },
+                    if result_says_evicted { "evicted" } else { "live/left" }
+                ),
+            });
+        }
+    }
+}
+
+/// Invariant 4: cohort commits respect the staleness bound in trace
+/// order. For each cohort commit of activation `k`, every *earlier*
+/// cohort commit's activation `k′` satisfies `k ≥ k′ − b` — because the
+/// committer passed the gate for `k` only after all live nodes had
+/// completed `k′ − b`, and commits precede completions.
+fn check_staleness_bound(
+    evidence: &[LegEvidence],
+    bound: u64,
+    expect: &Expectations,
+    out: &mut Vec<Violation>,
+) {
+    let in_cohort = |t: usize| expect.cohort.binary_search(&t).is_ok();
+    for (leg_i, ev) in evidence.iter().enumerate() {
+        // The gate is rebuilt (and primed from the durable horizon) per
+        // server lifetime, so the ordering argument resets per leg.
+        let mut running_max: Option<u64> = None;
+        for &(t, k) in &ev.commits {
+            if !in_cohort(t) {
+                continue;
+            }
+            if let Some(max_k) = running_max {
+                if k.saturating_add(bound) < max_k {
+                    out.push(Violation {
+                        invariant: "staleness-bound",
+                        detail: format!(
+                            "leg {leg_i}: cohort node {t} committed activation {k} \
+                             after activation {max_k} was already committed \
+                             (bound {bound})"
+                        ),
+                    });
+                }
+            }
+            running_max = Some(running_max.map_or(k, |m| m.max(k)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn result(per_node: &[u64], evicted: &[usize]) -> RunResult {
+        RunResult {
+            method: "amtl".into(),
+            wall_time: Duration::ZERO,
+            v_final: Mat::zeros(1, per_node.len()),
+            w_final: Mat::zeros(1, per_node.len()),
+            updates: per_node.iter().sum(),
+            updates_per_node: per_node.to_vec(),
+            prox_count: 0,
+            coalesced_updates: 0,
+            svd_refreshes: 0,
+            trajectory: Vec::new(),
+            mean_delay_secs: 0.0,
+            dropped_updates: 0,
+            crashed_nodes: Vec::new(),
+            compute_secs: 0.0,
+            backward_wait_secs: 0.0,
+            commit_wait_secs: 0.0,
+            mean_staleness: 0.0,
+            staleness_p50: 0,
+            staleness_p99: 0,
+            staleness_max: 0,
+            checkpoints_written: 0,
+            wal_replayed: 0,
+            evicted_nodes: evicted.to_vec(),
+        }
+    }
+
+    fn expectations(nodes: usize) -> Expectations {
+        Expectations {
+            nodes,
+            staleness_bound: None,
+            cohort: (0..nodes).collect(),
+            convergence_tol: 0.3,
+            membership: true,
+            evictions_guaranteed: true,
+        }
+    }
+
+    fn commit(t: usize, k: u64) -> String {
+        format!(r#"{{"ts_us":1,"event":"commit","node":{t},"k":{k},"version":1,"staleness":0}}"#)
+    }
+
+    fn register(t: usize, generation: u64) -> String {
+        format!(
+            r#"{{"ts_us":1,"event":"register","node":{t},"generation":{generation},"col_version":0}}"#
+        )
+    }
+
+    fn eviction(t: usize) -> String {
+        format!(r#"{{"ts_us":1,"event":"eviction","node":{t}}}"#)
+    }
+
+    fn write_trace(name: &str, lines: &[String]) -> PathBuf {
+        let dir = std::env::temp_dir().join("amtl-chaos-invariant-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{name}.jsonl"));
+        std::fs::write(&path, lines.join("\n")).unwrap();
+        path
+    }
+
+    #[test]
+    fn clean_run_passes_all_invariants() {
+        let lines = vec![
+            register(0, 1),
+            register(1, 1),
+            commit(0, 0),
+            commit(1, 0),
+            commit(0, 1),
+            eviction(1),
+            register(1, 2),
+            commit(1, 1),
+        ];
+        let path = write_trace("clean", &lines);
+        let r = result(&[2, 2], &[]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(2),
+        )
+        .unwrap();
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn duplicate_application_is_caught() {
+        let lines =
+            vec![register(0, 1), commit(0, 0), commit(0, 1), commit(0, 1)];
+        let path = write_trace("dup", &lines);
+        let r = result(&[3], &[]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(
+            v.iter().any(|v| v.invariant == "exactly-once" && v.detail.contains("duplicate")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn count_mismatch_is_caught() {
+        let lines = vec![register(0, 1), commit(0, 0)];
+        let path = write_trace("count", &lines);
+        let r = result(&[2], &[]); // worker claims 2, trace has 1
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(v.iter().any(|v| v.invariant == "exactly-once"), "{v:?}");
+    }
+
+    #[test]
+    fn commit_without_registration_is_caught() {
+        let lines = vec![commit(0, 0), register(0, 1)];
+        let path = write_trace("noreg", &lines);
+        let r = result(&[1], &[]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(v.iter().any(|v| v.invariant == "membership"), "{v:?}");
+    }
+
+    #[test]
+    fn eviction_bookkeeping_must_balance() {
+        // Two evictions but only one (re-)registration: impossible history.
+        let lines = vec![register(0, 1), eviction(0), eviction(0)];
+        let path = write_trace("balance", &lines);
+        let r = result(&[0], &[0]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(
+            v.iter().any(|v| v.invariant == "membership" && v.detail.contains("interleave")),
+            "{v:?}"
+        );
+        // Final-state disagreement: trace ends evicted, result says live.
+        let lines = vec![register(0, 1), eviction(0)];
+        let path = write_trace("finalstate", &lines);
+        let r = result(&[0], &[]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(
+            v.iter().any(|v| v.detail.contains("re-registered") || v.detail.contains("evicted")),
+            "{v:?}"
+        );
+        // A rejoin with no eviction in between is lawful exactly when
+        // short silent windows make eviction non-guaranteed.
+        let lines = vec![register(0, 1), register(0, 2)];
+        let path = write_trace("shortwindow", &lines);
+        let r = result(&[0], &[]);
+        let legs = [Leg { trace: &path, result: &r }];
+        let mut relaxed = expectations(1);
+        relaxed.evictions_guaranteed = false;
+        let v = check_invariants(&legs, 1.0, 1.0, &relaxed).unwrap();
+        assert!(v.is_empty(), "{v:?}");
+        let strict = check_invariants(&legs, 1.0, 1.0, &expectations(1)).unwrap();
+        assert!(strict.iter().any(|v| v.invariant == "membership"), "{strict:?}");
+    }
+
+    #[test]
+    fn generation_gaps_are_caught() {
+        let lines = vec![register(0, 1), eviction(0), register(0, 3)];
+        let path = write_trace("gen", &lines);
+        let r = result(&[0], &[]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(
+            v.iter().any(|v| v.invariant == "membership" && v.detail.contains("generation")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn staleness_bound_violation_is_caught_only_for_cohort() {
+        let lines = vec![
+            register(0, 1),
+            register(1, 1),
+            register(2, 1),
+            commit(0, 10),
+            commit(1, 0), // 0 + bound(2) < 10: violation if node 1 in cohort
+            commit(2, 0), // node 2 excluded from cohort: lawful burst
+        ];
+        let path = write_trace("stale", &lines);
+        let r = result(&[1, 1, 1], &[]);
+        let mut expect = expectations(3);
+        expect.staleness_bound = Some(2);
+        expect.cohort = vec![0, 1];
+        let v = check_invariants(&[Leg { trace: &path, result: &r }], 1.0, 1.0, &expect)
+            .unwrap();
+        let stale: Vec<_> =
+            v.iter().filter(|v| v.invariant == "staleness-bound").collect();
+        assert_eq!(stale.len(), 1, "{v:?}");
+        assert!(stale[0].detail.contains("node 1"), "{stale:?}");
+    }
+
+    #[test]
+    fn convergence_tolerance_is_enforced() {
+        let lines = vec![register(0, 1), commit(0, 0)];
+        let path = write_trace("conv", &lines);
+        let r = result(&[1], &[]);
+        let legs = [Leg { trace: &path, result: &r }];
+        let expect = expectations(1);
+        let ok = check_invariants(&legs, 1.2, 1.0, &expect).unwrap();
+        assert!(ok.iter().all(|v| v.invariant != "convergence"), "{ok:?}");
+        let bad = check_invariants(&legs, 1.5, 1.0, &expect).unwrap();
+        assert!(bad.iter().any(|v| v.invariant == "convergence"), "{bad:?}");
+        let nan = check_invariants(&legs, f64::NAN, 1.0, &expect).unwrap();
+        assert!(nan.iter().any(|v| v.invariant == "convergence"), "{nan:?}");
+    }
+
+    #[test]
+    fn multi_leg_counters_continue_across_restart() {
+        // Leg 1 applies activations 0..2 for node 0; the resumed leg must
+        // continue above them. A resumed leg that replayed an old k is a
+        // duplicate application even though it is leg-locally increasing.
+        let leg1 = write_trace("leg1", &[register(0, 1), commit(0, 0), commit(0, 1)]);
+        let leg2_ok = write_trace("leg2ok", &[register(0, 1), commit(0, 2)]);
+        let leg2_bad = write_trace("leg2bad", &[register(0, 1), commit(0, 1)]);
+        let r1 = result(&[2], &[]);
+        let r2 = result(&[1], &[]);
+        let expect = expectations(1);
+        let ok = check_invariants(
+            &[
+                Leg { trace: &leg1, result: &r1 },
+                Leg { trace: &leg2_ok, result: &r2 },
+            ],
+            1.0,
+            1.0,
+            &expect,
+        )
+        .unwrap();
+        assert!(ok.is_empty(), "{ok:?}");
+        let bad = check_invariants(
+            &[
+                Leg { trace: &leg1, result: &r1 },
+                Leg { trace: &leg2_bad, result: &r2 },
+            ],
+            1.0,
+            1.0,
+            &expect,
+        )
+        .unwrap();
+        assert!(bad.iter().any(|v| v.invariant == "exactly-once"), "{bad:?}");
+    }
+
+    #[test]
+    fn torn_final_line_is_tolerated_but_corrupt_middle_is_not() {
+        let mut lines = vec![register(0, 1), commit(0, 0)];
+        lines.push(r#"{"ts_us":9,"event":"com"#.to_string()); // torn tail
+        let path = write_trace("torn", &lines);
+        let r = result(&[1], &[]);
+        let v = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        )
+        .unwrap();
+        assert!(v.is_empty(), "{v:?}");
+        let lines =
+            vec![register(0, 1), "not json at all".to_string(), commit(0, 0)];
+        let path = write_trace("corrupt", &lines);
+        let err = check_invariants(
+            &[Leg { trace: &path, result: &r }],
+            1.0,
+            1.0,
+            &expectations(1),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn violation_displays_its_family() {
+        let v = Violation { invariant: "exactly-once", detail: "node 3".into() };
+        assert_eq!(format!("{v}"), "[exactly-once] node 3");
+    }
+}

@@ -1,0 +1,37 @@
+//! Chaos-at-scale harness: seed-reproducible fault storms with
+//! machine-checked invariants.
+//!
+//! The harness has three layers:
+//!
+//! * [`plan`] — a [`ChaosPlan`] is the complete, declarative description
+//!   of a storm (swarm shape, schedule, transport, [`StormSpec`] fault
+//!   mix). `materialize()` turns it into concrete [`FaultModel`] /
+//!   [`DelayModel`] instances deterministically from the plan's single
+//!   seed, so every failure reproduces from one printed integer.
+//! * [`storm`] — [`run_storm`] / [`run_resumed_storm`] execute the plan
+//!   (one server lifetime, or two joined by checkpoint/WAL recovery)
+//!   alongside an undisturbed reference run, collecting the JSONL obs
+//!   traces and [`RunResult`]s as evidence.
+//! * [`invariants`] — [`check_invariants`] replays that evidence and
+//!   machine-asserts four families: **exactly-once** commit application,
+//!   **convergence** within tolerance of the reference, **membership**
+//!   (eviction/re-register bookkeeping balances), and the **staleness
+//!   bound** over the never-flapped cohort's commit order.
+//!
+//! The harness is exercised in-tree (`cargo test`), by the CI smoke
+//! storm (`cargo run --example chaos_run -- --quick`), and by the
+//! opt-in soak suite (`AMTL_SOAK=1 cargo test --test soak_chaos`).
+//! See `docs/TESTING.md` for the invariant catalog and seed-reproduction
+//! workflow.
+//!
+//! [`FaultModel`]: crate::net::FaultModel
+//! [`DelayModel`]: crate::net::DelayModel
+//! [`RunResult`]: crate::coordinator::RunResult
+
+pub mod invariants;
+pub mod plan;
+pub mod storm;
+
+pub use invariants::{check_invariants, Expectations, Leg, Violation};
+pub use plan::{ChaosPlan, MaterializedStorm, ScheduleChoice, StormSpec};
+pub use storm::{run_resumed_storm, run_storm, StormReport};

@@ -1,0 +1,379 @@
+//! Composable, seed-reproducible chaos-run specifications.
+//!
+//! A [`ChaosPlan`] is the *entire* description of a fault storm: swarm
+//! size, schedule, transport, heartbeat cadence, and a [`StormSpec`]
+//! describing which fault families to compose. Everything random about
+//! the storm — which nodes flap, which sit behind slow links — is
+//! derived from the plan's single `seed` by [`ChaosPlan::materialize`],
+//! so a failing run reproduces from one printed integer.
+
+use crate::coordinator::{Async, Schedule, SemiSync, Synchronized};
+use crate::net::{DelayModel, FaultModel};
+use crate::transport::TransportKind;
+use crate::util::Rng;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Which update schedule the storm runs under. A storm is only a storm
+/// relative to a schedule: the same fault set that is a nuisance under
+/// [`Async`] is a liveness hazard under [`SemiSync`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleChoice {
+    /// Algorithm 1 / ARock free-running workers.
+    Async,
+    /// §III.B barrier rounds.
+    Synchronized,
+    /// Bounded staleness: no node runs more than `staleness_bound`
+    /// activations ahead of the slowest live node.
+    SemiSync {
+        /// The bound handed to [`SemiSync`].
+        staleness_bound: u64,
+    },
+}
+
+impl ScheduleChoice {
+    /// Instantiate the schedule for a session.
+    pub fn to_schedule(&self) -> Box<dyn Schedule> {
+        match self {
+            ScheduleChoice::Async => Box::new(Async),
+            ScheduleChoice::Synchronized => Box::new(Synchronized),
+            ScheduleChoice::SemiSync { staleness_bound } => {
+                Box::new(SemiSync { staleness_bound: *staleness_bound })
+            }
+        }
+    }
+
+    /// The staleness bound, when this choice has one.
+    pub fn staleness_bound(&self) -> Option<u64> {
+        match self {
+            ScheduleChoice::SemiSync { staleness_bound } => Some(*staleness_bound),
+            _ => None,
+        }
+    }
+
+    /// The schedule's method name ("amtl" | "smtl" | "semisync").
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleChoice::Async => "amtl",
+            ScheduleChoice::Synchronized => "smtl",
+            ScheduleChoice::SemiSync { .. } => "semisync",
+        }
+    }
+
+    /// True for the free-running schedules, whose workers register with
+    /// the membership registry (the [`Synchronized`] round loop never
+    /// registers — its barrier already is the liveness mechanism).
+    pub fn registers_membership(&self) -> bool {
+        !matches!(self, ScheduleChoice::Synchronized)
+    }
+}
+
+/// The fault-storm half of a plan: which fault families to inject and at
+/// what intensity. Node *selection* happens in
+/// [`ChaosPlan::materialize`], deterministically from the plan seed.
+#[derive(Clone, Debug)]
+pub struct StormSpec {
+    /// Per-activation probability that a node's update is lost in
+    /// transit ([`FaultModel::DropActivation`]).
+    pub drop_p: f64,
+    /// Fraction of nodes that go silently down mid-run and come back
+    /// (a correlated [`FaultModel::CrashRestart`] wave).
+    pub flap_fraction: f64,
+    /// Length of each flapping node's silent window, in activations.
+    pub flap_down_for: u64,
+    /// Activation at which the first wave member goes down.
+    pub flap_start: u64,
+    /// Stagger between consecutive wave members' `down_from` (0 = the
+    /// whole wave drops at once — the most correlated storm).
+    pub flap_spacing: u64,
+    /// Fraction of nodes that sit behind a slow link (stragglers).
+    pub straggler_fraction: f64,
+    /// The stragglers' delay offset (plus an exponential tail of half
+    /// this mean, the paper's AMTL-k network model).
+    pub straggler_offset: Duration,
+    /// Uniform jitter every non-straggler node sees per activation.
+    pub base_jitter: Duration,
+}
+
+impl Default for StormSpec {
+    /// A mild but complete storm: every fault family is represented.
+    fn default() -> StormSpec {
+        StormSpec {
+            drop_p: 0.1,
+            flap_fraction: 0.25,
+            flap_down_for: 8,
+            flap_start: 4,
+            flap_spacing: 1,
+            straggler_fraction: 0.125,
+            straggler_offset: Duration::from_millis(4),
+            base_jitter: Duration::from_millis(1),
+        }
+    }
+}
+
+/// A complete chaos-run specification. Two plans with equal fields
+/// materialize bit-identical storms; the `seed` alone fixes the random
+/// choices, so a violation report only needs to print the seed (plus the
+/// plan constructor it came from) to be reproducible.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    /// Number of task nodes in the swarm.
+    pub nodes: usize,
+    /// Activation budget per node.
+    pub iters_per_node: usize,
+    /// Root seed: data/worker RNG streams *and* storm materialization.
+    pub seed: u64,
+    /// The schedule under test.
+    pub schedule: ScheduleChoice,
+    /// Worker↔server edge: shared memory or real loopback sockets.
+    pub transport: TransportKind,
+    /// Heartbeat interval (elastic membership is always on under chaos —
+    /// silent windows without eviction stall bounded-staleness runs and
+    /// leave the membership invariant with nothing to check).
+    pub heartbeat: Duration,
+    /// Wall-clock length of one simulated delay unit.
+    pub time_scale: Duration,
+    /// Fixed KM relaxation step.
+    pub eta_k: f64,
+    /// The fault storm to compose.
+    pub storm: StormSpec,
+    /// Relative tolerance for the convergence invariant: the storm run's
+    /// final objective must be ≤ `(1 + tol) ×` the undisturbed
+    /// reference's.
+    pub convergence_tol: f64,
+}
+
+/// A plan's storm, made concrete: the composed fault model, the
+/// heterogeneous delay table, and the node sets each family targets
+/// (the invariant checker uses `flapped` to pick the cohort whose
+/// commits the staleness bound provably orders).
+#[derive(Clone, Debug)]
+pub struct MaterializedStorm {
+    /// The composed fault model ([`FaultModel::Compose`]).
+    pub faults: FaultModel,
+    /// Per-node delay table ([`DelayModel::PerNode`]).
+    pub delay: DelayModel,
+    /// Nodes with a silent crash/restart window, ascending.
+    pub flapped: Vec<usize>,
+    /// Nodes behind the slow link, ascending.
+    pub stragglers: Vec<usize>,
+}
+
+impl ChaosPlan {
+    /// A plan with the default mild storm over the given swarm shape.
+    pub fn new(nodes: usize, iters_per_node: usize, seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            nodes,
+            iters_per_node,
+            seed,
+            schedule: ScheduleChoice::Async,
+            transport: TransportKind::InProc,
+            heartbeat: Duration::from_millis(10),
+            time_scale: Duration::from_millis(1),
+            eta_k: 0.5,
+            storm: StormSpec::default(),
+            convergence_tol: 0.35,
+        }
+    }
+
+    /// Number of flapping nodes this plan's storm selects.
+    pub fn flap_count(&self) -> usize {
+        ((self.storm.flap_fraction * self.nodes as f64).round() as usize).min(self.nodes)
+    }
+
+    /// Number of straggler nodes this plan's storm selects.
+    pub fn straggler_count(&self) -> usize {
+        ((self.storm.straggler_fraction * self.nodes as f64).round() as usize).min(self.nodes)
+    }
+
+    /// Reject plans that cannot run to completion or whose invariants
+    /// would be vacuous. The [`SemiSync`] rule is a liveness proof
+    /// obligation: a flapping node that is neither evicted while silent
+    /// (window ≥ 4 heartbeat-length sleeps, past the 3× eviction
+    /// timeout) nor within the staleness bound of its stalled gate slot
+    /// (window ≤ bound) would park at the gate behind its own counter,
+    /// heartbeating itself live forever.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.nodes >= 1, "chaos plan needs at least one node");
+        anyhow::ensure!(self.iters_per_node >= 1, "chaos plan needs a positive budget");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.storm.drop_p),
+            "drop_p must be in [0, 1): 1.0 would drop every commit"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.storm.flap_fraction)
+                && (0.0..=1.0).contains(&self.storm.straggler_fraction),
+            "node fractions must be in [0, 1]"
+        );
+        anyhow::ensure!(!self.heartbeat.is_zero(), "heartbeat interval must be positive");
+        if self.flap_count() > 0 {
+            let last_return = self.storm.flap_start
+                + self.storm.flap_spacing * (self.flap_count() as u64 - 1)
+                + self.storm.flap_down_for;
+            anyhow::ensure!(
+                last_return < self.iters_per_node as u64,
+                "flap windows must end inside the activation budget \
+                 (last node returns at {last_return}, budget {}): otherwise \
+                 the wave never rejoins and the re-register balance is vacuous",
+                self.iters_per_node
+            );
+            if let Some(bound) = self.schedule.staleness_bound() {
+                anyhow::ensure!(
+                    self.storm.flap_down_for <= bound || self.storm.flap_down_for >= 4,
+                    "a semisync flap window of {} activations is neither within \
+                     the staleness bound ({bound}) nor long enough (≥ 4) to \
+                     guarantee eviction before the node returns",
+                    self.storm.flap_down_for
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Make the storm concrete. Deterministic: the same plan always
+    /// selects the same nodes and builds the same models. Crash/restart
+    /// children are composed *before* the drop storm so per-node
+    /// targeting never perturbs other nodes' drop-RNG sequences
+    /// (see [`FaultModel::Compose`] on ordering).
+    pub fn materialize(&self) -> MaterializedStorm {
+        // A fixed stream id keeps storm materialization independent of
+        // the data/worker streams forked from the same root seed.
+        let mut rng = Rng::new(self.seed).fork(0x5701_3a5e);
+        let flapped = pick_nodes(&mut rng, self.nodes, self.flap_count());
+        let stragglers = pick_nodes(&mut rng, self.nodes, self.straggler_count());
+
+        let mut children: Vec<FaultModel> = flapped
+            .iter()
+            .enumerate()
+            .map(|(i, &node)| FaultModel::CrashRestart {
+                node,
+                down_from: self.storm.flap_start + i as u64 * self.storm.flap_spacing,
+                down_for: self.storm.flap_down_for,
+            })
+            .collect();
+        if self.storm.drop_p > 0.0 {
+            children.push(FaultModel::DropActivation { p: self.storm.drop_p });
+        }
+        let faults =
+            if children.is_empty() { FaultModel::None } else { FaultModel::Compose(children) };
+
+        let per_node = (0..self.nodes)
+            .map(|t| {
+                Box::new(if stragglers.binary_search(&t).is_ok() {
+                    DelayModel::paper_offset(self.storm.straggler_offset)
+                } else {
+                    DelayModel::OffsetJitter {
+                        offset: Duration::ZERO,
+                        jitter: self.storm.base_jitter,
+                    }
+                })
+            })
+            .collect();
+        let delay = DelayModel::PerNode { per_node };
+
+        MaterializedStorm { faults, delay, flapped, stragglers }
+    }
+
+    /// The nodes *never* targeted by a silent window — the cohort whose
+    /// commit order the staleness bound provably constrains (a flapped
+    /// node is deactivated from the gate on eviction and may lawfully
+    /// burst old activations when it rejoins).
+    pub fn cohort(&self, storm: &MaterializedStorm) -> Vec<usize> {
+        (0..self.nodes).filter(|t| storm.flapped.binary_search(t).is_err()).collect()
+    }
+}
+
+/// Choose `count` distinct nodes out of `n`, ascending, deterministically
+/// from `rng` (a full Fisher–Yates shuffle, then the prefix — the extra
+/// draws keep the selection's distribution uniform for every `count`).
+fn pick_nodes(rng: &mut Rng, n: usize, count: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    idx.truncate(count);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn materialize_is_deterministic_in_the_seed() {
+        let plan = ChaosPlan::new(32, 40, 4242);
+        let a = plan.materialize();
+        let b = plan.materialize();
+        assert_eq!(a.flapped, b.flapped);
+        assert_eq!(a.stragglers, b.stragglers);
+        assert_eq!(a.flapped.len(), plan.flap_count());
+        assert_eq!(a.stragglers.len(), plan.straggler_count());
+        // A different seed picks a different wave (with 32C8 choices the
+        // odds of a collision are negligible; a fixed pair keeps this
+        // deterministic rather than flaky).
+        let other = ChaosPlan::new(32, 40, 4243).materialize();
+        assert_ne!(a.flapped, other.flapped);
+    }
+
+    #[test]
+    fn materialized_fault_targets_match_the_flap_set() {
+        let plan = ChaosPlan::new(16, 40, 77);
+        let storm = plan.materialize();
+        for &t in &storm.flapped {
+            let down_from = (0..plan.iters_per_node as u64)
+                .find(|&k| storm.faults.offline_at(t, k))
+                .expect("flapped node has a window");
+            // The window has exactly the planned length.
+            let width = (down_from..plan.iters_per_node as u64)
+                .take_while(|&k| storm.faults.offline_at(t, k))
+                .count() as u64;
+            assert_eq!(width, plan.storm.flap_down_for);
+        }
+        for t in plan.cohort(&storm) {
+            assert!(
+                (0..plan.iters_per_node as u64).all(|k| !storm.faults.offline_at(t, k)),
+                "cohort node {t} must never be offline"
+            );
+        }
+        assert!(storm.faults.has_silent_window());
+    }
+
+    #[test]
+    fn straggler_delays_dominate_the_base_jitter() {
+        let plan = ChaosPlan::new(16, 40, 909);
+        let storm = plan.materialize();
+        let strag = *storm.stragglers.first().expect("16 × 0.125 = 2 stragglers");
+        let other = (0..16).find(|t| storm.stragglers.binary_search(t).is_err()).unwrap();
+        assert!(storm.delay.mean(strag) > storm.delay.mean(other));
+    }
+
+    #[test]
+    fn validate_rejects_unsound_plans() {
+        let mut plan = ChaosPlan::new(8, 10, 1);
+        // Default flap windows (start 4 + down 8 = 12) overrun a 10-iter
+        // budget: the wave would never rejoin.
+        assert!(plan.validate().is_err());
+        plan.iters_per_node = 40;
+        plan.validate().unwrap();
+        // A semisync window between the bound and the eviction threshold
+        // can park a node behind its own stalled gate slot.
+        plan.schedule = ScheduleChoice::SemiSync { staleness_bound: 2 };
+        plan.storm.flap_down_for = 3;
+        assert!(plan.validate().is_err());
+        plan.storm.flap_down_for = 8;
+        plan.validate().unwrap();
+        plan.storm.drop_p = 1.0;
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn schedule_choice_maps_to_schedules() {
+        assert_eq!(ScheduleChoice::Async.to_schedule().name(), "amtl");
+        assert_eq!(ScheduleChoice::Synchronized.to_schedule().name(), "smtl");
+        let ss = ScheduleChoice::SemiSync { staleness_bound: 3 };
+        assert_eq!(ss.to_schedule().name(), "semisync");
+        assert_eq!(ss.staleness_bound(), Some(3));
+        assert_eq!(ScheduleChoice::Async.staleness_bound(), None);
+        assert!(ScheduleChoice::Async.registers_membership());
+        assert!(!ScheduleChoice::Synchronized.registers_membership());
+    }
+}

@@ -1,0 +1,330 @@
+//! Drive a [`ChaosPlan`]: reference run, storm run(s), invariant check.
+//!
+//! [`run_storm`] executes the plan as one uninterrupted server lifetime;
+//! [`run_resumed_storm`] splits the same budget across two lifetimes
+//! joined by the checkpoint/WAL recovery path (half the budget, polite
+//! shutdown, `resume` into the same directory), so the exactly-once and
+//! membership invariants are checked *across* a restart — the in-process
+//! counterpart of the SIGKILL tests in `rust/tests/integration_persist.rs`.
+//! Either way the storm's evidence (JSONL traces + [`RunResult`]s) is
+//! handed to [`check_invariants`] and the outcome is a [`StormReport`]
+//! whose `repro_line` reproduces any failure from the printed seed.
+
+use super::invariants::{check_invariants, Expectations, Leg, Violation};
+use super::plan::{ChaosPlan, MaterializedStorm};
+use crate::coordinator::{MtlProblem, RunResult, Session};
+use crate::obs::TraceWriter;
+use crate::transport::TransportKind;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Everything a storm produced: the runs, their evidence, and the
+/// verdict. Failures print [`StormReport::repro_line`] so the exact
+/// storm reruns from one seed.
+#[derive(Debug)]
+pub struct StormReport {
+    /// The plan that ran.
+    pub plan: ChaosPlan,
+    /// Nodes the storm flapped (silent crash/restart windows).
+    pub flapped: Vec<usize>,
+    /// Nodes the storm put behind the slow link.
+    pub stragglers: Vec<usize>,
+    /// The undisturbed reference run (same schedule, seed, budget).
+    pub reference: RunResult,
+    /// The storm run's legs, in order (one, or two when resumed).
+    pub legs: Vec<RunResult>,
+    /// One JSONL trace per leg, same order.
+    pub trace_paths: Vec<PathBuf>,
+    /// Final objective of the reference run.
+    pub objective_reference: f64,
+    /// Final objective of the storm run (its last leg).
+    pub objective_chaos: f64,
+    /// Every invariant violation found (empty = the storm passed).
+    pub violations: Vec<Violation>,
+}
+
+impl StormReport {
+    /// True when every invariant held.
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// The one line to paste to rerun this exact storm.
+    pub fn repro_line(&self) -> String {
+        format!(
+            "chaos repro: seed={} nodes={} iters={} schedule={} transport={} legs={}",
+            self.plan.seed,
+            self.plan.nodes,
+            self.plan.iters_per_node,
+            self.plan.schedule.name(),
+            match self.plan.transport {
+                TransportKind::InProc => "inproc",
+                TransportKind::Tcp => "tcp",
+            },
+            self.legs.len(),
+        )
+    }
+
+    /// One-line outcome summary (for logs and the example's output).
+    pub fn summary(&self) -> String {
+        let last = self.legs.last().expect("a storm has at least one leg");
+        format!(
+            "{}: {} nodes, {} updates, {} dropped, evicted {:?}, \
+             objective {:.4} vs reference {:.4} — {}",
+            self.plan.schedule.name(),
+            self.plan.nodes,
+            last.updates,
+            last.dropped_updates,
+            last.evicted_nodes,
+            self.objective_chaos,
+            self.objective_reference,
+            if self.passed() {
+                "all invariants held".to_string()
+            } else {
+                format!("{} VIOLATION(S)", self.violations.len())
+            }
+        )
+    }
+}
+
+/// Run the plan as one uninterrupted server lifetime.
+pub fn run_storm(
+    problem: &MtlProblem,
+    plan: &ChaosPlan,
+    artifact_dir: &Path,
+) -> Result<StormReport> {
+    run(problem, plan, artifact_dir, false)
+}
+
+/// Run the plan across a checkpoint/WAL restart: the first leg runs half
+/// the budget with durability on, the second resumes from the recovered
+/// horizon and finishes it. Invariants are checked over both legs'
+/// concatenated evidence.
+pub fn run_resumed_storm(
+    problem: &MtlProblem,
+    plan: &ChaosPlan,
+    artifact_dir: &Path,
+) -> Result<StormReport> {
+    run(problem, plan, artifact_dir, true)
+}
+
+fn run(
+    problem: &MtlProblem,
+    plan: &ChaosPlan,
+    artifact_dir: &Path,
+    resumed: bool,
+) -> Result<StormReport> {
+    plan.validate()?;
+    anyhow::ensure!(
+        problem.t() == plan.nodes,
+        "plan is for {} nodes but the problem has {} tasks",
+        plan.nodes,
+        problem.t()
+    );
+    std::fs::create_dir_all(artifact_dir)
+        .with_context(|| format!("creating artifact dir {}", artifact_dir.display()))?;
+    let storm = plan.materialize();
+
+    // The undisturbed twin: same schedule, seed and budget; no faults,
+    // no delays, shared-memory transport. Its objective anchors the
+    // convergence invariant.
+    let reference = Session::builder(problem)
+        .iters_per_node(plan.iters_per_node)
+        .eta_k(plan.eta_k)
+        .seed(plan.seed)
+        .schedule_box(plan.schedule.to_schedule())
+        .build()?
+        .run()?;
+
+    let mut legs = Vec::new();
+    let mut trace_paths = Vec::new();
+    if resumed {
+        let ckpt = artifact_dir.join(format!("ckpt-{}-{}", plan.schedule.name(), plan.seed));
+        // A fresh directory per storm: recovery must see only this
+        // storm's snapshots and WAL.
+        if ckpt.exists() {
+            std::fs::remove_dir_all(&ckpt)?;
+        }
+        let first_budget = (plan.iters_per_node / 2).max(1);
+        let leg1 = run_leg(
+            problem,
+            plan,
+            &storm,
+            &leg_trace_path(artifact_dir, plan, 0),
+            first_budget,
+            Some(&ckpt),
+            false,
+        )?;
+        trace_paths.push(leg_trace_path(artifact_dir, plan, 0));
+        legs.push(leg1);
+        let leg2 = run_leg(
+            problem,
+            plan,
+            &storm,
+            &leg_trace_path(artifact_dir, plan, 1),
+            plan.iters_per_node,
+            Some(&ckpt),
+            true,
+        )?;
+        trace_paths.push(leg_trace_path(artifact_dir, plan, 1));
+        legs.push(leg2);
+    } else {
+        let leg = run_leg(
+            problem,
+            plan,
+            &storm,
+            &leg_trace_path(artifact_dir, plan, 0),
+            plan.iters_per_node,
+            None,
+            false,
+        )?;
+        trace_paths.push(leg_trace_path(artifact_dir, plan, 0));
+        legs.push(leg);
+    }
+
+    let objective_reference = problem.objective(&reference.w_final);
+    let objective_chaos =
+        problem.objective(&legs.last().expect("at least one leg").w_final);
+    // Strict eviction/re-register interleaving is provable only when
+    // every silent window is long enough (≥ 4 heartbeat-length sleeps,
+    // past the 3× eviction timeout) to guarantee eviction before the
+    // node's unconditional rejoin register. A resumed leg breaks that
+    // proof for flapped nodes: the restart lands at the applied-commit
+    // horizon, which can sit *inside* the k-indexed window, leaving only
+    // a short tail of silence — so resumed storms with flaps fall back
+    // to the one-sided balance (evictions ≤ registrations).
+    let expect = Expectations {
+        nodes: plan.nodes,
+        staleness_bound: plan.schedule.staleness_bound(),
+        cohort: plan.cohort(&storm),
+        convergence_tol: plan.convergence_tol,
+        membership: plan.schedule.registers_membership(),
+        evictions_guaranteed: storm.flapped.is_empty()
+            || (!resumed && plan.storm.flap_down_for >= 4),
+    };
+    let leg_refs: Vec<Leg<'_>> = legs
+        .iter()
+        .zip(&trace_paths)
+        .map(|(result, trace)| Leg { trace, result })
+        .collect();
+    let violations =
+        check_invariants(&leg_refs, objective_chaos, objective_reference, &expect)?;
+
+    Ok(StormReport {
+        plan: plan.clone(),
+        flapped: storm.flapped,
+        stragglers: storm.stragglers,
+        reference,
+        legs,
+        trace_paths,
+        objective_reference,
+        objective_chaos,
+        violations,
+    })
+}
+
+fn leg_trace_path(artifact_dir: &Path, plan: &ChaosPlan, leg: usize) -> PathBuf {
+    artifact_dir.join(format!(
+        "storm-{}-{}-leg{leg}.trace.jsonl",
+        plan.schedule.name(),
+        plan.seed
+    ))
+}
+
+fn run_leg(
+    problem: &MtlProblem,
+    plan: &ChaosPlan,
+    storm: &MaterializedStorm,
+    trace_path: &Path,
+    iters: usize,
+    checkpoint_dir: Option<&Path>,
+    resume: bool,
+) -> Result<RunResult> {
+    let trace = Arc::new(TraceWriter::create(trace_path)?);
+    let mut builder = Session::builder(problem)
+        .iters_per_node(iters)
+        .eta_k(plan.eta_k)
+        .seed(plan.seed)
+        .time_scale(plan.time_scale)
+        .delay(storm.delay.clone())
+        .faults(storm.faults.clone())
+        .heartbeat(Some(plan.heartbeat))
+        .trace(Some(trace))
+        .transport(plan.transport)
+        .schedule_box(plan.schedule.to_schedule());
+    if let Some(dir) = checkpoint_dir {
+        builder = builder.checkpoint_dir(Some(dir.to_path_buf())).checkpoint_every(4);
+    }
+    builder.resume(resume).build()?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::plan::ScheduleChoice;
+    use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
+    use crate::util::Rng;
+
+    fn problem(seed: u64, t: usize) -> MtlProblem {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic::lowrank_regression(&vec![24; t], 6, 2, 0.05, &mut rng);
+        MtlProblem::new(ds, RegularizerKind::Nuclear, 0.2, 0.5, &mut rng)
+    }
+
+    fn artifact_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("amtl-chaos-storm-tests").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn mini_async_storm_passes_all_invariants() {
+        let p = problem(3100, 8);
+        let plan = ChaosPlan::new(8, 24, 3100);
+        let report = run_storm(&p, &plan, &artifact_dir("mini-async")).unwrap();
+        assert!(report.passed(), "{:?}\n{}", report.violations, report.repro_line());
+        let last = report.legs.last().unwrap();
+        assert!(last.updates > 0);
+        // The wave flapped and came back: evictions happened, nobody is
+        // still evicted at the end, and the report knows who flapped.
+        assert_eq!(report.flapped.len(), plan.flap_count());
+        assert!(last.evicted_nodes.is_empty(), "evicted: {:?}", last.evicted_nodes);
+        assert!(report.trace_paths[0].exists());
+        assert!(report.repro_line().contains("seed=3100"));
+    }
+
+    #[test]
+    fn mini_resumed_storm_checks_across_the_restart() {
+        let p = problem(3200, 6);
+        let mut plan = ChaosPlan::new(6, 24, 3200);
+        plan.storm.flap_start = 2;
+        plan.storm.flap_down_for = 6;
+        let report = run_resumed_storm(&p, &plan, &artifact_dir("mini-resumed")).unwrap();
+        assert!(report.passed(), "{:?}\n{}", report.violations, report.repro_line());
+        assert_eq!(report.legs.len(), 2);
+        assert_eq!(report.trace_paths.len(), 2);
+        // The second leg actually recovered durable state.
+        assert!(report.legs[1].wal_replayed > 0 || report.legs[1].updates > 0);
+        assert!(report.repro_line().contains("legs=2"));
+    }
+
+    #[test]
+    fn storm_rejects_mismatched_problem_shape() {
+        let p = problem(3300, 4);
+        let plan = ChaosPlan::new(8, 24, 3300);
+        let err = run_storm(&p, &plan, &artifact_dir("mismatch")).unwrap_err();
+        assert!(format!("{err}").contains("nodes"), "{err}");
+    }
+
+    #[test]
+    fn semisync_storm_checks_the_staleness_bound() {
+        let p = problem(3400, 8);
+        let mut plan = ChaosPlan::new(8, 24, 3400);
+        plan.schedule = ScheduleChoice::SemiSync { staleness_bound: 4 };
+        let report = run_storm(&p, &plan, &artifact_dir("mini-semisync")).unwrap();
+        assert!(report.passed(), "{:?}\n{}", report.violations, report.repro_line());
+        assert!(report.summary().contains("semisync"));
+    }
+}

@@ -58,6 +58,8 @@ struct ServerObs {
     staleness: Arc<Histogram>,
     /// `server.prox_us.<reg-id>` — wall time per uncached backward step.
     prox_us: Arc<Histogram>,
+    /// `server.registrations` — node joins/rejoins (generation bumps).
+    registrations: Arc<AtomicU64>,
 }
 
 impl ServerObs {
@@ -69,6 +71,7 @@ impl ServerObs {
             version: g.gauge("server.version"),
             staleness: g.hist("server.staleness"),
             prox_us: g.hist(&format!("server.prox_us.{reg_id}")),
+            registrations: g.counter("server.registrations"),
         }
     }
 }
@@ -524,6 +527,33 @@ impl CentralServer {
     /// re-registering node catches up from).
     pub fn applied_commits(&self, t: usize) -> u64 {
         self.applied_k[t].load(Ordering::Acquire)
+    }
+
+    /// Join (or rejoin) the run as task node `t`: bump its membership
+    /// generation in the registry (when one is attached) and report the
+    /// column's applied-commit horizon so a restarted node resumes instead
+    /// of redoing finished activations. This is the single registration
+    /// path — both the in-proc and the TCP transport land here — and it
+    /// emits a `"register"` trace event (with the generation and the
+    /// catch-up horizon), which is what lets the chaos invariant checker
+    /// balance every eviction against a later re-registration.
+    pub fn register_node(&self, t: usize) -> crate::transport::RegisterAck {
+        let generation = self.registry.as_ref().map(|r| r.register(t)).unwrap_or(0);
+        let col_version = self.applied_commits(t);
+        self.obs.registrations.fetch_add(1, Ordering::Relaxed);
+        if let Some(tr) = &self.trace {
+            tr.event(
+                "register",
+                Some(t),
+                None,
+                None,
+                &[
+                    ("generation", Json::Num(generation as f64)),
+                    ("col_version", Json::Num(col_version as f64)),
+                ],
+            );
+        }
+        crate::transport::RegisterAck { col_version, generation }
     }
 
     /// Re-apply one WAL entry during recovery (no re-logging — the entry

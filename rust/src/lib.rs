@@ -106,11 +106,24 @@
 //! predict` queries it, and `examples/load_gen.rs` measures it under
 //! load while training runs live.
 //!
+//! ## The chaos harness
+//!
+//! Fault tolerance is asserted, not assumed ([`chaos`], `docs/TESTING.md`):
+//! a [`chaos::ChaosPlan`] materializes a seed-reproducible storm —
+//! correlated crash/restart waves, per-activation drops, straggler links —
+//! over a swarm of task nodes, runs it alongside an undisturbed reference,
+//! and [`chaos::check_invariants`] machine-checks the evidence for
+//! exactly-once commit application, convergence within tolerance,
+//! balanced eviction/re-register bookkeeping, and the semi-sync staleness
+//! bound. Every failure reproduces from one printed seed
+//! (`cargo run --example chaos_run -- --quick`; `AMTL_SOAK=1` for soaks).
+//!
 //! Also see the `amtl` CLI (`rust/src/main.rs`), the runnable
 //! `examples/`, and `docs/ARCHITECTURE.md` for the paper-to-code map.
 
 #![warn(missing_docs)]
 
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

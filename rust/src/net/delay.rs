@@ -62,7 +62,13 @@ impl DelayModel {
                 Duration::from_secs_f64(rng.exponential(1.0 / mean.as_secs_f64().max(1e-12)))
             }
             DelayModel::PerNode { per_node } => {
-                return per_node[node % per_node.len()].sample(node, rng)
+                // An empty table means "no injected delay" rather than a
+                // mod-by-zero panic: chaos plans build these tables
+                // programmatically and may legitimately produce no entries.
+                return match per_node.get(node % per_node.len().max(1)) {
+                    Some(m) => m.sample(node, rng),
+                    None => DelaySample { duration: Duration::ZERO },
+                };
             }
         };
         DelaySample { duration }
@@ -75,7 +81,9 @@ impl DelayModel {
             DelayModel::OffsetJitter { offset, jitter } => *offset + jitter.mul_f64(0.5),
             DelayModel::OffsetExp { offset, mean } => *offset + *mean,
             DelayModel::Poisson { mean } => *mean,
-            DelayModel::PerNode { per_node } => per_node[node % per_node.len()].mean(node),
+            DelayModel::PerNode { per_node } => per_node
+                .get(node % per_node.len().max(1))
+                .map_or(Duration::ZERO, |m| m.mean(node)),
         }
     }
 }

@@ -43,8 +43,13 @@ pub enum FaultModel {
     /// Node `node` dies silently at activation `down_from` and restarts
     /// `down_for` activations later (a kill-and-resume mid-training).
     CrashRestart { node: usize, down_from: u64, down_for: u64 },
-    /// Compose: first matching non-Ok outcome wins.
-    Both { drop_p: f64, crash_node: usize, crash_after: u64 },
+    /// General composition: children are evaluated **in order** and the
+    /// first non-[`FaultOutcome::Ok`] outcome wins. Ordering matters for
+    /// probabilistic children (a child that returns non-Ok short-circuits
+    /// the RNG draws of every child after it), so put deterministic
+    /// faults (crashes, restart windows) before random ones (drops) when
+    /// reproducibility across fault-set edits matters.
+    Compose(Vec<FaultModel>),
 }
 
 impl FaultModel {
@@ -73,16 +78,28 @@ impl FaultModel {
                     FaultOutcome::Ok
                 }
             }
-            FaultModel::Both { drop_p, crash_node, crash_after } => {
-                if node == *crash_node && k >= *crash_after {
-                    FaultOutcome::Crashed
-                } else if rng.bool(*drop_p) {
-                    FaultOutcome::Dropped
-                } else {
-                    FaultOutcome::Ok
+            FaultModel::Compose(children) => {
+                for child in children {
+                    let o = child.outcome(node, k, rng);
+                    if o != FaultOutcome::Ok {
+                        return o;
+                    }
                 }
+                FaultOutcome::Ok
             }
         }
+    }
+
+    /// The old two-fault shape — a permanent crash of one node plus an
+    /// i.i.d. drop storm — expressed as a [`FaultModel::Compose`] with
+    /// the crash checked first (preserving the historical RNG-draw
+    /// order: no drop probability is consumed on a crashed activation).
+    #[deprecated(note = "use FaultModel::Compose for arbitrary fault combinations")]
+    pub fn both(drop_p: f64, crash_node: usize, crash_after: u64) -> FaultModel {
+        FaultModel::Compose(vec![
+            FaultModel::CrashAfter { node: crash_node, after: crash_after },
+            FaultModel::DropActivation { p: drop_p },
+        ])
     }
 
     /// True when `node` is inside a silent-down window at activation `k`.
@@ -94,6 +111,7 @@ impl FaultModel {
             FaultModel::CrashRestart { node: n, down_from, down_for } => {
                 node == *n && k >= *down_from && k < down_from.saturating_add(*down_for)
             }
+            FaultModel::Compose(children) => children.iter().any(|c| c.offline_at(node, k)),
             _ => false,
         }
     }
@@ -102,7 +120,11 @@ impl FaultModel {
     /// by schedule validation: such a window needs heartbeat eviction to
     /// avoid stalling barrier-free bounded-staleness runs).
     pub fn has_silent_window(&self) -> bool {
-        matches!(self, FaultModel::CrashRestart { .. })
+        match self {
+            FaultModel::CrashRestart { .. } => true,
+            FaultModel::Compose(children) => children.iter().any(|c| c.has_silent_window()),
+            _ => false,
+        }
     }
 }
 
@@ -156,10 +178,69 @@ mod tests {
     }
 
     #[test]
-    fn both_composes() {
+    #[allow(deprecated)]
+    fn both_constructor_composes() {
         let mut rng = Rng::new(303);
-        let m = FaultModel::Both { drop_p: 1.0, crash_node: 2, crash_after: 0 };
+        let m = FaultModel::both(1.0, 2, 0);
         assert_eq!(m.outcome(2, 0, &mut rng), FaultOutcome::Crashed);
         assert_eq!(m.outcome(1, 0, &mut rng), FaultOutcome::Dropped);
+    }
+
+    #[test]
+    fn compose_first_non_ok_wins() {
+        let mut rng = Rng::new(305);
+        // Crash listed before a certain drop: the crash wins on its node.
+        let m = FaultModel::Compose(vec![
+            FaultModel::CrashAfter { node: 0, after: 0 },
+            FaultModel::DropActivation { p: 1.0 },
+        ]);
+        assert_eq!(m.outcome(0, 5, &mut rng), FaultOutcome::Crashed);
+        assert_eq!(m.outcome(1, 5, &mut rng), FaultOutcome::Dropped);
+        // Reversed order: the drop shadows the crash everywhere.
+        let m = FaultModel::Compose(vec![
+            FaultModel::DropActivation { p: 1.0 },
+            FaultModel::CrashAfter { node: 0, after: 0 },
+        ]);
+        assert_eq!(m.outcome(0, 5, &mut rng), FaultOutcome::Dropped);
+    }
+
+    #[test]
+    fn compose_short_circuits_rng_draws() {
+        // A non-Ok child must stop evaluation before later probabilistic
+        // children consume RNG state, so per-node fault targeting does
+        // not perturb other nodes' drop sequences.
+        let drop = FaultModel::DropActivation { p: 0.5 };
+        let m = FaultModel::Compose(vec![
+            FaultModel::CrashRestart { node: 0, down_from: 0, down_for: u64::MAX },
+            drop.clone(),
+        ]);
+        let mut rng_a = Rng::new(306);
+        let mut rng_b = Rng::new(306);
+        for k in 0..200 {
+            // Node 0 is offline: no draw happens, outcome deterministic.
+            assert_eq!(m.outcome(0, k, &mut rng_a), FaultOutcome::Offline);
+            // Node 1 sees exactly the plain drop model's sequence.
+            assert_eq!(m.outcome(1, k, &mut rng_a), drop.outcome(1, k, &mut rng_b));
+        }
+    }
+
+    #[test]
+    fn compose_targets_nodes_independently() {
+        let mut rng = Rng::new(307);
+        let m = FaultModel::Compose(vec![
+            FaultModel::CrashRestart { node: 1, down_from: 2, down_for: 3 },
+            FaultModel::CrashRestart { node: 4, down_from: 0, down_for: 2 },
+            FaultModel::CrashAfter { node: 7, after: 6 },
+        ]);
+        assert!(m.offline_at(1, 3) && !m.offline_at(1, 5));
+        assert!(m.offline_at(4, 1) && !m.offline_at(4, 2));
+        assert!(!m.offline_at(2, 3), "untargeted node never offline");
+        assert_eq!(m.outcome(7, 6, &mut rng), FaultOutcome::Crashed);
+        assert_eq!(m.outcome(7, 5, &mut rng), FaultOutcome::Ok);
+        assert_eq!(m.outcome(2, 10, &mut rng), FaultOutcome::Ok);
+        assert!(m.has_silent_window());
+        assert!(!FaultModel::Compose(vec![FaultModel::DropActivation { p: 0.1 }])
+            .has_silent_window());
+        assert!(FaultModel::Compose(vec![]).outcome(0, 0, &mut rng) == FaultOutcome::Ok);
     }
 }

@@ -48,8 +48,7 @@ impl Transport for InProc {
     }
 
     fn register(&mut self, t: usize) -> Result<RegisterAck> {
-        let generation = self.server.registry().map(|r| r.register(t)).unwrap_or(0);
-        Ok(RegisterAck { col_version: self.server.applied_commits(t), generation })
+        Ok(self.server.register_node(t))
     }
 
     fn heartbeat(&mut self, t: usize) -> Result<bool> {

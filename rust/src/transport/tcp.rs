@@ -280,8 +280,11 @@ fn serve_conn(
             Request::Register { t } => {
                 let t = t as usize;
                 if t < server.state().t() {
-                    let generation = server.registry().map(|r| r.register(t)).unwrap_or(0);
-                    Response::Registered { col_version: server.applied_commits(t), generation }
+                    let ack = server.register_node(t);
+                    Response::Registered {
+                        col_version: ack.col_version,
+                        generation: ack.generation,
+                    }
                 } else {
                     Response::Error(format!(
                         "task index {t} out of range (T={})",

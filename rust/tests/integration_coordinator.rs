@@ -332,6 +332,87 @@ fn crashed_node_freezes_its_block_but_others_finish() {
 }
 
 #[test]
+fn crash_restart_storms_hold_invariants_across_all_schedules() {
+    // Satellite of the chaos harness: a 16-node swarm where HALF the
+    // nodes flap (silent crash/restart windows long enough to guarantee
+    // eviction), under every schedule. The harness machine-checks
+    // exactly-once, convergence, membership balance, and (semisync) the
+    // staleness bound; on top we assert the storm actually bit — flapped
+    // nodes were evicted AND re-registered — and close the exactly-once
+    // accounting by hand: every non-offline activation is either an
+    // applied update or a counted drop, nothing double-applied, nothing
+    // lost.
+    use amtl::chaos::{run_storm, ChaosPlan, ScheduleChoice};
+    use amtl::util::json::Json;
+
+    let schedules = [
+        ScheduleChoice::Async,
+        ScheduleChoice::Synchronized,
+        ScheduleChoice::SemiSync { staleness_bound: 6 },
+    ];
+    for schedule in schedules {
+        let mut plan = ChaosPlan::new(16, 32, 777);
+        plan.schedule = schedule;
+        plan.storm.flap_fraction = 0.5;
+        let p = lowrank_problem(777, 16, 30, 6, 0.2);
+        let dir = std::env::temp_dir()
+            .join("amtl-chaos-coordinator")
+            .join(schedule.name());
+        std::fs::create_dir_all(&dir).unwrap();
+        let report = run_storm(&p, &plan, &dir).unwrap();
+        assert!(
+            report.passed(),
+            "{}: {:?}\n{}",
+            schedule.name(),
+            report.violations,
+            report.repro_line()
+        );
+        assert_eq!(report.flapped.len(), 8, "half the swarm flaps");
+
+        // Exactly-once accounting: 16 × 32 activations minus the 8 × 8
+        // silently-lost window slots, each ending as apply or drop.
+        let r = &report.legs[0];
+        let applied: u64 = r.updates_per_node.iter().sum();
+        assert_eq!(applied, r.updates);
+        assert_eq!(r.updates + r.dropped_updates, 16 * 32 - 8 * 8, "{}", schedule.name());
+        assert!(r.dropped_updates > 0, "the drop storm must actually drop");
+        assert!(r.evicted_nodes.is_empty(), "every flapped node rejoined");
+
+        // The membership storm really happened: count trace events.
+        let text = std::fs::read_to_string(&report.trace_paths[0]).unwrap();
+        let mut evictions = vec![0u64; 16];
+        let mut registers = vec![0u64; 16];
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let v = Json::parse(line).unwrap();
+            let event = v.get("event").and_then(Json::as_str).unwrap_or_default();
+            if let Some(node) = v.get("node").and_then(Json::as_usize) {
+                match event {
+                    "eviction" => evictions[node] += 1,
+                    "register" => registers[node] += 1,
+                    _ => {}
+                }
+            }
+        }
+        if schedule.registers_membership() {
+            for &t in &report.flapped {
+                assert!(evictions[t] >= 1, "{}: flapped node {t} must be evicted", schedule.name());
+                assert!(
+                    registers[t] >= 2,
+                    "{}: flapped node {t} must re-register",
+                    schedule.name()
+                );
+            }
+            for t in (0..16).filter(|t| !report.flapped.contains(t)) {
+                assert_eq!(evictions[t], 0, "{}: cohort node {t} stayed live", schedule.name());
+            }
+        } else {
+            // The barrier loop never registers: the storm is pure math.
+            assert_eq!(evictions.iter().sum::<u64>() + registers.iter().sum::<u64>(), 0);
+        }
+    }
+}
+
+#[test]
 fn perf_counters_are_populated() {
     let p = lowrank_problem(217, 3, 50, 8, 0.3);
     let cfg = RunConfig { iters_per_node: 20, ..Default::default() };

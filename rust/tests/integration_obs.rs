@@ -61,6 +61,7 @@ fn tcp_run_trace_is_ordered_and_complete() {
     let mut commits_per_node: HashMap<usize, Vec<u64>> = HashMap::new();
     let mut commit_count = 0u64;
     let mut activations = 0u64;
+    let mut registers = 0u64;
     for line in text.lines() {
         let j = Json::parse(line).expect("every trace line is one JSON object");
         assert!(j.get("ts_us").and_then(|t| t.as_f64()).is_some(), "ts_us on every event");
@@ -83,12 +84,20 @@ fn tcp_run_trace_is_ordered_and_complete() {
                 }
                 activations += 1;
             }
+            "register" => {
+                assert!(j.get("node").and_then(|n| n.as_usize()).is_some(), "register node");
+                for field in ["generation", "col_version"] {
+                    assert!(j.get(field).and_then(|v| v.as_f64()).is_some(), "{field}");
+                }
+                registers += 1;
+            }
             "prox" | "checkpoint" | "eviction" => {}
             other => panic!("unexpected trace event '{other}'"),
         }
     }
     assert_eq!(commit_count, r.updates, "every commit traced exactly once");
     assert_eq!(activations, r.updates, "no faults injected: every activation commits");
+    assert_eq!(registers, p.t() as u64, "each worker registers once at start");
     assert_eq!(commits_per_node.len(), p.t(), "both nodes appear in the timeline");
     for (node, ks) in &commits_per_node {
         assert_eq!(ks.len(), iters, "node {node} commits its whole budget");

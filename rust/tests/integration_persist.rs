@@ -325,6 +325,89 @@ fn sigkilled_server_resumes_to_the_uninterrupted_objective() {
     std::fs::remove_dir_all(&dir_b).ok();
 }
 
+#[test]
+fn torn_wal_under_latency_storm_resumes_bitwise() {
+    // Chaos variant of the SIGKILL test: the worker runs under a latency
+    // storm (a straggler offset plus per-activation jitter), so the kill
+    // lands at an unpredictable point of the commit/fsync interleaving —
+    // very possibly mid-WAL-record. Recovery must tolerate the torn tail
+    // and `--resume` must land BITWISE on the uninterrupted reference.
+    // The storm is latency-only by construction: random drops would
+    // desynchronize the fault RNG across the restart and lost activations
+    // would starve the serve process of its 60-commit budget — delay
+    // chaos perturbs timing and durability interleaving, never values.
+    let p = serve_problem();
+    let storm = DelayModel::OffsetJitter {
+        offset: Duration::from_millis(15),
+        jitter: Duration::from_millis(20),
+    };
+
+    // Reference: the same storm, uninterrupted.
+    let dir_a = tmp_dir("torn_ref");
+    let (mut child_a, addr_a) = spawn_serve(&dir_a, false);
+    let mut compute_a = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let stats = run_worker(
+        serve_worker(&addr_a, false, storm.clone(), TcpOptions::default()),
+        compute_a[0].as_mut(),
+    )
+    .unwrap();
+    assert_eq!(stats.updates, 60);
+    wait_exit(&mut child_a, "uninterrupted storm serve");
+    let rec_ref = recover(PersistConfig::new(&dir_a, 8)).unwrap();
+    let w_ref = rec_ref.server.final_w();
+    let v_ref = rec_ref.server.state().snapshot();
+    drop(rec_ref);
+
+    // Interrupted: same storm, SIGKILL mid-run.
+    let dir_b = tmp_dir("torn_kill");
+    let (mut child_b, addr_b) = spawn_serve(&dir_b, false);
+    let mut compute_b = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let quick = TcpOptions {
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_millis(500),
+        retries: 2,
+        retry_backoff: Duration::from_millis(50),
+    };
+    let worker = std::thread::spawn({
+        let addr_b = addr_b.clone();
+        let storm = storm.clone();
+        let mut compute = compute_b.remove(0);
+        move || {
+            // Expected to error out when the server dies under it.
+            let _ = run_worker(serve_worker(&addr_b, false, storm, quick), compute.as_mut());
+        }
+    });
+    std::thread::sleep(Duration::from_millis(600));
+    child_b.kill().expect("SIGKILL the serve process mid-storm");
+    let _ = child_b.wait();
+    worker.join().unwrap();
+
+    // The kill must land mid-run, and whatever the WAL tail looks like —
+    // torn final record included — recovery must accept it.
+    let partial = recover(PersistConfig::new(&dir_b, 8)).unwrap();
+    let done = partial.server.state().col_version(0);
+    assert!(done > 0 && done < 60, "kill must land mid-run (got {done} commits)");
+    drop(partial);
+
+    // Resume under the same storm; the node redoes only the remainder.
+    let (mut child_b2, addr_b2) = spawn_serve(&dir_b, true);
+    let mut compute_b2 = p.build_computes(amtl::runtime::Engine::Native, None).unwrap();
+    let stats = run_worker(
+        serve_worker(&addr_b2, true, storm, TcpOptions::default()),
+        compute_b2[0].as_mut(),
+    )
+    .unwrap();
+    assert_eq!(stats.updates + done, 60, "resumed node does only the remainder");
+    wait_exit(&mut child_b2, "resumed storm serve");
+
+    let rec = recover(PersistConfig::new(&dir_b, 8)).unwrap();
+    assert_eq!(rec.server.final_w(), w_ref, "W lands bitwise on the reference");
+    assert_eq!(rec.server.state().snapshot(), v_ref, "V lands bitwise on the reference");
+    assert!(p.objective(&rec.server.final_w()).is_finite());
+    std::fs::remove_dir_all(&dir_a).ok();
+    std::fs::remove_dir_all(&dir_b).ok();
+}
+
 // ------------------------------------- kill and replace a TCP task node
 
 #[test]

@@ -248,11 +248,10 @@ fn semisync_tolerates_crash_and_drop_faults() {
     let p = lowrank_problem(807, 4, 30, 6, 0.2);
     let r = Session::builder(&p)
         .iters_per_node(40)
-        .faults(FaultModel::Both {
-            drop_p: 0.2,
-            crash_node: 3,
-            crash_after: 10,
-        })
+        .faults(FaultModel::Compose(vec![
+            FaultModel::CrashAfter { node: 3, after: 10 },
+            FaultModel::DropActivation { p: 0.2 },
+        ]))
         .schedule(SemiSync { staleness_bound: 3 })
         .build()
         .unwrap()

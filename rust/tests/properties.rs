@@ -442,6 +442,129 @@ fn prop_wal_replay_equals_live_run_bitwise() {
     );
 }
 
+// ----------------------------------------------------- net delay models
+
+/// Decode a generated `(variant, params)` pair into a `DelayModel`.
+/// Durations are built from |param| clamped to ≤ 10ms so properties stay
+/// fast; variant 4 is `PerNode` with one leaf per param (possibly zero
+/// leaves when `params` shrinks to empty).
+fn delay_model_from(variant: usize, params: &[f64]) -> amtl::net::DelayModel {
+    use amtl::net::DelayModel;
+    use std::time::Duration;
+    let dur = |i: usize| {
+        Duration::from_secs_f64(params.get(i).map(|x| x.abs().min(0.01)).unwrap_or(0.0))
+    };
+    match variant % 5 {
+        0 => DelayModel::None,
+        1 => DelayModel::OffsetJitter { offset: dur(0), jitter: dur(1) },
+        2 => DelayModel::OffsetExp { offset: dur(0), mean: dur(1) },
+        3 => DelayModel::Poisson { mean: dur(0) },
+        _ => DelayModel::PerNode {
+            per_node: params
+                .iter()
+                .map(|x| {
+                    Box::new(DelayModel::OffsetJitter {
+                        offset: Duration::from_secs_f64(x.abs().min(0.01)),
+                        jitter: Duration::from_secs_f64(x.abs().min(0.005)),
+                    })
+                })
+                .collect(),
+        },
+    }
+}
+
+#[test]
+fn prop_delay_models_are_seed_deterministic() {
+    // Same seed → bitwise-identical sample sequence, for every variant
+    // and any node index. This is what makes a chaos storm reproducible
+    // from its printed seed.
+    forall(
+        "delay sampling is a pure function of (model, seed)",
+        60,
+        |g| {
+            let len = g.usize_in(0, 4);
+            ((g.usize_in(0, 4), g.normal_vec(len)), g.usize_in(0, 0xFFFF))
+        },
+        |((variant, params), seed)| {
+            let m = delay_model_from(*variant, params);
+            let mut a = Rng::new(*seed as u64);
+            let mut b = Rng::new(*seed as u64);
+            (0..50).all(|i| {
+                let node = i % 7;
+                m.sample(node, &mut a).duration == m.sample(node, &mut b).duration
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_delay_samples_respect_offset_floor_and_finiteness() {
+    // Every sample is a finite, non-negative duration, and the offset
+    // variants never sample below their offset.
+    forall(
+        "delay samples finite and >= offset",
+        60,
+        |g| {
+            let len = g.usize_in(0, 4);
+            ((g.usize_in(0, 4), g.normal_vec(len)), g.usize_in(0, 64))
+        },
+        |((variant, params), node)| {
+            use amtl::net::DelayModel;
+            let m = delay_model_from(*variant, params);
+            let mut rng = Rng::new(991);
+            let floor = match &m {
+                DelayModel::OffsetJitter { offset, .. }
+                | DelayModel::OffsetExp { offset, .. } => *offset,
+                _ => std::time::Duration::ZERO,
+            };
+            (0..100).all(|_| {
+                let d = m.sample(*node, &mut rng).duration;
+                d >= floor && d.as_secs_f64().is_finite()
+            }) && m.mean(*node).as_secs_f64().is_finite()
+        },
+    );
+}
+
+#[test]
+fn prop_per_node_never_panics_for_any_shape() {
+    // `PerNode` must tolerate any (table length, node index) combination:
+    // empty tables, single entries, nested empty tables, and node indices
+    // far beyond the table length — shrink-adjacent shapes a generated
+    // chaos plan can legitimately produce.
+    forall(
+        "PerNode indexing total over all shapes",
+        80,
+        |g| {
+            let len = g.usize_in(0, 3);
+            (g.normal_vec(len), g.usize_in(0, 500), g.usize_in(0, 1))
+        },
+        |(params, node, nest_empty)| {
+            use amtl::net::DelayModel;
+            let mut per_node: Vec<Box<DelayModel>> = params
+                .iter()
+                .map(|x| {
+                    Box::new(DelayModel::OffsetJitter {
+                        offset: std::time::Duration::from_secs_f64(x.abs().min(0.01)),
+                        jitter: std::time::Duration::ZERO,
+                    })
+                })
+                .collect();
+            if *nest_empty == 1 {
+                // An empty table nested inside a non-empty one.
+                per_node.push(Box::new(DelayModel::PerNode { per_node: vec![] }));
+            }
+            let empty = per_node.is_empty();
+            let m = DelayModel::PerNode { per_node };
+            let mut rng = Rng::new(17);
+            let s = m.sample(*node, &mut rng).duration;
+            let mean = m.mean(*node);
+            // Empty tables degrade to zero delay instead of panicking.
+            (!empty || (s == std::time::Duration::ZERO && mean == std::time::Duration::ZERO))
+                && s.as_secs_f64().is_finite()
+        },
+    );
+}
+
 // ------------------------------------------------ formulation registry
 
 /// Resolve every registered formulation at strength `lambda` over `t`

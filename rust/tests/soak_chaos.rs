@@ -1,0 +1,125 @@
+//! Opt-in chaos soak: multi-seed, multi-schedule storm sweeps with the
+//! full invariant battery. Gated behind `AMTL_SOAK=1` because a sweep
+//! takes minutes, not seconds:
+//!
+//! ```text
+//! AMTL_SOAK=1 cargo test --release --test soak_chaos -- --nocapture
+//! ```
+//!
+//! Without the gate every test returns immediately (and says so), which
+//! is what the CI smoke lane runs to keep the harness compiling. Any
+//! failure prints the storm's repro line — feed its seed back through
+//! `cargo run --release --example chaos_run -- --seed <n>` or a one-off
+//! plan to reproduce it exactly.
+
+use amtl::chaos::{run_resumed_storm, run_storm, ChaosPlan, ScheduleChoice, StormReport};
+use amtl::coordinator::MtlProblem;
+use amtl::data::synthetic;
+use amtl::optim::prox::RegularizerKind;
+use amtl::transport::TransportKind;
+use amtl::util::Rng;
+use std::path::PathBuf;
+
+fn soaking() -> bool {
+    let on = std::env::var("AMTL_SOAK").map(|v| v == "1").unwrap_or(false);
+    if !on {
+        println!("AMTL_SOAK != 1 — soak skipped");
+    }
+    on
+}
+
+fn problem(seed: u64, nodes: usize) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![40; nodes], 8, 3, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, 0.3, 0.5, &mut rng)
+}
+
+fn artifact_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("amtl-chaos-soak").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn assert_passed(report: &StormReport) {
+    assert!(
+        report.passed(),
+        "soak storm violated invariants:\n{}\n{:#?}",
+        report.repro_line(),
+        report.violations
+    );
+    println!("   {}", report.summary());
+}
+
+#[test]
+fn soak_inproc_storms_across_all_schedules_and_seeds() {
+    if !soaking() {
+        return;
+    }
+    let schedules = [
+        ScheduleChoice::Async,
+        ScheduleChoice::Synchronized,
+        ScheduleChoice::SemiSync { staleness_bound: 6 },
+    ];
+    for seed in [11, 222, 3333] {
+        for schedule in schedules {
+            let mut plan = ChaosPlan::new(64, 48, seed);
+            plan.schedule = schedule;
+            let p = problem(plan.seed, plan.nodes);
+            let report =
+                run_storm(&p, &plan, &artifact_dir(&format!("inproc-{}-{seed}", schedule.name())))
+                    .unwrap();
+            assert_passed(&report);
+        }
+    }
+}
+
+#[test]
+fn soak_tcp_storms_cross_the_real_wire() {
+    if !soaking() {
+        return;
+    }
+    for seed in [17, 1717] {
+        for schedule in [ScheduleChoice::Async, ScheduleChoice::SemiSync { staleness_bound: 8 }] {
+            let mut plan = ChaosPlan::new(16, 32, seed);
+            plan.schedule = schedule;
+            plan.transport = TransportKind::Tcp;
+            let p = problem(plan.seed, plan.nodes);
+            let report =
+                run_storm(&p, &plan, &artifact_dir(&format!("tcp-{}-{seed}", schedule.name())))
+                    .unwrap();
+            assert_passed(&report);
+        }
+    }
+}
+
+#[test]
+fn soak_resumed_storms_keep_invariants_across_restarts() {
+    if !soaking() {
+        return;
+    }
+    for seed in [29, 2929] {
+        let plan = ChaosPlan::new(32, 40, seed);
+        let p = problem(plan.seed, plan.nodes);
+        let report =
+            run_resumed_storm(&p, &plan, &artifact_dir(&format!("resumed-{seed}"))).unwrap();
+        assert_eq!(report.legs.len(), 2);
+        assert_passed(&report);
+    }
+}
+
+#[test]
+fn soak_hot_storm_still_converges() {
+    if !soaking() {
+        return;
+    }
+    // Crank every dial: a third of the swarm flaps, a quarter drops, a
+    // quarter straggles. Convergence tolerance stays the default — the
+    // KM averaging has to absorb all of it.
+    let mut plan = ChaosPlan::new(96, 64, 424242);
+    plan.storm.drop_p = 0.25;
+    plan.storm.flap_fraction = 1.0 / 3.0;
+    plan.storm.straggler_fraction = 0.25;
+    let p = problem(plan.seed, plan.nodes);
+    let report = run_storm(&p, &plan, &artifact_dir("hot")).unwrap();
+    assert_passed(&report);
+}
