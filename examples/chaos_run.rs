@@ -20,7 +20,9 @@
 use amtl::chaos::{run_resumed_storm, run_storm, ChaosPlan, ScheduleChoice, StormReport};
 use amtl::coordinator::MtlProblem;
 use amtl::data::synthetic;
+use amtl::obs::{Collector, HealthRules};
 use amtl::optim::prox::RegularizerKind;
+use amtl::transport::wire::MetricsReport;
 use amtl::transport::TransportKind;
 use amtl::util::Rng;
 use std::path::{Path, PathBuf};
@@ -104,6 +106,31 @@ fn main() -> anyhow::Result<()> {
         // two server lifetimes, one evidence stream.
         let resumed = ChaosPlan::new(32, 40, seed + 3);
         reports.push(run_plan("resumed async storm", &resumed, &out, true)?);
+    }
+
+    // Cross-check the fleet health rules against the storms we just ran:
+    // the correlated flap wave is, by construction, an eviction storm,
+    // so `HealthRules` over this process's own registry MUST flag it.
+    // The storms ran in-process, so the global registry accumulated
+    // their evictions; a single-sample collector window reads the
+    // absolute count (the window began at process start).
+    let report = MetricsReport::from_snapshot(
+        MetricsReport::ROLE_TRAINER,
+        amtl::obs::log::uptime_ms(),
+        amtl::obs::global().snapshot(),
+    );
+    let mut collector = Collector::new(&["chaos-storms"]);
+    collector.observe(0, 0, Some(report));
+    let fired: Vec<&str> =
+        HealthRules::default().evaluate(&collector).iter().map(|v| v.rule).collect();
+    if fired.contains(&"eviction_storm") {
+        println!("health cross-check passed: eviction_storm flagged ({fired:?})");
+    } else {
+        println!(
+            "health cross-check FAILED: the flap wave evicted nodes but the \
+             eviction_storm rule stayed quiet (fired: {fired:?})"
+        );
+        std::process::exit(1);
     }
 
     let failed: Vec<&StormReport> = reports.iter().filter(|r| !r.passed()).collect();

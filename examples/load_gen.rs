@@ -178,6 +178,7 @@ fn local_cluster(clients: usize, secs: f64, quick: bool) -> anyhow::Result<LoadR
                 heartbeat: None,
                 resume: false,
                 trace: None,
+                metrics_stride: None,
             };
             s.spawn(move || {
                 run_worker(ctx, compute.as_mut()).expect("worker failed");

@@ -72,6 +72,7 @@ fn main() -> anyhow::Result<()> {
                 heartbeat: None,
                 resume: false,
                 trace: None,
+                metrics_stride: None,
             };
             s.spawn(move || {
                 let stats = run_worker(ctx, compute.as_mut()).expect("worker failed");

@@ -256,7 +256,10 @@ impl Schedule for Synchronized {
                             match outcome {
                                 Ok(Activation::Crashed) => stats.crashed = true,
                                 Ok(Activation::Dropped) | Ok(Activation::Offline) => {}
-                                Ok(Activation::Update(u)) => {
+                                Ok(Activation::Update { u, .. }) => {
+                                    // The round loop commits the whole batch
+                                    // after the barrier, so per-commit span
+                                    // stamps are not meaningful here.
                                     *slots[t].lock().unwrap() = Some(u);
                                     stats.updates += 1;
                                 }

@@ -36,11 +36,14 @@
 use super::registry::NodeRegistry;
 use super::state::SharedState;
 use crate::linalg::Mat;
+use crate::obs::fleet::{self, Hop};
 use crate::obs::{self, Histogram, TraceWriter};
 use crate::optim::formulation::{self, SharedProx};
 use crate::persist::{Checkpointer, FormulationState, ServerSnapshot, WalEntry};
+use crate::transport::wire::MetricsReport;
 use crate::util::json::Json;
 use crate::util::RngState;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
@@ -109,6 +112,11 @@ pub struct CentralServer {
     /// Per-column staging for the online SVD: the latest committed column
     /// value awaiting its fold into the factorization.
     pending: Vec<Mutex<Option<Vec<f64>>>>,
+    /// Per-column: the activation counter of the value currently staged
+    /// in `pending` — what lets the prox-time fold attribute its work back
+    /// to the originating commit's span. Observability-only, never
+    /// persisted (a recovered staging slot re-tags from its next commit).
+    staged_k: Vec<AtomicU64>,
     /// Per-column commit dedup keys: 0 = no commit applied yet, else the
     /// highest applied activation counter plus one. A resent `PushUpdate`
     /// (the TCP client's at-least-once retry, or a node replaying after a
@@ -141,6 +149,11 @@ pub struct CentralServer {
     trace: Option<Arc<TraceWriter>>,
     /// Registry handles for the hot paths, resolved at construction.
     obs: ServerObs,
+    /// The latest metrics snapshot each remote worker pushed
+    /// (`PushMetrics`), keyed by task index. Fanned into the `nodes` rows
+    /// of the trainer's own `MetricsReport`; entries persist after a
+    /// worker leaves so short-lived nodes still show up in `amtl top`.
+    node_metrics: Mutex<BTreeMap<u32, MetricsReport>>,
 }
 
 impl CentralServer {
@@ -149,6 +162,7 @@ impl CentralServer {
         let online = reg.is_incremental();
         let obs = ServerObs::resolve(reg.id());
         let pending = (0..state.t()).map(|_| Mutex::new(None)).collect();
+        let staged_k = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
         let applied_k = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
         let fetch_version = (0..state.t()).map(|_| AtomicU64::new(0)).collect();
         CentralServer {
@@ -163,6 +177,7 @@ impl CentralServer {
             coalesced: AtomicU64::new(0),
             uncounted_commits: AtomicU64::new(0),
             pending,
+            staged_k,
             applied_k,
             persist: None,
             wal_replayed: AtomicU64::new(0),
@@ -172,6 +187,7 @@ impl CentralServer {
             staleness: Arc::new(Histogram::new()),
             trace: None,
             obs,
+            node_metrics: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -215,6 +231,20 @@ impl CentralServer {
     /// The attached membership registry, if heartbeats are enabled.
     pub fn registry(&self) -> Option<&Arc<NodeRegistry>> {
         self.registry.as_ref()
+    }
+
+    /// Park the latest metrics snapshot pushed by remote worker `t`
+    /// (`PushMetrics`). Sub-reports are exactly one level deep, so any
+    /// `nodes` rows a confused client attached are dropped here.
+    pub fn note_node_metrics(&self, t: u32, mut report: MetricsReport) {
+        report.nodes.clear();
+        self.node_metrics.lock().unwrap().insert(t, report);
+    }
+
+    /// The per-node rows for the trainer's `FetchMetrics` reply: the last
+    /// snapshot each remote worker pushed, keyed by task index.
+    pub fn node_metrics_rows(&self) -> Vec<(u32, MetricsReport)> {
+        self.node_metrics.lock().unwrap().iter().map(|(t, r)| (*t, r.clone())).collect()
     }
 
     /// The attached checkpointer, if durability is enabled.
@@ -402,7 +432,20 @@ impl CentralServer {
         for (t, slot) in self.pending.iter().enumerate() {
             let staged = slot.lock().unwrap().take();
             if let Some(col) = staged {
+                // Coalescing means this fold may stand in for several
+                // commits; the span it joins is the *latest* staged one —
+                // the value actually being folded.
+                let k = self.staged_k[t].load(Ordering::Relaxed);
+                let fold_start_us = fleet::unix_us();
                 reg.notify_column_update(t, &col);
+                fleet::record_hop(
+                    self.trace.as_deref(),
+                    Hop::ProxFold,
+                    t,
+                    k,
+                    fold_start_us,
+                    fleet::unix_us(),
+                );
             }
         }
         // `swap` (not load+store) so increments racing with the drain are
@@ -457,12 +500,43 @@ impl CentralServer {
             return Ok(self.state.version());
         }
         let version = match &self.persist {
-            None => self.apply_commit(t, k, u, step),
+            None => {
+                let stage_start_us = fleet::unix_us();
+                let version = self.apply_commit(t, k, u, step);
+                fleet::record_hop(
+                    self.trace.as_deref(),
+                    Hop::Staging,
+                    t,
+                    k,
+                    stage_start_us,
+                    fleet::unix_us(),
+                );
+                version
+            }
             Some(cp) => {
                 let version = {
                     let _quiesce = cp.commit_gate();
+                    let wal_start_us = fleet::unix_us();
                     cp.log_commit(t, k, step, u)?;
-                    self.apply_commit(t, k, u, step)
+                    fleet::record_hop(
+                        self.trace.as_deref(),
+                        Hop::Wal,
+                        t,
+                        k,
+                        wal_start_us,
+                        fleet::unix_us(),
+                    );
+                    let stage_start_us = fleet::unix_us();
+                    let version = self.apply_commit(t, k, u, step);
+                    fleet::record_hop(
+                        self.trace.as_deref(),
+                        Hop::Staging,
+                        t,
+                        k,
+                        stage_start_us,
+                        fleet::unix_us(),
+                    );
+                    version
                 };
                 // The commit is applied and WAL-durable at this point; a
                 // failed snapshot *rotation* must not fail acknowledged
@@ -515,6 +589,7 @@ impl CentralServer {
         if self.online {
             let new_col = self.state.read_col(t);
             self.notify_column_update(t, &new_col);
+            self.staged_k[t].store(k, Ordering::Relaxed);
             // Raw-commit count for the refresh stride: coalescing may fold
             // several of these into one factorization update, but the
             // drift bound is promised per *commit*.
@@ -629,6 +704,7 @@ impl CentralServer {
             coalesced: AtomicU64::new(snap.coalesced),
             uncounted_commits: AtomicU64::new(snap.uncounted_commits),
             pending: snap.pending.iter().cloned().map(Mutex::new).collect(),
+            staged_k: snap.pending.iter().map(|_| AtomicU64::new(0)).collect(),
             applied_k: snap.applied_k.iter().map(|&k| AtomicU64::new(k)).collect(),
             persist: None,
             wal_replayed: AtomicU64::new(0),
@@ -638,6 +714,7 @@ impl CentralServer {
             staleness: Arc::new(Histogram::new()),
             trace: None,
             obs,
+            node_metrics: Mutex::new(BTreeMap::new()),
         })
     }
 

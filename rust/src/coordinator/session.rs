@@ -580,6 +580,11 @@ impl<'p> Session<'p> {
         if let Some(handle) = tcp_handle.as_mut() {
             handle.shutdown();
         }
+        // End-of-run barrier: everything the run traced is on disk before
+        // the result is handed back (live tails and smoke jobs read here).
+        if let Some(tr) = &cfg.trace {
+            tr.flush();
+        }
         let wall_time = start.elapsed();
         anyhow::ensure!(
             stats.len() == t_count,
@@ -733,6 +738,9 @@ impl<'r> Orchestrator<'r> {
                     heartbeat: self.cfg.heartbeat,
                     resume: self.cfg.resume,
                     trace: self.cfg.trace.clone(),
+                    // In-process workers share this registry; exporting it
+                    // back to ourselves would just duplicate every row.
+                    metrics_stride: None,
                 })
             })
             .collect()

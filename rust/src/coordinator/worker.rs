@@ -22,8 +22,10 @@ use super::schedule::StalenessGate;
 use super::state::SharedState;
 use super::step_size::StepController;
 use crate::net::{DelayModel, FaultModel, FaultOutcome};
+use crate::obs::fleet::{self, Hop};
 use crate::obs::{self, Histogram, TraceWriter};
 use crate::runtime::TaskCompute;
+use crate::transport::wire::MetricsReport;
 use crate::transport::Transport;
 use crate::util::json::Json;
 use crate::util::Rng;
@@ -110,6 +112,13 @@ pub struct WorkerCtx {
     /// When set, every activation appends one JSONL trace event carrying
     /// its delay/fetch/compute timing split (`--trace-out`).
     pub trace: Option<Arc<TraceWriter>>,
+    /// When set, the worker pushes its process registry to the server on
+    /// this stride (`PushMetrics`, role `NODE`) plus once on exit, so the
+    /// trainer's `MetricsReport` fans in every worker. Set by the
+    /// `--node` CLI (a separate OS process with its own registry); `None`
+    /// for in-process workers, which share the trainer's registry and
+    /// would only duplicate it.
+    pub metrics_stride: Option<Duration>,
 }
 
 /// Per-worker outcome.
@@ -179,8 +188,15 @@ pub(crate) enum Activation {
     Dropped,
     /// The node is inside a silent-down window: nothing ran at all.
     Offline,
-    /// A forward-step update ready to commit.
-    Update(Vec<f64>),
+    /// A forward-step update ready to commit. `fetch_start_us` is the
+    /// wall-clock stamp of the activation's backward fetch — the start
+    /// of the commit's critical path, which ends at the server's ack.
+    Update {
+        /// The forward-step result to commit.
+        u: Vec<f64>,
+        /// Wall-clock µs when the backward fetch began.
+        fetch_start_us: u64,
+    },
 }
 
 /// One activation of task node `ctx.t`: fault check, simulated network
@@ -219,14 +235,24 @@ pub(crate) fn run_activation(
     ctx.controller.record_delay(ctx.t, units);
 
     // 2. Backward step block (server prox column over the transport).
+    let fetch_start_us = fleet::unix_us();
     let t0 = Instant::now();
     let w_hat = fetch_w(ctx.transport.as_mut())?;
     let fetch_us = t0.elapsed().as_micros() as u64;
     stats.backward_wait_secs += t0.elapsed().as_secs_f64();
     node_obs().fetch_us.record(fetch_us);
+    fleet::record_hop(
+        ctx.trace.as_deref(),
+        Hop::NodeFetch,
+        ctx.t,
+        k,
+        fetch_start_us,
+        fetch_start_us + fetch_us,
+    );
 
     // 3. Forward step on the task's private data.
     let eta = ctx.transport.eta();
+    let step_start_us = fleet::unix_us();
     let t1 = Instant::now();
     let (u, task_loss) = match ctx.sgd_fraction {
         Some(frac) => compute.step_minibatch(&w_hat, eta, frac, &mut ctx.rng)?,
@@ -235,6 +261,14 @@ pub(crate) fn run_activation(
     let step_us = t1.elapsed().as_micros() as u64;
     stats.compute_secs += t1.elapsed().as_secs_f64();
     node_obs().step_us.record(step_us);
+    fleet::record_hop(
+        ctx.trace.as_deref(),
+        Hop::NodeStep,
+        ctx.t,
+        k,
+        step_start_us,
+        step_start_us + step_us,
+    );
     stats.last_task_loss = task_loss;
     if let Some(tr) = &ctx.trace {
         tr.event(
@@ -256,7 +290,7 @@ pub(crate) fn run_activation(
         stats.dropped += 1;
         return Ok(Activation::Dropped);
     }
-    Ok(Activation::Update(u))
+    Ok(Activation::Update { u, fetch_start_us })
 }
 
 /// Sleep `total`, chunked to the heartbeat interval so a long injected
@@ -281,6 +315,17 @@ fn sleep_heartbeating(ctx: &mut WorkerCtx, total: Duration) {
     }
 }
 
+/// Push this process's registry to the server as a role-`NODE` report
+/// (best-effort: metrics export must never take the worker down).
+fn push_node_metrics(ctx: &mut WorkerCtx) {
+    let report = MetricsReport::from_snapshot(
+        MetricsReport::ROLE_NODE,
+        obs::log::uptime_ms(),
+        obs::global().snapshot(),
+    );
+    let _ = ctx.transport.push_metrics(ctx.t, report);
+}
+
 fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<WorkerStats> {
     let mut stats = WorkerStats::default();
     // Join the run. Without a registry this is a cheap ack that still
@@ -289,6 +334,7 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
     let ack = ctx.transport.register(ctx.t)?;
     let start = if ctx.resume { ack.col_version.min(ctx.iters as u64) as usize } else { 0 };
     let mut was_offline = false;
+    let mut last_metrics = Instant::now();
     for k in start..ctx.iters {
         // Silent-down window (crash/restart fault): the node is simply
         // not there — no gate interaction, no heartbeat, no compute.
@@ -332,15 +378,27 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
                 break;
             }
             Activation::Dropped | Activation::Offline => {}
-            Activation::Update(u) => {
+            Activation::Update { u, fetch_start_us } => {
                 // KM relaxation on this task block, committed through the
                 // transport (shared memory or the wire). `k` is the dedup
                 // key that makes transport resends exactly-once.
                 let step = ctx.controller.step(ctx.t);
+                let commit_start_us = fleet::unix_us();
                 let t2 = Instant::now();
                 let version = ctx.transport.push_update(ctx.t, k as u64, step, &u)?;
+                let commit_us = t2.elapsed().as_micros() as u64;
                 stats.commit_wait_secs += t2.elapsed().as_secs_f64();
-                node_obs().commit_us.record(t2.elapsed().as_micros() as u64);
+                node_obs().commit_us.record(commit_us);
+                let ack_us = commit_start_us + commit_us;
+                fleet::record_hop(
+                    ctx.trace.as_deref(),
+                    Hop::WireCommit,
+                    ctx.t,
+                    k as u64,
+                    commit_start_us,
+                    ack_us,
+                );
+                fleet::record_critical_path(ack_us.saturating_sub(fetch_start_us));
                 stats.updates += 1;
                 if let Some(sink) = &ctx.sink {
                     sink.record(version);
@@ -350,6 +408,17 @@ fn worker_loop(ctx: &mut WorkerCtx, compute: &mut dyn TaskCompute) -> Result<Wor
         if let Some(g) = &ctx.gate {
             g.finish_iter(ctx.t);
         }
+        if let Some(stride) = ctx.metrics_stride {
+            if last_metrics.elapsed() >= stride {
+                push_node_metrics(ctx);
+                last_metrics = Instant::now();
+            }
+        }
+    }
+    // One final snapshot on the way out, so even a run shorter than the
+    // stride leaves a NODE row behind on the trainer.
+    if ctx.metrics_stride.is_some() {
+        push_node_metrics(ctx);
     }
     Ok(stats)
 }
@@ -410,6 +479,7 @@ mod tests {
             heartbeat: None,
             resume: false,
             trace: None,
+            metrics_stride: None,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert_eq!(stats.updates, 7);
@@ -437,6 +507,7 @@ mod tests {
             heartbeat: None,
             resume: false,
             trace: None,
+            metrics_stride: None,
         };
         run_worker(ctx, &mut compute).unwrap();
         let w1 = server.prox_col(0);
@@ -470,6 +541,7 @@ mod tests {
             heartbeat: None,
             resume: false,
             trace: None,
+            metrics_stride: None,
         };
         let stats = run_worker(ctx, &mut compute).unwrap();
         assert!((stats.total_delay_secs - 0.06).abs() < 0.02);
@@ -508,6 +580,8 @@ mod tests {
                 gate: None,
                 heartbeat: None,
                 resume: false,
+                trace: None,
+                metrics_stride: None,
             };
             let stats = run_worker(ctx, &mut compute).unwrap();
             assert_eq!(stats.updates, 12);

@@ -47,7 +47,7 @@ use amtl::coordinator::worker::{run_worker, WorkerCtx};
 use amtl::coordinator::{schedule_from_cli, Async, MtlProblem, Schedule, Session, Synchronized};
 use amtl::data::{public, synthetic, MultiTaskDataset};
 use amtl::net::{DelayModel, FaultModel};
-use amtl::obs::TraceWriter;
+use amtl::obs::{fleet, Collector, HealthRules, TraceWriter};
 use amtl::optim::coupling::TaskGraph;
 use amtl::optim::svd::SvdMode;
 use amtl::optim::FormulationSpec;
@@ -107,6 +107,7 @@ fn run(opts: &Opts) -> Result<()> {
         "train" => cmd_train(opts),
         "predict" => cmd_predict(opts),
         "top" => cmd_top(opts),
+        "health" => cmd_health(opts),
         "compare" => cmd_compare(opts),
         "datasets" => cmd_datasets(opts),
         "artifacts" => cmd_artifacts(opts),
@@ -129,7 +130,8 @@ USAGE: amtl <command> [options]
 COMMANDS:
   train       run one optimization (default method: amtl)
   predict     query a read replica (see SERVING TIER below)
-  top         live metrics dashboard for a trainer or replica
+  top         live metrics dashboard for a trainer, replica, or fleet
+  health      evaluate fleet health rules; exit nonzero on violations
   compare     run AMTL and SMTL under identical network settings
   datasets    describe the built-in dataset simulators
   artifacts   validate the AOT artifact manifest
@@ -238,10 +240,28 @@ OBSERVABILITY (full metric/trace reference: docs/OBSERVABILITY.md):
                        replica address and render a live dashboard:
                        updates/sec, commit staleness p50/p99, per-layer
                        latency histograms, counters
+  top --fleet A,B,..   poll several endpoints at once (trainer +
+                       replicas; worker NODE rows fan in through the
+                       trainer) and render one cluster-wide table with
+                       fleet-merged histograms
   top --once           print one snapshot and exit (no screen clearing)
   top --json           machine-readable snapshots (one JSON per poll)
   top --interval-ms MS poll interval                          [1000]
   top --timeout-ms MS  connect/read/write timeout             [5000]
+
+FLEET HEALTH (rule catalog with rationale: docs/OBSERVABILITY.md):
+  health --connect ADDR | --fleet A,B,...
+                       poll each endpoint (--samples polls,
+                       --interval-ms apart), evaluate every health rule,
+                       print violations, exit nonzero if any fired
+  --staleness-bound B  staleness-runaway bound; set to the run's
+                       --staleness under semisync            [off]
+  --max-replica-lag N  replica lag threshold (commits)      [5000]
+  --eviction-storm N   evictions per window threshold          [3]
+  --min-rate R         updates/sec floor (0 disables)          [0]
+  --wal-fsync-p99-us U wal fsync p99 threshold (us)       [100000]
+  --samples N          polls per endpoint before judging       [2]
+  --json               machine-readable verdict
 ";
 
 /// Assemble the dataset from CLI options.
@@ -594,6 +614,9 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
         cp.checkpoint_now(&server)?;
     }
     handle.shutdown();
+    if let Some(tr) = &ro.trace {
+        tr.flush();
+    }
 
     println!("run complete: {} updates, {} proxes", state.version(), server.prox_count());
     if server.checkpoints_written() > 0 || server.wal_replayed() > 0 {
@@ -694,8 +717,15 @@ fn cmd_node(opts: &Opts) -> Result<()> {
         heartbeat: ro.heartbeat,
         resume: ro.resume,
         trace: ro.trace.clone(),
+        // Piggyback this node's registry snapshot to the trainer on the
+        // heartbeat cadence (or ~1 s without membership), so `amtl top
+        // --connect <trainer>` shows a NODE row for this process.
+        metrics_stride: ro.heartbeat.or(Some(Duration::from_secs(1))),
     };
     let stats = run_worker(ctx, compute.as_mut())?;
+    if let Some(tr) = &ro.trace {
+        tr.flush();
+    }
     println!(
         "node {t} done: {} updates ({} dropped), delay {:.2}s, compute {:.2}s, backward wait {:.2}s, last task loss {:.6}",
         stats.updates,
@@ -814,14 +844,24 @@ fn cmd_predict(opts: &Opts) -> Result<()> {
 /// or replica endpoint and render a live dashboard — updates/sec, commit
 /// staleness quantiles, per-layer latency histograms, and every counter
 /// and gauge the process registered. `--once` prints a single snapshot;
-/// `--json` emits one machine-readable JSON object per poll instead.
+/// `--json` emits one machine-readable JSON object per poll instead;
+/// `--fleet a,b,c` polls several endpoints at once and renders one
+/// cluster-wide table (worker NODE rows fan in through the trainer).
 fn cmd_top(opts: &Opts) -> Result<()> {
-    let addr = opts.require("connect").map_err(|e| anyhow!("{e}"))?;
+    let fleet_list = opts.get("fleet").map(|s| s.to_string());
+    let connect = opts.get("connect").map(|s| s.to_string());
     let once = opts.flag("once");
     let json = opts.flag("json");
     let interval = Duration::from_millis(opts.get_u64("interval-ms", 1000)?.max(50));
     let timeout = Duration::from_millis(opts.get_u64("timeout-ms", 5000)?.max(1));
     opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+
+    if let Some(list) = fleet_list {
+        let addrs = split_addr_list(&list)?;
+        return run_top_fleet(&addrs, once, json, interval, timeout);
+    }
+    let addr =
+        connect.ok_or_else(|| anyhow!("top needs --connect <addr> or --fleet <a,b,...>"))?;
 
     // The predict client is just a framed request/response socket; both
     // the trainer and the replica answer FetchMetrics on it.
@@ -831,12 +871,13 @@ fn cmd_top(opts: &Opts) -> Result<()> {
         let report = client.metrics()?;
         let now = std::time::Instant::now();
         let commits = report.counter("server.commits").unwrap_or(0);
-        // Updates/sec from the commit delta between polls; the first
-        // frame falls back to the process-lifetime average.
+        // Updates/sec from the commit delta between polls, through the
+        // restart-guarded helper (a restarted endpoint re-zeroes its
+        // counters; the rate must read 0, not a u64-underflow spike).
+        // The first frame falls back to the process-lifetime average.
         let rate = match prev {
-            Some((at, last)) => {
-                commits.saturating_sub(last) as f64 / now.duration_since(at).as_secs_f64().max(1e-9)
-            }
+            Some((at, last)) => fleet::counter_delta(last, commits) as f64
+                / now.duration_since(at).as_secs_f64().max(1e-9),
             None => commits as f64 / (report.uptime_ms as f64 / 1000.0).max(1e-9),
         };
         prev = Some((now, commits));
@@ -855,6 +896,202 @@ fn cmd_top(opts: &Opts) -> Result<()> {
         std::thread::sleep(interval);
     }
     client.close()
+}
+
+/// Parse a `--fleet` comma-separated address list.
+fn split_addr_list(list: &str) -> Result<Vec<String>> {
+    let addrs: Vec<String> =
+        list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    ensure!(!addrs.is_empty(), "--fleet expects a comma-separated address list");
+    Ok(addrs)
+}
+
+/// One `FetchMetrics` round trip against `addr`; any connect, protocol,
+/// or timeout failure reads as "endpoint down" (`None`) so the collector
+/// records the miss instead of killing the dashboard.
+fn fetch_report(addr: &str, timeout: Duration) -> Option<MetricsReport> {
+    let mut client = PredictClient::connect(addr, timeout).ok()?;
+    let report = client.metrics().ok();
+    let _ = client.close();
+    report
+}
+
+/// The `top --fleet` loop: poll every endpoint each interval, feed the
+/// collector, render the flattened fleet table (or JSON).
+fn run_top_fleet(
+    addrs: &[String],
+    once: bool,
+    json: bool,
+    interval: Duration,
+    timeout: Duration,
+) -> Result<()> {
+    let mut collector = Collector::new(addrs);
+    loop {
+        collector.poll_with(amtl::obs::log::uptime_ms(), |a| fetch_report(a, timeout));
+        if json {
+            println!("{}", fleet_json(&collector));
+        } else {
+            if !once {
+                print!("\x1b[2J\x1b[H");
+            }
+            render_fleet(&collector);
+        }
+        if once {
+            break;
+        }
+        std::thread::sleep(interval);
+    }
+    Ok(())
+}
+
+/// One dashboard frame for `amtl top --fleet`: a row per endpoint plus a
+/// row per fanned-in worker NODE report, then fleet-wide aggregates
+/// merged across every row.
+fn render_fleet(c: &Collector) {
+    let rows = c.rows();
+    let up = c.endpoints().iter().filter(|e| !e.down && !e.is_empty()).count();
+    println!(
+        "amtl top — fleet of {} endpoint(s), {up} up, {} row(s)",
+        c.endpoints().len(),
+        rows.len(),
+    );
+    println!(
+        "{:<34} {:>8} {:>9} {:>11} {:>11} {:>9}",
+        "ENDPOINT", "ROLE", "UP(s)", "COMMITS", "STALE p99", "LAG"
+    );
+    for row in &rows {
+        let r = row.report;
+        let commits =
+            r.counter("server.commits").map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+        let stale = r
+            .hist("server.staleness")
+            .map(|h| h.quantile(0.99).to_string())
+            .unwrap_or_else(|| "-".into());
+        let lag = r.gauge("replica.lag").map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<34} {:>8} {:>9.1} {:>11} {:>11} {:>9}",
+            row.label(),
+            r.role_name(),
+            r.uptime_ms as f64 / 1000.0,
+            commits,
+            stale,
+            lag,
+        );
+    }
+    for ep in c.endpoints() {
+        if ep.down {
+            println!(
+                "{:<34} {:>8}   down ({} consecutive failed poll(s))",
+                ep.addr, "-", ep.down_streak
+            );
+        }
+    }
+    // Window rate per trainer endpoint, summed (None until two samples).
+    let rate: f64 =
+        c.endpoints().iter().filter_map(|e| e.counter_window_rate("server.commits")).sum();
+    println!("fleet updates/sec (window): {rate:.1}");
+    if let Some(h) = c.merged_hist("commit_critical_path_us") {
+        println!(
+            "fleet commit critical path (us): p50 {}  p99 {}  max {}  ({} commits)",
+            h.quantile(0.5),
+            h.quantile(0.99),
+            h.max,
+            h.count(),
+        );
+    }
+}
+
+/// Machine-readable form of one fleet poll (`top --fleet --json`).
+fn fleet_json(c: &Collector) -> String {
+    let rows: Vec<Json> = c
+        .rows()
+        .iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("endpoint", Json::Str(row.label())),
+                ("report", report_json_value(row.report)),
+            ])
+        })
+        .collect();
+    let down: Vec<Json> =
+        c.endpoints().iter().filter(|e| e.down).map(|e| Json::Str(e.addr.clone())).collect();
+    Json::obj(vec![("rows", Json::Arr(rows)), ("down", Json::Arr(down))]).to_string()
+}
+
+/// `health --connect <addr>` / `health --fleet a,b,c`: poll each
+/// endpoint a few times, evaluate the declarative health rule catalog
+/// (staleness runaway, replica lag, eviction storm, updates/sec stall,
+/// WAL fsync spike, endpoint down), print every violation, and exit
+/// nonzero if any fired — the scriptable hook CI and the chaos harness
+/// gate on. Thresholds are flags; the catalog with rationale lives in
+/// docs/OBSERVABILITY.md.
+fn cmd_health(opts: &Opts) -> Result<()> {
+    let fleet_list = opts.get("fleet").map(|s| s.to_string());
+    let connect = opts.get("connect").map(|s| s.to_string());
+    let json = opts.flag("json");
+    let interval = Duration::from_millis(opts.get_u64("interval-ms", 1000)?.max(50));
+    let timeout = Duration::from_millis(opts.get_u64("timeout-ms", 5000)?.max(1));
+    // Rate rules need an interval: two polls by default.
+    let samples = opts.get_usize("samples", 2)?.max(1);
+    let defaults = HealthRules::default();
+    let rules = HealthRules {
+        staleness_bound: match opts.get("staleness-bound") {
+            Some(_) => Some(opts.get_u64("staleness-bound", 4)?),
+            None => None,
+        },
+        max_replica_lag: opts.get_u64("max-replica-lag", defaults.max_replica_lag)?,
+        eviction_storm: opts.get_u64("eviction-storm", defaults.eviction_storm)?,
+        min_updates_per_sec: opts.get_f64("min-rate", defaults.min_updates_per_sec)?,
+        wal_fsync_p99_us: opts.get_u64("wal-fsync-p99-us", defaults.wal_fsync_p99_us)?,
+    };
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    let addrs = match (fleet_list, connect) {
+        (Some(list), _) => split_addr_list(&list)?,
+        (None, Some(addr)) => vec![addr],
+        (None, None) => bail!("health needs --connect <addr> or --fleet <a,b,...>"),
+    };
+
+    let mut collector = Collector::new(&addrs);
+    for i in 0..samples {
+        if i > 0 {
+            std::thread::sleep(interval);
+        }
+        collector.poll_with(amtl::obs::log::uptime_ms(), |a| fetch_report(a, timeout));
+    }
+    let violations = rules.evaluate(&collector);
+    if json {
+        let list: Vec<Json> = violations
+            .iter()
+            .map(|v| {
+                Json::obj(vec![
+                    ("rule", Json::Str(v.rule.to_string())),
+                    ("endpoint", Json::Str(v.endpoint.clone())),
+                    ("detail", Json::Str(v.detail.clone())),
+                ])
+            })
+            .collect();
+        println!(
+            "{}",
+            Json::obj(vec![
+                ("healthy", Json::Bool(violations.is_empty())),
+                ("endpoints", Json::Num(addrs.len() as f64)),
+                ("violations", Json::Arr(list)),
+            ])
+        );
+    } else if violations.is_empty() {
+        println!("fleet healthy: {} endpoint(s), no rule fired", addrs.len());
+    } else {
+        for v in &violations {
+            println!("{v}");
+        }
+        println!("{} violation(s)", violations.len());
+    }
+    if !violations.is_empty() {
+        // Scriptable contract: nonzero exit on any violation. Output is
+        // already line-flushed; no destructors matter past this point.
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 /// One dashboard frame for `amtl top`.
@@ -901,10 +1138,37 @@ fn render_top(addr: &str, r: &MetricsReport, updates_per_sec: f64) {
             println!("  {name:<28} {v:>12}");
         }
     }
+    if !r.nodes.is_empty() {
+        println!("nodes (fanned-in worker reports):");
+        for (t, sub) in &r.nodes {
+            let commit = sub
+                .hist("node.commit_us")
+                .map(|h| {
+                    format!(
+                        "commit p50 {}us p99 {}us ({} pushed)",
+                        h.quantile(0.5),
+                        h.quantile(0.99),
+                        h.count(),
+                    )
+                })
+                .unwrap_or_else(|| "no commits yet".into());
+            println!(
+                "  node {t:<3} up {:>7.1}s  {commit}",
+                sub.uptime_ms as f64 / 1000.0,
+            );
+        }
+    }
 }
 
 /// Machine-readable form of one metrics frame (`top --json`).
 fn report_json(r: &MetricsReport) -> String {
+    report_json_value(r).to_string()
+}
+
+/// The JSON value behind [`report_json`], reusable for fleet rows and
+/// recursing (depth 1 — the wire format allows no deeper) into the
+/// trainer's fanned-in worker NODE reports.
+fn report_json_value(r: &MetricsReport) -> Json {
     let counters: Vec<(&str, Json)> =
         r.counters.iter().map(|(k, v)| (k.as_str(), Json::Num(*v as f64))).collect();
     let gauges: Vec<(&str, Json)> =
@@ -925,14 +1189,24 @@ fn report_json(r: &MetricsReport) -> String {
             )
         })
         .collect();
+    let nodes: Vec<Json> = r
+        .nodes
+        .iter()
+        .map(|(t, sub)| {
+            Json::obj(vec![
+                ("node", Json::Num(*t as f64)),
+                ("report", report_json_value(sub)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
         ("role", Json::Str(r.role_name().to_string())),
         ("uptime_ms", Json::Num(r.uptime_ms as f64)),
         ("counters", Json::obj(counters)),
         ("gauges", Json::obj(gauges)),
         ("hists", Json::obj(hists)),
+        ("nodes", Json::Arr(nodes)),
     ])
-    .to_string()
 }
 
 fn cmd_datasets(opts: &Opts) -> Result<()> {

@@ -1,0 +1,737 @@
+//! Fleet observability: cross-process commit spans, a multi-endpoint
+//! metrics collector, and declarative health rules.
+//!
+//! Three pieces, built on the layers that already exist:
+//!
+//! * **Commit spans** — every commit is stamped with a span id derived
+//!   from `(node, k)` ([`span_id`]) and carried in `PushUpdate`, so the
+//!   worker, trainer, and replica processes can each emit `span` hop
+//!   events ([`record_hop`]) into their own JSONL traces that join into
+//!   one cross-process timeline. Hop durations also land in always-on
+//!   `span.hop_us.<hop>` histograms, and the worker records the whole
+//!   fetch→ack critical path in `commit_critical_path_us`.
+//! * **[`Collector`]** — polls N `FetchMetrics` endpoints (trainer +
+//!   replicas; the trainer fans in worker `NODE` rows), keeps a short
+//!   ring-buffer history per endpoint for rate/delta derivation, and
+//!   merges histograms fleet-wide via [`HistSnapshot::merge`].
+//! * **[`HealthRules`]** — declarative cluster health checks (staleness
+//!   runaway, replica lag divergence, eviction storm, updates/sec
+//!   stall, WAL fsync spike, endpoint down) evaluated over a collector;
+//!   `amtl health` exits nonzero on any [`Violation`], which is what the
+//!   chaos harness and CI script against.
+//!
+//! Span hop names, units, and the health rule catalog are tabulated in
+//! `docs/OBSERVABILITY.md`.
+
+use super::hist::{HistSnapshot, Histogram};
+use super::trace::TraceWriter;
+use crate::transport::wire::MetricsReport;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+// ------------------------------------------------------------ span ids
+
+/// Bits of a span id that hold the activation counter `k`.
+const SPAN_K_BITS: u32 = 48;
+
+/// The cross-process span id of one commit: node index in the top 16
+/// bits, activation counter `k` in the low 48. Structured rather than
+/// random so every process derives the *same* id from `(t, k)` without
+/// coordination, and a trace reader can recover both with [`split_span`].
+/// Collision-free for `node < 65536` and `k < 2^48` — far beyond any
+/// deployment this repo targets.
+pub fn span_id(node: usize, k: u64) -> u64 {
+    ((node as u64 & 0xFFFF) << SPAN_K_BITS) | (k & ((1 << SPAN_K_BITS) - 1))
+}
+
+/// Recover `(node, k)` from a span id.
+pub fn split_span(span: u64) -> (usize, u64) {
+    ((span >> SPAN_K_BITS) as usize, span & ((1 << SPAN_K_BITS) - 1))
+}
+
+/// Wall-clock microseconds since the UNIX epoch. Span hop timestamps use
+/// the wall clock — not a per-process monotonic clock — so hops emitted
+/// by different processes on the same host are directly comparable.
+pub fn unix_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------- hops
+
+/// One hop of a commit's cross-process life, in causal order. Each hop
+/// is emitted by the process that performed it; the union over all
+/// traces reconstructs the commit end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Hop {
+    /// Worker: backward fetch (`fetch_prox_col`) round trip.
+    NodeFetch,
+    /// Worker: forward gradient step on the node's own data.
+    NodeStep,
+    /// Worker: `push_update` send → `Pushed` ack (the full wire+server
+    /// round trip as the client saw it).
+    WireCommit,
+    /// Trainer: WAL append + fsync of the commit record.
+    Wal,
+    /// Trainer: staging the commit into its per-column slot (the
+    /// coalescing path) + dedup/apply bookkeeping.
+    Staging,
+    /// Trainer: the proximal fold that drained this commit's column.
+    ProxFold,
+    /// Replica: replaying the commit's WAL entry into the shadow model.
+    ReplicaApply,
+}
+
+impl Hop {
+    /// Every hop, in causal order.
+    pub const ALL: [Hop; 7] = [
+        Hop::NodeFetch,
+        Hop::NodeStep,
+        Hop::WireCommit,
+        Hop::Wal,
+        Hop::Staging,
+        Hop::ProxFold,
+        Hop::ReplicaApply,
+    ];
+
+    /// The hop's name as it appears in `span` trace events and in the
+    /// `span.hop_us.<name>` histogram family.
+    pub fn name(self) -> &'static str {
+        match self {
+            Hop::NodeFetch => "node_fetch",
+            Hop::NodeStep => "node_step",
+            Hop::WireCommit => "wire_commit",
+            Hop::Wal => "wal",
+            Hop::Staging => "staging",
+            Hop::ProxFold => "prox_fold",
+            Hop::ReplicaApply => "replica_apply",
+        }
+    }
+
+    /// Position in the causal order (0-based). On one host's shared wall
+    /// clock, a well-formed span's hop `start_us` values are monotone
+    /// non-decreasing in this rank — the property the integration tests
+    /// assert.
+    pub fn causal_rank(self) -> usize {
+        Self::ALL.iter().position(|h| *h == self).unwrap_or(usize::MAX)
+    }
+
+    /// Parse a hop from its trace-event name.
+    pub fn from_name(name: &str) -> Option<Hop> {
+        Self::ALL.into_iter().find(|h| h.name() == name)
+    }
+}
+
+/// Pre-resolved histogram handles for the span hot paths: one
+/// `span.hop_us.<hop>` histogram per hop plus `commit_critical_path_us`.
+/// Resolved once (registry lookup takes a mutex) and recorded through
+/// lock-free thereafter.
+struct SpanObs {
+    hops: [Arc<Histogram>; Hop::ALL.len()],
+    critical_path: Arc<Histogram>,
+}
+
+fn span_obs() -> &'static SpanObs {
+    static OBS: OnceLock<SpanObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let reg = super::global();
+        SpanObs {
+            hops: std::array::from_fn(|i| {
+                reg.hist(&format!("span.hop_us.{}", Hop::ALL[i].name()))
+            }),
+            critical_path: reg.hist("commit_critical_path_us"),
+        }
+    })
+}
+
+/// Record one span hop: the duration always lands in the hop's
+/// `span.hop_us.<hop>` histogram; when a trace writer is attached, a
+/// `span` event with wall-clock `start_us`/`end_us` is emitted so the
+/// hop can be joined cross-process. The span id is written as a 16-digit
+/// hex string (JSON numbers are doubles; ids exceed 2^53).
+pub fn record_hop(
+    trace: Option<&TraceWriter>,
+    hop: Hop,
+    node: usize,
+    k: u64,
+    start_us: u64,
+    end_us: u64,
+) {
+    let obs = span_obs();
+    obs.hops[hop.causal_rank()].record(end_us.saturating_sub(start_us));
+    if let Some(tw) = trace {
+        tw.event(
+            "span",
+            Some(node),
+            Some(k),
+            None,
+            &[
+                ("span", Json::Str(format!("{:016x}", span_id(node, k)))),
+                ("hop", Json::Str(hop.name().to_string())),
+                ("start_us", Json::Num(start_us as f64)),
+                ("end_us", Json::Num(end_us as f64)),
+            ],
+        );
+    }
+}
+
+/// Record one commit's worker-side critical path (fetch start → commit
+/// ack) into `commit_critical_path_us`.
+pub fn record_critical_path(us: u64) {
+    span_obs().critical_path.record(us);
+}
+
+// ------------------------------------------------------- delta helpers
+
+/// Counter delta across two polls of the *same* endpoint, guarded
+/// against restarts: a counter that went backwards (the endpoint
+/// restarted and re-zeroed its registry) reads as 0, not as a u64
+/// underflow. `amtl top` and the [`Collector`] both derive rates
+/// through this.
+pub fn counter_delta(prev: u64, cur: u64) -> u64 {
+    cur.saturating_sub(prev)
+}
+
+/// Rate per second from two counter readings `dt_secs` apart (0.0 when
+/// the interval is degenerate or the counter reset).
+pub fn counter_rate(prev: u64, cur: u64, dt_secs: f64) -> f64 {
+    if dt_secs <= 0.0 {
+        0.0
+    } else {
+        counter_delta(prev, cur) as f64 / dt_secs
+    }
+}
+
+// ------------------------------------------------------- the collector
+
+/// How many samples of history each endpoint keeps (at `amtl top`'s
+/// default 1 s poll interval: two minutes of rate context).
+pub const HISTORY_CAP: usize = 120;
+
+/// One endpoint's sample history: a bounded ring of
+/// `(local clock ms, report)` pairs plus reachability bookkeeping.
+pub struct EndpointHistory {
+    /// The endpoint address this history belongs to (as given to
+    /// [`Collector::new`]; purely a label here).
+    pub addr: String,
+    samples: VecDeque<(u64, MetricsReport)>,
+    /// Whether the most recent poll failed to produce a report.
+    pub down: bool,
+    /// Consecutive failed polls ending now (0 when up).
+    pub down_streak: u64,
+}
+
+impl EndpointHistory {
+    fn new(addr: &str) -> EndpointHistory {
+        EndpointHistory {
+            addr: addr.to_string(),
+            samples: VecDeque::new(),
+            down: false,
+            down_streak: 0,
+        }
+    }
+
+    /// The most recent report, if any poll ever succeeded.
+    pub fn latest(&self) -> Option<&MetricsReport> {
+        self.samples.back().map(|(_, r)| r)
+    }
+
+    /// The oldest retained report.
+    pub fn oldest(&self) -> Option<&MetricsReport> {
+        self.samples.front().map(|(_, r)| r)
+    }
+
+    /// Number of retained samples.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// True when no sample has ever been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Delta of counter `name` across the retained window (first → last
+    /// sample), restart-guarded. With a single sample the absolute value
+    /// is the delta — the window started empty.
+    pub fn counter_window_delta(&self, name: &str) -> u64 {
+        match (self.samples.front(), self.samples.back()) {
+            (Some((_, first)), Some((_, last))) if self.samples.len() >= 2 => counter_delta(
+                first.counter(name).unwrap_or(0),
+                last.counter(name).unwrap_or(0),
+            ),
+            (_, Some((_, only))) => only.counter(name).unwrap_or(0),
+            _ => 0,
+        }
+    }
+
+    /// Rate per second of counter `name` across the retained window.
+    /// `None` until two samples exist (a rate needs an interval).
+    pub fn counter_window_rate(&self, name: &str) -> Option<f64> {
+        let (first_at, first) = self.samples.front()?;
+        let (last_at, last) = self.samples.back()?;
+        if self.samples.len() < 2 {
+            return None;
+        }
+        let dt = last_at.saturating_sub(*first_at) as f64 / 1000.0;
+        Some(counter_rate(
+            first.counter(name).unwrap_or(0),
+            last.counter(name).unwrap_or(0),
+            dt,
+        ))
+    }
+}
+
+/// One flattened row of the fleet view: an endpoint's own report, or one
+/// of the `NODE` sub-reports a trainer fanned in.
+pub struct FleetRow<'a> {
+    /// Address of the endpoint the row came from.
+    pub addr: &'a str,
+    /// Task index for `NODE` rows fanned in by a trainer.
+    pub node: Option<u32>,
+    /// The row's report.
+    pub report: &'a MetricsReport,
+}
+
+impl FleetRow<'_> {
+    /// Display label: `addr` for an endpoint's own row,
+    /// `addr#node<t>` for a fanned-in worker row.
+    pub fn label(&self) -> String {
+        match self.node {
+            Some(t) => format!("{}#node{t}", self.addr),
+            None => self.addr.to_string(),
+        }
+    }
+}
+
+/// A cluster-wide metrics collector: per-endpoint ring-buffer histories
+/// fed by whatever polling mechanism the caller has (the `amtl top
+/// --fleet` / `amtl health` commands poll `FetchMetrics` sockets; the
+/// chaos harness feeds in-process reports directly), plus fleet-level
+/// merge/flatten queries and [`HealthRules`] evaluation over the result.
+pub struct Collector {
+    endpoints: Vec<EndpointHistory>,
+}
+
+impl Collector {
+    /// A collector over the given endpoint labels, with empty histories.
+    pub fn new<S: AsRef<str>>(addrs: &[S]) -> Collector {
+        Collector {
+            endpoints: addrs.iter().map(|a| EndpointHistory::new(a.as_ref())).collect(),
+        }
+    }
+
+    /// The tracked endpoints, in construction order.
+    pub fn endpoints(&self) -> &[EndpointHistory] {
+        &self.endpoints
+    }
+
+    /// Feed one poll result for endpoint `idx` (`None` = unreachable).
+    /// `at_ms` is any collector-local monotonic clock (e.g.
+    /// [`crate::obs::log::uptime_ms`]); only differences matter.
+    pub fn observe(&mut self, idx: usize, at_ms: u64, report: Option<MetricsReport>) {
+        let Some(ep) = self.endpoints.get_mut(idx) else { return };
+        match report {
+            Some(r) => {
+                ep.down = false;
+                ep.down_streak = 0;
+                ep.samples.push_back((at_ms, r));
+                while ep.samples.len() > HISTORY_CAP {
+                    ep.samples.pop_front();
+                }
+            }
+            None => {
+                ep.down = true;
+                ep.down_streak += 1;
+            }
+        }
+    }
+
+    /// Poll every endpoint through `fetch` (address → report) and feed
+    /// the results in. Returns how many endpoints answered.
+    pub fn poll_with(
+        &mut self,
+        at_ms: u64,
+        mut fetch: impl FnMut(&str) -> Option<MetricsReport>,
+    ) -> usize {
+        let mut up = 0;
+        for i in 0..self.endpoints.len() {
+            let report = fetch(&self.endpoints[i].addr.clone());
+            up += usize::from(report.is_some());
+            self.observe(i, at_ms, report);
+        }
+        up
+    }
+
+    /// Every current row of the fleet, flattened: each endpoint's latest
+    /// report, then (for trainers) its fanned-in `NODE` rows.
+    pub fn rows(&self) -> Vec<FleetRow<'_>> {
+        let mut rows = Vec::new();
+        for ep in &self.endpoints {
+            if let Some(report) = ep.latest() {
+                rows.push(FleetRow { addr: &ep.addr, node: None, report });
+                for (t, sub) in &report.nodes {
+                    rows.push(FleetRow { addr: &ep.addr, node: Some(*t), report: sub });
+                }
+            }
+        }
+        rows
+    }
+
+    /// The histogram named `name` merged across every current fleet row
+    /// (endpoints and `NODE` sub-reports alike). `None` when no row
+    /// carries it.
+    pub fn merged_hist(&self, name: &str) -> Option<HistSnapshot> {
+        let mut acc: Option<HistSnapshot> = None;
+        for row in self.rows() {
+            if let Some(h) = row.report.hist(name) {
+                match &mut acc {
+                    Some(a) => a.merge(h),
+                    None => acc = Some(h.clone()),
+                }
+            }
+        }
+        acc
+    }
+
+    /// Sum of counter `name` across every current fleet row.
+    pub fn summed_counter(&self, name: &str) -> u64 {
+        self.rows().iter().filter_map(|r| r.report.counter(name)).sum()
+    }
+}
+
+// --------------------------------------------------------- health rules
+
+/// Declarative cluster health rules, evaluated over a [`Collector`].
+/// Each threshold catches one way the paper's asynchrony story goes
+/// wrong operationally; the catalog with rationale lives in
+/// `docs/OBSERVABILITY.md`.
+#[derive(Clone, Debug)]
+pub struct HealthRules {
+    /// Staleness runaway: fire when the trainer's observed staleness max
+    /// exceeds this bound. Meaningful under `--method semisync` (set it
+    /// to the run's `--staleness` bound: the scheduler *guarantees* it,
+    /// so exceeding it is a correctness bug, not load). `None` = skip.
+    pub staleness_bound: Option<u64>,
+    /// Replica lag divergence: fire when a replica reports
+    /// `replica.lag` above this many commits — the feed stopped keeping
+    /// up and predictions are going stale.
+    pub max_replica_lag: u64,
+    /// Eviction storm: fire when `registry.evictions` grew by at least
+    /// this much over the retained window — membership is flapping
+    /// faster than nodes rejoin.
+    pub eviction_storm: u64,
+    /// Updates/sec stall: fire when the trainer's `server.commits` rate
+    /// over the window drops below this. 0.0 disables the rule (the
+    /// default — a *finished* run legitimately commits nothing).
+    pub min_updates_per_sec: f64,
+    /// WAL fsync latency spike: fire when `wal.fsync_us` p99 exceeds
+    /// this. The fsync is on every commit's ack path, so a slow disk
+    /// stalls the whole training side.
+    pub wal_fsync_p99_us: u64,
+}
+
+impl Default for HealthRules {
+    fn default() -> HealthRules {
+        HealthRules {
+            staleness_bound: None,
+            max_replica_lag: 5_000,
+            eviction_storm: 3,
+            min_updates_per_sec: 0.0,
+            wal_fsync_p99_us: 100_000,
+        }
+    }
+}
+
+/// One fired health rule: which rule, where, and the measured evidence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    /// Rule identifier (`staleness_runaway`, `replica_lag`,
+    /// `eviction_storm`, `updates_stall`, `wal_fsync_spike`,
+    /// `endpoint_down`).
+    pub rule: &'static str,
+    /// The endpoint (or `addr#node<t>` row) the evidence came from.
+    pub endpoint: String,
+    /// Human-readable measured-vs-threshold detail.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.rule, self.endpoint, self.detail)
+    }
+}
+
+impl HealthRules {
+    /// Evaluate every rule over the collector's current state. An empty
+    /// result is a healthy fleet; `amtl health` exits nonzero otherwise.
+    pub fn evaluate(&self, c: &Collector) -> Vec<Violation> {
+        let mut out = Vec::new();
+        for ep in c.endpoints() {
+            if ep.down {
+                out.push(Violation {
+                    rule: "endpoint_down",
+                    endpoint: ep.addr.clone(),
+                    detail: format!(
+                        "unreachable for {} consecutive poll(s)",
+                        ep.down_streak
+                    ),
+                });
+                continue;
+            }
+            let Some(latest) = ep.latest() else { continue };
+            if let Some(bound) = self.staleness_bound {
+                if let Some(h) = latest.hist("server.staleness") {
+                    if h.max > bound {
+                        out.push(Violation {
+                            rule: "staleness_runaway",
+                            endpoint: ep.addr.clone(),
+                            detail: format!(
+                                "staleness max {} exceeds the semisync bound {bound}",
+                                h.max
+                            ),
+                        });
+                    }
+                }
+            }
+            if let Some(lag) = latest.gauge("replica.lag") {
+                if lag > self.max_replica_lag {
+                    out.push(Violation {
+                        rule: "replica_lag",
+                        endpoint: ep.addr.clone(),
+                        detail: format!(
+                            "replica lag {lag} commits exceeds {}",
+                            self.max_replica_lag
+                        ),
+                    });
+                }
+            }
+            if self.eviction_storm > 0 {
+                let evictions = ep.counter_window_delta("registry.evictions");
+                if evictions >= self.eviction_storm {
+                    out.push(Violation {
+                        rule: "eviction_storm",
+                        endpoint: ep.addr.clone(),
+                        detail: format!(
+                            "{evictions} eviction(s) in the window (threshold {})",
+                            self.eviction_storm
+                        ),
+                    });
+                }
+            }
+            if self.min_updates_per_sec > 0.0 && latest.counter("server.commits").is_some() {
+                if let Some(rate) = ep.counter_window_rate("server.commits") {
+                    if rate < self.min_updates_per_sec {
+                        out.push(Violation {
+                            rule: "updates_stall",
+                            endpoint: ep.addr.clone(),
+                            detail: format!(
+                                "{rate:.2} updates/sec below the floor {:.2}",
+                                self.min_updates_per_sec
+                            ),
+                        });
+                    }
+                }
+            }
+            if let Some(h) = latest.hist("wal.fsync_us") {
+                if !h.is_empty() && h.quantile(0.99) > self.wal_fsync_p99_us {
+                    out.push(Violation {
+                        rule: "wal_fsync_spike",
+                        endpoint: ep.addr.clone(),
+                        detail: format!(
+                            "wal fsync p99 {}us exceeds {}us",
+                            h.quantile(0.99),
+                            self.wal_fsync_p99_us
+                        ),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(
+        role: u8,
+        counters: Vec<(&str, u64)>,
+        gauges: Vec<(&str, u64)>,
+        hists: Vec<(&str, HistSnapshot)>,
+    ) -> MetricsReport {
+        MetricsReport {
+            role,
+            uptime_ms: 1000,
+            counters: counters.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            gauges: gauges.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            hists: hists.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            nodes: Vec::new(),
+        }
+    }
+
+    fn hist_of(samples: &[u64]) -> HistSnapshot {
+        let h = Histogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn span_id_roundtrips_and_separates_nodes() {
+        for (node, k) in [(0usize, 0u64), (1, 7), (65535, (1 << 48) - 1), (42, 12345)] {
+            let id = span_id(node, k);
+            assert_eq!(split_span(id), (node, k));
+        }
+        assert_ne!(span_id(1, 7), span_id(2, 7));
+        assert_ne!(span_id(1, 7), span_id(1, 8));
+    }
+
+    #[test]
+    fn hop_names_roundtrip_and_rank_is_causal() {
+        for (i, hop) in Hop::ALL.into_iter().enumerate() {
+            assert_eq!(hop.causal_rank(), i);
+            assert_eq!(Hop::from_name(hop.name()), Some(hop));
+        }
+        assert_eq!(Hop::from_name("nope"), None);
+        assert!(Hop::NodeFetch.causal_rank() < Hop::Wal.causal_rank());
+        assert!(Hop::Wal.causal_rank() < Hop::ReplicaApply.causal_rank());
+    }
+
+    #[test]
+    fn counter_delta_guards_restarts() {
+        assert_eq!(counter_delta(10, 25), 15);
+        assert_eq!(counter_delta(10, 10), 0);
+        // A restarted endpoint re-zeroes its counters; the delta must
+        // read 0, not underflow to ~u64::MAX.
+        assert_eq!(counter_delta(1000, 3), 0);
+        assert_eq!(counter_rate(1000, 3, 1.0), 0.0);
+        assert_eq!(counter_rate(10, 30, 2.0), 10.0);
+        assert_eq!(counter_rate(10, 30, 0.0), 0.0);
+    }
+
+    #[test]
+    fn collector_history_is_bounded_and_rates_derive() {
+        let mut c = Collector::new(&["a"]);
+        for i in 0..(HISTORY_CAP as u64 + 40) {
+            let r = report_with(0, vec![("server.commits", i * 10)], vec![], vec![]);
+            c.observe(0, i * 1000, Some(r));
+        }
+        let ep = &c.endpoints()[0];
+        assert_eq!(ep.len(), HISTORY_CAP);
+        // 10 commits per 1000 ms sample → 10/sec across the window.
+        let rate = ep.counter_window_rate("server.commits").unwrap();
+        assert!((rate - 10.0).abs() < 1e-9, "rate {rate}");
+    }
+
+    #[test]
+    fn collector_merges_hists_across_endpoint_and_node_rows() {
+        let mut trainer = report_with(0, vec![], vec![], vec![("lat_us", hist_of(&[10, 20]))]);
+        trainer
+            .nodes
+            .push((0, report_with(2, vec![], vec![], vec![("lat_us", hist_of(&[30]))])));
+        let replica = report_with(1, vec![], vec![], vec![("lat_us", hist_of(&[40, 50, 60]))]);
+        let mut c = Collector::new(&["t", "r"]);
+        c.observe(0, 0, Some(trainer));
+        c.observe(1, 0, Some(replica));
+        assert_eq!(c.rows().len(), 3);
+        let merged = c.merged_hist("lat_us").unwrap();
+        assert_eq!(merged.count(), 6);
+        assert_eq!(merged.max, 60);
+        assert_eq!(merged.sum, 10 + 20 + 30 + 40 + 50 + 60);
+    }
+
+    #[test]
+    fn health_rules_fire_on_each_condition() {
+        let mut c = Collector::new(&["trainer", "replica", "dead"]);
+        let trainer = report_with(
+            0,
+            vec![("registry.evictions", 5), ("server.commits", 100)],
+            vec![],
+            vec![
+                ("server.staleness", hist_of(&[1, 2, 9])),
+                ("wal.fsync_us", hist_of(&[200_000])),
+            ],
+        );
+        let replica = report_with(1, vec![], vec![("replica.lag", 9_999)], vec![]);
+        c.observe(0, 0, Some(trainer));
+        c.observe(1, 0, Some(replica));
+        c.observe(2, 0, None);
+        let rules = HealthRules {
+            staleness_bound: Some(4),
+            max_replica_lag: 5_000,
+            eviction_storm: 3,
+            min_updates_per_sec: 0.0,
+            wal_fsync_p99_us: 100_000,
+        };
+        let violations = rules.evaluate(&c);
+        let fired: Vec<&str> = violations.iter().map(|v| v.rule).collect();
+        assert!(fired.contains(&"staleness_runaway"), "{fired:?}");
+        assert!(fired.contains(&"replica_lag"), "{fired:?}");
+        assert!(fired.contains(&"eviction_storm"), "{fired:?}");
+        assert!(fired.contains(&"wal_fsync_spike"), "{fired:?}");
+        assert!(fired.contains(&"endpoint_down"), "{fired:?}");
+        assert!(!fired.contains(&"updates_stall"), "disabled by default: {fired:?}");
+    }
+
+    #[test]
+    fn healthy_fleet_has_no_violations() {
+        let mut c = Collector::new(&["trainer"]);
+        let r = report_with(
+            0,
+            vec![("server.commits", 50), ("registry.evictions", 0)],
+            vec![],
+            vec![
+                ("server.staleness", hist_of(&[0, 1, 2])),
+                ("wal.fsync_us", hist_of(&[80, 120])),
+            ],
+        );
+        c.observe(0, 0, Some(r.clone()));
+        let mut r2 = r;
+        r2.counters[0].1 = 90; // server.commits advances; evictions stay flat
+        c.observe(0, 1000, Some(r2));
+        let rules = HealthRules {
+            staleness_bound: Some(4),
+            min_updates_per_sec: 1.0,
+            ..HealthRules::default()
+        };
+        assert_eq!(rules.evaluate(&c), Vec::new());
+    }
+
+    #[test]
+    fn updates_stall_fires_when_enabled_and_flat() {
+        let mut c = Collector::new(&["trainer"]);
+        let r = report_with(0, vec![("server.commits", 70)], vec![], vec![]);
+        c.observe(0, 0, Some(r.clone()));
+        c.observe(0, 2000, Some(r));
+        let rules =
+            HealthRules { min_updates_per_sec: 0.5, ..HealthRules::default() };
+        let fired: Vec<&str> = rules.evaluate(&c).iter().map(|v| v.rule).collect();
+        assert_eq!(fired, vec!["updates_stall"]);
+    }
+
+    #[test]
+    fn eviction_storm_uses_window_delta_not_lifetime_total() {
+        // An endpoint that evicted a lot long ago but is quiet across the
+        // retained window must NOT fire once two samples bracket it.
+        let mut c = Collector::new(&["trainer"]);
+        let r = report_with(0, vec![("registry.evictions", 50)], vec![], vec![]);
+        c.observe(0, 0, Some(r.clone()));
+        c.observe(0, 1000, Some(r));
+        assert!(HealthRules::default().evaluate(&c).is_empty());
+        // A single-sample history (the in-process chaos case) reads the
+        // absolute count: the window began at process start.
+        let mut c1 = Collector::new(&["storm"]);
+        c1.observe(0, 0, Some(report_with(0, vec![("registry.evictions", 50)], vec![], vec![])));
+        let fired: Vec<&str> =
+            HealthRules::default().evaluate(&c1).iter().map(|v| v.rule).collect();
+        assert_eq!(fired, vec!["eviction_storm"]);
+    }
+}

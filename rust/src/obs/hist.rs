@@ -186,6 +186,17 @@ impl HistSnapshot {
     pub fn nonzero(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
         self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(|(i, &c)| (i, c))
     }
+
+    /// Fold another snapshot's samples into this one — the snapshot-side
+    /// twin of [`Histogram::merge`], used by the fleet collector to merge
+    /// wire-shipped histograms across processes.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += theirs;
+        }
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
 }
 
 impl Default for HistSnapshot {
@@ -292,8 +303,12 @@ mod tests {
                     hb.record(x as u64);
                     hcat.record(x as u64);
                 }
+                let mut snap_merged = Histogram::new().snapshot();
+                snap_merged.merge(&ha.snapshot());
+                snap_merged.merge(&hb.snapshot());
                 ha.merge(&hb);
                 ha.snapshot() == hcat.snapshot()
+                    && snap_merged == hcat.snapshot()
                     && ha.quantile(0.5) == hcat.quantile(0.5)
                     && ha.quantile(0.99) == hcat.quantile(0.99)
             },

@@ -13,18 +13,24 @@
 //!   `log_trace!` macros; all diagnostics in `rust/src/` route through
 //!   it (CI rejects raw `eprintln!` outside this module).
 //! * [`trace`] — an opt-in (`--trace-out <path>`) JSONL event stream:
-//!   one line per activation/commit/prox/checkpoint/eviction with node
-//!   id, activation counter `k`, and server version, for offline
-//!   staleness/delay timeline reconstruction.
+//!   one line per activation/commit/prox/checkpoint/eviction/span-hop
+//!   with node id, activation counter `k`, and server version, for
+//!   offline staleness/delay timeline reconstruction.
+//! * [`fleet`] — the cross-process layer: commit span ids carried in
+//!   `PushUpdate` and emitted as per-hop `span` events, a multi-endpoint
+//!   [`fleet::Collector`] with ring-buffer rate history, and declarative
+//!   [`fleet::HealthRules`] behind `amtl top --fleet` / `amtl health`.
 //!
 //! Metric names, units, and the trace schema are tabulated in
 //! `docs/OBSERVABILITY.md`.
 
+pub mod fleet;
 pub mod hist;
 pub mod log;
 pub mod registry;
 pub mod trace;
 
+pub use fleet::{Collector, HealthRules, Violation};
 pub use hist::{HistSnapshot, Histogram};
 pub use registry::{global, MetricsRegistry, MetricsSnapshot};
 pub use trace::TraceWriter;

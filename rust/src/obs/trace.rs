@@ -6,8 +6,12 @@
 //! clock) and `event`; identifiers (`node`, `k`, `version`) and
 //! event-specific extras ride along when known. The schema is tabulated
 //! in `docs/OBSERVABILITY.md`. Writers are shared (`Arc`) across the
-//! worker/server/persist layers; each line is flushed on write so a
-//! killed process leaves a complete prefix.
+//! worker/server/persist layers. Lines are buffered and flushed every
+//! [`FLUSH_EVERY`] events (flushing per line measurably taxes the
+//! instrumented hot path); [`TraceWriter::flush`] is called at
+//! end-of-run/Shutdown barriers and on `Drop`, so a completed run's
+//! file always holds every event and a killed process leaves a valid
+//! prefix.
 
 use crate::util::json::Json;
 use anyhow::Result;
@@ -17,10 +21,19 @@ use std::path::Path;
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// Events buffered between automatic flushes.
+const FLUSH_EVERY: u32 = 64;
+
+struct Inner {
+    out: BufWriter<File>,
+    /// Events written since the last flush.
+    pending: u32,
+}
+
 /// An append-only JSONL event sink (see the module docs for the
 /// schema). Cloned by `Arc` into every instrumented layer.
 pub struct TraceWriter {
-    out: Mutex<BufWriter<File>>,
+    inner: Mutex<Inner>,
     start: Instant,
 }
 
@@ -40,7 +53,7 @@ impl TraceWriter {
             }
         }
         Ok(TraceWriter {
-            out: Mutex::new(BufWriter::new(File::create(path)?)),
+            inner: Mutex::new(Inner { out: BufWriter::new(File::create(path)?), pending: 0 }),
             start: Instant::now(),
         })
     }
@@ -74,15 +87,32 @@ impl TraceWriter {
         let line = Json::obj(fields).to_string();
         // Trace I/O must never take the run down: drop the line on a
         // full disk rather than propagate.
-        let mut out = self.out.lock().unwrap();
-        let _ = writeln!(out, "{line}");
-        let _ = out.flush();
+        let mut inner = self.inner.lock().unwrap();
+        let _ = writeln!(inner.out, "{line}");
+        inner.pending += 1;
+        if inner.pending >= FLUSH_EVERY {
+            let _ = inner.out.flush();
+            inner.pending = 0;
+        }
     }
 
-    /// Flush buffered lines to the OS (each event already flushes; this
-    /// exists for explicit end-of-run barriers).
+    /// Flush buffered lines to the OS. Called at explicit end-of-run /
+    /// `Shutdown` barriers (and on `Drop`) so live tail readers — `top`,
+    /// the smoke jobs, the chaos checker — see every event written so
+    /// far, not just the last multiple of [`FLUSH_EVERY`].
     pub fn flush(&self) {
-        let _ = self.out.lock().unwrap().flush();
+        let mut inner = self.inner.lock().unwrap();
+        let _ = inner.out.flush();
+        inner.pending = 0;
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        // The BufWriter's own Drop would flush too, but do it explicitly:
+        // the guarantee "a dropped writer's file holds every event" is a
+        // documented part of the trace contract, not an accident.
+        self.flush();
     }
 }
 
@@ -111,6 +141,31 @@ mod tests {
         let second = Json::parse(lines[1]).unwrap();
         assert_eq!(second.get("event").and_then(|j| j.as_str()), Some("checkpoint"));
         assert!(second.get("node").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dropped_writer_leaves_no_buffered_events_behind() {
+        // Write a count that is NOT a multiple of the flush stride, so
+        // events are still sitting in the buffer when the writer drops;
+        // the file must nevertheless parse to the full event count.
+        let dir = std::env::temp_dir().join(format!("amtl_trace_drop_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("drop.jsonl");
+        let total = FLUSH_EVERY as usize + 7;
+        {
+            let w = TraceWriter::create(&path).unwrap();
+            for i in 0..total {
+                w.event("activation", Some(0), Some(i as u64), None, &[]);
+            }
+            // No explicit flush: Drop must do it.
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), total);
+        for line in lines {
+            Json::parse(line).unwrap();
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

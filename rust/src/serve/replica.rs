@@ -22,7 +22,9 @@
 use super::metrics::LatencyHistogram;
 use crate::coordinator::server::CentralServer;
 use crate::linalg::{self, Mat};
+use crate::obs::fleet::{self, Hop};
 use crate::persist::{self, wal};
+use crate::persist::WalEntry;
 use crate::transport::wire::ReplicaStats;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -240,7 +242,20 @@ impl ReplicaCore {
                     gap = true;
                     break;
                 }
+                // A replayed commit is the last hop of its originating
+                // span: the update is now visible to predict traffic.
+                let apply_start_us = fleet::unix_us();
                 self.server.replay_entry(entry);
+                if let WalEntry::Commit { t, k, .. } = entry {
+                    fleet::record_hop(
+                        None,
+                        Hop::ReplicaApply,
+                        *t as usize,
+                        *k,
+                        apply_start_us,
+                        fleet::unix_us(),
+                    );
+                }
                 self.expected += 1;
                 applied += 1;
             }

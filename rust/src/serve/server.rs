@@ -177,7 +177,8 @@ fn serve_conn(stream: TcpStream, shared: &ReplicaShared, stop: &AtomicBool) {
             | Request::FetchEta
             | Request::Register { .. }
             | Request::Heartbeat { .. }
-            | Request::Leave { .. } => Response::Error(
+            | Request::Leave { .. }
+            | Request::PushMetrics { .. } => Response::Error(
                 "this is a read replica; training traffic goes to the central \
                  server (`amtl --serve`)"
                     .into(),

@@ -140,6 +140,16 @@ pub trait Transport: Send {
         Ok(())
     }
 
+    /// Export this node's metrics registry snapshot to the server, which
+    /// folds it into the `NODE` rows of its own `MetricsReport` (how a
+    /// multi-process fleet shows up in one `amtl top` view). Best-effort
+    /// and advisory; in-proc workers share the trainer's registry, so the
+    /// default is a no-op.
+    fn push_metrics(&mut self, t: usize, report: wire::MetricsReport) -> Result<()> {
+        let _ = (t, report);
+        Ok(())
+    }
+
     /// Graceful teardown (TCP sends a `Shutdown` frame; in-proc is a
     /// no-op). Called by the worker loop on exit; errors are advisory.
     fn close(&mut self) -> Result<()> {

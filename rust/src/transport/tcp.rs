@@ -31,6 +31,7 @@ use super::{RegisterAck, Transport};
 use crate::coordinator::metrics::Recorder;
 use crate::coordinator::server::CentralServer;
 use crate::obs;
+use crate::obs::fleet;
 use anyhow::{anyhow, bail, Result};
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -250,7 +251,7 @@ fn serve_conn(
                     ))
                 }
             }
-            Request::PushUpdate { t, k, step, u } => {
+            Request::PushUpdate { t, k, span, step, u } => {
                 let t = t as usize;
                 let (d, t_count) = (server.state().d(), server.state().t());
                 if t >= t_count {
@@ -262,6 +263,16 @@ fn serve_conn(
                 } else if !u.iter().all(|x| x.is_finite()) {
                     Response::Error("update vector contains non-finite values".into())
                 } else {
+                    // The span id is derived, not authoritative: a client
+                    // whose id disagrees with `(t, k)` is logged (it would
+                    // fragment the cross-process trace) but still applied —
+                    // tracing must never reject a valid commit.
+                    if span != fleet::span_id(t, k) {
+                        crate::log_debug!(
+                            "wire",
+                            "push span {span:#018x} != span_id({t}, {k}); tracing by (t, k)"
+                        );
+                    }
                     touch(server, t);
                     match server.commit_update(t, k, &u, step) {
                         Ok(version) => {
@@ -318,14 +329,26 @@ fn serve_conn(
                     ))
                 }
             }
+            // A remote worker exporting its own registry: parked on the
+            // server keyed by task index, surfaced as `NODE` rows of the
+            // next `FetchMetrics` report.
+            Request::PushMetrics { t, report } => {
+                server.note_node_metrics(t, report);
+                Response::MetricsAck
+            }
             // Observability: dump the process-wide metrics registry.
             // Answered by the trainer *and* the replica, so `amtl top`
-            // can point at either end of a run.
-            Request::FetchMetrics => Response::Metrics(MetricsReport::from_snapshot(
-                MetricsReport::ROLE_TRAINER,
-                obs::log::uptime_ms(),
-                obs::global().snapshot(),
-            )),
+            // can point at either end of a run. The trainer's report also
+            // carries the latest snapshot each remote worker pushed.
+            Request::FetchMetrics => {
+                let mut report = MetricsReport::from_snapshot(
+                    MetricsReport::ROLE_TRAINER,
+                    obs::log::uptime_ms(),
+                    obs::global().snapshot(),
+                );
+                report.nodes = server.node_metrics_rows();
+                Response::Metrics(report)
+            }
             // Serving-tier frames belong to read replicas: the training
             // server refuses them so nobody mistakes it for a predict
             // endpoint (predictions must come from the snapshot+WAL feed,
@@ -444,7 +467,10 @@ impl Transport for TcpClient {
     }
 
     fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
-        match self.request(&Request::PushUpdate { t: t as u32, k, step, u: u.to_vec() })? {
+        // The span id is derived here rather than taken as a parameter, so
+        // a frame's carried span always agrees with its `(t, k)` identity.
+        let span = fleet::span_id(t, k);
+        match self.request(&Request::PushUpdate { t: t as u32, k, span, step, u: u.to_vec() })? {
             Response::Pushed { version } => Ok(version),
             other => bail!("expected Pushed, got {other:?}"),
         }
@@ -470,6 +496,13 @@ impl Transport for TcpClient {
         match self.request(&Request::Leave { t: t as u32 })? {
             Response::LeaveAck => Ok(()),
             other => bail!("expected LeaveAck, got {other:?}"),
+        }
+    }
+
+    fn push_metrics(&mut self, t: usize, report: MetricsReport) -> Result<()> {
+        match self.request(&Request::PushMetrics { t: t as u32, report })? {
+            Response::MetricsAck => Ok(()),
+            other => bail!("expected MetricsAck, got {other:?}"),
         }
     }
 

@@ -48,7 +48,12 @@ pub const MAGIC: [u8; 4] = *b"AMTL";
 /// (`FetchMetrics`/`Metrics`) are *additive* extensions — new opcodes,
 /// same version: decoders reject opcodes they don't know, so older peers
 /// refuse the new frames cleanly without a version bump.
-pub const VERSION: u8 = 2;
+/// v3: `PushUpdate` carries the commit's cross-process span id (same
+/// pattern as the v2 activation counter — a field change forces the
+/// bump), `MetricsReport` fans in per-node sub-reports (role `NODE`
+/// rows), and worker processes piggyback their registry on the new
+/// `PushMetrics`/`MetricsAck` opcode pair.
+pub const VERSION: u8 = 3;
 /// Upper bound on payload size (guards allocation on corrupted lengths:
 /// 64 MiB ≫ any model column we ship).
 pub const MAX_PAYLOAD: u32 = 1 << 26;
@@ -64,6 +69,7 @@ const OP_LEAVE: u8 = 0x07;
 const OP_PREDICT: u8 = 0x08;
 const OP_FETCH_STATS: u8 = 0x09;
 const OP_FETCH_METRICS: u8 = 0x0A;
+const OP_PUSH_METRICS: u8 = 0x0B;
 
 // Response opcodes (server → client).
 const OP_PROX_COL: u8 = 0x81;
@@ -76,6 +82,7 @@ const OP_LEAVE_ACK: u8 = 0x87;
 const OP_PREDICTION: u8 = 0x88;
 const OP_STATS: u8 = 0x89;
 const OP_METRICS: u8 = 0x8A;
+const OP_METRICS_ACK: u8 = 0x8B;
 const OP_ERROR: u8 = 0xFF;
 
 /// Decode/IO failure. Malformed input is an error, never a panic.
@@ -366,8 +373,8 @@ impl ReplicaStats {
 /// few bytes per metric, not 65 buckets each.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct MetricsReport {
-    /// Which process answered: [`MetricsReport::ROLE_TRAINER`] or
-    /// [`MetricsReport::ROLE_REPLICA`].
+    /// Which process answered: [`MetricsReport::ROLE_TRAINER`],
+    /// [`MetricsReport::ROLE_REPLICA`], or [`MetricsReport::ROLE_NODE`].
     pub role: u8,
     /// Milliseconds on the answering process's monotonic metrics clock.
     pub uptime_ms: u64,
@@ -377,6 +384,12 @@ pub struct MetricsReport {
     pub gauges: Vec<(String, u64)>,
     /// Histograms, name-sorted.
     pub hists: Vec<(String, HistSnapshot)>,
+    /// Per-node sub-reports fanned in by the trainer: the last
+    /// `PushMetrics` snapshot from each worker process, tagged by task
+    /// index. One `FetchMetrics` to the trainer therefore sees the whole
+    /// training side. Exactly one level deep: a sub-report carries no
+    /// `nodes` of its own (the parser rejects nested nesting).
+    pub nodes: Vec<(u32, MetricsReport)>,
 }
 
 impl MetricsReport {
@@ -384,6 +397,8 @@ impl MetricsReport {
     pub const ROLE_TRAINER: u8 = 0;
     /// `role` tag of a read replica.
     pub const ROLE_REPLICA: u8 = 1;
+    /// `role` tag of a worker (task-node) process's piggybacked report.
+    pub const ROLE_NODE: u8 = 2;
 
     /// Assemble a report from a registry snapshot.
     pub fn from_snapshot(role: u8, uptime_ms: u64, snap: crate::obs::MetricsSnapshot) -> MetricsReport {
@@ -393,15 +408,16 @@ impl MetricsReport {
             counters: snap.counters,
             gauges: snap.gauges,
             hists: snap.hists,
+            nodes: Vec::new(),
         }
     }
 
     /// Human name of the answering role.
     pub fn role_name(&self) -> &'static str {
-        if self.role == Self::ROLE_REPLICA {
-            "replica"
-        } else {
-            "trainer"
+        match self.role {
+            Self::ROLE_REPLICA => "replica",
+            Self::ROLE_NODE => "node",
+            _ => "trainer",
         }
     }
 
@@ -456,9 +472,18 @@ impl MetricsReport {
                 out.extend_from_slice(&count.to_le_bytes());
             }
         }
+        out.extend_from_slice(&(self.nodes.len() as u32).to_le_bytes());
+        for (t, sub) in &self.nodes {
+            out.extend_from_slice(&t.to_le_bytes());
+            sub.push(out);
+        }
     }
 
     fn parse(c: &mut Cursor<'_>) -> Result<MetricsReport, WireError> {
+        Self::parse_at(c, 0)
+    }
+
+    fn parse_at(c: &mut Cursor<'_>, depth: u8) -> Result<MetricsReport, WireError> {
         let role = c.u8()?;
         let uptime_ms = c.u64()?;
         // No count-based preallocation: a corrupted count must run out of
@@ -489,7 +514,18 @@ impl MetricsReport {
             }
             hists.push((name, snap));
         }
-        Ok(MetricsReport { role, uptime_ms, counters, gauges, hists })
+        let mut nodes = Vec::new();
+        let node_count = c.u32()?;
+        // The fan-in is exactly one level deep: a sub-report claiming
+        // sub-reports of its own is malformed, not a recursion.
+        if depth > 0 && node_count > 0 {
+            return Err(WireError::Malformed("nested node metrics reports"));
+        }
+        for _ in 0..node_count {
+            let t = c.u32()?;
+            nodes.push((t, Self::parse_at(c, depth + 1)?));
+        }
+        Ok(MetricsReport { role, uptime_ms, counters, gauges, hists, nodes })
     }
 }
 
@@ -503,7 +539,11 @@ pub enum Request {
     /// deduplicates on it, turning the at-least-once reconnect-and-resend
     /// of the TCP client into an exactly-once commit (resends of an
     /// already-applied activation are acknowledged without re-applying).
-    PushUpdate { t: u32, k: u64, step: f64, u: Vec<f64> },
+    /// `span` is the commit's cross-process span id
+    /// ([`fleet::span_id`](crate::obs::fleet::span_id)`(t, k)`), carried
+    /// so the server's trace hops join the worker's without guessing —
+    /// the receiving side cross-checks it against `(t, k)`.
+    PushUpdate { t: u32, k: u64, span: u64, step: f64, u: Vec<f64> },
     /// Retrieve the run's forward step size η (a run constant).
     FetchEta,
     /// Graceful connection teardown.
@@ -529,6 +569,11 @@ pub enum Request {
     /// **both** the trainer and the replica — it is what `amtl top`
     /// polls.
     FetchMetrics,
+    /// A worker process's piggybacked registry snapshot (role `NODE`),
+    /// pushed on the heartbeat stride so the trainer can fan every
+    /// node's metrics into its own [`MetricsReport`]. Fire-and-forget in
+    /// spirit: the server acks but never gates training on it.
+    PushMetrics { t: u32, report: MetricsReport },
 }
 
 /// Server → client messages.
@@ -560,6 +605,8 @@ pub enum Response {
     Stats(ReplicaStats),
     /// The process's metrics registry dump (reply to `FetchMetrics`).
     Metrics(MetricsReport),
+    /// Acknowledges a `PushMetrics` snapshot.
+    MetricsAck,
     /// Request rejected (bad task index, dimension mismatch, …). The
     /// connection stays usable.
     Error(String),
@@ -578,6 +625,7 @@ impl Request {
             Request::Predict { .. } => OP_PREDICT,
             Request::FetchStats => OP_FETCH_STATS,
             Request::FetchMetrics => OP_FETCH_METRICS,
+            Request::PushMetrics { .. } => OP_PUSH_METRICS,
         }
     }
 
@@ -587,10 +635,11 @@ impl Request {
             | Request::Register { t }
             | Request::Heartbeat { t }
             | Request::Leave { t } => t.to_le_bytes().to_vec(),
-            Request::PushUpdate { t, k, step, u } => {
-                let mut out = Vec::with_capacity(20 + u.len() * 8);
+            Request::PushUpdate { t, k, span, step, u } => {
+                let mut out = Vec::with_capacity(28 + u.len() * 8);
                 out.extend_from_slice(&t.to_le_bytes());
                 out.extend_from_slice(&k.to_le_bytes());
+                out.extend_from_slice(&span.to_le_bytes());
                 out.extend_from_slice(&step.to_bits().to_le_bytes());
                 push_f64s(&mut out, u);
                 out
@@ -599,6 +648,12 @@ impl Request {
                 let mut out = Vec::with_capacity(4 + x.len() * 8);
                 out.extend_from_slice(&t.to_le_bytes());
                 push_f64s(&mut out, x);
+                out
+            }
+            Request::PushMetrics { t, report } => {
+                let mut out = Vec::new();
+                out.extend_from_slice(&t.to_le_bytes());
+                report.push(&mut out);
                 out
             }
             Request::FetchEta | Request::Shutdown | Request::FetchStats
@@ -614,9 +669,10 @@ impl Request {
             OP_PUSH_UPDATE => {
                 let t = c.u32()?;
                 let k = c.u64()?;
+                let span = c.u64()?;
                 let step = c.f64()?;
                 let u = c.rest_f64s()?;
-                Request::PushUpdate { t, k, step, u }
+                Request::PushUpdate { t, k, span, step, u }
             }
             OP_FETCH_ETA => Request::FetchEta,
             OP_SHUTDOWN => Request::Shutdown,
@@ -630,6 +686,11 @@ impl Request {
             }
             OP_FETCH_STATS => Request::FetchStats,
             OP_FETCH_METRICS => Request::FetchMetrics,
+            OP_PUSH_METRICS => {
+                let t = c.u32()?;
+                let report = MetricsReport::parse(&mut c)?;
+                Request::PushMetrics { t, report }
+            }
             other => return Err(WireError::BadOpcode(other)),
         };
         c.finish()?;
@@ -668,6 +729,7 @@ impl Response {
             Response::Prediction { .. } => OP_PREDICTION,
             Response::Stats(_) => OP_STATS,
             Response::Metrics(_) => OP_METRICS,
+            Response::MetricsAck => OP_METRICS_ACK,
             Response::Error(_) => OP_ERROR,
         }
     }
@@ -681,7 +743,7 @@ impl Response {
             }
             Response::Pushed { version } => version.to_le_bytes().to_vec(),
             Response::Eta(eta) => eta.to_bits().to_le_bytes().to_vec(),
-            Response::ShutdownAck | Response::LeaveAck => Vec::new(),
+            Response::ShutdownAck | Response::LeaveAck | Response::MetricsAck => Vec::new(),
             Response::Registered { col_version, generation } => {
                 let mut out = Vec::with_capacity(16);
                 out.extend_from_slice(&col_version.to_le_bytes());
@@ -729,6 +791,7 @@ impl Response {
             OP_PREDICTION => Response::Prediction { y: c.f64()?, model_seq: c.u64()? },
             OP_STATS => Response::Stats(ReplicaStats::parse(&mut c)?),
             OP_METRICS => Response::Metrics(MetricsReport::parse(&mut c)?),
+            OP_METRICS_ACK => Response::MetricsAck,
             OP_ERROR => {
                 let msg = String::from_utf8(payload.to_vec())
                     .map_err(|_| WireError::Malformed("error message is not utf-8"))?;
@@ -781,8 +844,20 @@ mod tests {
         for req in [
             Request::FetchProxCol { t: 0 },
             Request::FetchProxCol { t: u32::MAX },
-            Request::PushUpdate { t: 3, k: 7, step: 0.9, u: vec![1.0, -2.5, f64::MIN_POSITIVE] },
-            Request::PushUpdate { t: 0, k: u64::MAX, step: f64::NEG_INFINITY, u: vec![] },
+            Request::PushUpdate {
+                t: 3,
+                k: 7,
+                span: 0x0003_0000_0000_0007,
+                step: 0.9,
+                u: vec![1.0, -2.5, f64::MIN_POSITIVE],
+            },
+            Request::PushUpdate {
+                t: 0,
+                k: u64::MAX,
+                span: 0,
+                step: f64::NEG_INFINITY,
+                u: vec![],
+            },
             Request::FetchEta,
             Request::Shutdown,
             Request::Register { t: 2 },
@@ -792,8 +867,25 @@ mod tests {
             Request::Predict { t: u32::MAX, x: vec![] },
             Request::FetchStats,
             Request::FetchMetrics,
+            Request::PushMetrics { t: 2, report: sample_node_report() },
+            Request::PushMetrics { t: u32::MAX, report: MetricsReport::default() },
         ] {
             assert_eq!(roundtrip_request(&req), req);
+        }
+    }
+
+    fn sample_node_report() -> MetricsReport {
+        let h = crate::obs::Histogram::new();
+        for v in [5u64, 900, 31_000] {
+            h.record(v);
+        }
+        MetricsReport {
+            role: MetricsReport::ROLE_NODE,
+            uptime_ms: 4_200,
+            counters: vec![("transport.retries".into(), 2)],
+            gauges: vec![],
+            hists: vec![("node.step_us".into(), h.snapshot())],
+            nodes: vec![],
         }
     }
 
@@ -811,6 +903,7 @@ mod tests {
                 ("node.step_us".into(), h.snapshot()),
                 ("server.staleness".into(), crate::obs::HistSnapshot::empty()),
             ],
+            nodes: vec![(0, sample_node_report()), (3, sample_node_report())],
         }
     }
 
@@ -861,6 +954,7 @@ mod tests {
             Response::Stats(ReplicaStats::default()),
             Response::Metrics(sample_report()),
             Response::Metrics(MetricsReport::default()),
+            Response::MetricsAck,
             Response::Error("task index 9 out of range (T=4)".into()),
             Response::Error(String::new()),
         ] {
@@ -884,6 +978,32 @@ mod tests {
         assert_eq!(h.max, u64::MAX);
         assert_eq!(h.quantile(0.5), report.hist("node.step_us").unwrap().quantile(0.5));
         assert!(back.hist("server.staleness").unwrap().is_empty());
+        // The fanned-in node rows survive the wire too.
+        assert_eq!(back.nodes.len(), 2);
+        assert_eq!(back.nodes[1].0, 3);
+        assert_eq!(back.nodes[1].1.role_name(), "node");
+        assert_eq!(back.nodes[1].1.counter("transport.retries"), Some(2));
+        assert_eq!(back.nodes[1].1.hist("node.step_us").unwrap().count(), 3);
+    }
+
+    #[test]
+    fn metrics_report_rejects_nested_node_reports() {
+        // A sub-report is exactly one level deep: hand-encode a report
+        // whose node row itself claims a node row.
+        let grandchild =
+            MetricsReport { role: MetricsReport::ROLE_NODE, ..MetricsReport::default() };
+        let child = MetricsReport {
+            role: MetricsReport::ROLE_NODE,
+            nodes: vec![(1, grandchild)],
+            ..MetricsReport::default()
+        };
+        let root = MetricsReport { nodes: vec![(0, child)], ..MetricsReport::default() };
+        let mut payload = Vec::new();
+        root.push(&mut payload);
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x8A, &payload).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Response::decode(op, &payload), Err(WireError::Malformed(_))));
     }
 
     #[test]
@@ -925,6 +1045,7 @@ mod tests {
                 let req = Request::PushUpdate {
                     t: *t as u32,
                     k: *t as u64 * 31,
+                    span: crate::obs::fleet::span_id(*t, *t as u64 * 31),
                     step: *step,
                     u: u.clone(),
                 };
@@ -952,9 +1073,10 @@ mod tests {
     #[test]
     fn nan_payloads_roundtrip_bitwise() {
         // PartialEq on NaN is false; compare bit patterns instead.
-        let req = Request::PushUpdate { t: 1, k: 0, step: f64::NAN, u: vec![f64::NAN, 1.0] };
+        let req =
+            Request::PushUpdate { t: 1, k: 0, span: 7, step: f64::NAN, u: vec![f64::NAN, 1.0] };
         match roundtrip_request(&req) {
-            Request::PushUpdate { t, k: _, step, u } => {
+            Request::PushUpdate { t, k: _, span: _, step, u } => {
                 assert_eq!(t, 1);
                 assert_eq!(step.to_bits(), f64::NAN.to_bits());
                 assert_eq!(u[0].to_bits(), f64::NAN.to_bits());
@@ -967,10 +1089,12 @@ mod tests {
     #[test]
     fn truncated_frames_error_never_panic() {
         let frames = [
-            Request::PushUpdate { t: 2, k: 5, step: 0.5, u: vec![1.0, 2.0, 3.0] }.encode(),
+            Request::PushUpdate { t: 2, k: 5, span: 9, step: 0.5, u: vec![1.0, 2.0, 3.0] }
+                .encode(),
             Request::FetchEta.encode(),
             Request::Register { t: 1 }.encode(),
             Request::Predict { t: 0, x: vec![1.0, 2.0] }.encode(),
+            Request::PushMetrics { t: 1, report: sample_node_report() }.encode(),
             Response::ProxCol(vec![4.0; 7]).encode(),
             Response::Registered { col_version: 9, generation: 1 }.encode(),
             Response::Stats(sample_stats()).encode(),
@@ -995,13 +1119,15 @@ mod tests {
         // checks, everything else by the checksum (which covers the header
         // after the magic and the whole payload).
         let frames = [
-            Request::PushUpdate { t: 2, k: 3, step: 0.5, u: vec![1.0, -2.0] }.encode(),
+            Request::PushUpdate { t: 2, k: 3, span: 11, step: 0.5, u: vec![1.0, -2.0] }.encode(),
             Request::FetchProxCol { t: 7 }.encode(),
             Request::Heartbeat { t: 1 }.encode(),
             Request::Predict { t: 3, x: vec![0.5, 0.25] }.encode(),
             Request::FetchStats.encode(),
             Request::FetchMetrics.encode(),
+            Request::PushMetrics { t: 0, report: sample_node_report() }.encode(),
             Response::Metrics(sample_report()).encode(),
+            Response::MetricsAck.encode(),
             Response::Pushed { version: 41 }.encode(),
             Response::Eta(0.125).encode(),
             Response::Prediction { y: 1.5, model_seq: 7 }.encode(),
@@ -1076,10 +1202,11 @@ mod tests {
 
     #[test]
     fn ragged_f64_vector_is_rejected() {
-        // 9 bytes after (t, k, step) is not a whole number of f64s.
+        // 9 bytes after (t, k, span, step) is not a whole number of f64s.
         let mut payload = Vec::new();
         payload.extend_from_slice(&1u32.to_le_bytes());
         payload.extend_from_slice(&4u64.to_le_bytes());
+        payload.extend_from_slice(&9u64.to_le_bytes());
         payload.extend_from_slice(&0.5f64.to_bits().to_le_bytes());
         payload.extend_from_slice(&[0u8; 9]);
         let mut out = Vec::new();

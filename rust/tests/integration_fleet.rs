@@ -1,0 +1,137 @@
+//! Integration tests for fleet observability: worker metric reports fan
+//! in through the trainer over the real wire protocol (`PushMetrics` →
+//! NODE rows in the `FetchMetrics` answer), the collector merges
+//! endpoint rows with fanned-in NODE rows so fleet-wide histogram counts
+//! equal the sum of per-process counts, and the health rules evaluate
+//! evidence polled over real sockets.
+
+use amtl::coordinator::{MtlProblem, RunConfig};
+use amtl::data::synthetic;
+use amtl::obs::{Collector, HealthRules, Histogram};
+use amtl::optim::prox::RegularizerKind;
+use amtl::serve::PredictClient;
+use amtl::transport::wire::MetricsReport;
+use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport};
+use amtl::util::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+fn lowrank_problem(seed: u64, t: usize, n: usize, d: usize, lambda: f64) -> MtlProblem {
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&vec![n; t], d, 2, 0.1, &mut rng);
+    MtlProblem::new(ds, RegularizerKind::Nuclear, lambda, 0.5, &mut rng)
+}
+
+/// A worker-side report as `push_node_metrics` would assemble it, with
+/// known contents so the fan-in can be asserted exactly.
+fn node_report(updates: u64, commit_us: &[u64]) -> MetricsReport {
+    let h = Histogram::new();
+    for &s in commit_us {
+        h.record(s);
+    }
+    MetricsReport {
+        role: MetricsReport::ROLE_NODE,
+        uptime_ms: 1234,
+        counters: vec![("node.updates".into(), updates)],
+        gauges: vec![],
+        hists: vec![("node.commit_us".into(), h.snapshot())],
+        nodes: vec![],
+    }
+}
+
+#[test]
+fn node_metrics_fan_in_and_merge_across_the_fleet() {
+    // Two workers push their metric reports over the wire; the trainer's
+    // FetchMetrics answer fans them in as NODE rows; a collector fed
+    // that answer flattens the rows and merges histograms so the
+    // fleet-wide count equals the sum of the per-process counts.
+    let p = lowrank_problem(9100, 2, 40, 6, 0.25);
+    let cfg = RunConfig { iters_per_node: 4, record_every: 1_000_000, ..Default::default() };
+    let (_state, server, recorder) = cfg.build_server(&p).unwrap();
+    let mut handle =
+        TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), Some(recorder)).unwrap();
+    let addr = handle.addr();
+
+    // Two "worker processes": each drives one real commit and pushes one
+    // metrics report across the framed protocol.
+    let mut rng = Rng::new(12);
+    for t in 0..2usize {
+        let mut client = TcpClient::connect(addr, TcpOptions::default()).unwrap();
+        let _w = client.fetch_prox_col(t).unwrap();
+        let u = rng.normal_vec(p.d());
+        client.push_update(t, 0, 0.5, &u).unwrap();
+        client
+            .push_metrics(t, node_report(t as u64 + 3, &[100 * (t as u64 + 1), 250]))
+            .unwrap();
+    }
+
+    // The trainer's FetchMetrics frame carries both NODE rows, exactly
+    // as pushed, at fan-in depth 1.
+    let mut mc = PredictClient::connect(addr, TIMEOUT).unwrap();
+    let report = mc.metrics().unwrap();
+    assert_eq!(report.nodes.len(), 2, "one NODE row per worker");
+    for (t, sub) in &report.nodes {
+        assert_eq!(sub.role_name(), "node");
+        assert_eq!(sub.counter("node.updates"), Some(*t as u64 + 3));
+        assert_eq!(sub.hist("node.commit_us").unwrap().count(), 2);
+        assert!(sub.nodes.is_empty(), "fan-in is depth 1");
+    }
+    mc.close().unwrap();
+    handle.shutdown();
+
+    // Collector arithmetic over the wire-fed report: the merged
+    // histogram count equals the sum over all rows' own counts, and
+    // counters sum across rows.
+    let mut c = Collector::new(&["trainer"]);
+    c.observe(0, 0, Some(report));
+    let rows = c.rows();
+    assert_eq!(rows.len(), 3, "endpoint row + two NODE rows");
+    let labels: Vec<String> = rows.iter().map(|r| r.label()).collect();
+    assert!(labels.contains(&"trainer#node0".to_string()), "{labels:?}");
+    assert!(labels.contains(&"trainer#node1".to_string()), "{labels:?}");
+    let per_row: u64 = rows
+        .iter()
+        .filter_map(|r| r.report.hist("node.commit_us"))
+        .map(|h| h.count())
+        .sum();
+    assert_eq!(per_row, 4, "two samples per worker, none elsewhere");
+    let merged = c.merged_hist("node.commit_us").unwrap();
+    assert_eq!(merged.count(), per_row, "fleet-merged count == sum of per-process counts");
+    assert_eq!(c.summed_counter("node.updates"), 3 + 4);
+}
+
+#[test]
+fn health_endpoint_down_fires_over_real_sockets() {
+    // `amtl health` semantics end to end: one live trainer answering
+    // FetchMetrics, one address nothing listens on. Exactly the
+    // endpoint_down rule fires, attributed to the dead address.
+    let p = lowrank_problem(9101, 2, 30, 5, 0.25);
+    let cfg = RunConfig { iters_per_node: 2, record_every: 1_000_000, ..Default::default() };
+    let (_state, server, recorder) = cfg.build_server(&p).unwrap();
+    let mut handle =
+        TcpServer::spawn("127.0.0.1:0", Arc::clone(&server), Some(recorder)).unwrap();
+    let live = handle.addr().to_string();
+    // Find a loopback port with no listener: bind an ephemeral one and
+    // drop it before polling.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+
+    let mut c = Collector::new(&[live, dead.clone()]);
+    let up = c.poll_with(0, |a| {
+        let mut pc = PredictClient::connect(a, Duration::from_millis(500)).ok()?;
+        let r = pc.metrics().ok();
+        let _ = pc.close();
+        r
+    });
+    assert_eq!(up, 1, "only the live trainer answers");
+    let violations = HealthRules::default().evaluate(&c);
+    assert_eq!(violations.len(), 1, "{violations:?}");
+    assert_eq!(violations[0].rule, "endpoint_down");
+    assert_eq!(violations[0].endpoint, dead);
+    assert!(violations[0].to_string().contains("endpoint_down"), "{}", violations[0]);
+    handle.shutdown();
+}

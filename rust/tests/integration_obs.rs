@@ -6,6 +6,7 @@
 
 use amtl::coordinator::{MtlProblem, RunConfig, Session};
 use amtl::data::synthetic;
+use amtl::obs::fleet::{self, Hop};
 use amtl::obs::TraceWriter;
 use amtl::optim::prox::RegularizerKind;
 use amtl::serve::{ModelReplica, PredictClient, ReplicaServer};
@@ -59,6 +60,8 @@ fn tcp_run_trace_is_ordered_and_complete() {
 
     let text = std::fs::read_to_string(&path).unwrap();
     let mut commits_per_node: HashMap<usize, Vec<u64>> = HashMap::new();
+    // (node, k) → [(causal rank, start_us)] over every span hop event.
+    let mut spans: HashMap<(usize, u64), Vec<(usize, f64)>> = HashMap::new();
     let mut commit_count = 0u64;
     let mut activations = 0u64;
     let mut registers = 0u64;
@@ -91,6 +94,26 @@ fn tcp_run_trace_is_ordered_and_complete() {
                 }
                 registers += 1;
             }
+            "span" => {
+                let node = j.get("node").and_then(|n| n.as_usize()).expect("span node");
+                let k = j.get("k").and_then(|v| v.as_usize()).expect("span k") as u64;
+                let hop_name =
+                    j.get("hop").and_then(|h| h.as_str()).expect("span hop").to_string();
+                let hop = Hop::from_name(&hop_name)
+                    .unwrap_or_else(|| panic!("unknown span hop '{hop_name}'"));
+                // The span id is a 16-hex string (ids exceed 2^53, the
+                // limit of a JSON double) derived from (node, k).
+                let id = j.get("span").and_then(|s| s.as_str()).expect("span id").to_string();
+                assert_eq!(
+                    id,
+                    format!("{:016x}", fleet::span_id(node, k)),
+                    "span id derives from (node, k)"
+                );
+                let start = j.get("start_us").and_then(|v| v.as_f64()).expect("start_us");
+                let end = j.get("end_us").and_then(|v| v.as_f64()).expect("end_us");
+                assert!(end >= start, "hop {hop_name} ends at or after its start");
+                spans.entry((node, k)).or_default().push((hop.causal_rank(), start));
+            }
             "prox" | "checkpoint" | "eviction" => {}
             other => panic!("unexpected trace event '{other}'"),
         }
@@ -108,6 +131,33 @@ fn tcp_run_trace_is_ordered_and_complete() {
         assert_eq!(ks[0], 0, "node {node} starts at activation 0");
         assert_eq!(*ks.last().unwrap(), iters as u64 - 1);
     }
+    // Every commit left a complete cross-process span: the worker side
+    // emitted node_fetch/node_step/wire_commit, the server side staging
+    // (no WAL hop — this run is not durable; prox folds coalesce, so a
+    // prox_fold hop joins only the latest staged commit per drain). Hop
+    // start timestamps are wall-clock and must be monotone in causal
+    // rank — worker and server share this host's clock.
+    for (node, ks) in &commits_per_node {
+        for &k in ks {
+            let mut hops = spans
+                .remove(&(*node, k))
+                .unwrap_or_else(|| panic!("commit ({node}, {k}) left no span events"));
+            hops.sort_by_key(|(rank, _)| *rank);
+            let ranks: Vec<usize> = hops.iter().map(|(rank, _)| *rank).collect();
+            for need in [Hop::NodeFetch, Hop::NodeStep, Hop::WireCommit, Hop::Staging] {
+                assert!(
+                    ranks.contains(&need.causal_rank()),
+                    "commit ({node}, {k}) span is missing the {} hop: {ranks:?}",
+                    need.name()
+                );
+            }
+            assert!(
+                hops.windows(2).all(|w| w[0].1 <= w[1].1),
+                "commit ({node}, {k}) hop starts not monotone in causal rank: {hops:?}"
+            );
+        }
+    }
+    assert!(spans.is_empty(), "span events for uncommitted activations: {spans:?}");
     // The run result carries the staleness summary the trace corroborates.
     assert!(r.mean_staleness.is_finite() && r.mean_staleness >= 0.0);
     assert!(r.staleness_p99 >= r.staleness_p50);

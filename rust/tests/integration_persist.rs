@@ -225,6 +225,7 @@ fn serve_worker(addr: &str, resume: bool, delay: DelayModel, opts: TcpOptions) -
         heartbeat: None,
         resume,
         trace: None,
+        metrics_stride: None,
     }
 }
 
@@ -472,6 +473,7 @@ fn killed_tcp_node_is_evicted_and_a_replacement_catches_up() {
                 heartbeat: Some(Duration::from_millis(20)),
                 resume: false,
                 trace: None,
+                metrics_stride: None,
             };
             let compute = &mut **compute;
             s.spawn(move || {
@@ -518,6 +520,7 @@ fn killed_tcp_node_is_evicted_and_a_replacement_catches_up() {
             heartbeat: Some(Duration::from_millis(20)),
             resume: true,
             trace: None,
+            metrics_stride: None,
         };
         let stats = run_worker(ctx, victim_compute.as_mut()).unwrap();
         assert_eq!(stats.updates, 70, "replacement does only the remainder");

@@ -350,6 +350,7 @@ fn full_pjrt_l21_amtl_run() {
                 heartbeat: None,
                 resume: false,
                 trace: None,
+                metrics_stride: None,
             };
             s.spawn(move || run_worker(ctx, c.as_mut()).unwrap());
         }

@@ -157,6 +157,7 @@ fn replica_never_errors_under_live_tcp_training() {
                 heartbeat: None,
                 resume: false,
                 trace: None,
+                metrics_stride: None,
             };
             workers.push(s.spawn(move || {
                 run_worker(ctx, compute.as_mut()).expect("worker failed");

@@ -151,6 +151,7 @@ fn node_style_tcp_cluster_converges_to_inproc_objective() {
                 heartbeat: None,
                 resume: false,
                 trace: None,
+                metrics_stride: None,
             };
             s.spawn(move || {
                 let stats = run_worker(ctx, compute.as_mut()).unwrap();
