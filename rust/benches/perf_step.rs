@@ -23,7 +23,10 @@
 //! 7. observability overhead: the same throughput run with the JSONL
 //!    trace writer attached (every activation/commit/prox traced),
 //!    recorded as `throughput_instrumented` / `instrumentation_overhead`
-//!    — the acceptance bar is instrumented ≥ 0.95x of plain.
+//!    — the acceptance bar is instrumented ≥ 0.95x of plain;
+//! 8. sharded server throughput: the same separable (ℓ1) run over 1, 2
+//!    and 4 column-partitioned prox shards — the 2-shard number lands in
+//!    `BENCH_perf_step.json` as `throughput_sharded`.
 //!
 //! Point `AMTL_ARTIFACTS` at an alternative artifact directory to A/B
 //! kernel variants. `--threads N` sizes the linalg pool for section 3/4.
@@ -261,6 +264,50 @@ fn main() -> anyhow::Result<()> {
                 format!("{ups:.1}"),
                 format!("{:.4}", problem.objective(&r.w_final)),
                 r.prox_count.to_string(),
+            ]);
+        }
+        table.print();
+    }
+
+    // ---- sharded server throughput: N prox shards vs one server ---------
+    println!("\n=== sharded server: commit throughput vs shard count (updates/sec, l1) ===");
+    {
+        use amtl::shard::{run_sharded, ShardRunConfig};
+        let (st, sn, sd, siters) = if quick { (6, 20, 10, 4) } else { (24, 60, 40, 15) };
+        let mut rng = Rng::new(9);
+        let ds = synthetic::lowrank_regression(&vec![sn; st], sd, 3, 0.5, &mut rng);
+        let problem = MtlProblem::new(ds, RegularizerKind::L1, 0.3, 0.5, &mut rng);
+        let mut table = Table::new(&["shards", "updates/sec", "vs 1 shard", "objective"]);
+        let mut single_ups = 0.0f64;
+        for shards in [1usize, 2, 4] {
+            if shards > st {
+                continue;
+            }
+            let cfg = ShardRunConfig::new(shards, siters, 0.5, 9);
+            let start = std::time::Instant::now();
+            let res = run_sharded(&problem, &cfg)?;
+            let wall = start.elapsed().as_secs_f64().max(1e-12);
+            let ups = res.updates as f64 / wall;
+            if shards == 1 {
+                single_ups = ups;
+            }
+            if shards == 2 {
+                // The gated record: the 2-shard separable path must keep
+                // commit throughput in the same league as one server.
+                log.record_kv(
+                    "throughput_sharded",
+                    &[
+                        ("updates_per_sec", ups),
+                        ("sharded_over_single", ups / single_ups.max(1e-12)),
+                        ("shards", shards as f64),
+                    ],
+                );
+            }
+            table.row(vec![
+                shards.to_string(),
+                format!("{ups:.1}"),
+                format!("{:.2}x", ups / single_ups.max(1e-12)),
+                format!("{:.4}", res.objective),
             ]);
         }
         table.print();

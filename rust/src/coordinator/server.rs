@@ -91,6 +91,12 @@ pub struct CentralServer {
     online: bool,
     /// Prox step size `η` (the same η as the forward step, Eq. III.4).
     eta: f64,
+    /// Global task index of this server's column 0. Zero for a whole-model
+    /// server; a prox shard sets it to its range start so trace events and
+    /// cross-process span hops carry **global** task indices (and join the
+    /// committing worker's span, which is keyed by global `t`) even though
+    /// the server itself works in local columns.
+    node_base: usize,
     /// Reuse the cached prox until this many new updates have landed.
     prox_every: u64,
     /// Version-keyed prox cache: read-locked on the (frequent) hit path,
@@ -170,6 +176,7 @@ impl CentralServer {
             reg: Mutex::new(reg),
             online,
             eta,
+            node_base: 0,
             prox_every: 1,
             cache: RwLock::new(None),
             prox_gate: Mutex::new(()),
@@ -194,6 +201,15 @@ impl CentralServer {
     /// Set the prox reuse window (default 1 = re-prox after every update).
     pub fn with_prox_every(mut self, k: u64) -> CentralServer {
         self.prox_every = k.max(1);
+        self
+    }
+
+    /// Declare this server a prox shard whose column 0 is global task
+    /// `base`: trace events and span hops report `base + t` so a fleet of
+    /// shards shows up in one coherent task space (`amtl top --fleet`,
+    /// trace span joins).
+    pub fn with_node_base(mut self, base: usize) -> CentralServer {
+        self.node_base = base;
         self
     }
 
@@ -441,7 +457,7 @@ impl CentralServer {
                 fleet::record_hop(
                     self.trace.as_deref(),
                     Hop::ProxFold,
-                    t,
+                    self.node_base + t,
                     k,
                     fold_start_us,
                     fleet::unix_us(),
@@ -506,7 +522,7 @@ impl CentralServer {
                 fleet::record_hop(
                     self.trace.as_deref(),
                     Hop::Staging,
-                    t,
+                    self.node_base + t,
                     k,
                     stage_start_us,
                     fleet::unix_us(),
@@ -521,7 +537,7 @@ impl CentralServer {
                     fleet::record_hop(
                         self.trace.as_deref(),
                         Hop::Wal,
-                        t,
+                        self.node_base + t,
                         k,
                         wal_start_us,
                         fleet::unix_us(),
@@ -531,7 +547,7 @@ impl CentralServer {
                     fleet::record_hop(
                         self.trace.as_deref(),
                         Hop::Staging,
-                        t,
+                        self.node_base + t,
                         k,
                         stage_start_us,
                         fleet::unix_us(),
@@ -572,7 +588,7 @@ impl CentralServer {
         if let Some(tr) = &self.trace {
             tr.event(
                 "commit",
-                Some(t),
+                Some(self.node_base + t),
                 Some(k),
                 Some(version),
                 &[("staleness", Json::Num(staleness as f64))],
@@ -619,7 +635,7 @@ impl CentralServer {
         if let Some(tr) = &self.trace {
             tr.event(
                 "register",
-                Some(t),
+                Some(self.node_base + t),
                 None,
                 None,
                 &[
@@ -697,6 +713,7 @@ impl CentralServer {
             reg: Mutex::new(reg),
             online,
             eta: snap.eta,
+            node_base: 0,
             prox_every: snap.prox_every,
             cache: RwLock::new(None),
             prox_gate: Mutex::new(()),

@@ -135,5 +135,6 @@ pub mod optim;
 pub mod persist;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod transport;
 pub mod util;

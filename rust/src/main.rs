@@ -51,13 +51,16 @@ use amtl::obs::{fleet, Collector, HealthRules, TraceWriter};
 use amtl::optim::coupling::TaskGraph;
 use amtl::optim::svd::SvdMode;
 use amtl::optim::FormulationSpec;
+use amtl::linalg::Mat;
 use amtl::runtime::{ComputePool, Engine, PoolConfig};
 use amtl::serve::{ModelReplica, PredictClient, ReplicaServer};
+use amtl::shard::{run_sharded, ProxShard, ShardMap, ShardRunConfig, TcpShardRouter};
 use amtl::transport::wire::MetricsReport;
 use amtl::transport::{TcpClient, TcpOptions, TcpServer, Transport, TransportKind};
 use amtl::util::json::Json;
 use amtl::util::Rng;
 use anyhow::{anyhow, bail, ensure, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -141,8 +144,27 @@ DISTRIBUTED MODES (two-terminal walkthrough in README.md):
   --serve ADDR   host the central (prox) server on ADDR, wait for
                  tasks x iters updates, then report and exit
   --node T       run task node T only (owns only task T's data)
-  --connect ADDR server address for --node
+  --connect ADDR server address for --node; a comma list (or any one
+                 shard of a --shard-peers fleet) auto-routes by task
+                 through the shard map
   Launch serve and every node with the SAME data/problem options.
+
+SHARDED SERVER (multi-shard walkthrough in README.md):
+  --serve ADDR --shard i/N      host prox shard i of an N-way column
+                 partition of V: own commit staging/dedup, own
+                 snapshots+WAL under <dir>/shard-i/, serves only its
+                 contiguous task range (FetchShardMap bootstraps
+                 routers). Separable regularizers (l1, elasticnet,
+                 none) shard with zero cross-talk and merge bitwise;
+                 the rest get periodic coordination rounds.
+  --shard-peers A,B,...         every shard's address, index order;
+                 required for coordination rounds and for the final
+                 fleet merge that shard 0 reports
+  --coord-interval-ms MS        coordination round cadence      [500]
+  --linger-ms MS                how long shards i>0 keep serving after
+                 finishing, so shard 0's final gather succeeds [3000]
+  train --shards N              the same partition in one process
+                 (N in-proc shards; see train options below)
 
 SERVING TIER (three-terminal walkthrough in README.md):
   --replica ADDR     serve Predict/FetchStats on ADDR from a read
@@ -154,7 +176,9 @@ SERVING TIER (three-terminal walkthrough in README.md):
   --poll-ms MS       WAL tail poll interval                       [50]
   predict --connect ADDR --task T --x V1,V2,...
                      score one feature vector against task T's column;
-                     prints yhat and the model's WAL horizon
+                     prints yhat and the model's WAL horizon. A comma
+                     list of replicas (one per shard, index order)
+                     routes the task to the owning replica
   predict --connect ADDR --stats
                      print the replica's stats frame (lag, latency
                      quantiles, request counters)
@@ -212,6 +236,10 @@ RUN OPTIONS:
                  all cores; parallel results are bitwise serial)  [0]
   --sgd FRAC     stochastic forward steps with this minibatch fraction
   --prox-every K server re-prox stride              [1]
+  --shards N     train only: split the server into N in-proc column
+                 shards (amtl schedule, inproc transport)        [1]
+  --coord-every K  commits between coordination rounds for
+                 non-separable formulations under --shards       [64]
   --engine <pjrt|native>                           [native]
   --executors N  PJRT executor threads              [2]
   --artifacts-dir PATH                             [artifacts]
@@ -243,7 +271,8 @@ OBSERVABILITY (full metric/trace reference: docs/OBSERVABILITY.md):
   top --fleet A,B,..   poll several endpoints at once (trainer +
                        replicas; worker NODE rows fan in through the
                        trainer) and render one cluster-wide table with
-                       fleet-merged histograms
+                       fleet-merged histograms; sharded trainers show
+                       their slot in the SHARD i/N column
   top --once           print one snapshot and exit (no screen clearing)
   top --json           machine-readable snapshots (one JSON per poll)
   top --interval-ms MS poll interval                          [1000]
@@ -256,10 +285,12 @@ FLEET HEALTH (rule catalog with rationale: docs/OBSERVABILITY.md):
                        print violations, exit nonzero if any fired
   --staleness-bound B  staleness-runaway bound; set to the run's
                        --staleness under semisync            [off]
-  --max-replica-lag N  replica lag threshold (commits)      [5000]
+  --lag-bound N        replica lag threshold (commits)      [5000]
+                       (--max-replica-lag is a legacy alias)
   --eviction-storm N   evictions per window threshold          [3]
   --min-rate R         updates/sec floor (0 disables)          [0]
-  --wal-fsync-p99-us U wal fsync p99 threshold (us)       [100000]
+  --fsync-p99-us U     wal fsync p99 threshold (us)       [100000]
+                       (--wal-fsync-p99-us is a legacy alias)
   --samples N          polls per endpoint before judging       [2]
   --json               machine-readable verdict
 ";
@@ -436,7 +467,21 @@ fn cmd_train(opts: &Opts) -> Result<()> {
     let problem = build_problem(opts, &mut rng)?;
     let schedule = parse_schedule(opts)?;
     let ro = run_opts(opts, problem.t())?;
+    let shards = opts.get_usize("shards", 1)?;
+    let coord_every = opts.get_u64("coord-every", amtl::shard::DEFAULT_COORD_EVERY)?;
     opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    if shards > 1 {
+        ensure!(
+            opts.get_or("method", "amtl") == "amtl",
+            "--shards runs the amtl (async) schedule only"
+        );
+        ensure!(
+            ro.transport.name() == "inproc",
+            "--shards is the in-process driver; run multi-process shards with \
+             `amtl --serve <addr> --shard i/N` instead"
+        );
+        return cmd_train_sharded(&problem, &ro, shards, coord_every);
+    }
 
     println!("dataset: {}", problem.dataset.describe());
     println!(
@@ -461,6 +506,56 @@ fn cmd_train(opts: &Opts) -> Result<()> {
         "final objective: {:.6}  (train RMSE {:.4})",
         problem.objective(&result.w_final),
         problem.train_rmse(&result.w_final)
+    );
+    Ok(())
+}
+
+/// `train --shards N`: the in-process sharded run — one column-range
+/// prox shard per partition, one free-running worker per task routed by
+/// the shard map (see `docs/ARCHITECTURE.md` § "Sharded server").
+fn cmd_train_sharded(
+    problem: &MtlProblem,
+    ro: &RunOpts,
+    shards: usize,
+    coord_every: u64,
+) -> Result<()> {
+    println!("dataset: {}", problem.dataset.describe());
+    println!(
+        "problem: reg={} lambda={} eta={:.3e} L={:.3e} shards={shards} threads={}",
+        problem.reg_name(),
+        problem.lambda,
+        problem.eta,
+        problem.l_max,
+        amtl::linalg::threads(),
+    );
+    let mut cfg = ShardRunConfig::new(shards, ro.iters, ro.eta_k, ro.seed);
+    cfg.coord_every = coord_every.max(1);
+    cfg.persist = ro.checkpoint_dir.clone().map(|d| (d, ro.checkpoint_every));
+    cfg.resume = ro.resume;
+    if let Some((dir, every)) = &cfg.persist {
+        println!(
+            "{} {} (snapshot every {every} commits, one store per shard)",
+            if cfg.resume { "resuming from" } else { "checkpointing to" },
+            dir.display()
+        );
+    }
+    let res = run_sharded(problem, &cfg)?;
+    println!(
+        "sharded run complete: {} updates over {shards} shards ({})",
+        res.updates,
+        if res.separable {
+            "separable: no coordination traffic".to_string()
+        } else {
+            format!("{} coordination rounds", res.rounds)
+        },
+    );
+    for (t, s) in res.worker_stats.iter().enumerate() {
+        println!("  node {t}: {} updates", s.updates);
+    }
+    println!(
+        "final objective: {:.6}  (train RMSE {:.4})",
+        res.objective,
+        problem.train_rmse(&res.merged_w)
     );
     Ok(())
 }
@@ -497,6 +592,12 @@ fn cmd_compare(opts: &Opts) -> Result<()> {
 /// report) once `tasks x iters` updates have landed.
 fn cmd_serve(opts: &Opts) -> Result<()> {
     let addr = opts.require("serve").map_err(|e| anyhow!("{e}"))?;
+    // `--shard i/N` switches to the sharded deployment: this process
+    // hosts one column-range prox shard, not the whole-model server.
+    if let Some(spec) = opts.get("shard") {
+        let spec = spec.to_string();
+        return cmd_serve_shard(opts, &addr, &spec);
+    }
     let mut rng = Rng::new(opts.get_u64("seed", 7)?);
     let problem = build_problem(opts, &mut rng)?;
     let ro = run_opts(opts, problem.t())?;
@@ -648,6 +749,402 @@ fn cmd_serve(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--shard i/N` into `(index, count)`.
+fn parse_shard_spec(spec: &str) -> Result<(usize, usize)> {
+    let parse = || -> Option<(usize, usize)> {
+        let (i, n) = spec.split_once('/')?;
+        Some((i.trim().parse().ok()?, n.trim().parse().ok()?))
+    };
+    let (index, count) =
+        parse().ok_or_else(|| anyhow!("--shard expects i/N (e.g. --shard 0/2), got '{spec}'"))?;
+    ensure!(count > 0, "--shard {spec}: shard count must be positive");
+    ensure!(index < count, "--shard {spec}: index must be below the shard count");
+    Ok((index, count))
+}
+
+/// Dial shard `s`'s serve address (lazily, reusing an open client).
+fn shard_client<'a>(
+    clients: &'a mut [Option<TcpClient>],
+    map: &ShardMap,
+    s: usize,
+) -> Result<&'a mut TcpClient> {
+    if clients[s].is_none() {
+        let addr = &map.addrs[s];
+        ensure!(!addr.is_empty(), "shard {s} has no address (start shards with --shard-peers)");
+        clients[s] = Some(TcpClient::connect(addr.as_str(), TcpOptions::default())?);
+    }
+    Ok(clients[s].as_mut().expect("just connected"))
+}
+
+/// Gather every shard's raw `V` slice into the full d×T iterate — the
+/// own slice read in-process (through the checkpoint quiesce gate),
+/// peers over `FetchSlice`. Returns each shard's commit count alongside.
+fn gather_fleet(
+    shard: &ProxShard,
+    map: &ShardMap,
+    clients: &mut [Option<TcpClient>],
+) -> Result<(Vec<u64>, Mat)> {
+    let d = map.d as usize;
+    let mut full = Mat::zeros(d, map.tasks());
+    let mut versions = vec![0u64; map.shards()];
+    for s in 0..map.shards() {
+        let (v, slice) = if s == shard.index() {
+            shard.raw_slice()
+        } else {
+            shard_client(clients, map, s)?.fetch_slice()?
+        };
+        let range = map.range(s);
+        ensure!(
+            slice.rows() == d && slice.cols() == range.len(),
+            "shard {s} slice is {}x{}, expected {}x{}",
+            slice.rows(),
+            slice.cols(),
+            d,
+            range.len()
+        );
+        versions[s] = v;
+        for (j, t) in range.enumerate() {
+            full.set_col(t, slice.col(j));
+        }
+    }
+    Ok((versions, full))
+}
+
+/// One cross-process coordination round, driven by shard 0: quiesce +
+/// gather every slice, apply the true full-matrix prox once, scatter
+/// each shard's columns back (`PushProxSlice`; the own slice installs
+/// directly). See `docs/ARCHITECTURE.md` § "Sharded server".
+fn coordination_round(
+    shard: &ProxShard,
+    map: &ShardMap,
+    clients: &mut [Option<TcpClient>],
+    full_reg: &mut dyn amtl::optim::SharedProx,
+    eta: f64,
+    round: u64,
+) -> Result<()> {
+    let (_versions, mut w) = gather_fleet(shard, map, clients)?;
+    full_reg.prox(&mut w, eta);
+    for s in 0..map.shards() {
+        let range = map.range(s);
+        let mut slice = Mat::zeros(map.d as usize, range.len());
+        for (j, t) in range.clone().enumerate() {
+            slice.set_col(j, w.col(t));
+        }
+        if s == shard.index() {
+            shard.install_round(round, slice)?;
+        } else {
+            shard_client(clients, map, s)?.push_prox_slice(round, &slice)?;
+        }
+    }
+    Ok(())
+}
+
+/// Shard 0's end-of-run fleet epilogue: wait until every shard's commit
+/// count reaches its budget (stall-guarded), gather the slices, apply
+/// the full-matrix prox once, and report the merged objective — the
+/// line a multi-process convergence check (CI's shard-smoke) greps for.
+fn fleet_wait_and_merge(
+    shard: &ProxShard,
+    map: &ShardMap,
+    iters: usize,
+    problem: &MtlProblem,
+) -> Result<()> {
+    let expected: Vec<u64> = (0..map.shards()).map(|s| (map.cols(s) * iters) as u64).collect();
+    let mut clients: Vec<Option<TcpClient>> = (0..map.shards()).map(|_| None).collect();
+    let mut best: Option<(Vec<u64>, Mat)> = None;
+    let started = std::time::Instant::now();
+    let mut last_progress = (0u64, std::time::Instant::now());
+    loop {
+        match gather_fleet(shard, map, &mut clients) {
+            Ok((versions, full)) => {
+                let total: u64 = versions.iter().sum();
+                let done = versions.iter().zip(&expected).all(|(v, e)| v >= e);
+                best = Some((versions, full));
+                if done {
+                    break;
+                }
+                if total > last_progress.0 {
+                    last_progress = (total, std::time::Instant::now());
+                } else if last_progress.1.elapsed() > Duration::from_secs(60) {
+                    amtl::log_warn!("shard", "fleet made no progress for 60s; merging as-is");
+                    break;
+                }
+            }
+            Err(e) => {
+                // Redial everything next attempt; a restarting peer is
+                // indistinguishable from a slow one until the deadline.
+                for c in clients.iter_mut() {
+                    *c = None;
+                }
+                if started.elapsed() > Duration::from_secs(60) {
+                    amtl::log_warn!("shard", "fleet gather failed past the deadline: {e:#}");
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    for c in clients.iter_mut().flatten() {
+        let _ = c.close();
+    }
+    let Some((versions, v_full)) = best else {
+        println!("fleet merge skipped: no peer shard answered FetchSlice");
+        return Ok(());
+    };
+    let mut w = v_full;
+    let mut reg = problem.regularizer();
+    reg.prox(&mut w, problem.eta);
+    println!(
+        "fleet commits per shard: {}",
+        versions.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ")
+    );
+    println!(
+        "merged final objective: {:.6}  (train RMSE {:.4})",
+        problem.objective(&w),
+        problem.train_rmse(&w)
+    );
+    Ok(())
+}
+
+/// `--serve <addr> --shard i/N`: host prox shard `i` of an `N`-way
+/// column partition. The shard answers `FetchShardMap` so routers can
+/// bootstrap, serves/commits only its own task range, and checkpoints
+/// into `<dir>/shard-i/`. For non-separable formulations shard 0 also
+/// drives the periodic coordination round across `--shard-peers`.
+fn cmd_serve_shard(opts: &Opts, addr: &str, spec: &str) -> Result<()> {
+    let (index, count) = parse_shard_spec(spec)?;
+    let peers = match opts.get("shard-peers") {
+        Some(list) => Some(split_addr_list(list)?),
+        None => None,
+    };
+    let coord_interval = Duration::from_millis(opts.get_u64("coord-interval-ms", 500)?.max(10));
+    let linger = Duration::from_millis(opts.get_u64("linger-ms", 3000)?);
+    let mut rng = Rng::new(opts.get_u64("seed", 7)?);
+    let problem = build_problem(opts, &mut rng)?;
+    let ro = run_opts(opts, problem.t())?;
+    opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
+    ensure!(
+        count <= problem.t(),
+        "--shard {spec}: {count} shards over {} tasks leaves empty shards",
+        problem.t()
+    );
+    if let Some(p) = &peers {
+        ensure!(
+            p.len() == count,
+            "--shard-peers lists {} addresses for {count} shards (every shard, index order)",
+            p.len()
+        );
+    }
+
+    let mut map = ShardMap::uniform(problem.d(), problem.t(), count);
+    if let Some(p) = &peers {
+        map = map.with_addrs(p.clone())?;
+    }
+    let map = Arc::new(map);
+    let proto = problem.regularizer();
+    let shard = if ro.resume {
+        let dir = ro
+            .checkpoint_dir
+            .as_ref()
+            .ok_or_else(|| anyhow!("--resume requires --checkpoint-dir"))?;
+        Arc::new(ProxShard::resume(
+            Arc::clone(&map),
+            index,
+            proto.as_ref(),
+            problem.eta,
+            dir,
+            ro.checkpoint_every,
+        )?)
+    } else {
+        if let Some(dir) = &ro.checkpoint_dir {
+            // Every shard writes the (identical) routing file, so any one
+            // shard's parent directory is enough to resume or follow.
+            map.save(dir)?;
+        }
+        let persist = ro.checkpoint_dir.as_deref().map(|d| (d, ro.checkpoint_every));
+        Arc::new(ProxShard::create(Arc::clone(&map), index, proto.as_ref(), problem.eta, persist)?)
+    };
+    // Fleet rows (`amtl top --fleet`) key their SHARD column off these.
+    amtl::obs::global().set_gauge("shard.index", index as u64);
+    amtl::obs::global().set_gauge("shard.count", count as u64);
+
+    let range = shard.range();
+    let owned = range.len();
+    let expected = (owned * ro.iters) as u64;
+    if ro.resume {
+        println!(
+            "shard {index}/{count} resumed from {}: {} updates already applied ({} wal entries replayed)",
+            ro.checkpoint_dir.as_ref().map(|d| d.display().to_string()).unwrap_or_default(),
+            shard.server().state().version(),
+            shard.server().wal_replayed(),
+        );
+    } else if let Some(dir) = &ro.checkpoint_dir {
+        println!(
+            "shard {index}/{count} checkpointing to {} (snapshot every {} commits)",
+            ShardMap::shard_dir(dir, index).display(),
+            ro.checkpoint_every
+        );
+    }
+    let mut handle = TcpServer::spawn_shard(addr, Arc::clone(&shard), None)?;
+    println!(
+        "prox shard {index}/{count} serving on {} — owns tasks {}..{} ({owned} of {})",
+        handle.addr(),
+        range.start,
+        range.end,
+        problem.t(),
+    );
+    println!("dataset: {}", problem.dataset.describe());
+    println!(
+        "problem: reg={} ({}) lambda={} eta={:.3e}; waiting for {owned} nodes x {} activations = {expected} updates",
+        problem.reg_name(),
+        if shard.is_coordinated() { "coordinated" } else { "separable" },
+        problem.lambda,
+        problem.eta,
+        ro.iters,
+    );
+    if shard.is_coordinated() && peers.is_none() {
+        amtl::log_warn!(
+            "shard",
+            "non-separable formulation without --shard-peers: no coordination \
+             rounds will run and fetches serve the raw iterate"
+        );
+    }
+
+    // Shard 0 of a coordinated fleet drives the gather→prox→scatter
+    // round on a wall-clock cadence (commit-stride triggering would need
+    // a cross-process commit counter; the cadence needs none).
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = if shard.is_coordinated() && peers.is_some() && index == 0 && count > 1 {
+        let shard = Arc::clone(&shard);
+        let map = Arc::clone(&map);
+        let stop = Arc::clone(&stop);
+        let mut full_reg = problem.regularizer();
+        let eta = problem.eta;
+        Some(std::thread::spawn(move || {
+            let mut clients: Vec<Option<TcpClient>> = (0..map.shards()).map(|_| None).collect();
+            let mut round = shard.round();
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(coord_interval);
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                match coordination_round(&shard, &map, &mut clients, full_reg.as_mut(), eta, round + 1)
+                {
+                    Ok(()) => round += 1,
+                    Err(e) => {
+                        amtl::log_warn!(
+                            "shard",
+                            "coordination round {} failed (will retry): {e:#}",
+                            round + 1
+                        );
+                        for c in clients.iter_mut() {
+                            *c = None;
+                        }
+                    }
+                }
+            }
+            for c in clients.iter_mut().flatten() {
+                let _ = c.close();
+            }
+        }))
+    } else {
+        None
+    };
+
+    let server = shard.server();
+    let state = server.state();
+    let report_stride = (expected / 10).max(1);
+    let mut last_report = 0u64;
+    let mut last_progress = (0u64, std::time::Instant::now());
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        if let Some(registry) = server.registry() {
+            for lt in registry.sweep() {
+                println!(
+                    "  task {} evicted (silent past the heartbeat timeout); \
+                     not waiting for its remaining budget",
+                    range.start + lt
+                );
+            }
+        }
+        let v = state.version();
+        if v >= last_report + report_stride && v < expected {
+            println!("  {v}/{expected} updates committed on shard {index}");
+            last_report = v;
+        }
+        let node_done = |lt: usize| {
+            state.col_version(lt) >= ro.iters as u64
+                || server
+                    .registry()
+                    .map(|r| {
+                        matches!(
+                            r.status(lt),
+                            amtl::coordinator::NodeStatus::Evicted
+                                | amtl::coordinator::NodeStatus::Left
+                        )
+                    })
+                    .unwrap_or(false)
+        };
+        if (0..owned).all(node_done) {
+            break;
+        }
+        if v > last_progress.0 {
+            last_progress = (v, std::time::Instant::now());
+        } else if last_progress.1.elapsed() > Duration::from_secs(30) {
+            let counts: Vec<String> = (0..owned)
+                .map(|lt| format!("task {}: {}", range.start + lt, state.col_version(lt)))
+                .collect();
+            println!(
+                "  no progress for 30s at {v}/{expected} updates ({}); waiting — Ctrl-C to abort",
+                counts.join(", ")
+            );
+            last_progress = (v, std::time::Instant::now());
+        }
+    }
+    // Same grace window as the whole-model serve loop: let trailing acks
+    // flush (commits are deduplicated, so this is purely about responses).
+    std::thread::sleep(Duration::from_millis(500));
+
+    // Shard 0 waits for the whole fleet and prints the merged objective;
+    // the others linger so its final gather still finds them serving.
+    if index == 0 && count > 1 && peers.is_some() {
+        fleet_wait_and_merge(&shard, &map, ro.iters, &problem)?;
+    }
+    stop.store(true, Ordering::SeqCst);
+    if let Some(h) = driver {
+        let _ = h.join();
+    }
+    server.sync_persist()?;
+    if let Some(cp) = server.checkpointer() {
+        cp.checkpoint_now(server)?;
+    }
+    if index != 0 && peers.is_some() {
+        std::thread::sleep(linger);
+    }
+    handle.shutdown();
+    if let Some(tr) = &ro.trace {
+        tr.flush();
+    }
+
+    println!(
+        "shard {index}/{count} run complete: {} updates, {} proxes, {} coordination rounds",
+        state.version(),
+        server.prox_count(),
+        shard.round(),
+    );
+    if server.checkpoints_written() > 0 || server.wal_replayed() > 0 {
+        println!(
+            "  durability: {} checkpoints written, {} wal entries replayed at startup",
+            server.checkpoints_written(),
+            server.wal_replayed()
+        );
+    }
+    for lt in 0..owned {
+        println!("  task {}: {} updates", range.start + lt, state.col_version(lt));
+    }
+    Ok(())
+}
+
 /// `--node <t> --connect <addr>`: run one task node. The process derives
 /// the shared problem definition, keeps only task `t`'s data, and speaks
 /// the wire protocol to the serving process — the privacy boundary of the
@@ -677,8 +1174,31 @@ fn cmd_node(opts: &Opts) -> Result<()> {
         amtl::runtime::make_task_computes(ro.engine, pool.as_ref(), std::slice::from_ref(task))?;
     let mut compute = computes.pop().expect("one compute for one task");
 
-    let client = TcpClient::connect(addr.as_str(), TcpOptions::default())?;
-    println!("connected to {addr}; server eta = {:.3e}", client.eta());
+    // `--connect` takes one address (whole-model server) or a comma
+    // list of shard addresses; a sharded fleet is auto-detected by
+    // fetching the shard map from the first reachable seed, so a single
+    // `--shard-peers`-configured shard address is also enough.
+    let seeds = split_addr_list(&addr)?;
+    let transport: Box<dyn Transport> = match TcpShardRouter::connect(&seeds, TcpOptions::default())
+    {
+        Ok(router) => {
+            println!(
+                "connected to a {}-shard fleet via {addr}; server eta = {:.3e}",
+                router.map().shards(),
+                router.eta()
+            );
+            Box::new(router)
+        }
+        // A whole-model server refuses FetchShardMap; fall back to the
+        // direct client. Any other failure (unreachable, map/seed
+        // mismatch) is real and propagates.
+        Err(e) if seeds.len() == 1 && format!("{e:#}").contains("not sharded") => {
+            let client = TcpClient::connect(seeds[0].as_str(), TcpOptions::default())?;
+            println!("connected to {addr}; server eta = {:.3e}", client.eta());
+            Box::new(client)
+        }
+        Err(e) => return Err(e),
+    };
 
     let delay = if ro.offset > 0.0 {
         DelayModel::paper_offset(ro.time_scale.mul_f64(ro.offset))
@@ -697,7 +1217,7 @@ fn cmd_node(opts: &Opts) -> Result<()> {
     let ctx = WorkerCtx {
         t,
         iters: ro.iters,
-        transport: Box::new(client),
+        transport,
         controller: Arc::new(StepController::new(
             KmSchedule::fixed(ro.eta_k),
             ro.dynamic,
@@ -808,36 +1328,74 @@ fn cmd_predict(opts: &Opts) -> Result<()> {
     let raw_x = opts.get("x").map(|s| s.to_string());
     opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
 
-    let mut client = PredictClient::connect(addr.as_str(), timeout)?;
+    // A sharded deployment runs one replica per shard (each follows one
+    // `shard-i/` store); `--connect a,b,...` lists them in shard order
+    // and the query routes by task: replica `s` serves the global tasks
+    // `[sum of earlier replicas' task counts ..)` — the same contiguous
+    // partition the shard map used.
+    let addrs = split_addr_list(&addr)?;
+    if addrs.len() > 1 && !want_stats {
+        let raw_x = raw_x.ok_or_else(|| anyhow!("predict needs --x v1,v2,... (or --stats)"))?;
+        let x = parse_x(&raw_x)?;
+        let mut base = 0usize;
+        for a in &addrs {
+            let mut client = PredictClient::connect(a.as_str(), timeout)?;
+            let tasks = client.stats()?.tasks as usize;
+            if task < base + tasks {
+                let (y, model_seq) = client.predict(task - base, &x)?;
+                println!(
+                    "task {task}: yhat = {y:.6}  (model seq {model_seq}, replica {a} local task {})",
+                    task - base
+                );
+                return client.close();
+            }
+            base += tasks;
+            client.close()?;
+        }
+        bail!("task {task} is beyond the fleet's {base} task(s)");
+    }
     if want_stats {
-        let s = client.stats()?;
-        println!("replica stats from {addr}:");
-        println!(
-            "  model: {} tasks x {} features, seq {} (lag {})",
-            s.tasks,
-            s.dim,
-            s.model_seq,
-            s.lag()
-        );
-        println!(
-            "  feed:  {} wal entries applied, {} bootstraps, {} hot-swaps",
-            s.applied_entries, s.bootstraps, s.hot_swaps
-        );
-        println!(
-            "  load:  {} predictions, {} errors, p50 {}us p99 {}us max {}us, up {}ms",
-            s.predictions, s.errors, s.p50_us, s.p99_us, s.max_us, s.uptime_ms
-        );
-        return client.close();
+        for a in &addrs {
+            let mut client = PredictClient::connect(a.as_str(), timeout)?;
+            print_replica_stats(a, &client.stats()?);
+            client.close()?;
+        }
+        return Ok(());
     }
     let raw_x = raw_x.ok_or_else(|| anyhow!("predict needs --x v1,v2,... (or --stats)"))?;
-    let x = raw_x
-        .split(',')
-        .map(|s| s.trim().parse::<f64>())
-        .collect::<std::result::Result<Vec<f64>, _>>()
-        .map_err(|e| anyhow!("--x expects comma-separated numbers: {e}"))?;
+    let x = parse_x(&raw_x)?;
+    let mut client = PredictClient::connect(addrs[0].as_str(), timeout)?;
     let (y, model_seq) = client.predict(task, &x)?;
     println!("task {task}: yhat = {y:.6}  (model seq {model_seq})");
     client.close()
+}
+
+/// Parse the `--x v1,v2,...` feature vector.
+fn parse_x(raw: &str) -> Result<Vec<f64>> {
+    raw.split(',')
+        .map(|s| s.trim().parse::<f64>())
+        .collect::<std::result::Result<Vec<f64>, _>>()
+        .map_err(|e| anyhow!("--x expects comma-separated numbers: {e}"))
+}
+
+/// One replica's `--stats` frame, labeled by its address.
+fn print_replica_stats(addr: &str, s: &amtl::serve::ReplicaStats) {
+    println!("replica stats from {addr}:");
+    println!(
+        "  model: {} tasks x {} features, seq {} (lag {})",
+        s.tasks,
+        s.dim,
+        s.model_seq,
+        s.lag()
+    );
+    println!(
+        "  feed:  {} wal entries applied, {} bootstraps, {} hot-swaps",
+        s.applied_entries, s.bootstraps, s.hot_swaps
+    );
+    println!(
+        "  load:  {} predictions, {} errors, p50 {}us p99 {}us max {}us, up {}ms",
+        s.predictions, s.errors, s.p50_us, s.p99_us, s.max_us, s.uptime_ms
+    );
 }
 
 /// `top --connect <addr>`: poll `FetchMetrics` on a trainer (`--serve`)
@@ -956,8 +1514,8 @@ fn render_fleet(c: &Collector) {
         rows.len(),
     );
     println!(
-        "{:<34} {:>8} {:>9} {:>11} {:>11} {:>9}",
-        "ENDPOINT", "ROLE", "UP(s)", "COMMITS", "STALE p99", "LAG"
+        "{:<34} {:>8} {:>7} {:>9} {:>11} {:>11} {:>9}",
+        "ENDPOINT", "ROLE", "SHARD", "UP(s)", "COMMITS", "STALE p99", "LAG"
     );
     for row in &rows {
         let r = row.report;
@@ -968,10 +1526,17 @@ fn render_fleet(c: &Collector) {
             .map(|h| h.quantile(0.99).to_string())
             .unwrap_or_else(|| "-".into());
         let lag = r.gauge("replica.lag").map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+        // Sharded trainers export their partition slot as gauges
+        // (`amtl --serve --shard i/N` sets both at startup).
+        let shard = match (r.gauge("shard.index"), r.gauge("shard.count")) {
+            (Some(i), Some(n)) if n > 0 => format!("{i}/{n}"),
+            _ => "-".into(),
+        };
         println!(
-            "{:<34} {:>8} {:>9.1} {:>11} {:>11} {:>9}",
+            "{:<34} {:>8} {:>7} {:>9.1} {:>11} {:>11} {:>9}",
             row.label(),
             r.role_name(),
+            shard,
             r.uptime_ms as f64 / 1000.0,
             commits,
             stale,
@@ -1034,15 +1599,25 @@ fn cmd_health(opts: &Opts) -> Result<()> {
     // Rate rules need an interval: two polls by default.
     let samples = opts.get_usize("samples", 2)?.max(1);
     let defaults = HealthRules::default();
+    // `--lag-bound`/`--fsync-p99-us` are the documented names;
+    // `--max-replica-lag`/`--wal-fsync-p99-us` predate them and stay
+    // accepted. Both spellings are queried unconditionally so
+    // reject_unknown never trips on either; the short name wins.
+    let lag_short = opts.get("lag-bound").is_some();
+    let lag_bound = opts.get_u64("lag-bound", defaults.max_replica_lag)?;
+    let lag_legacy = opts.get_u64("max-replica-lag", defaults.max_replica_lag)?;
+    let fsync_short = opts.get("fsync-p99-us").is_some();
+    let fsync_bound = opts.get_u64("fsync-p99-us", defaults.wal_fsync_p99_us)?;
+    let fsync_legacy = opts.get_u64("wal-fsync-p99-us", defaults.wal_fsync_p99_us)?;
     let rules = HealthRules {
         staleness_bound: match opts.get("staleness-bound") {
             Some(_) => Some(opts.get_u64("staleness-bound", 4)?),
             None => None,
         },
-        max_replica_lag: opts.get_u64("max-replica-lag", defaults.max_replica_lag)?,
+        max_replica_lag: if lag_short { lag_bound } else { lag_legacy },
         eviction_storm: opts.get_u64("eviction-storm", defaults.eviction_storm)?,
         min_updates_per_sec: opts.get_f64("min-rate", defaults.min_updates_per_sec)?,
-        wal_fsync_p99_us: opts.get_u64("wal-fsync-p99-us", defaults.wal_fsync_p99_us)?,
+        wal_fsync_p99_us: if fsync_short { fsync_bound } else { fsync_legacy },
     };
     opts.reject_unknown().map_err(|e| anyhow!("{e}"))?;
     let addrs = match (fleet_list, connect) {

@@ -331,7 +331,12 @@ fn shrink_toward(src: &Mat, centroid: &[f64], tau: f64) -> Mat {
 /// Mean-regularized clustering `λ·½ Σ_t ‖w_t − w̄‖²` (every task pulled
 /// toward the shared centroid).
 ///
-/// The prox is column-separable given the centroid — which is what the
+/// Not column-separable in the [`SharedProx::is_separable`] sense: the
+/// centroid is a sum over *all* T columns, so a column-range shard proxing
+/// its slice alone would shrink toward the wrong (slice-local) centroid.
+/// Sharded runs route it through the coordination round.
+///
+/// The prox *is* column-separable given the centroid — which is what the
 /// incremental hooks exploit: with the incremental path enabled the
 /// centroid is maintained as a running sum (O(d) per commit instead of
 /// O(dT) per prox), [`SharedProx::online_prox`] is snapshot-free, and the

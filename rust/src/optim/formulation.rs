@@ -123,6 +123,23 @@ pub trait SharedProx: Send + Sync {
         0.0
     }
 
+    /// True when the prox is **column-separable**: for any column subset
+    /// `S`, `(Prox(W))_S = Prox(W_S)` — proxing a slice of columns in
+    /// isolation yields exactly the corresponding columns of the
+    /// full-matrix prox. This is the capability a sharded server needs to
+    /// split `V` across column-range shards with no cross-shard talk
+    /// (`rust/src/shard/`); `rust/tests/properties.rs` proptests the
+    /// property for every formulation that claims it.
+    ///
+    /// Defaults to `false`. Only the *elementwise* proxes (`l1`,
+    /// `elasticnet`, `none`) return true. Note in particular that `l21`
+    /// (each row norm spans all T columns) and `mean` (the centroid spans
+    /// all T columns) are NOT column-separable, despite sounding local —
+    /// they take the coordination-round path alongside `nuclear`/`graph`.
+    fn is_separable(&self) -> bool {
+        false
+    }
+
     /// Serialize the formulation's complete state (strength, counters,
     /// incremental basis, …) as an opaque blob for a persist snapshot.
     /// Paired with [`restore`], which rebuilds the formulation from

@@ -293,6 +293,10 @@ impl SharedProx for NuclearProx {
 // ------------------------------------------------------- l21 / l1 / en / 0
 
 /// Joint feature selection `g(W) = ‖W‖_{2,1}` (row-wise group shrinkage).
+///
+/// Not column-separable (`is_separable` stays false): each row's group
+/// norm spans all T columns, so the shrink factor of any entry depends on
+/// every column — a column-range shard cannot prox its slice alone.
 #[derive(Clone, Debug)]
 pub struct L21Prox {
     lambda: f64,
@@ -369,6 +373,10 @@ impl SharedProx for L1Prox {
         self.lambda
     }
 
+    fn is_separable(&self) -> bool {
+        true // elementwise soft threshold: column subsets prox independently
+    }
+
     fn prox(&mut self, w: &mut Mat, eta: f64) {
         let tau = eta * self.lambda;
         for x in w.data_mut() {
@@ -423,6 +431,10 @@ impl SharedProx for ElasticNetProx {
 
     fn lambda(&self) -> f64 {
         self.lambda
+    }
+
+    fn is_separable(&self) -> bool {
+        true // elementwise shrink-and-scale: no cross-column coupling
     }
 
     fn prox(&mut self, w: &mut Mat, eta: f64) {
@@ -482,6 +494,10 @@ impl SharedProx for ZeroProx {
 
     fn lambda(&self) -> f64 {
         self.lambda
+    }
+
+    fn is_separable(&self) -> bool {
+        true // the identity prox is trivially column-separable
     }
 
     fn prox(&mut self, _w: &mut Mat, _eta: f64) {}

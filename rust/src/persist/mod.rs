@@ -242,6 +242,15 @@ impl Checkpointer {
         self.gate.read().unwrap()
     }
 
+    /// The quiesce gate's **write** side: blocks until every in-flight
+    /// commit/prox finishes and holds off new ones until dropped. This is
+    /// the same exclusion `checkpoint_now` uses internally; the sharded
+    /// coordination round takes it directly to gather a consistent slice
+    /// of a shard ([`shard`](crate::shard)) without writing a snapshot.
+    pub fn quiesce(&self) -> std::sync::RwLockWriteGuard<'_, ()> {
+        self.gate.write().unwrap()
+    }
+
     /// Append one commit (WAL discipline: callers log *before* applying)
     /// and fsync it, so an acknowledged update is never lost.
     pub(crate) fn log_commit(&self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<()> {

@@ -174,11 +174,15 @@ fn serve_conn(stream: TcpStream, shared: &ReplicaShared, stop: &AtomicBool) {
             // read-only shadow of V and could neither commit nor prox.
             Request::FetchProxCol { .. }
             | Request::PushUpdate { .. }
+            | Request::PushBatch { .. }
             | Request::FetchEta
             | Request::Register { .. }
             | Request::Heartbeat { .. }
             | Request::Leave { .. }
-            | Request::PushMetrics { .. } => Response::Error(
+            | Request::PushMetrics { .. }
+            | Request::FetchShardMap
+            | Request::FetchSlice
+            | Request::PushProxSlice { .. } => Response::Error(
                 "this is a read replica; training traffic goes to the central \
                  server (`amtl --serve`)"
                     .into(),

@@ -1,0 +1,330 @@
+//! The shard map: a static, versioned assignment of contiguous task/column
+//! ranges to prox shards.
+//!
+//! Sharding the central server partitions the shared matrix `V` (d × T)
+//! **by columns**: shard `i` owns the contiguous task range
+//! `starts[i] .. starts[i+1]` and runs the full `CentralServer` machinery
+//! (staging, dedup, prox cache, snapshot + WAL) over its own `d × cols(i)`
+//! slice. The map is the single routing truth shared by every party:
+//!
+//! * task-node routers ([`TcpShardRouter`](crate::shard::TcpShardRouter))
+//!   fetch it over the `FetchShardMap` wire frame and direct each
+//!   `FetchProxCol`/`PushUpdate` to the owning shard;
+//! * shards validate incoming **global** task indices against their own
+//!   range and translate to local columns;
+//! * recovery validates the on-disk map against `--shard i/N` so a
+//!   resumed shard cannot silently rejoin with a different partition.
+//!
+//! The assignment is *static* for the lifetime of a run (`version` exists
+//! so a future rebalancing map can be told apart from a stale one), which
+//! keeps the bitwise-reproducibility story of separable formulations
+//! intact: ownership never moves, so each column's commit order is decided
+//! by exactly one shard.
+
+use crate::transport::wire::{fnv1a32, Cursor, WireError};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Magic prefix of the on-disk `SHARDMAP` file.
+const FILE_MAGIC: [u8; 8] = *b"AMTLSMAP";
+/// Name of the map file inside the parent checkpoint directory.
+pub const SHARDMAP_FILE: &str = "SHARDMAP";
+
+/// Versioned, contiguous-range assignment of task columns to prox shards.
+///
+/// Invariants (checked by [`ShardMap::validate`], enforced by every
+/// constructor and decoder): `starts` has exactly `addrs.len() + 1`
+/// entries, `starts[0] == 0`, and the sequence is non-decreasing. The last
+/// entry is the total task count T. A shard may own an empty range (more
+/// shards than tasks); routers simply never send it algorithmic traffic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    /// Map generation; a router refuses to mix replies from different map
+    /// versions. Static assignment means this is 1 for every run today.
+    pub version: u64,
+    /// Feature dimension d of every column (shards validate it agrees).
+    pub d: u32,
+    /// Range boundaries: shard `i` owns global tasks
+    /// `starts[i] .. starts[i+1]`. Length is shard count + 1.
+    pub starts: Vec<u32>,
+    /// Dial address of each shard's serve loop, index-aligned with the
+    /// ranges. Empty strings for in-proc groups (nothing to dial).
+    pub addrs: Vec<String>,
+}
+
+impl ShardMap {
+    /// The canonical balanced partition: T tasks over `n` shards in
+    /// contiguous ranges, the first `T mod n` shards taking one extra
+    /// column. Addresses start empty (in-proc); fill them in for a
+    /// cross-process fleet via [`ShardMap::with_addrs`].
+    pub fn uniform(d: usize, tasks: usize, n: usize) -> ShardMap {
+        assert!(n > 0, "shard count must be positive");
+        let base = tasks / n;
+        let extra = tasks % n;
+        let mut starts = Vec::with_capacity(n + 1);
+        let mut at = 0u32;
+        starts.push(0);
+        for i in 0..n {
+            at += base as u32 + u32::from(i < extra);
+            starts.push(at);
+        }
+        ShardMap { version: 1, d: d as u32, starts, addrs: vec![String::new(); n] }
+    }
+
+    /// Same map with shard dial addresses filled in (cross-process runs).
+    pub fn with_addrs(mut self, addrs: Vec<String>) -> Result<ShardMap> {
+        if addrs.len() != self.shards() {
+            bail!("{} addresses for {} shards", addrs.len(), self.shards());
+        }
+        self.addrs = addrs;
+        Ok(self)
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Total task count T (the last range boundary).
+    pub fn tasks(&self) -> usize {
+        *self.starts.last().expect("starts is never empty") as usize
+    }
+
+    /// Global task range owned by shard `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.starts[i] as usize..self.starts[i + 1] as usize
+    }
+
+    /// Column count of shard `i`'s slice.
+    pub fn cols(&self, i: usize) -> usize {
+        self.range(i).len()
+    }
+
+    /// Which shard owns global task `t`, if any.
+    pub fn owner(&self, t: usize) -> Option<usize> {
+        if t >= self.tasks() {
+            return None;
+        }
+        // partition_point: first boundary strictly greater than t, minus
+        // one, lands on the owning range even when earlier ranges are
+        // empty (equal boundaries sort before the occupied range).
+        let i = self.starts.partition_point(|&s| s as usize <= t) - 1;
+        debug_assert!(self.range(i).contains(&t));
+        Some(i)
+    }
+
+    /// Translate global task `t` to `(shard, local column)`.
+    pub fn local(&self, t: usize) -> Option<(usize, usize)> {
+        let i = self.owner(t)?;
+        Some((i, t - self.starts[i] as usize))
+    }
+
+    /// Structural invariants; every decode path runs this.
+    pub fn validate(&self) -> Result<(), &'static str> {
+        if self.addrs.is_empty() {
+            return Err("shard map has zero shards");
+        }
+        if self.starts.len() != self.addrs.len() + 1 {
+            return Err("shard map boundary count does not match shard count");
+        }
+        if self.starts[0] != 0 {
+            return Err("shard map ranges must start at task 0");
+        }
+        if self.starts.windows(2).any(|w| w[0] > w[1]) {
+            return Err("shard map ranges must be non-decreasing");
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------ wire codec
+
+    /// Append the wire payload encoding (shared by the `ShardMap` response
+    /// frame and the on-disk `SHARDMAP` file).
+    pub(crate) fn push(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&self.d.to_le_bytes());
+        out.extend_from_slice(&(self.addrs.len() as u32).to_le_bytes());
+        for s in &self.starts {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        for a in &self.addrs {
+            out.extend_from_slice(&(a.len() as u32).to_le_bytes());
+            out.extend_from_slice(a.as_bytes());
+        }
+    }
+
+    /// Parse a wire payload (no count-based preallocation: corrupted
+    /// counts must run out of payload, not memory).
+    pub(crate) fn parse(c: &mut Cursor<'_>) -> Result<ShardMap, WireError> {
+        let version = c.u64()?;
+        let d = c.u32()?;
+        let n = c.u32()?;
+        let mut starts = Vec::new();
+        for _ in 0..=n {
+            starts.push(c.u32()?);
+        }
+        let mut addrs = Vec::new();
+        for _ in 0..n {
+            let len = c.u32()? as usize;
+            let s = String::from_utf8(c.take(len)?.to_vec())
+                .map_err(|_| WireError::Malformed("shard address is not utf-8"))?;
+            addrs.push(s);
+        }
+        let map = ShardMap { version, d, starts, addrs };
+        map.validate().map_err(WireError::Malformed)?;
+        Ok(map)
+    }
+
+    // ------------------------------------------------------ disk format
+
+    /// Write the map as `dir/SHARDMAP` (magic ‖ len ‖ payload ‖ fnv crc —
+    /// the WAL/wire framing discipline). `dir` is the *parent* checkpoint
+    /// directory whose `shard-i/` children hold the per-shard stores;
+    /// `--resume` validates the resumed shard's `--shard i/N` against it.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating shard-map dir {}", dir.display()))?;
+        let mut payload = Vec::new();
+        self.push(&mut payload);
+        let len = (payload.len() as u32).to_le_bytes();
+        let crc = fnv1a32(&[&len, &payload]).to_le_bytes();
+        let mut out = Vec::with_capacity(16 + payload.len());
+        out.extend_from_slice(&FILE_MAGIC);
+        out.extend_from_slice(&len);
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&crc);
+        let path = dir.join(SHARDMAP_FILE);
+        std::fs::write(&path, &out)
+            .with_context(|| format!("writing shard map {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and verify `dir/SHARDMAP`.
+    pub fn load(dir: &Path) -> Result<ShardMap> {
+        let path = dir.join(SHARDMAP_FILE);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading shard map {}", path.display()))?;
+        if bytes.len() < 16 || bytes[..8] != FILE_MAGIC {
+            bail!("{} is not a shard-map file", path.display());
+        }
+        let len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        if bytes.len() != 16 + len {
+            bail!("{}: truncated shard-map file", path.display());
+        }
+        let body = &bytes[12..12 + len];
+        let want = u32::from_le_bytes([
+            bytes[12 + len],
+            bytes[13 + len],
+            bytes[14 + len],
+            bytes[15 + len],
+        ]);
+        let got = fnv1a32(&[&bytes[8..12], body]);
+        if got != want {
+            bail!("{}: shard-map checksum mismatch", path.display());
+        }
+        let mut c = Cursor::new(body);
+        let map = ShardMap::parse(&mut c)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        c.finish().map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Ok(map)
+    }
+
+    /// Subdirectory (under the parent checkpoint dir) holding shard `i`'s
+    /// own snapshot + WAL store.
+    pub fn shard_dir(dir: &Path, i: usize) -> std::path::PathBuf {
+        dir.join(format!("shard-{i}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn uniform_partition_is_balanced_and_total() {
+        for (d, t, n) in [(3, 7, 2), (1, 1, 1), (4, 10, 3), (2, 5, 5), (2, 3, 4), (8, 0, 2)] {
+            let m = ShardMap::uniform(d, t, n);
+            m.validate().unwrap();
+            assert_eq!(m.shards(), n);
+            assert_eq!(m.tasks(), t);
+            let total: usize = (0..n).map(|i| m.cols(i)).sum();
+            assert_eq!(total, t);
+            // Balanced: no shard more than one column bigger than another.
+            let sizes: Vec<usize> = (0..n).map(|i| m.cols(i)).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced partition {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn owner_and_local_cover_every_task() {
+        let m = ShardMap::uniform(4, 10, 3); // ranges 0..4, 4..7, 7..10
+        assert_eq!(m.range(0), 0..4);
+        assert_eq!(m.range(1), 4..7);
+        assert_eq!(m.range(2), 7..10);
+        for t in 0..10 {
+            let i = m.owner(t).unwrap();
+            assert!(m.range(i).contains(&t));
+            let (shard, local) = m.local(t).unwrap();
+            assert_eq!(shard, i);
+            assert_eq!(m.starts[i] as usize + local, t);
+        }
+        assert_eq!(m.owner(10), None);
+        assert_eq!(m.local(11), None);
+    }
+
+    #[test]
+    fn empty_ranges_route_around() {
+        // 4 shards over 3 tasks: the last shard owns nothing.
+        let m = ShardMap::uniform(2, 3, 4);
+        assert_eq!(m.cols(3), 0);
+        for t in 0..3 {
+            assert_eq!(m.owner(t), Some(t)); // one task per occupied shard
+        }
+    }
+
+    #[test]
+    fn prop_owner_agrees_with_linear_scan() {
+        forall(
+            "shard-map owner matches linear range scan",
+            80,
+            |g| {
+                let t = g.usize_in(0, 40);
+                let n = g.usize_in(1, 8);
+                let probe = g.usize_in(0, 45);
+                (t, n, probe)
+            },
+            |&(t, n, probe)| {
+                let m = ShardMap::uniform(3, t, n);
+                let linear = (0..n).find(|&i| m.range(i).contains(&probe));
+                m.owner(probe) == linear
+            },
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_corruption_detection() {
+        let dir =
+            std::env::temp_dir().join(format!("amtl_shardmap_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let m = ShardMap::uniform(5, 9, 2)
+            .with_addrs(vec!["127.0.0.1:7401".into(), "127.0.0.1:7402".into()])
+            .unwrap();
+        m.save(&dir).unwrap();
+        assert_eq!(ShardMap::load(&dir).unwrap(), m);
+        // Flip one payload byte: load must fail on the checksum.
+        let path = dir.join(SHARDMAP_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 5; // inside payload, before crc
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardMap::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn with_addrs_rejects_wrong_count() {
+        assert!(ShardMap::uniform(2, 4, 2).with_addrs(vec!["a".into()]).is_err());
+    }
+}

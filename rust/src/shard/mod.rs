@@ -1,0 +1,41 @@
+//! The sharded central server: column-partitioned prox shards behind a
+//! shard-map router (`docs/ARCHITECTURE.md` § "Sharded server").
+//!
+//! One central server eventually saturates — every `PushUpdate` and
+//! `FetchProxCol` of every task lands on one process. This subsystem
+//! splits the shared model `V ∈ R^{d×T}` **by task column** into `N`
+//! contiguous ranges, each owned by its own prox shard (a full
+//! [`CentralServer`](crate::coordinator::server::CentralServer) over the
+//! slice: same commit staging, dedup, WAL + snapshots, metrics — just
+//! fewer columns). A versioned [`ShardMap`] records the partition and
+//! each shard's address; workers fetch it once (`FetchShardMap`) and
+//! route every fetch/commit **directly** to the owning shard — there is
+//! no head node on the hot path.
+//!
+//! The regularizer decides the coupling story
+//! ([`SharedProx::is_separable`](crate::optim::SharedProx::is_separable)):
+//!
+//! * **Separable** (elementwise proxes — `l1`, `elasticnet`, `none`):
+//!   each shard applies the real regularizer to its own slice and the
+//!   merged model is *bitwise* the single-server result; shards never
+//!   communicate.
+//! * **Non-separable** (`nuclear`, `l21`, `graph`, `mean`): shards run
+//!   an identity prox locally and the group periodically executes a
+//!   coordination round — quiesce every shard (through its checkpoint
+//!   gate), gather slices into the full matrix, apply the true prox
+//!   once, scatter the result back as each shard's serving cache.
+//!
+//! Module layout: [`map`] (the partition + `SHARDMAP` file), [`server`]
+//! ([`ProxShard`], [`ShardGroup`]), [`router`] (worker-side
+//! [`Transport`](crate::transport::Transport) impls), [`run`] (the
+//! `amtl train --shards N` driver).
+
+pub mod map;
+pub mod router;
+pub mod run;
+pub mod server;
+
+pub use map::{ShardMap, SHARDMAP_FILE};
+pub use router::{ShardRouter, TcpShardRouter};
+pub use run::{run_sharded, ShardRunConfig, ShardRunResult};
+pub use server::{ProxShard, ShardGroup, DEFAULT_COORD_EVERY};

@@ -1,0 +1,300 @@
+//! The worker-side shard routers: [`Transport`] impls that consult a
+//! [`ShardMap`] and send each fetch/commit straight to the shard that
+//! owns the task's column — no proxy hop through a head node.
+//!
+//! * [`ShardRouter`] — in-process: routes into an [`Arc<ShardGroup>`];
+//!   what `amtl train --shards N` wires its workers over.
+//! * [`TcpShardRouter`] — multi-process: one lazily-connected
+//!   [`TcpClient`] per shard (each with its own reconnect/backoff
+//!   state), bootstrapped by fetching the shard map from any live
+//!   shard (`FetchShardMap`). [`Transport::push_batch`] groups a batch
+//!   by owning shard and issues one `PushBatch` frame per shard.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::transport::wire::BatchUpdate;
+use crate::transport::{RegisterAck, TcpClient, TcpOptions, Transport};
+
+use super::map::ShardMap;
+use super::server::ShardGroup;
+
+/// In-process router: the worker side of a sharded `amtl train` run.
+/// Cloning-by-construction — every worker gets its own `ShardRouter`
+/// over the same group, mirroring how TCP workers each own a socket.
+pub struct ShardRouter {
+    group: Arc<ShardGroup>,
+}
+
+impl ShardRouter {
+    /// A router over `group`.
+    pub fn new(group: Arc<ShardGroup>) -> ShardRouter {
+        ShardRouter { group }
+    }
+}
+
+impl Transport for ShardRouter {
+    fn eta(&self) -> f64 {
+        self.group.eta()
+    }
+
+    fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>> {
+        self.group.fetch_prox_col(t)
+    }
+
+    fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
+        self.group.commit(t, k, step, u)
+    }
+
+    fn register(&mut self, t: usize) -> Result<RegisterAck> {
+        self.group.register(t)
+    }
+}
+
+/// Multi-process router: connects task nodes to a fleet of `amtl serve
+/// --shard i/N` processes. Connections are made lazily per shard and
+/// re-established by the underlying [`TcpClient`] retry machinery, so
+/// one dead shard only stalls the tasks it owns.
+pub struct TcpShardRouter {
+    map: ShardMap,
+    opts: TcpOptions,
+    clients: Vec<Option<TcpClient>>,
+    eta: f64,
+}
+
+impl TcpShardRouter {
+    /// Bootstrap from seed addresses (the CLI's `--connect a,b,…`):
+    /// fetch the shard map from the first reachable seed, then route
+    /// all traffic by ownership. When the served map carries no
+    /// addresses (shards started without `--shard-peers`), the seeds
+    /// themselves are taken as the per-shard addresses, in index order
+    /// — so `--connect` must then list every shard.
+    pub fn connect(seeds: &[String], opts: TcpOptions) -> Result<TcpShardRouter> {
+        let mut last: Option<anyhow::Error> = None;
+        for seed in seeds {
+            let mut client = match TcpClient::connect(seed.as_str(), opts) {
+                Ok(c) => c,
+                Err(e) => {
+                    last = Some(e);
+                    continue;
+                }
+            };
+            let eta = client.eta();
+            match client.fetch_shard_map() {
+                Ok(map) => {
+                    let map = if map.addrs.iter().all(|a| a.is_empty()) {
+                        if seeds.len() != map.shards() {
+                            bail!(
+                                "shard map has {} shards but {} addresses were given; \
+                                 list every shard in --connect (or start shards with \
+                                 --shard-peers)",
+                                map.shards(),
+                                seeds.len()
+                            );
+                        }
+                        map.with_addrs(seeds.to_vec())?
+                    } else {
+                        map
+                    };
+                    return TcpShardRouter::from_map(map, opts, eta);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("no seed addresses given")))
+    }
+
+    /// A router over an explicit map (each `map.addrs[i]` must name
+    /// shard `i`'s listening address).
+    pub fn from_map(map: ShardMap, opts: TcpOptions, eta: f64) -> Result<TcpShardRouter> {
+        map.validate().map_err(|e| anyhow!("invalid shard map: {e}"))?;
+        if map.addrs.len() != map.shards() {
+            bail!("shard map carries {} addresses for {} shards", map.addrs.len(), map.shards());
+        }
+        let clients = (0..map.shards()).map(|_| None).collect();
+        Ok(TcpShardRouter { map, opts, clients, eta })
+    }
+
+    /// The routing table this router was bootstrapped with.
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    fn owner(&self, t: usize) -> Result<usize> {
+        self.map
+            .owner(t)
+            .ok_or_else(|| anyhow!("task {t} out of range ({} tasks)", self.map.tasks()))
+    }
+
+    fn client_for_shard(&mut self, s: usize) -> Result<&mut TcpClient> {
+        if self.clients[s].is_none() {
+            let addr = &self.map.addrs[s];
+            if addr.is_empty() {
+                bail!("shard {s} has no address in the shard map");
+            }
+            self.clients[s] = Some(TcpClient::connect(addr.as_str(), self.opts)?);
+        }
+        Ok(self.clients[s].as_mut().expect("just connected"))
+    }
+
+    fn client_for(&mut self, t: usize) -> Result<&mut TcpClient> {
+        let s = self.owner(t)?;
+        self.client_for_shard(s)
+    }
+}
+
+impl Transport for TcpShardRouter {
+    fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    fn fetch_prox_col(&mut self, t: usize) -> Result<Vec<f64>> {
+        self.client_for(t)?.fetch_prox_col(t)
+    }
+
+    fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
+        self.client_for(t)?.push_update(t, k, step, u)
+    }
+
+    fn push_batch(&mut self, updates: &[BatchUpdate]) -> Result<Vec<u64>> {
+        // Group by owning shard, one PushBatch frame per shard, then
+        // reassemble the versions in the caller's order.
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.map.shards()];
+        for (i, up) in updates.iter().enumerate() {
+            by_shard[self.owner(up.t as usize)?].push(i);
+        }
+        let mut versions = vec![0u64; updates.len()];
+        for (s, idxs) in by_shard.into_iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let batch: Vec<BatchUpdate> = idxs.iter().map(|&i| updates[i].clone()).collect();
+            let acks = self.client_for_shard(s)?.push_batch(&batch)?;
+            for (&i, v) in idxs.iter().zip(acks) {
+                versions[i] = v;
+            }
+        }
+        Ok(versions)
+    }
+
+    fn register(&mut self, t: usize) -> Result<RegisterAck> {
+        self.client_for(t)?.register(t)
+    }
+
+    fn heartbeat(&mut self, t: usize) -> Result<bool> {
+        self.client_for(t)?.heartbeat(t)
+    }
+
+    fn leave(&mut self, t: usize) -> Result<()> {
+        self.client_for(t)?.leave(t)
+    }
+
+    fn push_metrics(&mut self, t: usize, report: crate::transport::wire::MetricsReport) -> Result<()> {
+        self.client_for(t)?.push_metrics(t, report)
+    }
+
+    fn close(&mut self) -> Result<()> {
+        for client in self.clients.iter_mut().flatten() {
+            let _ = client.close();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::fleet;
+    use crate::optim::prox::L1Prox;
+    use crate::shard::ProxShard;
+    use crate::transport::TcpServer;
+    use std::time::Duration;
+
+    fn quick_opts() -> TcpOptions {
+        TcpOptions {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(500),
+            retries: 1,
+            retry_backoff: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn inproc_router_routes_across_the_shard_boundary() {
+        let group =
+            Arc::new(ShardGroup::new(3, 4, 2, Box::new(L1Prox::new(0.1)), 0.5, 8).unwrap());
+        let mut router = ShardRouter::new(Arc::clone(&group));
+        assert_eq!(router.eta(), 0.5);
+        for t in 0..4 {
+            router.push_update(t, 0, 1.0, &[t as f64; 3]).unwrap();
+        }
+        // Task 3 landed on shard 1's local column 1.
+        assert_eq!(group.shard(1).server().state().read_col(1), vec![3.0; 3]);
+        for t in 0..4 {
+            assert_eq!(router.fetch_prox_col(t).unwrap(), group.fetch_prox_col(t).unwrap());
+        }
+        assert!(router.push_update(4, 0, 1.0, &[0.0; 3]).is_err(), "out of range");
+    }
+
+    #[test]
+    fn tcp_router_bootstraps_from_seeds_and_routes_by_ownership() {
+        // Two shard processes (in spirit): map carries no addresses, so
+        // the router adopts the seed list as the per-shard addresses.
+        let map = Arc::new(ShardMap::uniform(3, 5, 2));
+        let reg = L1Prox::new(0.1);
+        let s0 = Arc::new(ProxShard::create(Arc::clone(&map), 0, &reg, 0.5, None).unwrap());
+        let s1 = Arc::new(ProxShard::create(Arc::clone(&map), 1, &reg, 0.5, None).unwrap());
+        let mut h0 = TcpServer::spawn_shard("127.0.0.1:0", Arc::clone(&s0), None).unwrap();
+        let mut h1 = TcpServer::spawn_shard("127.0.0.1:0", Arc::clone(&s1), None).unwrap();
+        let seeds = vec![h0.addr().to_string(), h1.addr().to_string()];
+
+        let mut router = TcpShardRouter::connect(&seeds, quick_opts()).unwrap();
+        assert_eq!(router.eta(), 0.5);
+        assert_eq!(router.map().addrs, seeds);
+
+        for t in 0..5 {
+            // Versions are per-shard KM counts: shard 0 sees tasks 0,1,2
+            // as its commits 1,2,3; shard 1 sees tasks 3,4 as 1,2.
+            let expect = if t < 3 { t as u64 + 1 } else { t as u64 - 2 };
+            assert_eq!(router.push_update(t, 0, 1.0, &[t as f64; 3]).unwrap(), expect);
+        }
+        // Shard 0 owns tasks 0..3, shard 1 owns 3..5.
+        assert_eq!(s0.server().state().read_col(2), vec![2.0; 3]);
+        assert_eq!(s1.server().state().read_col(0), vec![3.0; 3]);
+        for t in 0..5 {
+            let got = router.fetch_prox_col(t).unwrap();
+            let owner = if t < 3 { &s0 } else { &s1 };
+            assert_eq!(got, owner.fetch_prox_col(t).unwrap());
+        }
+
+        // A batch spanning both shards: one frame per shard, versions
+        // reassembled in caller order.
+        let mk = |t: usize, k: u64| BatchUpdate {
+            t: t as u32,
+            k,
+            span: fleet::span_id(t, k),
+            step: 0.5,
+            u: vec![1.0; 3],
+        };
+        let versions = router.push_batch(&[mk(4, 1), mk(0, 1), mk(3, 1)]).unwrap();
+        assert_eq!(versions.len(), 3);
+        assert_eq!(s0.applied_commits(0).unwrap(), 2, "batch commit landed on shard 0");
+        assert_eq!(s1.applied_commits(3).unwrap(), 2);
+        assert_eq!(s1.applied_commits(4).unwrap(), 2);
+        router.close().unwrap();
+        h0.shutdown();
+        h1.shutdown();
+    }
+
+    #[test]
+    fn connect_requires_enough_seeds_for_an_addressless_map() {
+        let map = Arc::new(ShardMap::uniform(2, 4, 2));
+        let s0 =
+            Arc::new(ProxShard::create(Arc::clone(&map), 0, &L1Prox::new(0.1), 0.5, None).unwrap());
+        let mut h0 = TcpServer::spawn_shard("127.0.0.1:0", Arc::clone(&s0), None).unwrap();
+        let err = TcpShardRouter::connect(&[h0.addr().to_string()], quick_opts()).unwrap_err();
+        assert!(format!("{err:#}").contains("2 shards but 1 addresses"), "{err:#}");
+        h0.shutdown();
+    }
+}

@@ -1,0 +1,209 @@
+//! The in-process sharded training driver behind `amtl train --shards N`:
+//! one free-running worker thread per task, each routed through a
+//! [`ShardRouter`] to a [`ShardGroup`] of column-partitioned prox
+//! shards — Algorithm 1 with the central server split `N` ways.
+//!
+//! Determinism contract: with a fixed KM step, no injected delay and no
+//! faults, a run over a **separable** formulation produces a merged
+//! model bitwise identical to the same run against one whole-model
+//! server, for any shard count — per-column dynamics decouple, and each
+//! worker's RNG stream is forked from the root seed in task order
+//! exactly as the single-server session does. Non-separable
+//! formulations converge to the same objective within tolerance via
+//! coordination rounds (`rust/tests/integration_shard.rs` asserts both).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::step_size::{KmSchedule, StepController};
+use crate::coordinator::worker::{run_worker, WorkerCtx, WorkerStats};
+use crate::coordinator::MtlProblem;
+use crate::linalg::Mat;
+use crate::net::{DelayModel, FaultModel};
+use crate::runtime::NativeTaskCompute;
+use crate::util::Rng;
+
+use super::router::ShardRouter;
+use super::server::ShardGroup;
+
+/// Knobs for one sharded in-process run.
+#[derive(Clone, Debug)]
+pub struct ShardRunConfig {
+    /// Number of prox shards to split the server into.
+    pub shards: usize,
+    /// Activations per task node.
+    pub iters: usize,
+    /// Fixed KM relaxation step η_k.
+    pub km_step: f64,
+    /// Root RNG seed; worker streams are forked from it in task order.
+    pub seed: u64,
+    /// Commit stride between coordination rounds (non-separable only).
+    pub coord_every: u64,
+    /// `Some((dir, snapshot_every))` to checkpoint every shard under
+    /// `dir/shard-<i>/` (and write the `SHARDMAP` routing file).
+    pub persist: Option<(PathBuf, u64)>,
+    /// Recover from `persist`'s directory instead of starting fresh
+    /// (workers skip the activations their shard already applied).
+    pub resume: bool,
+}
+
+impl ShardRunConfig {
+    /// A plain in-memory run: `shards` shards, `iters` activations per
+    /// task, fixed KM step, seeded.
+    pub fn new(shards: usize, iters: usize, km_step: f64, seed: u64) -> ShardRunConfig {
+        ShardRunConfig {
+            shards,
+            iters,
+            km_step,
+            seed,
+            coord_every: super::server::DEFAULT_COORD_EVERY,
+            persist: None,
+            resume: false,
+        }
+    }
+}
+
+/// What a sharded run produced.
+pub struct ShardRunResult {
+    /// Merged final model `W = Prox_{ηλg}(V)` over all shards.
+    pub merged_w: Mat,
+    /// Merged raw iterate `V` (concatenated shard slices).
+    pub merged_v: Mat,
+    /// Full objective `Σ_t ℓ_t(w_t) + λ g(W)` at `merged_w`.
+    pub objective: f64,
+    /// Coordination rounds run (0 for separable formulations).
+    pub rounds: u64,
+    /// Whether the formulation sharded without coordination.
+    pub separable: bool,
+    /// Total updates committed across all workers.
+    pub updates: u64,
+    /// Per-worker stats, task-indexed.
+    pub worker_stats: Vec<WorkerStats>,
+}
+
+/// Run `problem` over `cfg.shards` column-partitioned prox shards with
+/// one free-running worker per task; block until every worker's
+/// activation budget is spent and return the merged model.
+pub fn run_sharded(problem: &MtlProblem, cfg: &ShardRunConfig) -> Result<ShardRunResult> {
+    if cfg.shards == 0 || cfg.shards > problem.t() {
+        bail!(
+            "--shards must be in 1..={} (one shard needs at least one task column), got {}",
+            problem.t(),
+            cfg.shards
+        );
+    }
+    let proto = problem.regularizer();
+    let (d, tasks, eta) = (problem.d(), problem.t(), problem.eta);
+    let group = Arc::new(match (&cfg.persist, cfg.resume) {
+        (None, false) => {
+            ShardGroup::new(d, tasks, cfg.shards, proto, eta, cfg.coord_every)?
+        }
+        (Some((dir, every)), false) => {
+            ShardGroup::durable(d, tasks, cfg.shards, proto, eta, cfg.coord_every, dir, *every)?
+        }
+        (Some((dir, every)), true) => {
+            ShardGroup::resume(d, tasks, cfg.shards, proto, eta, cfg.coord_every, dir, *every)?
+        }
+        (None, true) => bail!("--resume requires a checkpoint directory"),
+    });
+
+    let controller =
+        Arc::new(StepController::new(KmSchedule::fixed(cfg.km_step), false, tasks, 5));
+    // Fork worker streams in task order — the same derivation the
+    // single-server session uses, so seeded runs line up shard-for-shard.
+    let mut root = Rng::new(cfg.seed);
+    let rngs: Vec<Rng> = (0..tasks).map(|t| root.fork(t as u64)).collect();
+
+    let worker_stats: Vec<WorkerStats> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(tasks);
+        for (t, rng) in rngs.into_iter().enumerate() {
+            let group = Arc::clone(&group);
+            let controller = Arc::clone(&controller);
+            let task = &problem.dataset.tasks[t];
+            handles.push(scope.spawn(move || {
+                let mut compute = NativeTaskCompute::new(task);
+                let ctx = WorkerCtx {
+                    t,
+                    iters: cfg.iters,
+                    transport: Box::new(ShardRouter::new(group)),
+                    controller,
+                    delay: DelayModel::None,
+                    faults: FaultModel::None,
+                    sgd_fraction: None,
+                    time_scale: Duration::from_millis(100),
+                    sink: None,
+                    rng,
+                    gate: None,
+                    heartbeat: None,
+                    resume: cfg.resume,
+                    trace: None,
+                    metrics_stride: None,
+                };
+                run_worker(ctx, &mut compute)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+
+    group.sync_persist()?;
+    let merged_w = group.merged_w();
+    let merged_v = group.merged_v();
+    let objective = problem.objective(&merged_w);
+    Ok(ShardRunResult {
+        merged_w,
+        merged_v,
+        objective,
+        rounds: group.rounds(),
+        separable: group.is_separable(),
+        updates: worker_stats.iter().map(|s| s.updates as u64).sum(),
+        worker_stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::optim::prox::RegularizerKind;
+
+    fn problem(reg: RegularizerKind, seed: u64) -> MtlProblem {
+        let mut rng = Rng::new(seed);
+        let ds = synthetic::lowrank_regression(&[25; 4], 6, 2, 0.05, &mut rng);
+        MtlProblem::new(ds, reg, 0.1, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn sharded_l1_run_is_seed_deterministic() {
+        let cfg = ShardRunConfig::new(2, 15, 0.5, 77);
+        let a = run_sharded(&problem(RegularizerKind::L1, 31), &cfg).unwrap();
+        let b = run_sharded(&problem(RegularizerKind::L1, 31), &cfg).unwrap();
+        assert!(a.separable);
+        assert_eq!(a.rounds, 0);
+        assert_eq!(a.updates, 4 * 15);
+        assert_eq!(a.merged_w.data(), b.merged_w.data(), "same seed, same model");
+        assert!(a.objective.is_finite());
+    }
+
+    #[test]
+    fn nuclear_runs_coordinate_and_stay_finite() {
+        let mut cfg = ShardRunConfig::new(2, 20, 0.5, 78);
+        cfg.coord_every = 10;
+        let res = run_sharded(&problem(RegularizerKind::Nuclear, 32), &cfg).unwrap();
+        assert!(!res.separable);
+        assert!(res.rounds >= 1, "coordination rounds must fire");
+        assert!(res.objective.is_finite());
+    }
+
+    #[test]
+    fn shard_count_is_validated() {
+        let p = problem(RegularizerKind::L1, 33);
+        assert!(run_sharded(&p, &ShardRunConfig::new(0, 5, 0.5, 1)).is_err());
+        assert!(run_sharded(&p, &ShardRunConfig::new(9, 5, 0.5, 1)).is_err());
+    }
+}

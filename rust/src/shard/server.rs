@@ -1,0 +1,689 @@
+//! The shard server half: one [`ProxShard`] wraps a [`CentralServer`]
+//! over a contiguous column slice of the shared model `V`, and a
+//! [`ShardGroup`] assembles `N` of them into a whole-model parameter
+//! server — including the coordination round that non-separable
+//! formulations need (quiesce → gather → full-matrix prox → scatter).
+//!
+//! ## Separable vs. coordinated shards
+//!
+//! When the formulation's prox is column-separable
+//! ([`SharedProx::is_separable`] — elementwise proxes: `l1`,
+//! `elasticnet`, `none`), each shard simply runs the *same* regularizer
+//! over its own slice: the slice of the full-matrix prox equals the prox
+//! of the slice, so shards never need to talk to each other and the
+//! merged model is bitwise identical to a single-server run.
+//!
+//! When it is not (`nuclear`, `l21`, `graph`, `mean` — anything whose
+//! prox couples columns), each shard's *inner* regularizer is the
+//! identity (`none` with the formulation's λ, so persisted state remains
+//! honest), and the group periodically runs a **coordination round**:
+//! every shard is quiesced through its checkpoint gate, raw slices are
+//! gathered into the full `d×T` matrix, the true prox is applied once,
+//! and the result is scattered back as each shard's serving cache.
+//! Between rounds, fetches are answered from that cache — the sharded
+//! analogue of the single server's `--prox-every` reuse window.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::server::CentralServer;
+use crate::coordinator::state::SharedState;
+use crate::linalg::Mat;
+use crate::optim::prox::ZeroProx;
+use crate::optim::SharedProx;
+use crate::persist::{self, Checkpointer, PersistConfig};
+
+use super::map::ShardMap;
+
+/// Default commit stride between coordination rounds for non-separable
+/// formulations (mirrors the single server's re-SVD cadence).
+pub const DEFAULT_COORD_EVERY: u64 = 64;
+
+/// The cached result of the last coordination round on a non-separable
+/// shard: this shard's columns of the full-matrix prox.
+struct CoordCache {
+    /// `Some(W_slice)` once the first round has run.
+    w: RwLock<Option<Mat>>,
+    /// Round counter of the installed slice (0 = none yet).
+    round: AtomicU64,
+}
+
+/// One column-partitioned prox shard: a [`CentralServer`] over
+/// `cols(index)` columns of the shared model, addressed by **global**
+/// task index (requests for tasks outside its range are errors, not
+/// silent misroutes).
+pub struct ProxShard {
+    index: usize,
+    start: usize,
+    map: Arc<ShardMap>,
+    server: Arc<CentralServer>,
+    coord: Option<CoordCache>,
+}
+
+impl ProxShard {
+    /// A fresh shard `index` of `map`, applying `proto`'s formulation
+    /// with prox step `eta`. With `persist = Some((dir, every))` the
+    /// shard checkpoints under `dir/shard-<index>/` on that snapshot
+    /// stride.
+    pub fn create(
+        map: Arc<ShardMap>,
+        index: usize,
+        proto: &dyn SharedProx,
+        eta: f64,
+        persist: Option<(&Path, u64)>,
+    ) -> Result<ProxShard> {
+        ProxShard::build(map, index, proto, eta, persist, false)
+    }
+
+    /// Recover shard `index` from its own `dir/shard-<index>/`
+    /// checkpoint directory (snapshot + WAL replay). Fails if the
+    /// on-disk `SHARDMAP` disagrees with `map` — resuming under a
+    /// different shard count would scramble column ownership.
+    pub fn resume(
+        map: Arc<ShardMap>,
+        index: usize,
+        proto: &dyn SharedProx,
+        eta: f64,
+        dir: &Path,
+        every: u64,
+    ) -> Result<ProxShard> {
+        ProxShard::build(map, index, proto, eta, Some((dir, every)), true)
+    }
+
+    fn build(
+        map: Arc<ShardMap>,
+        index: usize,
+        proto: &dyn SharedProx,
+        eta: f64,
+        persist: Option<(&Path, u64)>,
+        resume: bool,
+    ) -> Result<ProxShard> {
+        if index >= map.shards() {
+            bail!("shard index {index} out of range ({} shards)", map.shards());
+        }
+        map.validate().map_err(|e| anyhow::anyhow!("invalid shard map: {e}"))?;
+        let range = map.range(index);
+        let (start, cols) = (range.start, range.len());
+        let d = map.d as usize;
+        let separable = proto.is_separable();
+        let expect_reg: &'static str = if separable { proto.id() } else { "none" };
+
+        let server = if resume {
+            let (dir, every) =
+                persist.expect("resume requires a checkpoint directory");
+            let disk = ShardMap::load(dir).with_context(|| {
+                format!("cannot resume: no readable SHARDMAP under {}", dir.display())
+            })?;
+            if disk.d != map.d || disk.starts != map.starts {
+                bail!(
+                    "--resume shard layout mismatch: on-disk map has {} shards over \
+                     {} tasks (d = {}), this run asked for {} shards over {} tasks \
+                     (d = {}); restart with the original --shards value",
+                    disk.shards(),
+                    disk.tasks(),
+                    disk.d,
+                    map.shards(),
+                    map.tasks(),
+                    map.d
+                );
+            }
+            let sdir = ShardMap::shard_dir(dir, index);
+            if !persist::has_checkpoint(&sdir) {
+                bail!("shard {index}: no checkpoint under {}", sdir.display());
+            }
+            let rec = persist::recover(PersistConfig::new(&sdir, every))
+                .with_context(|| format!("recovering shard {index}"))?;
+            let srv = rec.server;
+            if srv.state().d() != d || srv.state().t() != cols {
+                bail!(
+                    "shard {index}: recovered state is {}×{}, shard map says {}×{}",
+                    srv.state().d(),
+                    srv.state().t(),
+                    d,
+                    cols
+                );
+            }
+            if srv.reg_id() != expect_reg {
+                bail!(
+                    "shard {index}: recovered regularizer `{}` != expected `{}`",
+                    srv.reg_id(),
+                    expect_reg
+                );
+            }
+            srv.with_node_base(start)
+        } else {
+            let inner: Box<dyn SharedProx> = if separable {
+                proto.clone_box()
+            } else {
+                Box::new(ZeroProx::new(proto.lambda()))
+            };
+            let state = Arc::new(SharedState::zeros(d, cols));
+            let mut srv = CentralServer::new(state, inner, eta).with_node_base(start);
+            if let Some((dir, every)) = persist {
+                let sdir = ShardMap::shard_dir(dir, index);
+                let cp = Checkpointer::create(PersistConfig::new(&sdir, every))
+                    .with_context(|| format!("creating shard {index} checkpointer"))?;
+                srv = srv.with_checkpointer(Arc::new(cp))?;
+            }
+            srv
+        };
+
+        let coord = if separable {
+            None
+        } else {
+            Some(CoordCache { w: RwLock::new(None), round: AtomicU64::new(0) })
+        };
+        Ok(ProxShard { index, start, map, server: Arc::new(server), coord })
+    }
+
+    /// This shard's index within the map.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// The shard map this shard was built against.
+    pub fn map(&self) -> &Arc<ShardMap> {
+        &self.map
+    }
+
+    /// The global task range `[start, end)` this shard owns.
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.map.range(self.index)
+    }
+
+    /// The wrapped per-slice central server (persist hooks, metrics,
+    /// registry and wire serving all reach the shard through this).
+    pub fn server(&self) -> &Arc<CentralServer> {
+        &self.server
+    }
+
+    /// Whether this shard answers fetches from a coordination-round
+    /// cache (non-separable formulation) rather than its own prox.
+    pub fn is_coordinated(&self) -> bool {
+        self.coord.is_some()
+    }
+
+    /// Coordination rounds installed on this shard so far.
+    pub fn round(&self) -> u64 {
+        self.coord.as_ref().map(|c| c.round.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
+    /// Translate a global task index into this shard's local column,
+    /// erroring on tasks owned elsewhere (the router should never send
+    /// them here) or out of range.
+    pub fn local(&self, t: usize) -> Result<usize> {
+        match self.map.local(t) {
+            Some((s, lt)) if s == self.index => Ok(lt),
+            Some((s, _)) => bail!(
+                "task {t} is owned by shard {s}, not shard {} — stale shard map?",
+                self.index
+            ),
+            None => bail!("task {t} out of range ({} tasks)", self.map.tasks()),
+        }
+    }
+
+    /// The backward step for global task `t`: the shard's own prox
+    /// column (separable), or the latest coordination-round cache column
+    /// (non-separable; the raw column before the first round).
+    pub fn fetch_prox_col(&self, t: usize) -> Result<Vec<f64>> {
+        let lt = self.local(t)?;
+        // Always drive the inner server's fetch path so staleness and
+        // fetch-version bookkeeping stay live on coordinated shards too.
+        let own = self.server.prox_col(lt);
+        if let Some(c) = &self.coord {
+            if let Some(w) = c.w.read().unwrap().as_ref() {
+                return Ok(w.col(lt).to_vec());
+            }
+        }
+        Ok(own)
+    }
+
+    /// Commit a forward-step result for global task `t` (KM relaxation,
+    /// exactly-once on the node's activation counter `k`). Returns the
+    /// shard's new version (its own KM update count).
+    pub fn commit(&self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
+        let lt = self.local(t)?;
+        self.server.commit_update(lt, k, u, step)
+    }
+
+    /// Commits already applied for global task `t` (resume horizon).
+    pub fn applied_commits(&self, t: usize) -> Result<u64> {
+        Ok(self.server.applied_commits(self.local(t)?))
+    }
+
+    /// Register global task `t` with this shard's membership registry.
+    pub fn register(&self, t: usize) -> Result<crate::transport::RegisterAck> {
+        let lt = self.local(t)?;
+        Ok(self.server.register_node(lt))
+    }
+
+    /// A consistent `(version, V_slice)` snapshot of this shard's raw
+    /// state for a coordination round: commits are held off through the
+    /// checkpoint quiesce gate while the columns are copied (shards
+    /// without durability fall back to the per-column-consistent
+    /// snapshot, which the round's fixed-point semantics tolerate).
+    pub fn raw_slice(&self) -> (u64, Mat) {
+        let _quiesced = self.server.checkpointer().map(|cp| cp.quiesce());
+        (self.server.state().version(), self.server.state().snapshot())
+    }
+
+    /// Install the result of coordination round `round`: this shard's
+    /// columns of the full-matrix prox. Errors on separable shards (no
+    /// cache to fill) and on shape mismatches.
+    pub fn install_round(&self, round: u64, w: Mat) -> Result<()> {
+        let c = self
+            .coord
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("shard {} is separable: no coordination cache", self.index))?;
+        let cols = self.map.cols(self.index);
+        if w.rows() != self.map.d as usize || w.cols() != cols {
+            bail!(
+                "round slice is {}×{}, shard {} expects {}×{}",
+                w.rows(),
+                w.cols(),
+                self.index,
+                self.map.d,
+                cols
+            );
+        }
+        *c.w.write().unwrap() = Some(w);
+        c.round.fetch_max(round, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// This shard's final model slice after training: its own prox
+    /// (separable) or its coordination cache (falling back to the raw
+    /// slice before any round has run).
+    pub fn final_slice(&self) -> Mat {
+        if let Some(c) = &self.coord {
+            if let Some(w) = c.w.read().unwrap().as_ref() {
+                return w.clone();
+            }
+            return self.server.state().snapshot();
+        }
+        self.server.final_w()
+    }
+
+    /// Global task index of this shard's column 0.
+    pub fn base(&self) -> usize {
+        self.start
+    }
+}
+
+/// An in-process group of [`ProxShard`]s acting as one whole-model
+/// parameter server: routes by global task index, counts commits, and
+/// runs the coordination round on its stride for non-separable
+/// formulations. This is what `amtl train --shards N` drives, and the
+/// reference semantics for the multi-process deployment (where each
+/// shard is its own `amtl serve --shard i/N` and shard 0 drives the
+/// rounds over the wire).
+pub struct ShardGroup {
+    map: Arc<ShardMap>,
+    shards: Vec<Arc<ProxShard>>,
+    eta: f64,
+    separable: bool,
+    full_reg: Mutex<Box<dyn SharedProx>>,
+    coord_every: u64,
+    commits: AtomicU64,
+    rounds_run: AtomicU64,
+    round_gate: Mutex<()>,
+}
+
+impl ShardGroup {
+    /// An in-memory group: `n` shards uniformly partitioning `tasks`
+    /// columns of a `d`-row model, applying `proto` with prox step
+    /// `eta`. `coord_every` is the commit stride between coordination
+    /// rounds (ignored for separable formulations).
+    pub fn new(
+        d: usize,
+        tasks: usize,
+        n: usize,
+        proto: Box<dyn SharedProx>,
+        eta: f64,
+        coord_every: u64,
+    ) -> Result<ShardGroup> {
+        ShardGroup::build(Arc::new(ShardMap::uniform(d, tasks, n)), proto, eta, coord_every, None, false)
+    }
+
+    /// Like [`ShardGroup::new`] but durable: writes `SHARDMAP` under
+    /// `dir` and gives every shard its own `dir/shard-<i>/`
+    /// checkpoint directory with snapshot stride `every`.
+    pub fn durable(
+        d: usize,
+        tasks: usize,
+        n: usize,
+        proto: Box<dyn SharedProx>,
+        eta: f64,
+        coord_every: u64,
+        dir: &Path,
+        every: u64,
+    ) -> Result<ShardGroup> {
+        let map = Arc::new(ShardMap::uniform(d, tasks, n));
+        std::fs::create_dir_all(dir)?;
+        map.save(dir)?;
+        ShardGroup::build(map, proto, eta, coord_every, Some((dir, every)), false)
+    }
+
+    /// Recover a durable group from `dir`: every shard replays its own
+    /// snapshot + WAL. The shard count is validated against the on-disk
+    /// `SHARDMAP`.
+    pub fn resume(
+        d: usize,
+        tasks: usize,
+        n: usize,
+        proto: Box<dyn SharedProx>,
+        eta: f64,
+        coord_every: u64,
+        dir: &Path,
+        every: u64,
+    ) -> Result<ShardGroup> {
+        let map = Arc::new(ShardMap::uniform(d, tasks, n));
+        ShardGroup::build(map, proto, eta, coord_every, Some((dir, every)), true)
+    }
+
+    fn build(
+        map: Arc<ShardMap>,
+        proto: Box<dyn SharedProx>,
+        eta: f64,
+        coord_every: u64,
+        persist: Option<(&Path, u64)>,
+        resume: bool,
+    ) -> Result<ShardGroup> {
+        let separable = proto.is_separable();
+        let mut shards = Vec::with_capacity(map.shards());
+        for i in 0..map.shards() {
+            let shard = if resume {
+                let (dir, every) = persist.expect("resume requires a directory");
+                ProxShard::resume(Arc::clone(&map), i, proto.as_ref(), eta, dir, every)?
+            } else {
+                ProxShard::create(Arc::clone(&map), i, proto.as_ref(), eta, persist)?
+            };
+            shards.push(Arc::new(shard));
+        }
+        let group = ShardGroup {
+            map,
+            shards,
+            eta,
+            separable,
+            full_reg: Mutex::new(proto),
+            coord_every: coord_every.max(1),
+            commits: AtomicU64::new(0),
+            rounds_run: AtomicU64::new(0),
+            round_gate: Mutex::new(()),
+        };
+        if !group.separable {
+            // Round 0: seed every coordination cache so the first fetch
+            // already sees a true full-matrix prox (on resume this is
+            // what rebuilds the serving view from the recovered slices).
+            group.run_round()?;
+        }
+        Ok(group)
+    }
+
+    /// The group's shard map.
+    pub fn map(&self) -> &Arc<ShardMap> {
+        &self.map
+    }
+
+    /// The shards, index-aligned with the map.
+    pub fn shards(&self) -> &[Arc<ProxShard>] {
+        &self.shards
+    }
+
+    /// Shard `i`.
+    pub fn shard(&self, i: usize) -> &Arc<ProxShard> {
+        &self.shards[i]
+    }
+
+    /// The run's forward step size η.
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    /// Whether the formulation shards without coordination rounds.
+    pub fn is_separable(&self) -> bool {
+        self.separable
+    }
+
+    /// Total commits routed through the group.
+    pub fn total_commits(&self) -> u64 {
+        self.commits.load(Ordering::Acquire)
+    }
+
+    /// Coordination rounds run so far (0 for separable formulations).
+    pub fn rounds(&self) -> u64 {
+        self.rounds_run.load(Ordering::Acquire)
+    }
+
+    fn owner(&self, t: usize) -> Result<usize> {
+        self.map
+            .owner(t)
+            .ok_or_else(|| anyhow::anyhow!("task {t} out of range ({} tasks)", self.map.tasks()))
+    }
+
+    /// Route a backward-step fetch to the owning shard.
+    pub fn fetch_prox_col(&self, t: usize) -> Result<Vec<f64>> {
+        self.shards[self.owner(t)?].fetch_prox_col(t)
+    }
+
+    /// Route a KM commit to the owning shard; crossing the coordination
+    /// stride triggers a round for non-separable formulations.
+    pub fn commit(&self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64> {
+        let version = self.shards[self.owner(t)?].commit(t, k, step, u)?;
+        let n = self.commits.fetch_add(1, Ordering::AcqRel) + 1;
+        if !self.separable && n % self.coord_every == 0 {
+            self.run_round()?;
+        }
+        Ok(version)
+    }
+
+    /// Route a registration to the owning shard.
+    pub fn register(&self, t: usize) -> Result<crate::transport::RegisterAck> {
+        self.shards[self.owner(t)?].register(t)
+    }
+
+    /// Commits already applied for task `t` (resume horizon).
+    pub fn applied_commits(&self, t: usize) -> Result<u64> {
+        self.shards[self.owner(t)?].applied_commits(t)
+    }
+
+    /// Run one coordination round now: quiesce and gather every shard's
+    /// raw slice, apply the true full-matrix prox once, scatter the
+    /// result back as each shard's serving cache. Serialized — a round
+    /// triggered while another is in flight waits its turn.
+    pub fn run_round(&self) -> Result<()> {
+        let _serialized = self.round_gate.lock().unwrap();
+        let full = self.gather();
+        let mut w = full;
+        {
+            let mut reg = self.full_reg.lock().unwrap();
+            reg.prox(&mut w, self.eta);
+        }
+        let round = self.rounds_run.load(Ordering::Acquire) + 1;
+        for (i, shard) in self.shards.iter().enumerate() {
+            let range = self.map.range(i);
+            let mut slice = Mat::zeros(w.rows(), range.len());
+            for (local, global) in range.enumerate() {
+                slice.set_col(local, w.col(global));
+            }
+            shard.install_round(round, slice)?;
+        }
+        self.rounds_run.store(round, Ordering::Release);
+        Ok(())
+    }
+
+    fn gather(&self) -> Mat {
+        let d = self.map.d as usize;
+        let mut full = Mat::zeros(d, self.map.tasks());
+        for (i, shard) in self.shards.iter().enumerate() {
+            let (_version, slice) = shard.raw_slice();
+            for (local, global) in self.map.range(i).enumerate() {
+                full.set_col(global, slice.col(local));
+            }
+        }
+        full
+    }
+
+    /// The merged raw iterate `V` (concatenated shard slices).
+    pub fn merged_v(&self) -> Mat {
+        self.gather()
+    }
+
+    /// The merged final model `W = Prox_{ηλg}(V)`: concatenated per-shard
+    /// proxes when separable (bitwise the slice of the full prox), one
+    /// exact full-matrix prox over the gathered `V` otherwise.
+    pub fn merged_w(&self) -> Mat {
+        if self.separable {
+            let d = self.map.d as usize;
+            let mut w = Mat::zeros(d, self.map.tasks());
+            for (i, shard) in self.shards.iter().enumerate() {
+                let slice = shard.final_slice();
+                for (local, global) in self.map.range(i).enumerate() {
+                    w.set_col(global, slice.col(local));
+                }
+            }
+            w
+        } else {
+            let mut w = self.gather();
+            let mut reg = self.full_reg.lock().unwrap();
+            reg.prox(&mut w, self.eta);
+            w
+        }
+    }
+
+    /// fsync every shard's in-flight WAL writes (no-op without
+    /// durability).
+    pub fn sync_persist(&self) -> Result<()> {
+        for shard in &self.shards {
+            shard.server().sync_persist()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::coupling::MeanProx;
+    use crate::optim::prox::L1Prox;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("amtl_shardsrv_{}_{}", tag, std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    /// Deterministic pseudo-update for task t, activation k.
+    fn update(d: usize, t: usize, k: u64) -> Vec<f64> {
+        (0..d).map(|r| ((t + 1) * (r + 2)) as f64 * 0.1 + k as f64 * 0.01).collect()
+    }
+
+    #[test]
+    fn separable_group_matches_single_server_bitwise() {
+        let (d, tasks, lambda, eta) = (4, 5, 0.3, 0.5);
+        let group =
+            ShardGroup::new(d, tasks, 2, Box::new(L1Prox::new(lambda)), eta, 8).unwrap();
+        let single = CentralServer::new(
+            Arc::new(SharedState::zeros(d, tasks)),
+            Box::new(L1Prox::new(lambda)),
+            eta,
+        );
+        for k in 0..6u64 {
+            for t in 0..tasks {
+                let u = update(d, t, k);
+                group.commit(t, k, 0.7, &u).unwrap();
+                single.commit_update(t, k, &u, 0.7).unwrap();
+                assert_eq!(group.fetch_prox_col(t).unwrap(), single.prox_col(t));
+            }
+        }
+        let merged = group.merged_w();
+        let reference = single.final_w();
+        assert_eq!(merged.data(), reference.data(), "separable shard merge must be bitwise");
+        assert_eq!(group.rounds(), 0, "separable formulations never coordinate");
+        assert_eq!(group.total_commits(), 6 * tasks as u64);
+    }
+
+    #[test]
+    fn coordinated_group_runs_rounds_and_tracks_full_prox() {
+        let (d, tasks, eta) = (3, 4, 0.5);
+        let group =
+            ShardGroup::new(d, tasks, 2, Box::new(MeanProx::new(0.4)), eta, 4).unwrap();
+        assert!(!group.is_separable());
+        assert_eq!(group.rounds(), 1, "construction seeds round 0");
+        for k in 0..4u64 {
+            for t in 0..tasks {
+                group.commit(t, k, 0.9, &update(d, t, k)).unwrap();
+            }
+        }
+        // 16 commits at stride 4 → 4 in-run rounds on top of the seed.
+        assert_eq!(group.rounds(), 5);
+        // The serving cache equals the exact full prox of the gathered V.
+        let mut expect = group.merged_v();
+        MeanProx::new(0.4).prox(&mut expect, eta);
+        for t in 0..tasks {
+            assert_eq!(group.fetch_prox_col(t).unwrap(), expect.col(t).to_vec());
+        }
+        assert_eq!(group.merged_w().data(), expect.data());
+    }
+
+    #[test]
+    fn durable_group_resumes_bitwise() {
+        let dir = tmp("resume");
+        let (d, tasks, eta) = (3, 5, 0.5);
+        let reg = || Box::new(L1Prox::new(0.2));
+        {
+            let group = ShardGroup::durable(d, tasks, 2, reg(), eta, 8, &dir, 64).unwrap();
+            for k in 0..5u64 {
+                for t in 0..tasks {
+                    group.commit(t, k, 0.8, &update(d, t, k)).unwrap();
+                }
+            }
+            group.sync_persist().unwrap();
+            // Dropped without checkpoint_now: recovery must replay WALs.
+        }
+        let recovered = ShardGroup::resume(d, tasks, 2, reg(), eta, 8, &dir, 64).unwrap();
+        let live = ShardGroup::new(d, tasks, 2, reg(), eta, 8).unwrap();
+        for k in 0..5u64 {
+            for t in 0..tasks {
+                live.commit(t, k, 0.8, &update(d, t, k)).unwrap();
+            }
+        }
+        assert_eq!(recovered.merged_v().data(), live.merged_v().data());
+        assert_eq!(recovered.merged_w().data(), live.merged_w().data());
+        for t in 0..tasks {
+            assert_eq!(recovered.applied_commits(t).unwrap(), 5);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_changed_shard_count() {
+        let dir = tmp("layout");
+        {
+            let group =
+                ShardGroup::durable(3, 4, 2, Box::new(L1Prox::new(0.2)), 0.5, 8, &dir, 64)
+                    .unwrap();
+            group.commit(0, 0, 0.8, &[1.0, 2.0, 3.0]).unwrap();
+            group.sync_persist().unwrap();
+        }
+        let err = ShardGroup::resume(3, 4, 3, Box::new(L1Prox::new(0.2)), 0.5, 8, &dir, 64)
+            .unwrap_err();
+        assert!(err.to_string().contains("layout mismatch"), "got: {err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_rejects_foreign_and_out_of_range_tasks() {
+        let map = Arc::new(ShardMap::uniform(3, 4, 2));
+        let shard =
+            ProxShard::create(Arc::clone(&map), 0, &L1Prox::new(0.1), 0.5, None).unwrap();
+        assert!(shard.fetch_prox_col(0).is_ok());
+        assert!(shard.fetch_prox_col(2).is_err(), "task 2 belongs to shard 1");
+        assert!(shard.fetch_prox_col(9).is_err(), "task 9 out of range");
+        assert!(shard.commit(3, 0, 0.5, &[0.0; 3]).is_err());
+    }
+}

@@ -42,6 +42,7 @@ pub mod wire;
 
 pub use inproc::InProc;
 pub use tcp::{TcpClient, TcpOptions, TcpServer, TcpServerHandle};
+pub use wire::BatchUpdate;
 
 use anyhow::Result;
 use crate::util::EnumTable;
@@ -116,6 +117,20 @@ pub trait Transport: Send {
     /// deduplicates on `(t, k)`, so the *commit* is exactly-once even
     /// across a server restart.
     fn push_update(&mut self, t: usize, k: u64, step: f64, u: &[f64]) -> Result<u64>;
+
+    /// Commit several updates in one exchange. Semantically identical to
+    /// calling [`Transport::push_update`] once per element (the default
+    /// does exactly that); batching transports — the shard router, the
+    /// TCP client's `PushBatch` frame — coalesce same-destination commits
+    /// to cut per-frame overhead. Returns the new global version after
+    /// each commit, index-aligned with `updates`.
+    fn push_batch(&mut self, updates: &[wire::BatchUpdate]) -> Result<Vec<u64>> {
+        let mut versions = Vec::with_capacity(updates.len());
+        for up in updates {
+            versions.push(self.push_update(up.t as usize, up.k, up.step, &up.u)?);
+        }
+        Ok(versions)
+    }
 
     /// Join (or rejoin) the run as task node `t`. Without a membership
     /// registry this still reports the column's applied-commit horizon,

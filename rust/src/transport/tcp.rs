@@ -26,12 +26,14 @@
 //! heartbeat. `Shutdown` fsyncs in-flight WAL writes before it is
 //! acknowledged.
 
-use super::wire::{MetricsReport, Request, Response, WireError};
+use super::wire::{BatchUpdate, MetricsReport, Request, Response, WireError};
 use super::{RegisterAck, Transport};
 use crate::coordinator::metrics::Recorder;
 use crate::coordinator::server::CentralServer;
+use crate::linalg::Mat;
 use crate::obs;
 use crate::obs::fleet;
+use crate::shard::{ProxShard, ShardMap};
 use anyhow::{anyhow, bail, Result};
 use std::io::{ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -101,6 +103,31 @@ impl TcpServer {
         server: Arc<CentralServer>,
         recorder: Option<Arc<Recorder>>,
     ) -> Result<TcpServerHandle> {
+        TcpServer::spawn_impl(addr, server, None, recorder)
+    }
+
+    /// Serve one prox shard: like [`TcpServer::spawn`], but requests
+    /// address **global** task indices which are translated through the
+    /// shard's [`ShardMap`] (tasks owned elsewhere get an `Error`
+    /// response naming the owner, so a misrouted client can tell a
+    /// stale map from a bad index). Also answers the shard-plane frames:
+    /// `FetchShardMap`, `PushBatch`, and the coordination-round
+    /// `FetchSlice`/`PushProxSlice` pair.
+    pub fn spawn_shard(
+        addr: &str,
+        shard: Arc<ProxShard>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Result<TcpServerHandle> {
+        let server = Arc::clone(shard.server());
+        TcpServer::spawn_impl(addr, server, Some(shard), recorder)
+    }
+
+    fn spawn_impl(
+        addr: &str,
+        server: Arc<CentralServer>,
+        shard: Option<Arc<ProxShard>>,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Result<TcpServerHandle> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| anyhow!("cannot bind tcp server on {addr}: {e}"))?;
         let local = listener.local_addr()?;
@@ -120,12 +147,19 @@ impl TcpServer {
                     match listener.accept() {
                         Ok((stream, _peer)) => {
                             let server = Arc::clone(&server);
+                            let shard = shard.clone();
                             let recorder = recorder.clone();
                             let stop = Arc::clone(&stop);
                             let spawned = std::thread::Builder::new()
                                 .name("amtl-tcp-conn".into())
                                 .spawn(move || {
-                                    serve_conn(stream, &server, recorder.as_deref(), &stop)
+                                    serve_conn(
+                                        stream,
+                                        &server,
+                                        shard.as_deref(),
+                                        recorder.as_deref(),
+                                        &stop,
+                                    )
                                 });
                             if let Ok(h) = spawned {
                                 // Reap finished connection threads so a
@@ -210,10 +244,61 @@ fn touch(server: &CentralServer, t: usize) {
     }
 }
 
+/// Translate a request's task index into the column the wrapped server
+/// owns: the identity (bounds-checked) for a whole-model server, the
+/// shard-map lookup for a shard — tasks owned by a different shard or
+/// out of range come back as the error message to send.
+fn resolve_t(shard: Option<&ProxShard>, server: &CentralServer, t: usize) -> Result<usize, String> {
+    match shard {
+        Some(sh) => sh.local(t).map_err(|e| format!("{e:#}")),
+        None if t < server.state().t() => Ok(t),
+        None => Err(format!("task index {t} out of range (T={})", server.state().t())),
+    }
+}
+
+/// Validate and apply one commit (shared by `PushUpdate` and
+/// `PushBatch`): bounds/ownership, dimension, finiteness, then the
+/// exactly-once KM commit on the local column.
+fn apply_commit(
+    server: &CentralServer,
+    shard: Option<&ProxShard>,
+    recorder: Option<&Recorder>,
+    t: usize,
+    k: u64,
+    step: f64,
+    u: &[f64],
+) -> Result<u64, String> {
+    let d = server.state().d();
+    if u.len() != d {
+        return Err(format!("update has dimension {}, expected {d}", u.len()));
+    }
+    if !step.is_finite() {
+        return Err(format!("non-finite km step {step}"));
+    }
+    if !u.iter().all(|x| x.is_finite()) {
+        return Err("update vector contains non-finite values".into());
+    }
+    let lt = resolve_t(shard, server, t)?;
+    touch(server, lt);
+    match server.commit_update(lt, k, u, step) {
+        Ok(version) => {
+            if let Some(rec) = recorder {
+                rec.maybe_record(version, || server.state().snapshot());
+            }
+            Ok(version)
+        }
+        // Durability failure (e.g. WAL disk error): the update was NOT
+        // applied; tell the node so it retries rather than silently
+        // losing work.
+        Err(e) => Err(format!("commit not durable: {e:#}")),
+    }
+}
+
 /// One connection's request loop: validate → execute → respond.
 fn serve_conn(
     stream: TcpStream,
     server: &CentralServer,
+    shard: Option<&ProxShard>,
     recorder: Option<&Recorder>,
     stop: &AtomicBool,
 ) {
@@ -239,96 +324,125 @@ fn serve_conn(
         };
         let resp = match req {
             Request::FetchEta => Response::Eta(server.eta()),
-            Request::FetchProxCol { t } => {
-                let t = t as usize;
-                if t < server.state().t() {
-                    touch(server, t);
-                    Response::ProxCol(server.prox_col(t))
-                } else {
-                    Response::Error(format!(
-                        "task index {t} out of range (T={})",
-                        server.state().t()
-                    ))
+            Request::FetchProxCol { t } => match resolve_t(shard, server, t as usize) {
+                Ok(lt) => {
+                    touch(server, lt);
+                    match shard {
+                        // Through the shard so coordinated formulations
+                        // answer from the round cache, not the raw slice.
+                        Some(sh) => match sh.fetch_prox_col(t as usize) {
+                            Ok(col) => Response::ProxCol(col),
+                            Err(e) => Response::Error(format!("{e:#}")),
+                        },
+                        None => Response::ProxCol(server.prox_col(lt)),
+                    }
                 }
-            }
+                Err(msg) => Response::Error(msg),
+            },
             Request::PushUpdate { t, k, span, step, u } => {
-                let t = t as usize;
-                let (d, t_count) = (server.state().d(), server.state().t());
-                if t >= t_count {
-                    Response::Error(format!("task index {t} out of range (T={t_count})"))
-                } else if u.len() != d {
-                    Response::Error(format!("update has dimension {}, expected {d}", u.len()))
-                } else if !step.is_finite() {
-                    Response::Error(format!("non-finite km step {step}"))
-                } else if !u.iter().all(|x| x.is_finite()) {
-                    Response::Error("update vector contains non-finite values".into())
-                } else {
-                    // The span id is derived, not authoritative: a client
-                    // whose id disagrees with `(t, k)` is logged (it would
-                    // fragment the cross-process trace) but still applied —
-                    // tracing must never reject a valid commit.
-                    if span != fleet::span_id(t, k) {
-                        crate::log_debug!(
-                            "wire",
-                            "push span {span:#018x} != span_id({t}, {k}); tracing by (t, k)"
-                        );
-                    }
-                    touch(server, t);
-                    match server.commit_update(t, k, &u, step) {
-                        Ok(version) => {
-                            if let Some(rec) = recorder {
-                                rec.maybe_record(version, || server.state().snapshot());
-                            }
-                            Response::Pushed { version }
-                        }
-                        // Durability failure (e.g. WAL disk error): the
-                        // update was NOT applied; tell the node so it
-                        // retries rather than silently losing work.
-                        Err(e) => Response::Error(format!("commit not durable: {e:#}")),
-                    }
+                // The span id is derived, not authoritative: a client
+                // whose id disagrees with `(t, k)` is logged (it would
+                // fragment the cross-process trace) but still applied —
+                // tracing must never reject a valid commit.
+                if span != fleet::span_id(t as usize, k) {
+                    crate::log_debug!(
+                        "wire",
+                        "push span {span:#018x} != span_id({t}, {k}); tracing by (t, k)"
+                    );
+                }
+                match apply_commit(server, shard, recorder, t as usize, k, step, &u) {
+                    Ok(version) => Response::Pushed { version },
+                    Err(msg) => Response::Error(msg),
                 }
             }
-            Request::Register { t } => {
-                let t = t as usize;
-                if t < server.state().t() {
-                    let ack = server.register_node(t);
+            // Commit several same-destination updates in one exchange.
+            // A failure mid-batch aborts the remainder; the partial
+            // prefix stays applied, which is safe because the client
+            // resends the whole batch and dedup makes each commit
+            // exactly-once.
+            Request::PushBatch { updates } => {
+                let mut versions = Vec::with_capacity(updates.len());
+                let mut failed: Option<String> = None;
+                for up in &updates {
+                    match apply_commit(server, shard, recorder, up.t as usize, up.k, up.step, &up.u)
+                    {
+                        Ok(version) => versions.push(version),
+                        Err(msg) => {
+                            failed = Some(msg);
+                            break;
+                        }
+                    }
+                }
+                match failed {
+                    Some(msg) => Response::Error(format!(
+                        "batch aborted after {} of {} commits: {msg}",
+                        versions.len(),
+                        updates.len()
+                    )),
+                    None => Response::PushedBatch { versions },
+                }
+            }
+            Request::Register { t } => match resolve_t(shard, server, t as usize) {
+                Ok(lt) => {
+                    let ack = server.register_node(lt);
                     Response::Registered {
                         col_version: ack.col_version,
                         generation: ack.generation,
                     }
-                } else {
-                    Response::Error(format!(
-                        "task index {t} out of range (T={})",
-                        server.state().t()
-                    ))
                 }
-            }
-            Request::Heartbeat { t } => {
-                let t = t as usize;
-                if t < server.state().t() {
-                    let live = server.registry().map(|r| r.heartbeat(t)).unwrap_or(true);
+                Err(msg) => Response::Error(msg),
+            },
+            Request::Heartbeat { t } => match resolve_t(shard, server, t as usize) {
+                Ok(lt) => {
+                    let live = server.registry().map(|r| r.heartbeat(lt)).unwrap_or(true);
                     Response::HeartbeatAck { live }
-                } else {
-                    Response::Error(format!(
-                        "task index {t} out of range (T={})",
-                        server.state().t()
-                    ))
                 }
-            }
-            Request::Leave { t } => {
-                let t = t as usize;
-                if t < server.state().t() {
+                Err(msg) => Response::Error(msg),
+            },
+            Request::Leave { t } => match resolve_t(shard, server, t as usize) {
+                Ok(lt) => {
                     if let Some(r) = server.registry() {
-                        r.leave(t);
+                        r.leave(lt);
                     }
                     Response::LeaveAck
-                } else {
-                    Response::Error(format!(
-                        "task index {t} out of range (T={})",
-                        server.state().t()
-                    ))
                 }
+                Err(msg) => Response::Error(msg),
+            },
+            // The routing table: how `amtl --node` finds the shard that
+            // owns its column. Whole-model servers answer with an error
+            // (clients fall back to direct addressing).
+            Request::FetchShardMap => match shard {
+                Some(sh) => Response::ShardMap(sh.map().as_ref().clone()),
+                None => Response::Error(
+                    "this server is not sharded; connect to it directly".into(),
+                ),
+            },
+            // Coordination plane: a consistent raw slice out, a round's
+            // full-prox slice back in. A whole-model server answers
+            // `FetchSlice` too (its slice is the whole matrix — useful
+            // for debugging), but has no round cache to install into.
+            Request::FetchSlice => {
+                let (version, m) = match shard {
+                    Some(sh) => sh.raw_slice(),
+                    None => (server.state().version(), server.state().snapshot()),
+                };
+                Response::Slice { version, d: m.rows() as u32, w: m.data().to_vec() }
             }
+            Request::PushProxSlice { round, d, w } => match shard {
+                Some(sh) => {
+                    let d = d as usize;
+                    let cols = if d == 0 { 0 } else { w.len() / d };
+                    let mut m = Mat::zeros(d, cols);
+                    m.data_mut().copy_from_slice(&w);
+                    match sh.install_round(round, m) {
+                        Ok(()) => Response::ProxSliceAck { round },
+                        Err(e) => Response::Error(format!("{e:#}")),
+                    }
+                }
+                None => Response::Error(
+                    "this server is not a shard; there is no round cache to install".into(),
+                ),
+            },
             // A remote worker exporting its own registry: parked on the
             // server keyed by task index, surfaced as `NODE` rows of the
             // next `FetchMetrics` report.
@@ -452,6 +566,42 @@ impl TcpClient {
             .unwrap_or_else(|| anyhow!("request failed"))
             .context(format!("giving up on {} after {attempts} attempts", self.addr)))
     }
+
+    /// Fetch the server's shard map (`FetchShardMap`). Errors against a
+    /// whole-model server, which has none.
+    pub fn fetch_shard_map(&mut self) -> Result<ShardMap> {
+        match self.request(&Request::FetchShardMap)? {
+            Response::ShardMap(map) => Ok(map),
+            other => bail!("expected ShardMap, got {other:?}"),
+        }
+    }
+
+    /// Fetch the server's raw model slice (`FetchSlice`): the
+    /// coordination round's gather leg. Returns `(version, V_slice)`.
+    pub fn fetch_slice(&mut self) -> Result<(u64, Mat)> {
+        match self.request(&Request::FetchSlice)? {
+            Response::Slice { version, d, w } => {
+                let d = d as usize;
+                let cols = if d == 0 { 0 } else { w.len() / d };
+                let mut m = Mat::zeros(d, cols);
+                m.data_mut().copy_from_slice(&w);
+                Ok((version, m))
+            }
+            other => bail!("expected Slice, got {other:?}"),
+        }
+    }
+
+    /// Install a coordination round's result on a shard
+    /// (`PushProxSlice`): the scatter leg. Returns the acknowledged
+    /// round number.
+    pub fn push_prox_slice(&mut self, round: u64, w: &Mat) -> Result<u64> {
+        let req =
+            Request::PushProxSlice { round, d: w.rows() as u32, w: w.data().to_vec() };
+        match self.request(&req)? {
+            Response::ProxSliceAck { round } => Ok(round),
+            other => bail!("expected ProxSliceAck, got {other:?}"),
+        }
+    }
 }
 
 impl Transport for TcpClient {
@@ -473,6 +623,25 @@ impl Transport for TcpClient {
         match self.request(&Request::PushUpdate { t: t as u32, k, span, step, u: u.to_vec() })? {
             Response::Pushed { version } => Ok(version),
             other => bail!("expected Pushed, got {other:?}"),
+        }
+    }
+
+    fn push_batch(&mut self, updates: &[BatchUpdate]) -> Result<Vec<u64>> {
+        if updates.is_empty() {
+            return Ok(Vec::new());
+        }
+        match self.request(&Request::PushBatch { updates: updates.to_vec() })? {
+            Response::PushedBatch { versions } => {
+                if versions.len() != updates.len() {
+                    bail!(
+                        "batch ack carries {} versions for {} updates",
+                        versions.len(),
+                        updates.len()
+                    );
+                }
+                Ok(versions)
+            }
+            other => bail!("expected PushedBatch, got {other:?}"),
         }
     }
 
@@ -675,6 +844,90 @@ mod tests {
         let err = client.fetch_prox_col(0).unwrap_err();
         assert!(format!("{err:#}").contains("giving up"), "{err:#}");
         assert!(start.elapsed() < Duration::from_secs(5), "retry loop must be bounded");
+    }
+
+    #[test]
+    fn shard_server_translates_global_indices() {
+        use crate::optim::prox::L1Prox;
+        // uniform(4, 6, 2): shard 0 owns tasks 0..3, shard 1 owns 3..6.
+        let map = Arc::new(ShardMap::uniform(4, 6, 2));
+        let shard =
+            Arc::new(ProxShard::create(Arc::clone(&map), 1, &L1Prox::new(0.1), 0.25, None).unwrap());
+        let mut handle = TcpServer::spawn_shard("127.0.0.1:0", Arc::clone(&shard), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+        assert_eq!(client.eta(), 0.25, "handshake works against a shard");
+
+        // Global task 4 is the shard's local column 1.
+        assert_eq!(client.push_update(4, 0, 1.0, &[1.0; 4]).unwrap(), 1);
+        assert_eq!(shard.server().state().read_col(1), vec![1.0; 4]);
+        assert_eq!(client.fetch_prox_col(4).unwrap(), shard.fetch_prox_col(4).unwrap());
+
+        // Tasks owned elsewhere and out of range are rejected, not misrouted.
+        let err = client.fetch_prox_col(0).unwrap_err();
+        assert!(format!("{err:#}").contains("owned by shard 0"), "{err:#}");
+        let err = client.push_update(9, 0, 1.0, &[1.0; 4]).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+
+        // The routing table comes back over the wire intact.
+        assert_eq!(&client.fetch_shard_map().unwrap(), map.as_ref());
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shard_batch_and_slice_frames_roundtrip() {
+        use crate::optim::prox::L1Prox;
+        let map = Arc::new(ShardMap::uniform(3, 4, 2));
+        let shard =
+            Arc::new(ProxShard::create(map, 0, &L1Prox::new(0.0), 0.5, None).unwrap());
+        let mut handle = TcpServer::spawn_shard("127.0.0.1:0", Arc::clone(&shard), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+
+        let mk = |t: usize, k: u64, x: f64| BatchUpdate {
+            t: t as u32,
+            k,
+            span: fleet::span_id(t, k),
+            step: 1.0,
+            u: vec![x; 3],
+        };
+        assert_eq!(client.push_batch(&[mk(0, 0, 1.0), mk(1, 0, 2.0)]).unwrap(), vec![1, 2]);
+        assert_eq!(shard.server().state().read_col(0), vec![1.0; 3]);
+        assert_eq!(shard.server().state().read_col(1), vec![2.0; 3]);
+
+        // A foreign task aborts the batch with an error (prefix stays
+        // applied; dedup makes the client's resend exactly-once).
+        let err = client.push_batch(&[mk(0, 1, 3.0), mk(2, 0, 4.0)]).unwrap_err();
+        assert!(format!("{err:#}").contains("batch aborted after 1 of 2"), "{err:#}");
+
+        // Gather leg: the raw slice with its version.
+        let (version, slice) = client.fetch_slice().unwrap();
+        assert_eq!(version, 3);
+        assert_eq!((slice.rows(), slice.cols()), (3, 2));
+        assert_eq!(slice.col(0), &[3.0; 3][..]);
+
+        // Scatter leg: a separable shard has no round cache to fill.
+        let err = client.push_prox_slice(1, &slice).unwrap_err();
+        assert!(format!("{err:#}").contains("separable"), "{err:#}");
+        handle.shutdown();
+    }
+
+    #[test]
+    fn coordinated_shard_serves_installed_round_over_wire() {
+        use crate::optim::coupling::MeanProx;
+        let map = Arc::new(ShardMap::uniform(2, 4, 2));
+        let shard =
+            Arc::new(ProxShard::create(map, 1, &MeanProx::new(0.3), 0.5, None).unwrap());
+        let mut handle = TcpServer::spawn_shard("127.0.0.1:0", Arc::clone(&shard), None).unwrap();
+        let mut client = TcpClient::connect(handle.addr(), quick_opts()).unwrap();
+
+        let mut round = Mat::zeros(2, 2);
+        round.set_col(0, &[1.5, -2.5]);
+        round.set_col(1, &[0.25, 4.0]);
+        assert_eq!(client.push_prox_slice(7, &round).unwrap(), 7);
+        assert_eq!(shard.round(), 7);
+        // Fetches now answer from the installed cache (global task 3 =
+        // local column 1 of the slice).
+        assert_eq!(client.fetch_prox_col(3).unwrap(), vec![0.25, 4.0]);
+        handle.shutdown();
     }
 
     #[test]

@@ -52,7 +52,12 @@ pub const MAGIC: [u8; 4] = *b"AMTL";
 /// pattern as the v2 activation counter — a field change forces the
 /// bump), `MetricsReport` fans in per-node sub-reports (role `NODE`
 /// rows), and worker processes piggyback their registry on the new
-/// `PushMetrics`/`MetricsAck` opcode pair.
+/// `PushMetrics`/`MetricsAck` opcode pair. The sharded-server frames
+/// (`FetchShardMap`/`ShardMap`, `PushBatch`/`PushedBatch`,
+/// `FetchSlice`/`Slice`, `PushProxSlice`/`ProxSliceAck` — see
+/// [`shard`](crate::shard)) are additive opcodes on v3: no existing
+/// frame changed layout, so pre-shard peers keep decoding everything
+/// they already spoke and refuse the new opcodes cleanly.
 pub const VERSION: u8 = 3;
 /// Upper bound on payload size (guards allocation on corrupted lengths:
 /// 64 MiB ≫ any model column we ship).
@@ -70,6 +75,10 @@ const OP_PREDICT: u8 = 0x08;
 const OP_FETCH_STATS: u8 = 0x09;
 const OP_FETCH_METRICS: u8 = 0x0A;
 const OP_PUSH_METRICS: u8 = 0x0B;
+const OP_FETCH_SHARD_MAP: u8 = 0x0C;
+const OP_PUSH_BATCH: u8 = 0x0D;
+const OP_FETCH_SLICE: u8 = 0x0E;
+const OP_PUSH_PROX_SLICE: u8 = 0x0F;
 
 // Response opcodes (server → client).
 const OP_PROX_COL: u8 = 0x81;
@@ -83,6 +92,10 @@ const OP_PREDICTION: u8 = 0x88;
 const OP_STATS: u8 = 0x89;
 const OP_METRICS: u8 = 0x8A;
 const OP_METRICS_ACK: u8 = 0x8B;
+const OP_SHARD_MAP: u8 = 0x8C;
+const OP_PUSHED_BATCH: u8 = 0x8D;
+const OP_SLICE: u8 = 0x8E;
+const OP_PROX_SLICE_ACK: u8 = 0x8F;
 const OP_ERROR: u8 = 0xFF;
 
 /// Decode/IO failure. Malformed input is an error, never a panic.
@@ -529,6 +542,58 @@ impl MetricsReport {
     }
 }
 
+/// One commit inside a [`Request::PushBatch`]: the `PushUpdate` fields,
+/// minus nothing — batching changes framing overhead, never semantics.
+/// `t` is the **global** task index; the receiving shard validates it
+/// against its range and translates to a local column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchUpdate {
+    /// Global task index of the commit.
+    pub t: u32,
+    /// The node's activation counter (per-update dedup key, exactly as in
+    /// `PushUpdate` — a batch is dedup'd element-wise, not atomically).
+    pub k: u64,
+    /// Cross-process span id, `span_id(t, k)`.
+    pub span: u64,
+    /// KM relaxation step for this commit.
+    pub step: f64,
+    /// Forward-step result `u`.
+    pub u: Vec<f64>,
+}
+
+impl BatchUpdate {
+    fn push(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.t.to_le_bytes());
+        out.extend_from_slice(&self.k.to_le_bytes());
+        out.extend_from_slice(&self.span.to_le_bytes());
+        out.extend_from_slice(&self.step.to_bits().to_le_bytes());
+        out.extend_from_slice(&(self.u.len() as u32).to_le_bytes());
+        push_f64s(out, &self.u);
+    }
+
+    fn parse(c: &mut Cursor<'_>) -> Result<BatchUpdate, WireError> {
+        let t = c.u32()?;
+        let k = c.u64()?;
+        let span = c.u64()?;
+        let step = c.f64()?;
+        let n = c.u32()? as usize;
+        // Bounds-checked take: a corrupted count runs out of payload, it
+        // does not preallocate.
+        let bytes = c.take(n.checked_mul(8).ok_or(WireError::Malformed(
+            "batch update length overflows",
+        ))?)?;
+        let u = bytes
+            .chunks_exact(8)
+            .map(|b| {
+                f64::from_bits(u64::from_le_bytes([
+                    b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+                ]))
+            })
+            .collect();
+        Ok(BatchUpdate { t, k, span, step, u })
+    }
+}
+
 /// Client → server messages (the task-node side of Algorithm 1).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
@@ -574,6 +639,23 @@ pub enum Request {
     /// node's metrics into its own [`MetricsReport`]. Fire-and-forget in
     /// spirit: the server acks but never gates training on it.
     PushMetrics { t: u32, report: MetricsReport },
+    /// Retrieve the run's [`ShardMap`](crate::shard::ShardMap) — which
+    /// shard owns which contiguous task range, and where to dial it.
+    /// Answered by every shard (the map is identical fleet-wide), so a
+    /// node can bootstrap from any one address it was given.
+    FetchShardMap,
+    /// Several same-shard commits in one frame (the router coalesces
+    /// updates bound for the same shard). Semantically identical to the
+    /// same `PushUpdate`s in sequence — element-wise dedup included.
+    PushBatch { updates: Vec<BatchUpdate> },
+    /// Coordination-round gather: retrieve the shard's **raw** (pre-prox)
+    /// slice of `V̂` plus its commit version. Sent by the round
+    /// coordinator, never by task nodes.
+    FetchSlice,
+    /// Coordination-round scatter: install the full-matrix prox result
+    /// columns belonging to this shard, tagged with the round number.
+    /// `d` is the row count; `w` holds the shard's columns, column-major.
+    PushProxSlice { round: u64, d: u32, w: Vec<f64> },
 }
 
 /// Server → client messages.
@@ -607,6 +689,16 @@ pub enum Response {
     Metrics(MetricsReport),
     /// Acknowledges a `PushMetrics` snapshot.
     MetricsAck,
+    /// The run's shard map (reply to `FetchShardMap`).
+    ShardMap(crate::shard::ShardMap),
+    /// Per-update new global versions for a `PushBatch`, index-aligned
+    /// with the request's `updates`.
+    PushedBatch { versions: Vec<u64> },
+    /// The shard's raw slice of `V̂` (reply to `FetchSlice`): commit
+    /// version, row count `d`, and the slice columns, column-major.
+    Slice { version: u64, d: u32, w: Vec<f64> },
+    /// Acknowledges a `PushProxSlice`, echoing the round number.
+    ProxSliceAck { round: u64 },
     /// Request rejected (bad task index, dimension mismatch, …). The
     /// connection stays usable.
     Error(String),
@@ -626,6 +718,10 @@ impl Request {
             Request::FetchStats => OP_FETCH_STATS,
             Request::FetchMetrics => OP_FETCH_METRICS,
             Request::PushMetrics { .. } => OP_PUSH_METRICS,
+            Request::FetchShardMap => OP_FETCH_SHARD_MAP,
+            Request::PushBatch { .. } => OP_PUSH_BATCH,
+            Request::FetchSlice => OP_FETCH_SLICE,
+            Request::PushProxSlice { .. } => OP_PUSH_PROX_SLICE,
         }
     }
 
@@ -656,8 +752,23 @@ impl Request {
                 report.push(&mut out);
                 out
             }
+            Request::PushBatch { updates } => {
+                let mut out = Vec::new();
+                out.extend_from_slice(&(updates.len() as u32).to_le_bytes());
+                for up in updates {
+                    up.push(&mut out);
+                }
+                out
+            }
+            Request::PushProxSlice { round, d, w } => {
+                let mut out = Vec::with_capacity(12 + w.len() * 8);
+                out.extend_from_slice(&round.to_le_bytes());
+                out.extend_from_slice(&d.to_le_bytes());
+                push_f64s(&mut out, w);
+                out
+            }
             Request::FetchEta | Request::Shutdown | Request::FetchStats
-            | Request::FetchMetrics => Vec::new(),
+            | Request::FetchMetrics | Request::FetchShardMap | Request::FetchSlice => Vec::new(),
         }
     }
 
@@ -690,6 +801,27 @@ impl Request {
                 let t = c.u32()?;
                 let report = MetricsReport::parse(&mut c)?;
                 Request::PushMetrics { t, report }
+            }
+            OP_FETCH_SHARD_MAP => Request::FetchShardMap,
+            OP_PUSH_BATCH => {
+                let mut updates = Vec::new();
+                for _ in 0..c.u32()? {
+                    updates.push(BatchUpdate::parse(&mut c)?);
+                }
+                Request::PushBatch { updates }
+            }
+            OP_FETCH_SLICE => Request::FetchSlice,
+            OP_PUSH_PROX_SLICE => {
+                let round = c.u64()?;
+                let d = c.u32()?;
+                let w = c.rest_f64s()?;
+                if d == 0 && !w.is_empty() {
+                    return Err(WireError::Malformed("prox slice with zero rows"));
+                }
+                if d != 0 && w.len() % d as usize != 0 {
+                    return Err(WireError::Malformed("prox slice not a whole number of columns"));
+                }
+                Request::PushProxSlice { round, d, w }
             }
             other => return Err(WireError::BadOpcode(other)),
         };
@@ -730,6 +862,10 @@ impl Response {
             Response::Stats(_) => OP_STATS,
             Response::Metrics(_) => OP_METRICS,
             Response::MetricsAck => OP_METRICS_ACK,
+            Response::ShardMap(_) => OP_SHARD_MAP,
+            Response::PushedBatch { .. } => OP_PUSHED_BATCH,
+            Response::Slice { .. } => OP_SLICE,
+            Response::ProxSliceAck { .. } => OP_PROX_SLICE_ACK,
             Response::Error(_) => OP_ERROR,
         }
     }
@@ -767,6 +903,27 @@ impl Response {
                 report.push(&mut out);
                 out
             }
+            Response::ShardMap(map) => {
+                let mut out = Vec::new();
+                map.push(&mut out);
+                out
+            }
+            Response::PushedBatch { versions } => {
+                let mut out = Vec::with_capacity(4 + versions.len() * 8);
+                out.extend_from_slice(&(versions.len() as u32).to_le_bytes());
+                for v in versions {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            Response::Slice { version, d, w } => {
+                let mut out = Vec::with_capacity(12 + w.len() * 8);
+                out.extend_from_slice(&version.to_le_bytes());
+                out.extend_from_slice(&d.to_le_bytes());
+                push_f64s(&mut out, w);
+                out
+            }
+            Response::ProxSliceAck { round } => round.to_le_bytes().to_vec(),
             Response::Error(msg) => msg.as_bytes().to_vec(),
         }
     }
@@ -792,6 +949,27 @@ impl Response {
             OP_STATS => Response::Stats(ReplicaStats::parse(&mut c)?),
             OP_METRICS => Response::Metrics(MetricsReport::parse(&mut c)?),
             OP_METRICS_ACK => Response::MetricsAck,
+            OP_SHARD_MAP => Response::ShardMap(crate::shard::ShardMap::parse(&mut c)?),
+            OP_PUSHED_BATCH => {
+                let mut versions = Vec::new();
+                for _ in 0..c.u32()? {
+                    versions.push(c.u64()?);
+                }
+                Response::PushedBatch { versions }
+            }
+            OP_SLICE => {
+                let version = c.u64()?;
+                let d = c.u32()?;
+                let w = c.rest_f64s()?;
+                if d == 0 && !w.is_empty() {
+                    return Err(WireError::Malformed("slice with zero rows"));
+                }
+                if d != 0 && w.len() % d as usize != 0 {
+                    return Err(WireError::Malformed("slice not a whole number of columns"));
+                }
+                Response::Slice { version, d, w }
+            }
+            OP_PROX_SLICE_ACK => Response::ProxSliceAck { round: c.u64()? },
             OP_ERROR => {
                 let msg = String::from_utf8(payload.to_vec())
                     .map_err(|_| WireError::Malformed("error message is not utf-8"))?;
@@ -869,9 +1047,30 @@ mod tests {
             Request::FetchMetrics,
             Request::PushMetrics { t: 2, report: sample_node_report() },
             Request::PushMetrics { t: u32::MAX, report: MetricsReport::default() },
+            Request::FetchShardMap,
+            Request::PushBatch { updates: sample_batch() },
+            Request::PushBatch { updates: vec![] },
+            Request::FetchSlice,
+            Request::PushProxSlice { round: 3, d: 2, w: vec![1.0, -2.0, 0.5, 4.0] },
+            Request::PushProxSlice { round: u64::MAX, d: 0, w: vec![] },
+            Request::PushProxSlice { round: 0, d: 7, w: vec![] },
         ] {
             assert_eq!(roundtrip_request(&req), req);
         }
+    }
+
+    fn sample_batch() -> Vec<BatchUpdate> {
+        vec![
+            BatchUpdate { t: 4, k: 9, span: 0x0004_0000_0000_0009, step: 0.5, u: vec![1.0, -1.0] },
+            BatchUpdate { t: 5, k: 0, span: 0, step: f64::MIN_POSITIVE, u: vec![] },
+            BatchUpdate { t: u32::MAX, k: u64::MAX, span: u64::MAX, step: -3.5, u: vec![2.25] },
+        ]
+    }
+
+    fn sample_map() -> crate::shard::ShardMap {
+        crate::shard::ShardMap::uniform(6, 10, 3)
+            .with_addrs(vec!["127.0.0.1:7401".into(), "".into(), "host:9".into()])
+            .unwrap()
     }
 
     fn sample_node_report() -> MetricsReport {
@@ -955,6 +1154,13 @@ mod tests {
             Response::Metrics(sample_report()),
             Response::Metrics(MetricsReport::default()),
             Response::MetricsAck,
+            Response::ShardMap(sample_map()),
+            Response::ShardMap(crate::shard::ShardMap::uniform(1, 0, 1)),
+            Response::PushedBatch { versions: vec![1, 7, u64::MAX] },
+            Response::PushedBatch { versions: vec![] },
+            Response::Slice { version: 41, d: 3, w: vec![0.0, -0.0, 1e300, 1.0, 2.0, 3.0] },
+            Response::Slice { version: 0, d: 0, w: vec![] },
+            Response::ProxSliceAck { round: 12 },
             Response::Error("task index 9 out of range (T=4)".into()),
             Response::Error(String::new()),
         ] {
@@ -1071,6 +1277,112 @@ mod tests {
     }
 
     #[test]
+    fn prop_arbitrary_shard_map_roundtrips() {
+        forall(
+            "shard-map frames encode/decode identically",
+            60,
+            |g| {
+                let t = g.usize_in(0, 64);
+                let n = g.usize_in(1, 9);
+                let d = g.usize_in(1, 100);
+                let with_addrs = g.usize_in(0, 1) == 1;
+                (t, n, d, with_addrs)
+            },
+            |&(t, n, d, with_addrs)| {
+                let mut map = crate::shard::ShardMap::uniform(d, t, n);
+                if with_addrs {
+                    map = map
+                        .with_addrs((0..n).map(|i| format!("10.0.0.{i}:7400")).collect())
+                        .unwrap();
+                }
+                let resp = Response::ShardMap(map);
+                roundtrip_response(&resp) == resp
+            },
+        );
+    }
+
+    #[test]
+    fn prop_arbitrary_push_batch_roundtrips() {
+        forall(
+            "push-batch frames encode/decode identically",
+            60,
+            |g| {
+                let n = g.usize_in(0, 6);
+                (0..n)
+                    .map(|i| {
+                        let len = g.usize_in(0, 80);
+                        BatchUpdate {
+                            t: g.usize_in(0, 500) as u32,
+                            k: i as u64 * 17,
+                            span: crate::obs::fleet::span_id(i, i as u64 * 17),
+                            step: g.f64_in(-2.0, 2.0),
+                            u: g.normal_vec(len),
+                        }
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |updates| {
+                let req = Request::PushBatch { updates: updates.clone() };
+                let versions: Vec<u64> = (0..updates.len() as u64).collect();
+                let resp = Response::PushedBatch { versions };
+                roundtrip_request(&req) == req && roundtrip_response(&resp) == resp
+            },
+        );
+    }
+
+    #[test]
+    fn ragged_slice_and_batch_are_rejected() {
+        // A Slice whose f64 count is not a multiple of d is malformed.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&5u64.to_le_bytes()); // version
+        payload.extend_from_slice(&3u32.to_le_bytes()); // d = 3
+        push_f64s(&mut payload, &[1.0, 2.0]); // 2 f64s: not a column
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x8E, &payload).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Response::decode(op, &payload), Err(WireError::Malformed(_))));
+        // A PushBatch whose declared element length overruns the payload
+        // errors instead of allocating.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&1u32.to_le_bytes()); // one update
+        payload.extend_from_slice(&0u32.to_le_bytes()); // t
+        payload.extend_from_slice(&0u64.to_le_bytes()); // k
+        payload.extend_from_slice(&0u64.to_le_bytes()); // span
+        payload.extend_from_slice(&0.5f64.to_bits().to_le_bytes()); // step
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // u length: lies
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x0D, &payload).unwrap();
+        let (op, payload) = read_frame(&mut std::io::Cursor::new(out)).unwrap();
+        assert!(matches!(Request::decode(op, &payload), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn v3_layout_unchanged_by_shard_opcodes() {
+        // Read-compat pin: the shard frames are additive, so a pre-shard
+        // v3 frame hand-assembled byte-for-byte must still decode. If an
+        // existing opcode or field had shifted, this golden layout breaks.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&2u32.to_le_bytes()); // t
+        payload.extend_from_slice(&5u64.to_le_bytes()); // k
+        payload.extend_from_slice(&9u64.to_le_bytes()); // span
+        payload.extend_from_slice(&0.5f64.to_bits().to_le_bytes()); // step
+        push_f64s(&mut payload, &[1.0, -2.0]);
+        let mut frame = Vec::new();
+        frame.extend_from_slice(b"AMTL");
+        frame.push(3); // version
+        frame.push(0x02); // PushUpdate opcode
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        let crc = fnv1a32(&[&frame[4..], &[]]).to_le_bytes();
+        frame.extend_from_slice(&crc);
+        let got = Request::read_from(&mut std::io::Cursor::new(frame)).unwrap();
+        assert_eq!(
+            got,
+            Request::PushUpdate { t: 2, k: 5, span: 9, step: 0.5, u: vec![1.0, -2.0] }
+        );
+    }
+
+    #[test]
     fn nan_payloads_roundtrip_bitwise() {
         // PartialEq on NaN is false; compare bit patterns instead.
         let req =
@@ -1095,10 +1407,15 @@ mod tests {
             Request::Register { t: 1 }.encode(),
             Request::Predict { t: 0, x: vec![1.0, 2.0] }.encode(),
             Request::PushMetrics { t: 1, report: sample_node_report() }.encode(),
+            Request::PushBatch { updates: sample_batch() }.encode(),
+            Request::PushProxSlice { round: 2, d: 2, w: vec![1.0, 2.0] }.encode(),
             Response::ProxCol(vec![4.0; 7]).encode(),
             Response::Registered { col_version: 9, generation: 1 }.encode(),
             Response::Stats(sample_stats()).encode(),
             Response::Metrics(sample_report()).encode(),
+            Response::ShardMap(sample_map()).encode(),
+            Response::PushedBatch { versions: vec![3, 4] }.encode(),
+            Response::Slice { version: 9, d: 1, w: vec![0.5, 0.25] }.encode(),
             Response::Error("boom".into()).encode(),
         ];
         for full in &frames {
@@ -1126,6 +1443,14 @@ mod tests {
             Request::FetchStats.encode(),
             Request::FetchMetrics.encode(),
             Request::PushMetrics { t: 0, report: sample_node_report() }.encode(),
+            Request::FetchShardMap.encode(),
+            Request::PushBatch { updates: sample_batch() }.encode(),
+            Request::FetchSlice.encode(),
+            Request::PushProxSlice { round: 1, d: 1, w: vec![2.0] }.encode(),
+            Response::ShardMap(sample_map()).encode(),
+            Response::PushedBatch { versions: vec![8] }.encode(),
+            Response::Slice { version: 3, d: 2, w: vec![1.0, 2.0] }.encode(),
+            Response::ProxSliceAck { round: 6 }.encode(),
             Response::Metrics(sample_report()).encode(),
             Response::MetricsAck.encode(),
             Response::Pushed { version: 41 }.encode(),

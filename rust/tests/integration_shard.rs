@@ -1,0 +1,208 @@
+//! Integration tests for the sharded central server (`amtl::shard`):
+//! the column-partitioned deployment must be *indistinguishable* from
+//! the single whole-model server — bitwise for separable formulations,
+//! within objective tolerance (via coordination rounds) for coupled
+//! ones — and every shard must recover from its own checkpoint
+//! directory, alone or as a group.
+
+use amtl::coordinator::{Async, MtlProblem, Session};
+use amtl::data::synthetic;
+use amtl::linalg::Mat;
+use amtl::optim::formulation::{self, FormulationSpec, FORMULATIONS};
+use amtl::shard::{run_sharded, ProxShard, ShardMap, ShardRunConfig, SHARDMAP_FILE};
+use amtl::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const D: usize = 6;
+const T: usize = 5;
+const LAMBDA: f64 = 0.3;
+
+fn problem(reg: &str, seed: u64) -> MtlProblem {
+    let spec = FormulationSpec::parse(reg).unwrap();
+    let mut rng = Rng::new(seed);
+    let ds = synthetic::lowrank_regression(&[20; T], D, 2, 0.1, &mut rng);
+    MtlProblem::try_new(ds, spec, LAMBDA, 0.5, &mut rng).unwrap()
+}
+
+/// The single whole-model server this subsystem must reproduce: a plain
+/// async `Session` run, same seed, same fixed KM step.
+fn single_server(p: &MtlProblem, iters: usize, step: f64, seed: u64) -> (Mat, Mat, u64) {
+    let r = Session::builder(p)
+        .iters_per_node(iters)
+        .eta_k(step)
+        .seed(seed)
+        .record_every(1_000_000)
+        .schedule(Async)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    (r.v_final, r.w_final, r.updates)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("amtl_ishard_{}_{}", tag, std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+// ------------------------------------------------- separable: bitwise
+
+#[test]
+fn sharded_runs_match_the_single_server_bitwise_on_every_separable_formulation() {
+    // Registry-driven: every formulation that claims `is_separable()`
+    // must shard with NO drift at all — the merged V and W of a 1-, 2-
+    // and 3-shard run are bitwise the single-server result under the
+    // same seed. A future formulation that sets the flag without the
+    // column-decoupling property fails here, not in production.
+    let mut covered = 0;
+    for info in FORMULATIONS.iter() {
+        let spec = FormulationSpec::parse(info.name).unwrap();
+        let probe = formulation::resolve(&spec, LAMBDA, 1.0, T).unwrap();
+        if !probe.is_separable() {
+            continue;
+        }
+        covered += 1;
+        let p = problem(info.name, 910);
+        let (v_ref, w_ref, updates_ref) = single_server(&p, 20, 0.7, 41);
+        assert_eq!(updates_ref, (T * 20) as u64);
+        for shards in [1usize, 2, 3] {
+            let res = run_sharded(&p, &ShardRunConfig::new(shards, 20, 0.7, 41)).unwrap();
+            assert!(res.separable, "{} must shard separably", info.name);
+            assert_eq!(res.rounds, 0, "{}: separable runs never coordinate", info.name);
+            assert_eq!(res.updates, updates_ref, "{} @ {shards} shards", info.name);
+            assert_eq!(
+                res.merged_v.data(),
+                v_ref.data(),
+                "{}: merged V must be bitwise at {shards} shards",
+                info.name
+            );
+            assert_eq!(
+                res.merged_w.data(),
+                w_ref.data(),
+                "{}: merged W must be bitwise at {shards} shards",
+                info.name
+            );
+        }
+    }
+    assert!(covered >= 3, "registry lost its separable family? covered {covered}");
+}
+
+// -------------------------------------- coupled: coordination rounds
+
+#[test]
+fn coordinated_formulations_converge_within_tolerance_via_rounds() {
+    for name in ["nuclear", "graph"] {
+        let p = problem(name, 911);
+        let f_zero = p.objective(&Mat::zeros(D, T));
+        let (_, w_ref, _) = single_server(&p, 80, 0.7, 43);
+        let f_single = p.objective(&w_ref);
+
+        let mut cfg = ShardRunConfig::new(2, 80, 0.7, 43);
+        cfg.coord_every = 16;
+        let res = run_sharded(&p, &cfg).unwrap();
+        assert!(!res.separable, "{name} must take the coordination path");
+        assert!(res.rounds >= 1, "{name}: coordination rounds must fire");
+        let f_shard = res.objective;
+        assert!(f_shard.is_finite() && f_single.is_finite());
+        assert!(f_shard < f_zero, "{name}: sharded run failed to make progress");
+        let rel = (f_shard - f_single).abs() / f_single.abs().max(1e-9);
+        assert!(
+            rel < 0.2,
+            "{name}: sharded objective {f_shard} vs single-server {f_single} (rel {rel})"
+        );
+    }
+}
+
+// ------------------------------------------------ durability + resume
+
+#[test]
+fn interrupted_sharded_run_resumes_to_the_uninterrupted_model() {
+    // Crash after 9 of 24 activations per node (drop without a final
+    // checkpoint: recovery replays each shard's WAL), then `--resume`
+    // the whole group. The spliced run must land bitwise on the model an
+    // uninterrupted run produces.
+    let p = problem("l1", 912);
+    let full = run_sharded(&p, &ShardRunConfig::new(2, 24, 0.7, 44)).unwrap();
+
+    let dir = tmp("resume");
+    let mut phase1 = ShardRunConfig::new(2, 9, 0.7, 44);
+    phase1.persist = Some((dir.clone(), 4));
+    run_sharded(&p, &phase1).unwrap();
+
+    let mut phase2 = ShardRunConfig::new(2, 24, 0.7, 44);
+    phase2.persist = Some((dir.clone(), 4));
+    phase2.resume = true;
+    let resumed = run_sharded(&p, &phase2).unwrap();
+    assert_eq!(resumed.merged_v.data(), full.merged_v.data(), "resumed V must be bitwise");
+    assert_eq!(resumed.merged_w.data(), full.merged_w.data(), "resumed W must be bitwise");
+    // Workers skip the activations their shard already applied.
+    assert_eq!(resumed.updates, ((24 - 9) * T) as u64);
+    // On-disk layout: one routing file, one directory per shard.
+    assert!(dir.join(SHARDMAP_FILE).exists(), "SHARDMAP routing file");
+    assert!(ShardMap::shard_dir(&dir, 0).is_dir());
+    assert!(ShardMap::shard_dir(&dir, 1).is_dir());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn a_single_shard_recovers_alone_from_its_own_directory() {
+    // The per-shard directory layout is what makes `--resume`-ing ONE
+    // killed shard possible while its peers keep running: bring back
+    // only shard 1 and its slice must be bitwise the columns the full
+    // run left behind.
+    let p = problem("elasticnet", 913);
+    let dir = tmp("solo");
+    let mut cfg = ShardRunConfig::new(2, 12, 0.7, 45);
+    cfg.persist = Some((dir.clone(), 4));
+    let res = run_sharded(&p, &cfg).unwrap();
+
+    let map = Arc::new(ShardMap::load(&dir).unwrap());
+    assert_eq!(map.shards(), 2);
+    let proto = p.regularizer();
+    let shard = ProxShard::resume(Arc::clone(&map), 1, proto.as_ref(), p.eta, &dir, 4).unwrap();
+    let slice = shard.server().state().snapshot();
+    for (local, global) in shard.range().enumerate() {
+        assert_eq!(
+            slice.col(local),
+            res.merged_v.col(global),
+            "recovered column {global} diverged"
+        );
+    }
+    for t in shard.range() {
+        assert_eq!(shard.applied_commits(t).unwrap(), 12, "resume horizon for task {t}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coordinated_shards_survive_checkpoint_and_resume() {
+    // The non-separable path persists an honest identity regularizer per
+    // shard; a resumed group reseeds its coordination caches from the
+    // recovered slices and keeps improving the objective.
+    let p = problem("nuclear", 914);
+    let dir = tmp("coord");
+    let mut phase1 = ShardRunConfig::new(2, 10, 0.7, 46);
+    phase1.coord_every = 8;
+    phase1.persist = Some((dir.clone(), 4));
+    let first = run_sharded(&p, &phase1).unwrap();
+    assert!(first.rounds >= 1);
+    assert!(first.objective.is_finite());
+
+    let mut phase2 = phase1.clone();
+    phase2.iters = 30;
+    phase2.resume = true;
+    let resumed = run_sharded(&p, &phase2).unwrap();
+    assert!(!resumed.separable);
+    assert!(resumed.rounds >= 1, "a resumed group must keep coordinating");
+    assert!(resumed.objective.is_finite());
+    assert!(
+        resumed.objective <= first.objective * 1.10 + 1e-6,
+        "20 extra activations per node must not hurt: {} vs {}",
+        resumed.objective,
+        first.objective
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -648,6 +648,72 @@ fn prop_every_registered_prox_satisfies_moreau_optimality() {
 }
 
 #[test]
+fn prop_separable_prox_commutes_with_column_slicing() {
+    // The sharded server's load-bearing contract: a formulation that
+    // reports `is_separable()` must prox a column subset to exactly the
+    // columns the full-matrix prox produces (bitwise) — that is why
+    // separable shards can run the real regularizer on their own slice
+    // and still merge to the single-server model. Registry-driven, so a
+    // formulation added later is covered automatically; the expectation
+    // table pins today's split (only the elementwise family is
+    // column-separable — l21 couples columns through row norms, mean
+    // through the task centroid, nuclear/graph through the spectrum and
+    // Laplacian).
+    let expect_separable = |name: &str| matches!(name, "l1" | "elasticnet" | "none");
+    for info in FORMULATIONS.iter() {
+        let spec = FormulationSpec::parse(info.name).unwrap();
+        let reg = formulation::resolve(&spec, 0.6, 1.5, 6).unwrap();
+        assert_eq!(
+            reg.is_separable(),
+            expect_separable(reg.id()),
+            "unexpected is_separable() for {}",
+            reg.id()
+        );
+    }
+    forall(
+        "separable prox == column slice of full prox (bitwise)",
+        30,
+        |g| {
+            let lo = g.usize_in(0, 5);
+            ((g.normal_vec(4 * 6), g.f64_in(0.05, 1.2)), (lo, g.usize_in(lo + 1, 6)))
+        },
+        |((v, eta), (lo, hi))| {
+            if *lo >= *hi || *hi > 6 || v.len() != 24 {
+                return true; // shrink candidates may break the shape
+            }
+            let full_in = mat_from(v, 4);
+            for info in FORMULATIONS.iter() {
+                let spec = FormulationSpec::parse(info.name).unwrap();
+                let mut full_reg = formulation::resolve(&spec, 0.6, 1.5, 6).unwrap();
+                if !full_reg.is_separable() {
+                    continue;
+                }
+                let mut full = full_in.clone();
+                full_reg.prox(&mut full, *eta);
+                let mut slice = Mat::zeros(4, hi - lo);
+                for (j, t) in (*lo..*hi).enumerate() {
+                    slice.set_col(j, full_in.col(t));
+                }
+                // A fresh instance over only the slice's columns — the
+                // shard-shaped deployment the equality must survive.
+                let mut slice_reg =
+                    formulation::resolve(&spec, 0.6, 1.5, hi - lo).unwrap();
+                slice_reg.prox(&mut slice, *eta);
+                for (j, t) in (*lo..*hi).enumerate() {
+                    assert_eq!(
+                        slice.col(j),
+                        full.col(t),
+                        "{}: column {t} of the sliced prox diverged",
+                        full_reg.id()
+                    );
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
 fn prop_sparsity_family_prox_is_soft_threshold_on_diagonals() {
     // On a diagonal input W = diag(σ) the nuclear, ℓ2,1 and ℓ1 proxes all
     // collapse to the same closed form — elementwise soft-thresholding of
